@@ -1,0 +1,146 @@
+//! Multi-client encrypted serving demo (§5: "several inputs can be
+//! handled at the same time using a multi-threaded server").
+//!
+//! Spawns client threads firing mixed traffic (encrypted HRF requests
+//! + plaintext fast-path requests) at the coordinator and reports
+//! throughput, latency and batching behaviour for 1 and 2 workers.
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::NeuralForest;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let ds = adult::generate(3_000, 11);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 16,
+            ..Default::default()
+        },
+        12,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: chebyshev_fit_tanh(3.0, 4),
+        },
+    );
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let model =
+        HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).expect("pack");
+    let plan = model.plan;
+    let server = Arc::new(HrfServer::new(model));
+
+    // One registered client session (keys generated client-side).
+    let mut kg = KeyGenerator::new(&ctx, 13);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let decryptor = Decryptor::new(kg.secret_key());
+
+    // Pre-encrypt a pool of requests (client work, off the serving path).
+    let mut client = HrfClient::new(Encryptor::new(pk, 14), decryptor);
+    let pool: Vec<_> = (0..8)
+        .map(|i| client.encrypt_input(&ctx, &enc, &server.model, &ds.x[i]))
+        .collect();
+
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let artifacts = artifacts.join("manifest.txt").exists().then_some(artifacts);
+    if artifacts.is_none() {
+        println!("(artifacts/ missing — plaintext path uses Rust slot math; run `make artifacts` for the PJRT fast path)");
+    }
+
+    for workers in [1usize, 2] {
+        let sessions = Arc::new(SessionManager::new());
+        let sid = sessions.register(rlk.clone(), gk.clone());
+        let coord = Arc::new(Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                queue_capacity: 256,
+                max_batch: 8,
+                batch_delay: Duration::from_millis(4),
+            },
+            ctx.clone(),
+            server.clone(),
+            sessions,
+            artifacts.clone(),
+        ));
+
+        let n_enc = 8usize;
+        let n_plain = 200usize;
+        let t0 = Instant::now();
+
+        // Encrypted traffic from this thread (submission is cheap; the
+        // workers do the heavy lifting in parallel).
+        let enc_rxs: Vec<_> = (0..n_enc)
+            .map(|i| loop {
+                match coord.submit_encrypted(sid, pool[i % pool.len()].clone()) {
+                    Ok(rx) => break rx,
+                    Err(SubmitError::Busy) => std::thread::sleep(Duration::from_millis(5)),
+                    Err(e) => panic!("{e:?}"),
+                }
+            })
+            .collect();
+
+        // Plaintext traffic from 4 client threads.
+        let mut client_threads = Vec::new();
+        for c in 0..4 {
+            let coord = coord.clone();
+            let xs: Vec<Vec<f64>> = (0..n_plain / 4)
+                .map(|i| ds.x[(c * 97 + i) % ds.len()].clone())
+                .collect();
+            client_threads.push(std::thread::spawn(move || {
+                let mut ok = 0usize;
+                for x in xs {
+                    loop {
+                        match coord.submit_plain(x.clone()) {
+                            Ok(rx) => {
+                                rx.recv().unwrap().expect("plain response");
+                                ok += 1;
+                                break;
+                            }
+                            Err(SubmitError::Busy) => {
+                                std::thread::sleep(Duration::from_millis(1))
+                            }
+                            Err(e) => panic!("{e:?}"),
+                        }
+                    }
+                }
+                ok
+            }));
+        }
+        let plain_ok: usize = client_threads.into_iter().map(|t| t.join().unwrap()).sum();
+        for rx in enc_rxs {
+            rx.recv().unwrap().expect("encrypted response");
+        }
+        let elapsed = t0.elapsed();
+        let snap = coord.metrics.snapshot();
+        println!(
+            "\nworkers={workers}: {n_enc} encrypted + {plain_ok} plain in {elapsed:?}"
+        );
+        println!(
+            "  encrypted: mean {:?}, p95 {:?} | throughput {:.2} enc/s",
+            snap.encrypted_mean,
+            snap.encrypted_p95,
+            n_enc as f64 / elapsed.as_secs_f64()
+        );
+        println!(
+            "  plain: mean {:?} | {} batches, mean fill {:.1}",
+            snap.plain_mean, snap.batches_flushed, snap.mean_batch_fill
+        );
+        match Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown(),
+            Err(_) => unreachable!("all clients joined"),
+        }
+    }
+}

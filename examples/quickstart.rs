@@ -1,0 +1,68 @@
+//! Quickstart: one encrypted prediction in ~40 lines of API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, KeyGenerator};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::NeuralForest;
+
+fn main() {
+    // 1. Train a random forest on (synthetic) Adult Income data.
+    let data = adult::generate(4_000, 7);
+    let forest = RandomForest::fit(&data, &RandomForestConfig::default(), 8);
+
+    // 2. Convert to a Neural Random Forest with a polynomial
+    //    activation (degree-4 Chebyshev fit of tanh(3x)).
+    let act = Activation::Poly {
+        coeffs: chebyshev_fit_tanh(3.0, 4),
+    };
+    let nrf = NeuralForest::from_forest(&forest, act);
+
+    // 3. Pack it for CKKS and set up client & server.
+    let params = CkksParams::fast(); // N=8192, depth 8 (test-grade security)
+    let ctx = CkksContext::new(params.clone());
+    let encoder = Encoder::new(&ctx);
+    let model = HrfModel::from_neural_forest(&nrf, data.n_features(), params.slots())
+        .expect("forest fits the slot budget");
+    println!(
+        "packed {} trees (K={}) into {}/{} slots",
+        model.plan.l, model.plan.k, model.plan.used_slots, model.plan.slots
+    );
+
+    // Client-side key material; the server only ever sees the
+    // evaluation keys (relinearization + Galois).
+    let mut keygen = KeyGenerator::new(&ctx, 9);
+    let public_key = keygen.gen_public_key(&ctx);
+    let relin_key = keygen.gen_relin_key(&ctx);
+    let galois_keys = keygen.gen_galois_keys(&ctx, &model.plan.rotations_needed());
+    let mut client = HrfClient::new(
+        Encryptor::new(public_key, 10),
+        Decryptor::new(keygen.secret_key()),
+    );
+    let server = HrfServer::new(model);
+    let mut evaluator = Evaluator::new(ctx.clone());
+
+    // 4. Encrypt one observation, evaluate blind, decrypt the scores.
+    let x = &data.x[0];
+    let ct = client.encrypt_input(&ctx, &encoder, &server.model, x);
+    let t0 = std::time::Instant::now();
+    let (score_cts, ops) = server.eval(&mut evaluator, &encoder, &ct, &relin_key, &galois_keys);
+    let elapsed = t0.elapsed();
+    let (scores, predicted) = client.decrypt_scores(&ctx, &encoder, &score_cts);
+
+    println!("encrypted inference took {elapsed:?}");
+    println!(
+        "class scores {:?} -> predicted class {predicted} (plaintext RF says {})",
+        scores.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>(),
+        forest.predict(x)
+    );
+    let [l1, l2, l3] = ops.table1_rows();
+    println!("homomorphic ops (adds/muls/rots): L1 {l1:?}  L2 {l2:?}  L3 {l3:?}");
+}

@@ -1,0 +1,101 @@
+"""AOT: lower the L2 slot model to HLO text for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  nrf_slots_s{S}_k{K}_c{C}_m{M}.hlo.txt          single observation
+  nrf_slots_b{B}_s{S}_k{K}_c{C}_m{M}.hlo.txt     batched
+  manifest.txt                                    shapes for the loader
+
+Python runs only here, at build time (`make artifacts`).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    example_args,
+    nrf_slots_forward,
+    nrf_slots_forward_batch,
+)
+
+# Default configuration: matches the Rust side's `fast`/default HRF
+# plans (S = N/2 = 4096 slots, K = 16 leaves, C = 2 classes, degree-4
+# activation -> m = 5 coefficients, batch 8).
+DEFAULT_S = 4096
+DEFAULT_K = 16
+DEFAULT_C = 2
+DEFAULT_M = 5
+DEFAULT_B = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_single(s, k, c, m):
+    fn = lambda *a: (nrf_slots_forward(*a),)
+    return jax.jit(fn).lower(*example_args(s, k, c, m))
+
+
+def lower_batch(b, s, k, c, m):
+    fn = lambda *a: (nrf_slots_forward_batch(*a),)
+    return jax.jit(fn).lower(*example_args(s, k, c, m, batch=b))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--s", type=int, default=DEFAULT_S)
+    ap.add_argument("--k", type=int, default=DEFAULT_K)
+    ap.add_argument("--c", type=int, default=DEFAULT_C)
+    ap.add_argument("--m", type=int, default=DEFAULT_M)
+    ap.add_argument("--b", type=int, default=DEFAULT_B)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    s, k, c, m, b = args.s, args.k, args.c, args.m, args.b
+    single_name = f"nrf_slots_s{s}_k{k}_c{c}_m{m}.hlo.txt"
+    batch_name = f"nrf_slots_b{b}_s{s}_k{k}_c{c}_m{m}.hlo.txt"
+
+    single = to_hlo_text(lower_single(s, k, c, m))
+    with open(os.path.join(args.out_dir, single_name), "w") as f:
+        f.write(single)
+    print(f"wrote {single_name} ({len(single)} chars)")
+
+    batched = to_hlo_text(lower_batch(b, s, k, c, m))
+    with open(os.path.join(args.out_dir, batch_name), "w") as f:
+        f.write(batched)
+    print(f"wrote {batch_name} ({len(batched)} chars)")
+
+    # Loader manifest: key=value lines, parsed by rust/src/runtime.
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(
+            "\n".join(
+                [
+                    f"single={single_name}",
+                    f"batch={batch_name}",
+                    f"s={s}",
+                    f"k={k}",
+                    f"c={c}",
+                    f"m={m}",
+                    f"b={b}",
+                    "",
+                ]
+            )
+        )
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Pallas L1 kernel: slot-wise polynomial activation (Horner).
+
+The HE side evaluates the activation with the power-basis method to
+minimize multiplicative depth; in plaintext f32 depth is irrelevant, so
+Horner (fewest multiplies, one VMEM-resident pass) is the right shape.
+The coefficient vector lives in its own (tiny) VMEM block; the degree
+is static so the loop unrolls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, coeffs_ref, o_ref, *, m):
+    x = x_ref[...]
+    acc = jnp.full_like(x, coeffs_ref[m - 1])
+    for i in range(m - 2, -1, -1):  # static unroll: Horner
+        acc = acc * x + coeffs_ref[i]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def poly_activation(x, coeffs, interpret=True):
+    """Slot-wise sum_i coeffs[i] * x^i. x: (S,), coeffs: (m,) -> (S,)."""
+    (m,) = coeffs.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, coeffs)

@@ -1,0 +1,49 @@
+"""Pallas L1 kernel: packed matrix multiplication by diagonals.
+
+The paper's Algorithm 1 evaluates all L trees' KxK leaf-localization
+matrices simultaneously: K elementwise multiply-accumulates against
+rotated copies of the slot vector. This kernel is the TPU adaptation
+(DESIGN.md §Hardware-Adaptation):
+
+* the whole slot vector (S <= 8192 f32 = 32 KiB) is staged into VMEM
+  once and stays resident across all K iterations — the memory-hierarchy
+  restatement of "one ciphertext, many packed operands";
+* rotations become ``jnp.roll`` on the in-VMEM vector (the analogue of
+  the CKKS Galois rotation, which is "free" relative to HBM traffic);
+* the K-step loop is unrolled at trace time (K is static), feeding the
+  VPU with elementwise FMAs — there is no dense contraction here, so
+  the MXU is deliberately *not* used.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO, which is what
+the Rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(u_ref, diags_ref, o_ref, *, k):
+    u = u_ref[...]
+    acc = jnp.zeros_like(u)
+    for j in range(k):  # K is static: unrolled, no carried VMEM traffic
+        acc = acc + diags_ref[j, :] * jnp.roll(u, -j)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def packed_diag_matmul(u, diags, interpret=True):
+    """Sum_j diags[j] * roll_left(u, j) as a Pallas call.
+
+    u: (S,) f32; diags: (K, S) f32 -> (S,) f32.
+    """
+    k, s = diags.shape
+    assert u.shape == (s,), f"shape mismatch: {u.shape} vs {diags.shape}"
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((s,), u.dtype),
+        interpret=interpret,
+    )(u, diags)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness).
+
+These mirror, slot for slot, the homomorphic dataflow of the Rust HRF
+server (``rust/src/hrf/server.rs``):
+
+* ``packed_diag_matmul_ref`` — Algorithm 1: sum over K generalized
+  diagonals of the elementwise product with the left-rotated slot
+  vector. ``jnp.roll(u, -j)`` is the plaintext analogue of the CKKS
+  Galois rotation by ``j``.
+* ``poly_activation_ref`` — the degree-m activation polynomial applied
+  slot-wise (Horner).
+* ``nrf_slots_forward_ref`` — the full Algorithm 3 slot model.
+"""
+
+import jax.numpy as jnp
+
+
+def packed_diag_matmul_ref(u, diags):
+    """Sum_j diags[j] * roll_left(u, j).
+
+    u:     (S,)  slot vector
+    diags: (K, S) generalized diagonals, zero outside tree blocks
+    """
+    k = diags.shape[0]
+    acc = jnp.zeros_like(u)
+    for j in range(k):
+        acc = acc + diags[j] * jnp.roll(u, -j)
+    return acc
+
+
+def poly_activation_ref(x, coeffs):
+    """Horner evaluation of sum_i coeffs[i] x^i, slot-wise.
+
+    coeffs: (m,) low-order first.
+    """
+    acc = jnp.zeros_like(x)
+    for c in coeffs[::-1]:
+        acc = acc * x + c
+    return acc
+
+
+def nrf_slots_forward_ref(x_slots, t_slots, diags, b_slots, w_masks, betas, coeffs):
+    """Full NRF slot model (Algorithm 3 dataflow, plaintext).
+
+    x_slots: (S,)   packed replicated input  (client's x-tilde)
+    t_slots: (S,)   packed replicated thresholds
+    diags:   (K, S) leaf-localization diagonals
+    b_slots: (S,)   leaf biases
+    w_masks: (C, S) per-class alpha-weighted output masks
+    betas:   (C,)   per-class combined biases
+    coeffs:  (m,)   activation polynomial
+    returns: (C,)   class scores
+    """
+    u = poly_activation_ref(x_slots - t_slots, coeffs)
+    lin = packed_diag_matmul_ref(u, diags) + b_slots
+    v = poly_activation_ref(lin, coeffs)
+    return w_masks @ v + betas

@@ -1,0 +1,53 @@
+"""L2: the NRF slot model in JAX, composed from the Pallas kernels.
+
+This is the computation the Rust coordinator serves on the *plaintext*
+fast path (and uses to cross-check the homomorphic path): identical
+slot-level dataflow to Algorithm 3, minus encryption. It is lowered
+once by ``aot.py`` to HLO text and loaded by ``rust/src/runtime``.
+
+Two entry points:
+
+* ``nrf_slots_forward``  — single observation, (S,) -> (C,);
+* ``nrf_slots_forward_batch`` — vmapped over a static batch, the shape
+  the coordinator's dynamic batcher feeds.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.activation import poly_activation
+from compile.kernels.packed_matmul import packed_diag_matmul
+
+
+def nrf_slots_forward(x_slots, t_slots, diags, b_slots, w_masks, betas, coeffs):
+    """(S,) slot vector -> (C,) class scores. See kernels/ref.py."""
+    u = poly_activation(x_slots - t_slots, coeffs)
+    lin = packed_diag_matmul(u, diags) + b_slots
+    v = poly_activation(lin, coeffs)
+    return w_masks @ v + betas
+
+
+def nrf_slots_forward_batch(xs, t_slots, diags, b_slots, w_masks, betas, coeffs):
+    """(B, S) -> (B, C): vmap over observations, parameters broadcast."""
+    return jax.vmap(
+        nrf_slots_forward, in_axes=(0, None, None, None, None, None, None)
+    )(xs, t_slots, diags, b_slots, w_masks, betas, coeffs)
+
+
+def example_args(s, k, c, m, batch=None):
+    """ShapeDtypeStructs for lowering."""
+    f32 = jnp.float32
+    x = (
+        jax.ShapeDtypeStruct((s,), f32)
+        if batch is None
+        else jax.ShapeDtypeStruct((batch, s), f32)
+    )
+    return (
+        x,
+        jax.ShapeDtypeStruct((s,), f32),
+        jax.ShapeDtypeStruct((k, s), f32),
+        jax.ShapeDtypeStruct((s,), f32),
+        jax.ShapeDtypeStruct((c, s), f32),
+        jax.ShapeDtypeStruct((c,), f32),
+        jax.ShapeDtypeStruct((m,), f32),
+    )

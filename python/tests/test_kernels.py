@@ -1,0 +1,116 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; fixed cases pin the slot-layout
+semantics the Rust HRF relies on (rotation direction, block
+replication).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.activation import poly_activation
+from compile.kernels.packed_matmul import packed_diag_matmul
+from compile.kernels.ref import (
+    packed_diag_matmul_ref,
+    poly_activation_ref,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+@given(
+    s_exp=st.integers(min_value=4, max_value=9),
+    k_exp=st.integers(min_value=0, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_packed_matmul_matches_ref(s_exp, k_exp, seed):
+    s, k = 2**s_exp, 2**k_exp
+    u = rand((s,), seed)
+    diags = rand((k, s), seed + 1)
+    got = packed_diag_matmul(u, diags)
+    want = packed_diag_matmul_ref(u, diags)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_packed_matmul_rotation_direction():
+    # diag_1 = e_0 selects u[(0+1) % S] = u[1]: left rotation, matching
+    # the paper's Rotation(z, l) and the Rust evaluator convention.
+    s = 8
+    u = jnp.arange(s, dtype=jnp.float32)
+    diags = jnp.zeros((2, s), dtype=jnp.float32)
+    diags = diags.at[1, 0].set(1.0)
+    out = packed_diag_matmul(u, diags)
+    assert out[0] == pytest.approx(1.0)  # u[1]
+
+
+def test_packed_matmul_identity_diagonal():
+    s = 16
+    u = rand((s,), 3)
+    diags = jnp.ones((1, s), dtype=jnp.float32)
+    np.testing.assert_allclose(packed_diag_matmul(u, diags), u, rtol=1e-6)
+
+
+def test_packed_matmul_blockwise_equals_dense_matvec():
+    # One 2K-1 block with a replicated input must equal the dense KxK
+    # matvec — the property Algorithm 1 is built on.
+    k = 4
+    block = 2 * k - 1
+    rng = np.random.default_rng(7)
+    v = rng.uniform(-1, 1, (k, k)).astype(np.float32)
+    uvec = rng.uniform(-1, 1, (k,)).astype(np.float32)
+    # Replicated block layout: (u_0..u_{k-1} | u_0..u_{k-2})
+    u_slots = np.zeros(block, dtype=np.float32)
+    u_slots[:k] = uvec
+    u_slots[k:] = uvec[: k - 1]
+    diags = np.zeros((k, block), dtype=np.float32)
+    for j in range(k):
+        for p in range(k):
+            diags[j, p] = v[p, (p + j) % k]
+    out = packed_diag_matmul(jnp.asarray(u_slots), jnp.asarray(diags))
+    np.testing.assert_allclose(np.asarray(out[:k]), v @ uvec, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ activation
+@given(
+    s_exp=st.integers(min_value=4, max_value=10),
+    m=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_activation_matches_ref(s_exp, m, seed):
+    s = 2**s_exp
+    x = rand((s,), seed)
+    coeffs = rand((m,), seed + 2)
+    got = poly_activation(x, coeffs)
+    want = poly_activation_ref(x, coeffs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_activation_constant_poly():
+    x = rand((32,), 5)
+    coeffs = jnp.asarray([0.25], dtype=jnp.float32)
+    np.testing.assert_allclose(
+        poly_activation(x, coeffs), jnp.full((32,), 0.25), rtol=1e-6
+    )
+
+
+def test_activation_linear_poly():
+    x = rand((64,), 6)
+    coeffs = jnp.asarray([0.5, 2.0], dtype=jnp.float32)
+    np.testing.assert_allclose(poly_activation(x, coeffs), 0.5 + 2.0 * x, rtol=1e-5)
+
+
+def test_activation_matches_numpy_polyval():
+    x = rand((128,), 8)
+    coeffs = np.array([0.1, 0.9, -0.2, 0.0, -0.3], dtype=np.float32)
+    want = np.polyval(coeffs[::-1], np.asarray(x))
+    got = poly_activation(x, jnp.asarray(coeffs))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

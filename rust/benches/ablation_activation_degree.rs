@@ -1,0 +1,65 @@
+//! A1 — ablation over the activation-polynomial degree m (the paper's
+//! key approximation knob, §3): fit quality, plaintext accuracy,
+//! NRF(tanh)/NRF(poly) agreement, and the multiplicative depth the HRF
+//! needs — the trade-off that motivates the paper's low-degree choice.
+
+use cryptotree::bench_harness::print_metric_table;
+use cryptotree::data::adult;
+use cryptotree::forest::metrics::{agreement, Metrics};
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, fit_error, Activation};
+use cryptotree::nrf::{finetune_last_layer, FinetuneConfig, NeuralForest};
+
+/// Levels the power-basis evaluation of a degree-m polynomial consumes
+/// (x^2..x^m via squarings/mults = ⌈log2 m⌉, +1 coefficient multiply).
+fn act_levels(m: usize) -> usize {
+    (usize::BITS - (m.max(2) - 1).leading_zeros()) as usize + 1
+}
+
+fn main() {
+    let a = 3.0;
+    let ds = adult::generate(8_000, 51);
+    let (train, valid) = ds.split(0.8, 52);
+    let rf = RandomForest::fit(
+        &train,
+        &RandomForestConfig {
+            n_trees: 24,
+            ..Default::default()
+        },
+        53,
+    );
+    let mut nf_tanh = NeuralForest::from_forest(&rf, Activation::Tanh { a });
+    finetune_last_layer(&mut nf_tanh, &train, &FinetuneConfig::default(), 54);
+    let tanh_pred = nf_tanh.predict_batch(&valid.x);
+    let m_tanh = Metrics::from_predictions(&tanh_pred, &valid.y);
+
+    let mut rows = Vec::new();
+    for degree in [2usize, 3, 4, 5, 6, 8] {
+        let coeffs = chebyshev_fit_tanh(a, degree);
+        let err = fit_error(a, &coeffs, 400);
+        let nf_poly = nf_tanh.with_activation(Activation::Poly { coeffs });
+        let poly_pred = nf_poly.predict_batch(&valid.x);
+        let m_poly = Metrics::from_predictions(&poly_pred, &valid.y);
+        let agree = agreement(&poly_pred, &tanh_pred);
+        // HRF depth: two activations + two plaintext muls.
+        let depth = 2 * act_levels(degree) + 2;
+        rows.push(vec![
+            degree.to_string(),
+            format!("{err:.4}"),
+            format!("{:.3}", m_poly.accuracy),
+            format!("{:.1}%", 100.0 * agree),
+            depth.to_string(),
+            if depth <= 8 { "fits d=8 chain".into() } else { format!("needs depth {depth}") },
+        ]);
+    }
+    print_metric_table(
+        &format!(
+            "Ablation — activation degree (tanh a={a}; NRF-tanh accuracy {:.3})",
+            m_tanh.accuracy
+        ),
+        &["degree", "max fit err", "poly accuracy", "agree vs tanh", "HRF depth", "params"],
+        &rows,
+    );
+    println!("\nHigher degree → better tanh fit and agreement, but more CKKS levels");
+    println!("(bigger N, slower ops). Degree 4 is the sweet spot for the depth-8 chain.");
+}

@@ -1,0 +1,82 @@
+//! A2 — ablation over CKKS parameter sets: ring degree vs latency of
+//! the HRF building blocks, decode precision, and the packing budget
+//! L(2K−1) ≤ N/2. Quantifies the cost of moving from the dev chain to
+//! the 128-bit chain (same code path, bigger ring).
+
+use cryptotree::bench_harness::{bench, fmt_dur, print_metric_table};
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rows = Vec::new();
+    for params in [
+        CkksParams::toy(),
+        CkksParams::fast(),
+        CkksParams::hrf_default(),
+    ] {
+        let ctx = CkksContext::new(params.clone());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 61);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let gk = kg.gen_galois_keys(&ctx, &[1]);
+        let mut encryptor = Encryptor::new(pk, 62);
+        let decryptor = Decryptor::new(kg.secret_key());
+        let mut ev = Evaluator::new(ctx.clone());
+        let mut rng = Xoshiro256pp::new(63);
+        let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+
+        let t_mul = bench("mul", 1, 5, || ev.mul(&ct, &ct, &rlk));
+        let t_rot = bench("rot", 1, 5, || ev.rotate(&ct, 1, &gk));
+        let pt = enc.encode(&ctx, &z, ct.level, ctx.params.scale);
+        let t_pmul = bench("pmul", 1, 5, || ev.mul_plain(&ct, &pt));
+
+        // Decode precision of a fresh encryption.
+        let back = decryptor.decrypt_slots(&ctx, &enc, &ct);
+        let max_err = back
+            .iter()
+            .zip(&z)
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f64, f64::max);
+        let max_l_k16 = ctx.params.slots() / 31;
+        rows.push(vec![
+            params.name.to_string(),
+            params.depth().to_string(),
+            format!("{:.0}", params.log_qp()),
+            params.security_estimate().split(' ').next().unwrap().to_string(),
+            fmt_dur(t_mul.median),
+            fmt_dur(t_rot.median),
+            fmt_dur(t_pmul.median),
+            format!("{max_err:.2e}"),
+            max_l_k16.to_string(),
+        ]);
+    }
+    print_metric_table(
+        "Ablation — CKKS parameter sets",
+        &[
+            "params", "depth", "logQP", "security", "ct*ct", "rotate", "ct*pt",
+            "fresh err", "max L (K=16)",
+        ],
+        &rows,
+    );
+    println!("\nsecure128 (N=32768) follows the same curve at ~2x hrf_default cost;");
+    println!("run with CRYPTOTREE_SECURE=1 to include it (slow on this box).");
+    if std::env::var("CRYPTOTREE_SECURE").is_ok() {
+        let params = CkksParams::secure128();
+        let ctx = CkksContext::new(params.clone());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 64);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let mut encryptor = Encryptor::new(pk, 65);
+        let mut ev = Evaluator::new(ctx.clone());
+        let mut rng = Xoshiro256pp::new(66);
+        let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+        let t_mul = bench("mul", 1, 3, || ev.mul(&ct, &ct, &rlk));
+        println!("secure128 ct*ct median: {}", fmt_dur(t_mul.median));
+    }
+}

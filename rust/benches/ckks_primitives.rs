@@ -1,0 +1,68 @@
+//! E6 — CKKS primitive microbenchmarks (the §Perf working set):
+//! NTT, encode/decode, encrypt/decrypt, add, ct×pt, ct×ct (+relin),
+//! rescale, rotation, and the two polynomial-evaluation strategies.
+
+use cryptotree::bench_harness::{bench, print_table};
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::ntt::NttTable;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::rng::Xoshiro256pp;
+
+fn main() {
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, 71);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &[1]);
+    let mut encryptor = Encryptor::new(pk, 72);
+    let decryptor = Decryptor::new(kg.secret_key());
+    let mut ev = Evaluator::new(ctx.clone());
+    let mut rng = Xoshiro256pp::new(73);
+    let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    let mut rows = Vec::new();
+
+    // Raw NTT on one limb.
+    let table = NttTable::new(ctx.q(0), ctx.n());
+    let mut poly: Vec<u64> = (0..ctx.n()).map(|_| rng.next_below(ctx.q(0))).collect();
+    rows.push(bench(&format!("ntt forward (N={})", ctx.n()), 3, 20, || {
+        table.forward(&mut poly);
+    }));
+    rows.push(bench("ntt inverse", 3, 20, || table.inverse(&mut poly)));
+
+    rows.push(bench("encode (full slots)", 2, 10, || {
+        enc.encode(&ctx, &z, params.max_level(), params.scale)
+    }));
+    let pt = enc.encode(&ctx, &z, params.max_level(), params.scale);
+    rows.push(bench("decode", 2, 10, || enc.decode(&ctx, &pt)));
+    rows.push(bench("encrypt", 2, 10, || encryptor.encrypt(&ctx, &pt)));
+    let ct = encryptor.encrypt(&ctx, &pt);
+    rows.push(bench("decrypt+decode", 2, 10, || {
+        decryptor.decrypt_slots(&ctx, &enc, &ct)
+    }));
+    rows.push(bench("add (ct+ct)", 3, 20, || ev.add(&ct, &ct)));
+    rows.push(bench("mul_plain (ct*pt)", 3, 20, || ev.mul_plain(&ct, &pt)));
+    rows.push(bench("mul+relin (ct*ct)", 1, 8, || ev.mul(&ct, &ct, &rlk)));
+    rows.push(bench("square+relin", 1, 8, || ev.square(&ct, &rlk)));
+    rows.push(bench("rotate(1)", 1, 8, || ev.rotate(&ct, 1, &gk)));
+    rows.push(bench("rescale", 2, 10, || {
+        let mut c = ct.clone();
+        ev.rescale(&mut c);
+        c
+    }));
+    let coeffs = cryptotree::nrf::activation::chebyshev_fit_tanh(3.0, 4);
+    rows.push(bench("poly deg4 (horner)", 1, 4, || {
+        ev.eval_poly_horner(&enc, &ct, &coeffs, &rlk)
+    }));
+    rows.push(bench("poly deg4 (power basis)", 1, 4, || {
+        ev.eval_poly_power_basis(&enc, &ct, &coeffs, &rlk)
+    }));
+
+    print_table(
+        &format!("CKKS primitives — {} (depth {})", params.name, params.depth()),
+        &rows,
+    );
+}

@@ -1,0 +1,104 @@
+//! E5 — §5 "multi-threaded server": encrypted-request throughput as a
+//! function of worker count, plus plaintext fast-path throughput.
+//!
+//! On a multi-core deployment the encrypted path scales near-linearly
+//! in workers (each worker owns an independent CKKS evaluator and the
+//! work is embarrassingly parallel across requests). This testbed has
+//! a single core, so the expected *measured* shape here is flat — the
+//! bench prints cores so the reader can interpret the curve.
+
+use cryptotree::bench_harness::print_metric_table;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::NeuralForest;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let ds = adult::generate(1_500, 41);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 16,
+            ..Default::default()
+        },
+        42,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: chebyshev_fit_tanh(3.0, 4),
+        },
+    );
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let model =
+        HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+    let plan = model.plan;
+    let server = Arc::new(HrfServer::new(model));
+    let mut kg = KeyGenerator::new(&ctx, 43);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let mut client = HrfClient::new(Encryptor::new(pk, 44), Decryptor::new(kg.secret_key()));
+    let pool: Vec<_> = (0..4)
+        .map(|i| client.encrypt_input(&ctx, &enc, &server.model, &ds.x[i]))
+        .collect();
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let sessions = Arc::new(SessionManager::new());
+        let sid = sessions.register(rlk.clone(), gk.clone());
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers,
+                queue_capacity: 64,
+                ..Default::default()
+            },
+            ctx.clone(),
+            server.clone(),
+            sessions,
+            None,
+        );
+        let n_req = 6usize;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| loop {
+                match coord.submit_encrypted(sid, pool[i % pool.len()].clone()) {
+                    Ok(rx) => break rx,
+                    Err(SubmitError::Busy) => std::thread::sleep(Duration::from_millis(2)),
+                    Err(e) => panic!("{e:?}"),
+                }
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().expect("eval");
+        }
+        let elapsed = t0.elapsed();
+        let snap = coord.metrics.snapshot();
+        rows.push(vec![
+            workers.to_string(),
+            format!("{:.3}", n_req as f64 / elapsed.as_secs_f64()),
+            format!("{:?}", snap.encrypted_mean),
+            format!("{:?}", snap.encrypted_p95),
+        ]);
+        coord.shutdown();
+    }
+    print_metric_table(
+        &format!(
+            "§5 — encrypted throughput vs workers ({} host cores)",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        ),
+        &["workers", "enc req/s", "mean latency", "p95 latency"],
+        &rows,
+    );
+    println!("\nSingle-core testbed: flat scaling expected here; the per-request");
+    println!("work is independent, so multi-core deployments scale with workers.");
+}

@@ -1,0 +1,140 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with median / p95 statistics and
+//! aligned table printing, used by every `harness = false` bench binary
+//! under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Timing {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured
+/// runs. The closure's return value is black-boxed to prevent the
+/// optimizer from deleting the work.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: samples[iters / 2],
+        p95: samples[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Pretty-print a vector of timings as an aligned table.
+pub fn print_table(title: &str, rows: &[Timing]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "case", "iters", "mean", "median", "p95", "min"
+    );
+    for t in rows {
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            t.name,
+            t.iters,
+            fmt_dur(t.mean),
+            fmt_dur(t.median),
+            fmt_dur(t.p95),
+            fmt_dur(t.min)
+        );
+    }
+}
+
+/// Human duration formatting (µs/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Print a generic labelled metrics table (used by the table
+/// reproductions where the "result" is a metric, not a duration).
+pub fn print_metric_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let t = bench("noop-ish", 2, 11, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert_eq!(t.iters, 11);
+        assert!(t.min <= t.median && t.median <= t.p95);
+        assert!(t.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with("s"));
+    }
+}

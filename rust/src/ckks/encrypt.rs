@@ -1,0 +1,191 @@
+//! Plaintext / ciphertext containers, encryption and decryption.
+//!
+//! A ciphertext is a pair `(c0, c1)` of RNS polynomials in NTT form
+//! with `c0 + c1·s ≈ Δ·m (mod Q_level)`. The exact running scale is
+//! tracked in `scale` (it drifts slightly from Δ after rescales because
+//! chain primes are only ≈ Δ; all consumers use the tracked value, so
+//! the drift never becomes error).
+
+use super::encoder::{C64, Encoder};
+use super::keys::{PublicKey, SecretKey};
+use super::rns::{CkksContext, RnsPoly};
+use crate::rng::Xoshiro256pp;
+
+/// Encoded message (NTT form).
+#[derive(Clone, Debug)]
+pub struct Plaintext {
+    pub poly: RnsPoly,
+    pub scale: f64,
+}
+
+/// CKKS ciphertext: (c0, c1), NTT form, with level & scale metadata.
+#[derive(Clone, Debug)]
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    pub level: usize,
+    pub scale: f64,
+}
+
+impl Ciphertext {
+    /// Serialized size in bytes (2 polys × limbs × N × 8B) — used by
+    /// the coordinator for transport accounting.
+    pub fn size_bytes(&self) -> usize {
+        2 * self.c0.limbs.len() * self.c0.limbs[0].len() * 8
+    }
+}
+
+/// Public-key encryptor (client side).
+pub struct Encryptor {
+    pk: PublicKey,
+    rng: Xoshiro256pp,
+}
+
+impl Encryptor {
+    pub fn new(pk: PublicKey, seed: u64) -> Self {
+        Encryptor {
+            pk,
+            rng: Xoshiro256pp::new(seed),
+        }
+    }
+
+    /// Encrypt a plaintext: ct = v·(b,a) + (m + e0, e1).
+    pub fn encrypt(&mut self, ctx: &CkksContext, pt: &Plaintext) -> Ciphertext {
+        let level = pt.poly.level;
+        let mut v = RnsPoly::sample_ternary(ctx, &mut self.rng, level, false);
+        v.to_ntt(ctx);
+        let mut e0 = RnsPoly::sample_error(ctx, &mut self.rng, level, false);
+        e0.to_ntt(ctx);
+        let mut e1 = RnsPoly::sample_error(ctx, &mut self.rng, level, false);
+        e1.to_ntt(ctx);
+
+        let mut c0 = self.pk.b.clone();
+        c0.drop_to_level_ntt(ctx, level);
+        c0.mul_assign(ctx, &v);
+        c0.add_assign(ctx, &e0);
+        c0.add_assign(ctx, &pt.poly);
+
+        let mut c1 = self.pk.a.clone();
+        c1.drop_to_level_ntt(ctx, level);
+        c1.mul_assign(ctx, &v);
+        c1.add_assign(ctx, &e1);
+
+        Ciphertext {
+            c0,
+            c1,
+            level,
+            scale: pt.scale,
+        }
+    }
+
+    /// Convenience: encode + encrypt real slots at top level.
+    pub fn encrypt_slots(
+        &mut self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        z: &[f64],
+    ) -> Ciphertext {
+        let pt = enc.encode(ctx, z, ctx.params.max_level(), ctx.params.scale);
+        self.encrypt(ctx, &pt)
+    }
+}
+
+/// Secret-key decryptor (client side).
+pub struct Decryptor {
+    sk: SecretKey,
+}
+
+impl Decryptor {
+    pub fn new(sk: SecretKey) -> Self {
+        Decryptor { sk }
+    }
+
+    /// Decrypt: m = c0 + c1·s.
+    pub fn decrypt(&self, ctx: &CkksContext, ct: &Ciphertext) -> Plaintext {
+        let mut s = self.sk.s.clone();
+        s.special = false;
+        s.limbs.truncate(ct.level + 1);
+        s.level = ct.level;
+        let mut m = ct.c1.clone();
+        m.mul_assign(ctx, &s);
+        m.add_assign(ctx, &ct.c0);
+        Plaintext {
+            poly: m,
+            scale: ct.scale,
+        }
+    }
+
+    /// Decrypt + decode real slots.
+    pub fn decrypt_slots(&self, ctx: &CkksContext, enc: &Encoder, ct: &Ciphertext) -> Vec<f64> {
+        enc.decode(ctx, &self.decrypt(ctx, ct))
+    }
+
+    /// Decrypt + decode complex slots.
+    pub fn decrypt_slots_complex(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        ct: &Ciphertext,
+    ) -> Vec<C64> {
+        enc.decode_complex(ctx, &self.decrypt(ctx, ct))
+    }
+}
+
+impl RnsPoly {
+    /// Truncate an NTT-form key-level poly (no special limb use) down
+    /// to `level` — valid because limbs are independent in both
+    /// coefficient and NTT form.
+    pub fn drop_to_level_ntt(&mut self, _ctx: &CkksContext, level: usize) {
+        debug_assert!(!self.special);
+        debug_assert!(level <= self.level);
+        self.limbs.truncate(level + 1);
+        self.level = level;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::keys::KeyGenerator;
+    use crate::ckks::params::CkksParams;
+    use crate::ckks::rns::CkksContext;
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 42);
+        let pk = kg.gen_public_key(&ctx);
+        let mut encryptor = Encryptor::new(pk, 777);
+        let decryptor = Decryptor::new(kg.secret_key());
+
+        let mut rng = Xoshiro256pp::new(31);
+        let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+        let back = decryptor.decrypt_slots(&ctx, &enc, &ct);
+        for i in 0..z.len() {
+            assert!(
+                (back[i] - z[i]).abs() < 1e-6,
+                "slot {i}: {} vs {}",
+                back[i],
+                z[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fresh_noise_is_small() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 1);
+        let pk = kg.gen_public_key(&ctx);
+        let mut encryptor = Encryptor::new(pk, 2);
+        let decryptor = Decryptor::new(kg.secret_key());
+        let z = vec![0.5f64; 8];
+        let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+        let back = decryptor.decrypt_slots(&ctx, &enc, &ct);
+        let err: f64 = (0..8).map(|i| (back[i] - 0.5).abs()).fold(0.0, f64::max);
+        // fresh encryption error ~ sigma*N/scale << 1e-6
+        assert!(err < 1e-6, "fresh noise too large: {err}");
+    }
+}

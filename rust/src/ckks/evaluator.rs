@@ -1,0 +1,749 @@
+//! Homomorphic operations over ciphertexts, with per-operation
+//! counters (the paper's Table 1 is regenerated from these).
+//!
+//! Scale discipline: `mul`/`mul_plain` produce scale `s_a·s_b`; callers
+//! rescale to return near Δ. `add` requires operands at the same level
+//! and (approximately) equal scales — the evaluator aligns levels by
+//! dropping limbs and treats a relative scale mismatch < 1e-9 as equal
+//! (the residual mismatch is far below the noise floor).
+
+use super::encoder::Encoder;
+use super::encrypt::{Ciphertext, Plaintext};
+use super::keys::{apply_ksw, apply_ksw_decomposed, decompose, GaloisKeys, RelinKey};
+use super::rns::{ContextRef, RnsPoly};
+
+/// Homomorphic operation counters (Table 1 of the paper).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub add: u64,
+    pub add_plain: u64,
+    pub mul: u64,
+    pub mul_plain: u64,
+    pub rotate: u64,
+    pub rescale: u64,
+    pub relin: u64,
+}
+
+impl OpCounts {
+    pub fn diff(&self, earlier: &OpCounts) -> OpCounts {
+        OpCounts {
+            add: self.add - earlier.add,
+            add_plain: self.add_plain - earlier.add_plain,
+            mul: self.mul - earlier.mul,
+            mul_plain: self.mul_plain - earlier.mul_plain,
+            rotate: self.rotate - earlier.rotate,
+            rescale: self.rescale - earlier.rescale,
+            relin: self.relin - earlier.relin,
+        }
+    }
+
+    /// Additions as the paper counts them (ct+ct and ct+pt).
+    pub fn additions(&self) -> u64 {
+        self.add + self.add_plain
+    }
+
+    /// Multiplications as the paper counts them (ct·ct and ct·pt).
+    pub fn multiplications(&self) -> u64 {
+        self.mul + self.mul_plain
+    }
+}
+
+/// The server-side evaluator. Owns the context reference and counters;
+/// key material is passed per call (it belongs to the client session —
+/// see `coordinator::session`).
+pub struct Evaluator {
+    pub ctx: ContextRef,
+    pub counts: OpCounts,
+}
+
+impl Evaluator {
+    pub fn new(ctx: ContextRef) -> Self {
+        Evaluator {
+            ctx,
+            counts: OpCounts::default(),
+        }
+    }
+
+    pub fn reset_counts(&mut self) {
+        self.counts = OpCounts::default();
+    }
+
+    fn scales_match(a: f64, b: f64) {
+        debug_assert!(
+            ((a - b) / a).abs() < 1e-9,
+            "scale mismatch: {a} vs {b}"
+        );
+    }
+
+    /// Align two ciphertexts to the lower of their levels.
+    fn align(&self, a: &mut Ciphertext, b: &mut Ciphertext) {
+        let lvl = a.level.min(b.level);
+        for ct in [&mut *a, &mut *b] {
+            if ct.level > lvl {
+                ct.c0.drop_to_level_ntt(&self.ctx, lvl);
+                ct.c1.drop_to_level_ntt(&self.ctx, lvl);
+                ct.level = lvl;
+            }
+        }
+    }
+
+    pub fn add(&mut self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (mut a, mut b) = (a.clone(), b.clone());
+        self.align(&mut a, &mut b);
+        Self::scales_match(a.scale, b.scale);
+        a.c0.add_assign(&self.ctx, &b.c0);
+        a.c1.add_assign(&self.ctx, &b.c1);
+        self.counts.add += 1;
+        a
+    }
+
+    pub fn add_inplace(&mut self, a: &mut Ciphertext, b: &Ciphertext) {
+        if a.level != b.level {
+            let mut b2 = b.clone();
+            self.align(a, &mut b2);
+            Self::scales_match(a.scale, b2.scale);
+            a.c0.add_assign(&self.ctx, &b2.c0);
+            a.c1.add_assign(&self.ctx, &b2.c1);
+        } else {
+            Self::scales_match(a.scale, b.scale);
+            a.c0.add_assign(&self.ctx, &b.c0);
+            a.c1.add_assign(&self.ctx, &b.c1);
+        }
+        self.counts.add += 1;
+    }
+
+    pub fn sub(&mut self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (mut a, mut b) = (a.clone(), b.clone());
+        self.align(&mut a, &mut b);
+        Self::scales_match(a.scale, b.scale);
+        a.c0.sub_assign(&self.ctx, &b.c0);
+        a.c1.sub_assign(&self.ctx, &b.c1);
+        self.counts.add += 1;
+        a
+    }
+
+    pub fn negate(&mut self, a: &Ciphertext) -> Ciphertext {
+        let mut a = a.clone();
+        a.c0.neg_assign(&self.ctx);
+        a.c1.neg_assign(&self.ctx);
+        a
+    }
+
+    /// ct + pt. The plaintext must be encoded at the ciphertext's level
+    /// and scale (use [`Evaluator::encode_for`]).
+    pub fn add_plain(&mut self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let mut a = a.clone();
+        self.add_plain_inplace(&mut a, pt);
+        a
+    }
+
+    pub fn add_plain_inplace(&mut self, a: &mut Ciphertext, pt: &Plaintext) {
+        debug_assert_eq!(a.level, pt.poly.level, "add_plain level mismatch");
+        Self::scales_match(a.scale, pt.scale);
+        a.c0.add_assign(&self.ctx, &pt.poly);
+        self.counts.add_plain += 1;
+    }
+
+    pub fn sub_plain_inplace(&mut self, a: &mut Ciphertext, pt: &Plaintext) {
+        debug_assert_eq!(a.level, pt.poly.level);
+        Self::scales_match(a.scale, pt.scale);
+        a.c0.sub_assign(&self.ctx, &pt.poly);
+        self.counts.add_plain += 1;
+    }
+
+    /// ct · pt (element-wise in slots). Result scale = s_ct · s_pt;
+    /// caller usually rescales right after.
+    pub fn mul_plain(&mut self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let mut a = a.clone();
+        self.mul_plain_inplace(&mut a, pt);
+        a
+    }
+
+    pub fn mul_plain_inplace(&mut self, a: &mut Ciphertext, pt: &Plaintext) {
+        debug_assert_eq!(a.level, pt.poly.level, "mul_plain level mismatch");
+        a.c0.mul_assign(&self.ctx, &pt.poly);
+        a.c1.mul_assign(&self.ctx, &pt.poly);
+        a.scale *= pt.scale;
+        self.counts.mul_plain += 1;
+    }
+
+    /// ct · ct with relinearization. Result scale = s_a · s_b.
+    pub fn mul(&mut self, a: &Ciphertext, b: &Ciphertext, rlk: &RelinKey) -> Ciphertext {
+        let (mut a, mut b) = (a.clone(), b.clone());
+        self.align(&mut a, &mut b);
+        // Tensor: d0 = a0 b0, d1 = a0 b1 + a1 b0, d2 = a1 b1.
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&self.ctx, &b.c0);
+        let mut d1 = a.c0.clone();
+        d1.mul_assign(&self.ctx, &b.c1);
+        let mut t = a.c1.clone();
+        t.mul_assign(&self.ctx, &b.c0);
+        d1.add_assign(&self.ctx, &t);
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&self.ctx, &b.c1);
+        // Relinearize d2: (k0, k1) ≈ d2·s² under s.
+        let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0);
+        d0.add_assign(&self.ctx, &k0);
+        d1.add_assign(&self.ctx, &k1);
+        self.counts.mul += 1;
+        self.counts.relin += 1;
+        Ciphertext {
+            c0: d0,
+            c1: d1,
+            level: a.level,
+            scale: a.scale * b.scale,
+        }
+    }
+
+    /// Square (saves one ring multiplication vs `mul(a, a)`).
+    pub fn square(&mut self, a: &Ciphertext, rlk: &RelinKey) -> Ciphertext {
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&self.ctx, &a.c0);
+        let mut d1 = a.c0.clone();
+        d1.mul_assign(&self.ctx, &a.c1);
+        let d1_copy = d1.clone();
+        d1.add_assign(&self.ctx, &d1_copy); // 2·a0·a1
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&self.ctx, &a.c1);
+        let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0);
+        d0.add_assign(&self.ctx, &k0);
+        d1.add_assign(&self.ctx, &k1);
+        self.counts.mul += 1;
+        self.counts.relin += 1;
+        Ciphertext {
+            c0: d0,
+            c1: d1,
+            level: a.level,
+            scale: a.scale * a.scale,
+        }
+    }
+
+    /// Rescale: divide by the top chain prime, dropping one level.
+    pub fn rescale(&mut self, a: &mut Ciphertext) {
+        let q_top = self.ctx.q(a.level) as f64;
+        a.c0.rescale(&self.ctx);
+        a.c1.rescale(&self.ctx);
+        a.level -= 1;
+        a.scale /= q_top;
+        self.counts.rescale += 1;
+    }
+
+    /// Multiply-and-rescale convenience.
+    pub fn mul_plain_rescale(&mut self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let mut r = self.mul_plain(a, pt);
+        self.rescale(&mut r);
+        r
+    }
+
+    /// Rotate slots left by `r` (paper's `Rotation(z, r)`).
+    pub fn rotate(&mut self, a: &Ciphertext, r: usize, gk: &GaloisKeys) -> Ciphertext {
+        if r == 0 {
+            return a.clone();
+        }
+        let g = *gk
+            .elements
+            .get(&r)
+            .unwrap_or_else(|| panic!("no galois key for rotation {r}"));
+        let ksw = &gk.keys[&r];
+        let mut c0 = a.c0.clone();
+        let mut c1 = a.c1.clone();
+        c0.automorphism(&self.ctx, g);
+        c1.automorphism(&self.ctx, g);
+        let (k0, k1) = apply_ksw(&self.ctx, &c1, ksw);
+        c0.add_assign(&self.ctx, &k0);
+        self.counts.rotate += 1;
+        Ciphertext {
+            c0,
+            c1: k1,
+            level: a.level,
+            scale: a.scale,
+        }
+    }
+
+    /// Precompute the key-switch decomposition of a ciphertext for
+    /// repeated rotations of the *same* input ("hoisting", §Perf
+    /// step 3): the expensive iNTT + per-digit NTTs happen once and
+    /// every subsequent [`Evaluator::rotate_hoisted`] is a slot
+    /// permutation + multiply-accumulate.
+    pub fn hoist(&self, a: &Ciphertext) -> Vec<RnsPoly> {
+        let mut c1 = a.c1.clone();
+        c1.from_ntt(&self.ctx);
+        decompose(&self.ctx, &c1)
+    }
+
+    /// Rotate using a hoisted decomposition (must come from
+    /// [`Evaluator::hoist`] of the same ciphertext).
+    pub fn rotate_hoisted(
+        &mut self,
+        a: &Ciphertext,
+        digits: &[RnsPoly],
+        r: usize,
+        gk: &GaloisKeys,
+    ) -> Ciphertext {
+        if r == 0 {
+            return a.clone();
+        }
+        let g = *gk
+            .elements
+            .get(&r)
+            .unwrap_or_else(|| panic!("no galois key for rotation {r}"));
+        let perm = self.ctx.galois_perm(g);
+        // κ(D_j(c1)) stays a valid decomposition of κ(c1) (the digits
+        // are small integer polys; automorphism commutes with the CRT
+        // lift), so permute each digit in the NTT domain and MAC.
+        let rotated: Vec<RnsPoly> = digits
+            .iter()
+            .map(|d| {
+                let mut d = d.clone();
+                d.automorphism_ntt(&perm);
+                d
+            })
+            .collect();
+        let (mut k0, k1) = apply_ksw_decomposed(&self.ctx, &rotated, &gk.keys[&r]);
+        let mut c0 = a.c0.clone();
+        c0.automorphism_ntt(&perm);
+        k0.add_assign(&self.ctx, &c0);
+        self.counts.rotate += 1;
+        Ciphertext {
+            c0: k0,
+            c1: k1,
+            level: a.level,
+            scale: a.scale,
+        }
+    }
+
+    /// Σ over all `span` slots via log₂(span) rotate-and-adds
+    /// (span must be a power of two; result: every slot of the first
+    /// block holds the full sum — in particular slot 0).
+    pub fn rotate_sum(&mut self, a: &Ciphertext, span: usize, gk: &GaloisKeys) -> Ciphertext {
+        debug_assert!(span.is_power_of_two());
+        let mut acc = a.clone();
+        let mut step = 1usize;
+        while step < span {
+            let rot = self.rotate(&acc, step, gk);
+            self.add_inplace(&mut acc, &rot);
+            step <<= 1;
+        }
+        acc
+    }
+
+    /// Encode a plaintext vector at the level & scale of `ct` —
+    /// the common companion to `add_plain` / `mul_plain`.
+    pub fn encode_for(
+        &self,
+        enc: &Encoder,
+        z: &[f64],
+        ct: &Ciphertext,
+        scale: f64,
+    ) -> Plaintext {
+        enc.encode(&self.ctx, z, ct.level, scale)
+    }
+
+    /// Evaluate a polynomial Σ c_i x^i on a ciphertext by Horner's
+    /// rule: depth = deg(P) levels. (The BSGS variant below trades
+    /// ct-ct muls for depth; Horner is kept as the reference path.)
+    pub fn eval_poly_horner(
+        &mut self,
+        enc: &Encoder,
+        x: &Ciphertext,
+        coeffs: &[f64],
+        rlk: &RelinKey,
+    ) -> Ciphertext {
+        assert!(coeffs.len() >= 2, "constant polynomial");
+        let deg = coeffs.len() - 1;
+        let delta = self.ctx.params.scale;
+        // acc = c_deg (as plaintext constant times x) … operate:
+        // acc = c_deg * x  + c_{deg-1}, then repeatedly acc = acc*x + c_i
+        let c_top = enc.encode_constant(&self.ctx, coeffs[deg], x.level, delta);
+        let mut acc = self.mul_plain(x, &c_top);
+        self.rescale(&mut acc);
+        let c_next = enc.encode_constant(&self.ctx, coeffs[deg - 1], acc.level, acc.scale);
+        self.add_plain_inplace(&mut acc, &c_next);
+        for i in (0..deg - 1).rev() {
+            // acc = acc * x
+            let mut x_at = x.clone();
+            x_at.c0.drop_to_level_ntt(&self.ctx, acc.level);
+            x_at.c1.drop_to_level_ntt(&self.ctx, acc.level);
+            x_at.level = acc.level;
+            let mut next = self.mul(&acc, &x_at, rlk);
+            self.rescale(&mut next);
+            let c_i = enc.encode_constant(&self.ctx, coeffs[i], next.level, next.scale);
+            self.add_plain_inplace(&mut next, &c_i);
+            acc = next;
+        }
+        acc
+    }
+
+    /// Evaluate a polynomial by the power-basis ("baby-step") method:
+    /// precompute x^2, x^4 … so depth is ⌈log₂ deg⌉+1 instead of deg.
+    /// Used by the HRF hot path (see EXPERIMENTS.md §Perf).
+    pub fn eval_poly_power_basis(
+        &mut self,
+        enc: &Encoder,
+        x: &Ciphertext,
+        coeffs: &[f64],
+        rlk: &RelinKey,
+    ) -> Ciphertext {
+        // Coefficients below this threshold are treated as zero (e.g.
+        // the ~1e-17 even terms of odd tanh fits) — their powers are
+        // never computed, saving both muls and levels.
+        const EPS: f64 = 1e-12;
+        let deg = coeffs
+            .iter()
+            .rposition(|c| c.abs() > EPS)
+            .expect("all-zero polynomial");
+        assert!(deg >= 1, "constant polynomial");
+        if deg <= 2 {
+            let trimmed: Vec<f64> = coeffs[..=deg].to_vec();
+            return self.eval_poly_horner(enc, x, &trimmed, rlk);
+        }
+        let delta = self.ctx.params.scale;
+        // Mark needed powers (nonzero coeff) plus the intermediates of
+        // their binary decompositions.
+        let mut needed = vec![false; deg + 1];
+        for (i, c) in coeffs.iter().enumerate().skip(1).take(deg) {
+            if c.abs() > EPS {
+                needed[i] = true;
+            }
+        }
+        for i in (2..=deg).rev() {
+            if needed[i] && !i.is_power_of_two() {
+                let hi = 1usize << (usize::BITS - 1 - i.leading_zeros());
+                needed[hi] = true;
+                needed[i - hi] = true;
+            }
+        }
+        // Power-of-two intermediates below the largest needed pow2.
+        let max_p2 = (1..=deg)
+            .filter(|i| needed[*i] && i.is_power_of_two())
+            .max()
+            .unwrap_or(1);
+        {
+            let mut p = max_p2;
+            while p > 1 {
+                needed[p] = true;
+                p >>= 1;
+            }
+        }
+        let mut powers: Vec<Option<Ciphertext>> = vec![None; deg + 1];
+        powers[1] = Some(x.clone());
+        let mut p = 2usize;
+        while p <= deg {
+            if needed[p] {
+                let half = &powers[p / 2].clone().unwrap();
+                let mut sq = self.square(half, rlk);
+                self.rescale(&mut sq);
+                powers[p] = Some(sq);
+            }
+            p <<= 1;
+        }
+        // Fill non-power-of-two entries as x^hi * x^(i-hi).
+        for i in 3..=deg {
+            if !needed[i] || powers[i].is_some() {
+                continue;
+            }
+            let hi = 1usize << (usize::BITS - 1 - i.leading_zeros());
+            let a = powers[hi].clone().unwrap();
+            let b = powers[i - hi].clone().unwrap();
+            let mut prod = self.mul(&a, &b, rlk);
+            self.rescale(&mut prod);
+            powers[i] = Some(prod);
+        }
+        // Target level/scale: that of the deepest power used.
+        let min_level = powers
+            .iter()
+            .flatten()
+            .map(|c| c.level)
+            .min()
+            .unwrap();
+        // Accumulate Σ c_i·x^i at min_level with matched scales.
+        let mut acc: Option<Ciphertext> = None;
+        for i in 1..=deg {
+            if coeffs[i].abs() <= EPS {
+                continue;
+            }
+            let mut term = powers[i].clone().unwrap();
+            if term.level > min_level {
+                term.c0.drop_to_level_ntt(&self.ctx, min_level);
+                term.c1.drop_to_level_ntt(&self.ctx, min_level);
+                term.level = min_level;
+            }
+            let cpt = enc.encode_constant(&self.ctx, coeffs[i], term.level, delta);
+            let mut term = self.mul_plain(&term, &cpt);
+            self.rescale(&mut term);
+            match &mut acc {
+                None => acc = Some(term),
+                Some(a) => {
+                    // force exact scale agreement: scales differ by
+                    // <1e-9 relative (same prime chain); adopt a's.
+                    term.scale = a.scale;
+                    self.add_inplace(a, &term);
+                }
+            }
+        }
+        let mut acc = acc.expect("non-trivial polynomial");
+        let c0pt = enc.encode_constant(&self.ctx, coeffs[0], acc.level, acc.scale);
+        self.add_plain_inplace(&mut acc, &c0pt);
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encrypt::{Decryptor, Encryptor};
+    use crate::ckks::keys::KeyGenerator;
+    use crate::ckks::params::CkksParams;
+    use crate::ckks::rns::CkksContext;
+    use crate::rng::Xoshiro256pp;
+
+    struct Setup {
+        ctx: ContextRef,
+        enc: Encoder,
+        encryptor: Encryptor,
+        decryptor: Decryptor,
+        rlk: RelinKey,
+        gk: GaloisKeys,
+        ev: Evaluator,
+    }
+
+    fn setup(rotations: &[usize]) -> Setup {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 42);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let gk = kg.gen_galois_keys(&ctx, rotations);
+        Setup {
+            ev: Evaluator::new(ctx.clone()),
+            encryptor: Encryptor::new(pk, 100),
+            decryptor: Decryptor::new(kg.secret_key()),
+            rlk,
+            gk,
+            enc,
+            ctx,
+        }
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Xoshiro256pp::new(seed);
+        (0..n).map(|_| r.uniform(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn homomorphic_add_sub() {
+        let mut s = setup(&[]);
+        let n = s.enc.slots();
+        let (a, b) = (rand_vec(n, 1), rand_vec(n, 2));
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let cb = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &b);
+        let sum = s.ev.add(&ca, &cb);
+        let diff = s.ev.sub(&ca, &cb);
+        let ds = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &sum);
+        let dd = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &diff);
+        for i in 0..n {
+            assert!((ds[i] - (a[i] + b[i])).abs() < 1e-5);
+            assert!((dd[i] - (a[i] - b[i])).abs() < 1e-5);
+        }
+        assert_eq!(s.ev.counts.add, 2);
+    }
+
+    #[test]
+    fn homomorphic_mul_with_rescale() {
+        let mut s = setup(&[]);
+        let n = s.enc.slots();
+        let (a, b) = (rand_vec(n, 3), rand_vec(n, 4));
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let cb = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &b);
+        let mut prod = s.ev.mul(&ca, &cb, &s.rlk);
+        s.ev.rescale(&mut prod);
+        assert_eq!(prod.level, s.ctx.params.max_level() - 1);
+        let dp = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &prod);
+        for i in 0..n {
+            assert!(
+                (dp[i] - a[i] * b[i]).abs() < 1e-4,
+                "slot {i}: {} vs {}",
+                dp[i],
+                a[i] * b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn homomorphic_mul_plain_and_add_plain() {
+        let mut s = setup(&[]);
+        let n = s.enc.slots();
+        let (a, w) = (rand_vec(n, 5), rand_vec(n, 6));
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let pw = s.ev.encode_for(&s.enc, &w, &ca, s.ctx.params.scale);
+        let mut prod = s.ev.mul_plain(&ca, &pw);
+        s.ev.rescale(&mut prod);
+        let pb = s.ev.encode_for(&s.enc, &w, &prod, prod.scale);
+        s.ev.add_plain_inplace(&mut prod, &pb);
+        let d = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &prod);
+        for i in 0..n {
+            assert!(
+                (d[i] - (a[i] * w[i] + w[i])).abs() < 1e-4,
+                "slot {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn square_matches_mul_self() {
+        let mut s = setup(&[]);
+        let n = s.enc.slots();
+        let a = rand_vec(n, 7);
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let mut sq = s.ev.square(&ca, &s.rlk);
+        s.ev.rescale(&mut sq);
+        let d = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &sq);
+        for i in 0..n {
+            assert!((d[i] - a[i] * a[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_shifts_left() {
+        let mut s = setup(&[1, 2, 4]);
+        let n = s.enc.slots();
+        let a: Vec<f64> = (0..n).map(|i| (i % 31) as f64 / 31.0).collect();
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        for &r in &[1usize, 2, 4] {
+            let rot = s.ev.rotate(&ca, r, &s.gk);
+            let d = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &rot);
+            for i in 0..n {
+                assert!(
+                    (d[i] - a[(i + r) % n]).abs() < 1e-5,
+                    "r={r} slot {i}"
+                );
+            }
+        }
+        assert_eq!(s.ev.counts.rotate, 3);
+    }
+
+    #[test]
+    fn hoisted_rotation_matches_plain_rotation() {
+        let mut s = setup(&[1, 3, 7]);
+        let n = s.enc.slots();
+        let a: Vec<f64> = (0..n).map(|i| ((i * 29) % 83) as f64 / 83.0).collect();
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let digits = s.ev.hoist(&ca);
+        for &r in &[1usize, 3, 7] {
+            let fast = s.ev.rotate_hoisted(&ca, &digits, r, &s.gk);
+            let slow = s.ev.rotate(&ca, r, &s.gk);
+            let df = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &fast);
+            let ds = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &slow);
+            for i in 0..n {
+                assert!(
+                    (df[i] - a[(i + r) % n]).abs() < 1e-5,
+                    "hoisted r={r} slot {i}: {} vs {}",
+                    df[i],
+                    a[(i + r) % n]
+                );
+                assert!((df[i] - ds[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn rotate_sum_totals_slots() {
+        let mut s = setup(&[1, 2, 4, 8]);
+        let n = s.enc.slots();
+        let mut a = vec![0.0f64; n];
+        for (i, v) in a.iter_mut().enumerate().take(16) {
+            *v = (i + 1) as f64 * 0.01;
+        }
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let summed = s.ev.rotate_sum(&ca, 16, &s.gk);
+        let d = s.decryptor.decrypt_slots(&s.ctx, &s.enc, &summed);
+        let expect: f64 = (1..=16).map(|i| i as f64 * 0.01).sum();
+        assert!((d[0] - expect).abs() < 1e-4, "{} vs {expect}", d[0]);
+    }
+
+    #[test]
+    fn poly_eval_horner_matches_plain() {
+        let mut s = setup(&[]);
+        let n = s.enc.slots();
+        let a = rand_vec(n, 8);
+        // P(x) = 0.5 - 0.3x + 0.2x² + 0.1x³  on [-1,1]
+        let coeffs = [0.5, -0.3, 0.2, 0.1];
+        let _ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        // toy params have depth 2 — need depth 3 for cubic Horner; use
+        // fast() context instead.
+        drop(s);
+        let ctx = CkksContext::new(CkksParams::fast());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 9);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let mut encryptor = Encryptor::new(pk, 10);
+        let decryptor = Decryptor::new(kg.secret_key());
+        let mut ev = Evaluator::new(ctx.clone());
+        let n = enc.slots();
+        let a = rand_vec(n, 8);
+        let ca = encryptor.encrypt_slots(&ctx, &enc, &a);
+        let out = ev.eval_poly_horner(&enc, &ca, &coeffs, &rlk);
+        let d = decryptor.decrypt_slots(&ctx, &enc, &out);
+        for i in 0..n {
+            let x = a[i];
+            let expect = 0.5 - 0.3 * x + 0.2 * x * x + 0.1 * x * x * x;
+            assert!(
+                (d[i] - expect).abs() < 1e-3,
+                "slot {i}: {} vs {expect}",
+                d[i]
+            );
+        }
+        let _ = ca;
+    }
+
+    #[test]
+    fn poly_eval_power_basis_matches_horner() {
+        let ctx = CkksContext::new(CkksParams::fast());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 11);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let mut encryptor = Encryptor::new(pk, 12);
+        let decryptor = Decryptor::new(kg.secret_key());
+        let mut ev = Evaluator::new(ctx.clone());
+        let n = enc.slots();
+        let a = rand_vec(n, 13);
+        let coeffs = [0.1, 0.7, -0.2, 0.05, -0.3];
+        let ca = encryptor.encrypt_slots(&ctx, &enc, &a);
+        let out = ev.eval_poly_power_basis(&enc, &ca, &coeffs, &rlk);
+        let d = decryptor.decrypt_slots(&ctx, &enc, &out);
+        for i in 0..n {
+            let x = a[i];
+            let expect = coeffs[0]
+                + coeffs[1] * x
+                + coeffs[2] * x * x
+                + coeffs[3] * x * x * x
+                + coeffs[4] * x * x * x * x;
+            assert!(
+                (d[i] - expect).abs() < 1e-3,
+                "slot {i}: {} vs {expect}",
+                d[i]
+            );
+        }
+        // power-basis for deg 4 consumes 3 levels (x², x⁴, + coeff mul)
+        assert!(out.level >= ctx.params.max_level().saturating_sub(3));
+    }
+
+    #[test]
+    fn op_counters_track() {
+        let mut s = setup(&[1]);
+        let n = s.enc.slots();
+        let a = rand_vec(n, 14);
+        let ca = s.encryptor.encrypt_slots(&s.ctx, &s.enc, &a);
+        let before = s.ev.counts;
+        let _ = s.ev.add(&ca, &ca);
+        let _ = s.ev.rotate(&ca, 1, &s.gk);
+        let pw = s.ev.encode_for(&s.enc, &a, &ca, s.ctx.params.scale);
+        let _ = s.ev.mul_plain(&ca, &pw);
+        let d = s.ev.counts.diff(&before);
+        assert_eq!(d.add, 1);
+        assert_eq!(d.rotate, 1);
+        assert_eq!(d.mul_plain, 1);
+    }
+}

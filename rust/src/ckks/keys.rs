@@ -1,0 +1,389 @@
+//! Key material: secret / public / relinearization / Galois keys, and
+//! the hybrid key-switching core they share.
+//!
+//! Key-switching (the expensive primitive behind both relinearization
+//! and slot rotation) uses per-RNS-limb decomposition with one special
+//! prime `P` (SEAL-style, `dnum = L`):
+//!
+//! For a source secret `s'` (either `s²` or `s(X^g)`) the switching key
+//! is, per chain limb `j`:
+//!
+//! ```text
+//!   ksk_j = ( -a_j·s + e_j + P·T_j·s' ,  a_j )   over basis Q·P
+//! ```
+//!
+//! with `T_j = (Q/q_j)·[(Q/q_j)^{-1}]_{q_j}` the CRT unit (≡ δ_ij mod
+//! q_i). Switching a component `d` (mod `Q_ℓ`) computes
+//! `Σ_j [d]_{q_j} · ksk_j`, then divides by `P` (mod-down). The noise
+//! added is ≈ `(ℓ+1)·N·q_max·σ / P` — about 2^-6 for default
+//! parameters, i.e. far below the encoding scale.
+
+use super::modops::{mul_mod, pow_mod};
+use super::rns::{CkksContext, RnsPoly};
+use crate::rng::Xoshiro256pp;
+use std::collections::HashMap;
+
+/// Secret key: ternary `s`, stored in NTT form over the full basis
+/// (all chain primes + special).
+#[derive(Clone)]
+pub struct SecretKey {
+    pub s: RnsPoly,
+}
+
+/// Public key `(b, a)` with `b = -a·s + e`, NTT form, full chain (no
+/// special limb).
+#[derive(Clone)]
+pub struct PublicKey {
+    pub b: RnsPoly,
+    pub a: RnsPoly,
+}
+
+/// One key-switching key: per chain limb `j`, a pair over basis Q·P.
+#[derive(Clone)]
+pub struct KswKey {
+    /// b_j components (NTT, special limb last).
+    pub b: Vec<RnsPoly>,
+    /// a_j components (NTT, special limb last).
+    pub a: Vec<RnsPoly>,
+}
+
+/// Relinearization key: switch `s²` → `s`.
+#[derive(Clone)]
+pub struct RelinKey(pub KswKey);
+
+/// Galois keys: rotation step → switching key for `s(X^{5^r})` → `s`.
+#[derive(Clone)]
+pub struct GaloisKeys {
+    pub keys: HashMap<usize, KswKey>,
+    /// Galois element per rotation step (5^r mod 2N).
+    pub elements: HashMap<usize, usize>,
+}
+
+impl GaloisKeys {
+    pub fn supported_rotations(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.keys.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Generates all key material from a seeded RNG (client side).
+pub struct KeyGenerator {
+    sk: SecretKey,
+    rng: Xoshiro256pp,
+}
+
+impl KeyGenerator {
+    pub fn new(ctx: &CkksContext, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let max = ctx.params.max_level();
+        let mut s = RnsPoly::sample_ternary(ctx, &mut rng, max, true);
+        s.to_ntt(ctx);
+        KeyGenerator {
+            sk: SecretKey { s },
+            rng,
+        }
+    }
+
+    pub fn secret_key(&self) -> SecretKey {
+        self.sk.clone()
+    }
+
+    pub fn gen_public_key(&mut self, ctx: &CkksContext) -> PublicKey {
+        let max = ctx.params.max_level();
+        let a = RnsPoly::sample_uniform(ctx, &mut self.rng, max, false, true);
+        let mut e = RnsPoly::sample_error(ctx, &mut self.rng, max, false);
+        e.to_ntt(ctx);
+        // b = -a*s + e
+        let mut s = self.sk.s.clone();
+        s.special = false;
+        s.limbs.truncate(max + 1);
+        let mut b = a.clone();
+        b.mul_assign(ctx, &s);
+        b.neg_assign(ctx);
+        b.add_assign(ctx, &e);
+        PublicKey { b, a }
+    }
+
+    /// Core: generate a switching key for source secret `s_src`
+    /// (full-basis NTT poly) → the generator's secret `s`.
+    fn gen_ksw(&mut self, ctx: &CkksContext, s_src: &RnsPoly) -> KswKey {
+        let max = ctx.params.max_level();
+        let n_chain = max + 1;
+        let p_special = ctx.params.special;
+        // The key embeds P·T_j·s_src, where T_j = (Q/q_j)·[(Q/q_j)^{-1}]_{q_j}
+        // is the CRT unit: T_j ≡ δ_ij (mod q_i). Residues of P·T_j:
+        //   mod q_i (i≠j): 0       mod q_j: P mod q_j       mod P: 0
+        // so the scalar is (P mod q_j) on limb j and 0 elsewhere.
+        let mut bs = Vec::with_capacity(n_chain);
+        let mut as_ = Vec::with_capacity(n_chain);
+        let full_s = &self.sk.s; // level=max, special=true, NTT
+        for j in 0..n_chain {
+            let a_j = RnsPoly::sample_uniform(ctx, &mut self.rng, max, true, true);
+            let mut e_j = RnsPoly::sample_error(ctx, &mut self.rng, max, true);
+            e_j.to_ntt(ctx);
+            // b_j = -a_j*s + e_j + P*T_j*s_src
+            let mut b_j = a_j.clone();
+            b_j.mul_assign(ctx, full_s);
+            b_j.neg_assign(ctx);
+            b_j.add_assign(ctx, &e_j);
+            // P*T_j mod q_i = (P mod q_i) * (T_j mod q_i) = (P mod q_i)*δ_ij
+            // P*T_j mod P = 0
+            let mut pt_s = s_src.clone();
+            // multiply limb-wise by the scalar (P*T_j mod modulus of limb)
+            {
+                let n_limbs = pt_s.limbs.len();
+                for li in 0..n_limbs {
+                    let is_special = li == n_limbs - 1;
+                    let modulus = if is_special { p_special } else { ctx.q(li) };
+                    let scalar = if is_special {
+                        0u64
+                    } else if li == j {
+                        p_special % modulus
+                    } else {
+                        0u64
+                    };
+                    // The special limb and all limbs i≠j become zero.
+                    if scalar == 0 {
+                        for x in pt_s.limbs[li].iter_mut() {
+                            *x = 0;
+                        }
+                    } else {
+                        for x in pt_s.limbs[li].iter_mut() {
+                            *x = mul_mod(*x, scalar, modulus);
+                        }
+                    }
+                }
+            }
+            b_j.add_assign(ctx, &pt_s);
+            bs.push(b_j);
+            as_.push(a_j);
+        }
+        KswKey { b: bs, a: as_ }
+    }
+
+    /// Relinearization key (s² → s).
+    pub fn gen_relin_key(&mut self, ctx: &CkksContext) -> RelinKey {
+        let mut s2 = self.sk.s.clone();
+        let s_copy = self.sk.s.clone();
+        s2.mul_assign(ctx, &s_copy);
+        RelinKey(self.gen_ksw(ctx, &s2))
+    }
+
+    /// Galois keys for the given left-rotation steps.
+    pub fn gen_galois_keys(&mut self, ctx: &CkksContext, rotations: &[usize]) -> GaloisKeys {
+        let two_n = 2 * ctx.n();
+        let mut keys = HashMap::new();
+        let mut elements = HashMap::new();
+        for &r in rotations {
+            if r == 0 || keys.contains_key(&r) {
+                continue;
+            }
+            let g = pow_mod(5, r as u64, two_n as u64) as usize;
+            // source secret: s(X^g)
+            let mut s_rot = self.sk.s.clone();
+            s_rot.automorphism(ctx, g);
+            let ksw = self.gen_ksw(ctx, &s_rot);
+            keys.insert(r, ksw);
+            elements.insert(r, g);
+        }
+        GaloisKeys { keys, elements }
+    }
+}
+
+/// Apply a switching key to a component `d` (mod Q_ℓ, NTT form):
+/// returns `(c0', c1')` at the same level such that
+/// `c0' + c1'·s ≈ d·s_src`.
+///
+/// Hot path: the per-digit products are multiply-accumulated straight
+/// against the stored key limbs (no key clones — §Perf step 1), and
+/// mod-down stays in the NTT domain except for the special limb
+/// (§Perf step 2).
+pub fn apply_ksw(ctx: &CkksContext, d: &RnsPoly, ksw: &KswKey) -> (RnsPoly, RnsPoly) {
+    debug_assert!(d.is_ntt);
+    debug_assert!(!d.special);
+    let mut d_coeff = d.clone();
+    d_coeff.from_ntt(ctx);
+    apply_ksw_decomposed(ctx, &decompose(ctx, &d_coeff), ksw)
+}
+
+/// Decompose a coefficient-form poly into its NTT'd RNS digits, each
+/// lifted to the full working basis Q_ℓ ∪ {P}. Shared by plain
+/// key-switching and hoisted rotations (which reuse one decomposition
+/// across many rotations).
+pub fn decompose(ctx: &CkksContext, d_coeff: &RnsPoly) -> Vec<RnsPoly> {
+    debug_assert!(!d_coeff.is_ntt);
+    let level = d_coeff.level;
+    (0..=level)
+        .map(|j| {
+            let src = &d_coeff.limbs[j];
+            let mut lifted = RnsPoly::zero(ctx, level, true, false);
+            let n_limbs = lifted.limbs.len();
+            for li in 0..n_limbs {
+                let modulus = if li == n_limbs - 1 {
+                    ctx.params.special
+                } else {
+                    ctx.q(li)
+                };
+                let dst = &mut lifted.limbs[li];
+                for (x, &v) in dst.iter_mut().zip(src.iter()) {
+                    *x = v % modulus;
+                }
+            }
+            lifted.to_ntt(ctx);
+            lifted
+        })
+        .collect()
+}
+
+/// Inner product of NTT'd digits with a switching key, followed by
+/// mod-down: the core of every key-switch.
+pub fn apply_ksw_decomposed(
+    ctx: &CkksContext,
+    digits: &[RnsPoly],
+    ksw: &KswKey,
+) -> (RnsPoly, RnsPoly) {
+    let level = digits[0].level;
+    let max = ctx.params.max_level();
+    let mut acc0 = RnsPoly::zero(ctx, level, true, true);
+    let mut acc1 = RnsPoly::zero(ctx, level, true, true);
+    for (j, lifted) in digits.iter().enumerate() {
+        mac_key(ctx, &mut acc0, lifted, &ksw.b[j], level, max);
+        mac_key(ctx, &mut acc1, lifted, &ksw.a[j], level, max);
+    }
+    acc0.mod_down_special_ntt(ctx);
+    acc1.mod_down_special_ntt(ctx);
+    (acc0, acc1)
+}
+
+/// acc += lifted ⊙ key, mapping the working basis (chain 0..=level +
+/// special) onto the key's full basis (chain 0..=max + special) —
+/// no intermediate allocations.
+#[inline]
+fn mac_key(
+    ctx: &CkksContext,
+    acc: &mut RnsPoly,
+    lifted: &RnsPoly,
+    key: &RnsPoly,
+    level: usize,
+    max: usize,
+) {
+    use super::modops::{add_mod, mul_mod};
+    let n_limbs = level + 2;
+    for li in 0..n_limbs {
+        let (q, key_li) = if li == n_limbs - 1 {
+            (ctx.params.special, max + 1)
+        } else {
+            (ctx.q(li), li)
+        };
+        let a = &mut acc.limbs[li];
+        let x = &lifted.limbs[li];
+        let k = &key.limbs[key_li];
+        for i in 0..a.len() {
+            a[i] = add_mod(a[i], mul_mod(x[i], k[i], q), q);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoder::Encoder;
+    use crate::ckks::encrypt::{Decryptor, Encryptor};
+    use crate::ckks::params::CkksParams;
+    use crate::ckks::rns::CkksContext;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn public_key_relation() {
+        // b + a*s should be small (the error poly).
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut kg = KeyGenerator::new(&ctx, 5);
+        let pk = kg.gen_public_key(&ctx);
+        let mut s = kg.secret_key().s;
+        s.special = false;
+        s.limbs.truncate(ctx.params.max_level() + 1);
+        let mut t = pk.a.clone();
+        t.mul_assign(&ctx, &s);
+        t.add_assign(&ctx, &pk.b);
+        t.from_ntt(&ctx);
+        let coeffs = t.to_centered_f64(&ctx);
+        let max = coeffs.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        assert!(max < 8.0 * ctx.params.sigma, "pk error too large: {max}");
+    }
+
+    #[test]
+    fn keyswitch_identity() {
+        // Switching d with key for s_src=s must return (c0,c1) with
+        // c0 + c1*s ≈ d*s.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut kg = KeyGenerator::new(&ctx, 6);
+        let s_full = kg.secret_key().s;
+        let ksw = kg.gen_ksw(&ctx, &s_full);
+
+        let mut rng = Xoshiro256pp::new(60);
+        let level = ctx.params.max_level();
+        let d = RnsPoly::sample_uniform(&ctx, &mut rng, level, false, true);
+        let (c0, c1) = apply_ksw(&ctx, &d, &ksw);
+
+        let mut s = s_full.clone();
+        s.special = false;
+        s.limbs.truncate(level + 1);
+
+        // expected = d*s ; got = c0 + c1*s ; difference must be small.
+        let mut expected = d.clone();
+        expected.mul_assign(&ctx, &s);
+        let mut got = c1.clone();
+        got.mul_assign(&ctx, &s);
+        got.add_assign(&ctx, &c0);
+        got.sub_assign(&ctx, &expected);
+        got.from_ntt(&ctx);
+        let coeffs = got.to_centered_f64(&ctx);
+        let max = coeffs.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        // noise bound ≈ (ℓ+1)·N·q·σ/P + mod-down rounding ≈ small
+        assert!(max < 1e6, "keyswitch noise too large: {max}");
+    }
+
+    #[test]
+    fn galois_key_rotation_end_to_end() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 7);
+        let pk = kg.gen_public_key(&ctx);
+        let gk = kg.gen_galois_keys(&ctx, &[1, 3]);
+        let mut encryptor = Encryptor::new(pk, 70);
+        let decryptor = Decryptor::new(kg.secret_key());
+
+        let n = enc.slots();
+        let z: Vec<f64> = (0..n).map(|i| ((i * 13) % 101) as f64 / 101.0).collect();
+        let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+
+        for &r in &[1usize, 3] {
+            let g = gk.elements[&r];
+            let ksw = &gk.keys[&r];
+            // rotate: apply automorphism to c0, c1; keyswitch c1.
+            let mut c0 = ct.c0.clone();
+            let mut c1 = ct.c1.clone();
+            c0.automorphism(&ctx, g);
+            c1.automorphism(&ctx, g);
+            let (k0, k1) = apply_ksw(&ctx, &c1, ksw);
+            let mut r0 = c0;
+            r0.add_assign(&ctx, &k0);
+            let out = crate::ckks::encrypt::Ciphertext {
+                c0: r0,
+                c1: k1,
+                level: ct.level,
+                scale: ct.scale,
+            };
+            let back = decryptor.decrypt_slots(&ctx, &enc, &out);
+            for i in 0..n {
+                let expect = z[(i + r) % n];
+                assert!(
+                    (back[i] - expect).abs() < 1e-5,
+                    "rot {r} slot {i}: {} vs {expect}",
+                    back[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! A self-contained leveled CKKS implementation (Cheon–Kim–Kim–Song).
+//!
+//! This is the substrate the paper outsourced to Microsoft SEAL; here it
+//! is built from scratch so the whole HRF stack is auditable and
+//! dependency-free:
+//!
+//! * [`modops`] — 64-bit modular arithmetic primitives (Barrett/Shoup).
+//! * [`params`] — parameter sets + NTT-friendly prime generation.
+//! * [`ntt`] — negacyclic number-theoretic transform per RNS prime.
+//! * [`rns`] — RNS ("double-CRT") polynomials and base conversions.
+//! * [`encoder`] — canonical-embedding encoder: `C^{N/2}` slots ↔ `R_Q`.
+//! * [`keys`] — secret/public/relinearization/Galois keys; hybrid
+//!   key-switching with one special prime.
+//! * [`encrypt`] — encryption / decryption.
+//! * [`evaluator`] — homomorphic ops (add/sub/mul/mul_plain/rescale/
+//!   rotate/poly-eval) with per-operation counters (Table 1 of the
+//!   paper is regenerated from these counters).
+//!
+//! Design notes
+//! ------------
+//! * All ciphertext polynomials are kept in NTT form; plaintexts are
+//!   converted on encode. Rescale and automorphisms round-trip through
+//!   coefficient form.
+//! * Key-switching uses per-limb RNS decomposition with a single
+//!   special prime `P` (SEAL-style "hybrid" with `dnum = L`): the added
+//!   noise is `≈ ℓ·N·q_max·σ / P`, negligible for `P ≈ 2^60`.
+//! * The scale is a power of two (default `2^40`); rescaling divides by
+//!   the dropped prime, which is chosen within `2^±10` of the scale so
+//!   scale drift stays bounded (tracked exactly in `Ciphertext::scale`).
+
+pub mod encoder;
+pub mod encrypt;
+pub mod evaluator;
+pub mod keys;
+pub mod modops;
+pub mod ntt;
+pub mod params;
+pub mod rns;
+
+pub use encoder::Encoder;
+pub use encrypt::{Ciphertext, Decryptor, Encryptor, Plaintext};
+pub use evaluator::{Evaluator, OpCounts};
+pub use keys::{GaloisKeys, KeyGenerator, PublicKey, RelinKey, SecretKey};
+pub use params::CkksParams;

@@ -1,0 +1,209 @@
+//! 64-bit modular arithmetic primitives.
+//!
+//! All CKKS primes are < 2^61, so sums of two residues never overflow
+//! u64 and products fit in u128. Multiplication uses either a plain
+//! u128 reduction or Shoup's precomputed-quotient trick on NTT hot
+//! paths (see [`crate::ckks::ntt`]).
+
+/// x + y mod m (inputs reduced).
+#[inline(always)]
+pub fn add_mod(x: u64, y: u64, m: u64) -> u64 {
+    let s = x + y;
+    if s >= m {
+        s - m
+    } else {
+        s
+    }
+}
+
+/// x - y mod m (inputs reduced).
+#[inline(always)]
+pub fn sub_mod(x: u64, y: u64, m: u64) -> u64 {
+    if x >= y {
+        x - y
+    } else {
+        x + m - y
+    }
+}
+
+/// -x mod m (input reduced).
+#[inline(always)]
+pub fn neg_mod(x: u64, m: u64) -> u64 {
+    if x == 0 {
+        0
+    } else {
+        m - x
+    }
+}
+
+/// x * y mod m via u128.
+#[inline(always)]
+pub fn mul_mod(x: u64, y: u64, m: u64) -> u64 {
+    ((x as u128 * y as u128) % m as u128) as u64
+}
+
+/// Shoup precomputation for multiplying by a fixed operand `y`:
+/// returns floor(y * 2^64 / m).
+#[inline(always)]
+pub fn shoup_precompute(y: u64, m: u64) -> u64 {
+    (((y as u128) << 64) / m as u128) as u64
+}
+
+/// Shoup modular multiplication: x * y mod m where `y_shoup` was
+/// produced by [`shoup_precompute`]. Result fully reduced.
+#[inline(always)]
+pub fn mul_mod_shoup(x: u64, y: u64, y_shoup: u64, m: u64) -> u64 {
+    let r = mul_mod_shoup_lazy(x, y, y_shoup, m);
+    if r >= m {
+        r - m
+    } else {
+        r
+    }
+}
+
+/// Lazy Shoup multiplication: result in [0, 2m). Valid for any x
+/// (Harvey); used by the lazy NTT butterflies.
+#[inline(always)]
+pub fn mul_mod_shoup_lazy(x: u64, y: u64, y_shoup: u64, m: u64) -> u64 {
+    let q = ((x as u128 * y_shoup as u128) >> 64) as u64;
+    (x.wrapping_mul(y)).wrapping_sub(q.wrapping_mul(m))
+}
+
+/// x^e mod m by square-and-multiply.
+pub fn pow_mod(mut x: u64, mut e: u64, m: u64) -> u64 {
+    let mut acc: u64 = 1;
+    x %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul_mod(acc, x, m);
+        }
+        x = mul_mod(x, x, m);
+        e >>= 1;
+    }
+    acc
+}
+
+/// Modular inverse of x mod prime m (Fermat).
+pub fn inv_mod(x: u64, m: u64) -> u64 {
+    pow_mod(x, m - 2, m)
+}
+
+/// Deterministic Miller–Rabin, exact for all u64 with this witness set.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n == p {
+            return true;
+        }
+        if n % p == 0 {
+            return false;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        r += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Find a generator of the 2N-th roots of unity mod prime q
+/// (q ≡ 1 mod 2N): returns ψ with ψ^(2N) = 1 and ψ^N = -1.
+pub fn primitive_2nth_root(q: u64, two_n: u64) -> u64 {
+    debug_assert_eq!((q - 1) % two_n, 0);
+    let cofactor = (q - 1) / two_n;
+    // Try small candidates; g^cofactor has order dividing 2N. It is a
+    // primitive 2N-th root iff its N-th power is -1 (i.e. order exactly 2N).
+    let mut g = 2u64;
+    loop {
+        let cand = pow_mod(g, cofactor, q);
+        if cand != 1 && pow_mod(cand, two_n / 2, q) == q - 1 {
+            return cand;
+        }
+        g += 1;
+        debug_assert!(g < 1000, "no primitive root found (q not prime?)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    const P: u64 = (1 << 40) + 0x1_0001; // not prime; used for add/sub only
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut r = Xoshiro256pp::new(1);
+        for _ in 0..1000 {
+            let x = r.next_below(P);
+            let y = r.next_below(P);
+            let s = add_mod(x, y, P);
+            assert_eq!(sub_mod(s, y, P), x);
+            assert_eq!(add_mod(sub_mod(x, y, P), y, P), x);
+        }
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        let mut r = Xoshiro256pp::new(2);
+        let m = 0x0FFF_FFFF_FFFF_FFC5; // large odd modulus
+        for _ in 0..1000 {
+            let x = r.next_below(m);
+            let y = r.next_below(m);
+            assert_eq!(mul_mod(x, y, m), ((x as u128 * y as u128) % m as u128) as u64);
+        }
+    }
+
+    #[test]
+    fn shoup_matches_plain() {
+        let mut r = Xoshiro256pp::new(3);
+        let m = 0x1FFF_FFFF_FFFF_FF9B;
+        for _ in 0..1000 {
+            let x = r.next_below(m);
+            let y = r.next_below(m);
+            let ys = shoup_precompute(y, m);
+            assert_eq!(mul_mod_shoup(x, y, ys, m), mul_mod(x, y, m));
+        }
+    }
+
+    #[test]
+    fn pow_and_inverse() {
+        assert!(is_prime(1_000_000_007));
+        assert!(is_prime(0xFFFF_FFFF_FFFF_FFC5)); // largest u64 prime
+        assert!(!is_prime(1_000_000_009u64 * 3));
+        let m = 1_000_000_007u64;
+        let mut r = Xoshiro256pp::new(4);
+        for _ in 0..200 {
+            let x = 1 + r.next_below(m - 1);
+            assert_eq!(mul_mod(x, inv_mod(x, m), m), 1);
+        }
+    }
+
+    #[test]
+    fn primitive_root_properties() {
+        // q = 1 mod 2N for N=1024: pick q = 12289 * ... use small known:
+        // 12289 = 1 + 3*2^12 supports 2N up to 4096.
+        let q = 12289u64;
+        let two_n = 4096u64;
+        let psi = primitive_2nth_root(q, two_n);
+        assert_eq!(pow_mod(psi, two_n, q), 1);
+        assert_eq!(pow_mod(psi, two_n / 2, q), q - 1);
+    }
+}

@@ -1,0 +1,249 @@
+//! Negacyclic number-theoretic transform over Z_q[X]/(X^N + 1).
+//!
+//! Standard Cooley–Tukey / Gentleman–Sande butterflies with the ψ-twist
+//! folded into the twiddle tables (Longa–Naehrig layout), one table per
+//! RNS prime. Twiddles are stored with Shoup precomputations so the hot
+//! loop is two multiplies and no `%`.
+
+#[cfg(test)]
+use super::modops::{add_mod, mul_mod, sub_mod};
+use super::modops::{inv_mod, pow_mod, primitive_2nth_root, shoup_precompute};
+
+/// Precomputed NTT tables for one prime modulus.
+#[derive(Clone, Debug)]
+pub struct NttTable {
+    pub q: u64,
+    pub n: usize,
+    /// ψ^bitrev(i) for forward transform.
+    psi: Vec<u64>,
+    psi_shoup: Vec<u64>,
+    /// ψ^{-bitrev(i)} for inverse transform.
+    inv_psi: Vec<u64>,
+    inv_psi_shoup: Vec<u64>,
+    /// N^{-1} mod q.
+    inv_n: u64,
+    inv_n_shoup: u64,
+}
+
+fn bit_reverse(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+impl NttTable {
+    pub fn new(q: u64, n: usize) -> Self {
+        assert!(n.is_power_of_two());
+        let two_n = (2 * n) as u64;
+        assert_eq!(q % two_n, 1, "q must be 1 mod 2N");
+        let psi_root = primitive_2nth_root(q, two_n);
+        let inv_psi_root = inv_mod(psi_root, q);
+        let bits = n.trailing_zeros();
+        let mut psi = vec![0u64; n];
+        let mut inv_psi = vec![0u64; n];
+        for i in 0..n {
+            let r = bit_reverse(i, bits);
+            psi[i] = pow_mod(psi_root, r as u64, q);
+            inv_psi[i] = pow_mod(inv_psi_root, r as u64, q);
+        }
+        let psi_shoup = psi.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let inv_psi_shoup = inv_psi.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let inv_n = inv_mod(n as u64, q);
+        NttTable {
+            q,
+            n,
+            psi,
+            psi_shoup,
+            inv_psi,
+            inv_psi_shoup,
+            inv_n,
+            inv_n_shoup: shoup_precompute(inv_n, q),
+        }
+    }
+
+    /// In-place forward negacyclic NTT (coefficient -> evaluation,
+    /// bit-reversed output order internally; callers treat the result
+    /// as an opaque evaluation-domain vector).
+    ///
+    /// Harvey-style lazy butterflies (§Perf step 4): intermediate
+    /// values live in [0, 4q) and are only fully reduced in the final
+    /// pass, removing two conditional subtractions per butterfly.
+    /// Requires q < 2^62 (all parameter sets: q ≤ ~2^60).
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = self.n;
+        let mut m = 1usize;
+        while m < self.n {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi[m + i];
+                let ws = self.psi_shoup[m + i];
+                let j1 = 2 * i * t;
+                for j in j1..j1 + t {
+                    // invariant: a[*] < 4q
+                    let mut u = a[j];
+                    if u >= two_q {
+                        u -= two_q; // < 2q
+                    }
+                    let v = super::modops::mul_mod_shoup_lazy(a[j + t], w, ws, q); // < 2q
+                    a[j] = u + v; // < 4q
+                    a[j + t] = u + two_q - v; // < 4q
+                }
+            }
+            m <<= 1;
+        }
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (evaluation -> coefficient),
+    /// lazy Gentleman–Sande butterflies (values < 2q in flight).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = 1usize;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let w = self.inv_psi[h + i];
+                let ws = self.inv_psi_shoup[h + i];
+                for j in j1..j1 + t {
+                    // invariant: a[*] < 2q
+                    let u = a[j];
+                    let v = a[j + t];
+                    let mut s = u + v; // < 4q
+                    if s >= two_q {
+                        s -= two_q; // < 2q
+                    }
+                    a[j] = s;
+                    // (u - v + 2q) < 4q; lazy Shoup gives < 2q
+                    a[j + t] =
+                        super::modops::mul_mod_shoup_lazy(u + two_q - v, w, ws, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            let v = super::modops::mul_mod_shoup_lazy(*x, self.inv_n, self.inv_n_shoup, q);
+            *x = if v >= q { v - q } else { v };
+        }
+    }
+}
+
+/// Schoolbook negacyclic convolution (O(N^2)) — test oracle only.
+#[cfg(test)]
+pub fn negacyclic_mul_naive(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    let n = a.len();
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        for j in 0..n {
+            let p = mul_mod(a[i], b[j], q);
+            let k = i + j;
+            if k < n {
+                out[k] = add_mod(out[k], p, q);
+            } else {
+                out[k - n] = sub_mod(out[k - n], p, q);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn table(n: usize) -> NttTable {
+        // 0x0FFF... prime congruent 1 mod 2n: generate via params helper.
+        let mut taken = vec![];
+        let q = crate::ckks::params::CkksParams::gen_primes(n, 50, 1, &mut taken)[0];
+        NttTable::new(q, n)
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for n in [8usize, 64, 1024] {
+            let t = table(n);
+            let mut r = Xoshiro256pp::new(n as u64);
+            let orig: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+            let mut a = orig.clone();
+            t.forward(&mut a);
+            assert_ne!(a, orig);
+            t.inverse(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn pointwise_equals_negacyclic_convolution() {
+        for n in [8usize, 32, 128] {
+            let t = table(n);
+            let mut r = Xoshiro256pp::new(99 + n as u64);
+            let a: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+            let b: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+            let expect = negacyclic_mul_naive(&a, &b, t.q);
+            let mut fa = a.clone();
+            let mut fb = b.clone();
+            t.forward(&mut fa);
+            t.forward(&mut fb);
+            let mut fc: Vec<u64> = fa
+                .iter()
+                .zip(&fb)
+                .map(|(&x, &y)| mul_mod(x, y, t.q))
+                .collect();
+            t.inverse(&mut fc);
+            assert_eq!(fc, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 256;
+        let t = table(n);
+        let mut r = Xoshiro256pp::new(7);
+        let a: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+        let b: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| add_mod(x, y, t.q)).collect();
+        let (mut fa, mut fb, mut fs) = (a.clone(), b.clone(), sum.clone());
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        t.forward(&mut fs);
+        for i in 0..n {
+            assert_eq!(fs[i], add_mod(fa[i], fb[i], t.q));
+        }
+    }
+
+    #[test]
+    fn x_times_x_n_minus_1_wraps_negatively() {
+        // (X) * (X^{N-1}) = X^N = -1 in the negacyclic ring.
+        let n = 16;
+        let t = table(n);
+        let mut a = vec![0u64; n];
+        let mut b = vec![0u64; n];
+        a[1] = 1;
+        b[n - 1] = 1;
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        let mut fc: Vec<u64> = fa.iter().zip(&fb).map(|(&x, &y)| mul_mod(x, y, t.q)).collect();
+        t.inverse(&mut fc);
+        let mut expect = vec![0u64; n];
+        expect[0] = t.q - 1; // -1
+        assert_eq!(fc, expect);
+    }
+}

@@ -1,0 +1,203 @@
+//! CKKS parameter sets and NTT-friendly prime generation.
+//!
+//! A parameter set fixes the ring degree `N`, the ciphertext modulus
+//! chain `q_0, …, q_L` (RNS primes), one special prime `p` used only
+//! inside key-switching, and the encoding scale `Δ`.
+//!
+//! Prime selection: every prime must satisfy `q ≡ 1 (mod 2N)` so the
+//! negacyclic NTT exists. Rescaling primes are chosen as close as
+//! possible to `Δ` so the scale stays ≈ `Δ` after each rescale
+//! (drift is tracked exactly; see `Ciphertext::scale`).
+
+use super::modops::is_prime;
+use std::sync::Arc;
+
+/// Fixed parameters for one CKKS context.
+#[derive(Clone, Debug)]
+pub struct CkksParams {
+    /// Ring degree (power of two). Slot count is `N/2`.
+    pub n: usize,
+    /// Ciphertext modulus chain, `q_0` first. `q_0` is the "anchor"
+    /// prime (~2^60); the rest are rescaling primes (~Δ).
+    pub moduli: Vec<u64>,
+    /// Special prime for hybrid key-switching (~2^60). Never holds
+    /// message mass.
+    pub special: u64,
+    /// Encoding scale Δ (power of two).
+    pub scale: f64,
+    /// Error std-dev for encryption noise.
+    pub sigma: f64,
+    /// Human label for reports.
+    pub name: &'static str,
+}
+
+pub type ParamsRef = Arc<CkksParams>;
+
+impl CkksParams {
+    /// Number of slots (`N/2`).
+    pub fn slots(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Maximum usable level (level = index of the last active prime;
+    /// fresh ciphertexts start at `max_level`).
+    pub fn max_level(&self) -> usize {
+        self.moduli.len() - 1
+    }
+
+    /// Multiplicative depth available (number of rescales possible).
+    pub fn depth(&self) -> usize {
+        self.moduli.len() - 1
+    }
+
+    /// Total log2 of the modulus chain incl. special prime — security
+    /// is a function of (N, logQP).
+    pub fn log_qp(&self) -> f64 {
+        self.moduli.iter().map(|&q| (q as f64).log2()).sum::<f64>()
+            + (self.special as f64).log2()
+    }
+
+    /// Rough security estimate from the homomorphicencryption.org
+    /// standard table (ternary secret, classical): max logQP for
+    /// 128-bit security by ring degree.
+    pub fn security_estimate(&self) -> &'static str {
+        let max128 = match self.n {
+            4096 => 109.0,
+            8192 => 218.0,
+            16384 => 438.0,
+            32768 => 881.0,
+            _ => 0.0,
+        };
+        if self.log_qp() <= max128 {
+            ">=128-bit"
+        } else if self.log_qp() <= max128 * 1.25 {
+            "~100-bit (dev default; see DESIGN.md §6)"
+        } else {
+            "INSECURE (test-only parameters)"
+        }
+    }
+
+    /// Generate `count` distinct primes ≡ 1 (mod 2n), each as close as
+    /// possible to `2^bits`, excluding any in `taken`.
+    pub fn gen_primes(n: usize, bits: u32, count: usize, taken: &mut Vec<u64>) -> Vec<u64> {
+        let two_n = (2 * n) as u64;
+        let target = 1u64 << bits;
+        // March outward from the target in steps of 2N, alternating
+        // above/below, keeping q ≡ 1 (mod 2N).
+        let base = (target / two_n) * two_n + 1;
+        let mut found = Vec::with_capacity(count);
+        let mut step = 0u64;
+        while found.len() < count {
+            step += 1;
+            for cand in [base + step * two_n, base.wrapping_sub(step * two_n)] {
+                if found.len() == count {
+                    break;
+                }
+                if cand < (1 << (bits - 1)) || cand >= (1u64 << 62) {
+                    continue;
+                }
+                if is_prime(cand) && !taken.contains(&cand) {
+                    taken.push(cand);
+                    found.push(cand);
+                }
+            }
+            assert!(step < 1_000_000, "prime search exhausted");
+        }
+        found
+    }
+
+    /// Build a parameter set: one ~2^q0_bits anchor prime, `depth`
+    /// rescaling primes near the scale, one special prime.
+    pub fn build(
+        name: &'static str,
+        n: usize,
+        q0_bits: u32,
+        scale_bits: u32,
+        depth: usize,
+        sigma: f64,
+    ) -> Self {
+        assert!(n.is_power_of_two());
+        let mut taken = Vec::new();
+        let q0 = Self::gen_primes(n, q0_bits, 1, &mut taken);
+        let qs = Self::gen_primes(n, scale_bits, depth, &mut taken);
+        let special = Self::gen_primes(n, q0_bits, 1, &mut taken)[0];
+        let mut moduli = q0;
+        moduli.extend(qs);
+        CkksParams {
+            n,
+            moduli,
+            special,
+            scale: (1u64 << scale_bits) as f64,
+            sigma,
+            name,
+        }
+    }
+
+    /// Tiny parameters for unit tests. **Insecure**.
+    pub fn toy() -> ParamsRef {
+        Arc::new(Self::build("toy-n4096-d2", 4096, 60, 40, 2, 3.2))
+    }
+
+    /// Small parameters with the full depth-8 chain for degree-4
+    /// activation HRFs; used in integration tests and demos. Security
+    /// is well below 128-bit at this ring degree — test-grade only.
+    pub fn fast() -> ParamsRef {
+        Arc::new(Self::build("fast-n8192-d8", 8192, 60, 40, 8, 3.2))
+    }
+
+    /// Default HRF parameters: depth 8 (degree-4 activations twice +
+    /// two plaintext muls), N=2^14. ~110-bit security; the same chain
+    /// under `secure128()` meets 128-bit. See DESIGN.md §6.
+    pub fn hrf_default() -> ParamsRef {
+        Arc::new(Self::build("hrf-n16384-d8", 16384, 60, 40, 8, 3.2))
+    }
+
+    /// Deployment-grade 128-bit parameters (2× slower on this testbed).
+    pub fn secure128() -> ParamsRef {
+        Arc::new(Self::build("secure128-n32768-d8", 32768, 60, 40, 8, 3.2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primes_are_ntt_friendly_and_distinct() {
+        let p = CkksParams::toy();
+        let two_n = (2 * p.n) as u64;
+        let mut all = p.moduli.clone();
+        all.push(p.special);
+        for &q in &all {
+            assert!(is_prime(q), "{q} not prime");
+            assert_eq!(q % two_n, 1, "{q} != 1 mod 2N");
+        }
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len());
+    }
+
+    #[test]
+    fn rescale_primes_near_scale() {
+        let p = CkksParams::fast();
+        for &q in &p.moduli[1..] {
+            let drift = (q as f64 / p.scale).log2().abs();
+            assert!(drift < 0.01, "rescale prime {q} drifts {drift} bits");
+        }
+    }
+
+    #[test]
+    fn depth_and_levels() {
+        let p = CkksParams::fast();
+        assert_eq!(p.depth(), 8);
+        assert_eq!(p.max_level(), 8);
+        assert_eq!(p.slots(), 4096);
+    }
+
+    #[test]
+    fn security_labels() {
+        assert_eq!(CkksParams::secure128().security_estimate(), ">=128-bit");
+        assert!(CkksParams::toy().security_estimate().contains("INSECURE"));
+    }
+}

@@ -1,0 +1,904 @@
+//! RNS ("double-CRT") polynomials over the CKKS modulus chain.
+//!
+//! A [`RnsPoly`] stores one residue limb per active prime. The active
+//! basis is `q_0..q_level` plus, transiently during key-switching, the
+//! special prime. Polynomials live either in coefficient form or in
+//! NTT (evaluation) form; element-wise ring multiplication requires
+//! NTT form.
+//!
+//! The module also owns [`CkksContext`] (parameter set + NTT tables +
+//! rescale precomputations) and the exact CRT → centered big-integer →
+//! f64 reconstruction used on decode ([`BigUintLite`]).
+
+use super::modops::{add_mod, inv_mod, mul_mod, neg_mod, sub_mod};
+use super::ntt::NttTable;
+use super::params::ParamsRef;
+use crate::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Shared immutable context: parameters, NTT tables (one per chain
+/// prime + special), and per-level precomputations.
+pub struct CkksContext {
+    pub params: ParamsRef,
+    /// NTT tables for moduli[0..] (chain order).
+    pub tables: Vec<NttTable>,
+    /// NTT table for the special key-switching prime.
+    pub special_table: NttTable,
+    /// inv(q_j) mod q_i for rescale: inv_q_to[j][i] = q_j^{-1} mod q_i (i < j).
+    inv_q_to: Vec<Vec<u64>>,
+    /// inv(special) mod q_i.
+    inv_special: Vec<u64>,
+    /// ψ-exponent of each NTT output slot: slot i holds c(ψ^{ntt_exp[i]}).
+    /// The pattern is determined by the butterfly structure alone, so
+    /// one table serves every prime.
+    ntt_exp: Vec<usize>,
+    /// Inverse map: odd exponent e (mod 2N) → NTT slot index.
+    exp_to_slot: Vec<u32>,
+    /// Cached NTT-domain Galois permutations, keyed by Galois element.
+    galois_perms: std::sync::RwLock<std::collections::HashMap<usize, Arc<Vec<u32>>>>,
+}
+
+pub type ContextRef = Arc<CkksContext>;
+
+impl CkksContext {
+    pub fn new(params: ParamsRef) -> ContextRef {
+        let n = params.n;
+        let tables: Vec<NttTable> = params.moduli.iter().map(|&q| NttTable::new(q, n)).collect();
+        let special_table = NttTable::new(params.special, n);
+        let inv_q_to = params
+            .moduli
+            .iter()
+            .enumerate()
+            .map(|(j, &qj)| {
+                params.moduli[..j]
+                    .iter()
+                    .map(|&qi| inv_mod(qj % qi, qi))
+                    .collect()
+            })
+            .collect();
+        let inv_special = params
+            .moduli
+            .iter()
+            .map(|&qi| inv_mod(params.special % qi, qi))
+            .collect();
+        // Probe the NTT's evaluation order: NTT(X) gives ψ^{e_i} in
+        // slot i; match against the power table to recover e_i.
+        let (ntt_exp, exp_to_slot) = {
+            let q = params.moduli[0];
+            let t = &tables[0];
+            let mut probe = vec![0u64; n];
+            probe[1] = 1; // the monomial X
+            t.forward(&mut probe);
+            let two_n = 2 * n;
+            let psi = {
+                // recover ψ as the value with exponent 1: build the
+                // power→exponent map from any generator found in slot 0
+                // wouldn't be unique; instead rebuild ψ directly.
+                super::modops::primitive_2nth_root(q, two_n as u64)
+            };
+            let mut pow_to_exp = std::collections::HashMap::with_capacity(two_n);
+            let mut acc = 1u64;
+            for e in 0..two_n {
+                pow_to_exp.insert(acc, e);
+                acc = super::modops::mul_mod(acc, psi, q);
+            }
+            let ntt_exp: Vec<usize> = probe
+                .iter()
+                .map(|v| *pow_to_exp.get(v).expect("NTT slot is not a ψ power"))
+                .collect();
+            let mut exp_to_slot = vec![u32::MAX; two_n];
+            for (i, &e) in ntt_exp.iter().enumerate() {
+                exp_to_slot[e] = i as u32;
+            }
+            (ntt_exp, exp_to_slot)
+        };
+        Arc::new(CkksContext {
+            params,
+            tables,
+            special_table,
+            inv_q_to,
+            inv_special,
+            ntt_exp,
+            exp_to_slot,
+            galois_perms: std::sync::RwLock::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// NTT-domain permutation for the Galois automorphism X→X^g:
+    /// `out[i] = in[perm[i]]` applied per limb (cached per g).
+    pub fn galois_perm(&self, g: usize) -> Arc<Vec<u32>> {
+        if let Some(p) = self.galois_perms.read().unwrap().get(&g) {
+            return p.clone();
+        }
+        let two_n = 2 * self.n();
+        let perm: Vec<u32> = self
+            .ntt_exp
+            .iter()
+            .map(|&e| {
+                let src_exp = (e * g) % two_n;
+                let j = self.exp_to_slot[src_exp];
+                debug_assert!(j != u32::MAX, "even exponent in Galois map");
+                j
+            })
+            .collect();
+        let perm = Arc::new(perm);
+        self.galois_perms.write().unwrap().insert(g, perm.clone());
+        perm
+    }
+
+    pub fn n(&self) -> usize {
+        self.params.n
+    }
+
+    /// Modulus of chain limb `i`.
+    pub fn q(&self, i: usize) -> u64 {
+        self.params.moduli[i]
+    }
+}
+
+/// Polynomial in RNS representation.
+#[derive(Clone, Debug)]
+pub struct RnsPoly {
+    /// Highest active chain-prime index; active chain limbs = level+1.
+    pub level: usize,
+    /// Whether a special-prime limb is appended after the chain limbs.
+    pub special: bool,
+    /// NTT (evaluation) form?
+    pub is_ntt: bool,
+    /// Residue limbs, chain order, special last if present.
+    pub limbs: Vec<Vec<u64>>,
+}
+
+impl RnsPoly {
+    pub fn n_limbs(level: usize, special: bool) -> usize {
+        level + 1 + special as usize
+    }
+
+    pub fn zero(ctx: &CkksContext, level: usize, special: bool, is_ntt: bool) -> Self {
+        RnsPoly {
+            level,
+            special,
+            is_ntt,
+            limbs: vec![vec![0u64; ctx.n()]; Self::n_limbs(level, special)],
+        }
+    }
+
+    fn modulus_of(&self, ctx: &CkksContext, limb: usize) -> u64 {
+        if self.special && limb == self.limbs.len() - 1 {
+            ctx.params.special
+        } else {
+            ctx.params.moduli[limb]
+        }
+    }
+
+    /// Build from small signed coefficients (keys, errors).
+    pub fn from_signed(ctx: &CkksContext, coeffs: &[i64], level: usize, special: bool) -> Self {
+        let mut p = Self::zero(ctx, level, special, false);
+        let nl = p.limbs.len();
+        for li in 0..nl {
+            let q = p.modulus_of(ctx, li);
+            let limb = &mut p.limbs[li];
+            for (i, &c) in coeffs.iter().enumerate() {
+                limb[i] = if c >= 0 {
+                    (c as u64) % q
+                } else {
+                    q - (((-c) as u64) % q)
+                } % q;
+            }
+        }
+        p
+    }
+
+    /// Build from big signed coefficients (encoded plaintexts). i128
+    /// covers every scale this library produces (|coeff| < 2^120).
+    pub fn from_signed_wide(
+        ctx: &CkksContext,
+        coeffs: &[i128],
+        level: usize,
+        special: bool,
+    ) -> Self {
+        let mut p = Self::zero(ctx, level, special, false);
+        let nl = p.limbs.len();
+        for li in 0..nl {
+            let q = p.modulus_of(ctx, li) as i128;
+            let limb = &mut p.limbs[li];
+            for (i, &c) in coeffs.iter().enumerate() {
+                let r = c.rem_euclid(q);
+                limb[i] = r as u64;
+            }
+        }
+        p
+    }
+
+    /// Uniform random poly over the active basis (public-key `a`,
+    /// key-switching randomness).
+    pub fn sample_uniform(
+        ctx: &CkksContext,
+        rng: &mut Xoshiro256pp,
+        level: usize,
+        special: bool,
+        is_ntt: bool,
+    ) -> Self {
+        let mut p = Self::zero(ctx, level, special, is_ntt);
+        let nl = p.limbs.len();
+        for li in 0..nl {
+            let q = p.modulus_of(ctx, li);
+            for x in p.limbs[li].iter_mut() {
+                *x = rng.next_below(q);
+            }
+        }
+        p
+    }
+
+    /// Ternary secret polynomial (coeff domain).
+    pub fn sample_ternary(
+        ctx: &CkksContext,
+        rng: &mut Xoshiro256pp,
+        level: usize,
+        special: bool,
+    ) -> Self {
+        let coeffs: Vec<i64> = (0..ctx.n()).map(|_| rng.ternary()).collect();
+        Self::from_signed(ctx, &coeffs, level, special)
+    }
+
+    /// Discrete-Gaussian error polynomial (coeff domain).
+    pub fn sample_error(
+        ctx: &CkksContext,
+        rng: &mut Xoshiro256pp,
+        level: usize,
+        special: bool,
+    ) -> Self {
+        let sigma = ctx.params.sigma;
+        let coeffs: Vec<i64> = (0..ctx.n()).map(|_| rng.discrete_gaussian(sigma)).collect();
+        Self::from_signed(ctx, &coeffs, level, special)
+    }
+
+    pub fn to_ntt(&mut self, ctx: &CkksContext) {
+        if self.is_ntt {
+            return;
+        }
+        let n_limbs = self.limbs.len();
+        for li in 0..n_limbs {
+            let table = if self.special && li == n_limbs - 1 {
+                &ctx.special_table
+            } else {
+                &ctx.tables[li]
+            };
+            table.forward(&mut self.limbs[li]);
+        }
+        self.is_ntt = true;
+    }
+
+    pub fn from_ntt(&mut self, ctx: &CkksContext) {
+        if !self.is_ntt {
+            return;
+        }
+        let n_limbs = self.limbs.len();
+        for li in 0..n_limbs {
+            let table = if self.special && li == n_limbs - 1 {
+                &ctx.special_table
+            } else {
+                &ctx.tables[li]
+            };
+            table.inverse(&mut self.limbs[li]);
+        }
+        self.is_ntt = false;
+    }
+
+    fn assert_compat(&self, other: &Self) {
+        debug_assert_eq!(self.level, other.level);
+        debug_assert_eq!(self.special, other.special);
+        debug_assert_eq!(self.is_ntt, other.is_ntt);
+    }
+
+    pub fn add_assign(&mut self, ctx: &CkksContext, other: &Self) {
+        self.assert_compat(other);
+        for li in 0..self.limbs.len() {
+            let q = self.modulus_of(ctx, li);
+            let (a, b) = (&mut self.limbs[li], &other.limbs[li]);
+            for i in 0..a.len() {
+                a[i] = add_mod(a[i], b[i], q);
+            }
+        }
+    }
+
+    pub fn sub_assign(&mut self, ctx: &CkksContext, other: &Self) {
+        self.assert_compat(other);
+        for li in 0..self.limbs.len() {
+            let q = self.modulus_of(ctx, li);
+            let (a, b) = (&mut self.limbs[li], &other.limbs[li]);
+            for i in 0..a.len() {
+                a[i] = sub_mod(a[i], b[i], q);
+            }
+        }
+    }
+
+    pub fn neg_assign(&mut self, ctx: &CkksContext) {
+        for li in 0..self.limbs.len() {
+            let q = self.modulus_of(ctx, li);
+            for x in self.limbs[li].iter_mut() {
+                *x = neg_mod(*x, q);
+            }
+        }
+    }
+
+    /// Element-wise ring multiplication; both operands must be in NTT form.
+    pub fn mul_assign(&mut self, ctx: &CkksContext, other: &Self) {
+        self.assert_compat(other);
+        debug_assert!(self.is_ntt, "ring mul requires NTT form");
+        for li in 0..self.limbs.len() {
+            let q = self.modulus_of(ctx, li);
+            let (a, b) = (&mut self.limbs[li], &other.limbs[li]);
+            for i in 0..a.len() {
+                a[i] = mul_mod(a[i], b[i], q);
+            }
+        }
+    }
+
+    /// Multiply by a scalar integer (same in every limb).
+    pub fn mul_scalar_assign(&mut self, ctx: &CkksContext, s: u64) {
+        for li in 0..self.limbs.len() {
+            let q = self.modulus_of(ctx, li);
+            let sq = s % q;
+            for x in self.limbs[li].iter_mut() {
+                *x = mul_mod(*x, sq, q);
+            }
+        }
+    }
+
+    /// Drop down to `new_level` by discarding upper chain limbs (no
+    /// scaling) — used to align operand levels before add/mul.
+    pub fn drop_to_level(&mut self, new_level: usize) {
+        debug_assert!(new_level <= self.level);
+        debug_assert!(!self.special);
+        self.limbs.truncate(new_level + 1);
+        self.level = new_level;
+    }
+
+    /// Rescale: divide by the top chain prime `q_level` with centered
+    /// rounding, dropping one level. Input/output in coefficient form
+    /// handled internally (caller may pass NTT form; returned in NTT
+    /// form if input was).
+    pub fn rescale(&mut self, ctx: &CkksContext) {
+        debug_assert!(!self.special);
+        debug_assert!(self.level >= 1, "cannot rescale at level 0");
+        let was_ntt = self.is_ntt;
+        self.from_ntt(ctx);
+        let q_last = ctx.q(self.level);
+        let half = q_last / 2;
+        let last = self.limbs.pop().unwrap();
+        self.level -= 1;
+        for li in 0..=self.level {
+            let q = ctx.q(li);
+            let inv = ctx.inv_q_to[self.level + 1][li];
+            let limb = &mut self.limbs[li];
+            for i in 0..limb.len() {
+                let r = last[i];
+                // centered remainder: subtract r, or add (q_last - r)
+                let adjusted = if r <= half {
+                    sub_mod(limb[i], r % q, q)
+                } else {
+                    add_mod(limb[i], (q_last - r) % q, q)
+                };
+                limb[i] = mul_mod(adjusted, inv, q);
+            }
+        }
+        if was_ntt {
+            self.to_ntt(ctx);
+        }
+    }
+
+    /// Mod-down: divide by the special prime with centered rounding,
+    /// removing the special limb (end of key-switching).
+    pub fn mod_down_special(&mut self, ctx: &CkksContext) {
+        debug_assert!(self.special);
+        let was_ntt = self.is_ntt;
+        self.from_ntt(ctx);
+        let p = ctx.params.special;
+        let half = p / 2;
+        let last = self.limbs.pop().unwrap();
+        self.special = false;
+        for li in 0..=self.level {
+            let q = ctx.q(li);
+            let inv = ctx.inv_special[li];
+            let limb = &mut self.limbs[li];
+            for i in 0..limb.len() {
+                let r = last[i];
+                let adjusted = if r <= half {
+                    sub_mod(limb[i], r % q, q)
+                } else {
+                    add_mod(limb[i], (p - r) % q, q)
+                };
+                limb[i] = mul_mod(adjusted, inv, q);
+            }
+        }
+        if was_ntt {
+            self.to_ntt(ctx);
+        }
+    }
+
+    /// Mod-down by the special prime for an **NTT-form** poly, leaving
+    /// it in NTT form. Only the special limb round-trips through
+    /// coefficient space: the centered remainder `r` is NTT'd once per
+    /// chain limb instead of converting every limb both ways
+    /// (1 + (ℓ+1) NTTs per poly instead of 2(ℓ+2) — §Perf step 2).
+    pub fn mod_down_special_ntt(&mut self, ctx: &CkksContext) {
+        debug_assert!(self.special);
+        debug_assert!(self.is_ntt);
+        let p = ctx.params.special;
+        let half = p / 2;
+        let mut last = self.limbs.pop().unwrap();
+        self.special = false;
+        ctx.special_table.inverse(&mut last);
+        // Centered remainder as signed integers.
+        let n = last.len();
+        let mut r_mod_q = vec![0u64; n];
+        for li in 0..=self.level {
+            let q = ctx.q(li);
+            // r centered: r <= p/2 -> subtract r ; r > p/2 -> add p - r
+            for i in 0..n {
+                let r = last[i];
+                r_mod_q[i] = if r <= half {
+                    neg_mod(r % q, q) // -r mod q  (will be added)
+                } else {
+                    (p - r) % q
+                };
+            }
+            ctx.tables[li].forward(&mut r_mod_q);
+            let inv = ctx.inv_special[li];
+            let limb = &mut self.limbs[li];
+            for i in 0..n {
+                limb[i] = mul_mod(add_mod(limb[i], r_mod_q[i], q), inv, q);
+            }
+        }
+    }
+
+    /// Galois automorphism X -> X^g (g odd), coefficient domain
+    /// internally; preserves the caller's NTT-form flag.
+    pub fn automorphism(&mut self, ctx: &CkksContext, g: usize) {
+        let was_ntt = self.is_ntt;
+        self.from_ntt(ctx);
+        let n = ctx.n();
+        let two_n = 2 * n;
+        debug_assert_eq!(g % 2, 1);
+        for li in 0..self.limbs.len() {
+            let q = self.modulus_of(ctx, li);
+            let src = &self.limbs[li];
+            let mut dst = vec![0u64; n];
+            for i in 0..n {
+                let j = (i * g) % two_n;
+                if j < n {
+                    dst[j] = src[i];
+                } else {
+                    dst[j - n] = neg_mod(src[i], q);
+                }
+            }
+            self.limbs[li] = dst;
+        }
+        if was_ntt {
+            self.to_ntt(ctx);
+        }
+    }
+
+    /// Galois automorphism applied **in the NTT domain**: a pure slot
+    /// permutation (evaluation points get permuted, signs absorbed).
+    /// Used by hoisted rotations (§Perf step 3).
+    pub fn automorphism_ntt(&mut self, perm: &[u32]) {
+        debug_assert!(self.is_ntt);
+        for limb in self.limbs.iter_mut() {
+            let src = limb.clone();
+            for (i, x) in limb.iter_mut().enumerate() {
+                *x = src[perm[i] as usize];
+            }
+        }
+    }
+
+    /// Exact centered CRT reconstruction of every coefficient as f64
+    /// (coefficient form required). Used only on decode.
+    pub fn to_centered_f64(&self, ctx: &CkksContext) -> Vec<f64> {
+        debug_assert!(!self.is_ntt);
+        debug_assert!(!self.special);
+        let primes: Vec<u64> = (0..=self.level).map(|i| ctx.q(i)).collect();
+        let recon = CrtRecon::new(&primes);
+        let n = ctx.n();
+        let mut out = vec![0.0f64; n];
+        let mut residues = vec![0u64; primes.len()];
+        for i in 0..n {
+            for (li, r) in residues.iter_mut().enumerate() {
+                *r = self.limbs[li][i];
+            }
+            out[i] = recon.centered_f64(&residues);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRT reconstruction via Garner's mixed-radix algorithm + a tiny
+// unsigned big integer for the final centered comparison.
+// ---------------------------------------------------------------------
+
+/// Little-endian base-2^64 unsigned integer (decode-path only).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUintLite(pub Vec<u64>);
+
+impl BigUintLite {
+    pub fn zero() -> Self {
+        BigUintLite(vec![])
+    }
+
+    pub fn from_u64(x: u64) -> Self {
+        if x == 0 {
+            BigUintLite(vec![])
+        } else {
+            BigUintLite(vec![x])
+        }
+    }
+
+    fn trim(&mut self) {
+        while self.0.last() == Some(&0) {
+            self.0.pop();
+        }
+    }
+
+    pub fn mul_u64(&self, m: u64) -> Self {
+        let mut out = Vec::with_capacity(self.0.len() + 1);
+        let mut carry: u128 = 0;
+        for &d in &self.0 {
+            let v = d as u128 * m as u128 + carry;
+            out.push(v as u64);
+            carry = v >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        let mut r = BigUintLite(out);
+        r.trim();
+        r
+    }
+
+    pub fn add_u64(&self, a: u64) -> Self {
+        let mut out = self.0.clone();
+        let mut carry = a;
+        for d in out.iter_mut() {
+            let (s, c) = d.overflowing_add(carry);
+            *d = s;
+            carry = c as u64;
+            if carry == 0 {
+                break;
+            }
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        let mut r = BigUintLite(out);
+        r.trim();
+        r
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let (long, short) = if self.0.len() >= other.0.len() {
+            (&self.0, &other.0)
+        } else {
+            (&other.0, &self.0)
+        };
+        let mut out = long.clone();
+        let mut carry = 0u64;
+        for i in 0..out.len() {
+            let b = if i < short.len() { short[i] } else { 0 };
+            let (s1, c1) = out[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+            if carry == 0 && i >= short.len() {
+                break;
+            }
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        let mut r = BigUintLite(out);
+        r.trim();
+        r
+    }
+
+    /// self - other, requires self >= other.
+    pub fn sub(&self, other: &Self) -> Self {
+        debug_assert!(self.cmp_big(other) != std::cmp::Ordering::Less);
+        let mut out = self.0.clone();
+        let mut borrow = 0u64;
+        for i in 0..out.len() {
+            let b = if i < other.0.len() { other.0[i] } else { 0 };
+            let (d1, b1) = out[i].overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out[i] = d2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        let mut r = BigUintLite(out);
+        r.trim();
+        r
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> std::cmp::Ordering {
+        if self.0.len() != other.0.len() {
+            return self.0.len().cmp(&other.0.len());
+        }
+        for i in (0..self.0.len()).rev() {
+            match self.0[i].cmp(&other.0[i]) {
+                std::cmp::Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+
+    pub fn shr1(&self) -> Self {
+        let mut out = vec![0u64; self.0.len()];
+        let mut carry = 0u64;
+        for i in (0..self.0.len()).rev() {
+            out[i] = (self.0[i] >> 1) | (carry << 63);
+            carry = self.0[i] & 1;
+        }
+        let mut r = BigUintLite(out);
+        r.trim();
+        r
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        let mut v = 0.0f64;
+        for &d in self.0.iter().rev() {
+            v = v * 1.8446744073709552e19 + d as f64; // 2^64
+        }
+        v
+    }
+}
+
+/// Garner-style CRT reconstruction over a fixed prime basis.
+pub struct CrtRecon {
+    primes: Vec<u64>,
+    /// inv_prefix[i] = (q_0*...*q_{i-1})^{-1} mod q_i
+    inv_prefix: Vec<u64>,
+    /// q_big = product of all primes; half = floor(q_big/2)
+    q_big: BigUintLite,
+    half: BigUintLite,
+    /// prefix products as bigints: prefix[i] = q_0*...*q_{i-1}
+    prefix: Vec<BigUintLite>,
+}
+
+impl CrtRecon {
+    pub fn new(primes: &[u64]) -> Self {
+        let mut inv_prefix = Vec::with_capacity(primes.len());
+        for (i, &qi) in primes.iter().enumerate() {
+            let mut prod = 1u64;
+            for &qj in &primes[..i] {
+                prod = mul_mod(prod, qj % qi, qi);
+            }
+            inv_prefix.push(if i == 0 { 1 } else { inv_mod(prod, qi) });
+        }
+        let mut prefix = Vec::with_capacity(primes.len());
+        let mut acc = BigUintLite::from_u64(1);
+        for &q in primes {
+            prefix.push(acc.clone());
+            acc = acc.mul_u64(q);
+        }
+        let q_big = acc;
+        let half = q_big.shr1();
+        CrtRecon {
+            primes: primes.to_vec(),
+            inv_prefix,
+            q_big,
+            half,
+            prefix,
+        }
+    }
+
+    /// Reconstruct x in [0, Q) from residues, return centered value
+    /// (x or x - Q) as f64.
+    pub fn centered_f64(&self, residues: &[u64]) -> f64 {
+        // Garner: mixed-radix digits a_i with
+        //   x = a_0 + a_1 q_0 + a_2 q_0 q_1 + ...
+        let k = self.primes.len();
+        let mut digits = vec![0u64; k];
+        for i in 0..k {
+            let qi = self.primes[i];
+            // t = (r_i - (a_0 + a_1 q_0 + ...)) * inv_prefix mod q_i
+            let mut acc = 0u64;
+            let mut radix = 1u64;
+            for j in 0..i {
+                acc = add_mod(acc, mul_mod(digits[j] % qi, radix, qi), qi);
+                radix = mul_mod(radix, self.primes[j] % qi, qi);
+            }
+            let t = sub_mod(residues[i] % qi, acc, qi);
+            digits[i] = mul_mod(t, self.inv_prefix[i], qi);
+        }
+        // Assemble bigint.
+        let mut x = BigUintLite::zero();
+        for i in 0..k {
+            x = x.add(&self.prefix[i].mul_u64(digits[i]).add_u64(0));
+        }
+        // Center.
+        if x.cmp_big(&self.half) == std::cmp::Ordering::Greater {
+            -(self.q_big.sub(&x).to_f64())
+        } else {
+            x.to_f64()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    fn ctx() -> ContextRef {
+        CkksContext::new(CkksParams::toy())
+    }
+
+    #[test]
+    fn signed_roundtrip_via_crt() {
+        let c = ctx();
+        let vals: Vec<i64> = vec![0, 1, -1, 123456789, -987654321, i32::MAX as i64];
+        let mut coeffs = vec![0i64; c.n()];
+        coeffs[..vals.len()].copy_from_slice(&vals);
+        let p = RnsPoly::from_signed(&c, &coeffs, c.params.max_level(), false);
+        let back = p.to_centered_f64(&c);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(back[i], v as f64, "coeff {i}");
+        }
+    }
+
+    #[test]
+    fn wide_roundtrip() {
+        let c = ctx();
+        let vals: Vec<i128> = vec![1i128 << 90, -(1i128 << 90) - 12345, (1i128 << 99) + 7];
+        let mut coeffs = vec![0i128; c.n()];
+        coeffs[..vals.len()].copy_from_slice(&vals);
+        let p = RnsPoly::from_signed_wide(&c, &coeffs, c.params.max_level(), false);
+        let back = p.to_centered_f64(&c);
+        for (i, &v) in vals.iter().enumerate() {
+            let rel = (back[i] - v as f64).abs() / (v as f64).abs();
+            assert!(rel < 1e-12, "coeff {i}: {} vs {}", back[i], v);
+        }
+    }
+
+    #[test]
+    fn ntt_roundtrip_preserves() {
+        let c = ctx();
+        let mut rng = Xoshiro256pp::new(5);
+        let mut p = RnsPoly::sample_uniform(&c, &mut rng, 1, false, false);
+        let orig = p.clone();
+        p.to_ntt(&c);
+        p.from_ntt(&c);
+        assert_eq!(p.limbs, orig.limbs);
+    }
+
+    #[test]
+    fn add_mul_consistency_with_integers() {
+        // (small a) * (small b) via NTT == integer negacyclic product.
+        let c = ctx();
+        let n = c.n();
+        let mut rng = Xoshiro256pp::new(6);
+        let a_c: Vec<i64> = (0..n).map(|_| rng.next_below(100) as i64 - 50).collect();
+        let b_c: Vec<i64> = (0..n).map(|_| rng.next_below(100) as i64 - 50).collect();
+        let mut a = RnsPoly::from_signed(&c, &a_c, 1, false);
+        let mut b = RnsPoly::from_signed(&c, &b_c, 1, false);
+        a.to_ntt(&c);
+        b.to_ntt(&c);
+        a.mul_assign(&c, &b);
+        a.from_ntt(&c);
+        let got = a.to_centered_f64(&c);
+        // Naive negacyclic in i128.
+        let mut expect = vec![0i128; n];
+        for i in 0..n {
+            for j in 0..n {
+                let p = a_c[i] as i128 * b_c[j] as i128;
+                let k = i + j;
+                if k < n {
+                    expect[k] += p;
+                } else {
+                    expect[k - n] -= p;
+                }
+            }
+        }
+        for i in 0..n {
+            assert_eq!(got[i], expect[i] as f64, "coeff {i}");
+        }
+    }
+
+    #[test]
+    fn rescale_divides_by_top_prime() {
+        let c = ctx();
+        let lvl = c.params.max_level();
+        let q_top = c.q(lvl) as i128;
+        // value exactly divisible: x = k * q_top
+        let mut coeffs = vec![0i128; c.n()];
+        coeffs[0] = 42 * q_top;
+        coeffs[1] = -7 * q_top;
+        coeffs[2] = 5 * q_top + 3; // rounds to 5
+        let mut p = RnsPoly::from_signed_wide(&c, &coeffs, lvl, false);
+        p.rescale(&c);
+        assert_eq!(p.level, lvl - 1);
+        let back = p.to_centered_f64(&c);
+        assert_eq!(back[0], 42.0);
+        assert_eq!(back[1], -7.0);
+        assert_eq!(back[2], 5.0);
+    }
+
+    #[test]
+    fn ntt_domain_automorphism_matches_coeff_domain() {
+        // On every limb (different primes), the NTT-slot permutation
+        // must equal the coefficient-domain automorphism.
+        let c = ctx();
+        let mut rng = Xoshiro256pp::new(88);
+        for g in [5usize, 25, 2 * c.n() - 1, 125] {
+            let mut a = RnsPoly::sample_uniform(&c, &mut rng, c.params.max_level(), true, false);
+            let mut coeff_path = a.clone();
+            coeff_path.automorphism(&c, g);
+            coeff_path.to_ntt(&c);
+            a.to_ntt(&c);
+            a.automorphism_ntt(&c.galois_perm(g));
+            assert_eq!(a.limbs, coeff_path.limbs, "g={g}");
+        }
+    }
+
+    #[test]
+    fn mod_down_ntt_matches_coeff_path() {
+        let c = ctx();
+        let mut rng = Xoshiro256pp::new(77);
+        let mut a = RnsPoly::sample_uniform(&c, &mut rng, 1, true, false);
+        a.to_ntt(&c);
+        let mut coeff_path = a.clone();
+        coeff_path.mod_down_special(&c);
+        let mut ntt_path = a;
+        ntt_path.mod_down_special_ntt(&c);
+        assert!(ntt_path.is_ntt);
+        ntt_path.from_ntt(&c);
+        coeff_path.from_ntt(&c);
+        assert_eq!(ntt_path.limbs, coeff_path.limbs);
+    }
+
+    #[test]
+    fn automorphism_is_ring_homomorphism() {
+        // (a*b)(X^g) == a(X^g) * b(X^g)
+        let c = ctx();
+        let n = c.n();
+        let mut rng = Xoshiro256pp::new(8);
+        let a_c: Vec<i64> = (0..n).map(|_| rng.next_below(50) as i64 - 25).collect();
+        let b_c: Vec<i64> = (0..n).map(|_| rng.next_below(50) as i64 - 25).collect();
+        let g = 5usize;
+        let mk = |coef: &Vec<i64>| RnsPoly::from_signed(&c, coef, 0, false);
+        // lhs: multiply then automorph
+        let mut a1 = mk(&a_c);
+        let mut b1 = mk(&b_c);
+        a1.to_ntt(&c);
+        b1.to_ntt(&c);
+        a1.mul_assign(&c, &b1);
+        a1.automorphism(&c, g);
+        a1.from_ntt(&c);
+        // rhs: automorph then multiply
+        let mut a2 = mk(&a_c);
+        let mut b2 = mk(&b_c);
+        a2.automorphism(&c, g);
+        b2.automorphism(&c, g);
+        a2.to_ntt(&c);
+        b2.to_ntt(&c);
+        a2.mul_assign(&c, &b2);
+        a2.from_ntt(&c);
+        assert_eq!(a1.limbs, a2.limbs);
+    }
+
+    #[test]
+    fn bigint_ops() {
+        let a = BigUintLite::from_u64(u64::MAX);
+        let b = a.add_u64(1); // 2^64
+        assert_eq!(b.0, vec![0, 1]);
+        let c2 = b.mul_u64(u64::MAX);
+        let d = c2.add(&b);
+        // (2^64)(2^64-1) + 2^64 = 2^128
+        assert_eq!(d.0, vec![0, 0, 1]);
+        assert_eq!(d.shr1().0, vec![0, 1u64 << 63]);
+        assert_eq!(d.sub(&b).0, c2.0);
+        assert!((d.to_f64() - 3.402823669209385e38).abs() / 3.4e38 < 1e-12);
+    }
+}

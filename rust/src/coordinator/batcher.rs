@@ -1,0 +1,160 @@
+//! Dynamic batching for the plaintext fast path.
+//!
+//! Requests accumulate until either the batch is full (`max_batch`,
+//! normally the AOT artifact's compiled batch size) or the oldest
+//! request has waited `max_delay` — the classic latency/throughput
+//! dial. The policy logic is a pure state machine ([`BatchPolicy`])
+//! so it can be property-tested without threads; the coordinator
+//! drives it from the batcher thread.
+
+use std::time::{Duration, Instant};
+
+/// Decision state for one forming batch.
+#[derive(Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    oldest: Option<Instant>,
+    pending: usize,
+}
+
+/// What the driver should do after an event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchAction {
+    /// Keep waiting (up to the returned deadline, if any).
+    Wait,
+    /// Flush the current batch now.
+    Flush,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch >= 1);
+        BatchPolicy {
+            max_batch,
+            max_delay,
+            oldest: None,
+            pending: 0,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// A request arrived at `now`.
+    pub fn on_arrival(&mut self, now: Instant) -> BatchAction {
+        if self.pending == 0 {
+            self.oldest = Some(now);
+        }
+        self.pending += 1;
+        if self.pending >= self.max_batch {
+            BatchAction::Flush
+        } else {
+            BatchAction::Wait
+        }
+    }
+
+    /// Timer poll at `now`: flush if the oldest request has waited out.
+    pub fn on_tick(&mut self, now: Instant) -> BatchAction {
+        match self.oldest {
+            Some(t0) if self.pending > 0 && now.duration_since(t0) >= self.max_delay => {
+                BatchAction::Flush
+            }
+            _ => BatchAction::Wait,
+        }
+    }
+
+    /// Deadline by which a tick must happen (None when empty).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.oldest.map(|t0| t0 + self.max_delay)
+    }
+
+    /// The driver flushed `n` requests.
+    pub fn on_flush(&mut self, n: usize) {
+        debug_assert!(n <= self.pending);
+        self.pending -= n;
+        self.oldest = if self.pending == 0 {
+            None
+        } else {
+            // Remaining requests arrived after the flushed ones; their
+            // true arrival is unknown here, so restart the clock (the
+            // conservative choice: never flushes *later* than true).
+            Some(Instant::now())
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn flushes_exactly_at_max_batch() {
+        let mut p = BatchPolicy::new(4, Duration::from_millis(100));
+        let now = Instant::now();
+        assert_eq!(p.on_arrival(now), BatchAction::Wait);
+        assert_eq!(p.on_arrival(now), BatchAction::Wait);
+        assert_eq!(p.on_arrival(now), BatchAction::Wait);
+        assert_eq!(p.on_arrival(now), BatchAction::Flush);
+        p.on_flush(4);
+        assert_eq!(p.pending(), 0);
+        assert!(p.deadline().is_none());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut p = BatchPolicy::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        p.on_arrival(t0);
+        assert_eq!(p.on_tick(t0 + Duration::from_millis(5)), BatchAction::Wait);
+        assert_eq!(
+            p.on_tick(t0 + Duration::from_millis(10)),
+            BatchAction::Flush
+        );
+    }
+
+    #[test]
+    fn empty_never_flushes() {
+        let mut p = BatchPolicy::new(2, Duration::from_millis(1));
+        assert_eq!(
+            p.on_tick(Instant::now() + Duration::from_secs(10)),
+            BatchAction::Wait
+        );
+    }
+
+    /// Property: under any arrival/tick sequence, pending never exceeds
+    /// max_batch, and every flush is triggered by fullness or timeout.
+    #[test]
+    fn property_pending_bounded_and_flushes_justified() {
+        let mut rng = Xoshiro256pp::new(77);
+        for _case in 0..200 {
+            let max_batch = 1 + rng.next_index(8);
+            let delay = Duration::from_millis(1 + rng.next_below(20));
+            let mut p = BatchPolicy::new(max_batch, delay);
+            let mut now = Instant::now();
+            for _ in 0..100 {
+                now += Duration::from_millis(rng.next_below(5));
+                let action = if rng.bernoulli(0.7) {
+                    p.on_arrival(now)
+                } else {
+                    p.on_tick(now)
+                };
+                assert!(p.pending() <= max_batch, "pending exceeded max_batch");
+                if action == BatchAction::Flush {
+                    let n = p.pending();
+                    assert!(n > 0, "flush of empty batch");
+                    // justification: full, or oldest waited >= delay
+                    let full = n >= max_batch;
+                    let timed_out = p
+                        .deadline()
+                        .map(|d| now >= d)
+                        .unwrap_or(false);
+                    assert!(full || timed_out, "unjustified flush");
+                    p.on_flush(n);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! The coordinator proper: ingress queue → router → workers/batcher.
+//!
+//! Topology (all std threads; tokio is unavailable offline and the
+//! workloads are CPU-bound anyway):
+//!
+//! ```text
+//!  submit_*() ──bounded channel──► router thread
+//!      │ (backpressure: Busy)        │
+//!      │                    ┌────────┴──────────┐
+//!      │             encrypted → least-loaded   plain → batcher thread
+//!      │                    HE worker 0..W-1       (size/timeout policy,
+//!      │                    (own Evaluator)         PJRT batch or Rust
+//!      ▼                                            slot math)
+//!  Receiver<Response>  ◄── response channels ──────┘
+//! ```
+//!
+//! Responses travel on per-request rendezvous channels, so a caller
+//! can block (`recv`) or poll (`try_recv`).
+
+use super::batcher::{BatchAction, BatchPolicy};
+use super::metrics::Metrics;
+use super::session::SessionManager;
+use crate::ckks::rns::ContextRef;
+use crate::ckks::{Ciphertext, Encoder, Evaluator};
+use crate::hrf::client::reshuffle_and_pack;
+use crate::hrf::HrfServer;
+use crate::runtime::{SlotModel, SlotModelParams};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// HE worker threads.
+    pub workers: usize,
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Plaintext batch size (≤ the AOT artifact's B when PJRT is used).
+    pub max_batch: usize,
+    /// Max time a plaintext request may wait for batch-mates.
+    pub batch_delay: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            batch_delay: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Ingress queue full — shed load upstream.
+    Busy,
+    /// Coordinator is shutting down.
+    Closed,
+    /// Unknown session id.
+    NoSession,
+}
+
+/// Encrypted-path response: per-class score ciphertexts.
+pub type EncResponse = Result<Vec<Ciphertext>, String>;
+/// Plaintext-path response: per-class scores.
+pub type PlainResponse = Result<Vec<f64>, String>;
+
+enum Request {
+    Encrypted {
+        session_id: u64,
+        ct: Box<Ciphertext>,
+        enqueued: Instant,
+        resp: SyncSender<EncResponse>,
+    },
+    Plain {
+        x: Vec<f64>,
+        enqueued: Instant,
+        resp: SyncSender<PlainResponse>,
+    },
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    ingress: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+    pub sessions: Arc<SessionManager>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start router, HE workers and the plaintext batcher.
+    ///
+    /// `artifacts_dir` enables the PJRT fast path: the batcher thread
+    /// loads and compiles the AOT slot model locally (PJRT handles are
+    /// not `Send`, so the model lives and dies on that thread). When
+    /// `None` — or when loading fails (e.g. shape mismatch with the
+    /// packed HRF) — the plaintext path computes the identical slot
+    /// model in Rust.
+    pub fn start(
+        cfg: CoordinatorConfig,
+        ctx: ContextRef,
+        server: Arc<HrfServer>,
+        sessions: Arc<SessionManager>,
+        artifacts_dir: Option<PathBuf>,
+    ) -> Self {
+        assert!(cfg.workers >= 1);
+        let metrics = Arc::new(Metrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_capacity);
+        let mut threads = Vec::new();
+
+        // --- HE workers -------------------------------------------
+        let mut worker_txs = Vec::new();
+        let worker_loads: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..cfg.workers).map(|_| AtomicUsize::new(0)).collect());
+        for w in 0..cfg.workers {
+            let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+            worker_txs.push(tx);
+            let ctx = ctx.clone();
+            let server = server.clone();
+            let sessions = sessions.clone();
+            let metrics = metrics.clone();
+            let loads = worker_loads.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("hrf-worker-{w}"))
+                    .spawn(move || {
+                        let enc = Encoder::new(&ctx);
+                        let mut ev = Evaluator::new(ctx.clone());
+                        while let Ok(req) = rx.recv() {
+                            if let Request::Encrypted {
+                                session_id,
+                                ct,
+                                enqueued,
+                                resp,
+                            } = req
+                            {
+                                let result = match sessions.get(session_id) {
+                                    Some(sess) => {
+                                        let (outs, _) = server.eval(
+                                            &mut ev,
+                                            &enc,
+                                            &ct,
+                                            &sess.relin,
+                                            &sess.galois,
+                                        );
+                                        Ok(outs)
+                                    }
+                                    None => Err(format!("no session {session_id}")),
+                                };
+                                loads[w].fetch_sub(1, Ordering::Relaxed);
+                                metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .encrypted_latency
+                                    .lock()
+                                    .unwrap()
+                                    .record(enqueued.elapsed());
+                                let _ = resp.send(result);
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        // --- plaintext batcher --------------------------------------
+        let (batch_tx, batch_rx) = sync_channel::<Request>(cfg.queue_capacity);
+        {
+            let server = server.clone();
+            let metrics = metrics.clone();
+            let cfg_b = cfg;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("plain-batcher".into())
+                    .spawn(move || {
+                        // PJRT fast path, loaded on this thread only.
+                        let slot_model: Option<(SlotModel, SlotModelParams)> =
+                            artifacts_dir.and_then(|dir| {
+                                match SlotModel::load(&dir) {
+                                    Ok(sm) => {
+                                        match SlotModelParams::from_hrf(&server.model, sm.shape)
+                                        {
+                                            Ok(p) => Some((sm, p)),
+                                            Err(e) => {
+                                                eprintln!(
+                                                    "[batcher] PJRT params mismatch ({e}); using Rust slot math"
+                                                );
+                                                None
+                                            }
+                                        }
+                                    }
+                                    Err(e) => {
+                                        eprintln!(
+                                            "[batcher] PJRT load failed ({e}); using Rust slot math"
+                                        );
+                                        None
+                                    }
+                                }
+                            });
+                        let mut policy = BatchPolicy::new(cfg_b.max_batch, cfg_b.batch_delay);
+                        let mut held: Vec<(Vec<f64>, Instant, SyncSender<PlainResponse>)> =
+                            Vec::new();
+                        let flush = |held: &mut Vec<(Vec<f64>, Instant, SyncSender<PlainResponse>)>| {
+                            if held.is_empty() {
+                                return 0usize;
+                            }
+                            let n = held.len();
+                            let slot_inputs: Vec<Vec<f32>> = held
+                                .iter()
+                                .map(|(x, _, _)| {
+                                    reshuffle_and_pack(&server.model, x)
+                                        .iter()
+                                        .map(|&v| v as f32)
+                                        .collect()
+                                })
+                                .collect();
+                            // PJRT fast path, Rust slot math fallback.
+                            let scores: Vec<Vec<f64>> = match &slot_model {
+                                Some(sm) => match sm.0.infer_batch(&slot_inputs, &sm.1) {
+                                    Ok(rows) => rows
+                                        .into_iter()
+                                        .map(|r| r.iter().map(|&v| v as f64).collect())
+                                        .collect(),
+                                    Err(e) => {
+                                        for (_, _, resp) in held.drain(..) {
+                                            let _ = resp.send(Err(format!("pjrt: {e}")));
+                                        }
+                                        return n;
+                                    }
+                                },
+                                None => held
+                                    .iter()
+                                    .map(|(x, _, _)| {
+                                        let slots = reshuffle_and_pack(&server.model, x);
+                                        server.model.forward_slots_plain(&slots)
+                                    })
+                                    .collect(),
+                            };
+                            // Batch accounting first: a caller that has
+                            // received its response must already see the
+                            // flush reflected in the metrics.
+                            metrics.batches_flushed.fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .batch_fill_sum
+                                .fetch_add(n as u64, Ordering::Relaxed);
+                            for ((_, enq, resp), s) in held.drain(..).zip(scores) {
+                                metrics.plain_completed.fetch_add(1, Ordering::Relaxed);
+                                metrics.plain_latency.lock().unwrap().record(enq.elapsed());
+                                let _ = resp.send(Ok(s));
+                            }
+                            n
+                        };
+                        loop {
+                            let timeout = policy
+                                .deadline()
+                                .map(|d| d.saturating_duration_since(Instant::now()))
+                                .unwrap_or(Duration::from_millis(50));
+                            match batch_rx.recv_timeout(timeout) {
+                                Ok(Request::Plain { x, enqueued, resp }) => {
+                                    held.push((x, enqueued, resp));
+                                    if policy.on_arrival(Instant::now()) == BatchAction::Flush {
+                                        let n = flush(&mut held);
+                                        policy.on_flush(n);
+                                    }
+                                }
+                                Ok(_) => unreachable!("router sends only Plain here"),
+                                Err(RecvTimeoutError::Timeout) => {
+                                    if policy.on_tick(Instant::now()) == BatchAction::Flush {
+                                        let n = flush(&mut held);
+                                        policy.on_flush(n);
+                                    }
+                                }
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    let n = flush(&mut held);
+                                    policy.on_flush(n);
+                                    break;
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // --- router --------------------------------------------------
+        {
+            let loads = worker_loads;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("router".into())
+                    .spawn(move || {
+                        while let Ok(req) = ingress_rx.recv() {
+                            match req {
+                                enc @ Request::Encrypted { .. } => {
+                                    // Least-outstanding-work routing.
+                                    let (best, _) = loads
+                                        .iter()
+                                        .enumerate()
+                                        .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+                                        .expect("workers >= 1");
+                                    loads[best].fetch_add(1, Ordering::Relaxed);
+                                    if worker_txs[best].send(enc).is_err() {
+                                        loads[best].fetch_sub(1, Ordering::Relaxed);
+                                    }
+                                }
+                                plain @ Request::Plain { .. } => {
+                                    let _ = batch_tx.send(plain);
+                                }
+                            }
+                        }
+                        // ingress closed: drop worker/batcher senders so
+                        // their loops terminate.
+                    })
+                    .expect("spawn router"),
+            );
+        }
+
+        Coordinator {
+            ingress: ingress_tx,
+            metrics,
+            sessions,
+            shutdown,
+            threads,
+        }
+    }
+
+    /// Submit an encrypted inference. Fails fast on backpressure or a
+    /// missing session (checked before queueing).
+    pub fn submit_encrypted(
+        &self,
+        session_id: u64,
+        ct: Ciphertext,
+    ) -> Result<Receiver<EncResponse>, SubmitError> {
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(SubmitError::Closed);
+        }
+        if self.sessions.get(session_id).is_none() {
+            self.metrics
+                .rejected_no_session
+                .fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::NoSession);
+        }
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let req = Request::Encrypted {
+            session_id,
+            ct: Box::new(ct),
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        match self.ingress.try_send(req) {
+            Ok(()) => Ok(resp_rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics
+                    .rejected_backpressure
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit a plaintext inference (features, not slots).
+    pub fn submit_plain(&self, x: Vec<f64>) -> Result<Receiver<PlainResponse>, SubmitError> {
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(SubmitError::Closed);
+        }
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let req = Request::Plain {
+            x,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        match self.ingress.try_send(req) {
+            Ok(()) => Ok(resp_rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics
+                    .rejected_backpressure
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Dropping the ingress sender unblocks the router, which drops
+        // worker/batcher senders in turn.
+        drop(std::mem::replace(&mut self.ingress, {
+            let (tx, _rx) = sync_channel(1);
+            tx
+        }));
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,152 @@
+//! Serving metrics: counters + latency histograms.
+//!
+//! Lock-free counters (atomics) with a small mutex-guarded log-scale
+//! histogram per request class; cheap enough for the request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log₂-bucketed latency histogram (µs buckets from 1µs to ~17min).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [u64; 30],
+    sum_us: u128,
+    count: u64,
+    max_us: u64,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(29);
+        self.buckets[idx] += 1;
+        self.sum_us += us as u128;
+        self.count += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / self.count as u128) as u64)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+}
+
+/// Shared metrics for one coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub encrypted_completed: AtomicU64,
+    pub plain_completed: AtomicU64,
+    pub rejected_backpressure: AtomicU64,
+    pub rejected_no_session: AtomicU64,
+    pub batches_flushed: AtomicU64,
+    pub batch_fill_sum: AtomicU64,
+    pub encrypted_latency: Mutex<Histogram>,
+    pub plain_latency: Mutex<Histogram>,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub encrypted_completed: u64,
+    pub plain_completed: u64,
+    pub rejected_backpressure: u64,
+    pub rejected_no_session: u64,
+    pub batches_flushed: u64,
+    pub mean_batch_fill: f64,
+    pub encrypted_mean: Duration,
+    pub encrypted_p95: Duration,
+    pub plain_mean: Duration,
+    pub plain_p95: Duration,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let enc = self.encrypted_latency.lock().unwrap();
+        let plain = self.plain_latency.lock().unwrap();
+        let flushed = self.batches_flushed.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            encrypted_completed: self.encrypted_completed.load(Ordering::Relaxed),
+            plain_completed: self.plain_completed.load(Ordering::Relaxed),
+            rejected_backpressure: self.rejected_backpressure.load(Ordering::Relaxed),
+            rejected_no_session: self.rejected_no_session.load(Ordering::Relaxed),
+            batches_flushed: flushed,
+            mean_batch_fill: if flushed == 0 {
+                0.0
+            } else {
+                self.batch_fill_sum.load(Ordering::Relaxed) as f64 / flushed as f64
+            },
+            encrypted_mean: enc.mean(),
+            encrypted_p95: enc.quantile(0.95),
+            plain_mean: plain.mean(),
+            plain_p95: plain.quantile(0.95),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::default();
+        for ms in [1u64, 2, 4, 8, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_millis(20));
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(h.quantile(0.5) >= Duration::from_millis(2));
+        assert!(h.quantile(1.0) >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_reads_counters() {
+        let m = Metrics::default();
+        m.encrypted_completed.fetch_add(3, Ordering::Relaxed);
+        m.batches_flushed.fetch_add(2, Ordering::Relaxed);
+        m.batch_fill_sum.fetch_add(9, Ordering::Relaxed);
+        m.plain_latency
+            .lock()
+            .unwrap()
+            .record(Duration::from_micros(500));
+        let s = m.snapshot();
+        assert_eq!(s.encrypted_completed, 3);
+        assert!((s.mean_batch_fill - 4.5).abs() < 1e-12);
+        assert!(s.plain_mean > Duration::ZERO);
+    }
+}

@@ -1,0 +1,27 @@
+//! L3 serving coordinator — the deployment layer around the HRF.
+//!
+//! The paper (§5) argues HRF's advantage is single-observation latency
+//! and notes "several inputs can be handled at the same time using a
+//! multi-threaded server". This module is that server:
+//!
+//! * [`session`] — per-client HE key sessions: the server stores each
+//!   client's *evaluation* keys (relinearization + Galois), never the
+//!   secret key. Requests are rejected unless their session exists.
+//! * [`core`] — the coordinator: a bounded ingress queue
+//!   (backpressure), a router that sends encrypted work to the
+//!   least-loaded HE worker and plaintext work to the batcher, a
+//!   worker pool (one CKKS evaluator each), and graceful shutdown.
+//! * [`batcher`] — dynamic batching for the plaintext fast path:
+//!   flush on size `B` (the AOT artifact's batch) or on timeout,
+//!   executed through the PJRT slot model when available, Rust slot
+//!   math otherwise.
+//! * [`metrics`] — latency histograms / throughput counters.
+
+pub mod batcher;
+pub mod core;
+pub mod metrics;
+pub mod session;
+
+pub use core::{Coordinator, CoordinatorConfig, SubmitError};
+pub use metrics::MetricsSnapshot;
+pub use session::{Session, SessionManager};

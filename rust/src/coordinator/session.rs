@@ -1,0 +1,104 @@
+//! Per-client HE key sessions.
+//!
+//! In the CKKS deployment model the client generates all key material,
+//! keeps the secret key, and ships the server its *public* evaluation
+//! keys: relinearization (for ct×ct) and Galois (for the rotations of
+//! Algorithms 1–2). One [`Session`] holds those for one client; the
+//! [`SessionManager`] is the thread-safe registry the router consults.
+
+use crate::ckks::keys::{GaloisKeys, RelinKey};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Server-side state for one client.
+pub struct Session {
+    pub id: u64,
+    pub relin: RelinKey,
+    pub galois: GaloisKeys,
+}
+
+/// Thread-safe session registry.
+#[derive(Default)]
+pub struct SessionManager {
+    next_id: AtomicU64,
+    sessions: RwLock<HashMap<u64, Arc<Session>>>,
+}
+
+impl SessionManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a client's evaluation keys; returns the session id the
+    /// client must present with every request.
+    pub fn register(&self, relin: RelinKey, galois: GaloisKeys) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let session = Arc::new(Session { id, relin, galois });
+        self.sessions.write().unwrap().insert(id, session);
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<Session>> {
+        self.sessions.read().unwrap().get(&id).cloned()
+    }
+
+    pub fn remove(&self, id: u64) -> bool {
+        self.sessions.write().unwrap().remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::rns::CkksContext;
+    use crate::ckks::{CkksParams, KeyGenerator};
+
+    fn keys(seed: u64) -> (RelinKey, GaloisKeys) {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut kg = KeyGenerator::new(&ctx, seed);
+        (kg.gen_relin_key(&ctx), kg.gen_galois_keys(&ctx, &[1]))
+    }
+
+    #[test]
+    fn register_get_remove() {
+        let mgr = SessionManager::new();
+        let (r, g) = keys(1);
+        let id = mgr.register(r, g);
+        assert!(mgr.get(id).is_some());
+        assert_eq!(mgr.len(), 1);
+        assert!(mgr.remove(id));
+        assert!(mgr.get(id).is_none());
+        assert!(!mgr.remove(id));
+    }
+
+    #[test]
+    fn ids_are_unique_across_threads() {
+        let mgr = Arc::new(SessionManager::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let mgr = mgr.clone();
+            handles.push(std::thread::spawn(move || {
+                let (r, g) = keys(100 + t);
+                (0..8).map(|_| mgr.register(r.clone(), g.clone())).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let before = all.len();
+        all.dedup();
+        assert_eq!(before, all.len(), "duplicate session ids");
+        assert_eq!(mgr.len(), 32);
+    }
+}

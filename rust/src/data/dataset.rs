@@ -1,0 +1,179 @@
+//! In-memory tabular dataset with the normalization the paper uses:
+//! every feature (continuous or label-encoded categorical) is mapped
+//! to `[0, 1]` — a requirement for the NRF/HRF input domain
+//! (`X = [0,1]^d`, paper §2.2).
+
+use crate::rng::Xoshiro256pp;
+
+/// Row-major tabular dataset for classification.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major features, `n_rows × n_features`.
+    pub x: Vec<Vec<f64>>,
+    /// Class labels in `0..n_classes`.
+    pub y: Vec<usize>,
+    pub n_classes: usize,
+    pub feature_names: Vec<String>,
+}
+
+impl Dataset {
+    pub fn new(
+        x: Vec<Vec<f64>>,
+        y: Vec<usize>,
+        n_classes: usize,
+        feature_names: Vec<String>,
+    ) -> Self {
+        assert_eq!(x.len(), y.len());
+        if let Some(first) = x.first() {
+            assert_eq!(first.len(), feature_names.len());
+        }
+        Dataset {
+            x,
+            y,
+            n_classes,
+            feature_names,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.feature_names.len()
+    }
+
+    /// Min-max normalize every feature to [0, 1] in place; returns the
+    /// per-feature (min, max) so a server can normalize future inputs
+    /// the same way.
+    pub fn normalize_unit(&mut self) -> Vec<(f64, f64)> {
+        let d = self.n_features();
+        let mut ranges = vec![(f64::INFINITY, f64::NEG_INFINITY); d];
+        for row in &self.x {
+            for (j, &v) in row.iter().enumerate() {
+                ranges[j].0 = ranges[j].0.min(v);
+                ranges[j].1 = ranges[j].1.max(v);
+            }
+        }
+        for row in &mut self.x {
+            for (j, v) in row.iter_mut().enumerate() {
+                let (lo, hi) = ranges[j];
+                *v = if hi > lo { (*v - lo) / (hi - lo) } else { 0.0 };
+            }
+        }
+        ranges
+    }
+
+    /// Apply previously-computed ranges to a single observation.
+    pub fn normalize_row(row: &[f64], ranges: &[(f64, f64)]) -> Vec<f64> {
+        row.iter()
+            .zip(ranges)
+            .map(|(&v, &(lo, hi))| {
+                if hi > lo {
+                    ((v - lo) / (hi - lo)).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Shuffled train/validation split (like the paper's 80/20).
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        let mut rng = Xoshiro256pp::new(seed);
+        rng.shuffle(&mut idx);
+        let n_train = (self.len() as f64 * train_frac).round() as usize;
+        let pick = |ids: &[usize]| Dataset {
+            x: ids.iter().map(|&i| self.x[i].clone()).collect(),
+            y: ids.iter().map(|&i| self.y[i]).collect(),
+            n_classes: self.n_classes,
+            feature_names: self.feature_names.clone(),
+        };
+        (pick(&idx[..n_train]), pick(&idx[n_train..]))
+    }
+
+    /// Class prior distribution.
+    pub fn class_priors(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &y in &self.y {
+            counts[y] += 1;
+        }
+        counts
+            .iter()
+            .map(|&c| c as f64 / self.len().max(1) as f64)
+            .collect()
+    }
+
+    /// Subsample `n` rows (without replacement).
+    pub fn subsample(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256pp::new(seed);
+        let ids = rng.sample_indices(self.len(), n);
+        Dataset {
+            x: ids.iter().map(|&i| self.x[i].clone()).collect(),
+            y: ids.iter().map(|&i| self.y[i]).collect(),
+            n_classes: self.n_classes,
+            feature_names: self.feature_names.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec![
+                vec![0.0, 10.0],
+                vec![5.0, 20.0],
+                vec![10.0, 30.0],
+                vec![2.5, 15.0],
+            ],
+            vec![0, 1, 1, 0],
+            2,
+            vec!["a".into(), "b".into()],
+        )
+    }
+
+    #[test]
+    fn normalize_to_unit_interval() {
+        let mut d = toy();
+        let ranges = d.normalize_unit();
+        assert_eq!(ranges[0], (0.0, 10.0));
+        for row in &d.x {
+            for &v in row {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+        assert_eq!(d.x[2][0], 1.0);
+        assert_eq!(d.x[0][1], 0.0);
+    }
+
+    #[test]
+    fn normalize_row_clamps() {
+        let r = Dataset::normalize_row(&[20.0, -5.0], &[(0.0, 10.0), (0.0, 10.0)]);
+        assert_eq!(r, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let (tr, va) = d.split(0.75, 1);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(va.len(), 1);
+        assert_eq!(tr.n_classes, 2);
+    }
+
+    #[test]
+    fn priors_sum_to_one() {
+        let d = toy();
+        let p = d.class_priors();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(p, vec![0.5, 0.5]);
+    }
+}

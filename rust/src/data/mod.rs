@@ -1,0 +1,13 @@
+//! Dataset plumbing and synthetic data generators.
+//!
+//! The paper evaluates on the UCI Adult Income dataset. This
+//! environment is offline, so [`adult`] generates a deterministic
+//! synthetic stand-in with Adult-like marginals and a noisy nonlinear
+//! labelling rule (see DESIGN.md §Substitutions). [`credit`] is a
+//! second domain used by the `credit_scoring` example.
+
+pub mod adult;
+pub mod credit;
+pub mod dataset;
+
+pub use dataset::Dataset;

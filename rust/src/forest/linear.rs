@@ -1,0 +1,123 @@
+//! Logistic-regression baseline (Table 2's "Linear" row).
+//!
+//! Binary logistic regression trained by mini-batch gradient descent
+//! with L2 regularization — the representative "only linear models are
+//! practical under HE" baseline the paper argues beyond.
+
+use crate::data::Dataset;
+use crate::rng::Xoshiro256pp;
+
+#[derive(Clone, Debug)]
+pub struct LogisticRegression {
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LogRegConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub l2: f64,
+    pub batch: usize,
+}
+
+impl Default for LogRegConfig {
+    fn default() -> Self {
+        LogRegConfig {
+            epochs: 30,
+            lr: 0.5,
+            l2: 1e-5,
+            batch: 256,
+        }
+    }
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl LogisticRegression {
+    pub fn fit(ds: &Dataset, cfg: &LogRegConfig, seed: u64) -> Self {
+        assert_eq!(ds.n_classes, 2, "binary only");
+        let d = ds.n_features();
+        let mut w = vec![0.0f64; d];
+        let mut b = 0.0f64;
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        for _ in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(cfg.batch) {
+                let mut gw = vec![0.0f64; d];
+                let mut gb = 0.0f64;
+                for &i in chunk {
+                    let z: f64 = ds.x[i].iter().zip(&w).map(|(x, w)| x * w).sum::<f64>() + b;
+                    let err = sigmoid(z) - ds.y[i] as f64;
+                    for (g, x) in gw.iter_mut().zip(&ds.x[i]) {
+                        *g += err * x;
+                    }
+                    gb += err;
+                }
+                let scale = cfg.lr / chunk.len() as f64;
+                for (wj, gj) in w.iter_mut().zip(&gw) {
+                    *wj -= scale * gj + cfg.lr * cfg.l2 * *wj;
+                }
+                b -= scale * gb;
+            }
+        }
+        LogisticRegression { w, b }
+    }
+
+    pub fn predict_proba(&self, x: &[f64]) -> Vec<f64> {
+        let z: f64 = x.iter().zip(&self.w).map(|(x, w)| x * w).sum::<f64>() + self.b;
+        let p = sigmoid(z);
+        vec![1.0 - p, p]
+    }
+
+    pub fn predict(&self, x: &[f64]) -> usize {
+        (self.predict_proba(x)[1] >= 0.5) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{adult, Dataset};
+
+    #[test]
+    fn separates_linear_data() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..2000 {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            x.push(vec![a, b]);
+            y.push((a + b > 1.0) as usize);
+        }
+        let ds = Dataset::new(x, y, 2, vec!["a".into(), "b".into()]);
+        let m = LogisticRegression::fit(&ds, &LogRegConfig::default(), 2);
+        let acc = ds
+            .x
+            .iter()
+            .zip(&ds.y)
+            .filter(|(x, &y)| m.predict(x) == y)
+            .count() as f64
+            / ds.len() as f64;
+        assert!(acc > 0.95, "linear separable accuracy {acc}");
+    }
+
+    #[test]
+    fn reasonable_on_adult() {
+        let ds = adult::generate(6_000, 21);
+        let (tr, va) = ds.split(0.8, 3);
+        let m = LogisticRegression::fit(&tr, &LogRegConfig::default(), 4);
+        let acc = va
+            .x
+            .iter()
+            .zip(&va.y)
+            .filter(|(x, &y)| m.predict(x) == y)
+            .count() as f64
+            / va.len() as f64;
+        assert!(acc > 0.72, "adult linear accuracy {acc}");
+    }
+}

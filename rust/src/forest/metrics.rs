@@ -1,0 +1,123 @@
+//! Binary-classification metrics — the four columns of Table 2.
+//!
+//! Positive class = 1 (">50K" for Adult). Precision/recall/F1 follow
+//! the usual conventions with 0/0 → 0.
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Metrics {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+impl Metrics {
+    /// Compute from predictions vs ground truth (positive class = 1).
+    pub fn from_predictions(pred: &[usize], truth: &[usize]) -> Self {
+        assert_eq!(pred.len(), truth.len());
+        let (mut tp, mut fp, mut tn, mut fn_) = (0usize, 0usize, 0usize, 0usize);
+        for (&p, &t) in pred.iter().zip(truth) {
+            match (p, t) {
+                (1, 1) => tp += 1,
+                (1, 0) => fp += 1,
+                (0, 0) => tn += 1,
+                (0, 1) => fn_ += 1,
+                _ => panic!("binary metrics on non-binary labels"),
+            }
+        }
+        let total = pred.len().max(1);
+        let accuracy = (tp + tn) as f64 / total as f64;
+        let precision = if tp + fp > 0 {
+            tp as f64 / (tp + fp) as f64
+        } else {
+            0.0
+        };
+        let recall = if tp + fn_ > 0 {
+            tp as f64 / (tp + fn_) as f64
+        } else {
+            0.0
+        };
+        let f1 = if precision + recall > 0.0 {
+            2.0 * precision * recall / (precision + recall)
+        } else {
+            0.0
+        };
+        Metrics {
+            accuracy,
+            precision,
+            recall,
+            f1,
+            tp,
+            fp,
+            tn,
+            fn_,
+        }
+    }
+
+    /// Row formatted like Table 2.
+    pub fn table_row(&self, model: &str) -> Vec<String> {
+        vec![
+            model.to_string(),
+            format!("{:.3}", self.accuracy),
+            format!("{:.3}", self.precision),
+            format!("{:.3}", self.recall),
+            format!("{:.3}", self.f1),
+        ]
+    }
+}
+
+/// Fraction of positions where two prediction vectors agree — the
+/// paper's NRF/HRF agreement statistic (§4: 97.5 %).
+pub fn agreement(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 1.0;
+    }
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let m = Metrics::from_predictions(&[1, 0, 1, 0], &[1, 0, 1, 0]);
+        assert_eq!(m.accuracy, 1.0);
+        assert_eq!(m.precision, 1.0);
+        assert_eq!(m.recall, 1.0);
+        assert_eq!(m.f1, 1.0);
+    }
+
+    #[test]
+    fn known_confusion() {
+        // tp=2 fp=1 tn=3 fn=2
+        let pred = [1, 1, 1, 0, 0, 0, 0, 0];
+        let truth = [1, 1, 0, 1, 1, 0, 0, 0];
+        let m = Metrics::from_predictions(&pred, &truth);
+        assert_eq!((m.tp, m.fp, m.tn, m.fn_), (2, 1, 3, 2));
+        assert!((m.accuracy - 5.0 / 8.0).abs() < 1e-12);
+        assert!((m.precision - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.recall - 0.5).abs() < 1e-12);
+        let f1 = 2.0 * (2.0 / 3.0) * 0.5 / (2.0 / 3.0 + 0.5);
+        assert!((m.f1 - f1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_no_positive_predictions() {
+        let m = Metrics::from_predictions(&[0, 0], &[1, 0]);
+        assert_eq!(m.precision, 0.0);
+        assert_eq!(m.recall, 0.0);
+        assert_eq!(m.f1, 0.0);
+    }
+
+    #[test]
+    fn agreement_fraction() {
+        assert_eq!(agreement(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(agreement(&[], &[]), 1.0);
+    }
+}

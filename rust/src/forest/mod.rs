@@ -1,0 +1,21 @@
+//! Tree-ensemble learning substrate.
+//!
+//! The paper trains Random Forests with scikit-learn; here the whole
+//! training stack is native Rust so the serving path has no Python
+//! dependency:
+//!
+//! * [`tree`] — CART decision trees (Gini impurity, depth/leaf limits).
+//! * [`forest`] — bootstrap-aggregated random forests with per-split
+//!   feature subsampling.
+//! * [`linear`] — logistic-regression baseline (Table 2's "Linear").
+//! * [`metrics`] — accuracy / precision / recall / F1 (Table 2 columns).
+
+pub mod forest;
+pub mod linear;
+pub mod metrics;
+pub mod tree;
+
+pub use forest::{RandomForest, RandomForestConfig};
+pub use linear::LogisticRegression;
+pub use metrics::Metrics;
+pub use tree::{DecisionTree, Node, TreeConfig};

@@ -1,0 +1,386 @@
+//! CART decision trees (classification, Gini impurity).
+//!
+//! Trees are grown depth-first with axis-aligned splits
+//! `x[feature] <= threshold → left`, matching the paper's comparison
+//! convention (`h_k(x) = x_{τ(k)} - t_k`; positive → right child).
+//! Shallow trees are the intended regime: the HRF packs `K` leaves per
+//! tree and its homomorphic cost scales with `K`, not with the number
+//! of trees (paper §3).
+
+use crate::data::Dataset;
+use crate::rng::Xoshiro256pp;
+
+/// Tree node. Indices refer to `DecisionTree::nodes`.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Internal {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        /// Class distribution in the leaf (sums to 1).
+        dist: Vec<f64>,
+        /// Training observations that reached the leaf.
+        n: usize,
+    },
+}
+
+/// Growth limits.
+#[derive(Clone, Copy, Debug)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Features examined per split; `0` = all.
+    pub mtry: usize,
+    /// Max candidate thresholds per feature (quantile subsample).
+    pub max_thresholds: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig {
+            max_depth: 4,
+            min_samples_split: 8,
+            min_samples_leaf: 4,
+            mtry: 0,
+            max_thresholds: 32,
+        }
+    }
+}
+
+/// A trained CART tree.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    pub nodes: Vec<Node>,
+    pub n_classes: usize,
+}
+
+fn gini(counts: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+impl DecisionTree {
+    /// Train on the rows of `ds` selected by `indices`.
+    pub fn fit_indices(
+        ds: &Dataset,
+        indices: &[usize],
+        cfg: &TreeConfig,
+        rng: &mut Xoshiro256pp,
+    ) -> Self {
+        let mut tree = DecisionTree {
+            nodes: Vec::new(),
+            n_classes: ds.n_classes,
+        };
+        let mut idx = indices.to_vec();
+        tree.grow(ds, &mut idx, 0, cfg, rng);
+        tree
+    }
+
+    pub fn fit(ds: &Dataset, cfg: &TreeConfig, rng: &mut Xoshiro256pp) -> Self {
+        let all: Vec<usize> = (0..ds.len()).collect();
+        Self::fit_indices(ds, &all, cfg, rng)
+    }
+
+    fn make_leaf(&mut self, ds: &Dataset, indices: &[usize]) -> usize {
+        let mut counts = vec![0usize; ds.n_classes];
+        for &i in indices {
+            counts[ds.y[i]] += 1;
+        }
+        let total = indices.len().max(1);
+        let dist = counts
+            .iter()
+            .map(|&c| c as f64 / total as f64)
+            .collect();
+        self.nodes.push(Node::Leaf {
+            dist,
+            n: indices.len(),
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Grow a subtree over `indices`; returns the node id.
+    fn grow(
+        &mut self,
+        ds: &Dataset,
+        indices: &mut [usize],
+        depth: usize,
+        cfg: &TreeConfig,
+        rng: &mut Xoshiro256pp,
+    ) -> usize {
+        // Stopping conditions.
+        let mut counts = vec![0usize; ds.n_classes];
+        for &i in indices.iter() {
+            counts[ds.y[i]] += 1;
+        }
+        let pure = counts.iter().filter(|&&c| c > 0).count() <= 1;
+        if depth >= cfg.max_depth || indices.len() < cfg.min_samples_split || pure {
+            return self.make_leaf(ds, indices);
+        }
+
+        // Candidate features.
+        let d = ds.n_features();
+        let features: Vec<usize> = if cfg.mtry == 0 || cfg.mtry >= d {
+            (0..d).collect()
+        } else {
+            rng.sample_indices(d, cfg.mtry)
+        };
+
+        let parent_gini = gini(&counts, indices.len());
+        let mut best: Option<(f64, usize, f64)> = None; // (gain, feature, threshold)
+        for &f in &features {
+            // Sorted feature values over this node's rows.
+            let mut vals: Vec<f64> = indices.iter().map(|&i| ds.x[i][f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            if vals.len() < 2 {
+                continue;
+            }
+            // Quantile-subsample candidate midpoints.
+            let n_cand = (vals.len() - 1).min(cfg.max_thresholds);
+            for c in 0..n_cand {
+                let pos = (c as f64 + 0.5) / n_cand as f64 * (vals.len() - 1) as f64;
+                let k = pos as usize;
+                let thr = 0.5 * (vals[k] + vals[k + 1]);
+                // Partition counts.
+                let mut lc = vec![0usize; ds.n_classes];
+                let mut ln = 0usize;
+                for &i in indices.iter() {
+                    if ds.x[i][f] <= thr {
+                        lc[ds.y[i]] += 1;
+                        ln += 1;
+                    }
+                }
+                let rn = indices.len() - ln;
+                if ln < cfg.min_samples_leaf || rn < cfg.min_samples_leaf {
+                    continue;
+                }
+                let rc: Vec<usize> = counts.iter().zip(&lc).map(|(&t, &l)| t - l).collect();
+                let w = indices.len() as f64;
+                let gain = parent_gini
+                    - (ln as f64 / w) * gini(&lc, ln)
+                    - (rn as f64 / w) * gini(&rc, rn);
+                if gain > 1e-12 && best.map_or(true, |(g, _, _)| gain > g) {
+                    best = Some((gain, f, thr));
+                }
+            }
+        }
+
+        let Some((_, f, thr)) = best else {
+            return self.make_leaf(ds, indices);
+        };
+
+        // Partition indices in place.
+        let mut lo = 0usize;
+        let mut hi = indices.len();
+        while lo < hi {
+            if ds.x[indices[lo]][f] <= thr {
+                lo += 1;
+            } else {
+                hi -= 1;
+                indices.swap(lo, hi);
+            }
+        }
+        let split = lo;
+        // Reserve the internal node slot, then grow children.
+        self.nodes.push(Node::Leaf {
+            dist: vec![],
+            n: 0,
+        }); // placeholder
+        let me = self.nodes.len() - 1;
+        let (left_idx, right_idx) = indices.split_at_mut(split);
+        let left = self.grow(ds, left_idx, depth + 1, cfg, rng);
+        let right = self.grow(ds, right_idx, depth + 1, cfg, rng);
+        self.nodes[me] = Node::Internal {
+            feature: f,
+            threshold: thr,
+            left,
+            right,
+        };
+        me
+    }
+
+    /// Root node id (grow() pushes the root first).
+    pub fn root(&self) -> usize {
+        0
+    }
+
+    /// Class distribution for one observation.
+    pub fn predict_proba(&self, x: &[f64]) -> Vec<f64> {
+        let mut id = self.root();
+        loop {
+            match &self.nodes[id] {
+                Node::Internal {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    id = if x[*feature] <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { dist, .. } => return dist.clone(),
+            }
+        }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> usize {
+        argmax(&self.predict_proba(x))
+    }
+
+    /// Number of leaves.
+    pub fn n_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+
+    /// Depth of the deepest leaf.
+    pub fn depth(&self) -> usize {
+        fn rec(t: &DecisionTree, id: usize) -> usize {
+            match &t.nodes[id] {
+                Node::Leaf { .. } => 0,
+                Node::Internal { left, right, .. } => 1 + rec(t, *left).max(rec(t, *right)),
+            }
+        }
+        rec(self, self.root())
+    }
+}
+
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn xor_dataset(n: usize, seed: u64) -> Dataset {
+        // XOR of two thresholds — linearly inseparable, trees need depth 2.
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            x.push(vec![a, b]);
+            y.push(((a > 0.5) ^ (b > 0.5)) as usize);
+        }
+        Dataset::new(x, y, 2, vec!["a".into(), "b".into()])
+    }
+
+    #[test]
+    fn learns_axis_threshold_exactly() {
+        // y = 1[a > 0.37] — a single split should nail it.
+        let mut rng = Xoshiro256pp::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..2000 {
+            let a = rng.next_f64();
+            x.push(vec![a, rng.next_f64()]);
+            y.push((a > 0.37) as usize);
+        }
+        let ds = Dataset::new(x, y, 2, vec!["a".into(), "b".into()]);
+        let mut trng = Xoshiro256pp::new(2);
+        let cfg = TreeConfig {
+            max_depth: 2,
+            max_thresholds: 256,
+            ..Default::default()
+        };
+        let t = DecisionTree::fit(&ds, &cfg, &mut trng);
+        let acc = ds
+            .x
+            .iter()
+            .zip(&ds.y)
+            .filter(|(x, &y)| t.predict(x) == y)
+            .count() as f64
+            / ds.len() as f64;
+        assert!(acc > 0.99, "threshold accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_xor_with_depth() {
+        // XOR has zero marginal gain at the root (greedy CART relies on
+        // sampling noise to pick the first split), so allow depth 6.
+        let ds = xor_dataset(2000, 1);
+        let mut rng = Xoshiro256pp::new(2);
+        let cfg = TreeConfig {
+            max_depth: 6,
+            min_samples_leaf: 2,
+            min_samples_split: 4,
+            ..Default::default()
+        };
+        let t = DecisionTree::fit(&ds, &cfg, &mut rng);
+        let acc = ds
+            .x
+            .iter()
+            .zip(&ds.y)
+            .filter(|(x, &y)| t.predict(x) == y)
+            .count() as f64
+            / ds.len() as f64;
+        assert!(acc > 0.85, "XOR accuracy {acc}");
+        assert!(t.depth() <= 6);
+    }
+
+    #[test]
+    fn respects_max_depth_and_leaf_count() {
+        let ds = xor_dataset(500, 3);
+        let mut rng = Xoshiro256pp::new(4);
+        for depth in 1..=4 {
+            let cfg = TreeConfig {
+                max_depth: depth,
+                ..Default::default()
+            };
+            let t = DecisionTree::fit(&ds, &cfg, &mut rng);
+            assert!(t.depth() <= depth);
+            assert!(t.n_leaves() <= 1 << depth);
+        }
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let ds = Dataset::new(
+            vec![vec![0.1], vec![0.2], vec![0.3]],
+            vec![1, 1, 1],
+            2,
+            vec!["a".into()],
+        );
+        let mut rng = Xoshiro256pp::new(5);
+        let t = DecisionTree::fit(&ds, &TreeConfig::default(), &mut rng);
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.predict(&[0.15]), 1);
+    }
+
+    #[test]
+    fn leaf_distributions_sum_to_one() {
+        let ds = xor_dataset(500, 6);
+        let mut rng = Xoshiro256pp::new(7);
+        let t = DecisionTree::fit(&ds, &TreeConfig::default(), &mut rng);
+        for n in &t.nodes {
+            if let Node::Leaf { dist, n } = n {
+                if *n > 0 {
+                    assert!((dist.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}

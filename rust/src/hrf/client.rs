@@ -1,0 +1,113 @@
+//! Client half of Algorithm 3: variable reshuffle + replication +
+//! encryption, and decryption + argmax of the returned scores.
+//!
+//! The reshuffle applies the model's τ in the clear — the paper's
+//! design point: it is a high-cost operation under CKKS but leaks
+//! nothing about the *data* when done client-side (§3), only requiring
+//! the model owner to publish τ (which variables the forest compares,
+//! not the thresholds).
+
+use super::pack::HrfModel;
+use crate::ckks::{Ciphertext, Decryptor, Encoder, Encryptor};
+use crate::ckks::rns::CkksContext;
+
+/// Build the packed slot vector `x̃` for one observation:
+/// per tree block, `(x_τ | 0 | x_τ)` (Algorithm 3 lines 2–5).
+pub fn reshuffle_and_pack(model: &HrfModel, x: &[f64]) -> Vec<f64> {
+    let p = &model.plan;
+    let mut slots = vec![0.0f64; p.slots];
+    for (li, tau) in model.taus.iter().enumerate() {
+        let base = p.block_start(li);
+        for (j, &feat) in tau.iter().enumerate() {
+            let v = x[feat];
+            slots[base + j] = v; // first copy
+            slots[base + p.k + j] = v; // replica
+        }
+        // slot base+k-1 stays 0 (padding comparison input).
+    }
+    slots
+}
+
+/// Client-side state: encoder + keys for one session.
+pub struct HrfClient {
+    pub encryptor: Encryptor,
+    pub decryptor: Decryptor,
+}
+
+impl HrfClient {
+    pub fn new(encryptor: Encryptor, decryptor: Decryptor) -> Self {
+        HrfClient {
+            encryptor,
+            decryptor,
+        }
+    }
+
+    /// Encrypt one observation for the given model.
+    pub fn encrypt_input(
+        &mut self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        model: &HrfModel,
+        x: &[f64],
+    ) -> Ciphertext {
+        let slots = reshuffle_and_pack(model, x);
+        self.encryptor.encrypt_slots(ctx, enc, &slots)
+    }
+
+    /// Decrypt per-class score ciphertexts (score of class c lives in
+    /// slot 0 of `cts[c]`) and return (scores, argmax).
+    pub fn decrypt_scores(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        cts: &[Ciphertext],
+    ) -> (Vec<f64>, usize) {
+        let scores: Vec<f64> = cts
+            .iter()
+            .map(|ct| self.decryptor.decrypt_slots(ctx, enc, ct)[0])
+            .collect();
+        let pred = crate::forest::tree::argmax(&scores);
+        (scores, pred)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::adult;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+    use crate::nrf::NeuralForest;
+
+    #[test]
+    fn packed_input_has_replicated_blocks() {
+        let ds = adult::generate(500, 71);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 5,
+                ..Default::default()
+            },
+            72,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 4096).unwrap();
+        let x = &ds.x[0];
+        let slots = reshuffle_and_pack(&hm, x);
+        let p = &hm.plan;
+        for li in 0..p.l {
+            let base = p.block_start(li);
+            // replication: slots[base+j] == slots[base+K+j]
+            for j in 0..p.k - 1 {
+                assert_eq!(slots[base + j], slots[base + p.k + j]);
+                assert_eq!(slots[base + j], x[hm.taus[li][j]]);
+            }
+            assert_eq!(slots[base + p.k - 1], 0.0);
+        }
+        // tail zero
+        for s in p.used_slots..p.slots {
+            assert_eq!(slots[s], 0.0);
+        }
+    }
+}

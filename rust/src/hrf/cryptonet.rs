@@ -1,0 +1,185 @@
+//! CryptoNet-style HE-MLP baseline (paper §5 comparison).
+//!
+//! CryptoNets (Dowlin et al. 2016) batch one *sample per slot*: each
+//! input feature is its own ciphertext carrying that feature's value
+//! for all `N/2` samples. Dense layers are plaintext-weight
+//! mul-and-adds across ciphertexts (no rotations); activations are
+//! squarings. The consequence the paper highlights: latency is the
+//! same whether the batch holds 1 or 8192 samples — amortized
+//! throughput is great, single-observation latency is terrible.
+//!
+//! This module reproduces that trade-off on our CKKS substrate with a
+//! small MLP (d → hidden → C, square activations) over the same
+//! structured data the HRF serves.
+
+use crate::ckks::evaluator::Evaluator;
+use crate::ckks::keys::RelinKey;
+use crate::ckks::rns::CkksContext;
+use crate::ckks::{Ciphertext, Encoder, Encryptor};
+use crate::rng::Xoshiro256pp;
+
+/// Plaintext MLP weights (trained or random — the §5 comparison is
+/// about *cost*, not accuracy).
+#[derive(Clone, Debug)]
+pub struct MlpWeights {
+    pub w1: Vec<Vec<f64>>, // hidden × d
+    pub b1: Vec<f64>,
+    pub w2: Vec<Vec<f64>>, // C × hidden
+    pub b2: Vec<f64>,
+}
+
+impl MlpWeights {
+    pub fn random(d: usize, hidden: usize, c: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        fn mat(rng: &mut Xoshiro256pp, rows: usize, cols: usize) -> Vec<Vec<f64>> {
+            (0..rows)
+                .map(|_| (0..cols).map(|_| rng.normal_ms(0.0, 0.4)).collect())
+                .collect()
+        }
+        let w1 = mat(&mut rng, hidden, d);
+        let b1 = (0..hidden).map(|_| rng.normal_ms(0.0, 0.1)).collect();
+        let w2 = mat(&mut rng, c, hidden);
+        let b2 = (0..c).map(|_| rng.normal_ms(0.0, 0.1)).collect();
+        MlpWeights { w1, b1, w2, b2 }
+    }
+
+    /// Plaintext reference forward for one sample.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let h: Vec<f64> = self
+            .w1
+            .iter()
+            .zip(&self.b1)
+            .map(|(row, b)| {
+                let z: f64 = row.iter().zip(x).map(|(w, x)| w * x).sum::<f64>() + b;
+                z * z
+            })
+            .collect();
+        self.w2
+            .iter()
+            .zip(&self.b2)
+            .map(|(row, b)| row.iter().zip(&h).map(|(w, h)| w * h).sum::<f64>() + b)
+            .collect()
+    }
+}
+
+/// Encrypt a batch in CryptoNet layout: ciphertext `j` holds feature
+/// `j` of every sample (batch ≤ slots; remaining slots zero).
+pub fn encrypt_batch_per_feature(
+    ctx: &CkksContext,
+    enc: &Encoder,
+    encryptor: &mut Encryptor,
+    batch: &[Vec<f64>],
+) -> Vec<Ciphertext> {
+    let d = batch[0].len();
+    let slots = ctx.n() / 2;
+    assert!(batch.len() <= slots);
+    (0..d)
+        .map(|j| {
+            let mut col = vec![0.0f64; slots];
+            for (i, row) in batch.iter().enumerate() {
+                col[i] = row[j];
+            }
+            encryptor.encrypt_slots(ctx, enc, &col)
+        })
+        .collect()
+}
+
+/// Evaluate the MLP on per-feature ciphertexts. Returns one ciphertext
+/// per class; slot `i` of each holds sample `i`'s class score.
+/// Depth: 4 levels (dense·rescale, square·rescale, dense·rescale).
+pub fn eval_mlp(
+    ev: &mut Evaluator,
+    enc: &Encoder,
+    inputs: &[Ciphertext],
+    w: &MlpWeights,
+    rlk: &RelinKey,
+) -> Vec<Ciphertext> {
+    let delta = ev.ctx.params.scale;
+    let ctx = ev.ctx.clone();
+    // Hidden layer: z_h = Σ_j w1[h][j]·x_j + b1[h], then square.
+    let mut hidden = Vec::with_capacity(w.w1.len());
+    for (row, &b) in w.w1.iter().zip(&w.b1) {
+        let mut acc: Option<Ciphertext> = None;
+        for (ct, &wj) in inputs.iter().zip(row) {
+            let w_pt = enc.encode_constant(&ctx, wj, ct.level, delta);
+            let mut term = ev.mul_plain(ct, &w_pt);
+            match &mut acc {
+                None => acc = Some(term),
+                Some(a) => {
+                    term.scale = a.scale;
+                    ev.add_inplace(a, &term);
+                }
+            }
+        }
+        let mut z = acc.expect("d >= 1");
+        ev.rescale(&mut z);
+        let b_pt = enc.encode_constant(&ctx, b, z.level, z.scale);
+        ev.add_plain_inplace(&mut z, &b_pt);
+        let mut sq = ev.square(&z, rlk);
+        ev.rescale(&mut sq);
+        hidden.push(sq);
+    }
+    // Output layer.
+    let mut outs = Vec::with_capacity(w.w2.len());
+    for (row, &b) in w.w2.iter().zip(&w.b2) {
+        let mut acc: Option<Ciphertext> = None;
+        for (ct, &wh) in hidden.iter().zip(row) {
+            let w_pt = enc.encode_constant(&ctx, wh, ct.level, delta);
+            let mut term = ev.mul_plain(ct, &w_pt);
+            match &mut acc {
+                None => acc = Some(term),
+                Some(a) => {
+                    term.scale = a.scale;
+                    ev.add_inplace(a, &term);
+                }
+            }
+        }
+        let mut z = acc.expect("hidden >= 1");
+        ev.rescale(&mut z);
+        let b_pt = enc.encode_constant(&ctx, b, z.level, z.scale);
+        ev.add_plain_inplace(&mut z, &b_pt);
+        outs.push(z);
+    }
+    outs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::{CkksParams, Decryptor, KeyGenerator};
+
+    #[test]
+    fn he_mlp_matches_plain_forward_batched() {
+        let ctx = CkksContext::new(CkksParams::fast());
+        let enc = Encoder::new(&ctx);
+        let mut kg = KeyGenerator::new(&ctx, 91);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let mut encryptor = Encryptor::new(pk, 92);
+        let decryptor = Decryptor::new(kg.secret_key());
+        let mut ev = Evaluator::new(ctx.clone());
+
+        let d = 6;
+        let hidden = 4;
+        let c = 2;
+        let w = MlpWeights::random(d, hidden, c, 93);
+        let mut rng = Xoshiro256pp::new(94);
+        let batch: Vec<Vec<f64>> = (0..32)
+            .map(|_| (0..d).map(|_| rng.uniform(0.0, 1.0)).collect())
+            .collect();
+        let cts = encrypt_batch_per_feature(&ctx, &enc, &mut encryptor, &batch);
+        let outs = eval_mlp(&mut ev, &enc, &cts, &w, &rlk);
+        assert_eq!(outs.len(), c);
+        for ci in 0..c {
+            let slots = decryptor.decrypt_slots(&ctx, &enc, &outs[ci]);
+            for (i, sample) in batch.iter().enumerate() {
+                let expect = w.forward(sample)[ci];
+                assert!(
+                    (slots[i] - expect).abs() < 1e-2,
+                    "sample {i} class {ci}: {} vs {expect}",
+                    slots[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! NRF → packed HRF model (the server-side plaintext operands of
+//! Algorithm 3).
+//!
+//! All parameters are laid out in the slot layout of [`HrfPlan`]:
+//!
+//! * `t_slots` — thresholds, replicated exactly like the input
+//!   (`(t_τ | 0 | t_τ)` per block) so `x̃ − t̃` aligns;
+//! * `diag_slots[j]` — the j-th generalized diagonal of every tree's
+//!   `V` matrix, `diag_j[p] = V[p][(p+j) mod K]`, zero outside the
+//!   first `K` slots of each block (Algorithm 1 operands);
+//! * `b_slots` — leaf biases in the first `K` slots of each block;
+//! * `w_slots[c]` — per-class output mask `α_l · W^{(l)}[c][k']`,
+//!   zero on replicated/padding slots (also masks Algorithm 1's
+//!   partial-sum garbage before the Algorithm 2 reduction);
+//! * `betas[c] = Σ_l α_l β_c^{(l)}`.
+
+use super::plan::HrfPlan;
+use crate::nrf::NeuralForest;
+
+/// Packed server-side HRF model (plaintext operands; encoding into
+/// CKKS plaintexts happens lazily at the evaluation level/scale).
+#[derive(Clone, Debug)]
+pub struct HrfModel {
+    pub plan: HrfPlan,
+    /// Per-tree comparison feature indices (client's reshuffle τ).
+    pub taus: Vec<Vec<usize>>,
+    pub t_slots: Vec<f64>,
+    pub diag_slots: Vec<Vec<f64>>,
+    pub b_slots: Vec<f64>,
+    pub w_slots: Vec<Vec<f64>>,
+    pub betas: Vec<f64>,
+    /// Monomial coefficients of the activation polynomial P.
+    pub act_coeffs: Vec<f64>,
+}
+
+impl HrfModel {
+    /// Pack a NeuralForest for `slots` available CKKS slots. The
+    /// forest's activation must be polynomial (`Activation::Poly`) —
+    /// build it with `NeuralForest::with_activation` if needed.
+    pub fn from_neural_forest(
+        nf: &NeuralForest,
+        d: usize,
+        slots: usize,
+    ) -> Result<Self, String> {
+        let act_coeffs = match &nf.activation {
+            crate::nrf::Activation::Poly { coeffs } => coeffs.clone(),
+            other => {
+                return Err(format!(
+                    "HRF requires a polynomial activation, got {other:?}"
+                ))
+            }
+        };
+        let k = nf.k;
+        let l = nf.n_trees();
+        let c = nf.n_classes;
+        let plan = HrfPlan::new(k, l, c, d, slots)?;
+        let block = plan.block;
+
+        let mut taus = Vec::with_capacity(l);
+        let mut t_slots = vec![0.0f64; slots];
+        let mut diag_slots = vec![vec![0.0f64; slots]; k];
+        let mut b_slots = vec![0.0f64; slots];
+        let mut w_slots = vec![vec![0.0f64; slots]; c];
+        let mut betas = vec![0.0f64; c];
+
+        for (li, (nt, &alpha)) in nf.trees.iter().zip(&nf.alphas).enumerate() {
+            assert_eq!(nt.k(), k, "trees must share padded K");
+            let base = li * block;
+            taus.push(nt.tau.clone());
+            // Thresholds replicated like the input block:
+            // slots 0..K-1: t_0..t_{K-2}, 0 ; slots K..2K-2: t_0..t_{K-2}.
+            for j in 0..k - 1 {
+                t_slots[base + j] = nt.t[j];
+                t_slots[base + k + j] = nt.t[j];
+            }
+            // t_slots[base + k - 1] stays 0 (padding comparison).
+
+            // Diagonals of V (K×K; column K-1 is the zero padding
+            // column since there are only K-1 comparisons).
+            for j in 0..k {
+                for p in 0..k {
+                    let col = (p + j) % k;
+                    let w = if col < k - 1 { nt.v[p][col] } else { 0.0 };
+                    diag_slots[j][base + p] = w;
+                }
+            }
+            // Leaf biases.
+            for p in 0..k {
+                b_slots[base + p] = nt.b[p];
+            }
+            // Output masks and biases.
+            for ci in 0..c {
+                for p in 0..k {
+                    w_slots[ci][base + p] = alpha * nt.w[ci][p];
+                }
+                betas[ci] += alpha * nt.beta[ci];
+            }
+        }
+
+        Ok(HrfModel {
+            plan,
+            taus,
+            t_slots,
+            diag_slots,
+            b_slots,
+            w_slots,
+            betas,
+            act_coeffs,
+        })
+    }
+
+    /// Reference slot-level forward pass in plaintext f64 — the oracle
+    /// the HE evaluation and the AOT JAX slot model are both checked
+    /// against (same dataflow, no encryption).
+    pub fn forward_slots_plain(&self, x_slots: &[f64]) -> Vec<f64> {
+        let p = &self.plan;
+        let act = |v: f64| crate::nrf::activation::horner(&self.act_coeffs, v);
+        // Layer 1: u = P(x̃ − t̃)
+        let u: Vec<f64> = x_slots
+            .iter()
+            .zip(&self.t_slots)
+            .map(|(&x, &t)| act(x - t))
+            .collect();
+        // Layer 2: v = P(Σ_j diag_j ⊙ rot(u, j) + b̃)
+        let n = x_slots.len();
+        let mut lin = vec![0.0f64; n];
+        for (j, diag) in self.diag_slots.iter().enumerate() {
+            for i in 0..n {
+                lin[i] += diag[i] * u[(i + j) % n];
+            }
+        }
+        let v: Vec<f64> = lin
+            .iter()
+            .zip(&self.b_slots)
+            .map(|(&s, &b)| act(s + b))
+            .collect();
+        // Layer 3: per class, masked sum + β.
+        (0..p.c)
+            .map(|ci| {
+                self.w_slots[ci]
+                    .iter()
+                    .zip(&v)
+                    .map(|(w, v)| w * v)
+                    .sum::<f64>()
+                    + self.betas[ci]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::adult;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+    use crate::nrf::NeuralForest;
+
+    fn packed() -> (crate::data::Dataset, NeuralForest, HrfModel) {
+        let ds = adult::generate(3_000, 61);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 12,
+                ..Default::default()
+            },
+            62,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 4096).unwrap();
+        (ds, nf, hm)
+    }
+
+    #[test]
+    fn rejects_non_polynomial_activation() {
+        let ds = adult::generate(500, 63);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 2,
+                ..Default::default()
+            },
+            64,
+        );
+        let nf = NeuralForest::from_forest(&rf, Activation::Hard);
+        assert!(HrfModel::from_neural_forest(&nf, 14, 4096).is_err());
+    }
+
+    #[test]
+    fn slot_forward_matches_nrf_forward() {
+        // The packed slot dataflow must agree with the straightforward
+        // per-tree NRF forward (same polynomial activation).
+        let (ds, nf, hm) = packed();
+        let client = crate::hrf::client::reshuffle_and_pack(&hm, &ds.x[0]);
+        for x in ds.x.iter().take(100) {
+            let x_slots = crate::hrf::client::reshuffle_and_pack(&hm, x);
+            let got = hm.forward_slots_plain(&x_slots);
+            let expect = nf.forward(x);
+            for (g, e) in got.iter().zip(&expect) {
+                assert!(
+                    (g - e).abs() < 1e-9,
+                    "slot model deviates: {got:?} vs {expect:?}"
+                );
+            }
+        }
+        let _ = client;
+    }
+
+    #[test]
+    fn masks_zero_outside_leaf_slots() {
+        let (_, _, hm) = packed();
+        let p = &hm.plan;
+        for ci in 0..p.c {
+            for li in 0..p.l {
+                let base = p.block_start(li);
+                for off in p.k..p.block {
+                    assert_eq!(hm.w_slots[ci][base + off], 0.0);
+                }
+            }
+            for s in p.used_slots..p.slots {
+                assert_eq!(hm.w_slots[ci][s], 0.0);
+            }
+        }
+    }
+}

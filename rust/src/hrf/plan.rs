@@ -1,0 +1,151 @@
+//! Slot-layout planning for packed HRF evaluation.
+//!
+//! Every tree occupies a contiguous block of `2K−1` slots:
+//!
+//! ```text
+//!   [ comp_0 … comp_{K-2} | 0 | comp_0 … comp_{K-2} ]   (length 2K−1)
+//!     --- K slots ----------^   ^--- K−1 replicated slots
+//! ```
+//!
+//! The replication makes the `K` global rotations of Algorithm 1 read
+//! correct windows inside every block simultaneously (paper §2.1's
+//! wrap-around fix), which is what lets `L` trees be evaluated for the
+//! price of one `K×K` diagonal matmul.
+
+/// Packing plan for one HRF model on one parameter set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HrfPlan {
+    /// Leaves per tree (power of two).
+    pub k: usize,
+    /// Number of trees L.
+    pub l: usize,
+    /// Number of classes C.
+    pub c: usize,
+    /// Input dimension d (for the client's reshuffle).
+    pub d: usize,
+    /// Slots per tree block = 2K−1.
+    pub block: usize,
+    /// Total used slots = L·(2K−1).
+    pub used_slots: usize,
+    /// Power-of-two span covering `used_slots` for the Algorithm 2
+    /// rotate-and-sum.
+    pub reduce_span: usize,
+    /// Total slots available (N/2).
+    pub slots: usize,
+}
+
+impl HrfPlan {
+    /// Build and validate a plan. Errors if the packing constraint
+    /// `L(2K−1) ≤ N/2` (paper §2.1) is violated.
+    pub fn new(k: usize, l: usize, c: usize, d: usize, slots: usize) -> Result<Self, String> {
+        if !k.is_power_of_two() {
+            return Err(format!("K={k} must be a power of two"));
+        }
+        let block = 2 * k - 1;
+        let used = l * block;
+        if used > slots {
+            return Err(format!(
+                "packing constraint violated: L(2K-1) = {used} > {slots} slots"
+            ));
+        }
+        let reduce_span = used.next_power_of_two();
+        if reduce_span > slots {
+            return Err(format!(
+                "reduction span {reduce_span} exceeds {slots} slots"
+            ));
+        }
+        Ok(HrfPlan {
+            k,
+            l,
+            c,
+            d,
+            block,
+            used_slots: used,
+            reduce_span,
+            slots,
+        })
+    }
+
+    /// Slot offset of tree `l`'s block.
+    pub fn block_start(&self, l: usize) -> usize {
+        l * self.block
+    }
+
+    /// Rotation steps the server needs Galois keys for:
+    /// `1..K−1` (Algorithm 1) plus the powers of two up to
+    /// `reduce_span/2` (Algorithm 2).
+    pub fn rotations_needed(&self) -> Vec<usize> {
+        let mut rots: Vec<usize> = (1..self.k).collect();
+        let mut step = 1usize;
+        while step < self.reduce_span {
+            if !rots.contains(&step) {
+                rots.push(step);
+            }
+            step <<= 1;
+        }
+        rots.sort_unstable();
+        rots
+    }
+
+    /// Paper Table 1 formulas for this plan (additions,
+    /// multiplications, rotations) per layer.
+    pub fn table1_formulas(&self) -> [(u64, u64, u64); 3] {
+        let k = self.k as u64;
+        let c = self.c as u64;
+        let log_span = (self.used_slots as f64).log2().ceil() as u64;
+        [
+            (1, 0, 0),
+            (k, k, k),
+            (c * log_span, c, c * log_span),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_plan() {
+        let p = HrfPlan::new(16, 64, 2, 14, 8192).unwrap();
+        assert_eq!(p.block, 31);
+        assert_eq!(p.used_slots, 1984);
+        assert_eq!(p.reduce_span, 2048);
+        assert_eq!(p.block_start(3), 93);
+    }
+
+    #[test]
+    fn rejects_overfull_packing() {
+        // L(2K-1) = 100*31 = 3100 > 2048
+        assert!(HrfPlan::new(16, 100, 2, 14, 2048).is_err());
+    }
+
+    #[test]
+    fn rejects_non_power_of_two_k() {
+        assert!(HrfPlan::new(12, 4, 2, 14, 8192).is_err());
+    }
+
+    #[test]
+    fn rotations_cover_alg1_and_reduction() {
+        let p = HrfPlan::new(8, 10, 2, 5, 4096).unwrap();
+        let rots = p.rotations_needed();
+        for r in 1..8 {
+            assert!(rots.contains(&r), "missing Algorithm 1 rotation {r}");
+        }
+        // used = 150 -> span 256 -> steps 1..128
+        for s in [16, 32, 64, 128] {
+            assert!(rots.contains(&s), "missing reduction step {s}");
+        }
+        assert!(!rots.contains(&256));
+    }
+
+    #[test]
+    fn table1_matches_paper_shapes() {
+        let p = HrfPlan::new(16, 64, 2, 14, 8192).unwrap();
+        let [l1, l2, l3] = p.table1_formulas();
+        assert_eq!(l1, (1, 0, 0));
+        assert_eq!(l2, (16, 16, 16));
+        // C⌈log2 L(2K-1)⌉ = 2*11
+        assert_eq!(l3, (22, 2, 22));
+    }
+}

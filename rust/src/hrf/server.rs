@@ -1,0 +1,275 @@
+//! Server half of Algorithm 3: the homomorphic evaluation.
+//!
+//! ```text
+//! layer 1:  u  = P(x̃ − t̃)                      (1 pt-sub + activation)
+//! layer 2:  v  = P(Σ_{j<K} diag_j ⊙ rot(u,j) + b̃)   (Algorithm 1)
+//! layer 3:  ŷ_c = ⟨W̃_c, v⟩ + β_c                    (Algorithm 2, ×C)
+//! ```
+//!
+//! Per-layer [`OpCounts`] snapshots regenerate the paper's Table 1.
+//! The activation polynomial is evaluated with the power-basis method
+//! (depth ⌈log₂ m⌉+1), so the whole pipeline fits the depth-8 default
+//! parameter set with degree-4 activations.
+
+use super::pack::HrfModel;
+use crate::ckks::evaluator::{Evaluator, OpCounts};
+use crate::ckks::keys::{GaloisKeys, RelinKey};
+use crate::ckks::rns::CkksContext;
+use crate::ckks::{Ciphertext, Encoder, Plaintext};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Table-1 measurement: op counts per HRF **linear** layer (the paper's
+/// Table 1 counts the linear layers; activation-polynomial costs are
+/// tracked separately in `activations`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerCounts {
+    pub layer1: OpCounts,
+    pub layer2: OpCounts,
+    pub layer3: OpCounts,
+    /// Combined cost of the two activation-polynomial evaluations.
+    pub activations: OpCounts,
+}
+
+impl LayerCounts {
+    /// (additions, multiplications, rotations) per layer — the exact
+    /// columns of Table 1.
+    pub fn table1_rows(&self) -> [(u64, u64, u64); 3] {
+        let row = |c: &OpCounts| (c.additions(), c.multiplications(), c.rotate);
+        [row(&self.layer1), row(&self.layer2), row(&self.layer3)]
+    }
+}
+
+/// Server-side evaluator bound to one packed model.
+pub struct HrfServer {
+    pub model: HrfModel,
+    /// Encoded-plaintext cache: the model operands are fixed and the
+    /// pipeline's (level, scale) schedule is deterministic, so each
+    /// operand is FFT-encoded exactly once per schedule point
+    /// (§Perf step 5 — encodes were ~40 % of an eval).
+    pt_cache: Mutex<HashMap<(u32, usize, u64), Plaintext>>,
+}
+
+/// Cache operand ids.
+const PT_T: u32 = 0;
+const PT_B: u32 = 1;
+const PT_DIAG0: u32 = 10; // +j
+const PT_W0: u32 = 1_000; // +c
+
+impl HrfServer {
+    pub fn new(model: HrfModel) -> Self {
+        HrfServer {
+            model,
+            pt_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Encode-with-cache. `scale` is quantized to bits for the key
+    /// (exact f64 scales at a given schedule point are identical).
+    fn cached_encode(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        id: u32,
+        slots: &[f64],
+        level: usize,
+        scale: f64,
+    ) -> Plaintext {
+        let key = (id, level, scale.to_bits());
+        if let Some(pt) = self.pt_cache.lock().unwrap().get(&key) {
+            return pt.clone();
+        }
+        let pt = enc.encode(ctx, slots, level, scale);
+        self.pt_cache
+            .lock()
+            .unwrap()
+            .insert(key, pt.clone());
+        pt
+    }
+
+    /// Evaluate the HRF on an encrypted input. Returns one ciphertext
+    /// per class (score in slot 0) plus per-layer op counts.
+    ///
+    /// Key material (`rlk`, `gk`) belongs to the client session.
+    pub fn eval(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        ct_in: &Ciphertext,
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+    ) -> (Vec<Ciphertext>, LayerCounts) {
+        let m = &self.model;
+        let p = &m.plan;
+        let delta = ev.ctx.params.scale;
+        let mut counts = LayerCounts::default();
+        let snap0 = ev.counts;
+
+        // ---- Layer 1: u = P(x̃ − t̃) --------------------------------
+        let t_pt =
+            self.cached_encode(&ev.ctx, enc, PT_T, &m.t_slots, ct_in.level, ct_in.scale);
+        let mut diff = ct_in.clone();
+        ev.sub_plain_inplace(&mut diff, &t_pt);
+        counts.layer1 = ev.counts.diff(&snap0);
+        let act0 = ev.counts;
+        let u = ev.eval_poly_power_basis(enc, &diff, &m.act_coeffs, rlk);
+        counts.activations = ev.counts.diff(&act0);
+        let snap1 = ev.counts;
+
+        // ---- Layer 2: Algorithm 1 (packed diagonal matmul) ---------
+        // acc = Σ_j diag_j ⊙ rot(u, j), products kept at scale u.scale·Δ,
+        // single rescale at the end, then + b̃ and activation.
+        // All K−1 rotations share the input u → hoist its key-switch
+        // decomposition once (§Perf step 3).
+        let hoisted = ev.hoist(&u);
+        let mut acc: Option<Ciphertext> = None;
+        for (j, diag) in m.diag_slots.iter().enumerate() {
+            let rotated = if j == 0 {
+                u.clone()
+            } else {
+                ev.rotate_hoisted(&u, &hoisted, j, gk)
+            };
+            let d_pt = self.cached_encode(
+                &ev.ctx,
+                enc,
+                PT_DIAG0 + j as u32,
+                diag,
+                rotated.level,
+                delta,
+            );
+            let mut term = ev.mul_plain(&rotated, &d_pt);
+            match &mut acc {
+                None => acc = Some(term),
+                Some(a) => {
+                    term.scale = a.scale;
+                    ev.add_inplace(a, &term);
+                }
+            }
+        }
+        let mut lin = acc.expect("K >= 1 diagonals");
+        ev.rescale(&mut lin);
+        let b_pt =
+            self.cached_encode(&ev.ctx, enc, PT_B, &m.b_slots, lin.level, lin.scale);
+        ev.add_plain_inplace(&mut lin, &b_pt);
+        counts.layer2 = ev.counts.diff(&snap1);
+        let act1 = ev.counts;
+        let v = ev.eval_poly_power_basis(enc, &lin, &m.act_coeffs, rlk);
+        {
+            let a = ev.counts.diff(&act1);
+            counts.activations = OpCounts {
+                add: counts.activations.add + a.add,
+                add_plain: counts.activations.add_plain + a.add_plain,
+                mul: counts.activations.mul + a.mul,
+                mul_plain: counts.activations.mul_plain + a.mul_plain,
+                rotate: counts.activations.rotate + a.rotate,
+                rescale: counts.activations.rescale + a.rescale,
+                relin: counts.activations.relin + a.relin,
+            };
+        }
+        let snap2 = ev.counts;
+
+        // ---- Layer 3: Algorithm 2 per class ------------------------
+        let mut outputs = Vec::with_capacity(p.c);
+        for ci in 0..p.c {
+            let w_pt = self.cached_encode(
+                &ev.ctx,
+                enc,
+                PT_W0 + ci as u32,
+                &m.w_slots[ci],
+                v.level,
+                delta,
+            );
+            let mut masked = ev.mul_plain(&v, &w_pt);
+            ev.rescale(&mut masked);
+            let summed = ev.rotate_sum(&masked, p.reduce_span, gk);
+            let beta_pt = enc.encode_constant(&ev.ctx, m.betas[ci], summed.level, summed.scale);
+            let mut out = summed;
+            ev.add_plain_inplace(&mut out, &beta_pt);
+            outputs.push(out);
+        }
+        counts.layer3 = ev.counts.diff(&snap2);
+
+        (outputs, counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::rns::CkksContext;
+    use crate::ckks::{CkksParams, Decryptor, Encryptor, KeyGenerator};
+    use crate::data::adult;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::hrf::client::{reshuffle_and_pack, HrfClient};
+    use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+    use crate::nrf::NeuralForest;
+
+    /// Full small-scale end-to-end: train, pack, encrypt, evaluate,
+    /// decrypt, compare with the plaintext slot model.
+    #[test]
+    fn hrf_eval_matches_plain_slot_model() {
+        let ds = adult::generate(1_500, 81);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 6,
+                tree: crate::forest::tree::TreeConfig {
+                    max_depth: 3,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            82,
+        );
+        // Degree-2 activation to fit the fast() depth-4 budget:
+        // L1 act (2 levels: x², coeff) … here power-basis deg2 -> horner
+        // deg2 = 2 levels; L2 mul+rescale 1; act 2 … exceeds depth 4, so
+        // use a linear "activation" for the depth check? No — use
+        // degree-2 and the hrf_default-like chain with N=8192:
+        let params = std::sync::Arc::new(CkksParams::build(
+            "test-n8192-d8",
+            8192,
+            60,
+            40,
+            8,
+            3.2,
+        ));
+        let ctx = CkksContext::new(params);
+        let enc = Encoder::new(&ctx);
+
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), ctx.n() / 2).unwrap();
+        let plan = hm.plan;
+
+        let mut kg = KeyGenerator::new(&ctx, 83);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+        let mut client = HrfClient::new(
+            Encryptor::new(pk, 84),
+            Decryptor::new(kg.secret_key()),
+        );
+        let server = HrfServer::new(hm);
+        let mut ev = Evaluator::new(ctx.clone());
+
+        for x in ds.x.iter().take(3) {
+            let ct = client.encrypt_input(&ctx, &enc, &server.model, x);
+            let (outs, counts) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+            let (scores, _) = client.decrypt_scores(&ctx, &enc, &outs);
+            let x_slots = reshuffle_and_pack(&server.model, x);
+            let expect = server.model.forward_slots_plain(&x_slots);
+            for (g, e) in scores.iter().zip(&expect) {
+                assert!(
+                    (g - e).abs() < 5e-3,
+                    "HE deviates from plain slot model: {scores:?} vs {expect:?}"
+                );
+            }
+            // Table 1 shape checks (layer 2: K muls, K-1 rotations).
+            let [_, l2, l3] = counts.table1_rows();
+            assert_eq!(l2.1, plan.k as u64, "layer2 multiplications");
+            assert_eq!(l2.2, (plan.k - 1) as u64, "layer2 rotations");
+            assert_eq!(l3.1, plan.c as u64, "layer3 multiplications");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! # Cryptotree
+//!
+//! A production-oriented reproduction of *"Cryptotree: fast and accurate
+//! predictions on encrypted structured data"* (Huynh, 2020).
+//!
+//! Cryptotree converts trained Random Forests (RF) into Neural Random
+//! Forests (NRF, Biau et al. 2016) and evaluates them under the CKKS
+//! leveled homomorphic encryption scheme as Homomorphic Random Forests
+//! (HRF). Everything the paper depends on is implemented here from
+//! scratch:
+//!
+//! * [`ckks`] — a complete leveled CKKS implementation (RNS/NTT
+//!   polynomial arithmetic, canonical-embedding encoder, hybrid
+//!   key-switching, rotations, rescaling) with per-operation counters.
+//! * [`forest`] — CART decision trees, bagged random forests, a logistic
+//!   regression baseline and classification metrics.
+//! * [`nrf`] — the RF → Neural Random Forest conversion (paper §2.2),
+//!   tanh/polynomial activations, last-layer fine-tuning with label
+//!   smoothing.
+//! * [`hrf`] — the paper's contribution (§3): slot packing, packed
+//!   matrix multiplication by diagonals (Algorithm 1), homomorphic dot
+//!   products (Algorithm 2) and full HRF evaluation (Algorithm 3), plus
+//!   a CryptoNet-style HE-MLP baseline used in §5.
+//! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
+//!   bounded queues with backpressure, per-client key sessions and
+//!   worker pool.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   slot-model (`artifacts/*.hlo.txt`) for the plaintext fast path and
+//!   cross-checking.
+//! * [`data`] — dataset plumbing and the synthetic Adult-Income
+//!   generator used in place of the UCI download (offline environment;
+//!   see DESIGN.md §Substitutions).
+//!
+//! Python/JAX/Pallas run only at build time (`make artifacts`); the
+//! request path is pure Rust.
+
+pub mod bench_harness;
+pub mod ckks;
+pub mod coordinator;
+pub mod data;
+pub mod forest;
+pub mod hrf;
+pub mod nrf;
+pub mod rng;
+pub mod runtime;

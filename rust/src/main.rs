@@ -1,0 +1,233 @@
+//! Cryptotree CLI — train, serve and demo Homomorphic Random Forests.
+//!
+//! ```text
+//! cryptotree demo   [--params fast|default|secure] [--trees N] [--rows N]
+//! cryptotree table1 [--k K --trees L]
+//! cryptotree info
+//! ```
+//!
+//! `demo` runs the full pipeline end to end (train RF → NRF → fine-tune
+//! → pack HRF → encrypted inference through the coordinator) on the
+//! synthetic Adult data. The heavier reproductions live in
+//! `cargo bench` and `examples/`.
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
+use cryptotree::data::adult;
+use cryptotree::forest::{metrics::Metrics, RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::{finetune_last_layer, FinetuneConfig, NeuralForest};
+use std::sync::Arc;
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i + 1 < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                flags.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn params_by_name(name: &str) -> std::sync::Arc<CkksParams> {
+    match name {
+        "toy" => CkksParams::toy(),
+        "fast" => CkksParams::fast(),
+        "secure" => CkksParams::secure128(),
+        _ => CkksParams::hrf_default(),
+    }
+}
+
+fn cmd_info() {
+    println!("cryptotree — Homomorphic Random Forests under CKKS");
+    for p in [
+        CkksParams::toy(),
+        CkksParams::fast(),
+        CkksParams::hrf_default(),
+        CkksParams::secure128(),
+    ] {
+        println!(
+            "  params {:<20} N={:<6} slots={:<6} depth={} logQP={:.0} security={}",
+            p.name,
+            p.n,
+            p.slots(),
+            p.depth(),
+            p.log_qp(),
+            p.security_estimate()
+        );
+    }
+}
+
+fn cmd_demo(args: &Args) {
+    let params = params_by_name(&args.get_str("params", "fast"));
+    let n_trees: usize = args.get("trees", 16);
+    let rows: usize = args.get("rows", 6_000);
+    let deg: usize = args.get("degree", if params.depth() >= 8 { 4 } else { 2 });
+
+    println!(
+        "== Cryptotree demo ({} trees, params {}) ==",
+        n_trees, params.name
+    );
+    let t0 = std::time::Instant::now();
+    let ds = adult::generate(rows, 1);
+    let (train, valid) = ds.split(0.8, 2);
+    println!(
+        "[{:7.2?}] synthetic Adult: {} train / {} valid",
+        t0.elapsed(),
+        train.len(),
+        valid.len()
+    );
+
+    let rf = RandomForest::fit(
+        &train,
+        &RandomForestConfig {
+            n_trees,
+            ..Default::default()
+        },
+        3,
+    );
+    println!(
+        "[{:7.2?}] RF trained (K={} leaves max)",
+        t0.elapsed(),
+        rf.max_leaves()
+    );
+
+    let coeffs = chebyshev_fit_tanh(3.0, deg);
+    let mut nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+    finetune_last_layer(&mut nf, &train, &FinetuneConfig::default(), 4);
+    println!("[{:7.2?}] NRF fine-tuned (K padded to {})", t0.elapsed(), nf.k);
+
+    let ctx = CkksContext::new(params.clone());
+    let enc = cryptotree::ckks::Encoder::new(&ctx);
+    let model =
+        HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).expect("packing");
+    let plan = model.plan;
+    println!(
+        "[{:7.2?}] packed: {} trees x block {} = {} of {} slots",
+        t0.elapsed(),
+        plan.l,
+        plan.block,
+        plan.used_slots,
+        plan.slots
+    );
+
+    let mut kg = KeyGenerator::new(&ctx, 5);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let mut client = HrfClient::new(Encryptor::new(pk, 6), Decryptor::new(kg.secret_key()));
+    println!(
+        "[{:7.2?}] client keys generated ({} rotations)",
+        t0.elapsed(),
+        plan.rotations_needed().len()
+    );
+
+    let sessions = Arc::new(SessionManager::new());
+    let sid = sessions.register(rlk, gk);
+    let server = Arc::new(HrfServer::new(model));
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        ctx.clone(),
+        server.clone(),
+        sessions.clone(),
+        None,
+    );
+
+    let n_eval = 5.min(valid.len());
+    let mut enc_preds = Vec::new();
+    for i in 0..n_eval {
+        let ct = client.encrypt_input(&ctx, &enc, &server.model, &valid.x[i]);
+        let rx = coord.submit_encrypted(sid, ct).expect("submit");
+        let outs = rx.recv().unwrap().expect("eval");
+        let (scores, pred) = client.decrypt_scores(&ctx, &enc, &outs);
+        enc_preds.push(pred);
+        println!(
+            "  sample {i}: scores {:?} -> class {pred} (truth {})",
+            scores.iter().map(|s| format!("{s:.4}")).collect::<Vec<_>>(),
+            valid.y[i]
+        );
+    }
+    let nrf_preds: Vec<usize> = (0..n_eval).map(|i| nf.predict(&valid.x[i])).collect();
+    let agree = enc_preds
+        .iter()
+        .zip(&nrf_preds)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "[{:7.2?}] HRF/NRF agreement on {n_eval} encrypted samples: {agree}/{n_eval}",
+        t0.elapsed()
+    );
+
+    let rf_pred = rf.predict_batch(&valid.x);
+    let m = Metrics::from_predictions(&rf_pred, &valid.y);
+    println!("RF validation accuracy {:.3} (F1 {:.3})", m.accuracy, m.f1);
+    let snapshot = coord.metrics.snapshot();
+    println!(
+        "coordinator: {} encrypted done, mean latency {:?}",
+        snapshot.encrypted_completed, snapshot.encrypted_mean
+    );
+    coord.shutdown();
+}
+
+fn cmd_table1(args: &Args) {
+    let k: usize = args.get("k", 16);
+    let l: usize = args.get("trees", 64);
+    let plan = cryptotree::hrf::HrfPlan::new(k, l, 2, 14, 8192).expect("plan");
+    let [l1, l2, l3] = plan.table1_formulas();
+    println!("Table 1 (paper formulas) for K={k}, L={l}, C=2:");
+    println!(
+        "  {:<22} {:>10} {:>15} {:>10}",
+        "layer", "additions", "multiplications", "rotations"
+    );
+    for (name, row) in [
+        ("first linear layer", l1),
+        ("second linear layer", l2),
+        ("third linear layer", l3),
+    ] {
+        println!("  {:<22} {:>10} {:>15} {:>10}", name, row.0, row.1, row.2);
+    }
+    println!("(measured counterparts: `cargo bench --bench table1_opcounts`)");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("info");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "demo" => cmd_demo(&args),
+        "table1" => cmd_table1(&args),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command `{other}` — use demo | table1 | info");
+            std::process::exit(2);
+        }
+    }
+}

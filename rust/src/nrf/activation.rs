@@ -1,0 +1,177 @@
+//! Activation functions and the Chebyshev polynomial machinery used to
+//! approximate `tanh(a·x)` on `[-1, 1]` (paper §3: "polynomial
+//! approximation P of degree m of the regular activation φ_a").
+
+/// Activation used by NRF forward passes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Activation {
+    /// φ(x) = 2·1[x ≥ 0] − 1 — reproduces the tree exactly.
+    Hard,
+    /// φ_a(x) = tanh(a x).
+    Tanh { a: f64 },
+    /// Monomial coefficients c_0 + c_1 x + … + c_m x^m on [-1, 1]
+    /// (what the HRF evaluates homomorphically).
+    Poly { coeffs: Vec<f64> },
+}
+
+impl Activation {
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Activation::Hard => {
+                if x >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            Activation::Tanh { a } => (a * x).tanh(),
+            Activation::Poly { coeffs } => horner(coeffs, x),
+        }
+    }
+
+    /// The polynomial CKKS evaluates for this activation (identity for
+    /// `Poly`, Chebyshev fit for `Tanh`, panic for `Hard` — hard sign
+    /// has no polynomial form).
+    pub fn to_poly(&self, degree: usize) -> Vec<f64> {
+        match self {
+            Activation::Poly { coeffs } => coeffs.clone(),
+            Activation::Tanh { a } => chebyshev_fit_tanh(*a, degree),
+            Activation::Hard => panic!("hard sign is not polynomial"),
+        }
+    }
+}
+
+/// Evaluate Σ c_i x^i.
+pub fn horner(coeffs: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+/// Chebyshev interpolation of an arbitrary function on [-1, 1],
+/// returned as monomial coefficients (degree ≤ 16 keeps the basis
+/// conversion numerically safe; HRF uses degree ≤ 8).
+pub fn chebyshev_fit<F: Fn(f64) -> f64>(f: F, degree: usize) -> Vec<f64> {
+    assert!(degree <= 16, "monomial conversion unstable beyond 16");
+    let m = degree + 1;
+    // Chebyshev nodes & coefficients.
+    let nodes: Vec<f64> = (0..m)
+        .map(|i| (std::f64::consts::PI * (i as f64 + 0.5) / m as f64).cos())
+        .collect();
+    let fvals: Vec<f64> = nodes.iter().map(|&x| f(x)).collect();
+    let mut cheb = vec![0.0f64; m];
+    for (j, c) in cheb.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += fvals[i]
+                * (std::f64::consts::PI * j as f64 * (i as f64 + 0.5) / m as f64).cos();
+        }
+        *c = 2.0 * s / m as f64;
+    }
+    cheb[0] *= 0.5;
+    // Convert Σ c_j T_j(x) to monomial basis via T recurrence.
+    // t_prev = T_{j-1}, t_cur = T_j as monomial coefficient vectors.
+    let mut mono = vec![0.0f64; m];
+    let mut t_prev = vec![0.0f64; m]; // T_0 = 1
+    t_prev[0] = 1.0;
+    let mut t_cur = vec![0.0f64; m]; // T_1 = x
+    if m > 1 {
+        t_cur[1] = 1.0;
+    }
+    mono[0] += cheb[0] * t_prev[0];
+    if m > 1 {
+        for (mo, tc) in mono.iter_mut().zip(&t_cur) {
+            *mo += cheb[1] * tc;
+        }
+    }
+    for j in 2..m {
+        // T_j = 2x T_{j-1} - T_{j-2}
+        let mut t_next = vec![0.0f64; m];
+        for i in 0..m - 1 {
+            t_next[i + 1] += 2.0 * t_cur[i];
+        }
+        for i in 0..m {
+            t_next[i] -= t_prev[i];
+        }
+        for (mo, tn) in mono.iter_mut().zip(&t_next) {
+            *mo += cheb[j] * tn;
+        }
+        t_prev = t_cur;
+        t_cur = t_next;
+    }
+    mono
+}
+
+/// Chebyshev fit of tanh(a·x) on [-1, 1].
+pub fn chebyshev_fit_tanh(a: f64, degree: usize) -> Vec<f64> {
+    chebyshev_fit(|x| (a * x).tanh(), degree)
+}
+
+/// Max |P(x) − tanh(ax)| over a grid — used by tests and the
+/// activation-degree ablation.
+pub fn fit_error(a: f64, coeffs: &[f64], grid: usize) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..=grid {
+        let x = -1.0 + 2.0 * i as f64 / grid as f64;
+        worst = worst.max((horner(coeffs, x) - (a * x).tanh()).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hard_sign() {
+        let h = Activation::Hard;
+        assert_eq!(h.apply(0.3), 1.0);
+        assert_eq!(h.apply(0.0), 1.0);
+        assert_eq!(h.apply(-0.2), -1.0);
+    }
+
+    #[test]
+    fn cheb_fit_polynomial_is_exact() {
+        // Fitting a degree-3 polynomial with degree 3 must be exact.
+        let target = |x: f64| 0.5 - 0.3 * x + 0.25 * x * x - 0.7 * x * x * x;
+        let c = chebyshev_fit(target, 3);
+        for i in 0..=20 {
+            let x = -1.0 + 0.1 * i as f64;
+            assert!((horner(&c, x) - target(x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tanh_fit_error_decreases_with_degree() {
+        let a = 3.0;
+        let e3 = fit_error(a, &chebyshev_fit_tanh(a, 3), 200);
+        let e5 = fit_error(a, &chebyshev_fit_tanh(a, 5), 200);
+        let e9 = fit_error(a, &chebyshev_fit_tanh(a, 9), 200);
+        assert!(e5 < e3);
+        assert!(e9 < e5);
+        assert!(e9 < 0.08, "degree-9 fit error {e9}");
+    }
+
+    #[test]
+    fn tanh_fit_is_odd_dominated() {
+        // tanh is odd: even monomial coefficients should be ~0.
+        let c = chebyshev_fit_tanh(2.0, 6);
+        assert!(c[0].abs() < 1e-12);
+        assert!(c[2].abs() < 1e-12);
+        assert!(c[4].abs() < 1e-12);
+        assert!(c[1].abs() > 0.5);
+    }
+
+    #[test]
+    fn poly_activation_bounded_on_domain() {
+        // The HRF requires |P(x)| bounded on [-1,1]; sanity-check a
+        // default fit stays within [-1.3, 1.3].
+        let c = chebyshev_fit_tanh(3.0, 4);
+        for i in 0..=100 {
+            let x = -1.0 + 0.02 * i as f64;
+            assert!(horner(&c, x).abs() < 1.3);
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! CART tree → Neural-Random-Forest parameters (paper eqs. 1–4).
+//!
+//! For a tree with `K` leaves and `K−1` internal nodes:
+//!
+//! * `tau[k]`, `t[k]` — feature index & threshold of comparison `k`;
+//! * `v[k'][k] ∈ {±1/2l(k'), 0}` — leaf-localization weights: nonzero
+//!   iff comparison `k` lies on the path to leaf `k'`, sign +1 for a
+//!   right turn; pre-divided by `2l(k')` together with
+//!   `b[k'] = (−l(k') + ½) / 2l(k')` so the linear output of eq. 2
+//!   stays in `[-1, 1]` (eq. 3, the paper's normalization for
+//!   polynomial activations);
+//! * `w[c][k'] = μ_{c,k'}/2`, `beta[c] = ½ Σ_{k'} μ_{c,k'}` — output
+//!   weights chosen so that with the ±1 one-hot `v`, the tree output
+//!   is exactly the leaf's class distribution `μ_{·,leaf}`.
+//!
+//! Trees are padded to a common leaf count `K` with "dead" leaves
+//! (zero weights, bias −1 ⇒ unit permanently inactive, zero output
+//! weight) so all trees share one packed layout (paper §3 assumes
+//! "all trees have been padded to the same number of leaves").
+
+use crate::forest::tree::{DecisionTree, Node};
+
+/// NRF parameters of a single tree (already normalized for [-1,1]).
+#[derive(Clone, Debug)]
+pub struct NeuralTree {
+    /// Feature index per comparison (len = n_comparisons ≤ K-1).
+    pub tau: Vec<usize>,
+    /// Threshold per comparison.
+    pub t: Vec<f64>,
+    /// Leaf-localization weights, `v[leaf][comparison]`, normalized.
+    pub v: Vec<Vec<f64>>,
+    /// Leaf biases, normalized.
+    pub b: Vec<f64>,
+    /// Output weights `w[class][leaf]` (= μ/2; 0 for padded leaves).
+    pub w: Vec<Vec<f64>>,
+    /// Output biases per class (= ½ Σ μ over real leaves).
+    pub beta: Vec<f64>,
+    /// Number of real (non-padding) leaves.
+    pub real_leaves: usize,
+    pub n_classes: usize,
+}
+
+impl NeuralTree {
+    /// Convert a CART tree. `k_target` pads the leaf count (0 = no
+    /// padding). Comparisons are padded to `k_target − 1` with dummy
+    /// (feature 0, threshold 0) rows that carry zero weight everywhere.
+    pub fn from_tree(tree: &DecisionTree, k_target: usize) -> Self {
+        // Enumerate internal nodes (comparisons) and leaves.
+        let mut comp_of_node = vec![usize::MAX; tree.nodes.len()];
+        let mut tau = Vec::new();
+        let mut t = Vec::new();
+        let mut leaves = Vec::new(); // node ids
+        for (id, n) in tree.nodes.iter().enumerate() {
+            match n {
+                Node::Internal {
+                    feature, threshold, ..
+                } => {
+                    comp_of_node[id] = tau.len();
+                    tau.push(*feature);
+                    t.push(*threshold);
+                }
+                Node::Leaf { .. } => leaves.push(id),
+            }
+        }
+        let n_comp = tau.len();
+        let k_real = leaves.len();
+        let k = if k_target == 0 {
+            k_real
+        } else {
+            assert!(
+                k_target >= k_real,
+                "k_target {k_target} < leaves {k_real}"
+            );
+            k_target
+        };
+        let n_comp_padded = if k_target == 0 { n_comp } else { k - 1 };
+        assert!(n_comp <= n_comp_padded);
+        // Pad comparisons with dummies.
+        let mut tau_p = tau.clone();
+        let mut t_p = t.clone();
+        tau_p.resize(n_comp_padded, 0);
+        t_p.resize(n_comp_padded, 0.0);
+
+        // Walk root→leaf paths to build V and b.
+        let c = tree.n_classes;
+        let mut v = vec![vec![0.0f64; n_comp_padded]; k];
+        let mut b = vec![0.0f64; k];
+        let mut w = vec![vec![0.0f64; k]; c];
+        let mut beta = vec![0.0f64; c];
+
+        // DFS with path of (comparison index, went_right).
+        let mut stack: Vec<(usize, Vec<(usize, bool)>)> = vec![(tree.root(), Vec::new())];
+        let mut leaf_counter = 0usize;
+        while let Some((id, path)) = stack.pop() {
+            match &tree.nodes[id] {
+                Node::Internal { left, right, .. } => {
+                    let kc = comp_of_node[id];
+                    let mut lp = path.clone();
+                    lp.push((kc, false));
+                    stack.push((*left, lp));
+                    let mut rp = path;
+                    rp.push((kc, true));
+                    stack.push((*right, rp));
+                }
+                Node::Leaf { dist, .. } => {
+                    let leaf = leaf_counter;
+                    leaf_counter += 1;
+                    let l = path.len().max(1) as f64;
+                    let norm = 2.0 * l;
+                    for &(kc, right) in &path {
+                        v[leaf][kc] = if right { 1.0 } else { -1.0 } / norm;
+                    }
+                    b[leaf] = (-l + 0.5) / norm;
+                    for ci in 0..c {
+                        w[ci][leaf] = dist[ci] / 2.0;
+                        beta[ci] += dist[ci] / 2.0;
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(leaf_counter, k_real);
+        // Padded (dead) leaves: zero weights, bias −1 ⇒ φ(−1) ≈ −1,
+        // zero output weight ⇒ no contribution.
+        for leaf in k_real..k {
+            b[leaf] = -1.0;
+        }
+        NeuralTree {
+            tau: tau_p,
+            t: t_p,
+            v,
+            b,
+            w,
+            beta,
+            real_leaves: k_real,
+            n_classes: c,
+        }
+    }
+
+    /// Number of (padded) leaves K.
+    pub fn k(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Number of (padded) comparisons (= K−1 when padded).
+    pub fn n_comparisons(&self) -> usize {
+        self.tau.len()
+    }
+
+    /// Comparison-layer linear output: x_{τ(k)} − t_k (eq. 1, inside φ).
+    pub fn comparisons(&self, x: &[f64]) -> Vec<f64> {
+        self.tau
+            .iter()
+            .zip(&self.t)
+            .map(|(&f, &thr)| x[f] - thr)
+            .collect()
+    }
+
+    /// Leaf-localization linear output given activated comparisons u
+    /// (eq. 2 inside φ, already normalized into [-1,1]).
+    pub fn leaf_scores(&self, u: &[f64]) -> Vec<f64> {
+        self.v
+            .iter()
+            .zip(&self.b)
+            .map(|(row, &bias)| row.iter().zip(u).map(|(w, u)| w * u).sum::<f64>() + bias)
+            .collect()
+    }
+
+    /// Output layer given activated leaf indicators v (eq. 4).
+    pub fn output(&self, v_act: &[f64]) -> Vec<f64> {
+        (0..self.n_classes)
+            .map(|c| {
+                self.w[c]
+                    .iter()
+                    .zip(v_act)
+                    .map(|(w, v)| w * v)
+                    .sum::<f64>()
+                    + self.beta[c]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::adult;
+    use crate::forest::tree::{DecisionTree, TreeConfig};
+    use crate::nrf::activation::Activation;
+    use crate::rng::Xoshiro256pp;
+
+    fn forward_hard(nt: &NeuralTree, x: &[f64]) -> Vec<f64> {
+        let act = Activation::Hard;
+        let u: Vec<f64> = nt.comparisons(x).iter().map(|&z| act.apply(z)).collect();
+        let v: Vec<f64> = nt.leaf_scores(&u).iter().map(|&z| act.apply(z)).collect();
+        nt.output(&v)
+    }
+
+    #[test]
+    fn hard_nrf_equals_tree_exactly() {
+        // E7 (Fig. 2): the NRF with hard activations reproduces the
+        // tree's output distribution on every input.
+        let ds = adult::generate(3_000, 31);
+        let mut rng = Xoshiro256pp::new(32);
+        for depth in [2usize, 3, 4] {
+            let cfg = TreeConfig {
+                max_depth: depth,
+                ..Default::default()
+            };
+            let tree = DecisionTree::fit(&ds, &cfg, &mut rng);
+            let nt = NeuralTree::from_tree(&tree, 0);
+            for x in ds.x.iter().take(300) {
+                let expect = tree.predict_proba(x);
+                let got = forward_hard(&nt, x);
+                for (g, e) in got.iter().zip(&expect) {
+                    assert!(
+                        (g - e).abs() < 1e-9,
+                        "depth {depth}: {got:?} vs {expect:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_preserves_output() {
+        let ds = adult::generate(2_000, 33);
+        let mut rng = Xoshiro256pp::new(34);
+        let tree = DecisionTree::fit(
+            &ds,
+            &TreeConfig {
+                max_depth: 3,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let plain = NeuralTree::from_tree(&tree, 0);
+        let padded = NeuralTree::from_tree(&tree, 16);
+        assert_eq!(padded.k(), 16);
+        assert_eq!(padded.n_comparisons(), 15);
+        for x in ds.x.iter().take(200) {
+            let a = forward_hard(&plain, x);
+            let b = forward_hard(&padded, x);
+            for (x1, x2) in a.iter().zip(&b) {
+                assert!((x1 - x2).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn eq3_linear_output_in_unit_interval() {
+        // Paper eq. 3 after normalization: leaf scores ∈ [-1, 1] for
+        // ±1 comparison inputs.
+        let ds = adult::generate(2_000, 35);
+        let mut rng = Xoshiro256pp::new(36);
+        let tree = DecisionTree::fit(&ds, &TreeConfig::default(), &mut rng);
+        let nt = NeuralTree::from_tree(&tree, 16);
+        let act = Activation::Hard;
+        for x in ds.x.iter().take(300) {
+            let u: Vec<f64> = nt.comparisons(x).iter().map(|&z| act.apply(z)).collect();
+            for &s in &nt.leaf_scores(&u) {
+                assert!((-1.0..=1.0).contains(&s), "leaf score {s} out of [-1,1]");
+            }
+        }
+    }
+
+    #[test]
+    fn exactly_one_active_leaf() {
+        let ds = adult::generate(1_000, 37);
+        let mut rng = Xoshiro256pp::new(38);
+        let tree = DecisionTree::fit(&ds, &TreeConfig::default(), &mut rng);
+        let nt = NeuralTree::from_tree(&tree, 16);
+        let act = Activation::Hard;
+        for x in ds.x.iter().take(200) {
+            let u: Vec<f64> = nt.comparisons(x).iter().map(|&z| act.apply(z)).collect();
+            let active = nt
+                .leaf_scores(&u)
+                .iter()
+                .filter(|&&s| s >= 0.0)
+                .count();
+            assert_eq!(active, 1, "exactly one leaf must activate");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Last-layer fine-tuning with label smoothing (paper §4).
+//!
+//! The paper fine-tunes *only* the output layer ("we only fine tuned
+//! the last linear layer, as we do not compute any polynomial after
+//! that" — the [-1,1] domain constraint of eqs. 1–3 stays intact) and
+//! trains with label smoothing so the winning class score is pushed
+//! away from the others, making CKKS noise less likely to flip the
+//! argmax (the 97.5 % HRF/NRF agreement).
+//!
+//! With the lower layers frozen, the problem is softmax regression on
+//! the precomputed leaf features (length L·K): plain mini-batch
+//! gradient descent suffices.
+
+use super::model::NeuralForest;
+use crate::data::Dataset;
+use crate::rng::Xoshiro256pp;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FinetuneConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub batch: usize,
+    /// Label-smoothing ε (paper cites Szegedy et al. 2016).
+    pub label_smoothing: f64,
+    pub l2: f64,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig {
+            epochs: 20,
+            lr: 0.2,
+            batch: 128,
+            label_smoothing: 0.1,
+            l2: 1e-6,
+        }
+    }
+}
+
+fn softmax(z: &[f64]) -> Vec<f64> {
+    let m = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = z.iter().map(|&v| (v - m).exp()).collect();
+    let s: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// Fine-tune the output layer of `nf` in place on `ds`; returns the
+/// final mean training cross-entropy.
+///
+/// Gradients flow into each tree's `w[c][k']` and `beta[c]`,
+/// α-weighted exactly as the forward pass combines them.
+pub fn finetune_last_layer(
+    nf: &mut NeuralForest,
+    ds: &Dataset,
+    cfg: &FinetuneConfig,
+    seed: u64,
+) -> f64 {
+    let n = ds.len();
+    let k = nf.k;
+    let c = nf.n_classes;
+    let eps = cfg.label_smoothing;
+
+    // Precompute leaf features once — lower layers are frozen.
+    let feats: Vec<Vec<f64>> = ds.x.iter().map(|x| nf.leaf_features(x)).collect();
+
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut last_loss = f64::INFINITY;
+    // Gradients arrive α-scaled (α ≈ 1/L); rescale the step so the
+    // effective learning rate is independent of the forest size.
+    let lr = cfg.lr * nf.trees.len() as f64;
+    for _ in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        for chunk in order.chunks(cfg.batch) {
+            // Accumulate gradients over the chunk.
+            let l_trees = nf.trees.len();
+            let mut gw = vec![vec![vec![0.0f64; k]; c]; l_trees];
+            let mut gbeta = vec![vec![0.0f64; c]; l_trees];
+            for &i in chunk {
+                let scores = nf.output_from_features(&feats[i]);
+                let probs = softmax(&scores);
+                // Smoothed target.
+                for ci in 0..c {
+                    let target = if ci == ds.y[i] {
+                        1.0 - eps + eps / c as f64
+                    } else {
+                        eps / c as f64
+                    };
+                    epoch_loss -= target * probs[ci].max(1e-12).ln();
+                    let err = probs[ci] - target;
+                    // d score_c / d w[l][c][k'] = α_l · v_feat
+                    for l in 0..l_trees {
+                        let a = nf.alphas[l];
+                        let block = &feats[i][l * k..(l + 1) * k];
+                        for (g, &v) in gw[l][ci].iter_mut().zip(block) {
+                            *g += err * a * v;
+                        }
+                        gbeta[l][ci] += err * a;
+                    }
+                }
+            }
+            let scale = lr / chunk.len() as f64;
+            for l in 0..l_trees {
+                for ci in 0..c {
+                    for (wv, g) in nf.trees[l].w[ci].iter_mut().zip(&gw[l][ci]) {
+                        *wv -= scale * g + lr * cfg.l2 * *wv;
+                    }
+                    nf.trees[l].beta[ci] -= scale * gbeta[l][ci];
+                }
+            }
+        }
+        last_loss = epoch_loss / n as f64;
+    }
+    last_loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::adult;
+    use crate::forest::{metrics::Metrics, RandomForest, RandomForestConfig};
+    use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+    use crate::nrf::model::NeuralForest;
+
+    #[test]
+    fn finetune_improves_poly_nrf() {
+        // E2 precondition: fine-tuning the last layer recovers the
+        // accuracy lost to soft/polynomial activations.
+        let ds = adult::generate(6_000, 51);
+        let (train, valid) = ds.split(0.8, 52);
+        let rf = RandomForest::fit(
+            &train,
+            &RandomForestConfig {
+                n_trees: 24,
+                ..Default::default()
+            },
+            53,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let mut nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+
+        let acc = |nf: &NeuralForest| {
+            let pred = nf.predict_batch(&valid.x);
+            Metrics::from_predictions(&pred, &valid.y).accuracy
+        };
+        let before = acc(&nf);
+        let loss = finetune_last_layer(&mut nf, &train, &FinetuneConfig::default(), 54);
+        let after = acc(&nf);
+        assert!(loss.is_finite());
+        assert!(
+            after >= before - 1e-9,
+            "fine-tune regressed: {before} -> {after}"
+        );
+        assert!(after > 0.78, "post-finetune accuracy {after}");
+    }
+
+    #[test]
+    fn label_smoothing_widens_margins() {
+        let ds = adult::generate(3_000, 55);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 8,
+                ..Default::default()
+            },
+            56,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let margin = |nf: &NeuralForest| -> f64 {
+            ds.x.iter()
+                .take(200)
+                .map(|x| {
+                    let s = nf.forward(x);
+                    (s[0] - s[1]).abs()
+                })
+                .sum::<f64>()
+                / 200.0
+        };
+        let mut nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let m_before = margin(&nf);
+        finetune_last_layer(
+            &mut nf,
+            &ds,
+            &FinetuneConfig {
+                epochs: 15,
+                ..Default::default()
+            },
+            57,
+        );
+        let m_after = margin(&nf);
+        assert!(
+            m_after > m_before,
+            "margins did not widen: {m_before} -> {m_after}"
+        );
+    }
+}

@@ -1,0 +1,243 @@
+//! NeuralForest serialization — train once, deploy anywhere.
+//!
+//! A deliberately simple, versioned, line-oriented text format (no
+//! serde offline): floats are written with full `{:e}` precision so a
+//! round-trip is bit-exact. The *server* ships this file; thresholds
+//! and leaf weights stay with the model owner (clients only ever learn
+//! τ, the variable-selection map — paper §3).
+
+use super::activation::Activation;
+use super::convert::NeuralTree;
+use super::model::NeuralForest;
+use std::fmt::Write as _;
+use std::path::Path;
+
+const MAGIC: &str = "cryptotree-nrf v1";
+
+/// Serialize to the text format.
+pub fn to_string(nf: &NeuralForest) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{MAGIC}");
+    let (act_tag, act_params): (&str, Vec<f64>) = match &nf.activation {
+        Activation::Hard => ("hard", vec![]),
+        Activation::Tanh { a } => ("tanh", vec![*a]),
+        Activation::Poly { coeffs } => ("poly", coeffs.clone()),
+    };
+    let _ = writeln!(
+        s,
+        "forest trees={} k={} classes={} activation={act_tag}",
+        nf.trees.len(),
+        nf.k,
+        nf.n_classes
+    );
+    let _ = writeln!(s, "act_params {}", join(&act_params));
+    let _ = writeln!(s, "alphas {}", join(&nf.alphas));
+    for (i, t) in nf.trees.iter().enumerate() {
+        let _ = writeln!(s, "tree {i} real_leaves={}", t.real_leaves);
+        let tau: Vec<f64> = t.tau.iter().map(|&x| x as f64).collect();
+        let _ = writeln!(s, "tau {}", join(&tau));
+        let _ = writeln!(s, "t {}", join(&t.t));
+        for row in &t.v {
+            let _ = writeln!(s, "v {}", join(row));
+        }
+        let _ = writeln!(s, "b {}", join(&t.b));
+        for row in &t.w {
+            let _ = writeln!(s, "w {}", join(row));
+        }
+        let _ = writeln!(s, "beta {}", join(&t.beta));
+    }
+    s
+}
+
+fn join(xs: &[f64]) -> String {
+    xs.iter()
+        .map(|x| format!("{x:e}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Parse the text format.
+pub fn from_str(text: &str) -> Result<NeuralForest, String> {
+    let mut lines = text.lines();
+    if lines.next() != Some(MAGIC) {
+        return Err("bad magic: not a cryptotree-nrf v1 file".into());
+    }
+    let header = lines.next().ok_or("missing forest header")?;
+    let get_kv = |line: &str, key: &str| -> Result<String, String> {
+        line.split_whitespace()
+            .find_map(|tok| tok.strip_prefix(&format!("{key}=")).map(str::to_string))
+            .ok_or(format!("missing {key}= in `{line}`"))
+    };
+    let n_trees: usize = get_kv(header, "trees")?.parse().map_err(|e| format!("{e}"))?;
+    let k: usize = get_kv(header, "k")?.parse().map_err(|e| format!("{e}"))?;
+    let n_classes: usize = get_kv(header, "classes")?
+        .parse()
+        .map_err(|e| format!("{e}"))?;
+    let act_tag = get_kv(header, "activation")?;
+
+    let parse_vec = |line: &str, tag: &str| -> Result<Vec<f64>, String> {
+        let rest = line
+            .strip_prefix(tag)
+            .ok_or(format!("expected `{tag}`, got `{line}`"))?;
+        rest.split_whitespace()
+            .map(|t| t.parse::<f64>().map_err(|e| format!("bad float {t}: {e}")))
+            .collect()
+    };
+    let act_params = parse_vec(lines.next().ok_or("missing act_params")?, "act_params")?;
+    let activation = match act_tag.as_str() {
+        "hard" => Activation::Hard,
+        "tanh" => Activation::Tanh {
+            a: *act_params.first().ok_or("tanh needs a parameter")?,
+        },
+        "poly" => Activation::Poly { coeffs: act_params },
+        other => return Err(format!("unknown activation `{other}`")),
+    };
+    let alphas = parse_vec(lines.next().ok_or("missing alphas")?, "alphas")?;
+    if alphas.len() != n_trees {
+        return Err(format!("{} alphas for {} trees", alphas.len(), n_trees));
+    }
+
+    let mut trees = Vec::with_capacity(n_trees);
+    for i in 0..n_trees {
+        let th = lines.next().ok_or(format!("missing tree {i} header"))?;
+        if !th.starts_with(&format!("tree {i} ")) {
+            return Err(format!("expected `tree {i}`, got `{th}`"));
+        }
+        let real_leaves: usize = get_kv(th, "real_leaves")?
+            .parse()
+            .map_err(|e| format!("{e}"))?;
+        let tau_f = parse_vec(lines.next().ok_or("missing tau")?, "tau")?;
+        let tau: Vec<usize> = tau_f.iter().map(|&x| x as usize).collect();
+        let t = parse_vec(lines.next().ok_or("missing t")?, "t")?;
+        if t.len() != k - 1 {
+            return Err(format!("tree {i}: {} thresholds, expected {}", t.len(), k - 1));
+        }
+        let mut v = Vec::with_capacity(k);
+        for _ in 0..k {
+            v.push(parse_vec(lines.next().ok_or("missing v row")?, "v")?);
+        }
+        let b = parse_vec(lines.next().ok_or("missing b")?, "b")?;
+        let mut w = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            w.push(parse_vec(lines.next().ok_or("missing w row")?, "w")?);
+        }
+        let beta = parse_vec(lines.next().ok_or("missing beta")?, "beta")?;
+        if b.len() != k || beta.len() != n_classes {
+            return Err(format!("tree {i}: inconsistent dimensions"));
+        }
+        trees.push(NeuralTree {
+            tau,
+            t,
+            v,
+            b,
+            w,
+            beta,
+            real_leaves,
+            n_classes,
+        });
+    }
+    Ok(NeuralForest {
+        trees,
+        alphas,
+        k,
+        n_classes,
+        activation,
+    })
+}
+
+/// Save to a file.
+pub fn save(nf: &NeuralForest, path: impl AsRef<Path>) -> std::io::Result<()> {
+    std::fs::write(path, to_string(nf))
+}
+
+/// Load from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<NeuralForest, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    from_str(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::adult;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::nrf::activation::chebyshev_fit_tanh;
+
+    fn sample_forest() -> NeuralForest {
+        let ds = adult::generate(800, 91);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 5,
+                ..Default::default()
+            },
+            92,
+        );
+        NeuralForest::from_forest(
+            &rf,
+            Activation::Poly {
+                coeffs: chebyshev_fit_tanh(3.0, 4),
+            },
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let nf = sample_forest();
+        let text = to_string(&nf);
+        let back = from_str(&text).expect("parse");
+        assert_eq!(back.k, nf.k);
+        assert_eq!(back.n_classes, nf.n_classes);
+        assert_eq!(back.alphas, nf.alphas);
+        assert_eq!(back.activation, nf.activation);
+        // Bit-exact predictions on real inputs.
+        let ds = adult::generate(100, 93);
+        for x in &ds.x {
+            assert_eq!(nf.forward(x), back.forward(x));
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let nf = sample_forest();
+        let path = std::env::temp_dir().join("cryptotree_nrf_io_test.txt");
+        save(&nf, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.trees.len(), nf.trees.len());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(from_str("not a model\n").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let nf = sample_forest();
+        let text = to_string(&nf);
+        let cut = &text[..text.len() / 2];
+        // Truncation must produce an error, never a silently-partial model.
+        assert!(from_str(cut).is_err());
+    }
+
+    #[test]
+    fn rejects_dimension_mismatch() {
+        let nf = sample_forest();
+        let mut text = to_string(&nf);
+        // Corrupt the header's tree count.
+        text = text.replace("trees=5", "trees=6");
+        assert!(from_str(&text).is_err());
+    }
+
+    #[test]
+    fn tanh_and_hard_activations_roundtrip() {
+        let mut nf = sample_forest();
+        nf.activation = Activation::Tanh { a: 2.5 };
+        let back = from_str(&to_string(&nf)).unwrap();
+        assert_eq!(back.activation, Activation::Tanh { a: 2.5 });
+        nf.activation = Activation::Hard;
+        let back = from_str(&to_string(&nf)).unwrap();
+        assert_eq!(back.activation, Activation::Hard);
+    }
+}

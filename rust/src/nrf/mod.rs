@@ -1,0 +1,30 @@
+//! Neural Random Forests (paper §2.2, after Biau–Scornet–Welbl 2016).
+//!
+//! A trained CART tree with `K` leaves becomes a 2-hidden-layer
+//! network:
+//!
+//! 1. comparison layer — `u_k = φ(x_{τ(k)} − t_k)`, one unit per
+//!    internal node (eq. 1);
+//! 2. leaf-localization layer — `v_{k'} = φ(Σ V_{k,k'} u_k + b_{k'})`,
+//!    one unit per leaf, exactly one active (eq. 2), with weights and
+//!    bias pre-divided by `2l(k')` so the linear output lies in
+//!    `[-1, 1]` (eq. 3) — the precondition for polynomial activations
+//!    under CKKS;
+//! 3. output layer — per-class dot product with the leaf
+//!    distributions (eqs. 4–5).
+//!
+//! Activations: hard sign (exact tree), `tanh(a·)` (differentiable),
+//! or a Chebyshev polynomial fit of `tanh(a·)` (the HE-compatible
+//! form). Only the output layer is fine-tuned (paper §4), with label
+//! smoothing.
+
+pub mod activation;
+pub mod convert;
+pub mod finetune;
+pub mod io;
+pub mod model;
+
+pub use activation::{chebyshev_fit_tanh, Activation};
+pub use convert::NeuralTree;
+pub use finetune::{finetune_last_layer, FinetuneConfig};
+pub use model::NeuralForest;

@@ -1,0 +1,182 @@
+//! The Neural Random Forest: all trees of a random forest converted to
+//! [`NeuralTree`]s with a shared padded leaf count, evaluated in
+//! parallel and α-combined (paper eq. 5).
+
+use super::activation::Activation;
+use super::convert::NeuralTree;
+use crate::forest::tree::argmax;
+use crate::forest::RandomForest;
+
+/// A forest of neural trees with shared K and per-tree weights α.
+#[derive(Clone, Debug)]
+pub struct NeuralForest {
+    pub trees: Vec<NeuralTree>,
+    pub alphas: Vec<f64>,
+    /// Shared (padded) leaf count.
+    pub k: usize,
+    pub n_classes: usize,
+    /// Activation used in plaintext forward passes.
+    pub activation: Activation,
+}
+
+impl NeuralForest {
+    /// Convert a trained RF. Every tree is padded to the forest's max
+    /// leaf count rounded up to the next power of two (power-of-two K
+    /// keeps the HRF's rotate-and-sum exact and the slot blocks
+    /// aligned).
+    pub fn from_forest(rf: &RandomForest, activation: Activation) -> Self {
+        let k_max = rf.max_leaves().max(2);
+        let k = k_max.next_power_of_two();
+        let trees: Vec<NeuralTree> = rf
+            .trees
+            .iter()
+            .map(|t| NeuralTree::from_tree(t, k))
+            .collect();
+        NeuralForest {
+            trees,
+            alphas: rf.alphas.clone(),
+            k,
+            n_classes: rf.n_classes,
+            activation,
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Per-tree activated leaf indicators — the "feature vector" the
+    /// output layer (and its fine-tuning) consumes. Length L·K.
+    pub fn leaf_features(&self, x: &[f64]) -> Vec<f64> {
+        let mut feats = Vec::with_capacity(self.trees.len() * self.k);
+        for nt in &self.trees {
+            let u: Vec<f64> = nt
+                .comparisons(x)
+                .iter()
+                .map(|&z| self.activation.apply(z))
+                .collect();
+            feats.extend(
+                nt.leaf_scores(&u)
+                    .iter()
+                    .map(|&z| self.activation.apply(z)),
+            );
+        }
+        feats
+    }
+
+    /// Full forward pass: class scores (paper eq. 5).
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let feats = self.leaf_features(x);
+        self.output_from_features(&feats)
+    }
+
+    /// Output layer only, from precomputed leaf features.
+    pub fn output_from_features(&self, feats: &[f64]) -> Vec<f64> {
+        let mut scores = vec![0.0f64; self.n_classes];
+        for (l, (nt, &alpha)) in self.trees.iter().zip(&self.alphas).enumerate() {
+            let block = &feats[l * self.k..(l + 1) * self.k];
+            for c in 0..self.n_classes {
+                let dot: f64 = nt.w[c].iter().zip(block).map(|(w, v)| w * v).sum();
+                scores[c] += alpha * (dot + nt.beta[c]);
+            }
+        }
+        scores
+    }
+
+    pub fn predict(&self, x: &[f64]) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<usize> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+
+    /// Clone with a different activation (e.g. tanh → its polynomial
+    /// fit for HE compatibility checks).
+    pub fn with_activation(&self, activation: Activation) -> Self {
+        let mut nf = self.clone();
+        nf.activation = activation;
+        nf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::adult;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::nrf::activation::chebyshev_fit_tanh;
+
+    fn small_forest() -> (crate::data::Dataset, RandomForest) {
+        let ds = adult::generate(4_000, 41);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 16,
+                ..Default::default()
+            },
+            42,
+        );
+        (ds, rf)
+    }
+
+    #[test]
+    fn hard_nrf_matches_rf_predictions() {
+        let (ds, rf) = small_forest();
+        let nf = NeuralForest::from_forest(&rf, Activation::Hard);
+        assert!(nf.k.is_power_of_two());
+        for x in ds.x.iter().take(300) {
+            let rf_scores = rf.predict_proba(x);
+            let nf_scores = nf.forward(x);
+            for (a, b) in rf_scores.iter().zip(&nf_scores) {
+                assert!((a - b).abs() < 1e-9, "{rf_scores:?} vs {nf_scores:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tanh_nrf_mostly_agrees_with_rf() {
+        let (ds, rf) = small_forest();
+        let nf = NeuralForest::from_forest(&rf, Activation::Tanh { a: 8.0 });
+        let n = 400;
+        let agree = ds
+            .x
+            .iter()
+            .take(n)
+            .filter(|x| rf.predict(x) == nf.predict(x))
+            .count() as f64
+            / n as f64;
+        assert!(agree > 0.85, "tanh agreement {agree}");
+    }
+
+    #[test]
+    fn poly_activation_close_to_tanh_forward() {
+        let (ds, rf) = small_forest();
+        let a = 3.0;
+        let nf_tanh = NeuralForest::from_forest(&rf, Activation::Tanh { a });
+        let coeffs = chebyshev_fit_tanh(a, 6);
+        let nf_poly = nf_tanh.with_activation(Activation::Poly { coeffs });
+        let mut max_dev = 0.0f64;
+        for x in ds.x.iter().take(200) {
+            let st = nf_tanh.forward(x);
+            let sp = nf_poly.forward(x);
+            for (a, b) in st.iter().zip(&sp) {
+                max_dev = max_dev.max((a - b).abs());
+            }
+        }
+        assert!(max_dev < 0.15, "poly vs tanh deviation {max_dev}");
+    }
+
+    #[test]
+    fn leaf_features_shape() {
+        let (ds, rf) = small_forest();
+        let nf = NeuralForest::from_forest(&rf, Activation::Hard);
+        let f = nf.leaf_features(&ds.x[0]);
+        assert_eq!(f.len(), nf.n_trees() * nf.k);
+        // With hard activation features are ±1 and exactly one +1 per tree.
+        for l in 0..nf.n_trees() {
+            let block = &f[l * nf.k..(l + 1) * nf.k];
+            assert_eq!(block.iter().filter(|&&v| v > 0.0).count(), 1);
+        }
+    }
+}

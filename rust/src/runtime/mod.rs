@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas slot
+//! model from `artifacts/*.hlo.txt`.
+//!
+//! The Rust coordinator uses this for (a) the plaintext fast path
+//! (clients who opt out of encryption get the same slot-level model,
+//! batched) and (b) an independently-derived numerical cross-check of
+//! the homomorphic evaluator. HLO text is the interchange format (see
+//! aot.py); compilation happens once at load.
+
+pub mod slot_model;
+
+pub use slot_model::{SlotModel, SlotModelParams};

@@ -1,0 +1,228 @@
+//! Loader/executor for the AOT slot model.
+//!
+//! `aot.py` writes a `manifest.txt` naming the single-observation and
+//! batched HLO files and their static shapes; [`SlotModel::load`]
+//! parses it, compiles both executables on the PJRT CPU client, and
+//! serves f32 inference from then on — Python is never involved again.
+
+use crate::hrf::HrfModel;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Static shape configuration of the compiled model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotShape {
+    pub s: usize,
+    pub k: usize,
+    pub c: usize,
+    pub m: usize,
+    pub b: usize,
+}
+
+/// Model parameters converted once into XLA literals.
+pub struct SlotModelParams {
+    t: xla::Literal,
+    diags: xla::Literal,
+    b: xla::Literal,
+    w: xla::Literal,
+    betas: xla::Literal,
+    coeffs: xla::Literal,
+    pub shape: SlotShape,
+}
+
+impl SlotModelParams {
+    /// Pack an [`HrfModel`]'s parameters for a compiled shape. The
+    /// HRF plan's slot count must equal the artifact's `S`; the
+    /// activation is zero-padded to `m` coefficients.
+    pub fn from_hrf(model: &HrfModel, shape: SlotShape) -> Result<Self> {
+        let p = &model.plan;
+        if p.slots != shape.s {
+            bail!("HRF packed for {} slots, artifact expects {}", p.slots, shape.s);
+        }
+        if p.k != shape.k {
+            bail!("HRF K={} but artifact K={}", p.k, shape.k);
+        }
+        if p.c != shape.c {
+            bail!("HRF C={} but artifact C={}", p.c, shape.c);
+        }
+        if model.act_coeffs.len() > shape.m {
+            bail!(
+                "activation degree {} exceeds artifact m={}",
+                model.act_coeffs.len() - 1,
+                shape.m
+            );
+        }
+        let f32v = |v: &[f64]| -> Vec<f32> { v.iter().map(|&x| x as f32).collect() };
+        let t = xla::Literal::vec1(&f32v(&model.t_slots));
+        let flat_diags: Vec<f32> = model
+            .diag_slots
+            .iter()
+            .flat_map(|d| f32v(d))
+            .collect();
+        let diags =
+            xla::Literal::vec1(&flat_diags).reshape(&[shape.k as i64, shape.s as i64])?;
+        let b = xla::Literal::vec1(&f32v(&model.b_slots));
+        let flat_w: Vec<f32> = model.w_slots.iter().flat_map(|w| f32v(w)).collect();
+        let w = xla::Literal::vec1(&flat_w).reshape(&[shape.c as i64, shape.s as i64])?;
+        let betas = xla::Literal::vec1(&f32v(&model.betas));
+        let mut coeffs_pad = f32v(&model.act_coeffs);
+        coeffs_pad.resize(shape.m, 0.0);
+        let coeffs = xla::Literal::vec1(&coeffs_pad);
+        Ok(SlotModelParams {
+            t,
+            diags,
+            b,
+            w,
+            betas,
+            coeffs,
+            shape,
+        })
+    }
+}
+
+/// Compiled PJRT executables for the slot model.
+pub struct SlotModel {
+    exe_single: xla::PjRtLoadedExecutable,
+    exe_batch: xla::PjRtLoadedExecutable,
+    pub shape: SlotShape,
+}
+
+impl SlotModel {
+    /// Load from an artifacts directory (written by `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
+        let get = |key: &str| -> Result<String> {
+            manifest
+                .lines()
+                .find_map(|l| l.strip_prefix(&format!("{key}=")))
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest missing key {key}"))
+        };
+        let shape = SlotShape {
+            s: get("s")?.parse()?,
+            k: get("k")?.parse()?,
+            c: get("c")?.parse()?,
+            m: get("m")?.parse()?,
+            b: get("b")?.parse()?,
+        };
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let exe_single = compile(&get("single")?)?;
+        let exe_batch = compile(&get("batch")?)?;
+        Ok(SlotModel {
+            exe_single,
+            exe_batch,
+            shape,
+        })
+    }
+
+    /// Single-observation inference: packed slot vector → C scores.
+    pub fn infer(&self, x_slots: &[f32], params: &SlotModelParams) -> Result<Vec<f32>> {
+        if x_slots.len() != self.shape.s {
+            bail!("expected {} slots, got {}", self.shape.s, x_slots.len());
+        }
+        let x = xla::Literal::vec1(x_slots);
+        let result = self.exe_single.execute::<xla::Literal>(&[
+            x,
+            params.t.clone(),
+            params.diags.clone(),
+            params.b.clone(),
+            params.w.clone(),
+            params.betas.clone(),
+            params.coeffs.clone(),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Batched inference: `n ≤ B` packed slot vectors → per-sample C
+    /// scores. Inputs are zero-padded to the compiled batch size.
+    pub fn infer_batch(
+        &self,
+        xs: &[Vec<f32>],
+        params: &SlotModelParams,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (b, s, c) = (self.shape.b, self.shape.s, self.shape.c);
+        if xs.is_empty() || xs.len() > b {
+            bail!("batch size {} outside 1..={b}", xs.len());
+        }
+        let mut flat = vec![0.0f32; b * s];
+        for (i, x) in xs.iter().enumerate() {
+            if x.len() != s {
+                bail!("expected {s} slots, got {}", x.len());
+            }
+            flat[i * s..(i + 1) * s].copy_from_slice(x);
+        }
+        let x = xla::Literal::vec1(&flat).reshape(&[b as i64, s as i64])?;
+        let result = self.exe_batch.execute::<xla::Literal>(&[
+            x,
+            params.t.clone(),
+            params.diags.clone(),
+            params.b.clone(),
+            params.w.clone(),
+            params.betas.clone(),
+            params.coeffs.clone(),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let scores = out.to_vec::<f32>()?;
+        Ok(xs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| scores[i * c..(i + 1) * c].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime tests (loading real artifacts) live in
+    // rust/tests/runtime_artifact.rs; here only shape plumbing.
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        use crate::data::adult;
+        use crate::forest::{RandomForest, RandomForestConfig};
+        use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+        use crate::nrf::NeuralForest;
+        let ds = adult::generate(400, 19);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 4,
+                ..Default::default()
+            },
+            20,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let hm = HrfModel::from_neural_forest(&nf, 14, 2048).unwrap();
+        let bad = SlotShape {
+            s: 4096,
+            k: hm.plan.k,
+            c: 2,
+            m: 5,
+            b: 8,
+        };
+        assert!(SlotModelParams::from_hrf(&hm, bad).is_err());
+        let good = SlotShape {
+            s: 2048,
+            k: hm.plan.k,
+            c: 2,
+            m: 5,
+            b: 8,
+        };
+        assert!(SlotModelParams::from_hrf(&hm, good).is_ok());
+    }
+}

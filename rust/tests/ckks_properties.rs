@@ -1,0 +1,181 @@
+//! Randomized property tests over the CKKS evaluator (E6 / Fig. 1):
+//! the homomorphism laws the whole HRF correctness story rests on.
+
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::rng::Xoshiro256pp;
+
+struct World {
+    ctx: cryptotree::ckks::rns::ContextRef,
+    enc: Encoder,
+    encryptor: Encryptor,
+    decryptor: Decryptor,
+    rlk: cryptotree::ckks::keys::RelinKey,
+    gk: cryptotree::ckks::keys::GaloisKeys,
+    ev: Evaluator,
+}
+
+fn world(seed: u64, rotations: &[usize]) -> World {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, seed);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, rotations);
+    World {
+        ev: Evaluator::new(ctx.clone()),
+        encryptor: Encryptor::new(pk, seed + 1),
+        decryptor: Decryptor::new(kg.secret_key()),
+        rlk,
+        gk,
+        enc,
+        ctx,
+    }
+}
+
+fn rand_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    for i in 0..want.len() {
+        assert!(
+            (got[i] - want[i]).abs() < tol,
+            "{what}: slot {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// (a+b)·c == a·c + b·c under encryption (distributivity).
+#[test]
+fn distributivity_randomized() {
+    let mut w = world(1000, &[]);
+    let mut rng = Xoshiro256pp::new(7);
+    let n = w.enc.slots();
+    for trial in 0..3 {
+        let (a, b, c) = (
+            rand_vec(&mut rng, n),
+            rand_vec(&mut rng, n),
+            rand_vec(&mut rng, n),
+        );
+        let ca = w.encryptor.encrypt_slots(&w.ctx, &w.enc, &a);
+        let cb = w.encryptor.encrypt_slots(&w.ctx, &w.enc, &b);
+        let cc = w.encryptor.encrypt_slots(&w.ctx, &w.enc, &c);
+        // lhs = (a+b)*c
+        let sum = w.ev.add(&ca, &cb);
+        let mut lhs = w.ev.mul(&sum, &cc, &w.rlk);
+        w.ev.rescale(&mut lhs);
+        // rhs = a*c + b*c
+        let mut ac = w.ev.mul(&ca, &cc, &w.rlk);
+        w.ev.rescale(&mut ac);
+        let mut bc = w.ev.mul(&cb, &cc, &w.rlk);
+        w.ev.rescale(&mut bc);
+        bc.scale = ac.scale;
+        let rhs = w.ev.add(&ac, &bc);
+        let dl = w.decryptor.decrypt_slots(&w.ctx, &w.enc, &lhs);
+        let dr = w.decryptor.decrypt_slots(&w.ctx, &w.enc, &rhs);
+        assert_close(&dl, &dr, 1e-3, &format!("distributivity trial {trial}"));
+    }
+}
+
+/// Rotation is additive: rot(a, r1+r2) == rot(rot(a, r1), r2).
+#[test]
+fn rotation_composition() {
+    let mut w = world(2000, &[1, 2, 3]);
+    let mut rng = Xoshiro256pp::new(8);
+    let n = w.enc.slots();
+    let a = rand_vec(&mut rng, n);
+    let ca = w.encryptor.encrypt_slots(&w.ctx, &w.enc, &a);
+    let r12 = {
+        let r1 = w.ev.rotate(&ca, 1, &w.gk);
+        w.ev.rotate(&r1, 2, &w.gk)
+    };
+    let r3 = w.ev.rotate(&ca, 3, &w.gk);
+    let d12 = w.decryptor.decrypt_slots(&w.ctx, &w.enc, &r12);
+    let d3 = w.decryptor.decrypt_slots(&w.ctx, &w.enc, &r3);
+    assert_close(&d12, &d3, 1e-4, "rotation composition");
+}
+
+/// Rotation commutes with plaintext multiplication of a rotated mask.
+#[test]
+fn rotation_mul_commutes() {
+    let mut w = world(3000, &[4]);
+    let mut rng = Xoshiro256pp::new(9);
+    let n = w.enc.slots();
+    let a = rand_vec(&mut rng, n);
+    let mask = rand_vec(&mut rng, n);
+    let ca = w.encryptor.encrypt_slots(&w.ctx, &w.enc, &a);
+    // lhs: rot(a) * mask
+    let rot = w.ev.rotate(&ca, 4, &w.gk);
+    let m_pt = w.ev.encode_for(&w.enc, &mask, &rot, w.ctx.params.scale);
+    let mut lhs = w.ev.mul_plain(&rot, &m_pt);
+    w.ev.rescale(&mut lhs);
+    // rhs: rot(a * rot_right(mask))
+    let mask_right: Vec<f64> = (0..n).map(|i| mask[(i + n - 4) % n]).collect();
+    let mr_pt = w.ev.encode_for(&w.enc, &mask_right, &ca, w.ctx.params.scale);
+    let mut prod = w.ev.mul_plain(&ca, &mr_pt);
+    w.ev.rescale(&mut prod);
+    let rhs = w.ev.rotate(&prod, 4, &w.gk);
+    let dl = w.decryptor.decrypt_slots(&w.ctx, &w.enc, &lhs);
+    let dr = w.decryptor.decrypt_slots(&w.ctx, &w.enc, &rhs);
+    assert_close(&dl, &dr, 1e-4, "rotate/mul commute");
+}
+
+/// Noise stays decodeable across the full depth of the chain.
+#[test]
+fn deep_mul_chain_preserves_precision() {
+    let ctx = CkksContext::new(CkksParams::fast());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, 4000);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let mut encryptor = Encryptor::new(pk, 4001);
+    let decryptor = Decryptor::new(kg.secret_key());
+    let mut ev = Evaluator::new(ctx.clone());
+    let mut rng = Xoshiro256pp::new(10);
+    let n = enc.slots();
+    let a = rand_vec(&mut rng, n);
+    let mut ct = encryptor.encrypt_slots(&ctx, &enc, &a);
+    let mut expect = a.clone();
+    // Square down the whole chain: values stay in [-1,1].
+    for depth in 0..ctx.params.depth() {
+        ct = ev.square(&ct, &rlk);
+        ev.rescale(&mut ct);
+        for e in expect.iter_mut() {
+            *e = *e * *e;
+        }
+        let d = decryptor.decrypt_slots(&ctx, &enc, &ct);
+        let max_err = d
+            .iter()
+            .zip(&expect)
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_err < 1e-2,
+            "depth {depth}: error {max_err} too large"
+        );
+    }
+    assert_eq!(ct.level, 0);
+}
+
+/// Scale tracking: the tracked scale always matches Δ within drift
+/// bounds after arbitrary mul/rescale sequences.
+#[test]
+fn scale_drift_is_bounded() {
+    let mut w = world(5000, &[]);
+    let mut rng = Xoshiro256pp::new(11);
+    let n = w.enc.slots();
+    let a = rand_vec(&mut rng, n);
+    let mut ct = w.encryptor.encrypt_slots(&w.ctx, &w.enc, &a);
+    let delta = w.ctx.params.scale;
+    for _ in 0..w.ctx.params.depth() {
+        let sq = w.ev.square(&ct, &w.rlk);
+        ct = sq;
+        w.ev.rescale(&mut ct);
+        let drift = (ct.scale / delta).log2().abs();
+        assert!(drift < 0.1, "scale drifted {drift} bits from Δ");
+    }
+}

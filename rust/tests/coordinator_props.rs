@@ -1,0 +1,205 @@
+//! Coordinator behavioural properties: backpressure, shutdown
+//! discipline, and fairness of the least-loaded router.
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::NeuralForest;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_world() -> (
+    cryptotree::ckks::rns::ContextRef,
+    Encoder,
+    HrfClient,
+    Arc<HrfServer>,
+    Arc<SessionManager>,
+    u64,
+    cryptotree::data::Dataset,
+) {
+    // The coordinator's queueing behaviour is what's under test here,
+    // so keep CKKS cheap: tiny ring (N=4096, depth 4, test-grade
+    // security) and a degree-1 activation — still exercising the full
+    // op pipeline (1 level per activation + 2 plaintext muls = 4).
+    let ds = adult::generate(600, 616);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 4,
+            tree: cryptotree::forest::tree::TreeConfig {
+                max_depth: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        617,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: vec![0.0, 1.0], // identity: depth-friendly
+        },
+    );
+    let params = std::sync::Arc::new(CkksParams::build(
+        "coord-test-n4096-d4",
+        4096,
+        60,
+        40,
+        4,
+        3.2,
+    ));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let model = HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+    let plan = model.plan;
+    let mut kg = KeyGenerator::new(&ctx, 618);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let client = HrfClient::new(Encryptor::new(pk, 619), Decryptor::new(kg.secret_key()));
+    let sessions = Arc::new(SessionManager::new());
+    let sid = sessions.register(rlk, gk);
+    (
+        ctx,
+        enc,
+        client,
+        Arc::new(HrfServer::new(model)),
+        sessions,
+        sid,
+        ds,
+    )
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let (ctx, enc, mut client, server, sessions, sid, ds) = small_world();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 2, // tiny ingress
+            ..Default::default()
+        },
+        ctx.clone(),
+        server.clone(),
+        sessions,
+        None,
+    );
+    // Flood with encrypted requests; the single worker can't keep up,
+    // so some submissions must hit Busy.
+    let mut accepted = Vec::new();
+    let mut busy = 0usize;
+    for i in 0..40 {
+        let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[i % ds.len()]);
+        match coord.submit_encrypted(sid, ct) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::Busy) => busy += 1,
+            Err(e) => panic!("unexpected error {e:?}"),
+        }
+    }
+    assert!(busy > 0, "backpressure never triggered");
+    assert_eq!(
+        coord.metrics.snapshot().rejected_backpressure,
+        busy as u64
+    );
+    // Every accepted request still completes.
+    for rx in accepted {
+        let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(outs.is_ok());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn all_workers_receive_work() {
+    let (ctx, enc, mut client, server, sessions, sid, ds) = small_world();
+    let workers = 3;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            queue_capacity: 128,
+            ..Default::default()
+        },
+        ctx.clone(),
+        server.clone(),
+        sessions,
+        None,
+    );
+    let rxs: Vec<_> = (0..12)
+        .map(|i| {
+            let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[i]);
+            coord.submit_encrypted(sid, ct).expect("queue has room")
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    }
+    assert_eq!(coord.metrics.snapshot().encrypted_completed, 12);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_is_clean_and_rejects_afterwards() {
+    let (ctx, _enc, _client, server, sessions, _sid, ds) = small_world();
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        ctx.clone(),
+        server.clone(),
+        sessions.clone(),
+        None,
+    );
+    let rx = coord.submit_plain(ds.x[0].clone()).unwrap();
+    assert!(rx.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+    coord.shutdown(); // must join all threads without hanging
+
+    // A fresh coordinator on the same resources still works (no
+    // poisoned shared state).
+    let coord2 = Coordinator::start(
+        CoordinatorConfig::default(),
+        ctx,
+        server,
+        sessions,
+        None,
+    );
+    let rx2 = coord2.submit_plain(ds.x[1].clone()).unwrap();
+    assert!(rx2.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+    coord2.shutdown();
+}
+
+#[test]
+fn mixed_traffic_completes() {
+    let (ctx, enc, mut client, server, sessions, sid, ds) = small_world();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            queue_capacity: 64,
+            max_batch: 4,
+            batch_delay: Duration::from_millis(2),
+        },
+        ctx.clone(),
+        server.clone(),
+        sessions,
+        None,
+    );
+    let mut enc_rxs = Vec::new();
+    let mut plain_rxs = Vec::new();
+    for i in 0..6 {
+        let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[i]);
+        enc_rxs.push(coord.submit_encrypted(sid, ct).unwrap());
+        plain_rxs.push(coord.submit_plain(ds.x[i].clone()).unwrap());
+    }
+    for rx in enc_rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    }
+    for rx in plain_rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    }
+    let s = coord.metrics.snapshot();
+    assert_eq!(s.encrypted_completed, 6);
+    assert_eq!(s.plain_completed, 6);
+    coord.shutdown();
+}

@@ -1,0 +1,227 @@
+//! End-to-end integration: train → NRF → fine-tune → pack → encrypt →
+//! coordinator → decrypt, with HRF/NRF agreement (E2/E3 at test scale).
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::{finetune_last_layer, FinetuneConfig, NeuralForest};
+use std::sync::Arc;
+
+struct Pipeline {
+    ctx: cryptotree::ckks::rns::ContextRef,
+    enc: Encoder,
+    client: HrfClient,
+    server: Arc<HrfServer>,
+    sessions: Arc<SessionManager>,
+    sid: u64,
+    nf: NeuralForest,
+    valid: cryptotree::data::Dataset,
+}
+
+fn build(n_trees: usize, seed: u64) -> Pipeline {
+    let ds = adult::generate(3_000, seed);
+    let (train, valid) = ds.split(0.8, seed + 1);
+    let rf = RandomForest::fit(
+        &train,
+        &RandomForestConfig {
+            n_trees,
+            ..Default::default()
+        },
+        seed + 2,
+    );
+    let coeffs = chebyshev_fit_tanh(3.0, 4);
+    let mut nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+    finetune_last_layer(
+        &mut nf,
+        &train,
+        &FinetuneConfig {
+            epochs: 10,
+            ..Default::default()
+        },
+        seed + 3,
+    );
+
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let model = HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+    let plan = model.plan;
+
+    let mut kg = KeyGenerator::new(&ctx, seed + 4);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let client = HrfClient::new(
+        Encryptor::new(pk, seed + 5),
+        Decryptor::new(kg.secret_key()),
+    );
+    let sessions = Arc::new(SessionManager::new());
+    let sid = sessions.register(rlk, gk);
+    Pipeline {
+        ctx,
+        enc,
+        client,
+        server: Arc::new(HrfServer::new(model)),
+        sessions,
+        sid,
+        nf,
+        valid,
+    }
+}
+
+#[test]
+fn encrypted_pipeline_agrees_with_nrf() {
+    let mut p = build(6, 101);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            ..Default::default()
+        },
+        p.ctx.clone(),
+        p.server.clone(),
+        p.sessions.clone(),
+        None,
+    );
+    let n_eval = 6;
+    let mut agree = 0;
+    for i in 0..n_eval {
+        let x = &p.valid.x[i];
+        let ct = p.client.encrypt_input(&p.ctx, &p.enc, &p.server.model, x);
+        let rx = coord.submit_encrypted(p.sid, ct).expect("submit");
+        let outs = rx.recv().unwrap().expect("eval ok");
+        let (scores, pred) = p.client.decrypt_scores(&p.ctx, &p.enc, &outs);
+        let nrf_scores = p.nf.forward(x);
+        // Scores must match the plaintext NRF closely (CKKS noise only).
+        for (s, e) in scores.iter().zip(&nrf_scores) {
+            assert!(
+                (s - e).abs() < 5e-3,
+                "sample {i}: encrypted {scores:?} vs NRF {nrf_scores:?}"
+            );
+        }
+        if pred == p.nf.predict(x) {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, n_eval, "argmax disagreement under small noise");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.encrypted_completed, n_eval as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn plain_path_matches_nrf_and_batches() {
+    let p = build(6, 202);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            batch_delay: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+        p.ctx.clone(),
+        p.server.clone(),
+        p.sessions.clone(),
+        None, // Rust slot-math fallback; PJRT path covered in runtime_artifact.rs
+    );
+    // Burst of 8 → expect ≥2 flushed batches, every response correct.
+    let rxs: Vec<_> = (0..8)
+        .map(|i| coord.submit_plain(p.valid.x[i].clone()).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let scores = rx.recv().unwrap().expect("plain eval");
+        let expect = {
+            let slots =
+                cryptotree::hrf::client::reshuffle_and_pack(&p.server.model, &p.valid.x[i]);
+            p.server.model.forward_slots_plain(&slots)
+        };
+        for (g, e) in scores.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-9, "plain path mismatch at {i}");
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.plain_completed, 8);
+    assert!(snap.batches_flushed >= 2);
+    assert!(snap.mean_batch_fill > 1.0, "batching never aggregated");
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_session_is_rejected() {
+    let mut p = build(4, 303);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        p.ctx.clone(),
+        p.server.clone(),
+        p.sessions.clone(),
+        None,
+    );
+    let ct = p
+        .client
+        .encrypt_input(&p.ctx, &p.enc, &p.server.model, &p.valid.x[0]);
+    match coord.submit_encrypted(9999, ct) {
+        Err(SubmitError::NoSession) => {}
+        other => panic!("expected NoSession, got {other:?}"),
+    }
+    assert_eq!(coord.metrics.snapshot().rejected_no_session, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn session_isolation_two_clients() {
+    // Two clients, separate keys: each decrypts only its own result.
+    let mut p = build(4, 404);
+    // Second client with fresh keys on the same context/model.
+    let mut kg2 = KeyGenerator::new(&p.ctx, 909);
+    let pk2 = kg2.gen_public_key(&p.ctx);
+    let rlk2 = kg2.gen_relin_key(&p.ctx);
+    let gk2 = kg2.gen_galois_keys(&p.ctx, &p.server.model.plan.rotations_needed());
+    let mut client2 = HrfClient::new(
+        Encryptor::new(pk2, 910),
+        Decryptor::new(kg2.secret_key()),
+    );
+    let sid2 = p.sessions.register(rlk2, gk2);
+
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        p.ctx.clone(),
+        p.server.clone(),
+        p.sessions.clone(),
+        None,
+    );
+    let x = &p.valid.x[0];
+    let ct1 = p.client.encrypt_input(&p.ctx, &p.enc, &p.server.model, x);
+    let ct2 = client2.encrypt_input(&p.ctx, &p.enc, &p.server.model, x);
+    let r1 = coord.submit_encrypted(p.sid, ct1).unwrap();
+    let r2 = coord.submit_encrypted(sid2, ct2).unwrap();
+    let o1 = r1.recv().unwrap().unwrap();
+    let o2 = r2.recv().unwrap().unwrap();
+    let (s1, _) = p.client.decrypt_scores(&p.ctx, &p.enc, &o1);
+    let (s2, _) = client2.decrypt_scores(&p.ctx, &p.enc, &o2);
+    let expect = {
+        let slots = cryptotree::hrf::client::reshuffle_and_pack(&p.server.model, x);
+        p.server.model.forward_slots_plain(&slots)
+    };
+    for (got, e) in [&s1, &s2].iter().zip([&expect, &expect]) {
+        for (g, e) in got.iter().zip(e) {
+            assert!((g - e).abs() < 5e-3, "client result wrong");
+        }
+    }
+    // Cross-decryption must NOT work: decrypting client2's result with
+    // client1's key yields garbage.
+    let (cross, _) = p.client.decrypt_scores(&p.ctx, &p.enc, &o2);
+    let cross_err: f64 = cross
+        .iter()
+        .zip(&expect)
+        .map(|(g, e)| (g - e).abs())
+        .fold(0.0, f64::max);
+    assert!(
+        cross_err > 1e3,
+        "cross-session decryption produced plausible values ({cross_err})"
+    );
+    coord.shutdown();
+}

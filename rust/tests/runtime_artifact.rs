@@ -1,0 +1,141 @@
+//! PJRT runtime integration: load the AOT artifacts produced by
+//! `make artifacts` and cross-check the JAX/Pallas slot model against
+//! the Rust implementations — the three-layer consistency proof:
+//!
+//!   rust HE (CKKS)  ≈  rust slot math  ==  AOT JAX/Pallas via PJRT
+//!
+//! Tests are skipped (with a loud message) when artifacts are absent.
+
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::reshuffle_and_pack;
+use cryptotree::hrf::HrfModel;
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::NeuralForest;
+use cryptotree::runtime::{SlotModel, SlotModelParams};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+/// Build an HRF packed to exactly the artifact's shape (S=4096, K=16).
+fn model_for_artifact() -> (cryptotree::data::Dataset, NeuralForest, HrfModel) {
+    let ds = adult::generate(2_000, 515);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 24, // 24 * 31 = 744 <= 4096 slots
+            ..Default::default()
+        },
+        516,
+    );
+    let coeffs = chebyshev_fit_tanh(3.0, 4);
+    let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+    assert_eq!(nf.k, 16, "tree depth 4 must pad to K=16");
+    let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 4096).unwrap();
+    (ds, nf, hm)
+}
+
+#[test]
+fn pjrt_single_matches_rust_slot_math() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (ds, nf, hm) = model_for_artifact();
+    let sm = SlotModel::load(&dir).expect("load artifacts");
+    let params = SlotModelParams::from_hrf(&hm, sm.shape).expect("pack params");
+    for x in ds.x.iter().take(32) {
+        let slots = reshuffle_and_pack(&hm, x);
+        let slots_f32: Vec<f32> = slots.iter().map(|&v| v as f32).collect();
+        let got = sm.infer(&slots_f32, &params).expect("pjrt infer");
+        let want = hm.forward_slots_plain(&slots);
+        let want_nrf = nf.forward(x);
+        for c in 0..want.len() {
+            assert!(
+                (got[c] as f64 - want[c]).abs() < 1e-3,
+                "PJRT vs rust slot math: {got:?} vs {want:?}"
+            );
+            assert!(
+                (got[c] as f64 - want_nrf[c]).abs() < 1e-3,
+                "PJRT vs NRF forward: {got:?} vs {want_nrf:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_batch_matches_single() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (ds, _nf, hm) = model_for_artifact();
+    let sm = SlotModel::load(&dir).expect("load artifacts");
+    let params = SlotModelParams::from_hrf(&hm, sm.shape).expect("pack params");
+    let xs: Vec<Vec<f32>> = ds
+        .x
+        .iter()
+        .take(5) // deliberately partial batch (B=8)
+        .map(|x| {
+            reshuffle_and_pack(&hm, x)
+                .iter()
+                .map(|&v| v as f32)
+                .collect()
+        })
+        .collect();
+    let batch = sm.infer_batch(&xs, &params).expect("batch infer");
+    assert_eq!(batch.len(), 5);
+    for (i, x) in xs.iter().enumerate() {
+        let single = sm.infer(x, &params).expect("single infer");
+        for c in 0..single.len() {
+            assert!(
+                (batch[i][c] - single[c]).abs() < 1e-5,
+                "batch/single divergence at sample {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_uses_pjrt_fast_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    use cryptotree::ckks::rns::CkksContext;
+    use cryptotree::ckks::CkksParams;
+    use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
+    use cryptotree::hrf::HrfServer;
+    use std::sync::Arc;
+
+    let (ds, _nf, hm) = model_for_artifact();
+    // fast params: N=8192 → 4096 slots == artifact S.
+    let ctx = CkksContext::new(CkksParams::fast());
+    let server = Arc::new(HrfServer::new(hm));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 8,
+            ..Default::default()
+        },
+        ctx,
+        server.clone(),
+        Arc::new(SessionManager::new()),
+        Some(dir),
+    );
+    let rxs: Vec<_> = (0..6)
+        .map(|i| coord.submit_plain(ds.x[i].clone()).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let scores = rx.recv().unwrap().expect("pjrt plain path");
+        let slots = reshuffle_and_pack(&server.model, &ds.x[i]);
+        let want = server.model.forward_slots_plain(&slots);
+        for (g, e) in scores.iter().zip(&want) {
+            assert!(
+                (g - e).abs() < 1e-3,
+                "coordinator PJRT path deviates: {scores:?} vs {want:?}"
+            );
+        }
+    }
+    assert_eq!(coord.metrics.snapshot().plain_completed, 6);
+    coord.shutdown();
+}
