@@ -69,6 +69,7 @@ fn main() {
                 queue_capacity: 256,
                 max_batch: 8,
                 batch_delay: Duration::from_millis(4),
+                ..Default::default()
             },
             ctx.clone(),
             server.clone(),

@@ -1,0 +1,139 @@
+"""Generate the golden parity fixture shared by the Python and Rust
+test suites.
+
+The fixture pins the *slot-level semantics* of the HRF layout — block
+replication, generalized diagonals, group-local output reduction — as
+concrete numbers: a tiny synthetic packed model (K=4, L=2, C=2 on 64
+slots -> 4 sample groups), three observations packed into groups 0–2,
+and the layer-by-layer outputs computed by ``kernels/ref.py`` in
+float64. ``python/tests/test_golden_parity.py`` recomputes the layers
+through ref.py and must reproduce the stored outputs;
+``rust/tests/golden_parity.rs`` builds an ``HrfModel`` from the same
+operands and must as well. Both passing proves the two slot models are
+the same function.
+
+Regenerate (from python/) with:  python -m compile.export_golden
+"""
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import nrf_slots_forward_layers_ref
+
+S, K, L, C, D = 64, 4, 2, 2, 6
+BLOCK = 2 * K - 1
+USED = L * BLOCK
+GROUP_SPAN = 1 << (USED - 1).bit_length()
+GROUPS = S // GROUP_SPAN
+N_SAMPLES = 3
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden", "hrf_parity.json")
+
+
+def build_model(rng):
+    """Random per-tree NRF parameters + the packed slot operands,
+    laid out exactly as rust/src/hrf/pack.rs does (replicated into
+    every sample group)."""
+    taus = rng.integers(0, D, size=(L, K - 1)).tolist()
+    t = rng.uniform(-0.5, 0.5, size=(L, K - 1))
+    v = rng.uniform(-0.25, 0.25, size=(L, K, K - 1))
+    b = rng.uniform(-0.5, 0.5, size=(L, K))
+    w = rng.uniform(-0.5, 0.5, size=(L, C, K))
+    beta = rng.uniform(-0.2, 0.2, size=(L, C))
+    alphas = rng.uniform(0.1, 1.0, size=L)
+
+    t_slots = np.zeros(S)
+    diag_slots = np.zeros((K, S))
+    b_slots = np.zeros(S)
+    w_slots = np.zeros((C, S))
+    betas = np.zeros(C)
+    for li in range(L):
+        for g in range(GROUPS):
+            base = g * GROUP_SPAN + li * BLOCK
+            for j in range(K - 1):
+                t_slots[base + j] = t[li, j]
+                t_slots[base + K + j] = t[li, j]
+            for j in range(K):
+                for p in range(K):
+                    col = (p + j) % K
+                    diag_slots[j, base + p] = v[li, p, col] if col < K - 1 else 0.0
+            for p in range(K):
+                b_slots[base + p] = b[li, p]
+            for ci in range(C):
+                for p in range(K):
+                    w_slots[ci, base + p] = alphas[li] * w[li, ci, p]
+        for ci in range(C):
+            betas[ci] += alphas[li] * beta[li, ci]
+    return taus, t_slots, diag_slots, b_slots, w_slots, betas
+
+
+def pack_inputs(taus, xs):
+    """Client-side reshuffle: observation g into sample group g."""
+    x_slots = np.zeros(S)
+    for g, x in enumerate(xs):
+        for li in range(L):
+            base = g * GROUP_SPAN + li * BLOCK
+            for j, feat in enumerate(taus[li]):
+                x_slots[base + j] = x[feat]
+                x_slots[base + K + j] = x[feat]
+    return x_slots
+
+
+def main():
+    rng = np.random.default_rng(20260731)
+    taus, t_slots, diag_slots, b_slots, w_slots, betas = build_model(rng)
+    # Degree-4 polynomial with nonzero even terms so the fixture also
+    # exercises the constant coefficient.
+    coeffs = np.array([0.05, 1.1, -0.07, -0.32, 0.015])
+    xs = rng.uniform(0.0, 1.0, size=(N_SAMPLES, D))
+    x_slots = pack_inputs(taus, xs)
+
+    u, v, scores = nrf_slots_forward_layers_ref(
+        jnp.asarray(x_slots),
+        jnp.asarray(t_slots),
+        jnp.asarray(diag_slots),
+        jnp.asarray(b_slots),
+        jnp.asarray(w_slots),
+        jnp.asarray(betas),
+        jnp.asarray(coeffs),
+        GROUP_SPAN,
+    )
+    assert u.dtype == jnp.float64, "fixture must be generated in float64"
+
+    fixture = {
+        "s": S,
+        "k": K,
+        "l": L,
+        "c": C,
+        "d": D,
+        "group_span": GROUP_SPAN,
+        "groups": GROUPS,
+        "n_samples": N_SAMPLES,
+        "coeffs": coeffs.tolist(),
+        "taus": taus,
+        "t_slots": t_slots.tolist(),
+        "diag_slots": diag_slots.tolist(),
+        "b_slots": b_slots.tolist(),
+        "w_slots": w_slots.tolist(),
+        "betas": betas.tolist(),
+        "x_slots": x_slots.tolist(),
+        "expect_u": np.asarray(u).tolist(),
+        "expect_v": np.asarray(v).tolist(),
+        "expect_scores": np.asarray(scores).tolist(),
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(fixture, f, indent=1)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)} "
+          f"(S={S} K={K} L={L} C={C}, {GROUPS} groups, {N_SAMPLES} samples)")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,10 @@ server (``rust/src/hrf/server.rs``):
 * ``poly_activation_ref`` — the degree-m activation polynomial applied
   slot-wise (Horner).
 * ``nrf_slots_forward_ref`` — the full Algorithm 3 slot model.
+* ``nrf_slots_forward_groups_ref`` — the sample-group variant: one slot
+  vector carries ``S / group_span`` independent observations and the
+  output reduction is group-local, mirroring the Rust HE server's
+  group-local rotate-and-sum.
 """
 
 import jax.numpy as jnp
@@ -55,3 +59,36 @@ def nrf_slots_forward_ref(x_slots, t_slots, diags, b_slots, w_masks, betas, coef
     lin = packed_diag_matmul_ref(u, diags) + b_slots
     v = poly_activation_ref(lin, coeffs)
     return w_masks @ v + betas
+
+
+def nrf_slots_forward_layers_ref(
+    x_slots, t_slots, diags, b_slots, w_masks, betas, coeffs, group_span
+):
+    """Group-local slot model, layer by layer.
+
+    Same dataflow as ``nrf_slots_forward_ref`` except the output
+    reduction sums each ``group_span``-aligned span separately, so a
+    slot vector packed with ``S / group_span`` observations yields one
+    score row per observation.
+
+    returns: (u, v, scores) with u, v of shape (S,) and scores of
+    shape (G, C), G = S // group_span.
+    """
+    u = poly_activation_ref(x_slots - t_slots, coeffs)
+    lin = packed_diag_matmul_ref(u, diags) + b_slots
+    v = poly_activation_ref(lin, coeffs)
+    s = x_slots.shape[0]
+    g = s // group_span
+    c = w_masks.shape[0]
+    masked = w_masks * v  # (C, S)
+    per_group = masked.reshape(c, g, group_span).sum(axis=2)  # (C, G)
+    return u, v, per_group.T + betas  # scores: (G, C)
+
+
+def nrf_slots_forward_groups_ref(
+    x_slots, t_slots, diags, b_slots, w_masks, betas, coeffs, group_span
+):
+    """Per-group class scores, shape (G, C). See the layers variant."""
+    return nrf_slots_forward_layers_ref(
+        x_slots, t_slots, diags, b_slots, w_masks, betas, coeffs, group_span
+    )[2]

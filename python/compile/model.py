@@ -34,6 +34,27 @@ def nrf_slots_forward_batch(xs, t_slots, diags, b_slots, w_masks, betas, coeffs)
     )(xs, t_slots, diags, b_slots, w_masks, betas, coeffs)
 
 
+def nrf_slots_forward_packed(
+    x_slots, t_slots, diags, b_slots, w_masks, betas, coeffs, group_span
+):
+    """(S,) slot vector packed with S // group_span observations ->
+    (G, C) per-observation scores.
+
+    The SIMD sample-group layout of the Rust HE server: the output
+    reduction is group-local, so independent observations packed at
+    ``group_span`` strides never mix (rust/src/hrf/plan.rs).
+    """
+    u = poly_activation(x_slots - t_slots, coeffs)
+    lin = packed_diag_matmul(u, diags) + b_slots
+    v = poly_activation(lin, coeffs)
+    s = x_slots.shape[0]
+    g = s // group_span
+    c = w_masks.shape[0]
+    masked = w_masks * v  # (C, S)
+    per_group = masked.reshape(c, g, group_span).sum(axis=2)  # (C, G)
+    return per_group.T + betas
+
+
 def example_args(s, k, c, m, batch=None):
     """ShapeDtypeStructs for lowering."""
     f32 = jnp.float32

@@ -1,0 +1,88 @@
+"""Golden parity: ref.py must reproduce the stored fixture exactly.
+
+The fixture (tests/golden/hrf_parity.json, written by
+``compile.export_golden``) holds a tiny packed HRF model, a slot vector
+carrying three observations in sample groups 0-2, and the layer-by-layer
+outputs computed in float64. The Rust twin
+(rust/tests/golden_parity.rs) checks the same numbers against
+``HrfModel::forward_slots_layers`` — both passing proves the Python and
+Rust slot models are the same function, layer by layer.
+"""
+
+import json
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import (
+    nrf_slots_forward_groups_ref,
+    nrf_slots_forward_layers_ref,
+)
+
+FIXTURE = Path(__file__).parent / "golden" / "hrf_parity.json"
+TOL = 1e-9
+
+
+def load():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_ref_reproduces_golden_layers():
+    fx = load()
+    u, v, scores = nrf_slots_forward_layers_ref(
+        jnp.asarray(fx["x_slots"]),
+        jnp.asarray(fx["t_slots"]),
+        jnp.asarray(fx["diag_slots"]),
+        jnp.asarray(fx["b_slots"]),
+        jnp.asarray(fx["w_slots"]),
+        jnp.asarray(fx["betas"]),
+        jnp.asarray(fx["coeffs"]),
+        fx["group_span"],
+    )
+    assert u.dtype == jnp.float64
+    np.testing.assert_allclose(u, fx["expect_u"], rtol=0, atol=TOL)
+    np.testing.assert_allclose(v, fx["expect_v"], rtol=0, atol=TOL)
+    np.testing.assert_allclose(scores, fx["expect_scores"], rtol=0, atol=TOL)
+
+
+def test_group_scores_shape_and_reduction():
+    fx = load()
+    scores = nrf_slots_forward_groups_ref(
+        jnp.asarray(fx["x_slots"]),
+        jnp.asarray(fx["t_slots"]),
+        jnp.asarray(fx["diag_slots"]),
+        jnp.asarray(fx["b_slots"]),
+        jnp.asarray(fx["w_slots"]),
+        jnp.asarray(fx["betas"]),
+        jnp.asarray(fx["coeffs"]),
+        fx["group_span"],
+    )
+    assert scores.shape == (fx["groups"], fx["c"])
+    np.testing.assert_allclose(scores, fx["expect_scores"], rtol=0, atol=TOL)
+
+
+def test_fixture_layout_invariants():
+    """The fixture's operands obey the packed layout the Rust side
+    assumes: w masks zero outside leaf slots, thresholds replicated."""
+    fx = load()
+    k, block, span = fx["k"], 2 * fx["k"] - 1, fx["group_span"]
+    used = fx["l"] * block
+    w = np.asarray(fx["w_slots"])
+    t = np.asarray(fx["t_slots"])
+    for g in range(fx["groups"]):
+        off = g * span
+        # Replication within each tree block.
+        for li in range(fx["l"]):
+            base = off + li * block
+            for j in range(k - 1):
+                assert t[base + j] == t[base + k + j]
+            assert t[base + k - 1] == 0.0
+            assert np.all(w[:, base + k : base + block] == 0.0)
+        # Group tail carries no mask mass.
+        assert np.all(w[:, off + used : off + span] == 0.0)

@@ -6,8 +6,13 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from compile.aot import lower_batch, lower_single, to_hlo_text
-from compile.kernels.ref import nrf_slots_forward_ref
-from compile.model import example_args, nrf_slots_forward, nrf_slots_forward_batch
+from compile.kernels.ref import nrf_slots_forward_groups_ref, nrf_slots_forward_ref
+from compile.model import (
+    example_args,
+    nrf_slots_forward,
+    nrf_slots_forward_batch,
+    nrf_slots_forward_packed,
+)
 
 settings.register_profile("ci", max_examples=10, deadline=None)
 settings.load_profile("ci")
@@ -42,6 +47,19 @@ def test_batch_matches_single():
     for i in range(b):
         single = nrf_slots_forward(args[0][i], *args[1:])
         np.testing.assert_allclose(batched[i], single, rtol=1e-5, atol=1e-6)
+
+
+def test_packed_groups_match_ref():
+    # The kernel-composed packed-group model (one slot vector, many
+    # observations, group-local reduction) must agree with the pure-jnp
+    # group reference — the same oracle the Rust HE server is checked
+    # against.
+    s, k, c, m, span = 128, 4, 2, 5, 32
+    args = make_inputs(s, k, c, m, 77)
+    got = nrf_slots_forward_packed(*args, span)
+    want = nrf_slots_forward_groups_ref(*args, span)
+    assert got.shape == (s // span, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
 def test_output_shapes():

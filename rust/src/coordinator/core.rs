@@ -1,4 +1,4 @@
-//! The coordinator proper: ingress queue → router → workers/batcher.
+//! The coordinator proper: ingress queue → router → workers/batchers.
 //!
 //! Topology (all std threads; tokio is unavailable offline and the
 //! workloads are CPU-bound anyway):
@@ -7,15 +7,32 @@
 //!  submit_*() ──bounded channel──► router thread
 //!      │ (backpressure: Busy)        │
 //!      │                    ┌────────┴──────────┐
-//!      │             encrypted → least-loaded   plain → batcher thread
-//!      │                    HE worker 0..W-1       (size/timeout policy,
-//!      │                    (own Evaluator)         PJRT batch or Rust
-//!      ▼                                            slot math)
+//!      │              encrypted → enc-batcher   plain → batcher thread
+//!      │                    (per-session group     (size/timeout policy,
+//!      │                     accumulation, then     slot-model batch or
+//!      │                     least-loaded worker)   Rust slot math)
+//!      │                           │
+//!      │                    HE worker 0..W-1
+//!      │                    (own Evaluator; packed-group eval)
+//!      ▼
 //!  Receiver<Response>  ◄── response channels ──────┘
 //! ```
 //!
 //! Responses travel on per-request rendezvous channels, so a caller
 //! can block (`recv`) or poll (`try_recv`).
+//!
+//! # Encrypted-path batching
+//!
+//! The same [`BatchPolicy`] that drives the plaintext fast path also
+//! drives the encrypted path: single-sample requests from one session
+//! accumulate until `enc_batch` are held (or the oldest times out),
+//! then flush as **one packed group** — the worker combines the fresh
+//! ciphertexts into one (`HrfServer::pack_group`), evaluates once, and
+//! rotates each sample's scores back to slot 0, so callers keep the
+//! single-sample response contract. Requires the session's Galois keys
+//! to cover `HrfPlan::rotations_needed_batched(enc_batch)`; sessions
+//! registered with only the single-sample key set fall back to
+//! per-request evaluation automatically.
 
 use super::batcher::{BatchAction, BatchPolicy};
 use super::metrics::Metrics;
@@ -25,6 +42,7 @@ use crate::ckks::{Ciphertext, Encoder, Evaluator};
 use crate::hrf::client::reshuffle_and_pack;
 use crate::hrf::HrfServer;
 use crate::runtime::{SlotModel, SlotModelParams};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -39,10 +57,16 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Ingress queue capacity (backpressure bound).
     pub queue_capacity: usize,
-    /// Plaintext batch size (≤ the AOT artifact's B when PJRT is used).
+    /// Plaintext batch size (≤ the AOT artifact's B when the slot
+    /// model is used).
     pub max_batch: usize,
-    /// Max time a plaintext request may wait for batch-mates.
+    /// Max time a request may wait for batch-mates (both paths).
     pub batch_delay: Duration,
+    /// Encrypted-path group size: how many single-sample requests from
+    /// one session are packed into one ciphertext before a single
+    /// evaluation. Clamped to the plan's group count; `1` disables
+    /// server-side packing.
+    pub enc_batch: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -52,6 +76,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 64,
             max_batch: 8,
             batch_delay: Duration::from_millis(5),
+            enc_batch: 1,
         }
     }
 }
@@ -65,6 +90,8 @@ pub enum SubmitError {
     Closed,
     /// Unknown session id.
     NoSession,
+    /// Packed batch larger than the plan's group capacity.
+    BatchTooLarge,
 }
 
 /// Encrypted-path response: per-class score ciphertexts.
@@ -72,10 +99,22 @@ pub type EncResponse = Result<Vec<Ciphertext>, String>;
 /// Plaintext-path response: per-class scores.
 pub type PlainResponse = Result<Vec<f64>, String>;
 
+/// One held encrypted request: ciphertext, enqueue time, reply sender.
+type EncItem = (Box<Ciphertext>, Instant, SyncSender<EncResponse>);
+
 enum Request {
     Encrypted {
         session_id: u64,
         ct: Box<Ciphertext>,
+        enqueued: Instant,
+        resp: SyncSender<EncResponse>,
+    },
+    /// Client-side packed group: evaluated as-is; scores stay at the
+    /// group score slots for `HrfClient::decrypt_scores_batch`.
+    EncryptedPacked {
+        session_id: u64,
+        ct: Box<Ciphertext>,
+        n_samples: usize,
         enqueued: Instant,
         resp: SyncSender<EncResponse>,
     },
@@ -86,24 +125,37 @@ enum Request {
     },
 }
 
+/// Work dispatched to an HE worker.
+enum WorkerJob {
+    /// A flushed group of single-sample requests from one session.
+    Group { session_id: u64, items: Vec<EncItem> },
+    /// A client-side packed multi-sample ciphertext.
+    Packed {
+        session_id: u64,
+        ct: Box<Ciphertext>,
+        n_samples: usize,
+        enqueued: Instant,
+        resp: SyncSender<EncResponse>,
+    },
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
     ingress: SyncSender<Request>,
     pub metrics: Arc<Metrics>,
     pub sessions: Arc<SessionManager>,
+    max_packed: usize,
     shutdown: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start router, HE workers and the plaintext batcher.
+    /// Start router, enc-batcher, HE workers and the plaintext batcher.
     ///
-    /// `artifacts_dir` enables the PJRT fast path: the batcher thread
-    /// loads and compiles the AOT slot model locally (PJRT handles are
-    /// not `Send`, so the model lives and dies on that thread). When
-    /// `None` — or when loading fails (e.g. shape mismatch with the
-    /// packed HRF) — the plaintext path computes the identical slot
-    /// model in Rust.
+    /// `artifacts_dir` enables the slot-model fast path: the batcher
+    /// thread loads the AOT slot model locally. When `None` — or when
+    /// loading fails (e.g. shape mismatch with the packed HRF) — the
+    /// plaintext path computes the identical slot model in Rust.
     pub fn start(
         cfg: CoordinatorConfig,
         ctx: ContextRef,
@@ -116,13 +168,15 @@ impl Coordinator {
         let shutdown = Arc::new(AtomicBool::new(false));
         let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let mut threads = Vec::new();
+        let groups = server.model.plan.groups;
+        let enc_batch = cfg.enc_batch.clamp(1, groups);
 
         // --- HE workers -------------------------------------------
         let mut worker_txs = Vec::new();
         let worker_loads: Arc<Vec<AtomicUsize>> =
             Arc::new((0..cfg.workers).map(|_| AtomicUsize::new(0)).collect());
         for w in 0..cfg.workers {
-            let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+            let (tx, rx) = sync_channel::<WorkerJob>(cfg.queue_capacity);
             worker_txs.push(tx);
             let ctx = ctx.clone();
             let server = server.clone();
@@ -135,39 +189,195 @@ impl Coordinator {
                     .spawn(move || {
                         let enc = Encoder::new(&ctx);
                         let mut ev = Evaluator::new(ctx.clone());
-                        while let Ok(req) = rx.recv() {
-                            if let Request::Encrypted {
-                                session_id,
-                                ct,
-                                enqueued,
-                                resp,
-                            } = req
-                            {
-                                let result = match sessions.get(session_id) {
-                                    Some(sess) => {
-                                        let (outs, _) = server.eval(
-                                            &mut ev,
-                                            &enc,
-                                            &ct,
-                                            &sess.relin,
-                                            &sess.galois,
-                                        );
-                                        Ok(outs)
-                                    }
-                                    None => Err(format!("no session {session_id}")),
-                                };
-                                loads[w].fetch_sub(1, Ordering::Relaxed);
-                                metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
-                                metrics
-                                    .encrypted_latency
-                                    .lock()
-                                    .unwrap()
-                                    .record(enqueued.elapsed());
-                                let _ = resp.send(result);
+                        while let Ok(job) = rx.recv() {
+                            match job {
+                                WorkerJob::Group { session_id, items } => {
+                                    run_group(
+                                        &server, &sessions, &metrics, &mut ev, &enc,
+                                        session_id, items,
+                                    );
+                                }
+                                WorkerJob::Packed {
+                                    session_id,
+                                    ct,
+                                    n_samples,
+                                    enqueued,
+                                    resp,
+                                } => {
+                                    let result = match sessions.get(session_id) {
+                                        Some(sess) => {
+                                            let (outs, _) = server.eval(
+                                                &mut ev,
+                                                &enc,
+                                                &ct,
+                                                &sess.relin,
+                                                &sess.galois,
+                                            );
+                                            Ok(outs)
+                                        }
+                                        None => Err(format!("no session {session_id}")),
+                                    };
+                                    metrics
+                                        .encrypted_completed
+                                        .fetch_add(n_samples as u64, Ordering::Relaxed);
+                                    metrics
+                                        .encrypted_latency
+                                        .lock()
+                                        .unwrap()
+                                        .record(enqueued.elapsed());
+                                    let _ = resp.send(result);
+                                }
                             }
+                            loads[w].fetch_sub(1, Ordering::Relaxed);
                         }
                     })
                     .expect("spawn worker"),
+            );
+        }
+
+        // --- encrypted-path batcher ---------------------------------
+        let (enc_tx, enc_rx) = sync_channel::<Request>(cfg.queue_capacity);
+        {
+            let metrics = metrics.clone();
+            let loads = worker_loads.clone();
+            let worker_txs = worker_txs;
+            let batch_delay = cfg.batch_delay;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("enc-batcher".into())
+                    .spawn(move || {
+                        let dispatch = |job: WorkerJob| {
+                            let (best, _) = loads
+                                .iter()
+                                .enumerate()
+                                .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
+                                .expect("workers >= 1");
+                            loads[best].fetch_add(1, Ordering::Relaxed);
+                            // Blocking send: when every worker queue is
+                            // full the batcher stalls, which backs
+                            // pressure up through the router to callers.
+                            if worker_txs[best].send(job).is_err() {
+                                loads[best].fetch_sub(1, Ordering::Relaxed);
+                            }
+                        };
+                        // Per-session forming groups.
+                        struct Forming {
+                            policy: BatchPolicy,
+                            items: Vec<EncItem>,
+                        }
+                        let mut forming: HashMap<u64, Forming> = HashMap::new();
+                        let flush = |sid: u64,
+                                     f: &mut Forming,
+                                     metrics: &Metrics,
+                                     dispatch: &dyn Fn(WorkerJob)| {
+                            let n = f.items.len();
+                            if n == 0 {
+                                return;
+                            }
+                            if enc_batch > 1 {
+                                metrics
+                                    .enc_batches_flushed
+                                    .fetch_add(1, Ordering::Relaxed);
+                                metrics
+                                    .enc_batch_fill_sum
+                                    .fetch_add(n as u64, Ordering::Relaxed);
+                            }
+                            dispatch(WorkerJob::Group {
+                                session_id: sid,
+                                items: std::mem::take(&mut f.items),
+                            });
+                            f.policy.on_flush(n);
+                        };
+                        loop {
+                            let deadline = forming
+                                .values()
+                                .filter_map(|f| f.policy.deadline())
+                                .min();
+                            let timeout = deadline
+                                .map(|d| d.saturating_duration_since(Instant::now()))
+                                .unwrap_or(Duration::from_millis(50));
+                            match enc_rx.recv_timeout(timeout) {
+                                Ok(Request::Encrypted {
+                                    session_id,
+                                    ct,
+                                    enqueued,
+                                    resp,
+                                }) => {
+                                    if enc_batch <= 1 {
+                                        dispatch(WorkerJob::Group {
+                                            session_id,
+                                            items: vec![(ct, enqueued, resp)],
+                                        });
+                                    } else {
+                                        let f = forming.entry(session_id).or_insert_with(
+                                            || Forming {
+                                                policy: BatchPolicy::new(
+                                                    enc_batch,
+                                                    batch_delay,
+                                                ),
+                                                items: Vec::new(),
+                                            },
+                                        );
+                                        f.items.push((ct, enqueued, resp));
+                                        if f.policy.on_arrival(Instant::now())
+                                            == BatchAction::Flush
+                                        {
+                                            flush(session_id, f, &metrics, &dispatch);
+                                        }
+                                    }
+                                }
+                                Ok(Request::EncryptedPacked {
+                                    session_id,
+                                    ct,
+                                    n_samples,
+                                    enqueued,
+                                    resp,
+                                }) => {
+                                    dispatch(WorkerJob::Packed {
+                                        session_id,
+                                        ct,
+                                        n_samples,
+                                        enqueued,
+                                        resp,
+                                    });
+                                }
+                                Ok(Request::Plain { .. }) => {
+                                    unreachable!("router sends only encrypted here")
+                                }
+                                Err(RecvTimeoutError::Timeout) => {}
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    let sids: Vec<u64> = forming.keys().copied().collect();
+                                    for sid in sids {
+                                        if let Some(f) = forming.get_mut(&sid) {
+                                            flush(sid, f, &metrics, &dispatch);
+                                        }
+                                    }
+                                    break;
+                                }
+                            }
+                            // Timed-out partial batches are checked on EVERY
+                            // iteration — not only when the channel goes
+                            // quiet — so a held request's extra latency is
+                            // bounded by batch_delay even under a steady
+                            // stream of other sessions' traffic. Flushed
+                            // (empty) sessions are evicted to keep this scan
+                            // and the map itself bounded by *active* sessions.
+                            let now = Instant::now();
+                            let mut due = Vec::new();
+                            for (sid, f) in forming.iter_mut() {
+                                if f.policy.on_tick(now) == BatchAction::Flush {
+                                    due.push(*sid);
+                                }
+                            }
+                            for sid in due {
+                                if let Some(f) = forming.get_mut(&sid) {
+                                    flush(sid, f, &metrics, &dispatch);
+                                }
+                            }
+                            forming.retain(|_, f| !f.items.is_empty());
+                        }
+                    })
+                    .expect("spawn enc-batcher"),
             );
         }
 
@@ -181,7 +391,7 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name("plain-batcher".into())
                     .spawn(move || {
-                        // PJRT fast path, loaded on this thread only.
+                        // Slot-model fast path, loaded on this thread only.
                         let slot_model: Option<(SlotModel, SlotModelParams)> =
                             artifacts_dir.and_then(|dir| {
                                 match SlotModel::load(&dir) {
@@ -191,7 +401,7 @@ impl Coordinator {
                                             Ok(p) => Some((sm, p)),
                                             Err(e) => {
                                                 eprintln!(
-                                                    "[batcher] PJRT params mismatch ({e}); using Rust slot math"
+                                                    "[batcher] slot-model params mismatch ({e}); using Rust slot math"
                                                 );
                                                 None
                                             }
@@ -199,7 +409,7 @@ impl Coordinator {
                                     }
                                     Err(e) => {
                                         eprintln!(
-                                            "[batcher] PJRT load failed ({e}); using Rust slot math"
+                                            "[batcher] slot-model load failed ({e}); using Rust slot math"
                                         );
                                         None
                                     }
@@ -222,7 +432,7 @@ impl Coordinator {
                                         .collect()
                                 })
                                 .collect();
-                            // PJRT fast path, Rust slot math fallback.
+                            // Slot-model fast path, Rust slot math fallback.
                             let scores: Vec<Vec<f64>> = match &slot_model {
                                 Some(sm) => match sm.0.infer_batch(&slot_inputs, &sm.1) {
                                     Ok(rows) => rows
@@ -231,7 +441,7 @@ impl Coordinator {
                                         .collect(),
                                     Err(e) => {
                                         for (_, _, resp) in held.drain(..) {
-                                            let _ = resp.send(Err(format!("pjrt: {e}")));
+                                            let _ = resp.send(Err(format!("slot model: {e}")));
                                         }
                                         return n;
                                     }
@@ -292,32 +502,24 @@ impl Coordinator {
 
         // --- router --------------------------------------------------
         {
-            let loads = worker_loads;
             threads.push(
                 std::thread::Builder::new()
                     .name("router".into())
                     .spawn(move || {
                         while let Ok(req) = ingress_rx.recv() {
                             match req {
-                                enc @ Request::Encrypted { .. } => {
-                                    // Least-outstanding-work routing.
-                                    let (best, _) = loads
-                                        .iter()
-                                        .enumerate()
-                                        .min_by_key(|(_, l)| l.load(Ordering::Relaxed))
-                                        .expect("workers >= 1");
-                                    loads[best].fetch_add(1, Ordering::Relaxed);
-                                    if worker_txs[best].send(enc).is_err() {
-                                        loads[best].fetch_sub(1, Ordering::Relaxed);
-                                    }
+                                enc @ (Request::Encrypted { .. }
+                                | Request::EncryptedPacked { .. }) => {
+                                    let _ = enc_tx.send(enc);
                                 }
                                 plain @ Request::Plain { .. } => {
                                     let _ = batch_tx.send(plain);
                                 }
                             }
                         }
-                        // ingress closed: drop worker/batcher senders so
-                        // their loops terminate.
+                        // ingress closed: drop enc-batcher/batcher
+                        // senders so their loops terminate (and they
+                        // drop the worker senders in turn).
                     })
                     .expect("spawn router"),
             );
@@ -327,13 +529,15 @@ impl Coordinator {
             ingress: ingress_tx,
             metrics,
             sessions,
+            max_packed: groups,
             shutdown,
             threads,
         }
     }
 
-    /// Submit an encrypted inference. Fails fast on backpressure or a
-    /// missing session (checked before queueing).
+    /// Submit an encrypted inference (one observation packed in sample
+    /// group 0 — the `HrfClient::encrypt_input` layout). Fails fast on
+    /// backpressure or a missing session (checked before queueing).
     pub fn submit_encrypted(
         &self,
         session_id: u64,
@@ -355,16 +559,41 @@ impl Coordinator {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        match self.ingress.try_send(req) {
-            Ok(()) => Ok(resp_rx),
-            Err(TrySendError::Full(_)) => {
-                self.metrics
-                    .rejected_backpressure
-                    .fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Busy)
-            }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        self.try_enqueue(req, resp_rx)
+    }
+
+    /// Submit a client-side packed group of `n_samples ≤ plan.groups`
+    /// observations (the `HrfClient::encrypt_batch` layout). The
+    /// response's per-class ciphertexts carry sample `g`'s score at
+    /// `plan.score_slot(g)`; unpack with
+    /// `HrfClient::decrypt_scores_batch`.
+    pub fn submit_encrypted_packed(
+        &self,
+        session_id: u64,
+        ct: Ciphertext,
+        n_samples: usize,
+    ) -> Result<Receiver<EncResponse>, SubmitError> {
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(SubmitError::Closed);
         }
+        if n_samples == 0 || n_samples > self.max_packed {
+            return Err(SubmitError::BatchTooLarge);
+        }
+        if self.sessions.get(session_id).is_none() {
+            self.metrics
+                .rejected_no_session
+                .fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::NoSession);
+        }
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let req = Request::EncryptedPacked {
+            session_id,
+            ct: Box::new(ct),
+            n_samples,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        self.try_enqueue(req, resp_rx)
     }
 
     /// Submit a plaintext inference (features, not slots).
@@ -378,6 +607,14 @@ impl Coordinator {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
+        self.try_enqueue(req, resp_rx)
+    }
+
+    fn try_enqueue<T>(
+        &self,
+        req: Request,
+        resp_rx: Receiver<T>,
+    ) -> Result<Receiver<T>, SubmitError> {
         match self.ingress.try_send(req) {
             Ok(()) => Ok(resp_rx),
             Err(TrySendError::Full(_)) => {
@@ -394,7 +631,7 @@ impl Coordinator {
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         // Dropping the ingress sender unblocks the router, which drops
-        // worker/batcher senders in turn.
+        // enc-batcher/batcher senders in turn.
         drop(std::mem::replace(&mut self.ingress, {
             let (tx, _rx) = sync_channel(1);
             tx
@@ -408,5 +645,70 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Evaluate one flushed group of single-sample requests on a worker.
+///
+/// Packed-group evaluation needs (a) a live session whose Galois keys
+/// cover the batch rotations and (b) ciphertexts at a uniform
+/// (level, scale); anything else degrades to per-request evaluation,
+/// preserving the response contract.
+fn run_group(
+    server: &HrfServer,
+    sessions: &SessionManager,
+    metrics: &Metrics,
+    ev: &mut Evaluator,
+    enc: &Encoder,
+    session_id: u64,
+    items: Vec<EncItem>,
+) {
+    let sess = match sessions.get(session_id) {
+        Some(s) => s,
+        None => {
+            for (_, enqueued, resp) in items {
+                metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .encrypted_latency
+                    .lock()
+                    .unwrap()
+                    .record(enqueued.elapsed());
+                let _ = resp.send(Err(format!("no session {session_id}")));
+            }
+            return;
+        }
+    };
+    let uniform = items.windows(2).all(|w| {
+        w[0].0.level == w[1].0.level && (w[0].0.scale - w[1].0.scale).abs() < 1e-6
+    });
+    if items.len() > 1 && uniform && server.can_batch(&sess.galois, items.len()) {
+        // Move the ciphertexts out (no deep clones on the hot path);
+        // only the (enqueue time, reply sender) metadata is needed
+        // after the evaluation.
+        let (cts, meta): (Vec<Ciphertext>, Vec<(Instant, SyncSender<EncResponse>)>) = items
+            .into_iter()
+            .map(|(ct, enqueued, resp)| (*ct, (enqueued, resp)))
+            .unzip();
+        let (per_sample, _) = server.eval_batch(ev, enc, &cts, &sess.relin, &sess.galois);
+        for ((enqueued, resp), outs) in meta.into_iter().zip(per_sample) {
+            metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .encrypted_latency
+                .lock()
+                .unwrap()
+                .record(enqueued.elapsed());
+            let _ = resp.send(Ok(outs));
+        }
+    } else {
+        for (ct, enqueued, resp) in items {
+            let (outs, _) = server.eval(ev, enc, &ct, &sess.relin, &sess.galois);
+            metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .encrypted_latency
+                .lock()
+                .unwrap()
+                .record(enqueued.elapsed());
+            let _ = resp.send(Ok(outs));
+        }
     }
 }

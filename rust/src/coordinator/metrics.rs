@@ -67,6 +67,10 @@ pub struct Metrics {
     pub rejected_no_session: AtomicU64,
     pub batches_flushed: AtomicU64,
     pub batch_fill_sum: AtomicU64,
+    /// Encrypted-path group flushes (one packed HE evaluation each).
+    pub enc_batches_flushed: AtomicU64,
+    /// Samples carried by those flushes (fill = sum / flushed).
+    pub enc_batch_fill_sum: AtomicU64,
     pub encrypted_latency: Mutex<Histogram>,
     pub plain_latency: Mutex<Histogram>,
 }
@@ -80,6 +84,8 @@ pub struct MetricsSnapshot {
     pub rejected_no_session: u64,
     pub batches_flushed: u64,
     pub mean_batch_fill: f64,
+    pub enc_batches_flushed: u64,
+    pub mean_enc_batch_fill: f64,
     pub encrypted_mean: Duration,
     pub encrypted_p95: Duration,
     pub plain_mean: Duration,
@@ -91,6 +97,7 @@ impl Metrics {
         let enc = self.encrypted_latency.lock().unwrap();
         let plain = self.plain_latency.lock().unwrap();
         let flushed = self.batches_flushed.load(Ordering::Relaxed);
+        let enc_flushed = self.enc_batches_flushed.load(Ordering::Relaxed);
         MetricsSnapshot {
             encrypted_completed: self.encrypted_completed.load(Ordering::Relaxed),
             plain_completed: self.plain_completed.load(Ordering::Relaxed),
@@ -101,6 +108,12 @@ impl Metrics {
                 0.0
             } else {
                 self.batch_fill_sum.load(Ordering::Relaxed) as f64 / flushed as f64
+            },
+            enc_batches_flushed: enc_flushed,
+            mean_enc_batch_fill: if enc_flushed == 0 {
+                0.0
+            } else {
+                self.enc_batch_fill_sum.load(Ordering::Relaxed) as f64 / enc_flushed as f64
             },
             encrypted_mean: enc.mean(),
             encrypted_p95: enc.quantile(0.95),

@@ -6,24 +6,55 @@
 //! nothing about the *data* when done client-side (§3), only requiring
 //! the model owner to publish τ (which variables the forest compares,
 //! not the thresholds).
+//!
+//! With the group layout of [`HrfPlan`](super::plan::HrfPlan) a client
+//! can pack up to `plan.groups` observations into **one** ciphertext
+//! ([`reshuffle_and_pack_group`] / [`HrfClient::encrypt_batch`]) and
+//! read each observation's scores back from its group's score slot
+//! ([`HrfClient::decrypt_scores_batch`]) — amortizing the whole
+//! homomorphic evaluation across the batch.
 
 use super::pack::HrfModel;
-use crate::ckks::{Ciphertext, Decryptor, Encoder, Encryptor};
 use crate::ckks::rns::CkksContext;
+use crate::ckks::{Ciphertext, Decryptor, Encoder, Encryptor};
 
-/// Build the packed slot vector `x̃` for one observation:
-/// per tree block, `(x_τ | 0 | x_τ)` (Algorithm 3 lines 2–5).
-pub fn reshuffle_and_pack(model: &HrfModel, x: &[f64]) -> Vec<f64> {
+/// Write one observation's reshuffled blocks into `slots` at group
+/// offset `goff`: per tree block, `(x_τ | 0 | x_τ)` (Algorithm 3
+/// lines 2–5).
+fn pack_into_group(model: &HrfModel, x: &[f64], slots: &mut [f64], goff: usize) {
     let p = &model.plan;
-    let mut slots = vec![0.0f64; p.slots];
     for (li, tau) in model.taus.iter().enumerate() {
-        let base = p.block_start(li);
+        let base = goff + p.block_start(li);
         for (j, &feat) in tau.iter().enumerate() {
             let v = x[feat];
             slots[base + j] = v; // first copy
             slots[base + p.k + j] = v; // replica
         }
         // slot base+k-1 stays 0 (padding comparison input).
+    }
+}
+
+/// Build the packed slot vector `x̃` for one observation in group 0.
+pub fn reshuffle_and_pack(model: &HrfModel, x: &[f64]) -> Vec<f64> {
+    let mut slots = vec![0.0f64; model.plan.slots];
+    pack_into_group(model, x, &mut slots, 0);
+    slots
+}
+
+/// Build the packed slot vector for up to `plan.groups` observations:
+/// observation `g` occupies sample group `g`. Panics if more samples
+/// than groups are supplied.
+pub fn reshuffle_and_pack_group(model: &HrfModel, xs: &[Vec<f64>]) -> Vec<f64> {
+    let p = &model.plan;
+    assert!(
+        xs.len() <= p.groups,
+        "batch of {} exceeds {} sample groups",
+        xs.len(),
+        p.groups
+    );
+    let mut slots = vec![0.0f64; p.slots];
+    for (g, x) in xs.iter().enumerate() {
+        pack_into_group(model, x, &mut slots, p.group_start(g));
     }
     slots
 }
@@ -54,6 +85,19 @@ impl HrfClient {
         self.encryptor.encrypt_slots(ctx, enc, &slots)
     }
 
+    /// Encrypt a batch of up to `plan.groups` observations into one
+    /// ciphertext (observation `g` in sample group `g`).
+    pub fn encrypt_batch(
+        &mut self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        model: &HrfModel,
+        xs: &[Vec<f64>],
+    ) -> Ciphertext {
+        let slots = reshuffle_and_pack_group(model, xs);
+        self.encryptor.encrypt_slots(ctx, enc, &slots)
+    }
+
     /// Decrypt per-class score ciphertexts (score of class c lives in
     /// slot 0 of `cts[c]`) and return (scores, argmax).
     pub fn decrypt_scores(
@@ -69,6 +113,33 @@ impl HrfClient {
         let pred = crate::forest::tree::argmax(&scores);
         (scores, pred)
     }
+
+    /// Decrypt per-class score ciphertexts of a **packed batch**: the
+    /// score of sample `g`, class `c` lives at `plan.score_slot(g)` of
+    /// `cts[c]`. Returns `(scores, argmax)` per sample.
+    pub fn decrypt_scores_batch(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        model: &HrfModel,
+        cts: &[Ciphertext],
+        n_samples: usize,
+    ) -> Vec<(Vec<f64>, usize)> {
+        let p = &model.plan;
+        assert!(n_samples <= p.groups);
+        let decoded: Vec<Vec<f64>> = cts
+            .iter()
+            .map(|ct| self.decryptor.decrypt_slots(ctx, enc, ct))
+            .collect();
+        (0..n_samples)
+            .map(|g| {
+                let slot = p.score_slot(g);
+                let scores: Vec<f64> = decoded.iter().map(|d| d[slot]).collect();
+                let pred = crate::forest::tree::argmax(&scores);
+                (scores, pred)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -79,8 +150,7 @@ mod tests {
     use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
     use crate::nrf::NeuralForest;
 
-    #[test]
-    fn packed_input_has_replicated_blocks() {
+    fn model() -> (crate::data::Dataset, HrfModel) {
         let ds = adult::generate(500, 71);
         let rf = RandomForest::fit(
             &ds,
@@ -93,6 +163,12 @@ mod tests {
         let coeffs = chebyshev_fit_tanh(3.0, 4);
         let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
         let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 4096).unwrap();
+        (ds, hm)
+    }
+
+    #[test]
+    fn packed_input_has_replicated_blocks() {
+        let (ds, hm) = model();
         let x = &ds.x[0];
         let slots = reshuffle_and_pack(&hm, x);
         let p = &hm.plan;
@@ -105,9 +181,46 @@ mod tests {
             }
             assert_eq!(slots[base + p.k - 1], 0.0);
         }
-        // tail zero
+        // Everything outside group 0's used region is zero.
         for s in p.used_slots..p.slots {
             assert_eq!(slots[s], 0.0);
         }
+    }
+
+    #[test]
+    fn group_pack_places_each_sample_in_its_group() {
+        let (ds, hm) = model();
+        let p = hm.plan;
+        assert!(p.groups >= 3, "need multiple groups for this test");
+        let xs: Vec<Vec<f64>> = ds.x.iter().take(3).cloned().collect();
+        let slots = reshuffle_and_pack_group(&hm, &xs);
+        for (g, x) in xs.iter().enumerate() {
+            let single = reshuffle_and_pack(&hm, x);
+            let off = p.group_start(g);
+            for s in 0..p.reduce_span {
+                assert_eq!(
+                    slots[off + s],
+                    single[s],
+                    "group {g} slot {s} differs from single-sample layout"
+                );
+            }
+        }
+        // Unoccupied groups stay zero.
+        for g in xs.len()..p.groups {
+            let off = p.group_start(g);
+            for s in 0..p.reduce_span {
+                assert_eq!(slots[off + s], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn group_pack_rejects_oversized_batch() {
+        let (ds, hm) = model();
+        let xs: Vec<Vec<f64>> = (0..hm.plan.groups + 1)
+            .map(|i| ds.x[i % ds.len()].clone())
+            .collect();
+        let _ = reshuffle_and_pack_group(&hm, &xs);
     }
 }

@@ -1,7 +1,9 @@
 //! Homomorphic Random Forests — the paper's contribution (§3).
 //!
 //! * [`plan`] — the SIMD slot layout: one `2K−1`-slot block per tree,
-//!   `L` blocks per ciphertext, constraint `L(2K−1) ≤ N/2`.
+//!   `L` blocks per **sample group**, `N/2 ÷ group_span` independent
+//!   groups per ciphertext (cross-instance batching), constraint
+//!   `L(2K−1) ≤ N/2`.
 //! * [`pack`] — RF/NRF → packed server-side model: replicated
 //!   threshold vector, the `K` generalized diagonals of all `V`
 //!   matrices (Algorithm 1's operands), output masks and biases.
@@ -9,8 +11,9 @@
 //!   per-tree replication, encode + encrypt; decrypt + argmax.
 //! * [`server`] — Algorithm 3's server half: comparisons, packed
 //!   matrix multiplication (Algorithm 1), polynomial activations,
-//!   per-class homomorphic dot products (Algorithm 2); per-layer op
-//!   counts (Table 1).
+//!   per-class **group-local** homomorphic dot products (Algorithm 2);
+//!   packed-group combine/extract for server-side batching; per-layer
+//!   op counts (Table 1).
 //! * [`cryptonet`] — the §5 comparison baseline: a CryptoNet-style
 //!   HE-MLP with square activations, batched across slots.
 

@@ -1,7 +1,11 @@
 //! NRF → packed HRF model (the server-side plaintext operands of
 //! Algorithm 3).
 //!
-//! All parameters are laid out in the slot layout of [`HrfPlan`]:
+//! All parameters are laid out in the slot layout of [`HrfPlan`] and
+//! **replicated into every sample group** (`plan.groups` copies at
+//! `group_span` strides), so one ciphertext carrying up to
+//! `plan.groups` independent observations is evaluated by the very same
+//! plaintext operands:
 //!
 //! * `t_slots` — thresholds, replicated exactly like the input
 //!   (`(t_τ | 0 | t_τ)` per block) so `x̃ − t̃` aligns;
@@ -65,34 +69,42 @@ impl HrfModel {
 
         for (li, (nt, &alpha)) in nf.trees.iter().zip(&nf.alphas).enumerate() {
             assert_eq!(nt.k(), k, "trees must share padded K");
-            let base = li * block;
             taus.push(nt.tau.clone());
-            // Thresholds replicated like the input block:
-            // slots 0..K-1: t_0..t_{K-2}, 0 ; slots K..2K-2: t_0..t_{K-2}.
-            for j in 0..k - 1 {
-                t_slots[base + j] = nt.t[j];
-                t_slots[base + k + j] = nt.t[j];
-            }
-            // t_slots[base + k - 1] stays 0 (padding comparison).
+            // Write the tree's operands into every sample group: the
+            // same model serves `plan.groups` packed observations.
+            for g in 0..plan.groups {
+                let base = plan.group_start(g) + li * block;
+                // Thresholds replicated like the input block:
+                // slots 0..K-1: t_0..t_{K-2}, 0 ; slots K..2K-2: t_0..t_{K-2}.
+                for j in 0..k - 1 {
+                    t_slots[base + j] = nt.t[j];
+                    t_slots[base + k + j] = nt.t[j];
+                }
+                // t_slots[base + k - 1] stays 0 (padding comparison).
 
-            // Diagonals of V (K×K; column K-1 is the zero padding
-            // column since there are only K-1 comparisons).
-            for j in 0..k {
+                // Diagonals of V (K×K; column K-1 is the zero padding
+                // column since there are only K-1 comparisons).
+                for j in 0..k {
+                    for p in 0..k {
+                        let col = (p + j) % k;
+                        let w = if col < k - 1 { nt.v[p][col] } else { 0.0 };
+                        diag_slots[j][base + p] = w;
+                    }
+                }
+                // Leaf biases.
                 for p in 0..k {
-                    let col = (p + j) % k;
-                    let w = if col < k - 1 { nt.v[p][col] } else { 0.0 };
-                    diag_slots[j][base + p] = w;
+                    b_slots[base + p] = nt.b[p];
+                }
+                // Output masks.
+                for ci in 0..c {
+                    for p in 0..k {
+                        w_slots[ci][base + p] = alpha * nt.w[ci][p];
+                    }
                 }
             }
-            // Leaf biases.
-            for p in 0..k {
-                b_slots[base + p] = nt.b[p];
-            }
-            // Output masks and biases.
+            // Output biases (per class, not per slot — added once after
+            // the group-local reduction).
             for ci in 0..c {
-                for p in 0..k {
-                    w_slots[ci][base + p] = alpha * nt.w[ci][p];
-                }
                 betas[ci] += alpha * nt.beta[ci];
             }
         }
@@ -109,11 +121,19 @@ impl HrfModel {
         })
     }
 
-    /// Reference slot-level forward pass in plaintext f64 — the oracle
-    /// the HE evaluation and the AOT JAX slot model are both checked
-    /// against (same dataflow, no encryption).
-    pub fn forward_slots_plain(&self, x_slots: &[f64]) -> Vec<f64> {
+    /// Reference slot-level forward pass in plaintext f64, layer by
+    /// layer — the oracle the HE evaluation, the AOT JAX slot model and
+    /// the golden parity fixture are all checked against (same
+    /// dataflow, no encryption).
+    ///
+    /// Returns `(u, v, group_scores)`: the two activated slot vectors
+    /// and the per-group class scores (`group_scores[g][c]`).
+    pub fn forward_slots_layers(
+        &self,
+        x_slots: &[f64],
+    ) -> (Vec<f64>, Vec<f64>, Vec<Vec<f64>>) {
         let p = &self.plan;
+        assert_eq!(x_slots.len(), p.slots, "input must span all slots");
         let act = |v: f64| crate::nrf::activation::horner(&self.act_coeffs, v);
         // Layer 1: u = P(x̃ − t̃)
         let u: Vec<f64> = x_slots
@@ -134,17 +154,40 @@ impl HrfModel {
             .zip(&self.b_slots)
             .map(|(&s, &b)| act(s + b))
             .collect();
-        // Layer 3: per class, masked sum + β.
-        (0..p.c)
-            .map(|ci| {
-                self.w_slots[ci]
-                    .iter()
-                    .zip(&v)
-                    .map(|(w, v)| w * v)
-                    .sum::<f64>()
-                    + self.betas[ci]
+        // Layer 3: per group, per class — masked sum over the group's
+        // span + β. Mirrors the HE side's group-local rotate-and-sum.
+        let scores = (0..p.groups)
+            .map(|g| {
+                let lo = p.group_start(g);
+                let hi = lo + p.reduce_span;
+                (0..p.c)
+                    .map(|ci| {
+                        self.w_slots[ci][lo..hi]
+                            .iter()
+                            .zip(&v[lo..hi])
+                            .map(|(w, v)| w * v)
+                            .sum::<f64>()
+                            + self.betas[ci]
+                    })
+                    .collect()
             })
-            .collect()
+            .collect();
+        (u, v, scores)
+    }
+
+    /// Per-group class scores for a ciphertext packed with up to
+    /// `plan.groups` observations (`result[g][c]`).
+    pub fn forward_slots_plain_groups(&self, x_slots: &[f64]) -> Vec<Vec<f64>> {
+        self.forward_slots_layers(x_slots).2
+    }
+
+    /// Single-observation forward (the observation lives in group 0 —
+    /// the layout [`crate::hrf::client::reshuffle_and_pack`] produces).
+    pub fn forward_slots_plain(&self, x_slots: &[f64]) -> Vec<f64> {
+        self.forward_slots_plain_groups(x_slots)
+            .into_iter()
+            .next()
+            .expect("plan has >= 1 group")
     }
 }
 
@@ -192,7 +235,6 @@ mod tests {
         // The packed slot dataflow must agree with the straightforward
         // per-tree NRF forward (same polynomial activation).
         let (ds, nf, hm) = packed();
-        let client = crate::hrf::client::reshuffle_and_pack(&hm, &ds.x[0]);
         for x in ds.x.iter().take(100) {
             let x_slots = crate::hrf::client::reshuffle_and_pack(&hm, x);
             let got = hm.forward_slots_plain(&x_slots);
@@ -204,7 +246,27 @@ mod tests {
                 );
             }
         }
-        let _ = client;
+    }
+
+    #[test]
+    fn operands_replicated_across_groups() {
+        let (_, _, hm) = packed();
+        let p = &hm.plan;
+        assert!(p.groups >= 2, "test needs a multi-group plan");
+        let span = p.reduce_span;
+        for g in 1..p.groups {
+            let off = p.group_start(g);
+            for s in 0..span {
+                assert_eq!(hm.t_slots[off + s], hm.t_slots[s], "t group {g} slot {s}");
+                assert_eq!(hm.b_slots[off + s], hm.b_slots[s], "b group {g} slot {s}");
+                for d in &hm.diag_slots {
+                    assert_eq!(d[off + s], d[s], "diag group {g} slot {s}");
+                }
+                for w in &hm.w_slots {
+                    assert_eq!(w[off + s], w[s], "w group {g} slot {s}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -212,14 +274,36 @@ mod tests {
         let (_, _, hm) = packed();
         let p = &hm.plan;
         for ci in 0..p.c {
-            for li in 0..p.l {
-                let base = p.block_start(li);
-                for off in p.k..p.block {
-                    assert_eq!(hm.w_slots[ci][base + off], 0.0);
+            for g in 0..p.groups {
+                let goff = p.group_start(g);
+                for li in 0..p.l {
+                    let base = goff + p.block_start(li);
+                    for off in p.k..p.block {
+                        assert_eq!(hm.w_slots[ci][base + off], 0.0);
+                    }
+                }
+                // Group tail (beyond the L blocks) is zero.
+                for s in (goff + p.used_slots)..(goff + p.reduce_span) {
+                    assert_eq!(hm.w_slots[ci][s], 0.0);
                 }
             }
-            for s in p.used_slots..p.slots {
-                assert_eq!(hm.w_slots[ci][s], 0.0);
+        }
+    }
+
+    #[test]
+    fn grouped_forward_is_per_sample_independent() {
+        // Pack two different samples into groups 0 and 1: each group's
+        // scores must equal the single-sample result.
+        let (ds, _, hm) = packed();
+        let p = hm.plan;
+        assert!(p.groups >= 2);
+        let xs: Vec<Vec<f64>> = ds.x.iter().take(2).cloned().collect();
+        let packed = crate::hrf::client::reshuffle_and_pack_group(&hm, &xs);
+        let grouped = hm.forward_slots_plain_groups(&packed);
+        for (g, x) in xs.iter().enumerate() {
+            let single = hm.forward_slots_plain(&crate::hrf::client::reshuffle_and_pack(&hm, x));
+            for (a, b) in grouped[g].iter().zip(&single) {
+                assert!((a - b).abs() < 1e-9, "group {g}: {grouped:?} vs {single:?}");
             }
         }
     }

@@ -1,5 +1,7 @@
 //! Slot-layout planning for packed HRF evaluation.
 //!
+//! # Tree blocks (paper §2.1)
+//!
 //! Every tree occupies a contiguous block of `2K−1` slots:
 //!
 //! ```text
@@ -11,6 +13,39 @@
 //! correct windows inside every block simultaneously (paper §2.1's
 //! wrap-around fix), which is what lets `L` trees be evaluated for the
 //! price of one `K×K` diagonal matmul.
+//!
+//! # Sample groups (cross-instance SIMD batching)
+//!
+//! One model uses `L(2K−1)` slots, but a ciphertext carries `N/2`. The
+//! remaining slots are organized into **sample groups**: the `L`-block
+//! layout above is replicated at every multiple of `group_span` (the
+//! power of two covering `L(2K−1)`), and each group carries an
+//! *independent* observation:
+//!
+//! ```text
+//!   slot 0                group_span            2·group_span
+//!   ├──────────────────────┼──────────────────────┼── …
+//!   │ sample 0             │ sample 1             │ sample 2 …
+//!   │ [T0][T1]…[T_{L-1}] 0 │ [T0][T1]…[T_{L-1}] 0 │
+//!   │  └─ L·(2K−1) used ─┘ │  └─ same layout ───┘ │
+//!   └──────────────────────┴──────────────────────┴── …
+//!        groups = slots / group_span   (a power of two ≥ 1)
+//! ```
+//!
+//! Group locality is what keeps samples from mixing:
+//!
+//! * Algorithm 1's rotations (`1..K−1`) only *read across* a group
+//!   boundary at slots where every diagonal operand is zero, because
+//!   nonzero diagonal entries sit in the first `K` slots of a block and
+//!   `block_start(L−1) + K − 1 + (K−1) = used_slots − 1 < group_span`;
+//! * Algorithm 2's rotate-and-sum runs over `group_span` (not the whole
+//!   ciphertext), so the score landing in `score_slot(g) = g·group_span`
+//!   is the sum of group `g`'s slots only.
+//!
+//! Batching `B ≤ groups` observations into one ciphertext therefore
+//! amortizes the entire homomorphic evaluation ~`B×` — the same
+//! cross-instance SIMD batching CryptoNets-style systems use, applied
+//! to the HRF layout.
 
 /// Packing plan for one HRF model on one parameter set.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,11 +60,15 @@ pub struct HrfPlan {
     pub d: usize,
     /// Slots per tree block = 2K−1.
     pub block: usize,
-    /// Total used slots = L·(2K−1).
+    /// Slots used by one sample group = L·(2K−1).
     pub used_slots: usize,
-    /// Power-of-two span covering `used_slots` for the Algorithm 2
-    /// rotate-and-sum.
+    /// Power-of-two span of one sample group: covers `used_slots` and
+    /// bounds the Algorithm 2 rotate-and-sum, so the reduction never
+    /// crosses into the next group.
     pub reduce_span: usize,
+    /// Number of independent sample groups per ciphertext
+    /// (= slots / reduce_span, a power of two ≥ 1).
+    pub groups: usize,
     /// Total slots available (N/2).
     pub slots: usize,
 }
@@ -40,6 +79,9 @@ impl HrfPlan {
     pub fn new(k: usize, l: usize, c: usize, d: usize, slots: usize) -> Result<Self, String> {
         if !k.is_power_of_two() {
             return Err(format!("K={k} must be a power of two"));
+        }
+        if !slots.is_power_of_two() {
+            return Err(format!("slot count {slots} must be a power of two"));
         }
         let block = 2 * k - 1;
         let used = l * block;
@@ -62,19 +104,35 @@ impl HrfPlan {
             block,
             used_slots: used,
             reduce_span,
+            groups: slots / reduce_span,
             slots,
         })
     }
 
-    /// Slot offset of tree `l`'s block.
+    /// Slot offset of tree `l`'s block within sample group 0. Add
+    /// [`HrfPlan::group_start`] for other groups.
     pub fn block_start(&self, l: usize) -> usize {
         l * self.block
     }
 
-    /// Rotation steps the server needs Galois keys for:
+    /// First slot of sample group `g`.
+    pub fn group_start(&self, g: usize) -> usize {
+        debug_assert!(g < self.groups);
+        g * self.reduce_span
+    }
+
+    /// Slot where sample group `g`'s class score lands after the
+    /// group-local Algorithm 2 reduction.
+    pub fn score_slot(&self, g: usize) -> usize {
+        self.group_start(g)
+    }
+
+    /// Rotation steps used *during* one (possibly batched) evaluation:
     /// `1..K−1` (Algorithm 1) plus the powers of two up to
-    /// `reduce_span/2` (Algorithm 2).
-    pub fn rotations_needed(&self) -> Vec<usize> {
+    /// `reduce_span/2` (the group-local Algorithm 2 reduction). Every
+    /// step is `< reduce_span`, and Algorithm 1 steps only read across
+    /// a group boundary where the diagonal operands are zero.
+    pub fn eval_rotations(&self) -> Vec<usize> {
         let mut rots: Vec<usize> = (1..self.k).collect();
         let mut step = 1usize;
         while step < self.reduce_span {
@@ -82,6 +140,47 @@ impl HrfPlan {
                 rots.push(step);
             }
             step <<= 1;
+        }
+        rots.sort_unstable();
+        rots
+    }
+
+    /// Rotation steps the server needs Galois keys for in the
+    /// single-sample protocol (kept as the stable name every key-gen
+    /// call site uses).
+    pub fn rotations_needed(&self) -> Vec<usize> {
+        self.eval_rotations()
+    }
+
+    /// Extra rotation steps needed to serve a packed group of up to
+    /// `b` samples: for each occupied group `g ≥ 1`,
+    /// `slots − g·reduce_span` places sample `g` (a right-shift of the
+    /// fresh group-0 ciphertext) and `g·reduce_span` extracts its score
+    /// back to slot 0. These run *outside* the evaluation proper.
+    pub fn batch_rotations(&self, b: usize) -> Vec<usize> {
+        let b = b.min(self.groups);
+        let mut rots = Vec::new();
+        for g in 1..b {
+            let place = self.slots - g * self.reduce_span;
+            let extract = g * self.reduce_span;
+            for r in [place, extract] {
+                if r > 0 && !rots.contains(&r) {
+                    rots.push(r);
+                }
+            }
+        }
+        rots.sort_unstable();
+        rots
+    }
+
+    /// All rotation steps for a session that will submit packed groups
+    /// of up to `b` samples (evaluation + placement + extraction).
+    pub fn rotations_needed_batched(&self, b: usize) -> Vec<usize> {
+        let mut rots = self.eval_rotations();
+        for r in self.batch_rotations(b) {
+            if !rots.contains(&r) {
+                rots.push(r);
+            }
         }
         rots.sort_unstable();
         rots
@@ -111,7 +210,19 @@ mod tests {
         assert_eq!(p.block, 31);
         assert_eq!(p.used_slots, 1984);
         assert_eq!(p.reduce_span, 2048);
+        assert_eq!(p.groups, 4);
         assert_eq!(p.block_start(3), 93);
+        assert_eq!(p.group_start(1), 2048);
+        assert_eq!(p.score_slot(3), 6144);
+    }
+
+    #[test]
+    fn default_adult_plan_has_two_groups() {
+        // The paper's adult configuration on N=8192 (4096 slots):
+        // L=64 trees of K=16 leaves fill 1984 slots -> span 2048 ->
+        // 2 samples per ciphertext.
+        let p = HrfPlan::new(16, 64, 2, 14, 4096).unwrap();
+        assert_eq!(p.groups, 2);
     }
 
     #[test]
@@ -137,6 +248,46 @@ mod tests {
             assert!(rots.contains(&s), "missing reduction step {s}");
         }
         assert!(!rots.contains(&256));
+    }
+
+    #[test]
+    fn eval_rotations_stay_group_local() {
+        for (k, l, slots) in [(8usize, 10usize, 4096usize), (16, 64, 8192), (4, 3, 2048)] {
+            let p = HrfPlan::new(k, l, 2, 5, slots).unwrap();
+            for r in p.eval_rotations() {
+                assert!(
+                    r < p.reduce_span,
+                    "eval rotation {r} spans a whole group (span {})",
+                    p.reduce_span
+                );
+            }
+            // Algorithm 1 windows: the furthest nonzero-diagonal read is
+            // from the last block's K-th slot plus K-1 — inside the group.
+            assert!(p.block_start(l - 1) + p.k - 1 + (p.k - 1) < p.reduce_span);
+        }
+    }
+
+    #[test]
+    fn batch_rotations_cover_place_and_extract() {
+        let p = HrfPlan::new(8, 10, 2, 5, 4096).unwrap();
+        // span 256, groups 16
+        assert_eq!(p.groups, 16);
+        let rots = p.batch_rotations(3);
+        assert!(rots.contains(&256), "extract rotation for group 1");
+        assert!(rots.contains(&512), "extract rotation for group 2");
+        assert!(rots.contains(&(4096 - 256)), "place rotation for group 1");
+        assert!(rots.contains(&(4096 - 512)), "place rotation for group 2");
+        assert_eq!(rots.len(), 4);
+        // b beyond groups is clamped.
+        assert_eq!(p.batch_rotations(100), p.batch_rotations(16));
+        // b <= 1 needs nothing extra.
+        assert!(p.batch_rotations(1).is_empty());
+        // The combined set is deduplicated and sorted.
+        let all = p.rotations_needed_batched(3);
+        let mut sorted = all.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(all, sorted);
     }
 
     #[test]

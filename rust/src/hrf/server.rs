@@ -10,6 +10,24 @@
 //! The activation polynomial is evaluated with the power-basis method
 //! (depth ⌈log₂ m⌉+1), so the whole pipeline fits the depth-8 default
 //! parameter set with degree-4 activations.
+//!
+//! # Sample-group batching
+//!
+//! All three layers operate slot-wise or group-locally, and the model
+//! operands are replicated into every sample group (see
+//! [`HrfPlan`](super::plan::HrfPlan)), so one [`HrfServer::eval`] call
+//! on a ciphertext packed with `B ≤ plan.groups` observations scores
+//! all of them at once: layer 3's rotate-and-sum runs over
+//! `plan.reduce_span` — one **group**, not the whole ciphertext — so
+//! samples never mix, and sample `g`'s class-`c` score lands at slot
+//! `plan.score_slot(g)` of output `c`.
+//!
+//! Two helpers serve the coordinator's server-side batching:
+//! [`HrfServer::pack_group`] combines `B` fresh single-sample
+//! ciphertexts (each sample in group 0) into one packed ciphertext with
+//! `B−1` rotations, and [`HrfServer::extract_sample`] rotates a packed
+//! score back to slot 0 so every caller keeps the single-sample
+//! response contract.
 
 use super::pack::HrfModel;
 use crate::ckks::evaluator::{Evaluator, OpCounts};
@@ -169,6 +187,9 @@ impl HrfServer {
         let snap2 = ev.counts;
 
         // ---- Layer 3: Algorithm 2 per class ------------------------
+        // The rotate-and-sum spans one sample group (`reduce_span`),
+        // NOT the whole ciphertext: slot g·span accumulates exactly
+        // group g's masked slots, so packed samples stay independent.
         let mut outputs = Vec::with_capacity(p.c);
         for ci in 0..p.c {
             let w_pt = self.cached_encode(
@@ -190,6 +211,91 @@ impl HrfServer {
         counts.layer3 = ev.counts.diff(&snap2);
 
         (outputs, counts)
+    }
+
+    /// Combine `B ≤ plan.groups` *fresh single-sample* ciphertexts
+    /// (each observation packed in group 0, all remaining slots zero,
+    /// identical level & scale) into one group-packed ciphertext:
+    /// sample `g` is right-shifted into group `g` and the shifts are
+    /// summed. Costs `B−1` rotations + `B−1` additions — far below one
+    /// full evaluation, which is what makes server-side batching pay.
+    ///
+    /// The session's Galois keys must cover
+    /// [`HrfPlan::batch_rotations`](super::plan::HrfPlan::batch_rotations)
+    /// for `B` (see [`HrfServer::can_batch`]).
+    pub fn pack_group(
+        &self,
+        ev: &mut Evaluator,
+        cts: &[Ciphertext],
+        gk: &GaloisKeys,
+    ) -> Ciphertext {
+        let p = &self.model.plan;
+        assert!(!cts.is_empty() && cts.len() <= p.groups);
+        let mut acc = cts[0].clone();
+        for (g, ct) in cts.iter().enumerate().skip(1) {
+            // Left-rotation by slots − g·span == right-shift by g·span:
+            // slot g·span + j of the result reads slot j of the input.
+            let placed = ev.rotate(ct, p.slots - g * p.reduce_span, gk);
+            ev.add_inplace(&mut acc, &placed);
+        }
+        acc
+    }
+
+    /// Rotate sample `g`'s score (slot `plan.score_slot(g)`) back to
+    /// slot 0, restoring the single-sample response contract.
+    pub fn extract_sample(
+        &self,
+        ev: &mut Evaluator,
+        ct: &Ciphertext,
+        g: usize,
+        gk: &GaloisKeys,
+    ) -> Ciphertext {
+        let slot = self.model.plan.score_slot(g);
+        if slot == 0 {
+            ct.clone()
+        } else {
+            ev.rotate(ct, slot, gk)
+        }
+    }
+
+    /// Whether `gk` holds every Galois key a `b`-sample packed
+    /// evaluation needs (placement + extraction on top of the
+    /// evaluation set).
+    pub fn can_batch(&self, gk: &GaloisKeys, b: usize) -> bool {
+        self.model
+            .plan
+            .batch_rotations(b)
+            .iter()
+            .all(|r| gk.keys.contains_key(r))
+    }
+
+    /// Evaluate a packed group of `B` fresh single-sample ciphertexts
+    /// in one pass: combine ([`HrfServer::pack_group`]), run
+    /// [`HrfServer::eval`] once, then extract each sample's per-class
+    /// scores back to slot 0. Returns one `Vec<Ciphertext>` (length C,
+    /// score in slot 0) per input sample.
+    pub fn eval_batch(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        cts: &[Ciphertext],
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+    ) -> (Vec<Vec<Ciphertext>>, LayerCounts) {
+        if cts.len() == 1 {
+            let (outs, counts) = self.eval(ev, enc, &cts[0], rlk, gk);
+            return (vec![outs], counts);
+        }
+        let packed = self.pack_group(ev, cts, gk);
+        let (outs, counts) = self.eval(ev, enc, &packed, rlk, gk);
+        let per_sample = (0..cts.len())
+            .map(|g| {
+                outs.iter()
+                    .map(|class_ct| self.extract_sample(ev, class_ct, g, gk))
+                    .collect()
+            })
+            .collect();
+        (per_sample, counts)
     }
 }
 

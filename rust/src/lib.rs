@@ -24,9 +24,9 @@
 //! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
 //!   bounded queues with backpressure, per-client key sessions and
 //!   worker pool.
-//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
-//!   slot-model (`artifacts/*.hlo.txt`) for the plaintext fast path and
-//!   cross-checking.
+//! * [`runtime`] — loader/executor for the AOT-compiled JAX/Pallas
+//!   slot-model artifacts, used for the plaintext fast path and
+//!   cross-checking (pure-Rust f32 backend offline).
 //! * [`data`] — dataset plumbing and the synthetic Adult-Income
 //!   generator used in place of the UCI download (offline environment;
 //!   see DESIGN.md §Substitutions).

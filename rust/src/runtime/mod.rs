@@ -1,12 +1,12 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas slot
-//! model from `artifacts/*.hlo.txt`.
+//! Runtime for the AOT slot model compiled from `python/compile`.
 //!
 //! The Rust coordinator uses this for (a) the plaintext fast path
 //! (clients who opt out of encryption get the same slot-level model,
 //! batched) and (b) an independently-derived numerical cross-check of
-//! the homomorphic evaluator. HLO text is the interchange format (see
-//! aot.py); compilation happens once at load.
+//! the homomorphic evaluator. `aot.py`'s `manifest.txt` is the loader
+//! contract; execution currently runs on a pure-Rust f32 backend (the
+//! PJRT/XLA executor is unavailable offline — see `slot_model.rs`).
 
 pub mod slot_model;
 
-pub use slot_model::{SlotModel, SlotModelParams};
+pub use slot_model::{SlotModel, SlotModelParams, SlotShape};

@@ -1,12 +1,26 @@
 //! Loader/executor for the AOT slot model.
 //!
 //! `aot.py` writes a `manifest.txt` naming the single-observation and
-//! batched HLO files and their static shapes; [`SlotModel::load`]
-//! parses it, compiles both executables on the PJRT CPU client, and
-//! serves f32 inference from then on — Python is never involved again.
+//! batched computations and their static shapes; [`SlotModel::load`]
+//! parses it and serves f32 inference from then on.
+//!
+//! Offline note: the PJRT/XLA executor (the `xla` crate) is not
+//! available in this environment, so the compiled HLO files are treated
+//! as opaque artifacts and the computation itself runs as a vectorized
+//! pure-Rust f32 implementation of the *identical* slot dataflow
+//! (`python/compile/kernels/ref.py` ↔ `HrfModel::forward_slots_plain`).
+//! The manifest stays the loader contract, so swapping the execution
+//! backend back to PJRT is a local change to this file.
+//!
+//! Batching comes in two flavors, mirroring the HE side:
+//!
+//! * **outer batch** ([`SlotModel::infer_batch`]) — up to `B` separate
+//!   slot vectors, the shape the coordinator's plaintext batcher feeds;
+//! * **packed groups** ([`SlotModel::infer_packed`]) — one slot vector
+//!   carrying `plan.groups` observations at `group_span` strides, the
+//!   plaintext oracle of the batched homomorphic evaluation.
 
 use crate::hrf::HrfModel;
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
 /// Static shape configuration of the compiled model.
@@ -19,14 +33,18 @@ pub struct SlotShape {
     pub b: usize,
 }
 
-/// Model parameters converted once into XLA literals.
+/// Model parameters converted once into f32 slot vectors.
 pub struct SlotModelParams {
-    t: xla::Literal,
-    diags: xla::Literal,
-    b: xla::Literal,
-    w: xla::Literal,
-    betas: xla::Literal,
-    coeffs: xla::Literal,
+    t: Vec<f32>,
+    diags: Vec<Vec<f32>>,
+    b: Vec<f32>,
+    w: Vec<Vec<f32>>,
+    betas: Vec<f32>,
+    coeffs: Vec<f32>,
+    /// Power-of-two span of one sample group (from the HRF plan).
+    group_span: usize,
+    /// Number of sample groups per slot vector.
+    groups: usize,
     pub shape: SlotShape,
 }
 
@@ -34,168 +52,202 @@ impl SlotModelParams {
     /// Pack an [`HrfModel`]'s parameters for a compiled shape. The
     /// HRF plan's slot count must equal the artifact's `S`; the
     /// activation is zero-padded to `m` coefficients.
-    pub fn from_hrf(model: &HrfModel, shape: SlotShape) -> Result<Self> {
+    pub fn from_hrf(model: &HrfModel, shape: SlotShape) -> Result<Self, String> {
         let p = &model.plan;
         if p.slots != shape.s {
-            bail!("HRF packed for {} slots, artifact expects {}", p.slots, shape.s);
+            return Err(format!(
+                "HRF packed for {} slots, artifact expects {}",
+                p.slots, shape.s
+            ));
         }
         if p.k != shape.k {
-            bail!("HRF K={} but artifact K={}", p.k, shape.k);
+            return Err(format!("HRF K={} but artifact K={}", p.k, shape.k));
         }
         if p.c != shape.c {
-            bail!("HRF C={} but artifact C={}", p.c, shape.c);
+            return Err(format!("HRF C={} but artifact C={}", p.c, shape.c));
         }
         if model.act_coeffs.len() > shape.m {
-            bail!(
+            return Err(format!(
                 "activation degree {} exceeds artifact m={}",
                 model.act_coeffs.len() - 1,
                 shape.m
-            );
+            ));
         }
         let f32v = |v: &[f64]| -> Vec<f32> { v.iter().map(|&x| x as f32).collect() };
-        let t = xla::Literal::vec1(&f32v(&model.t_slots));
-        let flat_diags: Vec<f32> = model
-            .diag_slots
-            .iter()
-            .flat_map(|d| f32v(d))
-            .collect();
-        let diags =
-            xla::Literal::vec1(&flat_diags).reshape(&[shape.k as i64, shape.s as i64])?;
-        let b = xla::Literal::vec1(&f32v(&model.b_slots));
-        let flat_w: Vec<f32> = model.w_slots.iter().flat_map(|w| f32v(w)).collect();
-        let w = xla::Literal::vec1(&flat_w).reshape(&[shape.c as i64, shape.s as i64])?;
-        let betas = xla::Literal::vec1(&f32v(&model.betas));
-        let mut coeffs_pad = f32v(&model.act_coeffs);
-        coeffs_pad.resize(shape.m, 0.0);
-        let coeffs = xla::Literal::vec1(&coeffs_pad);
+        let mut coeffs = f32v(&model.act_coeffs);
+        coeffs.resize(shape.m, 0.0);
         Ok(SlotModelParams {
-            t,
-            diags,
-            b,
-            w,
-            betas,
+            t: f32v(&model.t_slots),
+            diags: model.diag_slots.iter().map(|d| f32v(d)).collect(),
+            b: f32v(&model.b_slots),
+            w: model.w_slots.iter().map(|w| f32v(w)).collect(),
+            betas: f32v(&model.betas),
             coeffs,
+            group_span: p.reduce_span,
+            groups: p.groups,
             shape,
         })
     }
+
+    fn activation(&self, x: f32) -> f32 {
+        let mut acc = 0.0f32;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * x + c;
+        }
+        acc
+    }
+
+    /// The full slot dataflow: layers 1–2 over all S slots, then the
+    /// group-local layer-3 reduction. Returns `groups × C` scores.
+    fn forward_groups(&self, x_slots: &[f32]) -> Vec<Vec<f32>> {
+        let s = self.shape.s;
+        // Layer 1: u = P(x − t)
+        let u: Vec<f32> = x_slots
+            .iter()
+            .zip(&self.t)
+            .map(|(&x, &t)| self.activation(x - t))
+            .collect();
+        // Layer 2: v = P(Σ_j diag_j ⊙ rot(u, j) + b)
+        let mut lin = vec![0.0f32; s];
+        for (j, diag) in self.diags.iter().enumerate() {
+            for i in 0..s {
+                lin[i] += diag[i] * u[(i + j) % s];
+            }
+        }
+        let v: Vec<f32> = lin
+            .iter()
+            .zip(&self.b)
+            .map(|(&x, &b)| self.activation(x + b))
+            .collect();
+        // Layer 3: per-group masked sums.
+        (0..self.groups)
+            .map(|g| {
+                let lo = g * self.group_span;
+                let hi = lo + self.group_span;
+                self.w
+                    .iter()
+                    .zip(&self.betas)
+                    .map(|(w, &beta)| {
+                        w[lo..hi]
+                            .iter()
+                            .zip(&v[lo..hi])
+                            .map(|(&w, &v)| w * v)
+                            .sum::<f32>()
+                            + beta
+                    })
+                    .collect()
+            })
+            .collect()
+    }
 }
 
-/// Compiled PJRT executables for the slot model.
+/// Loaded slot-model executor.
 pub struct SlotModel {
-    exe_single: xla::PjRtLoadedExecutable,
-    exe_batch: xla::PjRtLoadedExecutable,
     pub shape: SlotShape,
 }
 
 impl SlotModel {
     /// Load from an artifacts directory (written by `make artifacts`).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
         let dir = dir.as_ref();
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
-        let get = |key: &str| -> Result<String> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            format!(
+                "reading {}/manifest.txt — run `make artifacts` ({e})",
+                dir.display()
+            )
+        })?;
+        let get = |key: &str| -> Result<String, String> {
             manifest
                 .lines()
                 .find_map(|l| l.strip_prefix(&format!("{key}=")))
                 .map(str::to_string)
-                .ok_or_else(|| anyhow!("manifest missing key {key}"))
+                .ok_or_else(|| format!("manifest missing key {key}"))
+        };
+        let parse = |key: &str| -> Result<usize, String> {
+            get(key)?
+                .parse::<usize>()
+                .map_err(|e| format!("manifest key {key}: {e}"))
         };
         let shape = SlotShape {
-            s: get("s")?.parse()?,
-            k: get("k")?.parse()?,
-            c: get("c")?.parse()?,
-            m: get("m")?.parse()?,
-            b: get("b")?.parse()?,
+            s: parse("s")?,
+            k: parse("k")?,
+            c: parse("c")?,
+            m: parse("m")?,
+            b: parse("b")?,
         };
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let exe_single = compile(&get("single")?)?;
-        let exe_batch = compile(&get("batch")?)?;
-        Ok(SlotModel {
-            exe_single,
-            exe_batch,
-            shape,
-        })
+        Ok(SlotModel { shape })
     }
 
-    /// Single-observation inference: packed slot vector → C scores.
-    pub fn infer(&self, x_slots: &[f32], params: &SlotModelParams) -> Result<Vec<f32>> {
+    /// Single-observation inference: packed slot vector (observation in
+    /// group 0) → C scores.
+    pub fn infer(&self, x_slots: &[f32], params: &SlotModelParams) -> Result<Vec<f32>, String> {
         if x_slots.len() != self.shape.s {
-            bail!("expected {} slots, got {}", self.shape.s, x_slots.len());
+            return Err(format!(
+                "expected {} slots, got {}",
+                self.shape.s,
+                x_slots.len()
+            ));
         }
-        let x = xla::Literal::vec1(x_slots);
-        let result = self.exe_single.execute::<xla::Literal>(&[
-            x,
-            params.t.clone(),
-            params.diags.clone(),
-            params.b.clone(),
-            params.w.clone(),
-            params.betas.clone(),
-            params.coeffs.clone(),
-        ])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        Ok(params
+            .forward_groups(x_slots)
+            .into_iter()
+            .next()
+            .expect("plan has >= 1 group"))
     }
 
     /// Batched inference: `n ≤ B` packed slot vectors → per-sample C
-    /// scores. Inputs are zero-padded to the compiled batch size.
+    /// scores (the coordinator's plaintext batcher shape).
     pub fn infer_batch(
         &self,
         xs: &[Vec<f32>],
         params: &SlotModelParams,
-    ) -> Result<Vec<Vec<f32>>> {
-        let (b, s, c) = (self.shape.b, self.shape.s, self.shape.c);
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let b = self.shape.b;
         if xs.is_empty() || xs.len() > b {
-            bail!("batch size {} outside 1..={b}", xs.len());
+            return Err(format!("batch size {} outside 1..={b}", xs.len()));
         }
-        let mut flat = vec![0.0f32; b * s];
-        for (i, x) in xs.iter().enumerate() {
-            if x.len() != s {
-                bail!("expected {s} slots, got {}", x.len());
-            }
-            flat[i * s..(i + 1) * s].copy_from_slice(x);
+        xs.iter().map(|x| self.infer(x, params)).collect()
+    }
+
+    /// Packed-group inference: one slot vector carrying `n_samples`
+    /// observations (observation `g` at group offset `g·group_span`) →
+    /// per-sample C scores. The plaintext oracle of the batched HE
+    /// evaluation.
+    pub fn infer_packed(
+        &self,
+        x_slots: &[f32],
+        n_samples: usize,
+        params: &SlotModelParams,
+    ) -> Result<Vec<Vec<f32>>, String> {
+        if x_slots.len() != self.shape.s {
+            return Err(format!(
+                "expected {} slots, got {}",
+                self.shape.s,
+                x_slots.len()
+            ));
         }
-        let x = xla::Literal::vec1(&flat).reshape(&[b as i64, s as i64])?;
-        let result = self.exe_batch.execute::<xla::Literal>(&[
-            x,
-            params.t.clone(),
-            params.diags.clone(),
-            params.b.clone(),
-            params.w.clone(),
-            params.betas.clone(),
-            params.coeffs.clone(),
-        ])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let scores = out.to_vec::<f32>()?;
-        Ok(xs
-            .iter()
-            .enumerate()
-            .map(|(i, _)| scores[i * c..(i + 1) * c].to_vec())
-            .collect())
+        if n_samples == 0 || n_samples > params.groups {
+            return Err(format!(
+                "sample count {n_samples} outside 1..={}",
+                params.groups
+            ));
+        }
+        let mut rows = params.forward_groups(x_slots);
+        rows.truncate(n_samples);
+        Ok(rows)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::adult;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::hrf::client::{reshuffle_and_pack, reshuffle_and_pack_group};
+    use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+    use crate::nrf::NeuralForest;
 
-    // Full runtime tests (loading real artifacts) live in
-    // rust/tests/runtime_artifact.rs; here only shape plumbing.
-    #[test]
-    fn shape_mismatch_is_rejected() {
-        use crate::data::adult;
-        use crate::forest::{RandomForest, RandomForestConfig};
-        use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
-        use crate::nrf::NeuralForest;
+    fn hrf(slots: usize) -> (crate::data::Dataset, HrfModel) {
         let ds = adult::generate(400, 19);
         let rf = RandomForest::fit(
             &ds,
@@ -207,7 +259,13 @@ mod tests {
         );
         let coeffs = chebyshev_fit_tanh(3.0, 4);
         let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
-        let hm = HrfModel::from_neural_forest(&nf, 14, 2048).unwrap();
+        let hm = HrfModel::from_neural_forest(&nf, 14, slots).unwrap();
+        (ds, hm)
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let (_, hm) = hrf(2048);
         let bad = SlotShape {
             s: 4096,
             k: hm.plan.k,
@@ -224,5 +282,65 @@ mod tests {
             b: 8,
         };
         assert!(SlotModelParams::from_hrf(&hm, good).is_ok());
+    }
+
+    #[test]
+    fn infer_matches_rust_slot_math() {
+        let (ds, hm) = hrf(2048);
+        let shape = SlotShape {
+            s: 2048,
+            k: hm.plan.k,
+            c: hm.plan.c,
+            m: 5,
+            b: 8,
+        };
+        let params = SlotModelParams::from_hrf(&hm, shape).unwrap();
+        let sm = SlotModel { shape };
+        for x in ds.x.iter().take(16) {
+            let slots = reshuffle_and_pack(&hm, x);
+            let slots_f32: Vec<f32> = slots.iter().map(|&v| v as f32).collect();
+            let got = sm.infer(&slots_f32, &params).unwrap();
+            let want = hm.forward_slots_plain(&slots);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (*g as f64 - w).abs() < 1e-3,
+                    "slot-model executor deviates: {got:?} vs {want:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_groups_match_per_sample_inference() {
+        let (ds, hm) = hrf(2048);
+        let n = hm.plan.groups.min(4);
+        assert!(n >= 2, "need multiple groups");
+        let shape = SlotShape {
+            s: 2048,
+            k: hm.plan.k,
+            c: hm.plan.c,
+            m: 5,
+            b: 8,
+        };
+        let params = SlotModelParams::from_hrf(&hm, shape).unwrap();
+        let sm = SlotModel { shape };
+        let xs: Vec<Vec<f64>> = ds.x.iter().take(n).cloned().collect();
+        let packed = reshuffle_and_pack_group(&hm, &xs);
+        let packed_f32: Vec<f32> = packed.iter().map(|&v| v as f32).collect();
+        let rows = sm.infer_packed(&packed_f32, n, &params).unwrap();
+        for (g, x) in xs.iter().enumerate() {
+            let single_slots: Vec<f32> = reshuffle_and_pack(&hm, x)
+                .iter()
+                .map(|&v| v as f32)
+                .collect();
+            let single = sm.infer(&single_slots, &params).unwrap();
+            for (a, b) in rows[g].iter().zip(&single) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "packed sample {g} deviates: {:?} vs {single:?}",
+                    rows[g]
+                );
+            }
+        }
     }
 }

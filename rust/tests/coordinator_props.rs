@@ -179,6 +179,7 @@ fn mixed_traffic_completes() {
             queue_capacity: 64,
             max_batch: 4,
             batch_delay: Duration::from_millis(2),
+            ..Default::default()
         },
         ctx.clone(),
         server.clone(),

@@ -1,0 +1,389 @@
+//! Sample-group batching properties and the batched HE end-to-end
+//! check:
+//!
+//! 1. **Non-interference** — for random (K, L, C, B) plans, pack B
+//!    random samples and fill every slot outside the occupied groups'
+//!    used regions with garbage: each sample's scores must equal its
+//!    single-sample result exactly (plain slot model) — garbage in
+//!    another group's slots must not leak.
+//! 2. **Rotation discipline** — every Galois key a batched evaluation
+//!    uses is in `rotations_needed_batched(B)`, and no *evaluation*
+//!    rotation reads across a group boundary at a slot where the
+//!    operand is nonzero.
+//! 3. **Batched HE e2e** — a full group of samples packed into one
+//!    ciphertext, evaluated once, matches the single-sample plain slot
+//!    model within 5e-3 for every sample.
+//! 4. **Coordinator wiring** — server-side packing (enc_batch > 1) and
+//!    client-side packed submission both return correct per-sample
+//!    scores through the coordinator.
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
+use cryptotree::hrf::client::{reshuffle_and_pack, reshuffle_and_pack_group, HrfClient};
+use cryptotree::hrf::{HrfModel, HrfPlan, HrfServer};
+use cryptotree::nrf::activation::chebyshev_fit_tanh;
+use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
+use cryptotree::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// A random synthetic NeuralForest with exact (K, L, C) — lets the
+/// properties sweep shapes no trained forest would produce.
+fn synth_forest(k: usize, l: usize, c: usize, d: usize, rng: &mut Xoshiro256pp) -> NeuralForest {
+    let trees = (0..l)
+        .map(|_| NeuralTree {
+            tau: (0..k - 1).map(|_| rng.next_index(d)).collect(),
+            t: (0..k - 1).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            v: (0..k)
+                .map(|_| (0..k - 1).map(|_| rng.uniform(-0.25, 0.25)).collect())
+                .collect(),
+            b: (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            w: (0..c)
+                .map(|_| (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect())
+                .collect(),
+            beta: (0..c).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+            real_leaves: k,
+            n_classes: c,
+        })
+        .collect();
+    NeuralForest {
+        trees,
+        alphas: (0..l).map(|_| rng.uniform(0.1, 1.0)).collect(),
+        k,
+        n_classes: c,
+        activation: Activation::Poly {
+            coeffs: chebyshev_fit_tanh(3.0, 4),
+        },
+    }
+}
+
+fn rand_x(d: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..d).map(|_| rng.uniform(0.0, 1.0)).collect()
+}
+
+#[test]
+fn property_batched_samples_do_not_interfere() {
+    let mut rng = Xoshiro256pp::new(4242);
+    for case in 0..30 {
+        let k = 1usize << (1 + rng.next_index(3)); // 2, 4, 8
+        let l = 1 + rng.next_index(6); // 1..6
+        let c = 1 + rng.next_index(3); // 1..3
+        let d = 4 + rng.next_index(8);
+        let used = l * (2 * k - 1);
+        // Leave room for at least 2 groups, at most 16.
+        let span = used.next_power_of_two();
+        let slots = span * (2usize << rng.next_index(3)); // 2, 4, 8 groups
+        let nf = synth_forest(k, l, c, d, &mut rng);
+        let hm = HrfModel::from_neural_forest(&nf, d, slots)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let p = hm.plan;
+        assert!(p.groups >= 2);
+
+        let b = 1 + rng.next_index(p.groups); // 1..=groups samples
+        let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(d, &mut rng)).collect();
+        let singles: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| hm.forward_slots_plain(&reshuffle_and_pack(&hm, x)))
+            .collect();
+
+        // Pack the batch, then deliberately poison every slot outside
+        // the occupied groups' used regions (unoccupied groups AND the
+        // occupied groups' tails).
+        let mut packed = reshuffle_and_pack_group(&hm, &xs);
+        for g in 0..p.groups {
+            let lo = p.group_start(g);
+            let start = if g < b { lo + p.used_slots } else { lo };
+            for s in packed.iter_mut().take(lo + p.reduce_span).skip(start) {
+                *s = rng.uniform(-50.0, 50.0);
+            }
+        }
+        let grouped = hm.forward_slots_plain_groups(&packed);
+        for (g, single) in singles.iter().enumerate() {
+            for (a, e) in grouped[g].iter().zip(single) {
+                assert!(
+                    (a - e).abs() < 1e-12,
+                    "case {case} (K={k} L={l} C={c} B={b} groups={}): \
+                     sample {g} leaked: {:?} vs {single:?}",
+                    p.groups,
+                    grouped[g]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_rotations_cover_batched_eval_and_stay_group_local() {
+    let mut rng = Xoshiro256pp::new(777);
+    for _case in 0..40 {
+        let k = 1usize << (1 + rng.next_index(4)); // 2..16
+        let l = 1 + rng.next_index(8);
+        let c = 1 + rng.next_index(3);
+        let used = l * (2 * k - 1);
+        let span = used.next_power_of_two();
+        let slots = span * (1usize << rng.next_index(4)).max(1); // 1..8 groups
+        let plan = HrfPlan::new(k, l, c, 8, slots).unwrap();
+        let b = 1 + rng.next_index(plan.groups);
+        let have = plan.rotations_needed_batched(b);
+
+        // (a) Every rotation the batched protocol performs is covered:
+        // Algorithm 1 steps, the group-local reduction's power-of-two
+        // steps, and each occupied group's placement + extraction.
+        for j in 1..k {
+            assert!(have.contains(&j), "missing Alg1 step {j}");
+        }
+        let mut step = 1usize;
+        while step < plan.reduce_span {
+            assert!(have.contains(&step), "missing reduction step {step}");
+            step <<= 1;
+        }
+        for g in 1..b {
+            assert!(
+                have.contains(&(g * plan.reduce_span)),
+                "missing extraction step for group {g}"
+            );
+            assert!(
+                have.contains(&(plan.slots - g * plan.reduce_span)),
+                "missing placement step for group {g}"
+            );
+        }
+
+        // (b) No evaluation rotation crosses a group boundary: every
+        // step is below the group span, and Algorithm 1 windows stay
+        // inside the group wherever a diagonal operand is nonzero
+        // (nonzero entries live in the first K slots of each block).
+        for &r in &plan.eval_rotations() {
+            assert!(r < plan.reduce_span, "eval step {r} spans a group");
+        }
+        for j in 1..k {
+            for li in 0..l {
+                let last_read = plan.block_start(li) + (k - 1) + j;
+                assert!(
+                    last_read < plan.reduce_span,
+                    "Alg1 step {j} reads across the group boundary from tree {li}"
+                );
+            }
+        }
+    }
+}
+
+/// Full group of samples in one ciphertext: one homomorphic
+/// evaluation, every sample's decrypted scores within 5e-3 of the
+/// single-sample plain slot model.
+#[test]
+fn batched_he_eval_matches_plain_per_sample() {
+    let mut rng = Xoshiro256pp::new(91);
+    let d = 10;
+    // K=8, L=6 -> block 15, used 90, span 128 -> 32 groups on N=8192.
+    let nf = synth_forest(8, 6, 2, d, &mut rng);
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let b = plan.groups; // a FULL group
+    assert!(b >= 2, "full-group test needs multiple groups");
+
+    let mut kg = KeyGenerator::new(&ctx, 92);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(b));
+    let mut client = HrfClient::new(Encryptor::new(pk, 93), Decryptor::new(kg.secret_key()));
+    let server = HrfServer::new(hm);
+    let mut ev = Evaluator::new(ctx.clone());
+
+    let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(d, &mut rng)).collect();
+    let ct = client.encrypt_batch(&ctx, &enc, &server.model, &xs);
+    let (outs, _) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+    let results = client.decrypt_scores_batch(&ctx, &enc, &server.model, &outs, b);
+    assert_eq!(results.len(), b);
+    for (g, ((scores, _), x)) in results.iter().zip(&xs).enumerate() {
+        let expect = server
+            .model
+            .forward_slots_plain(&reshuffle_and_pack(&server.model, x));
+        for (s, e) in scores.iter().zip(&expect) {
+            assert!(
+                (s - e).abs() < 5e-3,
+                "sample {g}/{b}: HE {scores:?} vs plain {expect:?}"
+            );
+        }
+    }
+}
+
+/// Server-side packing: B fresh single-sample ciphertexts combined
+/// with `pack_group`, evaluated once, extracted back to slot 0 — each
+/// response must match its own plain result (and differ across
+/// distinct samples).
+#[test]
+fn server_side_pack_group_matches_individual_evals() {
+    let mut rng = Xoshiro256pp::new(555);
+    let d = 10;
+    let nf = synth_forest(8, 6, 2, d, &mut rng);
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let b = 3usize.min(plan.groups);
+
+    let mut kg = KeyGenerator::new(&ctx, 556);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(b));
+    let mut client = HrfClient::new(Encryptor::new(pk, 557), Decryptor::new(kg.secret_key()));
+    let server = HrfServer::new(hm);
+    assert!(server.can_batch(&gk, b));
+    let mut ev = Evaluator::new(ctx.clone());
+
+    let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(d, &mut rng)).collect();
+    let cts: Vec<_> = xs
+        .iter()
+        .map(|x| client.encrypt_input(&ctx, &enc, &server.model, x))
+        .collect();
+    let (per_sample, _) = server.eval_batch(&mut ev, &enc, &cts, &rlk, &gk);
+    assert_eq!(per_sample.len(), b);
+    for (g, (outs, x)) in per_sample.iter().zip(&xs).enumerate() {
+        let (scores, _) = client.decrypt_scores(&ctx, &enc, outs);
+        let expect = server
+            .model
+            .forward_slots_plain(&reshuffle_and_pack(&server.model, x));
+        for (s, e) in scores.iter().zip(&expect) {
+            assert!(
+                (s - e).abs() < 5e-3,
+                "sample {g}: packed-eval {scores:?} vs plain {expect:?}"
+            );
+        }
+    }
+}
+
+/// The coordinator's encrypted path with enc_batch > 1: single-sample
+/// submissions are transparently packed, every caller still receives
+/// its own correct scores, and the batch metrics record the packing.
+#[test]
+fn coordinator_enc_batching_end_to_end() {
+    let mut rng = Xoshiro256pp::new(31);
+    let d = 8;
+    // Identity activation keeps the depth-4 budget of the cheap ring.
+    let mut nf = synth_forest(4, 4, 2, d, &mut rng);
+    nf.activation = Activation::Poly {
+        coeffs: vec![0.0, 1.0],
+    };
+    let params = Arc::new(CkksParams::build("enc-batch-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let enc_batch = 4usize.min(plan.groups);
+    assert!(enc_batch >= 2);
+
+    let mut kg = KeyGenerator::new(&ctx, 32);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(enc_batch));
+    let mut client = HrfClient::new(Encryptor::new(pk, 33), Decryptor::new(kg.secret_key()));
+    let server = Arc::new(HrfServer::new(hm));
+    let sessions = Arc::new(SessionManager::new());
+    let sid = sessions.register(rlk, gk);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            enc_batch,
+            batch_delay: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+        ctx.clone(),
+        server.clone(),
+        sessions,
+        None,
+    );
+
+    // Burst of 2×enc_batch single-sample requests from one session.
+    // Encrypt everything first so the submissions land within one
+    // batch window.
+    let n_req = 2 * enc_batch;
+    let xs: Vec<Vec<f64>> = (0..n_req).map(|_| rand_x(d, &mut rng)).collect();
+    let cts: Vec<_> = xs
+        .iter()
+        .map(|x| client.encrypt_input(&ctx, &enc, &server.model, x))
+        .collect();
+    let rxs: Vec<_> = cts
+        .into_iter()
+        .map(|ct| coord.submit_encrypted(sid, ct).expect("submit"))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let outs = rx.recv().unwrap().expect("batched eval");
+        let (scores, _) = client.decrypt_scores(&ctx, &enc, &outs);
+        let expect = server
+            .model
+            .forward_slots_plain(&reshuffle_and_pack(&server.model, &xs[i]));
+        for (s, e) in scores.iter().zip(&expect) {
+            assert!(
+                (s - e).abs() < 5e-3,
+                "request {i}: coordinator batched path {scores:?} vs plain {expect:?}"
+            );
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.encrypted_completed, n_req as u64);
+    assert!(snap.enc_batches_flushed >= 1, "no encrypted group flushed");
+    assert!(
+        snap.mean_enc_batch_fill > 1.0,
+        "encrypted batching never aggregated (fill {})",
+        snap.mean_enc_batch_fill
+    );
+    coord.shutdown();
+}
+
+/// Client-side packed submission through the coordinator: one
+/// ciphertext carrying several samples, unpacked with
+/// `decrypt_scores_batch`.
+#[test]
+fn coordinator_accepts_client_packed_groups() {
+    let mut rng = Xoshiro256pp::new(131);
+    let d = 8;
+    let mut nf = synth_forest(4, 4, 2, d, &mut rng);
+    nf.activation = Activation::Poly {
+        coeffs: vec![0.0, 1.0],
+    };
+    let params = Arc::new(CkksParams::build("packed-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let b = 3usize.min(plan.groups);
+
+    let mut kg = KeyGenerator::new(&ctx, 132);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let mut client = HrfClient::new(Encryptor::new(pk, 133), Decryptor::new(kg.secret_key()));
+    let server = Arc::new(HrfServer::new(hm));
+    let sessions = Arc::new(SessionManager::new());
+    let sid = sessions.register(rlk, gk);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        ctx.clone(),
+        server.clone(),
+        sessions,
+        None,
+    );
+
+    let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(d, &mut rng)).collect();
+    let ct = client.encrypt_batch(&ctx, &enc, &server.model, &xs);
+    let rx = coord.submit_encrypted_packed(sid, ct, b).expect("submit");
+    let outs = rx.recv().unwrap().expect("packed eval");
+    let results = client.decrypt_scores_batch(&ctx, &enc, &server.model, &outs, b);
+    for (g, ((scores, _), x)) in results.iter().zip(&xs).enumerate() {
+        let expect = server
+            .model
+            .forward_slots_plain(&reshuffle_and_pack(&server.model, x));
+        for (s, e) in scores.iter().zip(&expect) {
+            assert!(
+                (s - e).abs() < 5e-3,
+                "packed sample {g}: {scores:?} vs plain {expect:?}"
+            );
+        }
+    }
+    assert_eq!(coord.metrics.snapshot().encrypted_completed, b as u64);
+    coord.shutdown();
+}
