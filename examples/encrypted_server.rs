@@ -4,6 +4,10 @@
 //! Spawns client threads firing mixed traffic (encrypted HRF requests
 //! + plaintext fast-path requests) at the coordinator and reports
 //! throughput, latency and batching behaviour for 1 and 2 workers.
+//!
+//! Ends with a keycache demo: three sessions under a ~2.5-session key
+//! budget, showing LRU eviction, the `KeysEvicted` fast-fail, and
+//! recovery via re-registration under the same session id.
 
 use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
@@ -12,6 +16,7 @@ use cryptotree::data::adult;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
 use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::keycache::KeyCacheConfig;
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
 use std::sync::Arc;
@@ -38,18 +43,20 @@ fn main() {
     let enc = Encoder::new(&ctx);
     let model =
         HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).expect("pack");
-    let plan = model.plan;
     let server = Arc::new(HrfServer::new(model));
 
     // One registered client session (keys generated client-side).
     let mut kg = KeyGenerator::new(&ctx, 13);
     let pk = kg.gen_public_key(&ctx);
     let rlk = kg.gen_relin_key(&ctx);
-    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
+    let gk = kg.gen_galois_keys(&ctx, &server.eval_key_requirements(1));
     let decryptor = Decryptor::new(kg.secret_key());
 
-    // Pre-encrypt a pool of requests (client work, off the serving path).
-    let mut client = HrfClient::new(Encryptor::new(pk, 14), decryptor);
+    // Pre-encrypt a pool of requests (client work, off the serving
+    // path). The client retains its evaluation keys so it can recover
+    // from server-side key eviction (demo below).
+    let mut client =
+        HrfClient::with_eval_keys(Encryptor::new(pk, 14), decryptor, rlk.clone(), gk.clone());
     let pool: Vec<_> = (0..8)
         .map(|i| client.encrypt_input(&ctx, &enc, &server.model, &ds.x[i]))
         .collect();
@@ -144,4 +151,62 @@ fn main() {
             Err(_) => unreachable!("all clients joined"),
         }
     }
+
+    // ---- Keycache: eviction + re-registration under a small budget --
+    // Three tenants compete for a budget that holds ~2.5 key sets; the
+    // least-recently-used session loses its keys, fails fast with
+    // KeysEvicted, and recovers under the SAME session id by pushing
+    // its retained keys back — no re-enrolment, no lost state.
+    let session_bytes = (rlk.key_bytes() + gk.key_bytes()) as u64;
+    let budget = session_bytes * 5 / 2;
+    println!(
+        "\nkeycache demo: {:.1} MiB per session, budget {:.1} MiB (~2.5 sessions)",
+        session_bytes as f64 / (1024.0 * 1024.0),
+        budget as f64 / (1024.0 * 1024.0),
+    );
+    let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+        num_shards: 4,
+        budget_bytes: budget,
+    }));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 64,
+            ..Default::default()
+        },
+        ctx.clone(),
+        server.clone(),
+        sessions.clone(),
+        None,
+    );
+    let sid_a = sessions.register_keys(client.eval_keys().expect("client retains keys"));
+    let _sid_b = sessions.register(rlk.clone(), gk.clone());
+    let _sid_c = sessions.register(rlk.clone(), gk.clone()); // evicts sid_a (LRU)
+    match coord.submit_encrypted(sid_a, pool[0].clone()) {
+        Err(SubmitError::KeysEvicted) => {
+            println!("  session {sid_a}: KeysEvicted (expected) — re-registering retained keys");
+        }
+        other => println!("  session {sid_a}: unexpected submit outcome {other:?}"),
+    }
+    assert!(
+        sessions.reregister_keys(sid_a, client.eval_keys().unwrap()),
+        "re-registration must succeed for a known session id"
+    );
+    let rx = coord
+        .submit_encrypted(sid_a, pool[0].clone())
+        .expect("submit after re-registration");
+    let outs = rx.recv().unwrap().expect("encrypted response");
+    let (scores, pred) = client.decrypt_scores(&ctx, &enc, &outs);
+    println!("  session {sid_a} recovered: class {pred}, scores {scores:?}");
+    let snap = coord.metrics.snapshot();
+    println!(
+        "  keycache: {} hits, {} misses, {} evictions, {} KeysEvicted rejects, resident {:.1} of {:.1} MiB",
+        snap.keycache_hits,
+        snap.keycache_misses,
+        snap.keycache_evictions,
+        snap.rejected_keys_evicted,
+        snap.keycache_resident_bytes as f64 / (1024.0 * 1024.0),
+        budget as f64 / (1024.0 * 1024.0),
+    );
+    coord.shutdown();
 }

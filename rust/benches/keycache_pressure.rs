@@ -1,0 +1,174 @@
+//! Keycache pressure: session count × batch size B against a fixed
+//! key-byte budget — the memory/throughput trade-off behind the
+//! ROADMAP's "Sharded Galois-key cache" item.
+//!
+//! Real key material is generated once per B to get *exact*
+//! `key_bytes` footprints (batched sessions need
+//! `rotations_needed_batched(B)` Galois keys — roughly 2(B−1) more
+//! switching keys than single-sample sessions). The overcommit sweep
+//! then stores synthetic entries of those exact sizes, so thousands of
+//! sessions can be modelled without allocating gigabytes of real keys.
+//!
+//! Reported per (B, sessions/budget overcommit):
+//! * resident MiB vs budget (never exceeds it),
+//! * registrations/sec through the sharded cache,
+//! * steady-state hit rate for a cycling (LRU-adversarial) and a
+//!   hot-set access pattern,
+//! * the implied re-registration traffic (misses × session MiB) —
+//!   the price of shrinking the budget.
+
+use cryptotree::bench_harness::{bench, print_metric_table};
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, KeyGenerator};
+use cryptotree::hrf::HrfPlan;
+use cryptotree::keycache::{KeyCache, KeyCacheConfig};
+use std::sync::Arc;
+
+fn main() {
+    // Key footprints on a cheap ring (N=4096, depth 4): the *relative*
+    // cost of B is ring-independent, the absolute MiB are printed.
+    let params = Arc::new(CkksParams::build("keycache-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let plan = HrfPlan::new(8, 16, 2, 14, params.slots()).unwrap();
+    let b_max = plan.groups;
+    println!(
+        "plan: K={} L={} | span {}, {} sample groups/ct",
+        plan.k, plan.l, plan.reduce_span, b_max
+    );
+
+    let mut kg = KeyGenerator::new(&ctx, 7);
+    let rlk = kg.gen_relin_key(&ctx);
+    let mut session_bytes = Vec::new(); // (b, bytes, n_galois)
+    for b in [1usize, b_max] {
+        let rots = plan.rotations_needed_batched(b);
+        let gk = kg.gen_galois_keys(&ctx, &rots);
+        session_bytes.push((b, rlk.key_bytes() + gk.key_bytes(), rots.len()));
+    }
+    let rows: Vec<Vec<String>> = session_bytes
+        .iter()
+        .map(|&(b, bytes, n_rots)| {
+            vec![
+                b.to_string(),
+                n_rots.to_string(),
+                format!("{:.2}", bytes as f64 / (1024.0 * 1024.0)),
+            ]
+        })
+        .collect();
+    print_metric_table(
+        "per-session key footprint (exact key_bytes, relin + Galois)",
+        &["B", "galois keys", "session MiB"],
+        &rows,
+    );
+
+    // ---- Overcommit sweep against a fixed budget -------------------
+    // Budget sized to admit ~64 single-sample sessions; batched
+    // sessions are bigger, so the same budget admits fewer of them.
+    let budget = 64 * session_bytes[0].1 as u64;
+    let mut rows = Vec::new();
+    for &(b, bytes, _) in &session_bytes {
+        let admitted = (budget / bytes as u64).max(1);
+        for overcommit in [1u64, 2, 4] {
+            let n_sessions = admitted * overcommit;
+
+            // Registration throughput: fill a fresh cache each iter.
+            let reg = bench(
+                &format!("register B={b} n={n_sessions}"),
+                1,
+                5,
+                || {
+                    let cache: KeyCache<u64> = KeyCache::new(KeyCacheConfig {
+                        num_shards: 16,
+                        budget_bytes: budget,
+                    });
+                    for id in 0..n_sessions {
+                        cache.insert(id, id, bytes);
+                    }
+                    assert!(cache.resident_bytes() <= budget, "budget violated");
+                    cache
+                },
+            );
+
+            // Steady-state cache for the access-pattern measurements.
+            let cache: KeyCache<u64> = KeyCache::new(KeyCacheConfig {
+                num_shards: 16,
+                budget_bytes: budget,
+            });
+            for id in 0..n_sessions {
+                cache.insert(id, id, bytes);
+            }
+            let resident = cache.resident_bytes();
+
+            // Cycling over every registered session: the worst case
+            // for LRU once the working set exceeds the budget.
+            let s0 = cache.stats().snapshot();
+            let lookups = 4 * n_sessions;
+            let cyc = bench(&format!("cycle B={b} n={n_sessions}"), 1, 3, || {
+                for i in 0..lookups {
+                    let _ = cache.lookup(i % n_sessions);
+                }
+            });
+            let s1 = cache.stats().snapshot();
+            let cyc_hits = s1.hits - s0.hits;
+            let cyc_total = (s1.hits + s1.misses) - (s0.hits + s0.misses);
+
+            // Hot set: the most recent `admitted` sessions — the
+            // workload the budget was sized for.
+            let hot_lo = n_sessions - admitted.min(n_sessions);
+            for i in hot_lo..n_sessions {
+                let _ = cache.lookup(i); // warm residency
+            }
+            let s2 = cache.stats().snapshot();
+            for _ in 0..4 {
+                for i in hot_lo..n_sessions {
+                    let _ = cache.lookup(i);
+                }
+            }
+            let s3 = cache.stats().snapshot();
+            let hot_hits = s3.hits - s2.hits;
+            let hot_total = (s3.hits + s3.misses) - (s2.hits + s2.misses);
+
+            let cyc_miss_rate = 1.0 - cyc_hits as f64 / cyc_total.max(1) as f64;
+            rows.push(vec![
+                b.to_string(),
+                n_sessions.to_string(),
+                format!("{overcommit}x"),
+                format!(
+                    "{:.1}/{:.1}",
+                    resident as f64 / (1024.0 * 1024.0),
+                    budget as f64 / (1024.0 * 1024.0)
+                ),
+                format!("{:.0}", reg.throughput(n_sessions as f64)),
+                format!("{:.0}", cyc.throughput(lookups as f64)),
+                format!("{:.0}%", 100.0 * cyc_hits as f64 / cyc_total.max(1) as f64),
+                format!("{:.0}%", 100.0 * hot_hits as f64 / hot_total.max(1) as f64),
+                format!(
+                    "{:.1}",
+                    cyc_miss_rate * bytes as f64 / (1024.0 * 1024.0)
+                        * cyc.throughput(lookups as f64)
+                ),
+            ]);
+        }
+    }
+    print_metric_table(
+        &format!(
+            "overcommit sweep — fixed budget {:.1} MiB, 16 shards",
+            budget as f64 / (1024.0 * 1024.0)
+        ),
+        &[
+            "B",
+            "sessions",
+            "overcommit",
+            "resident/budget MiB",
+            "reg/s",
+            "lookup/s",
+            "cycle hit",
+            "hot hit",
+            "rereg MiB/s",
+        ],
+        &rows,
+    );
+    println!("\ncycle = round-robin over ALL registered sessions (LRU-adversarial);");
+    println!("hot   = only the most recent budget-sized working set.");
+    println!("rereg MiB/s = miss rate x session MiB x lookup rate: the key re-upload");
+    println!("bandwidth a too-small budget converts cache misses into.");
+}

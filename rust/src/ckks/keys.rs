@@ -60,10 +60,55 @@ pub struct GaloisKeys {
 }
 
 impl GaloisKeys {
+    /// Rotation steps this key set covers, in canonical form (sorted,
+    /// deduplicated) — usable directly as a cache key.
     pub fn supported_rotations(&self) -> Vec<usize> {
         let mut v: Vec<usize> = self.keys.keys().copied().collect();
         v.sort_unstable();
+        v.dedup();
         v
+    }
+
+    /// Exact resident byte count: the limb payload of every rotation's
+    /// switching key plus the Galois-element table. This is what the
+    /// `keycache` subsystem charges a session for its Galois keys.
+    pub fn key_bytes(&self) -> usize {
+        self.keys.values().map(KswKey::key_bytes).sum::<usize>()
+            + self.elements.len() * 2 * std::mem::size_of::<usize>()
+    }
+}
+
+/// Canonical form of a rotation-step request: sorted, deduplicated,
+/// zero steps dropped. Key generation consumes this form, so two
+/// sessions asking for the same steps in any order or multiplicity
+/// produce the same key set — and identical `key_bytes()` accounting.
+pub fn canonical_rotations(rotations: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = rotations.iter().copied().filter(|&r| r != 0).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Heap bytes of one RNS polynomial's residue limbs — the payload that
+/// dominates key memory (per-key metadata is a few machine words).
+fn poly_bytes(p: &RnsPoly) -> usize {
+    p.limbs
+        .iter()
+        .map(|l| l.len() * std::mem::size_of::<u64>())
+        .sum()
+}
+
+impl KswKey {
+    /// Exact resident byte count of this switching key's limb payload.
+    pub fn key_bytes(&self) -> usize {
+        self.b.iter().chain(self.a.iter()).map(poly_bytes).sum()
+    }
+}
+
+impl RelinKey {
+    /// Exact resident byte count (see [`KswKey::key_bytes`]).
+    pub fn key_bytes(&self) -> usize {
+        self.0.key_bytes()
     }
 }
 
@@ -170,15 +215,15 @@ impl KeyGenerator {
         RelinKey(self.gen_ksw(ctx, &s2))
     }
 
-    /// Galois keys for the given left-rotation steps.
+    /// Galois keys for the given left-rotation steps. The request is
+    /// canonicalized first ([`canonical_rotations`]): duplicates and
+    /// zero steps are ignored, and generation order is the sorted
+    /// order, so equal requests yield equal key sets byte-for-byte.
     pub fn gen_galois_keys(&mut self, ctx: &CkksContext, rotations: &[usize]) -> GaloisKeys {
         let two_n = 2 * ctx.n();
         let mut keys = HashMap::new();
         let mut elements = HashMap::new();
-        for &r in rotations {
-            if r == 0 || keys.contains_key(&r) {
-                continue;
-            }
+        for r in canonical_rotations(rotations) {
             let g = pow_mod(5, r as u64, two_n as u64) as usize;
             // source secret: s(X^g)
             let mut s_rot = self.sk.s.clone();
@@ -342,6 +387,56 @@ mod tests {
         let max = coeffs.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
         // noise bound ≈ (ℓ+1)·N·q·σ/P + mod-down rounding ≈ small
         assert!(max < 1e6, "keyswitch noise too large: {max}");
+    }
+
+    #[test]
+    fn canonical_rotations_sorts_dedups_drops_zero() {
+        assert_eq!(canonical_rotations(&[5, 1, 3, 0, 1, 5]), vec![1, 3, 5]);
+        assert_eq!(canonical_rotations(&[]), Vec::<usize>::new());
+        assert_eq!(canonical_rotations(&[0, 0]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn galois_keygen_ignores_duplicates_and_order() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let gk_messy = KeyGenerator::new(&ctx, 9).gen_galois_keys(&ctx, &[3, 1, 3, 0, 1]);
+        let gk_clean = KeyGenerator::new(&ctx, 9).gen_galois_keys(&ctx, &[1, 3]);
+        assert_eq!(gk_messy.supported_rotations(), vec![1, 3]);
+        assert_eq!(
+            gk_messy.supported_rotations(),
+            gk_clean.supported_rotations()
+        );
+        // Same seed + canonicalized generation order → byte-identical
+        // accounting (and identical key material).
+        assert_eq!(gk_messy.key_bytes(), gk_clean.key_bytes());
+        for r in [1usize, 3] {
+            assert_eq!(
+                gk_messy.keys[&r].b[0].limbs[0],
+                gk_clean.keys[&r].b[0].limbs[0],
+                "rotation {r}: key material differs"
+            );
+        }
+    }
+
+    #[test]
+    fn key_bytes_matches_exact_formula() {
+        // KswKey: one (b, a) pair per chain limb, each a full-basis
+        // poly of max+2 limbs × N coefficients × 8 bytes.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut kg = KeyGenerator::new(&ctx, 10);
+        let max = ctx.params.max_level();
+        let n = ctx.n();
+        let ksw_bytes = (max + 1) * 2 * (max + 2) * n * 8;
+        let rlk = kg.gen_relin_key(&ctx);
+        assert_eq!(rlk.key_bytes(), ksw_bytes);
+        let gk = kg.gen_galois_keys(&ctx, &[1, 2, 4]);
+        assert_eq!(
+            gk.key_bytes(),
+            3 * ksw_bytes + 3 * 2 * std::mem::size_of::<usize>()
+        );
+        // Galois keys dominate a session: more rotations, more bytes.
+        let gk_small = kg.gen_galois_keys(&ctx, &[1]);
+        assert!(gk_small.key_bytes() < gk.key_bytes());
     }
 
     #[test]

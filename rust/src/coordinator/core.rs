@@ -41,6 +41,7 @@ use crate::ckks::rns::ContextRef;
 use crate::ckks::{Ciphertext, Encoder, Evaluator};
 use crate::hrf::client::reshuffle_and_pack;
 use crate::hrf::HrfServer;
+use crate::keycache::CacheState;
 use crate::runtime::{SlotModel, SlotModelParams};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -67,6 +68,12 @@ pub struct CoordinatorConfig {
     /// evaluation. Clamped to the plan's group count; `1` disables
     /// server-side packing.
     pub enc_batch: usize,
+    /// Adaptive flush: when a batcher's queue has been idle (no
+    /// arrival) for this long, partial batches flush immediately
+    /// instead of waiting out `batch_delay`. Batches still fill to
+    /// capacity under sustained load; this only trims the latency tax
+    /// when traffic pauses. Set `>= batch_delay` to disable.
+    pub idle_flush: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,6 +84,7 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             batch_delay: Duration::from_millis(5),
             enc_batch: 1,
+            idle_flush: Duration::from_millis(1),
         }
     }
 }
@@ -90,6 +98,10 @@ pub enum SubmitError {
     Closed,
     /// Unknown session id.
     NoSession,
+    /// The session exists but its evaluation keys were evicted by the
+    /// key cache: re-register them (same id) via
+    /// [`SessionManager::reregister`] and resubmit.
+    KeysEvicted,
     /// Packed batch larger than the plan's group capacity.
     BatchTooLarge,
 }
@@ -164,12 +176,20 @@ impl Coordinator {
         artifacts_dir: Option<PathBuf>,
     ) -> Self {
         assert!(cfg.workers >= 1);
-        let metrics = Arc::new(Metrics::default());
+        // Metrics share the session cache's counters so one snapshot
+        // covers queueing AND key residency.
+        let metrics = Arc::new(Metrics::with_keycache(sessions.keycache_stats()));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let mut threads = Vec::new();
         let groups = server.model.plan.groups;
         let enc_batch = cfg.enc_batch.clamp(1, groups);
+        metrics
+            .batch_capacity
+            .store(cfg.max_batch as u64, Ordering::Relaxed);
+        metrics
+            .enc_batch_capacity
+            .store(enc_batch as u64, Ordering::Relaxed);
 
         // --- HE workers -------------------------------------------
         let mut worker_txs = Vec::new();
@@ -204,7 +224,7 @@ impl Coordinator {
                                     enqueued,
                                     resp,
                                 } => {
-                                    let result = match sessions.get(session_id) {
+                                    let result = match sessions.get_untracked(session_id) {
                                         Some(sess) => {
                                             let (outs, _) = server.eval(
                                                 &mut ev,
@@ -215,7 +235,9 @@ impl Coordinator {
                                             );
                                             Ok(outs)
                                         }
-                                        None => Err(format!("no session {session_id}")),
+                                        None => Err(format!(
+                                            "session {session_id}: keys evicted or session closed mid-flight; re-register and resubmit"
+                                        )),
                                     };
                                     metrics
                                         .encrypted_completed
@@ -242,6 +264,7 @@ impl Coordinator {
             let loads = worker_loads.clone();
             let worker_txs = worker_txs;
             let batch_delay = cfg.batch_delay;
+            let idle_flush = cfg.idle_flush;
             threads.push(
                 std::thread::Builder::new()
                     .name("enc-batcher".into())
@@ -293,9 +316,19 @@ impl Coordinator {
                                 .values()
                                 .filter_map(|f| f.policy.deadline())
                                 .min();
-                            let timeout = deadline
+                            let mut timeout = deadline
                                 .map(|d| d.saturating_duration_since(Instant::now()))
                                 .unwrap_or(Duration::from_millis(50));
+                            // Adaptive batching: while groups are
+                            // forming, wait only a short idle grace for
+                            // the next arrival — a quiet queue flushes
+                            // partial groups immediately instead of
+                            // sitting out batch_delay.
+                            let forming_any =
+                                forming.values().any(|f| !f.items.is_empty());
+                            if forming_any {
+                                timeout = timeout.min(idle_flush);
+                            }
                             match enc_rx.recv_timeout(timeout) {
                                 Ok(Request::Encrypted {
                                     session_id,
@@ -344,7 +377,17 @@ impl Coordinator {
                                 Ok(Request::Plain { .. }) => {
                                     unreachable!("router sends only encrypted here")
                                 }
-                                Err(RecvTimeoutError::Timeout) => {}
+                                Err(RecvTimeoutError::Timeout) => {
+                                    // Queue idle (or a deadline hit):
+                                    // ship every partial group now.
+                                    let sids: Vec<u64> =
+                                        forming.keys().copied().collect();
+                                    for sid in sids {
+                                        if let Some(f) = forming.get_mut(&sid) {
+                                            flush(sid, f, &metrics, &dispatch);
+                                        }
+                                    }
+                                }
                                 Err(RecvTimeoutError::Disconnected) => {
                                     let sids: Vec<u64> = forming.keys().copied().collect();
                                     for sid in sids {
@@ -469,10 +512,16 @@ impl Coordinator {
                             n
                         };
                         loop {
-                            let timeout = policy
+                            let mut timeout = policy
                                 .deadline()
                                 .map(|d| d.saturating_duration_since(Instant::now()))
                                 .unwrap_or(Duration::from_millis(50));
+                            // Adaptive batching (see the enc-batcher):
+                            // a quiet queue flushes the partial batch
+                            // after a short idle grace.
+                            if !held.is_empty() {
+                                timeout = timeout.min(cfg_b.idle_flush);
+                            }
                             match batch_rx.recv_timeout(timeout) {
                                 Ok(Request::Plain { x, enqueued, resp }) => {
                                     held.push((x, enqueued, resp));
@@ -483,10 +532,9 @@ impl Coordinator {
                                 }
                                 Ok(_) => unreachable!("router sends only Plain here"),
                                 Err(RecvTimeoutError::Timeout) => {
-                                    if policy.on_tick(Instant::now()) == BatchAction::Flush {
-                                        let n = flush(&mut held);
-                                        policy.on_flush(n);
-                                    }
+                                    // Queue idle or deadline hit.
+                                    let n = flush(&mut held);
+                                    policy.on_flush(n);
                                 }
                                 Err(RecvTimeoutError::Disconnected) => {
                                     let n = flush(&mut held);
@@ -537,7 +585,9 @@ impl Coordinator {
 
     /// Submit an encrypted inference (one observation packed in sample
     /// group 0 — the `HrfClient::encrypt_input` layout). Fails fast on
-    /// backpressure or a missing session (checked before queueing).
+    /// backpressure, a missing session, or evicted keys (all checked
+    /// before queueing; the resident-key check also refreshes the
+    /// session's LRU stamp so queued work keeps its keys hot).
     pub fn submit_encrypted(
         &self,
         session_id: u64,
@@ -546,12 +596,7 @@ impl Coordinator {
         if self.shutdown.load(Ordering::Relaxed) {
             return Err(SubmitError::Closed);
         }
-        if self.sessions.get(session_id).is_none() {
-            self.metrics
-                .rejected_no_session
-                .fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::NoSession);
-        }
+        self.check_session(session_id)?;
         let (resp_tx, resp_rx) = sync_channel(1);
         let req = Request::Encrypted {
             session_id,
@@ -579,12 +624,7 @@ impl Coordinator {
         if n_samples == 0 || n_samples > self.max_packed {
             return Err(SubmitError::BatchTooLarge);
         }
-        if self.sessions.get(session_id).is_none() {
-            self.metrics
-                .rejected_no_session
-                .fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::NoSession);
-        }
+        self.check_session(session_id)?;
         let (resp_tx, resp_rx) = sync_channel(1);
         let req = Request::EncryptedPacked {
             session_id,
@@ -608,6 +648,26 @@ impl Coordinator {
             resp: resp_tx,
         };
         self.try_enqueue(req, resp_rx)
+    }
+
+    /// Gate a submission on the session's key-cache state (the
+    /// eviction-safe protocol's server half).
+    fn check_session(&self, session_id: u64) -> Result<(), SubmitError> {
+        match self.sessions.lookup(session_id) {
+            CacheState::Resident(_) => Ok(()),
+            CacheState::Evicted => {
+                self.metrics
+                    .rejected_keys_evicted
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::KeysEvicted)
+            }
+            CacheState::Unknown => {
+                self.metrics
+                    .rejected_no_session
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::NoSession)
+            }
+        }
     }
 
     fn try_enqueue<T>(
@@ -663,7 +723,9 @@ fn run_group(
     session_id: u64,
     items: Vec<EncItem>,
 ) {
-    let sess = match sessions.get(session_id) {
+    // Untracked fetch: the submission gate already counted this
+    // request's cache hit.
+    let sess = match sessions.get_untracked(session_id) {
         Some(s) => s,
         None => {
             for (_, enqueued, resp) in items {
@@ -673,7 +735,9 @@ fn run_group(
                     .lock()
                     .unwrap()
                     .record(enqueued.elapsed());
-                let _ = resp.send(Err(format!("no session {session_id}")));
+                let _ = resp.send(Err(format!(
+                    "session {session_id}: keys evicted or session closed mid-flight; re-register and resubmit"
+                )));
             }
             return;
         }

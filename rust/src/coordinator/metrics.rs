@@ -3,8 +3,9 @@
 //! Lock-free counters (atomics) with a small mutex-guarded log-scale
 //! histogram per request class; cheap enough for the request path.
 
+use crate::keycache::KeyCacheStats;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Log₂-bucketed latency histogram (µs buckets from 1µs to ~17min).
@@ -65,14 +66,39 @@ pub struct Metrics {
     pub plain_completed: AtomicU64,
     pub rejected_backpressure: AtomicU64,
     pub rejected_no_session: AtomicU64,
+    /// Submissions refused because the session's evaluation keys were
+    /// evicted by the key cache (client must re-register).
+    pub rejected_keys_evicted: AtomicU64,
     pub batches_flushed: AtomicU64,
     pub batch_fill_sum: AtomicU64,
     /// Encrypted-path group flushes (one packed HE evaluation each).
     pub enc_batches_flushed: AtomicU64,
     /// Samples carried by those flushes (fill = sum / flushed).
     pub enc_batch_fill_sum: AtomicU64,
+    /// Configured plaintext batch capacity (for fill-ratio reporting;
+    /// 0 until a coordinator starts).
+    pub batch_capacity: AtomicU64,
+    /// Configured encrypted group capacity (clamped `enc_batch`).
+    pub enc_batch_capacity: AtomicU64,
+    /// Shared with the session key cache: hits / misses / evictions /
+    /// resident bytes (see [`crate::keycache`]).
+    pub keycache: Arc<KeyCacheStats>,
     pub encrypted_latency: Mutex<Histogram>,
     pub plain_latency: Mutex<Histogram>,
+}
+
+impl Metrics {
+    /// Metrics wired to an existing key cache's counters (the
+    /// coordinator shares the [`SessionManager`]'s cache stats so one
+    /// snapshot covers the whole serving path).
+    ///
+    /// [`SessionManager`]: super::session::SessionManager
+    pub fn with_keycache(keycache: Arc<KeyCacheStats>) -> Self {
+        Metrics {
+            keycache,
+            ..Default::default()
+        }
+    }
 }
 
 /// Point-in-time copy for reporting.
@@ -82,10 +108,20 @@ pub struct MetricsSnapshot {
     pub plain_completed: u64,
     pub rejected_backpressure: u64,
     pub rejected_no_session: u64,
+    pub rejected_keys_evicted: u64,
     pub batches_flushed: u64,
     pub mean_batch_fill: f64,
+    /// `mean_batch_fill / max_batch` — 1.0 means every flush was full;
+    /// 0 when no capacity was recorded.
+    pub batch_fill_ratio: f64,
     pub enc_batches_flushed: u64,
     pub mean_enc_batch_fill: f64,
+    /// `mean_enc_batch_fill / enc_batch` (see `batch_fill_ratio`).
+    pub enc_batch_fill_ratio: f64,
+    pub keycache_hits: u64,
+    pub keycache_misses: u64,
+    pub keycache_evictions: u64,
+    pub keycache_resident_bytes: u64,
     pub encrypted_mean: Duration,
     pub encrypted_p95: Duration,
     pub plain_mean: Duration,
@@ -98,23 +134,40 @@ impl Metrics {
         let plain = self.plain_latency.lock().unwrap();
         let flushed = self.batches_flushed.load(Ordering::Relaxed);
         let enc_flushed = self.enc_batches_flushed.load(Ordering::Relaxed);
+        let mean_batch_fill = if flushed == 0 {
+            0.0
+        } else {
+            self.batch_fill_sum.load(Ordering::Relaxed) as f64 / flushed as f64
+        };
+        let mean_enc_batch_fill = if enc_flushed == 0 {
+            0.0
+        } else {
+            self.enc_batch_fill_sum.load(Ordering::Relaxed) as f64 / enc_flushed as f64
+        };
+        let fill_ratio = |fill: f64, cap: u64| if cap == 0 { 0.0 } else { fill / cap as f64 };
+        let kc = self.keycache.snapshot();
         MetricsSnapshot {
             encrypted_completed: self.encrypted_completed.load(Ordering::Relaxed),
             plain_completed: self.plain_completed.load(Ordering::Relaxed),
             rejected_backpressure: self.rejected_backpressure.load(Ordering::Relaxed),
             rejected_no_session: self.rejected_no_session.load(Ordering::Relaxed),
+            rejected_keys_evicted: self.rejected_keys_evicted.load(Ordering::Relaxed),
             batches_flushed: flushed,
-            mean_batch_fill: if flushed == 0 {
-                0.0
-            } else {
-                self.batch_fill_sum.load(Ordering::Relaxed) as f64 / flushed as f64
-            },
+            mean_batch_fill,
+            batch_fill_ratio: fill_ratio(
+                mean_batch_fill,
+                self.batch_capacity.load(Ordering::Relaxed),
+            ),
             enc_batches_flushed: enc_flushed,
-            mean_enc_batch_fill: if enc_flushed == 0 {
-                0.0
-            } else {
-                self.enc_batch_fill_sum.load(Ordering::Relaxed) as f64 / enc_flushed as f64
-            },
+            mean_enc_batch_fill,
+            enc_batch_fill_ratio: fill_ratio(
+                mean_enc_batch_fill,
+                self.enc_batch_capacity.load(Ordering::Relaxed),
+            ),
+            keycache_hits: kc.hits,
+            keycache_misses: kc.misses,
+            keycache_evictions: kc.evictions,
+            keycache_resident_bytes: kc.resident_bytes,
             encrypted_mean: enc.mean(),
             encrypted_p95: enc.quantile(0.95),
             plain_mean: plain.mean(),
@@ -161,5 +214,32 @@ mod tests {
         assert_eq!(s.encrypted_completed, 3);
         assert!((s.mean_batch_fill - 4.5).abs() < 1e-12);
         assert!(s.plain_mean > Duration::ZERO);
+    }
+
+    #[test]
+    fn fill_ratios_and_keycache_wiring() {
+        let m = Metrics::default();
+        // No capacity recorded → ratios stay 0 instead of dividing.
+        assert_eq!(m.snapshot().batch_fill_ratio, 0.0);
+        m.batch_capacity.store(8, Ordering::Relaxed);
+        m.enc_batch_capacity.store(4, Ordering::Relaxed);
+        m.batches_flushed.fetch_add(2, Ordering::Relaxed);
+        m.batch_fill_sum.fetch_add(8, Ordering::Relaxed); // mean fill 4
+        m.enc_batches_flushed.fetch_add(1, Ordering::Relaxed);
+        m.enc_batch_fill_sum.fetch_add(3, Ordering::Relaxed);
+        m.keycache.hits.fetch_add(5, Ordering::Relaxed);
+        m.keycache.evictions.fetch_add(2, Ordering::Relaxed);
+        m.keycache.resident_bytes.fetch_add(1024, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.batch_fill_ratio - 0.5).abs() < 1e-12);
+        assert!((s.enc_batch_fill_ratio - 0.75).abs() < 1e-12);
+        assert_eq!(s.keycache_hits, 5);
+        assert_eq!(s.keycache_evictions, 2);
+        assert_eq!(s.keycache_resident_bytes, 1024);
+        // Sharing a cache's stats: the same counters appear in both.
+        let stats = std::sync::Arc::new(crate::keycache::KeyCacheStats::default());
+        let m2 = Metrics::with_keycache(stats.clone());
+        stats.misses.fetch_add(7, Ordering::Relaxed);
+        assert_eq!(m2.snapshot().keycache_misses, 7);
     }
 }

@@ -6,7 +6,12 @@
 //!
 //! * [`session`] — per-client HE key sessions: the server stores each
 //!   client's *evaluation* keys (relinearization + Galois), never the
-//!   secret key. Requests are rejected unless their session exists.
+//!   secret key. Storage is the sharded, memory-budgeted
+//!   [`keycache`](crate::keycache): under key-byte pressure the
+//!   least-recently-used session's keys are evicted, submissions on it
+//!   fail fast with [`SubmitError::KeysEvicted`], and the client
+//!   recovers via [`SessionManager::reregister`] without losing its
+//!   session id. Requests are rejected unless their session exists.
 //! * [`core`] — the coordinator: a bounded ingress queue
 //!   (backpressure), a router that sends encrypted work to the
 //!   least-loaded HE worker and plaintext work to the batcher, a
@@ -22,6 +27,7 @@ pub mod core;
 pub mod metrics;
 pub mod session;
 
+pub use crate::keycache::CacheState;
 pub use core::{Coordinator, CoordinatorConfig, SubmitError};
 pub use metrics::MetricsSnapshot;
 pub use session::{Session, SessionManager};

@@ -1,15 +1,24 @@
-//! Per-client HE key sessions.
+//! Per-client HE key sessions, stored in the sharded
+//! [`keycache`](crate::keycache).
 //!
 //! In the CKKS deployment model the client generates all key material,
 //! keeps the secret key, and ships the server its *public* evaluation
 //! keys: relinearization (for ct×ct) and Galois (for the rotations of
 //! Algorithms 1–2). One [`Session`] holds those for one client; the
-//! [`SessionManager`] is the thread-safe registry the router consults.
+//! [`SessionManager`] is the registry the router consults.
+//!
+//! Storage is a [`KeyCache`]: sharded by `session_id % num_shards`,
+//! with exact [`Session::key_bytes`] accounting against a global
+//! memory budget and per-shard LRU eviction. Eviction never invalidates
+//! a session *id* — an evicted session's submits fail with
+//! `SubmitError::KeysEvicted` and the client recovers by pushing its
+//! retained keys back under the same id ([`SessionManager::reregister`]).
 
 use crate::ckks::keys::{GaloisKeys, RelinKey};
-use std::collections::HashMap;
+use crate::hrf::client::EvalKeys;
+use crate::keycache::{CacheState, KeyCache, KeyCacheConfig, KeyCacheStats};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 /// Server-side state for one client.
 pub struct Session {
@@ -18,41 +27,126 @@ pub struct Session {
     pub galois: GaloisKeys,
 }
 
-/// Thread-safe session registry.
-#[derive(Default)]
+impl Session {
+    /// Exact resident bytes this session's keys occupy — what the key
+    /// cache charges against its budget.
+    pub fn key_bytes(&self) -> usize {
+        self.relin.key_bytes() + self.galois.key_bytes()
+    }
+}
+
+/// Thread-safe session registry backed by the sharded key cache.
 pub struct SessionManager {
     next_id: AtomicU64,
-    sessions: RwLock<HashMap<u64, Arc<Session>>>,
+    cache: KeyCache<Session>,
+}
+
+impl Default for SessionManager {
+    fn default() -> Self {
+        Self::with_config(KeyCacheConfig::default())
+    }
 }
 
 impl SessionManager {
+    /// Unbounded registry (default cache config: no memory budget).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Registry with an explicit key-cache configuration (shard count
+    /// + global key-byte budget).
+    pub fn with_config(cfg: KeyCacheConfig) -> Self {
+        SessionManager {
+            next_id: AtomicU64::new(0),
+            cache: KeyCache::new(cfg),
+        }
+    }
+
     /// Register a client's evaluation keys; returns the session id the
-    /// client must present with every request.
+    /// client must present with every request. May evict the
+    /// least-recently-used sessions' keys to fit the budget.
     pub fn register(&self, relin: RelinKey, galois: GaloisKeys) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let session = Arc::new(Session { id, relin, galois });
-        self.sessions.write().unwrap().insert(id, session);
+        let session = Session { id, relin, galois };
+        let bytes = session.key_bytes();
+        self.cache.insert(id, session, bytes);
         id
     }
 
+    /// Re-upload evaluation keys for an existing session id after its
+    /// keys were evicted (or proactively, e.g. to widen rotation
+    /// coverage). Returns false if the id was never registered or was
+    /// removed — re-registration never creates ids.
+    pub fn reregister(&self, id: u64, relin: RelinKey, galois: GaloisKeys) -> bool {
+        if !self.cache.is_known(id) {
+            return false;
+        }
+        let session = Session { id, relin, galois };
+        let bytes = session.key_bytes();
+        self.cache.insert(id, session, bytes);
+        true
+    }
+
+    /// [`SessionManager::register`] for a client-retained
+    /// [`EvalKeys`] bundle (see `HrfClient::eval_keys`).
+    pub fn register_keys(&self, keys: &EvalKeys) -> u64 {
+        self.register(keys.relin.clone(), keys.galois.clone())
+    }
+
+    /// [`SessionManager::reregister`] for a client-retained
+    /// [`EvalKeys`] bundle — the recovery step after a
+    /// `SubmitError::KeysEvicted`.
+    pub fn reregister_keys(&self, id: u64, keys: &EvalKeys) -> bool {
+        self.reregister(id, keys.relin.clone(), keys.galois.clone())
+    }
+
+    /// Resident session (refreshes its LRU stamp). None when the keys
+    /// are evicted or the id is unknown — use [`SessionManager::lookup`]
+    /// to tell the two apart.
     pub fn get(&self, id: u64) -> Option<Arc<Session>> {
-        self.sessions.read().unwrap().get(&id).cloned()
+        self.cache.get(id)
     }
 
+    /// [`SessionManager::get`] without hit/miss accounting: for
+    /// fetches that follow an already-counted submission-gate lookup
+    /// (the coordinator's workers), keeping the cache hit rate at one
+    /// count per request.
+    pub fn get_untracked(&self, id: u64) -> Option<Arc<Session>> {
+        self.cache.get_untracked(id)
+    }
+
+    /// Full protocol state: resident / evicted / unknown.
+    pub fn lookup(&self, id: u64) -> CacheState<Session> {
+        self.cache.lookup(id)
+    }
+
+    /// Close a session entirely (id becomes unknown).
     pub fn remove(&self, id: u64) -> bool {
-        self.sessions.write().unwrap().remove(&id).is_some()
+        self.cache.remove(id)
     }
 
+    /// Sessions with resident keys.
     pub fn len(&self) -> usize {
-        self.sessions.read().unwrap().len()
+        self.cache.resident_len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Known session ids (resident + evicted).
+    pub fn known_len(&self) -> usize {
+        self.cache.known_len()
+    }
+
+    /// Current resident key bytes across all shards.
+    pub fn resident_bytes(&self) -> u64 {
+        self.cache.resident_bytes()
+    }
+
+    /// Shared cache counters, for wiring into serving metrics.
+    pub fn keycache_stats(&self) -> Arc<KeyCacheStats> {
+        self.cache.stats()
     }
 }
 
@@ -100,5 +194,59 @@ mod tests {
         all.dedup();
         assert_eq!(before, all.len(), "duplicate session ids");
         assert_eq!(mgr.len(), 32);
+    }
+
+    #[test]
+    fn eviction_keeps_id_and_reregistration_recovers() {
+        let (r, g) = keys(7);
+        let session_bytes = (r.key_bytes() + g.key_bytes()) as u64;
+        // Budget admits one session (plus slack), not two.
+        let mgr = SessionManager::with_config(KeyCacheConfig {
+            num_shards: 2,
+            budget_bytes: session_bytes * 3 / 2,
+        });
+        let id0 = mgr.register(r.clone(), g.clone());
+        assert_eq!(mgr.resident_bytes(), session_bytes);
+        let id1 = mgr.register(r.clone(), g.clone());
+        // id0 was evicted, but its id survives.
+        assert!(mgr.resident_bytes() <= session_bytes * 3 / 2);
+        assert!(matches!(mgr.lookup(id0), CacheState::Evicted));
+        assert!(mgr.get(id0).is_none());
+        assert!(mgr.get(id1).is_some());
+        assert_eq!(mgr.len(), 1);
+        assert_eq!(mgr.known_len(), 2);
+        // Re-registration restores the same id (evicting id1 in turn).
+        assert!(mgr.reregister(id0, r.clone(), g.clone()));
+        assert!(mgr.get(id0).is_some());
+        assert!(matches!(mgr.lookup(id1), CacheState::Evicted));
+        // Unknown ids cannot be re-registered.
+        assert!(!mgr.reregister(9_999, r, g));
+        let stats = mgr.keycache_stats().snapshot();
+        assert!(stats.evictions >= 2);
+        assert!(stats.misses >= 1);
+    }
+
+    #[test]
+    fn eval_keys_bundle_registers_and_reregisters() {
+        let (relin, galois) = keys(9);
+        let bundle = crate::hrf::client::EvalKeys { relin, galois };
+        let mgr = SessionManager::new();
+        let id = mgr.register_keys(&bundle);
+        assert!(mgr.get(id).is_some());
+        // Re-registration is an update, not a new enrolment.
+        assert!(mgr.reregister_keys(id, &bundle));
+        assert_eq!(mgr.len(), 1);
+        assert!(!mgr.reregister_keys(id + 100, &bundle));
+    }
+
+    #[test]
+    fn removed_session_is_unknown_not_evicted() {
+        let mgr = SessionManager::new();
+        let (r, g) = keys(8);
+        let id = mgr.register(r.clone(), g.clone());
+        assert!(mgr.remove(id));
+        assert!(matches!(mgr.lookup(id), CacheState::Unknown));
+        assert!(!mgr.reregister(id, r, g));
+        assert_eq!(mgr.known_len(), 0);
     }
 }

@@ -15,6 +15,7 @@
 //! homomorphic evaluation across the batch.
 
 use super::pack::HrfModel;
+use crate::ckks::keys::{GaloisKeys, RelinKey};
 use crate::ckks::rns::CkksContext;
 use crate::ckks::{Ciphertext, Decryptor, Encoder, Encryptor};
 
@@ -59,10 +60,32 @@ pub fn reshuffle_and_pack_group(model: &HrfModel, xs: &[Vec<f64>]) -> Vec<f64> {
     slots
 }
 
+/// The evaluation-key bundle a server session caches (relinearization
+/// + Galois). Clients that retain a copy can recover from server-side
+/// key eviction (`SubmitError::KeysEvicted`) without a fresh key
+/// generation ceremony: hand [`HrfClient::eval_keys`] to the serving
+/// layer's `SessionManager::register_keys` / `reregister_keys` — the
+/// client half of the [`keycache`](crate::keycache) protocol.
+#[derive(Clone)]
+pub struct EvalKeys {
+    pub relin: RelinKey,
+    pub galois: GaloisKeys,
+}
+
+impl EvalKeys {
+    /// Exact bytes the server's key cache will charge for this bundle.
+    pub fn key_bytes(&self) -> usize {
+        self.relin.key_bytes() + self.galois.key_bytes()
+    }
+}
+
 /// Client-side state: encoder + keys for one session.
 pub struct HrfClient {
     pub encryptor: Encryptor,
     pub decryptor: Decryptor,
+    /// Retained for (re-)registration with the serving layer; None
+    /// when the caller manages key material itself.
+    eval_keys: Option<EvalKeys>,
 }
 
 impl HrfClient {
@@ -70,7 +93,30 @@ impl HrfClient {
         HrfClient {
             encryptor,
             decryptor,
+            eval_keys: None,
         }
+    }
+
+    /// A client that retains its evaluation keys so sessions survive
+    /// server-side eviction: on `SubmitError::KeysEvicted`, pass
+    /// [`HrfClient::eval_keys`] to `SessionManager::reregister_keys`
+    /// and resubmit under the same session id.
+    pub fn with_eval_keys(
+        encryptor: Encryptor,
+        decryptor: Decryptor,
+        relin: RelinKey,
+        galois: GaloisKeys,
+    ) -> Self {
+        HrfClient {
+            encryptor,
+            decryptor,
+            eval_keys: Some(EvalKeys { relin, galois }),
+        }
+    }
+
+    /// The retained evaluation-key bundle (None for key-less clients).
+    pub fn eval_keys(&self) -> Option<&EvalKeys> {
+        self.eval_keys.as_ref()
     }
 
     /// Encrypt one observation for the given model.
@@ -212,6 +258,32 @@ mod tests {
                 assert_eq!(slots[off + s], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn retained_eval_keys_are_exposed_with_exact_bytes() {
+        use crate::ckks::rns::CkksContext;
+        use crate::ckks::{CkksParams, Decryptor, Encryptor, KeyGenerator};
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut kg = KeyGenerator::new(&ctx, 91);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        let gk = kg.gen_galois_keys(&ctx, &[1, 2]);
+        let expected_bytes = rlk.key_bytes() + gk.key_bytes();
+        let client = HrfClient::with_eval_keys(
+            Encryptor::new(pk, 92),
+            Decryptor::new(kg.secret_key()),
+            rlk,
+            gk,
+        );
+        let keys = client.eval_keys().expect("keys retained");
+        assert_eq!(keys.key_bytes(), expected_bytes);
+        // A key-less client retains nothing to (re-)register.
+        let ctx2 = CkksContext::new(CkksParams::toy());
+        let mut kg2 = KeyGenerator::new(&ctx2, 93);
+        let pk2 = kg2.gen_public_key(&ctx2);
+        let bare = HrfClient::new(Encryptor::new(pk2, 94), Decryptor::new(kg2.secret_key()));
+        assert!(bare.eval_keys().is_none());
     }
 
     #[test]

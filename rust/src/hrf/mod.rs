@@ -23,7 +23,7 @@ pub mod pack;
 pub mod plan;
 pub mod server;
 
-pub use client::HrfClient;
+pub use client::{EvalKeys, HrfClient};
 pub use pack::HrfModel;
 pub use plan::HrfPlan;
 pub use server::{HrfServer, LayerCounts};

@@ -258,6 +258,16 @@ impl HrfServer {
         }
     }
 
+    /// Rotation steps a session must cover in its registered Galois
+    /// keys to use this server with packed groups of up to `b` samples
+    /// (`b ≤ 1` is the single-sample set) — what a client should
+    /// generate for registration *and* re-registration after a
+    /// `SubmitError::KeysEvicted` (the key cache evicts whole
+    /// sessions, so recovery re-uploads this full set).
+    pub fn eval_key_requirements(&self, b: usize) -> Vec<usize> {
+        self.model.plan.rotations_needed_batched(b)
+    }
+
     /// Whether `gk` holds every Galois key a `b`-sample packed
     /// evaluation needs (placement + extraction on top of the
     /// evaluation set).

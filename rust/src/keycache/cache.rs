@@ -1,0 +1,350 @@
+//! The sharded cache proper: shard routing, the global memory budget,
+//! and the eviction loop.
+//!
+//! Locking discipline: at most one shard lock is ever held at a time.
+//! The eviction loop scans shards one-by-one for the globally-oldest
+//! entry, releases, then re-locks the chosen shard to evict — a benign
+//! race (the victim may have been touched or removed in between; the
+//! loop just re-checks the gauge and rescans).
+
+use super::shard::Shard;
+use super::stats::KeyCacheStats;
+use super::KeyCacheConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What a lookup found — the three states of the eviction-safe
+/// protocol.
+#[derive(Debug)]
+pub enum CacheState<V> {
+    /// Keys are resident; the lookup refreshed their LRU stamp.
+    Resident(Arc<V>),
+    /// The id is known but its keys were evicted: the owner must
+    /// re-register (same id, fresh key upload).
+    Evicted,
+    /// Never registered, or explicitly removed.
+    Unknown,
+}
+
+impl<V> CacheState<V> {
+    pub fn is_resident(&self) -> bool {
+        matches!(self, CacheState::Resident(_))
+    }
+}
+
+/// Sharded, memory-budgeted LRU store keyed by session id. See the
+/// [module docs](super) for the design.
+pub struct KeyCache<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    budget_bytes: u64,
+    /// Global LRU clock: every insert/touch draws a unique tick.
+    clock: AtomicU64,
+    stats: Arc<KeyCacheStats>,
+}
+
+impl<V> KeyCache<V> {
+    pub fn new(cfg: KeyCacheConfig) -> Self {
+        let n = cfg.num_shards.max(1);
+        KeyCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            budget_bytes: cfg.budget_bytes,
+            clock: AtomicU64::new(0),
+            stats: Arc::new(KeyCacheStats::default()),
+        }
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<Shard<V>> {
+        &self.shards[(id % self.shards.len() as u64) as usize]
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Admit (or refresh) `id`'s entry of `bytes` resident bytes, then
+    /// evict least-recently-used entries — the new entry excepted —
+    /// until the global budget holds again. An entry larger than the
+    /// whole budget is still admitted (see module docs).
+    pub fn insert(&self, id: u64, value: V, bytes: usize) {
+        let tick = self.tick();
+        // Gauge updates happen under the same shard lock as the entry
+        // mutation: an entry is never visible to eviction before its
+        // bytes are charged, so the gauge can never be under-charged
+        // and `fetch_sub` on eviction can never wrap.
+        {
+            let mut sh = self.shard(id).lock().unwrap();
+            let replaced = sh.insert(id, Arc::new(value), bytes, tick);
+            if let Some(old) = replaced {
+                self.stats
+                    .resident_bytes
+                    .fetch_sub(old as u64, Ordering::Relaxed);
+            }
+            self.stats
+                .resident_bytes
+                .fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+        self.enforce_budget(Some(id));
+    }
+
+    /// Resident value for `id`, refreshing its LRU stamp; None on
+    /// evicted or unknown ids (use [`KeyCache::lookup`] to tell apart).
+    pub fn get(&self, id: u64) -> Option<Arc<V>> {
+        match self.lookup(id) {
+            CacheState::Resident(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Like [`KeyCache::get`] — refreshes the LRU stamp — but without
+    /// counting hit/miss stats. For internal fetches that follow an
+    /// already-counted [`KeyCache::lookup`] (e.g. a worker picking up
+    /// keys for a request whose submission gate counted the hit), so
+    /// the hit rate stays one count per request.
+    pub fn get_untracked(&self, id: u64) -> Option<Arc<V>> {
+        let tick = self.tick();
+        self.shard(id).lock().unwrap().get(id, tick)
+    }
+
+    /// Full protocol state for `id`. Resident hits refresh LRU and
+    /// count as cache hits; known-but-evicted ids count as misses.
+    pub fn lookup(&self, id: u64) -> CacheState<V> {
+        let tick = self.tick();
+        let mut sh = self.shard(id).lock().unwrap();
+        if let Some(v) = sh.get(id, tick) {
+            drop(sh);
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            CacheState::Resident(v)
+        } else if sh.is_known(id) {
+            drop(sh);
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            CacheState::Evicted
+        } else {
+            CacheState::Unknown
+        }
+    }
+
+    /// State for `id` without touching LRU order or hit/miss counters
+    /// (introspection: tests, metrics probes).
+    pub fn peek(&self, id: u64) -> CacheState<V> {
+        let sh = self.shard(id).lock().unwrap();
+        if let Some(v) = sh.peek(id) {
+            CacheState::Resident(v)
+        } else if sh.is_known(id) {
+            CacheState::Evicted
+        } else {
+            CacheState::Unknown
+        }
+    }
+
+    /// Whether the id was ever registered and not removed (resident or
+    /// evicted) — the re-registration gate.
+    pub fn is_known(&self, id: u64) -> bool {
+        self.shard(id).lock().unwrap().is_known(id)
+    }
+
+    /// Forget `id` entirely; returns whether it was known.
+    pub fn remove(&self, id: u64) -> bool {
+        let mut sh = self.shard(id).lock().unwrap();
+        let (freed, known) = sh.remove(id);
+        if let Some(b) = freed {
+            self.stats
+                .resident_bytes
+                .fetch_sub(b as u64, Ordering::Relaxed);
+        }
+        known
+    }
+
+    /// Number of entries with resident keys.
+    pub fn resident_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().resident_len())
+            .sum()
+    }
+
+    /// Number of known ids (resident + evicted).
+    pub fn known_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().known_len())
+            .sum()
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.stats.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shared counters (hand these to the metrics layer).
+    pub fn stats(&self) -> Arc<KeyCacheStats> {
+        self.stats.clone()
+    }
+
+    /// Evict globally-oldest entries (skipping `keep`) until resident
+    /// bytes fit the budget or nothing evictable remains.
+    fn enforce_budget(&self, keep: Option<u64>) {
+        while self.stats.resident_bytes.load(Ordering::Relaxed) > self.budget_bytes {
+            // Globally-oldest entry: ticks are global, so per-shard
+            // minima compare directly. One lock at a time.
+            let mut best: Option<(usize, u64)> = None;
+            for (i, m) in self.shards.iter().enumerate() {
+                let oldest = m.lock().unwrap().oldest_tick_excluding(keep);
+                if let Some(t) = oldest {
+                    let better = match best {
+                        None => true,
+                        Some((_, bt)) => t < bt,
+                    };
+                    if better {
+                        best = Some((i, t));
+                    }
+                }
+            }
+            let (i, _) = match best {
+                Some(b) => b,
+                // Nothing evictable (at most the kept entry resident):
+                // the documented over-budget exception.
+                None => return,
+            };
+            let mut sh = self.shards[i].lock().unwrap();
+            match sh.evict_oldest_excluding(keep) {
+                Some((_, bytes)) => {
+                    // Subtract under the shard lock (see `insert`).
+                    self.stats
+                        .resident_bytes
+                        .fetch_sub(bytes as u64, Ordering::Relaxed);
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // Raced away (touched/removed between scan and lock):
+                // re-check the gauge and rescan.
+                None => continue,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(shards: usize, budget: u64) -> KeyCache<u64> {
+        KeyCache::new(KeyCacheConfig {
+            num_shards: shards,
+            budget_bytes: budget,
+        })
+    }
+
+    #[test]
+    fn within_budget_nothing_evicts() {
+        let c = cache(4, 100);
+        for id in 0..10 {
+            c.insert(id, id, 10);
+        }
+        assert_eq!(c.resident_len(), 10);
+        assert_eq!(c.resident_bytes(), 100);
+        assert_eq!(c.stats().snapshot().evictions, 0);
+    }
+
+    #[test]
+    fn over_budget_evicts_lru_and_keeps_ids_known() {
+        let c = cache(4, 30);
+        for id in 0..4 {
+            c.insert(id, id, 10);
+        }
+        // 40 > 30: exactly the oldest (id 0) was evicted.
+        assert_eq!(c.resident_bytes(), 30);
+        assert!(matches!(c.peek(0), CacheState::Evicted));
+        for id in 1..4 {
+            assert!(c.peek(id).is_resident(), "id {id} should be resident");
+        }
+        assert!(c.is_known(0));
+        assert_eq!(c.known_len(), 4);
+        assert_eq!(c.stats().snapshot().evictions, 1);
+    }
+
+    #[test]
+    fn touch_protects_from_eviction() {
+        let c = cache(2, 30);
+        for id in 0..3 {
+            c.insert(id, id, 10);
+        }
+        assert!(c.get(0).is_some()); // 0 becomes most-recent
+        c.insert(3, 3, 10); // evicts 1, the LRU
+        assert!(c.peek(0).is_resident());
+        assert!(matches!(c.peek(1), CacheState::Evicted));
+        assert!(c.peek(2).is_resident());
+        assert!(c.peek(3).is_resident());
+    }
+
+    #[test]
+    fn reinsert_after_eviction_restores_residency() {
+        let c = cache(1, 20);
+        c.insert(0, 0, 10);
+        c.insert(1, 1, 10);
+        c.insert(2, 2, 10); // evicts 0
+        assert!(matches!(c.peek(0), CacheState::Evicted));
+        c.insert(0, 0, 10); // re-registration: evicts 1
+        assert!(c.peek(0).is_resident());
+        assert!(matches!(c.peek(1), CacheState::Evicted));
+        assert!(c.peek(2).is_resident());
+        assert_eq!(c.resident_bytes(), 20);
+    }
+
+    #[test]
+    fn oversized_entry_is_admitted_alone() {
+        let c = cache(2, 10);
+        c.insert(0, 0, 5);
+        c.insert(1, 1, 25); // bigger than the whole budget
+        assert!(c.peek(1).is_resident(), "oversized entry must be admitted");
+        assert!(matches!(c.peek(0), CacheState::Evicted));
+        assert_eq!(c.resident_bytes(), 25);
+        // The next normal insert pushes it out again.
+        c.insert(2, 2, 5);
+        assert!(matches!(c.peek(1), CacheState::Evicted));
+        assert_eq!(c.resident_bytes(), 5);
+    }
+
+    #[test]
+    fn remove_frees_bytes_and_forgets() {
+        let c = cache(4, u64::MAX);
+        c.insert(0, 0, 10);
+        assert!(c.remove(0));
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(matches!(c.peek(0), CacheState::Unknown));
+        assert!(!c.remove(0));
+        assert!(!c.remove(99));
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let c = cache(1, 10);
+        c.insert(0, 0, 10);
+        c.insert(1, 1, 10); // evicts 0
+        assert!(matches!(c.lookup(1), CacheState::Resident(_)));
+        assert!(matches!(c.lookup(0), CacheState::Evicted));
+        assert!(matches!(c.lookup(42), CacheState::Unknown));
+        let s = c.stats().snapshot();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn replace_resident_adjusts_gauge() {
+        let c = cache(2, 100);
+        c.insert(0, 0, 40);
+        c.insert(0, 7, 10);
+        assert_eq!(c.resident_bytes(), 10);
+        assert_eq!(c.resident_len(), 1);
+        match c.peek(0) {
+            CacheState::Resident(v) => assert_eq!(*v, 7),
+            other => panic!("expected resident, got {other:?}"),
+        }
+    }
+}

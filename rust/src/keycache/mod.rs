@@ -1,0 +1,80 @@
+//! Sharded, memory-budgeted evaluation-key cache — the layer between
+//! client key generation and the serving path.
+//!
+//! # Why a cache, not a map
+//!
+//! Every client session ships the server its evaluation keys:
+//! relinearization plus one Galois key per rotation step. A session
+//! registered for packed groups of `B` samples needs
+//! `rotations_needed_batched(B)` steps (~2B extra Galois keys), each of
+//! them `dnum` pairs of full-basis RNS polynomials — multiple MiB per
+//! session on realistic rings. At the "millions of users" scale the
+//! ROADMAP targets, an unbounded `HashMap` of key material is the first
+//! thing that melts; related encrypted-tree-serving systems treat key
+//! storage as *the* scarce server resource. This module makes it one:
+//!
+//! * **Sharding** — entries map to `session_id % num_shards`, one
+//!   `Mutex` per shard, so registration/lookup from many serving
+//!   threads never convoys on a single lock.
+//! * **Exact byte accounting** — entry sizes come from the
+//!   [`key_bytes`](crate::ckks::keys::RelinKey::key_bytes) APIs in
+//!   `ckks::keys`, not estimates, and the global resident-bytes gauge
+//!   is maintained on every insert/evict/remove.
+//! * **LRU eviction under a global budget** — ticks are drawn from one
+//!   global counter, so each shard's least-recently-used entry is
+//!   comparable across shards; when resident bytes exceed the budget
+//!   the globally-oldest entry is evicted (always inside a single
+//!   shard lock — locks are never nested).
+//! * **Eviction-safe protocol** — eviction drops the *keys*, never the
+//!   *session id*: an evicted id stays "known", lookups report
+//!   [`CacheState::Evicted`] (→ `SubmitError::KeysEvicted` at the
+//!   coordinator), and the client re-registers its retained keys under
+//!   the same id ([`SessionManager::reregister`]
+//!   (crate::coordinator::session::SessionManager::reregister)) rather
+//!   than re-enrolling.
+//!
+//! The cache is generic over the stored value so the serving layer can
+//! cache [`Session`](crate::coordinator::session::Session)s while the
+//! property tests drive the LRU/budget machinery with synthetic sizes.
+//!
+//! One documented exception to the budget invariant: an entry whose own
+//! size exceeds the whole budget is still admitted (refusing it would
+//! deadlock that client's protocol); everything else is evicted around
+//! it. With entry sizes ≤ budget, `resident_bytes ≤ budget` holds after
+//! every single-threaded operation.
+
+pub mod cache;
+pub mod shard;
+pub mod stats;
+
+pub use cache::{CacheState, KeyCache};
+pub use stats::{KeyCacheStats, KeyCacheStatsSnapshot};
+
+/// Tuning for one [`KeyCache`].
+#[derive(Clone, Copy, Debug)]
+pub struct KeyCacheConfig {
+    /// Lock shards; entries map to `session_id % num_shards`.
+    pub num_shards: usize,
+    /// Global resident-bytes budget across all shards. `u64::MAX`
+    /// (the default) disables eviction.
+    pub budget_bytes: u64,
+}
+
+impl Default for KeyCacheConfig {
+    fn default() -> Self {
+        KeyCacheConfig {
+            num_shards: 16,
+            budget_bytes: u64::MAX,
+        }
+    }
+}
+
+impl KeyCacheConfig {
+    /// Default sharding with an explicit memory budget.
+    pub fn with_budget(budget_bytes: u64) -> Self {
+        KeyCacheConfig {
+            budget_bytes,
+            ..Default::default()
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! One lock domain of the sharded cache: resident entries, an exact
+//! LRU index, and the set of ids the shard remembers.
+//!
+//! LRU is kept *exact* with a `BTreeMap<tick, id>` keyed by globally
+//! unique monotonic ticks (the cache hands one out per insert/touch):
+//! the map's first entry is the shard's least-recently-used session,
+//! and because ticks come from one global counter, per-shard minima are
+//! directly comparable when the cache picks a global eviction victim.
+//!
+//! Eviction and removal differ on purpose: **evict** drops the keys but
+//! keeps the id in `known` (the session survives, its keys must be
+//! re-registered), **remove** forgets the id entirely.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
+
+pub(crate) struct Entry<V> {
+    pub value: Arc<V>,
+    pub bytes: usize,
+    /// LRU stamp; also this entry's key in the shard's `lru` index.
+    pub tick: u64,
+}
+
+pub(crate) struct Shard<V> {
+    entries: HashMap<u64, Entry<V>>,
+    /// Exact LRU order: tick → id, oldest first. Ticks are unique.
+    lru: BTreeMap<u64, u64>,
+    /// Ids ever inserted and not explicitly removed. Eviction keeps
+    /// them — this is the eviction-safe protocol's memory.
+    known: HashSet<u64>,
+}
+
+impl<V> Default for Shard<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> Shard<V> {
+    pub fn new() -> Self {
+        Shard {
+            entries: HashMap::new(),
+            lru: BTreeMap::new(),
+            known: HashSet::new(),
+        }
+    }
+
+    /// Insert or replace; returns the bytes of a replaced resident
+    /// entry so the caller can fix the global gauge.
+    pub fn insert(&mut self, id: u64, value: Arc<V>, bytes: usize, tick: u64) -> Option<usize> {
+        self.known.insert(id);
+        let old = self.entries.insert(id, Entry { value, bytes, tick });
+        if let Some(ref e) = old {
+            self.lru.remove(&e.tick);
+        }
+        self.lru.insert(tick, id);
+        old.map(|e| e.bytes)
+    }
+
+    /// Fetch + touch: refresh the entry's LRU stamp to `tick`.
+    pub fn get(&mut self, id: u64, tick: u64) -> Option<Arc<V>> {
+        let e = self.entries.get_mut(&id)?;
+        self.lru.remove(&e.tick);
+        e.tick = tick;
+        self.lru.insert(tick, id);
+        Some(e.value.clone())
+    }
+
+    /// Fetch without touching LRU or stats (introspection only).
+    pub fn peek(&self, id: u64) -> Option<Arc<V>> {
+        self.entries.get(&id).map(|e| e.value.clone())
+    }
+
+    pub fn is_known(&self, id: u64) -> bool {
+        self.known.contains(&id)
+    }
+
+    /// LRU stamp of the oldest entry other than `keep`.
+    pub fn oldest_tick_excluding(&self, keep: Option<u64>) -> Option<u64> {
+        self.lru
+            .iter()
+            .find(|&(_, &id)| Some(id) != keep)
+            .map(|(&t, _)| t)
+    }
+
+    /// Evict the least-recently-used entry other than `keep`. The id
+    /// stays known (evicted ≠ removed). Returns `(id, bytes)` freed.
+    pub fn evict_oldest_excluding(&mut self, keep: Option<u64>) -> Option<(u64, usize)> {
+        let (tick, id) = {
+            let (&t, &i) = self.lru.iter().find(|&(_, &id)| Some(id) != keep)?;
+            (t, i)
+        };
+        self.lru.remove(&tick);
+        let e = self
+            .entries
+            .remove(&id)
+            .expect("lru index entry must be resident");
+        Some((id, e.bytes))
+    }
+
+    /// Forget the id entirely. Returns (resident bytes freed, whether
+    /// the id was known at all).
+    pub fn remove(&mut self, id: u64) -> (Option<usize>, bool) {
+        let known = self.known.remove(&id);
+        match self.entries.remove(&id) {
+            Some(e) => {
+                self.lru.remove(&e.tick);
+                (Some(e.bytes), known)
+            }
+            None => (None, known),
+        }
+    }
+
+    pub fn resident_len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn known_len(&self) -> usize {
+        self.known.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_with(ids: &[u64]) -> Shard<u64> {
+        let mut s = Shard::new();
+        for (t, &id) in ids.iter().enumerate() {
+            s.insert(id, Arc::new(id), 10, t as u64);
+        }
+        s
+    }
+
+    #[test]
+    fn lru_order_is_insert_order_until_touched() {
+        let mut s = shard_with(&[7, 8, 9]);
+        assert_eq!(s.oldest_tick_excluding(None), Some(0));
+        assert_eq!(s.evict_oldest_excluding(None), Some((7, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((8, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((9, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), None);
+    }
+
+    #[test]
+    fn touch_moves_entry_to_back() {
+        let mut s = shard_with(&[1, 2, 3]);
+        assert!(s.get(1, 100).is_some()); // 1 becomes most-recent
+        assert_eq!(s.evict_oldest_excluding(None), Some((2, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((3, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((1, 10)));
+    }
+
+    #[test]
+    fn eviction_keeps_id_known_but_remove_forgets() {
+        let mut s = shard_with(&[5, 6]);
+        s.evict_oldest_excluding(None);
+        assert!(s.is_known(5), "evicted id must stay known");
+        assert!(s.peek(5).is_none());
+        assert!(s.get(5, 50).is_none());
+        let (freed, known) = s.remove(5);
+        assert_eq!(freed, None);
+        assert!(known);
+        assert!(!s.is_known(5));
+        let (freed, known) = s.remove(6);
+        assert_eq!(freed, Some(10));
+        assert!(known);
+    }
+
+    #[test]
+    fn keep_excludes_entry_from_eviction() {
+        let mut s = shard_with(&[1, 2]);
+        assert_eq!(s.oldest_tick_excluding(Some(1)), Some(1));
+        assert_eq!(s.evict_oldest_excluding(Some(1)), Some((2, 10)));
+        // Only the kept entry remains: nothing evictable.
+        assert_eq!(s.evict_oldest_excluding(Some(1)), None);
+        assert_eq!(s.oldest_tick_excluding(Some(1)), None);
+    }
+
+    #[test]
+    fn replace_updates_lru_and_returns_old_bytes() {
+        let mut s = shard_with(&[1, 2]);
+        let old = s.insert(1, Arc::new(1), 25, 99);
+        assert_eq!(old, Some(10));
+        assert_eq!(s.resident_len(), 2);
+        // 1 was refreshed by the replace; 2 is now oldest.
+        assert_eq!(s.evict_oldest_excluding(None), Some((2, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((1, 25)));
+    }
+}

@@ -1,0 +1,73 @@
+//! Cache observability: lock-free counters shared with the serving
+//! metrics (`coordinator::metrics` snapshots them without touching any
+//! shard lock).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one [`KeyCache`](super::KeyCache). All atomics, so the
+/// cache and any number of metric reporters can share an `Arc` of this.
+#[derive(Debug, Default)]
+pub struct KeyCacheStats {
+    /// Lookups that found resident keys (each one refreshes LRU).
+    pub hits: AtomicU64,
+    /// Lookups for a known session whose keys were evicted.
+    pub misses: AtomicU64,
+    /// Entries pushed out by the memory budget.
+    pub evictions: AtomicU64,
+    /// Entries admitted (first registrations + re-registrations).
+    pub inserts: AtomicU64,
+    /// Current resident key bytes across all shards (gauge).
+    pub resident_bytes: AtomicU64,
+}
+
+impl KeyCacheStats {
+    pub fn snapshot(&self) -> KeyCacheStatsSnapshot {
+        KeyCacheStatsSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KeyCacheStatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub inserts: u64,
+    pub resident_bytes: u64,
+}
+
+impl KeyCacheStatsSnapshot {
+    /// hits / (hits + misses); 0 when no session lookups happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_hit_rate() {
+        let s = KeyCacheStats::default();
+        assert_eq!(s.snapshot().hit_rate(), 0.0);
+        s.hits.fetch_add(3, Ordering::Relaxed);
+        s.misses.fetch_add(1, Ordering::Relaxed);
+        s.resident_bytes.fetch_add(4096, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.hits, 3);
+        assert_eq!(snap.resident_bytes, 4096);
+        assert!((snap.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

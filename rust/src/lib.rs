@@ -24,6 +24,10 @@
 //! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
 //!   bounded queues with backpressure, per-client key sessions and
 //!   worker pool.
+//! * [`keycache`] — the sharded, memory-budgeted evaluation-key cache
+//!   behind those sessions: exact `key_bytes` accounting, per-shard
+//!   LRU eviction under a global budget, and the eviction-safe
+//!   re-registration protocol (`SubmitError::KeysEvicted`).
 //! * [`runtime`] — loader/executor for the AOT-compiled JAX/Pallas
 //!   slot-model artifacts, used for the plaintext fast path and
 //!   cross-checking (pure-Rust f32 backend offline).
@@ -34,12 +38,20 @@
 //! Python/JAX/Pallas run only at build time (`make artifacts`); the
 //! request path is pure Rust.
 
+// CI runs `cargo clippy -- -D warnings`. Two stylistic lints are
+// opted out crate-wide: the RNS/NTT hot loops index several limb
+// slices in lockstep (zip chains would obscure the modular math), and
+// the serving internals thread many handles by design.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod bench_harness;
 pub mod ckks;
 pub mod coordinator;
 pub mod data;
 pub mod forest;
 pub mod hrf;
+pub mod keycache;
 pub mod nrf;
 pub mod rng;
 pub mod runtime;

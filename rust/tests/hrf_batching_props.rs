@@ -289,6 +289,9 @@ fn coordinator_enc_batching_end_to_end() {
             workers: 1,
             enc_batch,
             batch_delay: std::time::Duration::from_millis(20),
+            // This test asserts aggregation under a burst, so pin the
+            // idle grace to the full window (adaptive idle-flush off).
+            idle_flush: std::time::Duration::from_millis(20),
             ..Default::default()
         },
         ctx.clone(),

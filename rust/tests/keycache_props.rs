@@ -1,0 +1,368 @@
+//! Property tests for the keycache subsystem. Hand-rolled generators
+//! (the proptest crate is unavailable offline — same idiom as the
+//! coordinator/batcher property tests): a reference model replays
+//! every operation and the cache must agree exactly.
+//!
+//! Properties:
+//! 1. resident bytes never exceed the budget (entry sizes ≤ budget);
+//! 2. LRU order is respected — the eviction victim is always the
+//!    least-recently-used entry (per shard and globally, since ticks
+//!    are global);
+//! 3. evicted sessions recover via re-registration under the same id,
+//!    with bit-identical inference results (end-to-end HE test).
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{
+    CacheState, Coordinator, CoordinatorConfig, SessionManager, SubmitError,
+};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::{reshuffle_and_pack, HrfClient};
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::keycache::{KeyCache, KeyCacheConfig};
+use cryptotree::nrf::activation::Activation;
+use cryptotree::nrf::NeuralForest;
+use cryptotree::rng::Xoshiro256pp;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Reference model: the cache's exact single-threaded semantics.
+/// `order` is the global LRU list (front = oldest); eviction removes
+/// the front entry, skipping the id being kept (the fresh insert).
+struct Model {
+    budget: u64,
+    order: Vec<u64>,
+    bytes: HashMap<u64, u64>,
+    known: std::collections::HashSet<u64>,
+    resident: u64,
+}
+
+impl Model {
+    fn new(budget: u64) -> Self {
+        Model {
+            budget,
+            order: Vec::new(),
+            bytes: HashMap::new(),
+            known: std::collections::HashSet::new(),
+            resident: 0,
+        }
+    }
+
+    fn touch(&mut self, id: u64) {
+        if let Some(pos) = self.order.iter().position(|&x| x == id) {
+            self.order.remove(pos);
+            self.order.push(id);
+        }
+    }
+
+    fn insert(&mut self, id: u64, b: u64) {
+        if let Some(old) = self.bytes.get(&id).copied() {
+            if self.order.contains(&id) {
+                self.resident -= old;
+            }
+        }
+        if let Some(pos) = self.order.iter().position(|&x| x == id) {
+            self.order.remove(pos);
+        }
+        self.order.push(id);
+        self.bytes.insert(id, b);
+        self.known.insert(id);
+        self.resident += b;
+        while self.resident > self.budget {
+            let victim = match self.order.iter().position(|&x| x != id) {
+                Some(p) => self.order.remove(p),
+                None => break, // only the kept entry left
+            };
+            self.resident -= self.bytes[&victim];
+        }
+    }
+
+    fn get(&mut self, id: u64) -> &'static str {
+        if self.order.contains(&id) {
+            self.touch(id);
+            "resident"
+        } else if self.known.contains(&id) {
+            "evicted"
+        } else {
+            "unknown"
+        }
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.order.iter().position(|&x| x == id) {
+            self.order.remove(pos);
+            self.resident -= self.bytes[&id];
+        }
+        self.bytes.remove(&id);
+        self.known.remove(&id)
+    }
+
+    fn state(&self, id: u64) -> &'static str {
+        if self.order.contains(&id) {
+            "resident"
+        } else if self.known.contains(&id) {
+            "evicted"
+        } else {
+            "unknown"
+        }
+    }
+}
+
+fn state_of(c: &KeyCache<u64>, id: u64) -> &'static str {
+    match c.peek(id) {
+        CacheState::Resident(_) => "resident",
+        CacheState::Evicted => "evicted",
+        CacheState::Unknown => "unknown",
+    }
+}
+
+/// Property 1 + 2: under random insert/get/remove sequences the cache
+/// matches the exact-LRU reference model and never exceeds the budget.
+#[test]
+fn property_cache_matches_lru_model_and_budget() {
+    let mut rng = Xoshiro256pp::new(2024);
+    for case in 0..60 {
+        let shards = 1 + rng.next_index(5);
+        let budget = 200 + rng.next_below(1_800);
+        let cache: KeyCache<u64> = KeyCache::new(KeyCacheConfig {
+            num_shards: shards,
+            budget_bytes: budget,
+        });
+        let mut model = Model::new(budget);
+        let id_space = 24u64;
+        for step in 0..300 {
+            let roll = rng.next_f64();
+            if roll < 0.55 {
+                let id = rng.next_below(id_space);
+                // Entry sizes stay within the budget so the invariant
+                // is exact (oversized entries are a documented
+                // exception, tested separately).
+                let b = 1 + rng.next_below(budget.min(500));
+                cache.insert(id, id, b as usize);
+                model.insert(id, b);
+            } else if roll < 0.85 {
+                let id = rng.next_below(id_space + 4); // sometimes unknown
+                let got = match cache.lookup(id) {
+                    CacheState::Resident(_) => "resident",
+                    CacheState::Evicted => "evicted",
+                    CacheState::Unknown => "unknown",
+                };
+                let want = model.get(id);
+                assert_eq!(got, want, "case {case} step {step}: lookup({id})");
+            } else {
+                let id = rng.next_below(id_space + 4);
+                assert_eq!(
+                    cache.remove(id),
+                    model.remove(id),
+                    "case {case} step {step}: remove({id})"
+                );
+            }
+            // Invariants after every operation.
+            assert!(
+                cache.resident_bytes() <= budget,
+                "case {case} step {step}: resident {} > budget {budget}",
+                cache.resident_bytes()
+            );
+            assert_eq!(
+                cache.resident_bytes(),
+                model.resident,
+                "case {case} step {step}: gauge drifted from model"
+            );
+            assert_eq!(cache.resident_len(), model.order.len());
+        }
+        // Full-state agreement at the end of the case.
+        for id in 0..id_space + 4 {
+            assert_eq!(
+                state_of(&cache, id),
+                model.state(id),
+                "case {case}: final state of {id}"
+            );
+        }
+    }
+}
+
+/// Explicit single-shard LRU check (readable counterpart to the model
+/// test): the victim is always the least-recently-*used*, not the
+/// least-recently-inserted.
+#[test]
+fn lru_victim_is_least_recently_used() {
+    let cache: KeyCache<u64> = KeyCache::new(KeyCacheConfig {
+        num_shards: 1,
+        budget_bytes: 3,
+    });
+    cache.insert(0, 0, 1);
+    cache.insert(1, 1, 1);
+    cache.insert(2, 2, 1);
+    assert!(cache.get(0).is_some()); // 0 is now hottest
+    cache.insert(3, 3, 1); // must evict 1
+    assert!(matches!(cache.peek(1), CacheState::Evicted));
+    for id in [0u64, 2, 3] {
+        assert!(
+            matches!(cache.peek(id), CacheState::Resident(_)),
+            "id {id} should have survived"
+        );
+    }
+}
+
+/// Property 3 (end-to-end): with a budget admitting one session, a
+/// second registration evicts the first; the first session fails fast
+/// with KeysEvicted, re-registers under the same id, and then produces
+/// scores identical to its pre-eviction evaluation.
+#[test]
+fn evicted_session_recovers_with_identical_results() {
+    // Cheap ring (N=4096, depth 4) + identity activation: the protocol
+    // is under test, not the numerics.
+    let mut rng = Xoshiro256pp::new(4242);
+    let params = Arc::new(CkksParams::build("keycache-e2e-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let ds = adult::generate(400, 515);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 4,
+            tree: cryptotree::forest::tree::TreeConfig {
+                max_depth: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        516,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: vec![0.0, 1.0],
+        },
+    );
+    let model = HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+    let server = Arc::new(HrfServer::new(model));
+
+    // Client A retains its keys; client B only exists to apply cache
+    // pressure.
+    let mut kg_a = KeyGenerator::new(&ctx, 517);
+    let pk_a = kg_a.gen_public_key(&ctx);
+    let rlk_a = kg_a.gen_relin_key(&ctx);
+    let gk_a = kg_a.gen_galois_keys(&ctx, &server.eval_key_requirements(1));
+    let session_bytes = (rlk_a.key_bytes() + gk_a.key_bytes()) as u64;
+    let mut client_a = HrfClient::with_eval_keys(
+        Encryptor::new(pk_a, 518),
+        Decryptor::new(kg_a.secret_key()),
+        rlk_a,
+        gk_a,
+    );
+    let mut kg_b = KeyGenerator::new(&ctx, 519);
+    let _pk_b = kg_b.gen_public_key(&ctx);
+    let rlk_b = kg_b.gen_relin_key(&ctx);
+    let gk_b = kg_b.gen_galois_keys(&ctx, &server.eval_key_requirements(1));
+
+    // Budget fits one session (plus slack), not two.
+    let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+        num_shards: 4,
+        budget_bytes: session_bytes * 3 / 2,
+    }));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            ..Default::default()
+        },
+        ctx.clone(),
+        server.clone(),
+        sessions.clone(),
+        None,
+    );
+
+    let sid_a = sessions.register_keys(client_a.eval_keys().expect("retained keys"));
+    let x: Vec<f64> = (0..server.model.plan.d)
+        .map(|_| rng.next_f64() * 2.0 - 1.0)
+        .collect();
+    let ct = client_a.encrypt_input(&ctx, &enc, &server.model, &x);
+
+    // Baseline evaluation before any eviction.
+    let rx = coord.submit_encrypted(sid_a, ct.clone()).expect("submit");
+    let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let (scores_before, _) = client_a.decrypt_scores(&ctx, &enc, &outs);
+
+    // Pressure: registering B must evict A's keys (global budget).
+    let _sid_b = sessions.register(rlk_b, gk_b);
+    assert!(sessions.resident_bytes() <= session_bytes * 3 / 2);
+    assert!(matches!(sessions.lookup(sid_a), CacheState::Evicted));
+
+    // The protocol: fail fast → re-register (same id) → resubmit.
+    match coord.submit_encrypted(sid_a, ct.clone()) {
+        Err(SubmitError::KeysEvicted) => {}
+        other => panic!("expected KeysEvicted, got {:?}", other.map(|_| ())),
+    }
+    assert!(sessions.reregister_keys(sid_a, client_a.eval_keys().unwrap()));
+    let rx = coord
+        .submit_encrypted(sid_a, ct.clone())
+        .expect("submit after re-registration");
+    let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let (scores_after, _) = client_a.decrypt_scores(&ctx, &enc, &outs);
+
+    // Same ciphertext + same keys → bit-identical decrypted scores.
+    assert_eq!(scores_before.len(), scores_after.len());
+    for (b, a) in scores_before.iter().zip(&scores_after) {
+        assert!(
+            (b - a).abs() < 1e-9,
+            "recovered session diverged: {scores_before:?} vs {scores_after:?}"
+        );
+    }
+    // And both agree with the plaintext slot model.
+    let expect = server
+        .model
+        .forward_slots_plain(&reshuffle_and_pack(&server.model, &x));
+    for (s, e) in scores_after.iter().zip(&expect) {
+        assert!((s - e).abs() < 5e-3, "HE vs plain: {scores_after:?} vs {expect:?}");
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert!(snap.rejected_keys_evicted >= 1);
+    assert!(snap.keycache_evictions >= 1);
+    assert!(snap.keycache_misses >= 1);
+    assert!(snap.keycache_resident_bytes <= session_bytes * 3 / 2);
+    coord.shutdown();
+}
+
+/// 4K sessions against a budget admitting ~K: the acceptance-criteria
+/// shape. Resident bytes stay bounded, exactly K sessions stay
+/// resident, and every registered id remains known (re-registerable).
+#[test]
+fn four_times_overcommit_stays_within_budget() {
+    let per_session = 64u64; // synthetic key bytes
+    let k = 32u64;
+    let budget = k * per_session;
+    let cache: KeyCache<u64> = KeyCache::new(KeyCacheConfig {
+        num_shards: 8,
+        budget_bytes: budget,
+    });
+    let n = 4 * k;
+    for id in 0..n {
+        cache.insert(id, id, per_session as usize);
+        assert!(cache.resident_bytes() <= budget);
+    }
+    assert_eq!(cache.resident_bytes(), budget);
+    assert_eq!(cache.resident_len(), k as usize);
+    assert_eq!(cache.known_len(), n as usize);
+    // The resident set is exactly the K most recent registrations.
+    for id in 0..n {
+        let want = if id >= n - k { "resident" } else { "evicted" };
+        assert_eq!(state_of(&cache, id), want, "id {id}");
+    }
+    let stats = cache.stats().snapshot();
+    assert_eq!(stats.evictions, n - k);
+}
+
+/// Duplicate-rotation requests produce canonical key sets, so cache
+/// accounting is stable across how a client phrases its key request.
+#[test]
+fn duplicate_rotations_do_not_inflate_accounting() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let gk_a = KeyGenerator::new(&ctx, 7).gen_galois_keys(&ctx, &[1, 2, 1, 2, 0, 2]);
+    let gk_b = KeyGenerator::new(&ctx, 7).gen_galois_keys(&ctx, &[2, 1]);
+    assert_eq!(gk_a.supported_rotations(), vec![1, 2]);
+    assert_eq!(gk_a.key_bytes(), gk_b.key_bytes());
+}

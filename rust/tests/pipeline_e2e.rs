@@ -121,6 +121,9 @@ fn plain_path_matches_nrf_and_batches() {
             workers: 1,
             max_batch: 4,
             batch_delay: std::time::Duration::from_millis(20),
+            // This test asserts aggregation under a burst, so pin the
+            // idle grace to the full window (adaptive idle-flush off).
+            idle_flush: std::time::Duration::from_millis(20),
             ..Default::default()
         },
         p.ctx.clone(),
