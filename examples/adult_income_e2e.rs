@@ -128,7 +128,7 @@ fn main() {
         let rx = coord.submit_encrypted(sid, ct).expect("submit");
         let outs = rx.recv().unwrap().expect("hrf eval");
         latencies.push(t.elapsed());
-        let (_, pred) = client.decrypt_scores(&ctx, &enc, &outs);
+        let (_, pred) = client.decrypt_response(&ctx, &enc, &outs);
         hrf_pred.push(pred);
         nrf_pred_sub.push(nf_tanh.predict(x));
         poly_pred_sub.push(nf_poly.predict(x));

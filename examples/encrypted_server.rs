@@ -196,7 +196,7 @@ fn main() {
         .submit_encrypted(sid_a, pool[0].clone())
         .expect("submit after re-registration");
     let outs = rx.recv().unwrap().expect("encrypted response");
-    let (scores, pred) = client.decrypt_scores(&ctx, &enc, &outs);
+    let (scores, pred) = client.decrypt_response(&ctx, &enc, &outs);
     println!("  session {sid_a} recovered: class {pred}, scores {scores:?}");
     let snap = coord.metrics.snapshot();
     println!(

@@ -1,0 +1,94 @@
+//! Debug tool: pretty-print compiled HRF schedules with their
+//! predicted op counts and derived Galois-key requirements.
+//!
+//!   cargo run --release --example schedule_dump [B]
+//!
+//! Prints the single-sample schedule, then the folded and unfolded
+//! B-sample schedules side by side — the rotation delta between the
+//! last two is the extraction fold's C·(B−1) saving. No HE execution:
+//! everything here is the compiler + the dry-run interpreter.
+
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::{HrfModel, HrfSchedule};
+use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
+use cryptotree::nrf::NeuralForest;
+
+fn print_counts(label: &str, sched: &HrfSchedule) {
+    let c = sched.predicted_counts();
+    println!("{label}: predicted op counts (dry-run)");
+    for (seg, oc) in [
+        ("pack", c.pack),
+        ("layer1", c.layer1),
+        ("activations", c.activations),
+        ("layer2", c.layer2),
+        ("layer3", c.layer3),
+        ("extract", c.extract),
+    ] {
+        println!(
+            "  {seg:<12} add {:>3}  add_pt {:>3}  mul {:>3}  mul_pt {:>3}  rot {:>3}  rescale {:>3}  relin {:>3}",
+            oc.add, oc.add_plain, oc.mul, oc.mul_plain, oc.rotate, oc.rescale, oc.relin
+        );
+    }
+    let t = c.total();
+    println!(
+        "  {:<12} add {:>3}  add_pt {:>3}  mul {:>3}  mul_pt {:>3}  rot {:>3}  rescale {:>3}  relin {:>3}",
+        "TOTAL", t.add, t.add_plain, t.mul, t.mul_plain, t.rotate, t.rescale, t.relin
+    );
+    let steps: Vec<usize> = sched.rotation_steps().into_iter().collect();
+    println!("  galois steps ({}): {steps:?}\n", steps.len());
+}
+
+fn main() {
+    let b_arg: Option<usize> = std::env::args().nth(1).and_then(|a| a.parse().ok());
+
+    // Small trained model: K and L stay readable in the dump.
+    let ds = adult::generate(800, 7);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 4,
+            tree: cryptotree::forest::tree::TreeConfig {
+                max_depth: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        8,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: chebyshev_fit_tanh(3.0, 4),
+        },
+    );
+    let model = HrfModel::from_neural_forest(&nf, ds.n_features(), 2048).expect("packing");
+    let p = model.plan;
+    let b = b_arg.unwrap_or(p.groups.min(3)).clamp(1, p.groups);
+    println!(
+        "plan: K={} L={} C={} | span {} | {} sample groups per ciphertext | dumping B={b}\n",
+        p.k, p.l, p.c, p.reduce_span, p.groups
+    );
+
+    let single = HrfSchedule::compile(&model, 1, true);
+    println!("{single}");
+    print_counts("B=1", &single);
+
+    let folded = HrfSchedule::compile(&model, b, true);
+    println!("{folded}");
+    print_counts(&format!("B={b} folded"), &folded);
+
+    let unfolded = HrfSchedule::compile(&model, b, false);
+    println!("{unfolded}");
+    print_counts(&format!("B={b} unfolded (legacy slot-0 contract)"), &unfolded);
+
+    let saved = unfolded.predicted_rotations() - folded.predicted_rotations();
+    println!(
+        "extraction fold: {} - {} = {} rotations saved per batch (C·(B−1) = {})",
+        unfolded.predicted_rotations(),
+        folded.predicted_rotations(),
+        saved,
+        p.c * (b - 1)
+    );
+    assert_eq!(saved as usize, p.c * (b - 1));
+}

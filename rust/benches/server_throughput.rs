@@ -175,4 +175,69 @@ fn main() {
     );
     println!("\nSingle-core testbed: flat worker scaling expected here; SIMD group");
     println!("batching amortizes one evaluation across B samples regardless of cores.");
+
+    // ---- Adaptive enc_batch: fill/latency Pareto -------------------
+    // The coordinator's forming target scales with queue depth
+    // (CoordinatorConfig::adaptive_enc_batch): a burst stacks the
+    // queue and flushes full groups (high fill, amortized cost), a
+    // paced trickle flushes near-singletons after the idle grace (low
+    // latency, low fill). One knob, both ends of the Pareto front.
+    let mut rows = Vec::new();
+    for enc_batch in [1usize, b_max] {
+        for &(load, pace) in &[("burst", Duration::ZERO), ("paced", Duration::from_millis(40))] {
+            let sessions = Arc::new(SessionManager::new());
+            let sid = sessions.register(rlk.clone(), gk.clone());
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers: 1,
+                    queue_capacity: 64,
+                    enc_batch,
+                    adaptive_enc_batch: true,
+                    ..Default::default()
+                },
+                ctx.clone(),
+                server.clone(),
+                sessions,
+                None,
+            );
+            let n_req = 6usize;
+            let rxs: Vec<_> = (0..n_req)
+                .map(|i| {
+                    if !pace.is_zero() && i > 0 {
+                        std::thread::sleep(pace);
+                    }
+                    loop {
+                        match coord.submit_encrypted(sid, pool[i % pool.len()].clone()) {
+                            Ok(rx) => break rx,
+                            Err(SubmitError::Busy) => {
+                                std::thread::sleep(Duration::from_millis(2))
+                            }
+                            Err(e) => panic!("{e:?}"),
+                        }
+                    }
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().expect("eval");
+            }
+            let snap = coord.metrics.snapshot();
+            rows.push(vec![
+                format!("{enc_batch}"),
+                load.to_string(),
+                format!("{:.2}", snap.mean_enc_batch_fill),
+                format!("{:.2}", snap.enc_batch_fill_ratio),
+                format!("{:?}", snap.encrypted_mean),
+                format!("{:?}", snap.encrypted_p95),
+            ]);
+            coord.shutdown();
+        }
+    }
+    print_metric_table(
+        "adaptive enc_batch — fill/latency Pareto (queue-depth-scaled target)",
+        &["enc_batch", "load", "mean fill", "fill ratio", "mean latency", "p95 latency"],
+        &rows,
+    );
+    println!("\nBurst rows show the depth-scaled target filling groups; paced rows show");
+    println!("the idle grace trading fill for latency. Pick enc_batch for the SLO, let");
+    println!("the adaptive target harvest batching whenever load actually builds.");
 }

@@ -1,12 +1,17 @@
 //! E1 — Table 1 reproduction: homomorphic op counts per HRF linear
-//! layer, measured from the evaluator's counters and compared with the
-//! paper's closed forms, sweeping K, L and C.
+//! layer, **predicted by the compiled schedule's dry-run interpreter**
+//! and verified against the evaluator's measured counters, sweeping K
+//! and L; paper closed forms printed alongside for reference.
 //!
 //! Paper formulas:  L1 (1, 0, 0) · L2 (K, K, K) · L3 (C⌈log₂L(2K−1)⌉, C, C⌈log₂L(2K−1)⌉)
 //! Note: our Algorithm 1 skips the identity rotation (j = 0), so the
-//! measured L2 rotation count is K−1 — one fewer than the paper's K.
+//! schedule's L2 rotation count is K−1 — one fewer than the paper's K.
 //! L3 additions include the C bias additions (paper counts reductions
 //! only).
+//!
+//! A second section measures the **extraction fold**: for B packed
+//! samples the folded schedule executes exactly C·(B−1) fewer
+//! rotations than the legacy eval+extract path (`eval_batch_reference`).
 
 use cryptotree::bench_harness::print_metric_table;
 use cryptotree::ckks::evaluator::Evaluator;
@@ -16,13 +21,13 @@ use cryptotree::data::adult;
 use cryptotree::forest::tree::TreeConfig;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{HrfModel, HrfServer, LayerCounts};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
 
-fn measure(k: usize, l: usize) -> [(u64, u64, u64); 3] {
+fn build_server(k: usize, l: usize, seed: u64) -> (HrfServer, CkksSetup) {
     let depth = k.trailing_zeros() as usize; // K = 2^depth
-    let ds = adult::generate(1_200, 900 + k as u64);
+    let ds = adult::generate(1_200, 900 + seed);
     let rf = RandomForest::fit(
         &ds,
         &RandomForestConfig {
@@ -59,44 +64,122 @@ fn measure(k: usize, l: usize) -> [(u64, u64, u64); 3] {
     let mut kg = KeyGenerator::new(&ctx, 902);
     let pk = kg.gen_public_key(&ctx);
     let rlk = kg.gen_relin_key(&ctx);
-    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed());
-    let mut client = HrfClient::new(Encryptor::new(pk, 903), Decryptor::new(kg.secret_key()));
-    let server = HrfServer::new(model);
-    let mut ev = Evaluator::new(ctx.clone());
-    let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[0]);
-    let (_, counts) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
-    counts.table1_rows()
+    // Superset keys: legacy eval+extract AND the folded schedule run
+    // under one session.
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(plan.groups));
+    let client = HrfClient::new(Encryptor::new(pk, 903), Decryptor::new(kg.secret_key()));
+    let setup = CkksSetup {
+        ctx,
+        enc,
+        client,
+        rlk,
+        gk,
+        xs: ds.x,
+    };
+    (HrfServer::new(model), setup)
+}
+
+struct CkksSetup {
+    ctx: cryptotree::ckks::rns::ContextRef,
+    enc: Encoder,
+    client: HrfClient,
+    rlk: cryptotree::ckks::keys::RelinKey,
+    gk: cryptotree::ckks::keys::GaloisKeys,
+    xs: Vec<Vec<f64>>,
+}
+
+fn measure(k: usize, l: usize) -> (LayerCounts, LayerCounts) {
+    let (server, mut s) = build_server(k, l, k as u64);
+    let mut ev = Evaluator::new(s.ctx.clone());
+    let ct = s.client.encrypt_input(&s.ctx, &s.enc, &server.model, &s.xs[0]);
+    let (_, counts) = server.eval(&mut ev, &s.enc, &ct, &s.rlk, &s.gk);
+    (server.predicted_counts(1, true), counts)
 }
 
 fn main() {
+    // ---- Table 1: schedule-predicted vs measured -------------------
     let mut rows = Vec::new();
     for (k, l) in [(8usize, 16usize), (8, 64), (16, 16), (16, 64), (32, 16)] {
         let plan = cryptotree::hrf::HrfPlan::new(k, l, 2, 14, 4096).unwrap();
         let formulas = plan.table1_formulas();
-        let measured = measure(k, l);
+        let (predicted, measured) = measure(k, l);
+        let pred_rows = predicted.table1_rows();
+        let meas_rows = measured.table1_rows();
         for (i, layer) in ["L1", "L2", "L3"].iter().enumerate() {
             let (fa, fm, fr) = formulas[i];
-            let (ma, mm, mr) = measured[i];
+            let (pa, pm, pr) = pred_rows[i];
+            let (ma, mm, mr) = meas_rows[i];
             rows.push(vec![
                 format!("K={k} L={l}"),
                 layer.to_string(),
-                format!("{fa} / {ma}"),
-                format!("{fm} / {mm}"),
-                format!("{fr} / {mr}"),
+                format!("{fa} / {pa} / {ma}"),
+                format!("{fm} / {pm} / {mm}"),
+                format!("{fr} / {pr} / {mr}"),
             ]);
         }
+        // The dry-run interpreter IS the source of truth now: measured
+        // execution must match it op for op.
+        assert_eq!(predicted, measured, "K={k} L={l}: prediction drift");
         // Invariants the paper's Table 1 asserts:
-        assert_eq!(measured[0], (1, 0, 0), "L1 shape");
-        assert_eq!(measured[1].1, k as u64, "L2 multiplications = K");
-        assert_eq!(measured[1].2, (k - 1) as u64, "L2 rotations = K-1 (identity skipped)");
-        assert_eq!(measured[2].1, 2, "L3 multiplications = C");
+        assert_eq!(meas_rows[0], (1, 0, 0), "L1 shape");
+        assert_eq!(meas_rows[1].1, k as u64, "L2 multiplications = K");
+        assert_eq!(
+            meas_rows[1].2,
+            (k - 1) as u64,
+            "L2 rotations = K-1 (identity skipped)"
+        );
+        assert_eq!(meas_rows[2].1, 2, "L3 multiplications = C");
     }
     print_metric_table(
-        "Table 1 — op counts per linear layer: paper formula / measured",
+        "Table 1 — op counts per linear layer: paper formula / schedule dry-run / measured",
         &["plan", "layer", "additions", "multiplications", "rotations"],
         &rows,
     );
-    println!("\nL2 rotations: measured K-1 (identity rotation skipped); paper counts K.");
+    println!("\nL2 rotations: schedule emits K-1 (identity rotation skipped); paper counts K.");
     println!("L3 additions: measured includes the C bias additions.");
     println!("Key property (paper §3): costs depend on K and C only — compare L=16 vs L=64 rows.");
+
+    // ---- Extraction fold: folded schedule vs legacy eval+extract ---
+    // K=8, L=16 on 4096 slots -> span 256 -> 16 sample groups.
+    let (server, mut s) = build_server(8, 16, 77);
+    let plan = server.model.plan;
+    let mut rows = Vec::new();
+    for b in [2usize, 4, 8.min(plan.groups)] {
+        let cts: Vec<_> = (0..b)
+            .map(|i| s.client.encrypt_input(&s.ctx, &s.enc, &server.model, &s.xs[i]))
+            .collect();
+        let mut ev_legacy = Evaluator::new(s.ctx.clone());
+        let _ = server.eval_batch_reference(&mut ev_legacy, &s.enc, &cts, &s.rlk, &s.gk);
+        let legacy_rot = ev_legacy.counts.rotate;
+        let mut ev_folded = Evaluator::new(s.ctx.clone());
+        let _ = server.eval_batch_folded(&mut ev_folded, &s.enc, &cts, &s.rlk, &s.gk);
+        let folded_rot = ev_folded.counts.rotate;
+        let saving = (plan.c * (b - 1)) as u64;
+        assert_eq!(
+            legacy_rot - folded_rot,
+            saving,
+            "B={b}: fold must save exactly C·(B−1) rotations"
+        );
+        assert_eq!(
+            server.schedule(b, true).predicted_rotations(),
+            folded_rot,
+            "B={b}: dry-run rotation prediction drift"
+        );
+        rows.push(vec![
+            format!("{b}"),
+            format!("{legacy_rot}"),
+            format!("{folded_rot}"),
+            format!("{saving}"),
+        ]);
+    }
+    print_metric_table(
+        &format!(
+            "Extraction fold (C={} classes, {} groups/ct) — rotations per batch",
+            plan.c, plan.groups
+        ),
+        &["B", "legacy eval+extract", "folded schedule", "saved = C·(B−1)"],
+        &rows,
+    );
+    println!("\nFolded responses are slot-addressed (EncScores.slot = g·reduce_span);");
+    println!("the extraction rotation is composed into the read, not executed.");
 }

@@ -48,6 +48,29 @@ impl OpCounts {
     }
 }
 
+impl std::ops::AddAssign for OpCounts {
+    /// Field-wise accumulation — the single merge point for every
+    /// place counts are combined (layer accounting, schedule dry-runs,
+    /// bench aggregation).
+    fn add_assign(&mut self, o: OpCounts) {
+        self.add += o.add;
+        self.add_plain += o.add_plain;
+        self.mul += o.mul;
+        self.mul_plain += o.mul_plain;
+        self.rotate += o.rotate;
+        self.rescale += o.rescale;
+        self.relin += o.relin;
+    }
+}
+
+impl std::ops::Add for OpCounts {
+    type Output = OpCounts;
+    fn add(mut self, o: OpCounts) -> OpCounts {
+        self += o;
+        self
+    }
+}
+
 /// The server-side evaluator. Owns the context reference and counters;
 /// key material is passed per call (it belongs to the client session —
 /// see `coordinator::session`).

@@ -42,6 +42,14 @@ impl BatchPolicy {
         self.pending
     }
 
+    /// Retarget the batch size (adaptive batching: the coordinator
+    /// raises the target with queue depth so the system batches harder
+    /// under load). Takes effect from the next arrival/tick; a target
+    /// below the current pending count flushes on that event.
+    pub fn set_max_batch(&mut self, n: usize) {
+        self.max_batch = n.max(1);
+    }
+
     /// A request arrived at `now`.
     pub fn on_arrival(&mut self, now: Instant) -> BatchAction {
         if self.pending == 0 {
@@ -113,6 +121,23 @@ mod tests {
             p.on_tick(t0 + Duration::from_millis(10)),
             BatchAction::Flush
         );
+    }
+
+    #[test]
+    fn retargeting_raises_the_flush_threshold() {
+        let mut p = BatchPolicy::new(2, Duration::from_millis(100));
+        let now = Instant::now();
+        assert_eq!(p.on_arrival(now), BatchAction::Wait);
+        // Load spike: raise the target — the would-be-full batch keeps
+        // accumulating.
+        p.set_max_batch(4);
+        assert_eq!(p.on_arrival(now), BatchAction::Wait);
+        assert_eq!(p.on_arrival(now), BatchAction::Wait);
+        assert_eq!(p.on_arrival(now), BatchAction::Flush);
+        p.on_flush(4);
+        // Floor at 1.
+        p.set_max_batch(0);
+        assert_eq!(p.on_arrival(now), BatchAction::Flush);
     }
 
     #[test]

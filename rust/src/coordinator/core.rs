@@ -25,14 +25,24 @@
 //!
 //! The same [`BatchPolicy`] that drives the plaintext fast path also
 //! drives the encrypted path: single-sample requests from one session
-//! accumulate until `enc_batch` are held (or the oldest times out),
-//! then flush as **one packed group** — the worker combines the fresh
-//! ciphertexts into one (`HrfServer::pack_group`), evaluates once, and
-//! rotates each sample's scores back to slot 0, so callers keep the
-//! single-sample response contract. Requires the session's Galois keys
-//! to cover `HrfPlan::rotations_needed_batched(enc_batch)`; sessions
-//! registered with only the single-sample key set fall back to
-//! per-request evaluation automatically.
+//! accumulate until the current target is held (or the oldest times
+//! out), then flush as **one packed group** — the worker runs the
+//! compiled **folded** schedule (`HrfServer::eval_batch_folded`): one
+//! evaluation scores the whole group and the per-sample extraction
+//! rotations are folded into the layer-3 reduction, so each caller's
+//! [`EncScores`] response carries the shared per-class ciphertexts
+//! plus the slot holding *its* score (`plan.score_slot(g)`) — saving
+//! `C·(B−1)` key-switches per batch over the legacy eval+extract
+//! path. Requires the session's Galois keys to cover
+//! `HrfServer::eval_key_requirements(b)`; a session whose keys only
+//! cover a smaller batch is served in the largest coverable chunks
+//! (down to per-request evaluation).
+//!
+//! **Adaptive target** (`CoordinatorConfig::adaptive_enc_batch`): the
+//! forming target starts at `enc_batch` and scales with the admitted
+//! queue depth up to the plan's group capacity — the system batches
+//! harder exactly when load builds, and the idle-flush grace keeps
+//! latency low when it doesn't.
 
 use super::batcher::{BatchAction, BatchPolicy};
 use super::metrics::Metrics;
@@ -40,7 +50,7 @@ use super::session::SessionManager;
 use crate::ckks::rns::ContextRef;
 use crate::ckks::{Ciphertext, Encoder, Evaluator};
 use crate::hrf::client::reshuffle_and_pack;
-use crate::hrf::HrfServer;
+use crate::hrf::{EncScores, HrfServer};
 use crate::keycache::CacheState;
 use crate::runtime::{SlotModel, SlotModelParams};
 use std::collections::HashMap;
@@ -68,6 +78,12 @@ pub struct CoordinatorConfig {
     /// evaluation. Clamped to the plan's group count; `1` disables
     /// server-side packing.
     pub enc_batch: usize,
+    /// Scale the encrypted-path forming target with queue depth:
+    /// under load the target grows from `enc_batch` toward the plan's
+    /// group capacity (batch harder when it pays most), falling back
+    /// to `enc_batch` when the queue drains. No effect when
+    /// `enc_batch <= 1`.
+    pub adaptive_enc_batch: bool,
     /// Adaptive flush: when a batcher's queue has been idle (no
     /// arrival) for this long, partial batches flush immediately
     /// instead of waiting out `batch_delay`. Batches still fill to
@@ -84,6 +100,7 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             batch_delay: Duration::from_millis(5),
             enc_batch: 1,
+            adaptive_enc_batch: true,
             idle_flush: Duration::from_millis(1),
         }
     }
@@ -106,8 +123,14 @@ pub enum SubmitError {
     BatchTooLarge,
 }
 
-/// Encrypted-path response: per-class score ciphertexts.
-pub type EncResponse = Result<Vec<Ciphertext>, String>;
+/// Encrypted-path response: per-class score ciphertexts plus the slot
+/// carrying this request's score (see [`EncScores`]; decrypt with
+/// `HrfClient::decrypt_response`). Single-sample and fallback
+/// responses use slot 0; folded batch responses address each caller's
+/// group score slot. Packed-group submissions
+/// ([`Coordinator::submit_encrypted_packed`]) return slot 0 and are
+/// unpacked with `HrfClient::decrypt_scores_batch` on `.scores`.
+pub type EncResponse = Result<EncScores, String>;
 /// Plaintext-path response: per-class scores.
 pub type PlainResponse = Result<Vec<f64>, String>;
 
@@ -233,7 +256,15 @@ impl Coordinator {
                                                 &sess.relin,
                                                 &sess.galois,
                                             );
-                                            Ok(outs)
+                                            // Client-side packed group:
+                                            // scores stay at the group
+                                            // score slots; the client
+                                            // unpacks with
+                                            // decrypt_scores_batch.
+                                            Ok(EncScores {
+                                                scores: outs,
+                                                slot: 0,
+                                            })
                                         }
                                         None => Err(format!(
                                             "session {session_id}: keys evicted or session closed mid-flight; re-register and resubmit"
@@ -265,6 +296,8 @@ impl Coordinator {
             let worker_txs = worker_txs;
             let batch_delay = cfg.batch_delay;
             let idle_flush = cfg.idle_flush;
+            let adaptive = cfg.adaptive_enc_batch;
+            let group_cap = groups;
             threads.push(
                 std::thread::Builder::new()
                     .name("enc-batcher".into())
@@ -336,6 +369,9 @@ impl Coordinator {
                                     enqueued,
                                     resp,
                                 }) => {
+                                    metrics
+                                        .enc_queue_depth
+                                        .fetch_sub(1, Ordering::Relaxed);
                                     if enc_batch <= 1 {
                                         dispatch(WorkerJob::Group {
                                             session_id,
@@ -351,6 +387,21 @@ impl Coordinator {
                                                 items: Vec::new(),
                                             },
                                         );
+                                        // Adaptive batching: the
+                                        // forming target tracks queue
+                                        // depth — batch harder while
+                                        // work is stacking up, revert
+                                        // to the configured base when
+                                        // it drains.
+                                        if adaptive {
+                                            let depth = metrics
+                                                .enc_queue_depth
+                                                .load(Ordering::Relaxed)
+                                                as usize;
+                                            f.policy.set_max_batch(
+                                                (enc_batch + depth).min(group_cap),
+                                            );
+                                        }
                                         f.items.push((ct, enqueued, resp));
                                         if f.policy.on_arrival(Instant::now())
                                             == BatchAction::Flush
@@ -366,6 +417,9 @@ impl Coordinator {
                                     enqueued,
                                     resp,
                                 }) => {
+                                    metrics
+                                        .enc_queue_depth
+                                        .fetch_sub(1, Ordering::Relaxed);
                                     dispatch(WorkerJob::Packed {
                                         session_id,
                                         ct,
@@ -604,7 +658,16 @@ impl Coordinator {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        self.try_enqueue(req, resp_rx)
+        // Gauge up BEFORE the request becomes visible to the batcher
+        // (its decrement must never observe a pre-increment count).
+        self.metrics.enc_queue_depth.fetch_add(1, Ordering::Relaxed);
+        match self.try_enqueue(req, resp_rx) {
+            Ok(rx) => Ok(rx),
+            Err(e) => {
+                self.metrics.enc_queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
     }
 
     /// Submit a client-side packed group of `n_samples ≤ plan.groups`
@@ -633,7 +696,16 @@ impl Coordinator {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        self.try_enqueue(req, resp_rx)
+        // See submit_encrypted: gauge up before enqueue, roll back on
+        // rejection.
+        self.metrics.enc_queue_depth.fetch_add(1, Ordering::Relaxed);
+        match self.try_enqueue(req, resp_rx) {
+            Ok(rx) => Ok(rx),
+            Err(e) => {
+                self.metrics.enc_queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
     }
 
     /// Submit a plaintext inference (features, not slots).
@@ -711,9 +783,14 @@ impl Drop for Coordinator {
 /// Evaluate one flushed group of single-sample requests on a worker.
 ///
 /// Packed-group evaluation needs (a) a live session whose Galois keys
-/// cover the batch rotations and (b) ciphertexts at a uniform
-/// (level, scale); anything else degrades to per-request evaluation,
-/// preserving the response contract.
+/// cover the folded schedule's rotations and (b) ciphertexts at a
+/// uniform (level, scale). The group is served in the **largest
+/// chunks the session's keys cover** (the adaptive target can exceed
+/// the key set a client generated for the configured `enc_batch`);
+/// nonuniform or uncoverable work degrades to per-request evaluation.
+/// Each packed chunk runs the folded schedule — no extraction
+/// rotations; caller `g` receives the shared per-class ciphertexts
+/// and its score slot.
 fn run_group(
     server: &HrfServer,
     sessions: &SessionManager,
@@ -742,10 +819,33 @@ fn run_group(
             return;
         }
     };
+    let complete = |metrics: &Metrics,
+                    enqueued: Instant,
+                    resp: SyncSender<EncResponse>,
+                    result: EncScores| {
+        metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .encrypted_latency
+            .lock()
+            .unwrap()
+            .record(enqueued.elapsed());
+        let _ = resp.send(Ok(result));
+    };
     let uniform = items.windows(2).all(|w| {
         w[0].0.level == w[1].0.level && (w[0].0.scale - w[1].0.scale).abs() < 1e-6
     });
-    if items.len() > 1 && uniform && server.can_batch(&sess.galois, items.len()) {
+    // Largest batch size the session's Galois keys cover (can_batch is
+    // monotone: the step set only grows with b).
+    let mut max_b = 1usize;
+    if items.len() > 1 && uniform {
+        for b in (2..=items.len().min(server.model.plan.groups)).rev() {
+            if server.can_batch(&sess.galois, b) {
+                max_b = b;
+                break;
+            }
+        }
+    }
+    if max_b > 1 {
         // Move the ciphertexts out (no deep clones on the hot path);
         // only the (enqueue time, reply sender) metadata is needed
         // after the evaluation.
@@ -753,26 +853,33 @@ fn run_group(
             .into_iter()
             .map(|(ct, enqueued, resp)| (*ct, (enqueued, resp)))
             .unzip();
-        let (per_sample, _) = server.eval_batch(ev, enc, &cts, &sess.relin, &sess.galois);
-        for ((enqueued, resp), outs) in meta.into_iter().zip(per_sample) {
-            metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
-            metrics
-                .encrypted_latency
-                .lock()
-                .unwrap()
-                .record(enqueued.elapsed());
-            let _ = resp.send(Ok(outs));
+        let plan = server.model.plan;
+        for (chunk_cts, chunk_meta) in cts.chunks(max_b).zip(meta.chunks(max_b)) {
+            if chunk_cts.len() == 1 {
+                let (outs, _) =
+                    server.eval(ev, enc, &chunk_cts[0], &sess.relin, &sess.galois);
+                let (enqueued, resp) = chunk_meta[0].clone();
+                complete(metrics, enqueued, resp, EncScores { scores: outs, slot: 0 });
+                continue;
+            }
+            let (outs, _) =
+                server.eval_batch_folded(ev, enc, chunk_cts, &sess.relin, &sess.galois);
+            for (g, (enqueued, resp)) in chunk_meta.iter().cloned().enumerate() {
+                complete(
+                    metrics,
+                    enqueued,
+                    resp,
+                    EncScores {
+                        scores: outs.clone(),
+                        slot: plan.score_slot(g),
+                    },
+                );
+            }
         }
     } else {
         for (ct, enqueued, resp) in items {
             let (outs, _) = server.eval(ev, enc, &ct, &sess.relin, &sess.galois);
-            metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
-            metrics
-                .encrypted_latency
-                .lock()
-                .unwrap()
-                .record(enqueued.elapsed());
-            let _ = resp.send(Ok(outs));
+            complete(metrics, enqueued, resp, EncScores { scores: outs, slot: 0 });
         }
     }
 }

@@ -80,6 +80,10 @@ pub struct Metrics {
     pub batch_capacity: AtomicU64,
     /// Configured encrypted group capacity (clamped `enc_batch`).
     pub enc_batch_capacity: AtomicU64,
+    /// Encrypted requests admitted but not yet picked up by the
+    /// enc-batcher — the queue-depth signal the adaptive batching
+    /// target scales with (batch harder under load).
+    pub enc_queue_depth: AtomicU64,
     /// Shared with the session key cache: hits / misses / evictions /
     /// resident bytes (see [`crate::keycache`]).
     pub keycache: Arc<KeyCacheStats>,
@@ -118,6 +122,9 @@ pub struct MetricsSnapshot {
     pub mean_enc_batch_fill: f64,
     /// `mean_enc_batch_fill / enc_batch` (see `batch_fill_ratio`).
     pub enc_batch_fill_ratio: f64,
+    /// Encrypted requests in flight between admission and batcher
+    /// pickup at snapshot time.
+    pub enc_queue_depth: u64,
     pub keycache_hits: u64,
     pub keycache_misses: u64,
     pub keycache_evictions: u64,
@@ -164,6 +171,7 @@ impl Metrics {
                 mean_enc_batch_fill,
                 self.enc_batch_capacity.load(Ordering::Relaxed),
             ),
+            enc_queue_depth: self.enc_queue_depth.load(Ordering::Relaxed),
             keycache_hits: kc.hits,
             keycache_misses: kc.misses,
             keycache_evictions: kc.evictions,

@@ -28,6 +28,6 @@ pub mod metrics;
 pub mod session;
 
 pub use crate::keycache::CacheState;
-pub use core::{Coordinator, CoordinatorConfig, SubmitError};
+pub use core::{Coordinator, CoordinatorConfig, EncResponse, PlainResponse, SubmitError};
 pub use metrics::MetricsSnapshot;
 pub use session::{Session, SessionManager};

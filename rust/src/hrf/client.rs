@@ -152,12 +152,38 @@ impl HrfClient {
         enc: &Encoder,
         cts: &[Ciphertext],
     ) -> (Vec<f64>, usize) {
+        self.decrypt_scores_at(ctx, enc, cts, 0)
+    }
+
+    /// Decrypt per-class score ciphertexts reading slot `slot` — the
+    /// folded batched protocol's read: the server leaves sample `g`'s
+    /// score at `plan.score_slot(g)` instead of spending a rotation
+    /// moving it to slot 0, and tells the caller which slot to read
+    /// (`EncScores::slot`).
+    pub fn decrypt_scores_at(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        cts: &[Ciphertext],
+        slot: usize,
+    ) -> (Vec<f64>, usize) {
         let scores: Vec<f64> = cts
             .iter()
-            .map(|ct| self.decryptor.decrypt_slots(ctx, enc, ct)[0])
+            .map(|ct| self.decryptor.decrypt_slots(ctx, enc, ct)[slot])
             .collect();
         let pred = crate::forest::tree::argmax(&scores);
         (scores, pred)
+    }
+
+    /// Decrypt a coordinator response (per-class ciphertexts + the
+    /// slot carrying this request's score). Returns (scores, argmax).
+    pub fn decrypt_response(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        resp: &crate::hrf::server::EncScores,
+    ) -> (Vec<f64>, usize) {
+        self.decrypt_scores_at(ctx, enc, &resp.scores, resp.slot)
     }
 
     /// Decrypt per-class score ciphertexts of a **packed batch**: the

@@ -7,13 +7,18 @@
 //! * [`pack`] — RF/NRF → packed server-side model: replicated
 //!   threshold vector, the `K` generalized diagonals of all `V`
 //!   matrices (Algorithm 1's operands), output masks and biases.
+//! * [`schedule`] — the compiled HE-program IR: `HrfPlan` → explicit
+//!   op schedule per batch size, with the B>1 extraction rotations
+//!   folded into the layer-3 reduction; Galois-key requirements and
+//!   Table-1 predictions are derived from the compiled program.
 //! * [`client`] — Algorithm 3's client half: variable reshuffle τ,
-//!   per-tree replication, encode + encrypt; decrypt + argmax.
-//! * [`server`] — Algorithm 3's server half: comparisons, packed
-//!   matrix multiplication (Algorithm 1), polynomial activations,
-//!   per-class **group-local** homomorphic dot products (Algorithm 2);
-//!   packed-group combine/extract for server-side batching; per-layer
-//!   op counts (Table 1).
+//!   per-tree replication, encode + encrypt; decrypt + argmax
+//!   (slot-addressed for folded batch responses).
+//! * [`server`] — Algorithm 3's server half, now a thin executor over
+//!   compiled schedules: comparisons, packed matrix multiplication
+//!   (Algorithm 1), polynomial activations, per-class **group-local**
+//!   homomorphic dot products (Algorithm 2); folded/legacy packed
+//!   batching; per-layer op counts (Table 1).
 //! * [`cryptonet`] — the §5 comparison baseline: a CryptoNet-style
 //!   HE-MLP with square activations, batched across slots.
 
@@ -21,9 +26,11 @@ pub mod client;
 pub mod cryptonet;
 pub mod pack;
 pub mod plan;
+pub mod schedule;
 pub mod server;
 
 pub use client::{EvalKeys, HrfClient};
 pub use pack::HrfModel;
 pub use plan::HrfPlan;
-pub use server::{HrfServer, LayerCounts};
+pub use schedule::{HrfSchedule, PlainOperand, ScheduleOp, ScoreRef, Segment};
+pub use server::{EncScores, HrfServer, LayerCounts};

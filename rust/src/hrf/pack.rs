@@ -121,6 +121,20 @@ impl HrfModel {
         })
     }
 
+    /// Resolve a schedule operand to its packed slot vector — the
+    /// single lookup both executors (the CKKS one in `HrfServer` and
+    /// the f32 one in `runtime::slot_model`) use, so a compiled
+    /// schedule means the same thing on both sides.
+    pub fn operand_slots(&self, op: crate::hrf::schedule::PlainOperand) -> &[f64] {
+        use crate::hrf::schedule::PlainOperand;
+        match op {
+            PlainOperand::Thresholds => &self.t_slots,
+            PlainOperand::Biases => &self.b_slots,
+            PlainOperand::Diag(j) => &self.diag_slots[j],
+            PlainOperand::ClassWeights(c) => &self.w_slots[c],
+        }
+    }
+
     /// Reference slot-level forward pass in plaintext f64, layer by
     /// layer — the oracle the HE evaluation, the AOT JAX slot model and
     /// the golden parity fixture are all checked against (same

@@ -47,6 +47,8 @@
 //! cross-instance SIMD batching CryptoNets-style systems use, applied
 //! to the HRF layout.
 
+use std::collections::BTreeSet;
+
 /// Packing plan for one HRF model on one parameter set.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HrfPlan {
@@ -132,17 +134,19 @@ impl HrfPlan {
     /// `reduce_span/2` (the group-local Algorithm 2 reduction). Every
     /// step is `< reduce_span`, and Algorithm 1 steps only read across
     /// a group boundary where the diagonal operands are zero.
+    ///
+    /// Closed-form twin of the compiled schedule's derived step set
+    /// (`HrfSchedule::rotation_steps`), retained as a cross-check —
+    /// production key requirements come from the schedule
+    /// (`HrfServer::eval_key_requirements`).
     pub fn eval_rotations(&self) -> Vec<usize> {
-        let mut rots: Vec<usize> = (1..self.k).collect();
+        let mut rots: BTreeSet<usize> = (1..self.k).collect();
         let mut step = 1usize;
         while step < self.reduce_span {
-            if !rots.contains(&step) {
-                rots.push(step);
-            }
+            rots.insert(step);
             step <<= 1;
         }
-        rots.sort_unstable();
-        rots
+        rots.into_iter().collect()
     }
 
     /// Rotation steps the server needs Galois keys for in the
@@ -159,31 +163,30 @@ impl HrfPlan {
     /// back to slot 0. These run *outside* the evaluation proper.
     pub fn batch_rotations(&self, b: usize) -> Vec<usize> {
         let b = b.min(self.groups);
-        let mut rots = Vec::new();
+        let mut rots = BTreeSet::new();
         for g in 1..b {
             let place = self.slots - g * self.reduce_span;
             let extract = g * self.reduce_span;
             for r in [place, extract] {
-                if r > 0 && !rots.contains(&r) {
-                    rots.push(r);
+                if r > 0 {
+                    rots.insert(r);
                 }
             }
         }
-        rots.sort_unstable();
-        rots
+        rots.into_iter().collect()
     }
 
     /// All rotation steps for a session that will submit packed groups
     /// of up to `b` samples (evaluation + placement + extraction).
+    ///
+    /// This is the *unfolded* (legacy slot-0) protocol's set; the
+    /// folded schedule needs no extraction steps (see
+    /// `HrfServer::eval_key_requirements`). Retained as the hand
+    /// cross-check for `HrfSchedule::rotation_steps`.
     pub fn rotations_needed_batched(&self, b: usize) -> Vec<usize> {
-        let mut rots = self.eval_rotations();
-        for r in self.batch_rotations(b) {
-            if !rots.contains(&r) {
-                rots.push(r);
-            }
-        }
-        rots.sort_unstable();
-        rots
+        let mut rots: BTreeSet<usize> = self.eval_rotations().into_iter().collect();
+        rots.extend(self.batch_rotations(b));
+        rots.into_iter().collect()
     }
 
     /// Paper Table 1 formulas for this plan (additions,

@@ -1,0 +1,772 @@
+//! Compiled HE op schedules for the HRF pipeline: a small homomorphic
+//! program IR, the `HrfPlan` → schedule compiler, and a dry-run
+//! interpreter.
+//!
+//! # Why compile?
+//!
+//! `HrfServer::eval` used to be a hand-written monolith whose rotation
+//! and key requirements were duplicated by hand in `HrfPlan`
+//! (`eval_rotations` / `batch_rotations` / …) — a drift-prone parallel
+//! structure. Batched tree-ensemble HE systems instead compile
+//! inference into an explicit homomorphic program and derive
+//! everything else (key sets, op counts, cost models) from that single
+//! artifact. [`HrfSchedule`] is that artifact here:
+//!
+//! * the **executor** (`HrfServer::run_schedule`) replays the ops
+//!   against the CKKS [`Evaluator`](crate::ckks::evaluator::Evaluator);
+//! * the **plaintext executor** (`runtime::slot_model`) walks the very
+//!   same op list over f32 slot vectors, so the python↔rust golden
+//!   parity holds by construction — both sides run one program;
+//! * **Galois-key requirements** ([`HrfSchedule::rotation_steps`]) and
+//!   **Table-1 op-count predictions**
+//!   ([`HrfSchedule::predicted_counts`], a dry-run interpretation) are
+//!   derived from the op list instead of hand-maintained formulas. The
+//!   old `HrfPlan` formulas are retained only as cross-check tests.
+//!
+//! # The IR
+//!
+//! A schedule is a straight-line register program (`Vec<(Segment,
+//! ScheduleOp)>`): ops read/write virtual registers holding one
+//! ciphertext each. There is no control flow — the HRF pipeline is a
+//! fixed DAG per batch size `B`, so loops are unrolled at compile
+//! time. Each op is tagged with the [`Segment`] (pack / layer /
+//! activation / extract) it belongs to, which is how the executor
+//! rebuilds the per-layer [`LayerCounts`](super::server::LayerCounts)
+//! of the paper's Table 1.
+//!
+//! # The extraction fold (rotation-count reduction)
+//!
+//! For a packed batch of `B > 1` samples the legacy path ran the
+//! group-local layer-3 reduction (scores landing at
+//! `plan.score_slot(g) = g·reduce_span`) and then spent one extraction
+//! rotation per (class, sample) to move each score back to slot 0 —
+//! `C·(B−1)` key-switches per batch.
+//!
+//! The folding transform applied by [`HrfSchedule::compile`] with
+//! `fold = true` uses the rewrite
+//!
+//! ```text
+//!   Read(Rotate(x, r), slot 0)  ≡  Read(x, slot r)
+//! ```
+//!
+//! the extraction rotation of sample `g` composed with the slot-0 read
+//! is just a slot-`g·span` read of the reduction's own output, so the
+//! final step of each group's rotate-and-sum *already holds* every
+//! sample's score. The folded schedule therefore emits **no** physical
+//! `ExtractScore` ops; instead each output ([`ScoreRef`]) records the
+//! slot carrying its score, and the response contract carries that
+//! slot to the client (`EncScores::slot` →
+//! `HrfClient::decrypt_scores_at`). Net effect: exactly `C·(B−1)`
+//! fewer key-switch rotations than eval+extract, verified op-for-op in
+//! `tests/schedule_props.rs` and reported by
+//! `benches/table1_opcounts.rs`.
+//!
+//! The unfolded schedule (`fold = false`) keeps the legacy slot-0
+//! contract: it appends an `Extract` segment that hoists each class's
+//! summed ciphertext once and replays the `g·span` rotations as
+//! [`ScheduleOp::ExtractScore`] ops (hoisted key-switches — cheaper in
+//! wall time than the legacy per-rotation decomposition, same count).
+//!
+//! # Key-requirement derivation
+//!
+//! [`HrfSchedule::rotation_steps`] walks the op list and collects
+//! every rotation amount (expanding `RotateSumGrouped` into its
+//! power-of-two step chain). `HrfServer::eval_key_requirements` and
+//! `HrfServer::can_batch` are defined on top of the *folded* schedule,
+//! so clients no longer generate (and the key cache no longer pays
+//! for) Galois keys for extraction steps the folded path never takes.
+
+use super::pack::HrfModel;
+use super::server::LayerCounts;
+use crate::ckks::evaluator::OpCounts;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Virtual register index (one ciphertext per register).
+pub type Reg = usize;
+
+/// A model operand resolved against [`HrfModel`] at execution time
+/// (the executor encodes it at the consuming op's level/scale through
+/// the server's plaintext cache).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlainOperand {
+    /// Replicated threshold vector `t̃` (layer 1).
+    Thresholds,
+    /// Leaf-bias vector `b̃` (layer 2).
+    Biases,
+    /// Generalized diagonal `j` of the packed `V` matrices (layer 2).
+    Diag(usize),
+    /// Per-class output mask `W̃_c` (layer 3).
+    ClassWeights(usize),
+}
+
+/// Pipeline stage an op belongs to — drives per-layer op accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Segment {
+    /// Server-side placement of B fresh single-sample ciphertexts.
+    Pack,
+    /// Layer 1: `x̃ − t̃`.
+    Layer1,
+    /// First activation `P(·)`.
+    Act1,
+    /// Layer 2: Algorithm 1 diagonal matmul + bias.
+    Layer2,
+    /// Second activation `P(·)`.
+    Act2,
+    /// Layer 3: per-class mask, grouped reduce, output bias.
+    Layer3,
+    /// Legacy slot-0 extraction (absent from folded schedules).
+    Extract,
+}
+
+/// One step of the homomorphic program.
+#[derive(Clone, Copy, Debug)]
+pub enum ScheduleOp {
+    /// `r[dst] := inputs[input]`.
+    LoadInput { dst: Reg, input: usize },
+    /// `r[dst] := rot(r[src], step)` — plain key-switch rotation.
+    Rotate { dst: Reg, src: Reg, step: usize },
+    /// Precompute `r[src]`'s key-switch decomposition for subsequent
+    /// `RotateHoisted` / `ExtractScore` ops on the same register.
+    Hoist { src: Reg },
+    /// `r[dst] := rot(r[src], step)` using `src`'s hoisted digits.
+    RotateHoisted { dst: Reg, src: Reg, step: usize },
+    /// `r[dst] += r[src]` (ct+ct; `src` adopts `dst`'s scale, matching
+    /// the legacy accumulator discipline).
+    AddAssign { dst: Reg, src: Reg },
+    /// `r[reg] -= operand` (operand encoded at `r[reg]`'s scale).
+    SubPlain { reg: Reg, operand: PlainOperand },
+    /// `r[reg] += operand` (operand encoded at `r[reg]`'s scale).
+    AddPlain { reg: Reg, operand: PlainOperand },
+    /// `r[dst] := r[src] ⊙ operand` (operand encoded at scale Δ;
+    /// resolved through the server's cached-plaintext store).
+    MulPlainCached {
+        dst: Reg,
+        src: Reg,
+        operand: PlainOperand,
+    },
+    /// `r[reg] += value` (constant encoded at `r[reg]`'s scale).
+    AddConst { reg: Reg, value: f64 },
+    /// Rescale `r[reg]` by the top chain prime (drops one level).
+    Rescale { reg: Reg },
+    /// `r[dst] := P(r[src])` — the model's activation polynomial,
+    /// evaluated with the power-basis method.
+    PolyActivation { dst: Reg, src: Reg },
+    /// `r[dst] := group-local rotate-and-sum of r[src]` over `span`
+    /// (`log₂ span` rotate+add steps; slot `g·span` of the result
+    /// holds group `g`'s total).
+    RotateSumGrouped { dst: Reg, src: Reg, span: usize },
+    /// `r[dst] := rot(r[src], slot)` — legacy slot-0 score extraction
+    /// (hoisted; only emitted by unfolded schedules).
+    ExtractScore { dst: Reg, src: Reg, slot: usize },
+}
+
+/// Where one (class, sample) score lives after execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScoreRef {
+    pub class: usize,
+    pub sample: usize,
+    /// Register holding the score ciphertext.
+    pub reg: Reg,
+    /// Slot of that register carrying the score (0 unless the
+    /// extraction was folded into the grouped reduction).
+    pub slot: usize,
+}
+
+/// A compiled HRF evaluation for one batch size.
+#[derive(Clone, Debug)]
+pub struct HrfSchedule {
+    /// Batch size this schedule packs and scores.
+    pub b: usize,
+    /// Whether extraction was folded into the grouped reduction.
+    pub folded: bool,
+    /// Group span of the layer-3 reduction.
+    pub span: usize,
+    /// Number of virtual registers the executor must allocate.
+    pub n_regs: usize,
+    pub ops: Vec<(Segment, ScheduleOp)>,
+    /// One entry per (class, sample), class-major.
+    pub outputs: Vec<ScoreRef>,
+    /// Dry-run op counts of one activation-polynomial evaluation
+    /// (computed once at compile time from the model's coefficients).
+    pub act_counts: OpCounts,
+}
+
+// Fixed register layout (see `compile`); per-class registers follow.
+const R_IN: Reg = 0;
+const R_U: Reg = 1;
+const R_ACC: Reg = 2;
+const R_TMP: Reg = 3;
+const R_V: Reg = 4;
+const R_PACK: Reg = 5;
+const R_CLASS0: Reg = 6;
+
+impl HrfSchedule {
+    /// Compile the HRF pipeline for a packed batch of `b ≤ plan.groups`
+    /// samples. With `fold = true` the per-sample extraction rotations
+    /// are folded into the layer-3 reduction (outputs become
+    /// slot-addressed); with `fold = false` an `Extract` segment
+    /// restores the legacy slot-0 contract. `b = 1` needs no
+    /// extraction either way and compiles to the same program.
+    pub fn compile(model: &HrfModel, b: usize, fold: bool) -> Self {
+        let p = &model.plan;
+        let b = b.clamp(1, p.groups);
+        let fold = fold || b == 1;
+        let c = p.c;
+        let mut ops: Vec<(Segment, ScheduleOp)> = Vec::new();
+        let mut outputs: Vec<ScoreRef> = Vec::new();
+
+        // ---- Pack: place sample g in group g, sum ------------------
+        ops.push((Segment::Pack, ScheduleOp::LoadInput { dst: R_IN, input: 0 }));
+        for g in 1..b {
+            ops.push((
+                Segment::Pack,
+                ScheduleOp::LoadInput {
+                    dst: R_PACK,
+                    input: g,
+                },
+            ));
+            ops.push((
+                Segment::Pack,
+                ScheduleOp::Rotate {
+                    dst: R_PACK,
+                    src: R_PACK,
+                    step: p.slots - g * p.reduce_span,
+                },
+            ));
+            ops.push((
+                Segment::Pack,
+                ScheduleOp::AddAssign {
+                    dst: R_IN,
+                    src: R_PACK,
+                },
+            ));
+        }
+
+        // ---- Layer 1: u = P(x̃ − t̃) --------------------------------
+        ops.push((
+            Segment::Layer1,
+            ScheduleOp::SubPlain {
+                reg: R_IN,
+                operand: PlainOperand::Thresholds,
+            },
+        ));
+        ops.push((
+            Segment::Act1,
+            ScheduleOp::PolyActivation { dst: R_U, src: R_IN },
+        ));
+
+        // ---- Layer 2: Algorithm 1 (hoisted diagonal matmul) --------
+        if p.k > 1 {
+            ops.push((Segment::Layer2, ScheduleOp::Hoist { src: R_U }));
+        }
+        ops.push((
+            Segment::Layer2,
+            ScheduleOp::MulPlainCached {
+                dst: R_ACC,
+                src: R_U,
+                operand: PlainOperand::Diag(0),
+            },
+        ));
+        for j in 1..p.k {
+            ops.push((
+                Segment::Layer2,
+                ScheduleOp::RotateHoisted {
+                    dst: R_TMP,
+                    src: R_U,
+                    step: j,
+                },
+            ));
+            ops.push((
+                Segment::Layer2,
+                ScheduleOp::MulPlainCached {
+                    dst: R_TMP,
+                    src: R_TMP,
+                    operand: PlainOperand::Diag(j),
+                },
+            ));
+            ops.push((
+                Segment::Layer2,
+                ScheduleOp::AddAssign {
+                    dst: R_ACC,
+                    src: R_TMP,
+                },
+            ));
+        }
+        ops.push((Segment::Layer2, ScheduleOp::Rescale { reg: R_ACC }));
+        ops.push((
+            Segment::Layer2,
+            ScheduleOp::AddPlain {
+                reg: R_ACC,
+                operand: PlainOperand::Biases,
+            },
+        ));
+        ops.push((
+            Segment::Act2,
+            ScheduleOp::PolyActivation {
+                dst: R_V,
+                src: R_ACC,
+            },
+        ));
+
+        // ---- Layer 3: per-class mask + grouped reduce + bias -------
+        for ci in 0..c {
+            let rc = R_CLASS0 + ci;
+            ops.push((
+                Segment::Layer3,
+                ScheduleOp::MulPlainCached {
+                    dst: rc,
+                    src: R_V,
+                    operand: PlainOperand::ClassWeights(ci),
+                },
+            ));
+            ops.push((Segment::Layer3, ScheduleOp::Rescale { reg: rc }));
+            ops.push((
+                Segment::Layer3,
+                ScheduleOp::RotateSumGrouped {
+                    dst: rc,
+                    src: rc,
+                    span: p.reduce_span,
+                },
+            ));
+            ops.push((
+                Segment::Layer3,
+                ScheduleOp::AddConst {
+                    reg: rc,
+                    value: model.betas[ci],
+                },
+            ));
+        }
+
+        // ---- Outputs (folded: slot-addressed; else Extract segment) -
+        let mut n_regs = R_CLASS0 + c;
+        if fold {
+            for ci in 0..c {
+                for g in 0..b {
+                    outputs.push(ScoreRef {
+                        class: ci,
+                        sample: g,
+                        reg: R_CLASS0 + ci,
+                        slot: p.score_slot(g),
+                    });
+                }
+            }
+        } else {
+            for ci in 0..c {
+                let rc = R_CLASS0 + ci;
+                outputs.push(ScoreRef {
+                    class: ci,
+                    sample: 0,
+                    reg: rc,
+                    slot: 0,
+                });
+                ops.push((Segment::Extract, ScheduleOp::Hoist { src: rc }));
+                for g in 1..b {
+                    let re = n_regs;
+                    n_regs += 1;
+                    ops.push((
+                        Segment::Extract,
+                        ScheduleOp::ExtractScore {
+                            dst: re,
+                            src: rc,
+                            slot: p.score_slot(g),
+                        },
+                    ));
+                    outputs.push(ScoreRef {
+                        class: ci,
+                        sample: g,
+                        reg: re,
+                        slot: 0,
+                    });
+                }
+            }
+        }
+
+        HrfSchedule {
+            b,
+            folded: fold,
+            span: p.reduce_span,
+            n_regs,
+            ops,
+            outputs,
+            act_counts: poly_op_counts(&model.act_coeffs),
+        }
+    }
+
+    /// Every rotation step the schedule performs — the session's
+    /// Galois keys must cover exactly this set. Derived from the op
+    /// list (the hand formulas in `HrfPlan` survive only as a
+    /// cross-check test).
+    pub fn rotation_steps(&self) -> BTreeSet<usize> {
+        let mut steps = BTreeSet::new();
+        for (_, op) in &self.ops {
+            match *op {
+                ScheduleOp::Rotate { step, .. } | ScheduleOp::RotateHoisted { step, .. } => {
+                    steps.insert(step);
+                }
+                ScheduleOp::ExtractScore { slot, .. } => {
+                    steps.insert(slot);
+                }
+                ScheduleOp::RotateSumGrouped { span, .. } => {
+                    let mut s = 1usize;
+                    while s < span {
+                        steps.insert(s);
+                        s <<= 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        steps
+    }
+
+    /// Dry-run interpretation: the per-layer op counts executing this
+    /// schedule will produce, without touching a ciphertext. The
+    /// executor's measured counts match these exactly (asserted in
+    /// `tests/schedule_props.rs`), which is what lets Table 1 be
+    /// *predicted* from the compiled program.
+    pub fn predicted_counts(&self) -> LayerCounts {
+        let mut counts = LayerCounts::default();
+        for (seg, op) in &self.ops {
+            let mut d = OpCounts::default();
+            match *op {
+                ScheduleOp::LoadInput { .. } | ScheduleOp::Hoist { .. } => {}
+                ScheduleOp::Rotate { .. }
+                | ScheduleOp::RotateHoisted { .. }
+                | ScheduleOp::ExtractScore { .. } => d.rotate += 1,
+                ScheduleOp::AddAssign { .. } => d.add += 1,
+                ScheduleOp::SubPlain { .. }
+                | ScheduleOp::AddPlain { .. }
+                | ScheduleOp::AddConst { .. } => d.add_plain += 1,
+                ScheduleOp::MulPlainCached { .. } => d.mul_plain += 1,
+                ScheduleOp::Rescale { .. } => d.rescale += 1,
+                ScheduleOp::PolyActivation { .. } => d = self.act_counts,
+                ScheduleOp::RotateSumGrouped { span, .. } => {
+                    let steps = span.trailing_zeros() as u64;
+                    d.rotate += steps;
+                    d.add += steps;
+                }
+            }
+            *counts.bucket_mut(*seg) += d;
+        }
+        counts
+    }
+
+    /// Total predicted key-switch rotations for one execution.
+    pub fn predicted_rotations(&self) -> u64 {
+        self.predicted_counts().total().rotate
+    }
+}
+
+impl fmt::Display for PlainOperand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlainOperand::Thresholds => write!(f, "t̃"),
+            PlainOperand::Biases => write!(f, "b̃"),
+            PlainOperand::Diag(j) => write!(f, "diag[{j}]"),
+            PlainOperand::ClassWeights(c) => write!(f, "W̃[{c}]"),
+        }
+    }
+}
+
+impl fmt::Display for HrfSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "HrfSchedule {{ B={}, folded={}, span={}, regs={}, ops={} }}",
+            self.b,
+            self.folded,
+            self.span,
+            self.n_regs,
+            self.ops.len()
+        )?;
+        let mut cur: Option<Segment> = None;
+        for (seg, op) in &self.ops {
+            if cur != Some(*seg) {
+                writeln!(f, "  -- {seg:?} --")?;
+                cur = Some(*seg);
+            }
+            match *op {
+                ScheduleOp::LoadInput { dst, input } => {
+                    writeln!(f, "    r{dst} <- input[{input}]")?
+                }
+                ScheduleOp::Rotate { dst, src, step } => {
+                    writeln!(f, "    r{dst} <- rot(r{src}, {step})")?
+                }
+                ScheduleOp::Hoist { src } => writeln!(f, "    hoist r{src}")?,
+                ScheduleOp::RotateHoisted { dst, src, step } => {
+                    writeln!(f, "    r{dst} <- rot_hoisted(r{src}, {step})")?
+                }
+                ScheduleOp::AddAssign { dst, src } => writeln!(f, "    r{dst} += r{src}")?,
+                ScheduleOp::SubPlain { reg, operand } => writeln!(f, "    r{reg} -= {operand}")?,
+                ScheduleOp::AddPlain { reg, operand } => writeln!(f, "    r{reg} += {operand}")?,
+                ScheduleOp::MulPlainCached { dst, src, operand } => {
+                    writeln!(f, "    r{dst} <- r{src} * {operand}")?
+                }
+                ScheduleOp::AddConst { reg, value } => writeln!(f, "    r{reg} += {value:.6}")?,
+                ScheduleOp::Rescale { reg } => writeln!(f, "    rescale r{reg}")?,
+                ScheduleOp::PolyActivation { dst, src } => {
+                    writeln!(f, "    r{dst} <- P(r{src})")?
+                }
+                ScheduleOp::RotateSumGrouped { dst, src, span } => {
+                    writeln!(f, "    r{dst} <- rotate_sum_grouped(r{src}, span {span})")?
+                }
+                ScheduleOp::ExtractScore { dst, src, slot } => {
+                    writeln!(f, "    r{dst} <- rot_hoisted(r{src}, {slot})  [extract]")?
+                }
+            }
+        }
+        for o in &self.outputs {
+            writeln!(
+                f,
+                "  out class {} sample {} @ r{}[slot {}]",
+                o.class, o.sample, o.reg, o.slot
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Dry-run op counts of `Evaluator::eval_poly_power_basis` for the
+/// given monomial coefficients — a faithful mirror of its power/Horner
+/// selection logic (asserted against measured counts in
+/// `tests/schedule_props.rs`).
+pub fn poly_op_counts(coeffs: &[f64]) -> OpCounts {
+    const EPS: f64 = 1e-12;
+    let deg = coeffs
+        .iter()
+        .rposition(|c| c.abs() > EPS)
+        .expect("all-zero polynomial");
+    assert!(deg >= 1, "constant polynomial");
+    let mut counts = OpCounts::default();
+    if deg <= 2 {
+        // Horner fallback: c_top mul_plain+rescale, c_next add_plain,
+        // then (deg-1) iterations of mul+relin+rescale+add_plain.
+        counts.mul_plain = 1;
+        counts.rescale = deg as u64;
+        counts.add_plain = deg as u64;
+        counts.mul = (deg - 1) as u64;
+        counts.relin = (deg - 1) as u64;
+        return counts;
+    }
+    // Mirror of the power-basis "needed powers" marking.
+    let mut needed = vec![false; deg + 1];
+    for (i, c) in coeffs.iter().enumerate().skip(1).take(deg) {
+        if c.abs() > EPS {
+            needed[i] = true;
+        }
+    }
+    for i in (2..=deg).rev() {
+        if needed[i] && !i.is_power_of_two() {
+            let hi = 1usize << (usize::BITS - 1 - i.leading_zeros());
+            needed[hi] = true;
+            needed[i - hi] = true;
+        }
+    }
+    let max_p2 = (1..=deg)
+        .filter(|i| needed[*i] && i.is_power_of_two())
+        .max()
+        .unwrap_or(1);
+    {
+        let mut p = max_p2;
+        while p > 1 {
+            needed[p] = true;
+            p >>= 1;
+        }
+    }
+    // Power-of-two squarings.
+    let mut p = 2usize;
+    while p <= deg {
+        if needed[p] {
+            counts.mul += 1;
+            counts.relin += 1;
+            counts.rescale += 1;
+        }
+        p <<= 1;
+    }
+    // Non-power-of-two products x^hi * x^(i-hi).
+    for i in 3..=deg {
+        if needed[i] && !i.is_power_of_two() {
+            counts.mul += 1;
+            counts.relin += 1;
+            counts.rescale += 1;
+        }
+    }
+    // Coefficient accumulation Σ c_i·x^i, then + c_0.
+    let mut first = true;
+    for c in coeffs.iter().take(deg + 1).skip(1) {
+        if c.abs() <= EPS {
+            continue;
+        }
+        counts.mul_plain += 1;
+        counts.rescale += 1;
+        if !first {
+            counts.add += 1;
+        }
+        first = false;
+    }
+    counts.add_plain += 1;
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
+    use crate::nrf::{NeuralForest, NeuralTree};
+    use crate::rng::Xoshiro256pp;
+
+    fn synth_model(k: usize, l: usize, c: usize, slots: usize, seed: u64) -> HrfModel {
+        let d = 8;
+        let mut rng = Xoshiro256pp::new(seed);
+        let trees = (0..l)
+            .map(|_| NeuralTree {
+                tau: (0..k - 1).map(|_| rng.next_index(d)).collect(),
+                t: (0..k - 1).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+                v: (0..k)
+                    .map(|_| (0..k - 1).map(|_| rng.uniform(-0.25, 0.25)).collect())
+                    .collect(),
+                b: (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+                w: (0..c)
+                    .map(|_| (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect())
+                    .collect(),
+                beta: (0..c).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+                real_leaves: k,
+                n_classes: c,
+            })
+            .collect();
+        let nf = NeuralForest {
+            trees,
+            alphas: (0..l).map(|_| rng.uniform(0.1, 1.0)).collect(),
+            k,
+            n_classes: c,
+            activation: Activation::Poly {
+                coeffs: chebyshev_fit_tanh(3.0, 4),
+            },
+        };
+        HrfModel::from_neural_forest(&nf, d, slots).unwrap()
+    }
+
+    #[test]
+    fn segments_appear_in_pipeline_order() {
+        let hm = synth_model(8, 4, 2, 2048, 1);
+        for (b, fold) in [(1usize, true), (3, true), (3, false)] {
+            let s = HrfSchedule::compile(&hm, b, fold);
+            let order = [
+                Segment::Pack,
+                Segment::Layer1,
+                Segment::Act1,
+                Segment::Layer2,
+                Segment::Act2,
+                Segment::Layer3,
+                Segment::Extract,
+            ];
+            let mut last = 0usize;
+            for (seg, _) in &s.ops {
+                let idx = order.iter().position(|o| o == seg).unwrap();
+                assert!(idx >= last, "segment {seg:?} out of order (B={b})");
+                last = idx;
+            }
+        }
+    }
+
+    #[test]
+    fn unfolded_rotation_steps_match_hand_formula() {
+        // The retained HrfPlan formulas are the cross-check: the
+        // unfolded schedule's derived step set must equal them exactly.
+        let hm = synth_model(8, 5, 2, 4096, 2);
+        let p = &hm.plan;
+        for b in 1..=p.groups.min(5) {
+            let sched = HrfSchedule::compile(&hm, b, false);
+            let got: Vec<usize> = sched.rotation_steps().into_iter().collect();
+            assert_eq!(
+                got,
+                p.rotations_needed_batched(b),
+                "unfolded schedule B={b} deviates from the hand formula"
+            );
+        }
+    }
+
+    #[test]
+    fn folded_drops_exactly_the_extraction_steps() {
+        let hm = synth_model(8, 5, 2, 4096, 3);
+        let p = &hm.plan;
+        for b in 2..=p.groups.min(5) {
+            let folded = HrfSchedule::compile(&hm, b, true);
+            let unfolded = HrfSchedule::compile(&hm, b, false);
+            let fs = folded.rotation_steps();
+            let us = unfolded.rotation_steps();
+            assert!(fs.is_subset(&us));
+            // Everything dropped is an extraction step g·span.
+            for step in us.difference(&fs) {
+                assert_eq!(step % p.reduce_span, 0, "non-extraction step {step} dropped");
+            }
+            // Folded outputs are slot-addressed at the score slots.
+            for o in &folded.outputs {
+                assert_eq!(o.slot, p.score_slot(o.sample));
+            }
+            // Predicted rotation saving is exactly C·(B−1).
+            assert_eq!(
+                unfolded.predicted_rotations() - folded.predicted_rotations(),
+                (p.c * (b - 1)) as u64
+            );
+            assert_eq!(folded.predicted_counts().extract, OpCounts::default());
+        }
+    }
+
+    #[test]
+    fn predicted_table1_shapes_match_paper() {
+        let hm = synth_model(16, 6, 2, 4096, 4);
+        let p = &hm.plan;
+        let sched = HrfSchedule::compile(&hm, 1, true);
+        let counts = sched.predicted_counts();
+        let [l1, l2, l3] = counts.table1_rows();
+        assert_eq!(l1, (1, 0, 0));
+        assert_eq!(l2.1, p.k as u64, "layer2 multiplications = K");
+        assert_eq!(l2.2, (p.k - 1) as u64, "layer2 rotations = K-1");
+        let log_span = p.reduce_span.trailing_zeros() as u64;
+        assert_eq!(l3.1, p.c as u64, "layer3 multiplications = C");
+        assert_eq!(l3.2, p.c as u64 * log_span, "layer3 rotations");
+    }
+
+    #[test]
+    fn poly_op_counts_shapes() {
+        // deg 1 (identity-ish): Horner, one coeff mul.
+        let c = poly_op_counts(&[0.0, 1.0]);
+        assert_eq!((c.mul_plain, c.rescale, c.add_plain, c.mul), (1, 1, 1, 0));
+        // deg 4 with all terms: x², x⁴, x³=x²·x ⇒ 3 ct-ct muls.
+        let c = poly_op_counts(&[0.1, 0.7, -0.2, 0.05, -0.3]);
+        assert_eq!(c.mul, 3);
+        assert_eq!(c.mul_plain, 4);
+        // Odd tanh fit: even coeffs ≈ 0 are skipped entirely.
+        let c = poly_op_counts(&chebyshev_fit_tanh(3.0, 4));
+        assert_eq!(c.mul_plain, 2, "only odd powers 1 and 3 have mass");
+    }
+
+    #[test]
+    fn b1_schedule_is_fold_invariant_and_packs_nothing() {
+        let hm = synth_model(8, 4, 2, 2048, 5);
+        let a = HrfSchedule::compile(&hm, 1, true);
+        let b = HrfSchedule::compile(&hm, 1, false);
+        assert!(a.folded && b.folded, "B=1 normalizes to folded");
+        assert_eq!(a.ops.len(), b.ops.len());
+        assert_eq!(
+            a.ops
+                .iter()
+                .filter(|(s, _)| *s == Segment::Pack)
+                .count(),
+            1,
+            "B=1 pack segment is a single load"
+        );
+        assert_eq!(a.outputs.len(), hm.plan.c);
+        assert!(a.outputs.iter().all(|o| o.slot == 0));
+    }
+
+    #[test]
+    fn oversized_batch_is_clamped_to_groups() {
+        let hm = synth_model(4, 3, 2, 1024, 6);
+        let p = &hm.plan;
+        let s = HrfSchedule::compile(&hm, p.groups + 7, true);
+        assert_eq!(s.b, p.groups);
+    }
+}

@@ -6,47 +6,70 @@
 //! layer 3:  ŷ_c = ⟨W̃_c, v⟩ + β_c                    (Algorithm 2, ×C)
 //! ```
 //!
-//! Per-layer [`OpCounts`] snapshots regenerate the paper's Table 1.
+//! Since the schedule refactor the server is a thin shell around
+//! compiled [`HrfSchedule`]s: [`HrfServer::eval`],
+//! [`HrfServer::eval_batch`] and [`HrfServer::eval_batch_folded`]
+//! compile (once, cached per batch size — the way `pt_cache` caches
+//! encoded plaintexts) and then replay the op list against the CKKS
+//! [`Evaluator`]. Galois-key requirements
+//! ([`HrfServer::eval_key_requirements`], [`HrfServer::can_batch`])
+//! and Table-1 predictions ([`HrfServer::predicted_counts`]) are
+//! derived from the same compiled program, so the op stream, the key
+//! set and the cost model cannot drift apart.
+//!
+//! Per-layer [`LayerCounts`] snapshots regenerate the paper's Table 1.
 //! The activation polynomial is evaluated with the power-basis method
 //! (depth ⌈log₂ m⌉+1), so the whole pipeline fits the depth-8 default
 //! parameter set with degree-4 activations.
 //!
-//! # Sample-group batching
+//! # Sample-group batching and the extraction fold
 //!
-//! All three layers operate slot-wise or group-locally, and the model
+//! All three layers operate slot-wise or group-locally and the model
 //! operands are replicated into every sample group (see
-//! [`HrfPlan`](super::plan::HrfPlan)), so one [`HrfServer::eval`] call
-//! on a ciphertext packed with `B ≤ plan.groups` observations scores
-//! all of them at once: layer 3's rotate-and-sum runs over
-//! `plan.reduce_span` — one **group**, not the whole ciphertext — so
-//! samples never mix, and sample `g`'s class-`c` score lands at slot
+//! [`HrfPlan`](super::plan::HrfPlan)), so one evaluation of a
+//! ciphertext packed with `B ≤ plan.groups` observations scores all of
+//! them at once — sample `g`'s class-`c` score lands at slot
 //! `plan.score_slot(g)` of output `c`.
 //!
-//! Two helpers serve the coordinator's server-side batching:
-//! [`HrfServer::pack_group`] combines `B` fresh single-sample
-//! ciphertexts (each sample in group 0) into one packed ciphertext with
-//! `B−1` rotations, and [`HrfServer::extract_sample`] rotates a packed
-//! score back to slot 0 so every caller keeps the single-sample
-//! response contract.
+//! [`HrfServer::eval_batch_folded`] serves the coordinator's hot path:
+//! the per-sample extraction rotations are folded into the layer-3
+//! reduction (see [`schedule`](super::schedule)), the per-class
+//! outputs stay slot-addressed ([`EncScores`] carries the slot), and
+//! the batch saves exactly `C·(B−1)` key-switches over eval+extract.
+//! [`HrfServer::eval_batch`] keeps the legacy slot-0 response contract
+//! by running the unfolded schedule, whose `Extract` segment hoists
+//! each class's score ciphertext once and replays the extraction
+//! rotations as cheap hoisted key-switches.
+//!
+//! The pre-refactor hand-written path survives as
+//! [`HrfServer::eval_reference`] / [`HrfServer::eval_batch_reference`]
+//! — the bit-identity oracle for `tests/schedule_props.rs` and the
+//! baseline the rotation-count bench compares against.
 
 use super::pack::HrfModel;
+use super::schedule::{HrfSchedule, PlainOperand, Reg, ScheduleOp, Segment};
 use crate::ckks::evaluator::{Evaluator, OpCounts};
 use crate::ckks::keys::{GaloisKeys, RelinKey};
-use crate::ckks::rns::CkksContext;
+use crate::ckks::rns::{CkksContext, RnsPoly};
 use crate::ckks::{Ciphertext, Encoder, Plaintext};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Table-1 measurement: op counts per HRF **linear** layer (the paper's
 /// Table 1 counts the linear layers; activation-polynomial costs are
-/// tracked separately in `activations`).
-#[derive(Clone, Copy, Debug, Default)]
+/// tracked separately in `activations`, batching overheads in
+/// `pack` / `extract`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct LayerCounts {
     pub layer1: OpCounts,
     pub layer2: OpCounts,
     pub layer3: OpCounts,
     /// Combined cost of the two activation-polynomial evaluations.
     pub activations: OpCounts,
+    /// Server-side placement of a packed batch (`B−1` rotations+adds).
+    pub pack: OpCounts,
+    /// Legacy slot-0 score extraction (zero for folded schedules).
+    pub extract: OpCounts,
 }
 
 impl LayerCounts {
@@ -56,6 +79,39 @@ impl LayerCounts {
         let row = |c: &OpCounts| (c.additions(), c.multiplications(), c.rotate);
         [row(&self.layer1), row(&self.layer2), row(&self.layer3)]
     }
+
+    /// Whole-pipeline totals (layers + activations + pack + extract).
+    pub fn total(&self) -> OpCounts {
+        self.layer1 + self.layer2 + self.layer3 + self.activations + self.pack + self.extract
+    }
+
+    /// The accounting bucket a schedule segment's ops land in — the
+    /// single mapping shared by the executor's measured counts and the
+    /// dry-run interpreter's predictions, so the two cannot drift.
+    pub fn bucket_mut(&mut self, seg: Segment) -> &mut OpCounts {
+        match seg {
+            Segment::Pack => &mut self.pack,
+            Segment::Layer1 => &mut self.layer1,
+            Segment::Act1 | Segment::Act2 => &mut self.activations,
+            Segment::Layer2 => &mut self.layer2,
+            Segment::Layer3 => &mut self.layer3,
+            Segment::Extract => &mut self.extract,
+        }
+    }
+}
+
+/// Per-class score ciphertexts plus the slot each caller should read —
+/// the response payload of the folded batched protocol. `slot == 0`
+/// for single-sample and legacy-extracted responses; a folded batch
+/// response points caller `g` at `plan.score_slot(g)` of the shared
+/// per-class ciphertexts (decrypt with
+/// `HrfClient::decrypt_scores_at` / `decrypt_response`).
+#[derive(Clone, Debug)]
+pub struct EncScores {
+    /// One ciphertext per class.
+    pub scores: Vec<Ciphertext>,
+    /// Slot of each ciphertext carrying this response's score.
+    pub slot: usize,
 }
 
 /// Server-side evaluator bound to one packed model.
@@ -66,6 +122,9 @@ pub struct HrfServer {
     /// operand is FFT-encoded exactly once per schedule point
     /// (§Perf step 5 — encodes were ~40 % of an eval).
     pt_cache: Mutex<HashMap<(u32, usize, u64), Plaintext>>,
+    /// Compiled-schedule cache, keyed by (batch size, folded) — the
+    /// schedule analogue of `pt_cache`.
+    schedules: Mutex<HashMap<(usize, bool), Arc<HrfSchedule>>>,
 }
 
 /// Cache operand ids.
@@ -74,11 +133,37 @@ const PT_B: u32 = 1;
 const PT_DIAG0: u32 = 10; // +j
 const PT_W0: u32 = 1_000; // +c
 
+fn operand_cache_id(op: PlainOperand) -> u32 {
+    match op {
+        PlainOperand::Thresholds => PT_T,
+        PlainOperand::Biases => PT_B,
+        PlainOperand::Diag(j) => PT_DIAG0 + j as u32,
+        PlainOperand::ClassWeights(c) => PT_W0 + c as u32,
+    }
+}
+
+/// Disjoint mutable access to two registers.
+fn two_regs(
+    regs: &mut [Option<Ciphertext>],
+    a: usize,
+    b: usize,
+) -> (&mut Ciphertext, &mut Ciphertext) {
+    assert_ne!(a, b, "aliasing register pair");
+    if a < b {
+        let (lo, hi) = regs.split_at_mut(b);
+        (lo[a].as_mut().expect("reg a"), hi[0].as_mut().expect("reg b"))
+    } else {
+        let (lo, hi) = regs.split_at_mut(a);
+        (hi[0].as_mut().expect("reg a"), lo[b].as_mut().expect("reg b"))
+    }
+}
+
 impl HrfServer {
     pub fn new(model: HrfModel) -> Self {
         HrfServer {
             model,
             pt_cache: Mutex::new(HashMap::new()),
+            schedules: Mutex::new(HashMap::new()),
         }
     }
 
@@ -98,18 +183,329 @@ impl HrfServer {
             return pt.clone();
         }
         let pt = enc.encode(ctx, slots, level, scale);
-        self.pt_cache
-            .lock()
-            .unwrap()
-            .insert(key, pt.clone());
+        self.pt_cache.lock().unwrap().insert(key, pt.clone());
         pt
+    }
+
+    /// The compiled schedule for a `b`-sample batch, compiled on first
+    /// use and cached. `b` is clamped to the plan's group capacity;
+    /// `b = 1` normalizes to the folded form (there is nothing to
+    /// extract).
+    pub fn schedule(&self, b: usize, fold: bool) -> Arc<HrfSchedule> {
+        let b = b.clamp(1, self.model.plan.groups);
+        let fold = fold || b == 1;
+        let mut cache = self.schedules.lock().unwrap();
+        cache
+            .entry((b, fold))
+            .or_insert_with(|| Arc::new(HrfSchedule::compile(&self.model, b, fold)))
+            .clone()
+    }
+
+    /// Execute a compiled schedule against the evaluator. Returns the
+    /// final register file (callers move the registers named by
+    /// `sched.outputs` out — no output ciphertext is deep-cloned) plus
+    /// per-layer op counts measured at segment boundaries (these match
+    /// `sched.predicted_counts()` exactly).
+    fn run_schedule(
+        &self,
+        sched: &HrfSchedule,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        inputs: &[Ciphertext],
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+    ) -> (Vec<Option<Ciphertext>>, LayerCounts) {
+        assert!(
+            inputs.len() >= sched.b,
+            "schedule packs {} inputs, got {}",
+            sched.b,
+            inputs.len()
+        );
+        let delta = ev.ctx.params.scale;
+        let mut regs: Vec<Option<Ciphertext>> = vec![None; sched.n_regs];
+        let mut hoists: HashMap<Reg, Vec<RnsPoly>> = HashMap::new();
+        let mut counts = LayerCounts::default();
+        let mut cur_seg: Option<Segment> = None;
+        let mut snap = ev.counts;
+
+        for (seg, op) in &sched.ops {
+            if cur_seg != Some(*seg) {
+                if let Some(s) = cur_seg {
+                    *counts.bucket_mut(s) += ev.counts.diff(&snap);
+                }
+                snap = ev.counts;
+                cur_seg = Some(*seg);
+            }
+            match *op {
+                ScheduleOp::LoadInput { dst, input } => {
+                    regs[dst] = Some(inputs[input].clone());
+                }
+                ScheduleOp::Rotate { dst, src, step } => {
+                    let r = ev.rotate(regs[src].as_ref().expect("reg"), step, gk);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::Hoist { src } => {
+                    let digits = ev.hoist(regs[src].as_ref().expect("reg"));
+                    hoists.insert(src, digits);
+                }
+                ScheduleOp::RotateHoisted { dst, src, step }
+                | ScheduleOp::ExtractScore {
+                    dst,
+                    src,
+                    slot: step,
+                } => {
+                    let digits = hoists.get(&src).expect("hoisted register");
+                    let r = ev.rotate_hoisted(regs[src].as_ref().expect("reg"), digits, step, gk);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::AddAssign { dst, src } => {
+                    let (d, s) = two_regs(&mut regs, dst, src);
+                    // Same-schedule-point scales differ by < 1e-9
+                    // relative; adopt the accumulator's (the legacy
+                    // accumulator discipline).
+                    s.scale = d.scale;
+                    ev.add_inplace(d, s);
+                }
+                ScheduleOp::SubPlain { reg, operand } => {
+                    let (level, scale) = {
+                        let ct = regs[reg].as_ref().expect("reg");
+                        (ct.level, ct.scale)
+                    };
+                    let pt = self.cached_encode(
+                        &ev.ctx,
+                        enc,
+                        operand_cache_id(operand),
+                        self.model.operand_slots(operand),
+                        level,
+                        scale,
+                    );
+                    ev.sub_plain_inplace(regs[reg].as_mut().expect("reg"), &pt);
+                }
+                ScheduleOp::AddPlain { reg, operand } => {
+                    let (level, scale) = {
+                        let ct = regs[reg].as_ref().expect("reg");
+                        (ct.level, ct.scale)
+                    };
+                    let pt = self.cached_encode(
+                        &ev.ctx,
+                        enc,
+                        operand_cache_id(operand),
+                        self.model.operand_slots(operand),
+                        level,
+                        scale,
+                    );
+                    ev.add_plain_inplace(regs[reg].as_mut().expect("reg"), &pt);
+                }
+                ScheduleOp::MulPlainCached { dst, src, operand } => {
+                    let level = regs[src].as_ref().expect("reg").level;
+                    let pt = self.cached_encode(
+                        &ev.ctx,
+                        enc,
+                        operand_cache_id(operand),
+                        self.model.operand_slots(operand),
+                        level,
+                        delta,
+                    );
+                    let r = ev.mul_plain(regs[src].as_ref().expect("reg"), &pt);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::AddConst { reg, value } => {
+                    let (level, scale) = {
+                        let ct = regs[reg].as_ref().expect("reg");
+                        (ct.level, ct.scale)
+                    };
+                    let pt = enc.encode_constant(&ev.ctx, value, level, scale);
+                    ev.add_plain_inplace(regs[reg].as_mut().expect("reg"), &pt);
+                }
+                ScheduleOp::Rescale { reg } => {
+                    ev.rescale(regs[reg].as_mut().expect("reg"));
+                }
+                ScheduleOp::PolyActivation { dst, src } => {
+                    let r = ev.eval_poly_power_basis(
+                        enc,
+                        regs[src].as_ref().expect("reg"),
+                        &self.model.act_coeffs,
+                        rlk,
+                    );
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::RotateSumGrouped { dst, src, span } => {
+                    let r = ev.rotate_sum(regs[src].as_ref().expect("reg"), span, gk);
+                    regs[dst] = Some(r);
+                }
+            }
+        }
+        if let Some(s) = cur_seg {
+            *counts.bucket_mut(s) += ev.counts.diff(&snap);
+        }
+        (regs, counts)
     }
 
     /// Evaluate the HRF on an encrypted input. Returns one ciphertext
     /// per class (score in slot 0) plus per-layer op counts.
     ///
-    /// Key material (`rlk`, `gk`) belongs to the client session.
+    /// Thin wrapper over the compiled `B = 1` schedule. Key material
+    /// (`rlk`, `gk`) belongs to the client session.
     pub fn eval(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        ct_in: &Ciphertext,
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+    ) -> (Vec<Ciphertext>, LayerCounts) {
+        let sched = self.schedule(1, true);
+        let (mut regs, counts) =
+            self.run_schedule(&sched, ev, enc, std::slice::from_ref(ct_in), rlk, gk);
+        // B=1 outputs reference one distinct register per class.
+        let outs = sched
+            .outputs
+            .iter()
+            .map(|r| regs[r.reg].take().expect("output register"))
+            .collect();
+        (outs, counts)
+    }
+
+    /// Evaluate a packed group of `B` fresh single-sample ciphertexts
+    /// under the **legacy slot-0 contract**: combine, run the pipeline
+    /// once, extract each sample's per-class scores back to slot 0
+    /// (hoisted rotations). Returns one `Vec<Ciphertext>` (length C,
+    /// score in slot 0) per input sample.
+    ///
+    /// The folded variant ([`HrfServer::eval_batch_folded`]) skips the
+    /// `C·(B−1)` extraction rotations entirely — prefer it wherever
+    /// the caller can address a slot.
+    pub fn eval_batch(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        cts: &[Ciphertext],
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+    ) -> (Vec<Vec<Ciphertext>>, LayerCounts) {
+        assert!(!cts.is_empty() && cts.len() <= self.model.plan.groups);
+        let sched = self.schedule(cts.len(), false);
+        let (mut regs, counts) = self.run_schedule(&sched, ev, enc, cts, rlk, gk);
+        // Unfolded outputs name one distinct register per (class,
+        // sample) — move each out, class-major order per sample.
+        let mut per_sample: Vec<Vec<Ciphertext>> = (0..cts.len()).map(|_| Vec::new()).collect();
+        for r in &sched.outputs {
+            per_sample[r.sample].push(regs[r.reg].take().expect("output register"));
+        }
+        (per_sample, counts)
+    }
+
+    /// Evaluate a packed group with the extraction **folded** into the
+    /// layer-3 reduction: one ciphertext per class is returned, with
+    /// sample `g`'s score at `plan.score_slot(g)` — exactly `C·(B−1)`
+    /// fewer rotations than [`HrfServer::eval_batch`]. Pair each
+    /// caller's response with its score slot via [`EncScores`].
+    pub fn eval_batch_folded(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        cts: &[Ciphertext],
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+    ) -> (Vec<Ciphertext>, LayerCounts) {
+        assert!(!cts.is_empty() && cts.len() <= self.model.plan.groups);
+        let sched = self.schedule(cts.len(), true);
+        let (mut regs, counts) = self.run_schedule(&sched, ev, enc, cts, rlk, gk);
+        // A folded schedule's C·B outputs alias C class registers —
+        // move each distinct register out once (no per-sample clones;
+        // sample g reads its score from slot `plan.score_slot(g)`).
+        let per_class = sched
+            .outputs
+            .iter()
+            .filter(|r| r.sample == 0)
+            .map(|r| regs[r.reg].take().expect("output register"))
+            .collect();
+        (per_class, counts)
+    }
+
+    /// Combine `B ≤ plan.groups` *fresh single-sample* ciphertexts
+    /// (each observation packed in group 0, all remaining slots zero,
+    /// identical level & scale) into one group-packed ciphertext:
+    /// sample `g` is right-shifted into group `g` and the shifts are
+    /// summed. Costs `B−1` rotations + `B−1` additions — far below one
+    /// full evaluation, which is what makes server-side batching pay.
+    ///
+    /// This is the stand-alone form of the compiled schedule's `Pack`
+    /// segment (the equivalence is pinned by a unit test below); the
+    /// session's Galois keys must cover the placement steps in
+    /// [`HrfServer::eval_key_requirements`].
+    pub fn pack_group(
+        &self,
+        ev: &mut Evaluator,
+        cts: &[Ciphertext],
+        gk: &GaloisKeys,
+    ) -> Ciphertext {
+        let p = &self.model.plan;
+        assert!(!cts.is_empty() && cts.len() <= p.groups);
+        let mut acc = cts[0].clone();
+        for (g, ct) in cts.iter().enumerate().skip(1) {
+            // Left-rotation by slots − g·span == right-shift by g·span:
+            // slot g·span + j of the result reads slot j of the input.
+            let placed = ev.rotate(ct, p.slots - g * p.reduce_span, gk);
+            ev.add_inplace(&mut acc, &placed);
+        }
+        acc
+    }
+
+    /// Rotate sample `g`'s score (slot `plan.score_slot(g)`) back to
+    /// slot 0 — the legacy-contract helper the unfolded schedule's
+    /// `Extract` segment mirrors (the folded protocol never calls it).
+    pub fn extract_sample(
+        &self,
+        ev: &mut Evaluator,
+        ct: &Ciphertext,
+        g: usize,
+        gk: &GaloisKeys,
+    ) -> Ciphertext {
+        let slot = self.model.plan.score_slot(g);
+        if slot == 0 {
+            ct.clone()
+        } else {
+            ev.rotate(ct, slot, gk)
+        }
+    }
+
+    /// Rotation steps a session must cover in its registered Galois
+    /// keys to use this server with packed groups of up to `b` samples
+    /// (`b ≤ 1` is the single-sample set) — what a client should
+    /// generate for registration *and* re-registration after a
+    /// `SubmitError::KeysEvicted`.
+    ///
+    /// Derived from the compiled **folded** schedule's op list, so it
+    /// contains no extraction steps — smaller key uploads and key-cache
+    /// footprints than the legacy `rotations_needed_batched` set.
+    pub fn eval_key_requirements(&self, b: usize) -> Vec<usize> {
+        self.schedule(b.max(1), true).rotation_steps().into_iter().collect()
+    }
+
+    /// Whether `gk` holds every Galois key the folded `b`-sample
+    /// schedule needs (schedule-derived; a stale or single-sample key
+    /// set makes the coordinator fall back to smaller chunks or
+    /// per-request evaluation).
+    pub fn can_batch(&self, gk: &GaloisKeys, b: usize) -> bool {
+        self.schedule(b, true)
+            .rotation_steps()
+            .iter()
+            .all(|r| gk.keys.contains_key(r))
+    }
+
+    /// Dry-run Table-1 prediction for a `b`-sample batch — the op
+    /// counts executing the compiled schedule will produce, derived
+    /// from the schedule itself rather than hand formulas.
+    pub fn predicted_counts(&self, b: usize, fold: bool) -> LayerCounts {
+        self.schedule(b, fold).predicted_counts()
+    }
+
+    /// The pre-schedule hand-written evaluation, retained verbatim as
+    /// the bit-identity oracle for the compiled path (see
+    /// `tests/schedule_props.rs`) and the legacy baseline in
+    /// `benches/table1_opcounts.rs`.
+    pub fn eval_reference(
         &self,
         ev: &mut Evaluator,
         enc: &Encoder,
@@ -124,8 +520,7 @@ impl HrfServer {
         let snap0 = ev.counts;
 
         // ---- Layer 1: u = P(x̃ − t̃) --------------------------------
-        let t_pt =
-            self.cached_encode(&ev.ctx, enc, PT_T, &m.t_slots, ct_in.level, ct_in.scale);
+        let t_pt = self.cached_encode(&ev.ctx, enc, PT_T, &m.t_slots, ct_in.level, ct_in.scale);
         let mut diff = ct_in.clone();
         ev.sub_plain_inplace(&mut diff, &t_pt);
         counts.layer1 = ev.counts.diff(&snap0);
@@ -166,24 +561,12 @@ impl HrfServer {
         }
         let mut lin = acc.expect("K >= 1 diagonals");
         ev.rescale(&mut lin);
-        let b_pt =
-            self.cached_encode(&ev.ctx, enc, PT_B, &m.b_slots, lin.level, lin.scale);
+        let b_pt = self.cached_encode(&ev.ctx, enc, PT_B, &m.b_slots, lin.level, lin.scale);
         ev.add_plain_inplace(&mut lin, &b_pt);
         counts.layer2 = ev.counts.diff(&snap1);
         let act1 = ev.counts;
         let v = ev.eval_poly_power_basis(enc, &lin, &m.act_coeffs, rlk);
-        {
-            let a = ev.counts.diff(&act1);
-            counts.activations = OpCounts {
-                add: counts.activations.add + a.add,
-                add_plain: counts.activations.add_plain + a.add_plain,
-                mul: counts.activations.mul + a.mul,
-                mul_plain: counts.activations.mul_plain + a.mul_plain,
-                rotate: counts.activations.rotate + a.rotate,
-                rescale: counts.activations.rescale + a.rescale,
-                relin: counts.activations.relin + a.relin,
-            };
-        }
+        counts.activations += ev.counts.diff(&act1);
         let snap2 = ev.counts;
 
         // ---- Layer 3: Algorithm 2 per class ------------------------
@@ -213,78 +596,12 @@ impl HrfServer {
         (outputs, counts)
     }
 
-    /// Combine `B ≤ plan.groups` *fresh single-sample* ciphertexts
-    /// (each observation packed in group 0, all remaining slots zero,
-    /// identical level & scale) into one group-packed ciphertext:
-    /// sample `g` is right-shifted into group `g` and the shifts are
-    /// summed. Costs `B−1` rotations + `B−1` additions — far below one
-    /// full evaluation, which is what makes server-side batching pay.
+    /// Legacy eval+extract batch path (pack → [`eval_reference`] →
+    /// per-sample slot-0 extraction with plain rotations) — the
+    /// baseline the folded schedule is measured against.
     ///
-    /// The session's Galois keys must cover
-    /// [`HrfPlan::batch_rotations`](super::plan::HrfPlan::batch_rotations)
-    /// for `B` (see [`HrfServer::can_batch`]).
-    pub fn pack_group(
-        &self,
-        ev: &mut Evaluator,
-        cts: &[Ciphertext],
-        gk: &GaloisKeys,
-    ) -> Ciphertext {
-        let p = &self.model.plan;
-        assert!(!cts.is_empty() && cts.len() <= p.groups);
-        let mut acc = cts[0].clone();
-        for (g, ct) in cts.iter().enumerate().skip(1) {
-            // Left-rotation by slots − g·span == right-shift by g·span:
-            // slot g·span + j of the result reads slot j of the input.
-            let placed = ev.rotate(ct, p.slots - g * p.reduce_span, gk);
-            ev.add_inplace(&mut acc, &placed);
-        }
-        acc
-    }
-
-    /// Rotate sample `g`'s score (slot `plan.score_slot(g)`) back to
-    /// slot 0, restoring the single-sample response contract.
-    pub fn extract_sample(
-        &self,
-        ev: &mut Evaluator,
-        ct: &Ciphertext,
-        g: usize,
-        gk: &GaloisKeys,
-    ) -> Ciphertext {
-        let slot = self.model.plan.score_slot(g);
-        if slot == 0 {
-            ct.clone()
-        } else {
-            ev.rotate(ct, slot, gk)
-        }
-    }
-
-    /// Rotation steps a session must cover in its registered Galois
-    /// keys to use this server with packed groups of up to `b` samples
-    /// (`b ≤ 1` is the single-sample set) — what a client should
-    /// generate for registration *and* re-registration after a
-    /// `SubmitError::KeysEvicted` (the key cache evicts whole
-    /// sessions, so recovery re-uploads this full set).
-    pub fn eval_key_requirements(&self, b: usize) -> Vec<usize> {
-        self.model.plan.rotations_needed_batched(b)
-    }
-
-    /// Whether `gk` holds every Galois key a `b`-sample packed
-    /// evaluation needs (placement + extraction on top of the
-    /// evaluation set).
-    pub fn can_batch(&self, gk: &GaloisKeys, b: usize) -> bool {
-        self.model
-            .plan
-            .batch_rotations(b)
-            .iter()
-            .all(|r| gk.keys.contains_key(r))
-    }
-
-    /// Evaluate a packed group of `B` fresh single-sample ciphertexts
-    /// in one pass: combine ([`HrfServer::pack_group`]), run
-    /// [`HrfServer::eval`] once, then extract each sample's per-class
-    /// scores back to slot 0. Returns one `Vec<Ciphertext>` (length C,
-    /// score in slot 0) per input sample.
-    pub fn eval_batch(
+    /// [`eval_reference`]: HrfServer::eval_reference
+    pub fn eval_batch_reference(
         &self,
         ev: &mut Evaluator,
         enc: &Encoder,
@@ -293,11 +610,11 @@ impl HrfServer {
         gk: &GaloisKeys,
     ) -> (Vec<Vec<Ciphertext>>, LayerCounts) {
         if cts.len() == 1 {
-            let (outs, counts) = self.eval(ev, enc, &cts[0], rlk, gk);
+            let (outs, counts) = self.eval_reference(ev, enc, &cts[0], rlk, gk);
             return (vec![outs], counts);
         }
         let packed = self.pack_group(ev, cts, gk);
-        let (outs, counts) = self.eval(ev, enc, &packed, rlk, gk);
+        let (outs, counts) = self.eval_reference(ev, enc, &packed, rlk, gk);
         let per_sample = (0..cts.len())
             .map(|g| {
                 outs.iter()
@@ -320,8 +637,9 @@ mod tests {
     use crate::nrf::activation::{chebyshev_fit_tanh, Activation};
     use crate::nrf::NeuralForest;
 
-    /// Full small-scale end-to-end: train, pack, encrypt, evaluate,
-    /// decrypt, compare with the plaintext slot model.
+    /// Full small-scale end-to-end: train, pack, encrypt, evaluate
+    /// (compiled schedule), decrypt, compare with the plaintext slot
+    /// model AND the retained hand-written reference path.
     #[test]
     fn hrf_eval_matches_plain_slot_model() {
         let ds = adult::generate(1_500, 81);
@@ -337,11 +655,6 @@ mod tests {
             },
             82,
         );
-        // Degree-2 activation to fit the fast() depth-4 budget:
-        // L1 act (2 levels: x², coeff) … here power-basis deg2 -> horner
-        // deg2 = 2 levels; L2 mul+rescale 1; act 2 … exceeds depth 4, so
-        // use a linear "activation" for the depth check? No — use
-        // degree-2 and the hrf_default-like chain with N=8192:
         let params = std::sync::Arc::new(CkksParams::build(
             "test-n8192-d8",
             8192,
@@ -386,6 +699,89 @@ mod tests {
             assert_eq!(l2.1, plan.k as u64, "layer2 multiplications");
             assert_eq!(l2.2, (plan.k - 1) as u64, "layer2 rotations");
             assert_eq!(l3.1, plan.c as u64, "layer3 multiplications");
+            // Measured counts equal the schedule's dry-run prediction.
+            assert_eq!(
+                counts,
+                server.predicted_counts(1, true),
+                "dry-run prediction deviates from measured execution"
+            );
+        }
+
+        // The compiled path is bit-identical to the reference path.
+        let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[0]);
+        let (a, _) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+        let (b, _) = server.eval_reference(&mut ev, &enc, &ct, &rlk, &gk);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.level, y.level);
+            assert_eq!(x.scale.to_bits(), y.scale.to_bits());
+            assert_eq!(x.c0.limbs, y.c0.limbs, "c0 deviates from reference");
+            assert_eq!(x.c1.limbs, y.c1.limbs, "c1 deviates from reference");
+        }
+    }
+
+    #[test]
+    fn pack_segment_matches_pack_group_rotations() {
+        // The stand-alone pack_group helper and the schedule's Pack
+        // segment must perform the same placement rotations in the
+        // same order.
+        let ds = adult::generate(400, 85);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 4,
+                ..Default::default()
+            },
+            86,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 2048).unwrap();
+        let p = hm.plan;
+        assert!(p.groups >= 3);
+        let server = HrfServer::new(hm);
+        let sched = server.schedule(3, true);
+        let pack_steps: Vec<usize> = sched
+            .ops
+            .iter()
+            .filter_map(|(seg, op)| match (seg, op) {
+                (Segment::Pack, ScheduleOp::Rotate { step, .. }) => Some(*step),
+                _ => None,
+            })
+            .collect();
+        let expect: Vec<usize> = (1..3).map(|g| p.slots - g * p.reduce_span).collect();
+        assert_eq!(pack_steps, expect);
+    }
+
+    #[test]
+    fn key_requirements_are_schedule_derived_and_extraction_free() {
+        let ds = adult::generate(400, 87);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 4,
+                ..Default::default()
+            },
+            88,
+        );
+        let coeffs = chebyshev_fit_tanh(3.0, 4);
+        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
+        let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 2048).unwrap();
+        let p = hm.plan;
+        let server = HrfServer::new(hm);
+        for b in 1..=p.groups.min(4) {
+            let req = server.eval_key_requirements(b);
+            let hand = p.rotations_needed_batched(b);
+            // Schedule-derived ⊆ hand formula, and the dropped steps
+            // are exactly the extraction rotations g·span.
+            for r in &req {
+                assert!(hand.contains(r), "requirement {r} outside hand set");
+            }
+            for &r in &hand {
+                if req.contains(&r) {
+                    continue;
+                }
+                assert_eq!(r % p.reduce_span, 0, "dropped non-extraction step {r}");
+            }
         }
     }
 }

@@ -167,7 +167,7 @@ fn cmd_demo(args: &Args) {
         let ct = client.encrypt_input(&ctx, &enc, &server.model, &valid.x[i]);
         let rx = coord.submit_encrypted(sid, ct).expect("submit");
         let outs = rx.recv().unwrap().expect("eval");
-        let (scores, pred) = client.decrypt_scores(&ctx, &enc, &outs);
+        let (scores, pred) = client.decrypt_response(&ctx, &enc, &outs);
         enc_preds.push(pred);
         println!(
             "  sample {i}: scores {:?} -> class {pred} (truth {})",

@@ -6,11 +6,16 @@
 //!
 //! Offline note: the PJRT/XLA executor (the `xla` crate) is not
 //! available in this environment, so the compiled HLO files are treated
-//! as opaque artifacts and the computation itself runs as a vectorized
-//! pure-Rust f32 implementation of the *identical* slot dataflow
-//! (`python/compile/kernels/ref.py` ↔ `HrfModel::forward_slots_plain`).
-//! The manifest stays the loader contract, so swapping the execution
-//! backend back to PJRT is a local change to this file.
+//! as opaque artifacts and the computation itself runs as a pure-Rust
+//! f32 **walk of the compiled HE schedule**
+//! ([`HrfSchedule`](crate::hrf::HrfSchedule)): the same op list the
+//! CKKS executor replays is interpreted over plaintext slot vectors
+//! (rotations become cyclic shifts, plaintext muls become element-wise
+//! products, rescales are no-ops). Since both sides run literally one
+//! program, the python↔rust golden parity and the HE↔plaintext oracle
+//! agreement hold by construction. The manifest stays the loader
+//! contract, so swapping the execution backend back to PJRT is a local
+//! change to this file.
 //!
 //! Batching comes in two flavors, mirroring the HE side:
 //!
@@ -20,7 +25,8 @@
 //!   carrying `plan.groups` observations at `group_span` strides, the
 //!   plaintext oracle of the batched homomorphic evaluation.
 
-use crate::hrf::HrfModel;
+use crate::hrf::schedule::{PlainOperand, ScheduleOp, Segment};
+use crate::hrf::{HrfModel, HrfSchedule};
 use std::path::Path;
 
 /// Static shape configuration of the compiled model.
@@ -33,16 +39,18 @@ pub struct SlotShape {
     pub b: usize,
 }
 
-/// Model parameters converted once into f32 slot vectors.
+/// Model parameters converted once into f32 slot vectors, plus the
+/// compiled schedule the plaintext executor walks.
 pub struct SlotModelParams {
     t: Vec<f32>,
     diags: Vec<Vec<f32>>,
     b: Vec<f32>,
     w: Vec<Vec<f32>>,
-    betas: Vec<f32>,
     coeffs: Vec<f32>,
-    /// Power-of-two span of one sample group (from the HRF plan).
-    group_span: usize,
+    /// Compiled full-capacity folded schedule (B = groups): the
+    /// plaintext executor interprets its Layer/Act segments and reads
+    /// scores straight from the slot-addressed outputs.
+    schedule: HrfSchedule,
     /// Number of sample groups per slot vector.
     groups: usize,
     pub shape: SlotShape,
@@ -81,9 +89,8 @@ impl SlotModelParams {
             diags: model.diag_slots.iter().map(|d| f32v(d)).collect(),
             b: f32v(&model.b_slots),
             w: model.w_slots.iter().map(|w| f32v(w)).collect(),
-            betas: f32v(&model.betas),
             coeffs,
-            group_span: p.reduce_span,
+            schedule: HrfSchedule::compile(model, p.groups, true),
             groups: p.groups,
             shape,
         })
@@ -97,47 +104,119 @@ impl SlotModelParams {
         acc
     }
 
-    /// The full slot dataflow: layers 1–2 over all S slots, then the
-    /// group-local layer-3 reduction. Returns `groups × C` scores.
+    fn operand(&self, op: PlainOperand) -> &[f32] {
+        match op {
+            PlainOperand::Thresholds => &self.t,
+            PlainOperand::Biases => &self.b,
+            PlainOperand::Diag(j) => &self.diags[j],
+            PlainOperand::ClassWeights(c) => &self.w[c],
+        }
+    }
+
+    /// The full slot dataflow as a plaintext walk of the compiled
+    /// schedule: Layer/Act segments are interpreted over f32 vectors
+    /// (`Pack` is skipped — the input arrives pre-packed — and folded
+    /// schedules have no `Extract` segment); scores are read from the
+    /// schedule's slot-addressed outputs. Returns `groups × C` scores.
     fn forward_groups(&self, x_slots: &[f32]) -> Vec<Vec<f32>> {
         let s = self.shape.s;
-        // Layer 1: u = P(x − t)
-        let u: Vec<f32> = x_slots
+        let rotl = |v: &[f32], r: usize| -> Vec<f32> {
+            (0..s).map(|i| v[(i + r) % s]).collect()
+        };
+        let mut regs: Vec<Option<Vec<f32>>> = vec![None; self.schedule.n_regs];
+        // The input arrives pre-packed, so the whole Pack segment
+        // collapses to loading it into the schedule's input register.
+        let r_in = self
+            .schedule
+            .ops
             .iter()
-            .zip(&self.t)
-            .map(|(&x, &t)| self.activation(x - t))
-            .collect();
-        // Layer 2: v = P(Σ_j diag_j ⊙ rot(u, j) + b)
-        let mut lin = vec![0.0f32; s];
-        for (j, diag) in self.diags.iter().enumerate() {
-            for i in 0..s {
-                lin[i] += diag[i] * u[(i + j) % s];
+            .find_map(|(_, op)| match op {
+                ScheduleOp::LoadInput { dst, input: 0 } => Some(*dst),
+                _ => None,
+            })
+            .expect("schedule loads input 0");
+        regs[r_in] = Some(x_slots.to_vec());
+        for (seg, op) in &self.schedule.ops {
+            if matches!(seg, Segment::Pack | Segment::Extract) {
+                continue;
+            }
+            match *op {
+                ScheduleOp::LoadInput { .. } | ScheduleOp::Hoist { .. } => {}
+                ScheduleOp::Rotate { dst, src, step }
+                | ScheduleOp::RotateHoisted { dst, src, step }
+                | ScheduleOp::ExtractScore {
+                    dst,
+                    src,
+                    slot: step,
+                } => {
+                    regs[dst] = Some(rotl(regs[src].as_ref().expect("reg"), step));
+                }
+                ScheduleOp::AddAssign { dst, src } => {
+                    let sv = regs[src].clone().expect("reg");
+                    let d = regs[dst].as_mut().expect("reg");
+                    for (a, b) in d.iter_mut().zip(&sv) {
+                        *a += b;
+                    }
+                }
+                ScheduleOp::SubPlain { reg, operand } => {
+                    let o = self.operand(operand);
+                    let r = regs[reg].as_mut().expect("reg");
+                    for (a, b) in r.iter_mut().zip(o) {
+                        *a -= b;
+                    }
+                }
+                ScheduleOp::AddPlain { reg, operand } => {
+                    let o = self.operand(operand);
+                    let r = regs[reg].as_mut().expect("reg");
+                    for (a, b) in r.iter_mut().zip(o) {
+                        *a += b;
+                    }
+                }
+                ScheduleOp::MulPlainCached { dst, src, operand } => {
+                    let prod: Vec<f32> = regs[src]
+                        .as_ref()
+                        .expect("reg")
+                        .iter()
+                        .zip(self.operand(operand))
+                        .map(|(a, b)| a * b)
+                        .collect();
+                    regs[dst] = Some(prod);
+                }
+                ScheduleOp::AddConst { reg, value } => {
+                    let v = value as f32;
+                    for a in regs[reg].as_mut().expect("reg").iter_mut() {
+                        *a += v;
+                    }
+                }
+                ScheduleOp::Rescale { .. } => {}
+                ScheduleOp::PolyActivation { dst, src } => {
+                    let out: Vec<f32> = regs[src]
+                        .as_ref()
+                        .expect("reg")
+                        .iter()
+                        .map(|&x| self.activation(x))
+                        .collect();
+                    regs[dst] = Some(out);
+                }
+                ScheduleOp::RotateSumGrouped { dst, src, span } => {
+                    let mut acc = regs[src].as_ref().expect("reg").clone();
+                    let mut step = 1usize;
+                    while step < span {
+                        let rot = rotl(&acc, step);
+                        for (a, b) in acc.iter_mut().zip(&rot) {
+                            *a += b;
+                        }
+                        step <<= 1;
+                    }
+                    regs[dst] = Some(acc);
+                }
             }
         }
-        let v: Vec<f32> = lin
-            .iter()
-            .zip(&self.b)
-            .map(|(&x, &b)| self.activation(x + b))
-            .collect();
-        // Layer 3: per-group masked sums.
-        (0..self.groups)
-            .map(|g| {
-                let lo = g * self.group_span;
-                let hi = lo + self.group_span;
-                self.w
-                    .iter()
-                    .zip(&self.betas)
-                    .map(|(w, &beta)| {
-                        w[lo..hi]
-                            .iter()
-                            .zip(&v[lo..hi])
-                            .map(|(&w, &v)| w * v)
-                            .sum::<f32>()
-                            + beta
-                    })
-                    .collect()
-            })
-            .collect()
+        let mut rows = vec![vec![0.0f32; self.shape.c]; self.groups];
+        for o in &self.schedule.outputs {
+            rows[o.sample][o.class] = regs[o.reg].as_ref().expect("output reg")[o.slot];
+        }
+        rows
     }
 }
 
@@ -339,6 +418,37 @@ mod tests {
                     (a - b).abs() < 1e-4,
                     "packed sample {g} deviates: {:?} vs {single:?}",
                     rows[g]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_walk_matches_f64_oracle() {
+        // The schedule-walking executor must agree with the direct
+        // f64 slot math in pack.rs (the golden-parity oracle).
+        let (ds, hm) = hrf(2048);
+        let shape = SlotShape {
+            s: 2048,
+            k: hm.plan.k,
+            c: hm.plan.c,
+            m: 5,
+            b: 8,
+        };
+        let params = SlotModelParams::from_hrf(&hm, shape).unwrap();
+        let n = hm.plan.groups.min(3);
+        let xs: Vec<Vec<f64>> = ds.x.iter().take(n).cloned().collect();
+        let packed = reshuffle_and_pack_group(&hm, &xs);
+        let packed_f32: Vec<f32> = packed.iter().map(|&v| v as f32).collect();
+        let rows = params.forward_groups(&packed_f32);
+        let oracle = hm.forward_slots_plain_groups(&packed);
+        for g in 0..n {
+            for (a, b) in rows[g].iter().zip(&oracle[g]) {
+                assert!(
+                    (*a as f64 - b).abs() < 1e-3,
+                    "group {g}: schedule walk {:?} vs oracle {:?}",
+                    rows[g],
+                    oracle[g]
                 );
             }
         }

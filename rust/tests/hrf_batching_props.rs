@@ -13,9 +13,13 @@
 //! 3. **Batched HE e2e** — a full group of samples packed into one
 //!    ciphertext, evaluated once, matches the single-sample plain slot
 //!    model within 5e-3 for every sample.
-//! 4. **Coordinator wiring** — server-side packing (enc_batch > 1) and
+//! 4. **Coordinator wiring** — server-side packing (enc_batch > 1,
+//!    folded schedule with slot-addressed `EncScores` responses) and
 //!    client-side packed submission both return correct per-sample
 //!    scores through the coordinator.
+//!
+//! Schedule-level properties (bit-identity, key derivation, the exact
+//! C·(B−1) rotation saving) live in `tests/schedule_props.rs`.
 
 use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, KeyGenerator};
@@ -315,7 +319,10 @@ fn coordinator_enc_batching_end_to_end() {
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
         let outs = rx.recv().unwrap().expect("batched eval");
-        let (scores, _) = client.decrypt_scores(&ctx, &enc, &outs);
+        // Folded batched responses carry the score slot; single /
+        // fallback responses use slot 0 — decrypt_response handles
+        // both.
+        let (scores, _) = client.decrypt_response(&ctx, &enc, &outs);
         let expect = server
             .model
             .forward_slots_plain(&reshuffle_and_pack(&server.model, &xs[i]));
@@ -375,7 +382,7 @@ fn coordinator_accepts_client_packed_groups() {
     let ct = client.encrypt_batch(&ctx, &enc, &server.model, &xs);
     let rx = coord.submit_encrypted_packed(sid, ct, b).expect("submit");
     let outs = rx.recv().unwrap().expect("packed eval");
-    let results = client.decrypt_scores_batch(&ctx, &enc, &server.model, &outs, b);
+    let results = client.decrypt_scores_batch(&ctx, &enc, &server.model, &outs.scores, b);
     for (g, ((scores, _), x)) in results.iter().zip(&xs).enumerate() {
         let expect = server
             .model

@@ -284,7 +284,7 @@ fn evicted_session_recovers_with_identical_results() {
     // Baseline evaluation before any eviction.
     let rx = coord.submit_encrypted(sid_a, ct.clone()).expect("submit");
     let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
-    let (scores_before, _) = client_a.decrypt_scores(&ctx, &enc, &outs);
+    let (scores_before, _) = client_a.decrypt_response(&ctx, &enc, &outs);
 
     // Pressure: registering B must evict A's keys (global budget).
     let _sid_b = sessions.register(rlk_b, gk_b);
@@ -301,7 +301,7 @@ fn evicted_session_recovers_with_identical_results() {
         .submit_encrypted(sid_a, ct.clone())
         .expect("submit after re-registration");
     let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
-    let (scores_after, _) = client_a.decrypt_scores(&ctx, &enc, &outs);
+    let (scores_after, _) = client_a.decrypt_response(&ctx, &enc, &outs);
 
     // Same ciphertext + same keys → bit-identical decrypted scores.
     assert_eq!(scores_before.len(), scores_after.len());

@@ -94,7 +94,7 @@ fn encrypted_pipeline_agrees_with_nrf() {
         let ct = p.client.encrypt_input(&p.ctx, &p.enc, &p.server.model, x);
         let rx = coord.submit_encrypted(p.sid, ct).expect("submit");
         let outs = rx.recv().unwrap().expect("eval ok");
-        let (scores, pred) = p.client.decrypt_scores(&p.ctx, &p.enc, &outs);
+        let (scores, pred) = p.client.decrypt_response(&p.ctx, &p.enc, &outs);
         let nrf_scores = p.nf.forward(x);
         // Scores must match the plaintext NRF closely (CKKS noise only).
         for (s, e) in scores.iter().zip(&nrf_scores) {
@@ -203,8 +203,8 @@ fn session_isolation_two_clients() {
     let r2 = coord.submit_encrypted(sid2, ct2).unwrap();
     let o1 = r1.recv().unwrap().unwrap();
     let o2 = r2.recv().unwrap().unwrap();
-    let (s1, _) = p.client.decrypt_scores(&p.ctx, &p.enc, &o1);
-    let (s2, _) = client2.decrypt_scores(&p.ctx, &p.enc, &o2);
+    let (s1, _) = p.client.decrypt_response(&p.ctx, &p.enc, &o1);
+    let (s2, _) = client2.decrypt_response(&p.ctx, &p.enc, &o2);
     let expect = {
         let slots = cryptotree::hrf::client::reshuffle_and_pack(&p.server.model, x);
         p.server.model.forward_slots_plain(&slots)
@@ -216,7 +216,7 @@ fn session_isolation_two_clients() {
     }
     // Cross-decryption must NOT work: decrypting client2's result with
     // client1's key yields garbage.
-    let (cross, _) = p.client.decrypt_scores(&p.ctx, &p.enc, &o2);
+    let (cross, _) = p.client.decrypt_response(&p.ctx, &p.enc, &o2);
     let cross_err: f64 = cross
         .iter()
         .zip(&expect)

@@ -1,0 +1,340 @@
+//! Properties of the compiled HE op schedule (ISSUE 3):
+//!
+//! (a) **Bit-identity** — executing the compiled schedule produces
+//!     ciphertexts bit-identical to the retained hand-written
+//!     reference path for B ∈ {1, 2, max} on random models (the
+//!     folded schedule's per-class outputs equal the reference
+//!     pack+eval outputs limb for limb).
+//! (b) **Key sufficiency** — Galois keys generated from the
+//!     schedule-derived `eval_key_requirements(b)` (and nothing more)
+//!     run the folded batched evaluation without a rotation miss and
+//!     decrypt correctly.
+//! (c) **The fold saves exactly C·(B−1) rotations** — measured by the
+//!     evaluator's counters against the legacy eval+extract path, and
+//!     predicted by the dry-run interpreter.
+//!
+//! Plus: the dry-run interpreter's per-layer counts equal measured
+//! execution exactly, and `poly_op_counts` mirrors
+//! `eval_poly_power_basis`'s measured counters.
+
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::hrf::client::{reshuffle_and_pack, HrfClient};
+use cryptotree::hrf::schedule::poly_op_counts;
+use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::nrf::activation::chebyshev_fit_tanh;
+use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
+use cryptotree::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+fn synth_forest(k: usize, l: usize, c: usize, d: usize, rng: &mut Xoshiro256pp) -> NeuralForest {
+    let trees = (0..l)
+        .map(|_| NeuralTree {
+            tau: (0..k - 1).map(|_| rng.next_index(d)).collect(),
+            t: (0..k - 1).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            v: (0..k)
+                .map(|_| (0..k - 1).map(|_| rng.uniform(-0.25, 0.25)).collect())
+                .collect(),
+            b: (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            w: (0..c)
+                .map(|_| (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect())
+                .collect(),
+            beta: (0..c).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+            real_leaves: k,
+            n_classes: c,
+        })
+        .collect();
+    NeuralForest {
+        trees,
+        alphas: (0..l).map(|_| rng.uniform(0.1, 1.0)).collect(),
+        k,
+        n_classes: c,
+        activation: Activation::Poly {
+            coeffs: vec![0.0, 1.0], // identity: fits the depth-4 ring
+        },
+    }
+}
+
+fn rand_x(d: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..d).map(|_| rng.uniform(0.0, 1.0)).collect()
+}
+
+fn ct_bits_equal(a: &Ciphertext, b: &Ciphertext) -> bool {
+    a.level == b.level
+        && a.scale.to_bits() == b.scale.to_bits()
+        && a.c0.limbs == b.c0.limbs
+        && a.c1.limbs == b.c1.limbs
+}
+
+struct World {
+    ctx: cryptotree::ckks::rns::ContextRef,
+    enc: Encoder,
+    client: HrfClient,
+    server: HrfServer,
+    rlk: cryptotree::ckks::keys::RelinKey,
+    gk: cryptotree::ckks::keys::GaloisKeys,
+    d: usize,
+}
+
+/// Cheap depth-4 world with full-batch legacy key coverage.
+fn world(seed: u64) -> World {
+    let mut rng = Xoshiro256pp::new(seed);
+    let d = 8;
+    let nf = synth_forest(4, 4, 2, d, &mut rng);
+    let params = Arc::new(CkksParams::build("sched-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let mut kg = KeyGenerator::new(&ctx, seed + 1);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    // Legacy superset: covers eval + placement + extraction for every
+    // batch size these tests use, so both the reference and the
+    // compiled paths run under one session (capped at 8 to keep
+    // keygen fast on the 64-group plan).
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(8.min(plan.groups)));
+    let client = HrfClient::new(Encryptor::new(pk, seed + 2), Decryptor::new(kg.secret_key()));
+    World {
+        ctx,
+        enc,
+        client,
+        server: HrfServer::new(hm),
+        rlk,
+        gk,
+        d,
+    }
+}
+
+/// (a) Folded schedule outputs are bit-identical to the reference
+/// pack+eval path for B ∈ {1, 2, max-capped}.
+#[test]
+fn compiled_schedule_bit_identical_to_reference() {
+    let mut rng = Xoshiro256pp::new(7001);
+    let mut w = world(7100);
+    let plan = w.server.model.plan;
+    let b_max = plan.groups.min(6); // cap runtime; still multi-chunk
+    for b in [1usize, 2, b_max] {
+        let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(w.d, &mut rng)).collect();
+        let cts: Vec<Ciphertext> = xs
+            .iter()
+            .map(|x| w.client.encrypt_input(&w.ctx, &w.enc, &w.server.model, x))
+            .collect();
+        let mut ev = Evaluator::new(w.ctx.clone());
+        let (folded, counts) =
+            w.server
+                .eval_batch_folded(&mut ev, &w.enc, &cts, &w.rlk, &w.gk);
+        // Reference: hand-written pack + eval (no extraction).
+        let mut ev_ref = Evaluator::new(w.ctx.clone());
+        let packed = if b == 1 {
+            cts[0].clone()
+        } else {
+            w.server.pack_group(&mut ev_ref, &cts, &w.gk)
+        };
+        let (reference, _) = w
+            .server
+            .eval_reference(&mut ev_ref, &w.enc, &packed, &w.rlk, &w.gk);
+        assert_eq!(folded.len(), reference.len());
+        for (f, r) in folded.iter().zip(&reference) {
+            assert!(
+                ct_bits_equal(f, r),
+                "B={b}: compiled schedule deviates from reference bits"
+            );
+        }
+        // The executor's measured counts equal the dry-run prediction.
+        assert_eq!(
+            counts,
+            w.server.predicted_counts(b, true),
+            "B={b}: dry-run prediction deviates from measured execution"
+        );
+        // And every sample decrypts to its own correct score.
+        for (g, x) in xs.iter().enumerate() {
+            let (scores, _) =
+                w.client
+                    .decrypt_scores_at(&w.ctx, &w.enc, &folded, plan.score_slot(g));
+            let expect = w
+                .server
+                .model
+                .forward_slots_plain(&reshuffle_and_pack(&w.server.model, x));
+            for (s, e) in scores.iter().zip(&expect) {
+                assert!((s - e).abs() < 5e-3, "B={b} sample {g}: {scores:?} vs {expect:?}");
+            }
+        }
+    }
+}
+
+/// (b) Keys generated from exactly the schedule-derived requirement
+/// set suffice: no rotation miss (a miss panics inside the
+/// evaluator), correct per-sample results.
+#[test]
+fn schedule_derived_key_requirements_suffice() {
+    let mut rng = Xoshiro256pp::new(7002);
+    let d = 8;
+    let nf = synth_forest(4, 3, 2, d, &mut rng);
+    let params = Arc::new(CkksParams::build("schedkeys-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let server = HrfServer::new(hm);
+    let b = plan.groups.min(4);
+    assert!(b >= 2);
+
+    let mut kg = KeyGenerator::new(&ctx, 7003);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    // EXACTLY the derived set — no extraction steps, nothing extra.
+    let req = server.eval_key_requirements(b);
+    let gk = kg.gen_galois_keys(&ctx, &req);
+    assert!(server.can_batch(&gk, b), "requirements must satisfy can_batch");
+    // The derived set is a strict subset of the legacy formula for
+    // B > 1 (extraction steps dropped).
+    let legacy = plan.rotations_needed_batched(b);
+    assert!(req.iter().all(|r| legacy.contains(r)));
+    assert!(
+        req.len() < legacy.len(),
+        "folded requirements should drop extraction steps"
+    );
+
+    let mut client = HrfClient::new(Encryptor::new(pk, 7004), Decryptor::new(kg.secret_key()));
+    let mut ev = Evaluator::new(ctx.clone());
+    let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(d, &mut rng)).collect();
+    let cts: Vec<Ciphertext> = xs
+        .iter()
+        .map(|x| client.encrypt_input(&ctx, &enc, &server.model, x))
+        .collect();
+    let (outs, _) = server.eval_batch_folded(&mut ev, &enc, &cts, &rlk, &gk);
+    for (g, x) in xs.iter().enumerate() {
+        let (scores, _) = client.decrypt_scores_at(&ctx, &enc, &outs, plan.score_slot(g));
+        let expect = server
+            .model
+            .forward_slots_plain(&reshuffle_and_pack(&server.model, x));
+        for (s, e) in scores.iter().zip(&expect) {
+            assert!((s - e).abs() < 5e-3, "sample {g}: {scores:?} vs {expect:?}");
+        }
+    }
+}
+
+/// (c) Measured rotation counts: the folded schedule executes exactly
+/// C·(B−1) fewer rotations than the legacy eval+extract path, at
+/// equal pack/eval cost.
+#[test]
+fn folded_schedule_saves_c_times_b_minus_1_rotations() {
+    let mut rng = Xoshiro256pp::new(7005);
+    let mut w = world(7200);
+    let plan = w.server.model.plan;
+    for b in [2usize, 3, plan.groups.min(5)] {
+        let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(w.d, &mut rng)).collect();
+        let cts: Vec<Ciphertext> = xs
+            .iter()
+            .map(|x| w.client.encrypt_input(&w.ctx, &w.enc, &w.server.model, x))
+            .collect();
+
+        // Legacy eval+extract (hand-written reference).
+        let mut ev_legacy = Evaluator::new(w.ctx.clone());
+        let _ = w
+            .server
+            .eval_batch_reference(&mut ev_legacy, &w.enc, &cts, &w.rlk, &w.gk);
+        let legacy_rot = ev_legacy.counts.rotate;
+
+        // Folded compiled schedule.
+        let mut ev_folded = Evaluator::new(w.ctx.clone());
+        let _ = w
+            .server
+            .eval_batch_folded(&mut ev_folded, &w.enc, &cts, &w.rlk, &w.gk);
+        let folded_rot = ev_folded.counts.rotate;
+
+        let saving = (plan.c * (b - 1)) as u64;
+        assert_eq!(
+            legacy_rot - folded_rot,
+            saving,
+            "B={b}: folded must save exactly C·(B−1) rotations"
+        );
+
+        // The unfolded schedule (legacy slot-0 contract) matches the
+        // reference count exactly — the fold, not the compilation, is
+        // what saves.
+        let mut ev_unfolded = Evaluator::new(w.ctx.clone());
+        let _ = w
+            .server
+            .eval_batch(&mut ev_unfolded, &w.enc, &cts, &w.rlk, &w.gk);
+        assert_eq!(ev_unfolded.counts.rotate, legacy_rot, "B={b}: unfolded count");
+
+        // Dry-run predictions agree with both measurements.
+        assert_eq!(
+            w.server.predicted_counts(b, true).total().rotate,
+            folded_rot,
+            "B={b}: folded prediction"
+        );
+        assert_eq!(
+            w.server.predicted_counts(b, false).total().rotate,
+            legacy_rot,
+            "B={b}: unfolded prediction"
+        );
+    }
+}
+
+/// The unfolded schedule preserves the slot-0 per-sample contract
+/// (its hoisted extraction is numerically equivalent to the legacy
+/// plain rotations).
+#[test]
+fn unfolded_schedule_keeps_slot0_contract() {
+    let mut rng = Xoshiro256pp::new(7006);
+    let mut w = world(7300);
+    let b = w.server.model.plan.groups.min(3);
+    let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(w.d, &mut rng)).collect();
+    let cts: Vec<Ciphertext> = xs
+        .iter()
+        .map(|x| w.client.encrypt_input(&w.ctx, &w.enc, &w.server.model, x))
+        .collect();
+    let mut ev = Evaluator::new(w.ctx.clone());
+    let (per_sample, _) = w.server.eval_batch(&mut ev, &w.enc, &cts, &w.rlk, &w.gk);
+    assert_eq!(per_sample.len(), b);
+    for (g, (outs, x)) in per_sample.iter().zip(&xs).enumerate() {
+        let (scores, _) = w.client.decrypt_scores(&w.ctx, &w.enc, outs);
+        let expect = w
+            .server
+            .model
+            .forward_slots_plain(&reshuffle_and_pack(&w.server.model, x));
+        for (s, e) in scores.iter().zip(&expect) {
+            assert!((s - e).abs() < 5e-3, "sample {g}: {scores:?} vs {expect:?}");
+        }
+    }
+}
+
+/// `poly_op_counts` mirrors the evaluator's measured counters for a
+/// spread of coefficient shapes (sparse, dense, near-zero tails).
+#[test]
+fn poly_op_counts_match_measured() {
+    let params = CkksParams::fast();
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, 7007);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let mut encryptor = Encryptor::new(pk, 7008);
+    let mut ev = Evaluator::new(ctx.clone());
+    let n = enc.slots();
+    let mut rng = Xoshiro256pp::new(7009);
+    let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let ct = encryptor.encrypt_slots(&ctx, &enc, &x);
+    let cases: Vec<Vec<f64>> = vec![
+        vec![0.0, 1.0],
+        vec![0.5, -0.3, 0.2],
+        vec![0.1, 0.7, -0.2, 0.05],
+        vec![0.1, 0.7, -0.2, 0.05, -0.3],
+        chebyshev_fit_tanh(3.0, 4),
+        vec![0.0, 0.25, 0.0, 0.125, 0.0, 0.0625], // odd, deg 5
+    ];
+    for coeffs in cases {
+        let before = ev.counts;
+        let _ = ev.eval_poly_power_basis(&enc, &ct, &coeffs, &rlk);
+        let measured = ev.counts.diff(&before);
+        assert_eq!(
+            measured,
+            poly_op_counts(&coeffs),
+            "dry-run mirror deviates for coeffs {coeffs:?}"
+        );
+    }
+}
