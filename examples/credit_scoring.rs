@@ -11,7 +11,7 @@ use cryptotree::data::credit;
 use cryptotree::forest::metrics::Metrics;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::{finetune_last_layer, FinetuneConfig, NeuralForest};
 
@@ -73,7 +73,9 @@ fn main() {
         let x = &valid.x[idx];
         let ct = applicant.encrypt_input(&ctx, &enc, &server.model, x);
         let t0 = std::time::Instant::now();
-        let (outs, _) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+        let outs = server
+            .execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
+            .into_class_scores();
         let dt = t0.elapsed();
         let (scores, pred) = applicant.decrypt_scores(&ctx, &enc, &outs);
         let plain = nf.predict(x);

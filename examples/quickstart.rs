@@ -9,7 +9,7 @@ use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, Key
 use cryptotree::data::adult;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
 
@@ -53,8 +53,16 @@ fn main() {
     let x = &data.x[0];
     let ct = client.encrypt_input(&ctx, &encoder, &server.model, x);
     let t0 = std::time::Instant::now();
-    let (score_cts, ops) = server.eval(&mut evaluator, &encoder, &ct, &relin_key, &galois_keys);
+    let ex = server.execute(
+        &mut evaluator,
+        &encoder,
+        &EncRequest::single(&ct),
+        &relin_key,
+        &galois_keys,
+    );
     let elapsed = t0.elapsed();
+    let ops = ex.counts;
+    let score_cts = ex.into_class_scores();
     let (scores, predicted) = client.decrypt_scores(&ctx, &encoder, &score_cts);
 
     println!("encrypted inference took {elapsed:?}");

@@ -1,18 +1,25 @@
 //! Debug tool: pretty-print compiled HRF schedules with their
-//! predicted op counts and derived Galois-key requirements.
+//! predicted op counts and derived Galois-key requirements, then show
+//! what the pass pipeline does to them — per backend.
 //!
 //!   cargo run --release --example schedule_dump [B]
 //!
 //! Prints the single-sample schedule, then the folded and unfolded
 //! B-sample schedules side by side — the rotation delta between the
-//! last two is the extraction fold's C·(B−1) saving. No HE execution:
-//! everything here is the compiler + the dry-run interpreter.
+//! last two is the extraction fold's C·(B−1) saving. A final section
+//! runs the standard pass pipeline (FuseMulRescale) and prints the
+//! dry-run (CountingBackend) counts before/after plus an f32
+//! SlotBackend execution of both schedules proving the pass is
+//! numerically invisible. No HE execution: everything here is the
+//! compiler, the pass pipeline and two cheap engine backends.
 
 use cryptotree::data::adult;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::reshuffle_and_pack;
 use cryptotree::hrf::{HrfModel, HrfSchedule};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
+use cryptotree::runtime::{PassPipeline, SlotModelParams, SlotShape};
 
 fn print_counts(label: &str, sched: &HrfSchedule) {
     let c = sched.predicted_counts();
@@ -26,14 +33,22 @@ fn print_counts(label: &str, sched: &HrfSchedule) {
         ("extract", c.extract),
     ] {
         println!(
-            "  {seg:<12} add {:>3}  add_pt {:>3}  mul {:>3}  mul_pt {:>3}  rot {:>3}  rescale {:>3}  relin {:>3}",
-            oc.add, oc.add_plain, oc.mul, oc.mul_plain, oc.rotate, oc.rescale, oc.relin
+            "  {seg:<12} add {:>3}  add_pt {:>3}  mul {:>3}  mul_pt {:>3}  rot {:>3}  rescale {:>3}  relin {:>3}  fused {:>3}",
+            oc.add, oc.add_plain, oc.mul, oc.mul_plain, oc.rotate, oc.rescale, oc.relin, oc.fused_mul_rescale
         );
     }
     let t = c.total();
     println!(
-        "  {:<12} add {:>3}  add_pt {:>3}  mul {:>3}  mul_pt {:>3}  rot {:>3}  rescale {:>3}  relin {:>3}",
-        "TOTAL", t.add, t.add_plain, t.mul, t.mul_plain, t.rotate, t.rescale, t.relin
+        "  {:<12} add {:>3}  add_pt {:>3}  mul {:>3}  mul_pt {:>3}  rot {:>3}  rescale {:>3}  relin {:>3}  fused {:>3}",
+        "TOTAL",
+        t.add,
+        t.add_plain,
+        t.mul,
+        t.mul_plain,
+        t.rotate,
+        t.rescale,
+        t.relin,
+        t.fused_mul_rescale
     );
     let steps: Vec<usize> = sched.rotation_steps().into_iter().collect();
     println!("  galois steps ({}): {steps:?}\n", steps.len());
@@ -91,4 +106,43 @@ fn main() {
         p.c * (b - 1)
     );
     assert_eq!(saved as usize, p.c * (b - 1));
+
+    // ---- Pass pipeline: per-backend counts before/after ------------
+    let pipeline = PassPipeline::standard();
+    println!("\n== pass pipeline {:?} ==\n", pipeline.names());
+    let optimized = folded.clone().optimize(pipeline.passes());
+    print_counts(&format!("B={b} folded, before passes"), &folded);
+    print_counts(&format!("B={b} folded, after passes"), &optimized);
+    println!(
+        "fusion: {} ops -> {} ops ({} MulPlainCached+Rescale pairs fused)",
+        folded.ops.len(),
+        optimized.ops.len(),
+        folded.ops.len() - optimized.ops.len()
+    );
+
+    // SlotBackend: both schedules through the f32 engine — the pass
+    // must be numerically invisible on every backend.
+    let shape = SlotShape {
+        s: p.slots,
+        k: p.k,
+        c: p.c,
+        m: model.act_coeffs.len(),
+        b: 8,
+    };
+    let slot_params = SlotModelParams::from_hrf(&model, shape).expect("slot params");
+    let singles: Vec<Vec<f32>> = (0..b)
+        .map(|g| {
+            reshuffle_and_pack(&model, &ds.x[g])
+                .iter()
+                .map(|&v| v as f32)
+                .collect()
+        })
+        .collect();
+    let rows_raw = slot_params.run_schedule(&folded, &singles);
+    let rows_opt = slot_params.run_schedule(&optimized, &singles);
+    assert_eq!(rows_raw, rows_opt, "pass changed f32 results");
+    println!("slot backend: raw and optimized schedules agree bit-for-bit; scores:");
+    for (g, row) in rows_raw.iter().enumerate() {
+        println!("  sample {g}: {row:?}");
+    }
 }

@@ -18,7 +18,7 @@ use cryptotree::data::adult;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
 use cryptotree::hrf::cryptonet::{encrypt_batch_per_feature, eval_mlp, MlpWeights};
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
 
@@ -54,7 +54,7 @@ fn main() {
     let mut ev = Evaluator::new(ctx.clone());
     let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[0]);
     let t_hrf = bench("hrf single", 1, 5, || {
-        server.eval(&mut ev, &enc, &ct, &rlk, &gk)
+        server.execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
     });
 
     // ---------------- CryptoNet-style HE-MLP -----------------------

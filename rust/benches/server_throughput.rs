@@ -18,7 +18,7 @@ use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, Su
 use cryptotree::data::adult;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::{reshuffle_and_pack_group, HrfClient};
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
 use cryptotree::runtime::{SlotModel, SlotModelParams, SlotShape};
@@ -71,7 +71,7 @@ fn main() {
         let ct = client.encrypt_batch(&ctx, &enc, &server.model, &xs);
         let mut ev = Evaluator::new(ctx.clone());
         let t = bench(&format!("hrf eval B={b}"), 1, 3, || {
-            server.eval(&mut ev, &enc, &ct, &rlk, &gk)
+            server.execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
         });
         rows.push(vec![
             format!("{b}"),

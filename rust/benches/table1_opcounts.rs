@@ -12,6 +12,13 @@
 //! A second section measures the **extraction fold**: for B packed
 //! samples the folded schedule executes exactly C·(B−1) fewer
 //! rotations than the legacy eval+extract path (`eval_batch_reference`).
+//!
+//! A third section measures the **FuseMulRescale schedule pass**: the
+//! standard pipeline fuses layer 3's C adjacent MulPlainCached+Rescale
+//! pairs into single fused ops — the schedule shrinks by C ops and the
+//! stand-alone `mul_plain` / `rescale` counters drop by C each (the
+//! pairs re-book as `fused_mul_rescale`), while execution stays
+//! bit-identical to the unoptimized schedule.
 
 use cryptotree::bench_harness::print_metric_table;
 use cryptotree::ckks::evaluator::Evaluator;
@@ -21,7 +28,8 @@ use cryptotree::data::adult;
 use cryptotree::forest::tree::TreeConfig;
 use cryptotree::forest::{RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
-use cryptotree::hrf::{HrfModel, HrfServer, LayerCounts};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfSchedule, HrfServer, LayerCounts};
+use cryptotree::runtime::PassPipeline;
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::NeuralForest;
 
@@ -92,7 +100,9 @@ fn measure(k: usize, l: usize) -> (LayerCounts, LayerCounts) {
     let (server, mut s) = build_server(k, l, k as u64);
     let mut ev = Evaluator::new(s.ctx.clone());
     let ct = s.client.encrypt_input(&s.ctx, &s.enc, &server.model, &s.xs[0]);
-    let (_, counts) = server.eval(&mut ev, &s.enc, &ct, &s.rlk, &s.gk);
+    let counts = server
+        .execute(&mut ev, &s.enc, &EncRequest::single(&ct), &s.rlk, &s.gk)
+        .counts;
     (server.predicted_counts(1, true), counts)
 }
 
@@ -152,7 +162,7 @@ fn main() {
         let _ = server.eval_batch_reference(&mut ev_legacy, &s.enc, &cts, &s.rlk, &s.gk);
         let legacy_rot = ev_legacy.counts.rotate;
         let mut ev_folded = Evaluator::new(s.ctx.clone());
-        let _ = server.eval_batch_folded(&mut ev_folded, &s.enc, &cts, &s.rlk, &s.gk);
+        let _ = server.execute(&mut ev_folded, &s.enc, &EncRequest::group(&cts), &s.rlk, &s.gk);
         let folded_rot = ev_folded.counts.rotate;
         let saving = (plan.c * (b - 1)) as u64;
         assert_eq!(
@@ -182,4 +192,79 @@ fn main() {
     );
     println!("\nFolded responses are slot-addressed (EncScores.slot = g·reduce_span);");
     println!("the extraction rotation is composed into the read, not executed.");
+
+    // ---- FuseMulRescale pass: op-count delta + bit-identity --------
+    let server_raw = HrfServer::with_passes(server.model.clone(), PassPipeline::empty());
+    let mut rows = Vec::new();
+    for b in [1usize, 4] {
+        let raw = HrfSchedule::compile(&server.model, b, true);
+        let fused = raw.clone().optimize(PassPipeline::standard().passes());
+        let rc = raw.predicted_counts().total();
+        let fc = fused.predicted_counts().total();
+        // The pass fuses exactly layer 3's C pairs: schedule shrinks
+        // by C ops, mul_plain and rescale each drop by C, and the
+        // semantic aggregates are untouched.
+        assert_eq!(raw.ops.len() - fused.ops.len(), plan.c);
+        assert_eq!(fc.fused_mul_rescale, plan.c as u64);
+        assert_eq!(rc.mul_plain - fc.mul_plain, plan.c as u64);
+        assert_eq!(rc.rescale - fc.rescale, plan.c as u64);
+        assert_eq!(rc.multiplications(), fc.multiplications());
+        assert_eq!(rc.rescales(), fc.rescales());
+        assert_eq!(rc.rotate, fc.rotate);
+        rows.push(vec![
+            format!("{b}"),
+            format!("{}", raw.ops.len()),
+            format!("{}", fused.ops.len()),
+            format!("{} / {}", rc.mul_plain, fc.mul_plain),
+            format!("{} / {}", rc.rescale, fc.rescale),
+            format!("{}", fc.fused_mul_rescale),
+        ]);
+    }
+    print_metric_table(
+        &format!("FuseMulRescale pass (C={} fused pairs per schedule)", plan.c),
+        &[
+            "B",
+            "ops raw",
+            "ops fused",
+            "mul_pt raw/fused",
+            "rescale raw/fused",
+            "fused ops",
+        ],
+        &rows,
+    );
+
+    // Measured bit-identity: the default (fused) server and a no-pass
+    // server produce identical ciphertext bits for the same input.
+    let ct = s.client.encrypt_input(&s.ctx, &s.enc, &server.model, &s.xs[0]);
+    let mut ev_a = Evaluator::new(s.ctx.clone());
+    let outs_a = server
+        .execute(&mut ev_a, &s.enc, &EncRequest::single(&ct), &s.rlk, &s.gk)
+        .into_class_scores();
+    let mut ev_b = Evaluator::new(s.ctx.clone());
+    let outs_b = server_raw
+        .execute(&mut ev_b, &s.enc, &EncRequest::single(&ct), &s.rlk, &s.gk)
+        .into_class_scores();
+    for (a, b) in outs_a.iter().zip(&outs_b) {
+        assert_eq!(a.level, b.level);
+        assert_eq!(a.scale.to_bits(), b.scale.to_bits());
+        assert_eq!(a.c0.limbs, b.c0.limbs, "fusion changed c0 bits");
+        assert_eq!(a.c1.limbs, b.c1.limbs, "fusion changed c1 bits");
+    }
+    assert_eq!(
+        ev_a.counts.fused_mul_rescale,
+        plan.c as u64,
+        "fused execution books C fused ops"
+    );
+    assert_eq!(ev_b.counts.fused_mul_rescale, 0);
+    assert_eq!(ev_a.counts.multiplications(), ev_b.counts.multiplications());
+    println!(
+        "\nFuseMulRescale: bit-identical execution; {} standalone rescales + {} standalone",
+        ev_a.counts.rescale, ev_a.counts.mul_plain
+    );
+    println!(
+        "mul_plains on the fused path vs {} + {} unfused (Δ = C = {} re-booked as fused ops).",
+        ev_b.counts.rescale,
+        ev_b.counts.mul_plain,
+        plan.c
+    );
 }

@@ -15,7 +15,7 @@ use cryptotree::forest::linear::LogRegConfig;
 use cryptotree::forest::metrics::{agreement, Metrics};
 use cryptotree::forest::{LogisticRegression, RandomForest, RandomForestConfig};
 use cryptotree::hrf::client::HrfClient;
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
 use cryptotree::nrf::activation::{chebyshev_fit_tanh, Activation};
 use cryptotree::nrf::{finetune_last_layer, FinetuneConfig, NeuralForest};
 
@@ -67,7 +67,9 @@ fn main() {
     for i in 0..n_hrf {
         let x = &valid.x[i];
         let ct = client.encrypt_input(&ctx, &enc, &server.model, x);
-        let (outs, _) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+        let outs = server
+            .execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
+            .into_class_scores();
         let (_, pred) = client.decrypt_scores(&ctx, &enc, &outs);
         hrf_pred.push(pred);
         nrf_pred.push(nf.predict(x));

@@ -22,6 +22,11 @@ pub struct OpCounts {
     pub rotate: u64,
     pub rescale: u64,
     pub relin: u64,
+    /// Fused plaintext-multiply-and-rescale ops
+    /// ([`Evaluator::mul_plain_rescale`], emitted by the
+    /// `FuseMulRescale` schedule pass): one kernel invocation that is
+    /// counted here *instead of* in `mul_plain` + `rescale`.
+    pub fused_mul_rescale: u64,
 }
 
 impl OpCounts {
@@ -34,6 +39,7 @@ impl OpCounts {
             rotate: self.rotate - earlier.rotate,
             rescale: self.rescale - earlier.rescale,
             relin: self.relin - earlier.relin,
+            fused_mul_rescale: self.fused_mul_rescale - earlier.fused_mul_rescale,
         }
     }
 
@@ -42,9 +48,16 @@ impl OpCounts {
         self.add + self.add_plain
     }
 
-    /// Multiplications as the paper counts them (ct·ct and ct·pt).
+    /// Multiplications as the paper counts them (ct·ct and ct·pt; a
+    /// fused multiply-rescale contains exactly one ct·pt multiply).
     pub fn multiplications(&self) -> u64 {
-        self.mul + self.mul_plain
+        self.mul + self.mul_plain + self.fused_mul_rescale
+    }
+
+    /// Total modulus switches (stand-alone rescales plus the one
+    /// inside each fused multiply-rescale).
+    pub fn rescales(&self) -> u64 {
+        self.rescale + self.fused_mul_rescale
     }
 }
 
@@ -60,6 +73,7 @@ impl std::ops::AddAssign for OpCounts {
         self.rotate += o.rotate;
         self.rescale += o.rescale;
         self.relin += o.relin;
+        self.fused_mul_rescale += o.fused_mul_rescale;
     }
 }
 
@@ -251,10 +265,18 @@ impl Evaluator {
         self.counts.rescale += 1;
     }
 
-    /// Multiply-and-rescale convenience.
+    /// Fused plaintext-multiply-and-rescale: one invocation covering
+    /// both primitives (the execution target of the `FuseMulRescale`
+    /// schedule pass). The limb math is *exactly* `mul_plain` followed
+    /// by `rescale`, so fused and unfused executions are bit-identical;
+    /// only the accounting differs — the pair is re-booked as a single
+    /// `fused_mul_rescale` op instead of `mul_plain` + `rescale`.
     pub fn mul_plain_rescale(&mut self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
         let mut r = self.mul_plain(a, pt);
         self.rescale(&mut r);
+        self.counts.mul_plain -= 1;
+        self.counts.rescale -= 1;
+        self.counts.fused_mul_rescale += 1;
         r
     }
 

@@ -27,8 +27,9 @@
 //! drives the encrypted path: single-sample requests from one session
 //! accumulate until the current target is held (or the oldest times
 //! out), then flush as **one packed group** — the worker runs the
-//! compiled **folded** schedule (`HrfServer::eval_batch_folded`): one
-//! evaluation scores the whole group and the per-sample extraction
+//! compiled **folded** schedule through the schedule engine
+//! (`HrfServer::execute` with `EncRequest::group`): one evaluation
+//! scores the whole group and the per-sample extraction
 //! rotations are folded into the layer-3 reduction, so each caller's
 //! [`EncScores`] response carries the shared per-class ciphertexts
 //! plus the slot holding *its* score (`plan.score_slot(g)`) — saving
@@ -50,7 +51,7 @@ use super::session::SessionManager;
 use crate::ckks::rns::ContextRef;
 use crate::ckks::{Ciphertext, Encoder, Evaluator};
 use crate::hrf::client::reshuffle_and_pack;
-use crate::hrf::{EncScores, HrfServer};
+use crate::hrf::{EncRequest, EncScores, HrfServer};
 use crate::keycache::CacheState;
 use crate::runtime::{SlotModel, SlotModelParams};
 use std::collections::HashMap;
@@ -122,6 +123,23 @@ pub enum SubmitError {
     /// Packed batch larger than the plan's group capacity.
     BatchTooLarge,
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let msg = match self {
+            SubmitError::Busy => "ingress queue full (backpressure); retry after shedding load",
+            SubmitError::Closed => "coordinator is shutting down",
+            SubmitError::NoSession => "unknown session id; register evaluation keys first",
+            SubmitError::KeysEvicted => {
+                "session keys evicted from the key cache; re-register (same id) and resubmit"
+            }
+            SubmitError::BatchTooLarge => "packed batch exceeds the plan's group capacity",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Encrypted-path response: per-class score ciphertexts plus the slot
 /// carrying this request's score (see [`EncScores`]; decrypt with
@@ -249,10 +267,10 @@ impl Coordinator {
                                 } => {
                                     let result = match sessions.get_untracked(session_id) {
                                         Some(sess) => {
-                                            let (outs, _) = server.eval(
+                                            let ex = server.execute(
                                                 &mut ev,
                                                 &enc,
-                                                &ct,
+                                                &EncRequest::single(&ct),
                                                 &sess.relin,
                                                 &sess.galois,
                                             );
@@ -262,7 +280,7 @@ impl Coordinator {
                                             // unpacks with
                                             // decrypt_scores_batch.
                                             Ok(EncScores {
-                                                scores: outs,
+                                                scores: ex.into_class_scores(),
                                                 slot: 0,
                                             })
                                         }
@@ -788,9 +806,9 @@ impl Drop for Coordinator {
 /// chunks the session's keys cover** (the adaptive target can exceed
 /// the key set a client generated for the configured `enc_batch`);
 /// nonuniform or uncoverable work degrades to per-request evaluation.
-/// Each packed chunk runs the folded schedule — no extraction
-/// rotations; caller `g` receives the shared per-class ciphertexts
-/// and its score slot.
+/// Each packed chunk is one `HrfServer::execute` of the folded
+/// schedule — no extraction rotations; caller `g` receives the shared
+/// per-class ciphertexts and its score slot.
 fn run_group(
     server: &HrfServer,
     sessions: &SessionManager,
@@ -853,33 +871,26 @@ fn run_group(
             .into_iter()
             .map(|(ct, enqueued, resp)| (*ct, (enqueued, resp)))
             .unzip();
-        let plan = server.model.plan;
         for (chunk_cts, chunk_meta) in cts.chunks(max_b).zip(meta.chunks(max_b)) {
-            if chunk_cts.len() == 1 {
-                let (outs, _) =
-                    server.eval(ev, enc, &chunk_cts[0], &sess.relin, &sess.galois);
-                let (enqueued, resp) = chunk_meta[0].clone();
-                complete(metrics, enqueued, resp, EncScores { scores: outs, slot: 0 });
-                continue;
-            }
-            let (outs, _) =
-                server.eval_batch_folded(ev, enc, chunk_cts, &sess.relin, &sess.galois);
-            for (g, (enqueued, resp)) in chunk_meta.iter().cloned().enumerate() {
-                complete(
-                    metrics,
-                    enqueued,
-                    resp,
-                    EncScores {
-                        scores: outs.clone(),
-                        slot: plan.score_slot(g),
-                    },
-                );
+            // One engine execution per chunk (a 1-chunk normalizes to
+            // the single-sample folded schedule); each caller's
+            // response carries the shared per-class ciphertexts plus
+            // its own score slot.
+            let responses = server
+                .execute(ev, enc, &EncRequest::group(chunk_cts), &sess.relin, &sess.galois)
+                .into_responses();
+            for ((enqueued, resp), r) in chunk_meta.iter().cloned().zip(responses) {
+                complete(metrics, enqueued, resp, r);
             }
         }
     } else {
         for (ct, enqueued, resp) in items {
-            let (outs, _) = server.eval(ev, enc, &ct, &sess.relin, &sess.galois);
-            complete(metrics, enqueued, resp, EncScores { scores: outs, slot: 0 });
+            let r = server
+                .execute(ev, enc, &EncRequest::single(&ct), &sess.relin, &sess.galois)
+                .into_responses()
+                .pop()
+                .expect("single-sample execution yields one response");
+            complete(metrics, enqueued, resp, r);
         }
     }
 }

@@ -9,16 +9,28 @@
 //!   matrices (Algorithm 1's operands), output masks and biases.
 //! * [`schedule`] — the compiled HE-program IR: `HrfPlan` → explicit
 //!   op schedule per batch size, with the B>1 extraction rotations
-//!   folded into the layer-3 reduction; Galois-key requirements and
-//!   Table-1 predictions are derived from the compiled program.
+//!   folded into the layer-3 reduction. Execution belongs to the
+//!   schedule engine
+//!   ([`runtime::engine`](crate::runtime::engine)): one generic
+//!   interpreter replays the op list on pluggable backends (CKKS, f32
+//!   slots, dry-run counting), so Galois-key requirements and Table-1
+//!   predictions are *derived* from the same program the evaluator
+//!   runs, and peephole optimizations are `SchedulePass`es applied
+//!   through [`HrfSchedule::optimize`] — written once, valid on every
+//!   backend.
 //! * [`client`] — Algorithm 3's client half: variable reshuffle τ,
 //!   per-tree replication, encode + encrypt; decrypt + argmax
 //!   (slot-addressed for folded batch responses).
-//! * [`server`] — Algorithm 3's server half, now a thin executor over
-//!   compiled schedules: comparisons, packed matrix multiplication
-//!   (Algorithm 1), polynomial activations, per-class **group-local**
-//!   homomorphic dot products (Algorithm 2); folded/legacy packed
-//!   batching; per-layer op counts (Table 1).
+//! * [`server`] — Algorithm 3's server half: a thin shell around the
+//!   engine's CKKS backend. [`HrfServer::execute`] takes an
+//!   [`EncRequest`] (single / folded group / legacy slot-0 group) and
+//!   returns an [`EncExecution`] — comparisons, packed matrix
+//!   multiplication (Algorithm 1), polynomial activations, per-class
+//!   **group-local** homomorphic dot products (Algorithm 2) all flow
+//!   through the one compiled schedule; per-layer op counts (Table 1)
+//!   are measured at segment boundaries. The old
+//!   `eval`/`eval_batch`/`eval_batch_folded` names remain as
+//!   deprecated wrappers.
 //! * [`cryptonet`] — the §5 comparison baseline: a CryptoNet-style
 //!   HE-MLP with square activations, batched across slots.
 
@@ -33,4 +45,4 @@ pub use client::{EvalKeys, HrfClient};
 pub use pack::HrfModel;
 pub use plan::HrfPlan;
 pub use schedule::{HrfSchedule, PlainOperand, ScheduleOp, ScoreRef, Segment};
-pub use server::{EncScores, HrfServer, LayerCounts};
+pub use server::{EncExecution, EncRequest, EncScores, HrfServer, LayerCounts};

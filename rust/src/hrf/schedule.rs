@@ -10,18 +10,27 @@
 //! structure. Batched tree-ensemble HE systems instead compile
 //! inference into an explicit homomorphic program and derive
 //! everything else (key sets, op counts, cost models) from that single
-//! artifact. [`HrfSchedule`] is that artifact here:
+//! artifact. [`HrfSchedule`] is that artifact here, and since the
+//! engine refactor it is executed by exactly **one** interpreter —
+//! [`Engine::run`](crate::runtime::engine::Engine::run) — against
+//! pluggable [`ScheduleBackend`](crate::runtime::engine::ScheduleBackend)s:
 //!
-//! * the **executor** (`HrfServer::run_schedule`) replays the ops
-//!   against the CKKS [`Evaluator`](crate::ckks::evaluator::Evaluator);
-//! * the **plaintext executor** (`runtime::slot_model`) walks the very
-//!   same op list over f32 slot vectors, so the python↔rust golden
-//!   parity holds by construction — both sides run one program;
-//! * **Galois-key requirements** ([`HrfSchedule::rotation_steps`]) and
-//!   **Table-1 op-count predictions**
-//!   ([`HrfSchedule::predicted_counts`], a dry-run interpretation) are
-//!   derived from the op list instead of hand-maintained formulas. The
-//!   old `HrfPlan` formulas are retained only as cross-check tests.
+//! * the **CKKS backend** (`runtime::engine::CkksBackend`, driven by
+//!   `HrfServer::execute`) replays the ops against the homomorphic
+//!   [`Evaluator`](crate::ckks::evaluator::Evaluator);
+//! * the **slot backend** (`runtime::engine::SlotBackend`, driving
+//!   `runtime::slot_model`) runs the very same op list over f32 slot
+//!   vectors, so the python↔rust golden parity holds by construction
+//!   — both sides run one program;
+//! * the **counting backend** makes [`HrfSchedule::rotation_steps`]
+//!   (Galois-key requirements) and [`HrfSchedule::predicted_counts`]
+//!   (Table-1 predictions) dry-run replays of the op list instead of
+//!   hand-maintained formulas. The old `HrfPlan` formulas are retained
+//!   only as cross-check tests.
+//!
+//! Peephole transforms are [`SchedulePass`]es applied through
+//! [`HrfSchedule::optimize`]; because execution is centralized, a pass
+//! is written once and holds on every backend.
 //!
 //! # The IR
 //!
@@ -79,6 +88,7 @@
 use super::pack::HrfModel;
 use super::server::LayerCounts;
 use crate::ckks::evaluator::OpCounts;
+use crate::runtime::engine::{CountingBackend, Engine, SchedulePass};
 use std::collections::BTreeSet;
 use std::fmt;
 
@@ -141,6 +151,14 @@ pub enum ScheduleOp {
     /// `r[dst] := r[src] ⊙ operand` (operand encoded at scale Δ;
     /// resolved through the server's cached-plaintext store).
     MulPlainCached {
+        dst: Reg,
+        src: Reg,
+        operand: PlainOperand,
+    },
+    /// `r[dst] := rescale(r[src] ⊙ operand)` — the fused form emitted
+    /// by the `FuseMulRescale` pass: one backend invocation, metered
+    /// as a single fused op, bit-identical to the unfused pair.
+    MulPlainRescale {
         dst: Reg,
         src: Reg,
         operand: PlainOperand,
@@ -393,63 +411,52 @@ impl HrfSchedule {
         }
     }
 
-    /// Every rotation step the schedule performs — the session's
-    /// Galois keys must cover exactly this set. Derived from the op
-    /// list (the hand formulas in `HrfPlan` survive only as a
-    /// cross-check test).
-    pub fn rotation_steps(&self) -> BTreeSet<usize> {
-        let mut steps = BTreeSet::new();
-        for (_, op) in &self.ops {
-            match *op {
-                ScheduleOp::Rotate { step, .. } | ScheduleOp::RotateHoisted { step, .. } => {
-                    steps.insert(step);
-                }
-                ScheduleOp::ExtractScore { slot, .. } => {
-                    steps.insert(slot);
-                }
-                ScheduleOp::RotateSumGrouped { span, .. } => {
-                    let mut s = 1usize;
-                    while s < span {
-                        steps.insert(s);
-                        s <<= 1;
-                    }
-                }
-                _ => {}
-            }
+    /// Apply `passes` in order and return the optimized schedule.
+    /// Passes preserve the register dataflow and the output slot
+    /// addressing (pinned by the cross-backend parity tests); the
+    /// derived key requirements and op-count predictions below stay
+    /// truthful automatically because they replay the *transformed*
+    /// op list.
+    pub fn optimize(mut self, passes: &[Box<dyn SchedulePass>]) -> Self {
+        for p in passes {
+            p.run(&mut self);
         }
-        steps
+        self
+    }
+
+    /// Variant for executors that receive the whole batch as **one
+    /// pre-packed slot vector** (input 0): the `Pack` segment's
+    /// placement rotations would only shift all-zero vectors, so they
+    /// are dropped and just the input load is kept. Register and
+    /// output addressing are unchanged — on such inputs this is a pure
+    /// dead-op elimination (the slot model applies it to its cached
+    /// full-capacity schedule).
+    pub fn assume_prepacked(mut self) -> Self {
+        self.ops.retain(|(seg, op)| {
+            *seg != Segment::Pack || matches!(op, ScheduleOp::LoadInput { input: 0, .. })
+        });
+        self
+    }
+
+    /// Every rotation step the schedule performs — the session's
+    /// Galois keys must cover exactly this set. Derived by replaying
+    /// the op list on the dry-run [`CountingBackend`] (the hand
+    /// formulas in `HrfPlan` survive only as a cross-check test).
+    pub fn rotation_steps(&self) -> BTreeSet<usize> {
+        let mut backend = CountingBackend::new(self.act_counts);
+        Engine::run(self, &mut backend);
+        backend.into_rotation_steps()
     }
 
     /// Dry-run interpretation: the per-layer op counts executing this
-    /// schedule will produce, without touching a ciphertext. The
+    /// schedule will produce, without touching a ciphertext — one
+    /// [`Engine::run`] over the [`CountingBackend`]. The CKKS
     /// executor's measured counts match these exactly (asserted in
     /// `tests/schedule_props.rs`), which is what lets Table 1 be
     /// *predicted* from the compiled program.
     pub fn predicted_counts(&self) -> LayerCounts {
-        let mut counts = LayerCounts::default();
-        for (seg, op) in &self.ops {
-            let mut d = OpCounts::default();
-            match *op {
-                ScheduleOp::LoadInput { .. } | ScheduleOp::Hoist { .. } => {}
-                ScheduleOp::Rotate { .. }
-                | ScheduleOp::RotateHoisted { .. }
-                | ScheduleOp::ExtractScore { .. } => d.rotate += 1,
-                ScheduleOp::AddAssign { .. } => d.add += 1,
-                ScheduleOp::SubPlain { .. }
-                | ScheduleOp::AddPlain { .. }
-                | ScheduleOp::AddConst { .. } => d.add_plain += 1,
-                ScheduleOp::MulPlainCached { .. } => d.mul_plain += 1,
-                ScheduleOp::Rescale { .. } => d.rescale += 1,
-                ScheduleOp::PolyActivation { .. } => d = self.act_counts,
-                ScheduleOp::RotateSumGrouped { span, .. } => {
-                    let steps = span.trailing_zeros() as u64;
-                    d.rotate += steps;
-                    d.add += steps;
-                }
-            }
-            *counts.bucket_mut(*seg) += d;
-        }
-        counts
+        let mut backend = CountingBackend::new(self.act_counts);
+        Engine::run(self, &mut backend).counts
     }
 
     /// Total predicted key-switch rotations for one execution.
@@ -502,6 +509,9 @@ impl fmt::Display for HrfSchedule {
                 ScheduleOp::AddPlain { reg, operand } => writeln!(f, "    r{reg} += {operand}")?,
                 ScheduleOp::MulPlainCached { dst, src, operand } => {
                     writeln!(f, "    r{dst} <- r{src} * {operand}")?
+                }
+                ScheduleOp::MulPlainRescale { dst, src, operand } => {
+                    writeln!(f, "    r{dst} <- rescale(r{src} * {operand})  [fused]")?
                 }
                 ScheduleOp::AddConst { reg, value } => writeln!(f, "    r{reg} += {value:.6}")?,
                 ScheduleOp::Rescale { reg } => writeln!(f, "    rescale r{reg}")?,
@@ -768,5 +778,91 @@ mod tests {
         let p = &hm.plan;
         let s = HrfSchedule::compile(&hm, p.groups + 7, true);
         assert_eq!(s.b, p.groups);
+    }
+
+    #[test]
+    fn pack_segment_rotation_steps_match_placement_formula() {
+        // The schedule's Pack segment must perform the same placement
+        // rotations, in the same order, as the stand-alone
+        // `HrfServer::pack_group` helper.
+        let hm = synth_model(8, 4, 2, 2048, 7);
+        let p = &hm.plan;
+        assert!(p.groups >= 3);
+        let sched = HrfSchedule::compile(&hm, 3, true);
+        let pack_steps: Vec<usize> = sched
+            .ops
+            .iter()
+            .filter_map(|(seg, op)| match (seg, op) {
+                (Segment::Pack, ScheduleOp::Rotate { step, .. }) => Some(*step),
+                _ => None,
+            })
+            .collect();
+        let expect: Vec<usize> = (1..3).map(|g| p.slots - g * p.reduce_span).collect();
+        assert_eq!(pack_steps, expect);
+    }
+
+    #[test]
+    fn fuse_mul_rescale_shrinks_schedule_and_rebooks_counts() {
+        use crate::runtime::engine::PassPipeline;
+        let hm = synth_model(8, 4, 2, 2048, 8);
+        let c = hm.plan.c;
+        for (b, fold) in [(1usize, true), (3, true), (3, false)] {
+            let raw = HrfSchedule::compile(&hm, b, fold);
+            let fused = raw.clone().optimize(PassPipeline::standard().passes());
+            // Layer 3's C (mask-mul, rescale) pairs fuse; layer 2's
+            // lazy rescale (K > 1) has no adjacent pair.
+            assert_eq!(raw.ops.len() - fused.ops.len(), c, "B={b} fold={fold}");
+            let rc = raw.predicted_counts().total();
+            let fc = fused.predicted_counts().total();
+            assert_eq!(fc.fused_mul_rescale, c as u64);
+            assert_eq!(rc.mul_plain - fc.mul_plain, c as u64);
+            assert_eq!(rc.rescale - fc.rescale, c as u64);
+            // Semantically invariant aggregates.
+            assert_eq!(rc.multiplications(), fc.multiplications());
+            assert_eq!(rc.rescales(), fc.rescales());
+            assert_eq!(rc.rotate, fc.rotate);
+            assert_eq!(rc.additions(), fc.additions());
+            // Keys and output addressing are untouched.
+            assert_eq!(raw.rotation_steps(), fused.rotation_steps());
+            assert_eq!(raw.outputs, fused.outputs);
+            assert_eq!(raw.n_regs, fused.n_regs);
+        }
+    }
+
+    #[test]
+    fn assume_prepacked_strips_only_placement_ops() {
+        let hm = synth_model(8, 4, 2, 2048, 10);
+        let b = hm.plan.groups.min(4);
+        assert!(b >= 2);
+        let full = HrfSchedule::compile(&hm, b, true);
+        let stripped = full.clone().assume_prepacked();
+        // Pack collapses to the single input load; everything else —
+        // registers, outputs, layer ops — is untouched.
+        assert_eq!(
+            stripped
+                .ops
+                .iter()
+                .filter(|(s, _)| *s == Segment::Pack)
+                .count(),
+            1
+        );
+        assert_eq!(full.ops.len() - stripped.ops.len(), 3 * (b - 1));
+        assert_eq!(stripped.outputs, full.outputs);
+        assert_eq!(stripped.n_regs, full.n_regs);
+        let fc = full.predicted_counts().total();
+        let sc = stripped.predicted_counts().total();
+        assert_eq!(fc.rotate - sc.rotate, (b - 1) as u64);
+        assert_eq!(fc.add - sc.add, (b - 1) as u64);
+    }
+
+    #[test]
+    fn fusion_is_idempotent() {
+        use crate::runtime::engine::{FuseMulRescale, SchedulePass};
+        let hm = synth_model(8, 4, 2, 2048, 9);
+        let mut sched = HrfSchedule::compile(&hm, 2, true);
+        assert!(FuseMulRescale.run(&mut sched), "first run must fuse");
+        let len = sched.ops.len();
+        assert!(!FuseMulRescale.run(&mut sched), "second run finds nothing");
+        assert_eq!(sched.ops.len(), len);
     }
 }

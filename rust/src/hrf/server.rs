@@ -6,16 +6,25 @@
 //! layer 3:  ŷ_c = ⟨W̃_c, v⟩ + β_c                    (Algorithm 2, ×C)
 //! ```
 //!
-//! Since the schedule refactor the server is a thin shell around
-//! compiled [`HrfSchedule`]s: [`HrfServer::eval`],
-//! [`HrfServer::eval_batch`] and [`HrfServer::eval_batch_folded`]
-//! compile (once, cached per batch size — the way `pt_cache` caches
-//! encoded plaintexts) and then replay the op list against the CKKS
-//! [`Evaluator`]. Galois-key requirements
+//! Since the engine refactor the server is a thin shell around
+//! compiled [`HrfSchedule`]s executed by the generic schedule engine:
+//! [`HrfServer::execute`] compiles the schedule for the request's
+//! batch size (once, cached — the way `pt_cache` caches encoded
+//! plaintexts), runs the server's [`PassPipeline`] over it, and
+//! replays the op list through
+//! [`Engine::run`](crate::runtime::engine::Engine::run) on a
+//! [`CkksBackend`] wrapping the [`Evaluator`], the plaintext cache and
+//! the session keys. The server itself contains **no** op dispatch —
+//! the engine owns the single `ScheduleOp` match, shared with the f32
+//! slot backend and the dry-run counter. Galois-key requirements
 //! ([`HrfServer::eval_key_requirements`], [`HrfServer::can_batch`])
 //! and Table-1 predictions ([`HrfServer::predicted_counts`]) are
 //! derived from the same compiled program, so the op stream, the key
 //! set and the cost model cannot drift apart.
+//!
+//! The legacy entry points `eval` / `eval_batch` / `eval_batch_folded`
+//! survive as thin deprecated wrappers over [`HrfServer::execute`]
+//! with the matching [`EncRequest`] shape.
 //!
 //! Per-layer [`LayerCounts`] snapshots regenerate the paper's Table 1.
 //! The activation polynomial is evaluated with the power-basis method
@@ -31,15 +40,16 @@
 //! them at once — sample `g`'s class-`c` score lands at slot
 //! `plan.score_slot(g)` of output `c`.
 //!
-//! [`HrfServer::eval_batch_folded`] serves the coordinator's hot path:
-//! the per-sample extraction rotations are folded into the layer-3
-//! reduction (see [`schedule`](super::schedule)), the per-class
-//! outputs stay slot-addressed ([`EncScores`] carries the slot), and
-//! the batch saves exactly `C·(B−1)` key-switches over eval+extract.
-//! [`HrfServer::eval_batch`] keeps the legacy slot-0 response contract
-//! by running the unfolded schedule, whose `Extract` segment hoists
-//! each class's score ciphertext once and replays the extraction
-//! rotations as cheap hoisted key-switches.
+//! [`EncRequest::group`] (the folded contract) serves the
+//! coordinator's hot path: the per-sample extraction rotations are
+//! folded into the layer-3 reduction (see
+//! [`schedule`](super::schedule)), the per-class outputs stay
+//! slot-addressed ([`EncScores`] carries the slot), and the batch
+//! saves exactly `C·(B−1)` key-switches over eval+extract.
+//! [`EncRequest::group_slot0`] keeps the legacy slot-0 response
+//! contract by running the unfolded schedule, whose `Extract` segment
+//! hoists each class's score ciphertext once and replays the
+//! extraction rotations as cheap hoisted key-switches.
 //!
 //! The pre-refactor hand-written path survives as
 //! [`HrfServer::eval_reference`] / [`HrfServer::eval_batch_reference`]
@@ -47,11 +57,12 @@
 //! baseline the rotation-count bench compares against.
 
 use super::pack::HrfModel;
-use super::schedule::{HrfSchedule, PlainOperand, Reg, ScheduleOp, Segment};
+use super::schedule::{HrfSchedule, PlainOperand, Segment};
 use crate::ckks::evaluator::{Evaluator, OpCounts};
 use crate::ckks::keys::{GaloisKeys, RelinKey};
-use crate::ckks::rns::{CkksContext, RnsPoly};
+use crate::ckks::rns::CkksContext;
 use crate::ckks::{Ciphertext, Encoder, Plaintext};
+use crate::runtime::engine::{CkksBackend, Engine, EngineRun, PassPipeline};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -114,6 +125,134 @@ pub struct EncScores {
     pub slot: usize,
 }
 
+/// An encrypted execution request: which ciphertexts to score and
+/// under which output contract. The single entry point
+/// [`HrfServer::execute`] replaces the old `eval` / `eval_batch` /
+/// `eval_batch_folded` trio.
+#[derive(Clone, Copy)]
+pub struct EncRequest<'a> {
+    /// Fresh single-sample ciphertexts to pack and score together
+    /// (`1 ≤ len ≤ plan.groups`). A pre-packed multi-sample ciphertext
+    /// is submitted as a single input (its scores stay at the group
+    /// score slots).
+    pub cts: &'a [Ciphertext],
+    /// `true` → folded schedule, slot-addressed outputs (the modern
+    /// contract); `false` → unfolded schedule with the legacy slot-0
+    /// `Extract` segment. `len == 1` normalizes to folded.
+    pub fold: bool,
+}
+
+impl<'a> EncRequest<'a> {
+    /// Score one ciphertext (single sample, or client-side packed
+    /// group whose callers read the group score slots).
+    pub fn single(ct: &'a Ciphertext) -> Self {
+        EncRequest {
+            cts: std::slice::from_ref(ct),
+            fold: true,
+        }
+    }
+
+    /// Pack-and-score a group under the folded slot-addressed
+    /// contract — the coordinator's hot path.
+    pub fn group(cts: &'a [Ciphertext]) -> Self {
+        EncRequest { cts, fold: true }
+    }
+
+    /// Pack-and-score a group under the legacy slot-0 contract (one
+    /// extracted ciphertext set per sample).
+    pub fn group_slot0(cts: &'a [Ciphertext]) -> Self {
+        EncRequest { cts, fold: false }
+    }
+}
+
+/// Result of one [`HrfServer::execute`]: the distinct per-class
+/// ciphertext groups the schedule produced plus, for every input
+/// sample, which group and slot carry its score. A folded execution
+/// has **one** group shared by all samples (nothing was deep-cloned);
+/// an unfolded execution has one group per sample at slot 0.
+pub struct EncExecution {
+    groups: Vec<Vec<Ciphertext>>,
+    /// Per sample: (index into `groups`, score slot).
+    samples: Vec<(usize, usize)>,
+    /// Per-layer op counts measured at segment boundaries (these match
+    /// `HrfSchedule::predicted_counts` exactly).
+    pub counts: LayerCounts,
+}
+
+impl EncExecution {
+    pub fn n_samples(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// The slot sample `g` reads its score from.
+    pub fn slot(&self, sample: usize) -> usize {
+        self.samples[sample].1
+    }
+
+    /// Response payload for one sample (clones the shared group when
+    /// the execution was folded; prefer [`EncExecution::into_responses`]
+    /// when draining all samples).
+    pub fn response(&self, sample: usize) -> EncScores {
+        let (gi, slot) = self.samples[sample];
+        EncScores {
+            scores: self.groups[gi].clone(),
+            slot,
+        }
+    }
+
+    /// One [`EncScores`] per input sample. Shared (folded) groups are
+    /// cloned for all but their last user, so exactly
+    /// `samples − groups` deep clones happen — none for `B = 1`.
+    pub fn into_responses(self) -> Vec<EncScores> {
+        let EncExecution {
+            groups, samples, ..
+        } = self;
+        let mut last_use = vec![0usize; groups.len()];
+        for (i, (gi, _)) in samples.iter().enumerate() {
+            last_use[*gi] = i;
+        }
+        let mut groups: Vec<Option<Vec<Ciphertext>>> = groups.into_iter().map(Some).collect();
+        samples
+            .iter()
+            .enumerate()
+            .map(|(i, &(gi, slot))| {
+                let scores = if last_use[gi] == i {
+                    groups[gi].take().expect("group moved twice")
+                } else {
+                    groups[gi].as_ref().expect("group gone").clone()
+                };
+                EncScores { scores, slot }
+            })
+            .collect()
+    }
+
+    /// The folded execution's shared per-class ciphertexts (sample
+    /// `g`'s score at `plan.score_slot(g)`). Panics on unfolded
+    /// multi-sample executions, which have one group per sample.
+    pub fn into_class_scores(mut self) -> Vec<Ciphertext> {
+        assert_eq!(
+            self.groups.len(),
+            1,
+            "into_class_scores needs a single shared output group"
+        );
+        self.groups.pop().expect("one group")
+    }
+
+    /// Per-sample per-class ciphertexts in sample order — the legacy
+    /// slot-0 batch shape. Panics on folded multi-sample executions
+    /// (their samples share one group; use
+    /// [`EncExecution::into_responses`] or
+    /// [`EncExecution::into_class_scores`]).
+    pub fn into_per_sample(self) -> Vec<Vec<Ciphertext>> {
+        assert_eq!(
+            self.groups.len(),
+            self.samples.len(),
+            "into_per_sample needs one output group per sample"
+        );
+        self.groups
+    }
+}
+
 /// Server-side evaluator bound to one packed model.
 pub struct HrfServer {
     pub model: HrfModel,
@@ -123,8 +262,11 @@ pub struct HrfServer {
     /// (§Perf step 5 — encodes were ~40 % of an eval).
     pt_cache: Mutex<HashMap<(u32, usize, u64), Plaintext>>,
     /// Compiled-schedule cache, keyed by (batch size, folded) — the
-    /// schedule analogue of `pt_cache`.
+    /// schedule analogue of `pt_cache`. Cached schedules are already
+    /// pass-optimized.
     schedules: Mutex<HashMap<(usize, bool), Arc<HrfSchedule>>>,
+    /// Optimization passes applied to every compiled schedule.
+    passes: PassPipeline,
 }
 
 /// Cache operand ids.
@@ -142,28 +284,22 @@ fn operand_cache_id(op: PlainOperand) -> u32 {
     }
 }
 
-/// Disjoint mutable access to two registers.
-fn two_regs(
-    regs: &mut [Option<Ciphertext>],
-    a: usize,
-    b: usize,
-) -> (&mut Ciphertext, &mut Ciphertext) {
-    assert_ne!(a, b, "aliasing register pair");
-    if a < b {
-        let (lo, hi) = regs.split_at_mut(b);
-        (lo[a].as_mut().expect("reg a"), hi[0].as_mut().expect("reg b"))
-    } else {
-        let (lo, hi) = regs.split_at_mut(a);
-        (hi[0].as_mut().expect("reg a"), lo[b].as_mut().expect("reg b"))
-    }
-}
-
 impl HrfServer {
+    /// Server with the standard pass pipeline (schedule-level fusion
+    /// on). Use [`HrfServer::with_passes`] to customize.
     pub fn new(model: HrfModel) -> Self {
+        HrfServer::with_passes(model, PassPipeline::standard())
+    }
+
+    /// Server with an explicit optimization pipeline
+    /// (`PassPipeline::empty()` executes schedules exactly as
+    /// compiled — the parity tests' unoptimized baseline).
+    pub fn with_passes(model: HrfModel, passes: PassPipeline) -> Self {
         HrfServer {
             model,
             pt_cache: Mutex::new(HashMap::new()),
             schedules: Mutex::new(HashMap::new()),
+            passes,
         }
     }
 
@@ -187,165 +323,108 @@ impl HrfServer {
         pt
     }
 
-    /// The compiled schedule for a `b`-sample batch, compiled on first
-    /// use and cached. `b` is clamped to the plan's group capacity;
-    /// `b = 1` normalizes to the folded form (there is nothing to
-    /// extract).
+    /// Resolve a schedule operand to its cached encoded plaintext at
+    /// the requested (level, scale) — the `CkksBackend`'s window into
+    /// the server's operand store.
+    pub(crate) fn encode_operand(
+        &self,
+        ctx: &CkksContext,
+        enc: &Encoder,
+        operand: PlainOperand,
+        level: usize,
+        scale: f64,
+    ) -> Plaintext {
+        self.cached_encode(
+            ctx,
+            enc,
+            operand_cache_id(operand),
+            self.model.operand_slots(operand),
+            level,
+            scale,
+        )
+    }
+
+    /// The compiled, pass-optimized schedule for a `b`-sample batch,
+    /// compiled on first use and cached. `b` is clamped to the plan's
+    /// group capacity; `b = 1` normalizes to the folded form (there is
+    /// nothing to extract).
     pub fn schedule(&self, b: usize, fold: bool) -> Arc<HrfSchedule> {
         let b = b.clamp(1, self.model.plan.groups);
         let fold = fold || b == 1;
         let mut cache = self.schedules.lock().unwrap();
         cache
             .entry((b, fold))
-            .or_insert_with(|| Arc::new(HrfSchedule::compile(&self.model, b, fold)))
+            .or_insert_with(|| {
+                Arc::new(HrfSchedule::compile(&self.model, b, fold).optimize(self.passes.passes()))
+            })
             .clone()
     }
 
-    /// Execute a compiled schedule against the evaluator. Returns the
-    /// final register file (callers move the registers named by
-    /// `sched.outputs` out — no output ciphertext is deep-cloned) plus
-    /// per-layer op counts measured at segment boundaries (these match
-    /// `sched.predicted_counts()` exactly).
-    fn run_schedule(
+    /// Execute an encrypted request through the schedule engine: look
+    /// up (or compile + optimize) the schedule matching the request's
+    /// batch size and contract, then replay it on a [`CkksBackend`]
+    /// bound to this server, the evaluator and the session keys.
+    ///
+    /// This is the single encrypted entry point; the legacy
+    /// `eval` / `eval_batch` / `eval_batch_folded` names are thin
+    /// deprecated wrappers over it.
+    pub fn execute(
         &self,
-        sched: &HrfSchedule,
         ev: &mut Evaluator,
         enc: &Encoder,
-        inputs: &[Ciphertext],
+        req: &EncRequest<'_>,
         rlk: &RelinKey,
         gk: &GaloisKeys,
-    ) -> (Vec<Option<Ciphertext>>, LayerCounts) {
+    ) -> EncExecution {
         assert!(
-            inputs.len() >= sched.b,
-            "schedule packs {} inputs, got {}",
-            sched.b,
-            inputs.len()
+            !req.cts.is_empty() && req.cts.len() <= self.model.plan.groups,
+            "batch of {} outside 1..={}",
+            req.cts.len(),
+            self.model.plan.groups
         );
-        let delta = ev.ctx.params.scale;
-        let mut regs: Vec<Option<Ciphertext>> = vec![None; sched.n_regs];
-        let mut hoists: HashMap<Reg, Vec<RnsPoly>> = HashMap::new();
-        let mut counts = LayerCounts::default();
-        let mut cur_seg: Option<Segment> = None;
-        let mut snap = ev.counts;
+        let sched = self.schedule(req.cts.len(), req.fold);
+        let mut backend = CkksBackend::new(self, ev, enc, req.cts, rlk, gk);
+        let EngineRun { mut regs, counts } = Engine::run(&sched, &mut backend);
 
-        for (seg, op) in &sched.ops {
-            if cur_seg != Some(*seg) {
-                if let Some(s) = cur_seg {
-                    *counts.bucket_mut(s) += ev.counts.diff(&snap);
-                }
-                snap = ev.counts;
-                cur_seg = Some(*seg);
+        let mut groups: Vec<Vec<Ciphertext>> = Vec::new();
+        let mut samples: Vec<(usize, usize)> = Vec::new();
+        if sched.folded {
+            // C·B outputs alias C class registers — move each distinct
+            // register out once; samples share the group and address
+            // their own score slot.
+            let class_cts: Vec<Ciphertext> = sched
+                .outputs
+                .iter()
+                .filter(|r| r.sample == 0)
+                .map(|r| regs[r.reg].take().expect("output register"))
+                .collect();
+            groups.push(class_cts);
+            for g in 0..sched.b {
+                samples.push((0, self.model.plan.score_slot(g)));
             }
-            match *op {
-                ScheduleOp::LoadInput { dst, input } => {
-                    regs[dst] = Some(inputs[input].clone());
-                }
-                ScheduleOp::Rotate { dst, src, step } => {
-                    let r = ev.rotate(regs[src].as_ref().expect("reg"), step, gk);
-                    regs[dst] = Some(r);
-                }
-                ScheduleOp::Hoist { src } => {
-                    let digits = ev.hoist(regs[src].as_ref().expect("reg"));
-                    hoists.insert(src, digits);
-                }
-                ScheduleOp::RotateHoisted { dst, src, step }
-                | ScheduleOp::ExtractScore {
-                    dst,
-                    src,
-                    slot: step,
-                } => {
-                    let digits = hoists.get(&src).expect("hoisted register");
-                    let r = ev.rotate_hoisted(regs[src].as_ref().expect("reg"), digits, step, gk);
-                    regs[dst] = Some(r);
-                }
-                ScheduleOp::AddAssign { dst, src } => {
-                    let (d, s) = two_regs(&mut regs, dst, src);
-                    // Same-schedule-point scales differ by < 1e-9
-                    // relative; adopt the accumulator's (the legacy
-                    // accumulator discipline).
-                    s.scale = d.scale;
-                    ev.add_inplace(d, s);
-                }
-                ScheduleOp::SubPlain { reg, operand } => {
-                    let (level, scale) = {
-                        let ct = regs[reg].as_ref().expect("reg");
-                        (ct.level, ct.scale)
-                    };
-                    let pt = self.cached_encode(
-                        &ev.ctx,
-                        enc,
-                        operand_cache_id(operand),
-                        self.model.operand_slots(operand),
-                        level,
-                        scale,
-                    );
-                    ev.sub_plain_inplace(regs[reg].as_mut().expect("reg"), &pt);
-                }
-                ScheduleOp::AddPlain { reg, operand } => {
-                    let (level, scale) = {
-                        let ct = regs[reg].as_ref().expect("reg");
-                        (ct.level, ct.scale)
-                    };
-                    let pt = self.cached_encode(
-                        &ev.ctx,
-                        enc,
-                        operand_cache_id(operand),
-                        self.model.operand_slots(operand),
-                        level,
-                        scale,
-                    );
-                    ev.add_plain_inplace(regs[reg].as_mut().expect("reg"), &pt);
-                }
-                ScheduleOp::MulPlainCached { dst, src, operand } => {
-                    let level = regs[src].as_ref().expect("reg").level;
-                    let pt = self.cached_encode(
-                        &ev.ctx,
-                        enc,
-                        operand_cache_id(operand),
-                        self.model.operand_slots(operand),
-                        level,
-                        delta,
-                    );
-                    let r = ev.mul_plain(regs[src].as_ref().expect("reg"), &pt);
-                    regs[dst] = Some(r);
-                }
-                ScheduleOp::AddConst { reg, value } => {
-                    let (level, scale) = {
-                        let ct = regs[reg].as_ref().expect("reg");
-                        (ct.level, ct.scale)
-                    };
-                    let pt = enc.encode_constant(&ev.ctx, value, level, scale);
-                    ev.add_plain_inplace(regs[reg].as_mut().expect("reg"), &pt);
-                }
-                ScheduleOp::Rescale { reg } => {
-                    ev.rescale(regs[reg].as_mut().expect("reg"));
-                }
-                ScheduleOp::PolyActivation { dst, src } => {
-                    let r = ev.eval_poly_power_basis(
-                        enc,
-                        regs[src].as_ref().expect("reg"),
-                        &self.model.act_coeffs,
-                        rlk,
-                    );
-                    regs[dst] = Some(r);
-                }
-                ScheduleOp::RotateSumGrouped { dst, src, span } => {
-                    let r = ev.rotate_sum(regs[src].as_ref().expect("reg"), span, gk);
-                    regs[dst] = Some(r);
-                }
+        } else {
+            // One distinct register per (class, sample), score at
+            // slot 0 — class-major per sample.
+            let mut per_sample: Vec<Vec<Ciphertext>> =
+                (0..sched.b).map(|_| Vec::new()).collect();
+            for r in &sched.outputs {
+                per_sample[r.sample].push(regs[r.reg].take().expect("output register"));
+            }
+            for (g, cts) in per_sample.into_iter().enumerate() {
+                groups.push(cts);
+                samples.push((g, 0));
             }
         }
-        if let Some(s) = cur_seg {
-            *counts.bucket_mut(s) += ev.counts.diff(&snap);
+        EncExecution {
+            groups,
+            samples,
+            counts,
         }
-        (regs, counts)
     }
 
     /// Evaluate the HRF on an encrypted input. Returns one ciphertext
     /// per class (score in slot 0) plus per-layer op counts.
-    ///
-    /// Thin wrapper over the compiled `B = 1` schedule. Key material
-    /// (`rlk`, `gk`) belongs to the client session.
+    #[deprecated(note = "use HrfServer::execute with EncRequest::single")]
     pub fn eval(
         &self,
         ev: &mut Evaluator,
@@ -354,27 +433,15 @@ impl HrfServer {
         rlk: &RelinKey,
         gk: &GaloisKeys,
     ) -> (Vec<Ciphertext>, LayerCounts) {
-        let sched = self.schedule(1, true);
-        let (mut regs, counts) =
-            self.run_schedule(&sched, ev, enc, std::slice::from_ref(ct_in), rlk, gk);
-        // B=1 outputs reference one distinct register per class.
-        let outs = sched
-            .outputs
-            .iter()
-            .map(|r| regs[r.reg].take().expect("output register"))
-            .collect();
-        (outs, counts)
+        let ex = self.execute(ev, enc, &EncRequest::single(ct_in), rlk, gk);
+        let counts = ex.counts;
+        (ex.into_class_scores(), counts)
     }
 
-    /// Evaluate a packed group of `B` fresh single-sample ciphertexts
-    /// under the **legacy slot-0 contract**: combine, run the pipeline
-    /// once, extract each sample's per-class scores back to slot 0
-    /// (hoisted rotations). Returns one `Vec<Ciphertext>` (length C,
-    /// score in slot 0) per input sample.
-    ///
-    /// The folded variant ([`HrfServer::eval_batch_folded`]) skips the
-    /// `C·(B−1)` extraction rotations entirely — prefer it wherever
-    /// the caller can address a slot.
+    /// Evaluate a packed group under the **legacy slot-0 contract**:
+    /// one `Vec<Ciphertext>` (length C, score in slot 0) per input
+    /// sample.
+    #[deprecated(note = "use HrfServer::execute with EncRequest::group_slot0")]
     pub fn eval_batch(
         &self,
         ev: &mut Evaluator,
@@ -383,23 +450,15 @@ impl HrfServer {
         rlk: &RelinKey,
         gk: &GaloisKeys,
     ) -> (Vec<Vec<Ciphertext>>, LayerCounts) {
-        assert!(!cts.is_empty() && cts.len() <= self.model.plan.groups);
-        let sched = self.schedule(cts.len(), false);
-        let (mut regs, counts) = self.run_schedule(&sched, ev, enc, cts, rlk, gk);
-        // Unfolded outputs name one distinct register per (class,
-        // sample) — move each out, class-major order per sample.
-        let mut per_sample: Vec<Vec<Ciphertext>> = (0..cts.len()).map(|_| Vec::new()).collect();
-        for r in &sched.outputs {
-            per_sample[r.sample].push(regs[r.reg].take().expect("output register"));
-        }
-        (per_sample, counts)
+        let ex = self.execute(ev, enc, &EncRequest::group_slot0(cts), rlk, gk);
+        let counts = ex.counts;
+        (ex.into_per_sample(), counts)
     }
 
     /// Evaluate a packed group with the extraction **folded** into the
-    /// layer-3 reduction: one ciphertext per class is returned, with
-    /// sample `g`'s score at `plan.score_slot(g)` — exactly `C·(B−1)`
-    /// fewer rotations than [`HrfServer::eval_batch`]. Pair each
-    /// caller's response with its score slot via [`EncScores`].
+    /// layer-3 reduction: one ciphertext per class, sample `g`'s score
+    /// at `plan.score_slot(g)`.
+    #[deprecated(note = "use HrfServer::execute with EncRequest::group")]
     pub fn eval_batch_folded(
         &self,
         ev: &mut Evaluator,
@@ -408,19 +467,9 @@ impl HrfServer {
         rlk: &RelinKey,
         gk: &GaloisKeys,
     ) -> (Vec<Ciphertext>, LayerCounts) {
-        assert!(!cts.is_empty() && cts.len() <= self.model.plan.groups);
-        let sched = self.schedule(cts.len(), true);
-        let (mut regs, counts) = self.run_schedule(&sched, ev, enc, cts, rlk, gk);
-        // A folded schedule's C·B outputs alias C class registers —
-        // move each distinct register out once (no per-sample clones;
-        // sample g reads its score from slot `plan.score_slot(g)`).
-        let per_class = sched
-            .outputs
-            .iter()
-            .filter(|r| r.sample == 0)
-            .map(|r| regs[r.reg].take().expect("output register"))
-            .collect();
-        (per_class, counts)
+        let ex = self.execute(ev, enc, &EncRequest::group(cts), rlk, gk);
+        let counts = ex.counts;
+        (ex.into_class_scores(), counts)
     }
 
     /// Combine `B ≤ plan.groups` *fresh single-sample* ciphertexts
@@ -431,8 +480,9 @@ impl HrfServer {
     /// full evaluation, which is what makes server-side batching pay.
     ///
     /// This is the stand-alone form of the compiled schedule's `Pack`
-    /// segment (the equivalence is pinned by a unit test below); the
-    /// session's Galois keys must cover the placement steps in
+    /// segment (the equivalence is pinned by a unit test in
+    /// [`schedule`](super::schedule)); the session's Galois keys must
+    /// cover the placement steps in
     /// [`HrfServer::eval_key_requirements`].
     pub fn pack_group(
         &self,
@@ -684,7 +734,9 @@ mod tests {
 
         for x in ds.x.iter().take(3) {
             let ct = client.encrypt_input(&ctx, &enc, &server.model, x);
-            let (outs, counts) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+            let ex = server.execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk);
+            let counts = ex.counts;
+            let outs = ex.into_class_scores();
             let (scores, _) = client.decrypt_scores(&ctx, &enc, &outs);
             let x_slots = reshuffle_and_pack(&server.model, x);
             let expect = server.model.forward_slots_plain(&x_slots);
@@ -707,9 +759,12 @@ mod tests {
             );
         }
 
-        // The compiled path is bit-identical to the reference path.
+        // The compiled path (fused by the standard pipeline) is
+        // bit-identical to the hand-written reference path.
         let ct = client.encrypt_input(&ctx, &enc, &server.model, &ds.x[0]);
-        let (a, _) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+        let a = server
+            .execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
+            .into_class_scores();
         let (b, _) = server.eval_reference(&mut ev, &enc, &ct, &rlk, &gk);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.level, y.level);
@@ -717,39 +772,6 @@ mod tests {
             assert_eq!(x.c0.limbs, y.c0.limbs, "c0 deviates from reference");
             assert_eq!(x.c1.limbs, y.c1.limbs, "c1 deviates from reference");
         }
-    }
-
-    #[test]
-    fn pack_segment_matches_pack_group_rotations() {
-        // The stand-alone pack_group helper and the schedule's Pack
-        // segment must perform the same placement rotations in the
-        // same order.
-        let ds = adult::generate(400, 85);
-        let rf = RandomForest::fit(
-            &ds,
-            &RandomForestConfig {
-                n_trees: 4,
-                ..Default::default()
-            },
-            86,
-        );
-        let coeffs = chebyshev_fit_tanh(3.0, 4);
-        let nf = NeuralForest::from_forest(&rf, Activation::Poly { coeffs });
-        let hm = HrfModel::from_neural_forest(&nf, ds.n_features(), 2048).unwrap();
-        let p = hm.plan;
-        assert!(p.groups >= 3);
-        let server = HrfServer::new(hm);
-        let sched = server.schedule(3, true);
-        let pack_steps: Vec<usize> = sched
-            .ops
-            .iter()
-            .filter_map(|(seg, op)| match (seg, op) {
-                (Segment::Pack, ScheduleOp::Rotate { step, .. }) => Some(*step),
-                _ => None,
-            })
-            .collect();
-        let expect: Vec<usize> = (1..3).map(|g| p.slots - g * p.reduce_span).collect();
-        assert_eq!(pack_steps, expect);
     }
 
     #[test]

@@ -28,9 +28,11 @@
 //!   behind those sessions: exact `key_bytes` accounting, per-shard
 //!   LRU eviction under a global budget, and the eviction-safe
 //!   re-registration protocol (`SubmitError::KeysEvicted`).
-//! * [`runtime`] — loader/executor for the AOT-compiled JAX/Pallas
-//!   slot-model artifacts, used for the plaintext fast path and
-//!   cross-checking (pure-Rust f32 backend offline).
+//! * [`runtime`] — the schedule execution engine (one generic
+//!   interpreter over pluggable `ScheduleBackend`s: CKKS, f32 slots,
+//!   dry-run counting; plus the `SchedulePass` optimization pipeline)
+//!   and the loader for the AOT-compiled JAX/Pallas slot-model
+//!   artifacts, used for the plaintext fast path and cross-checking.
 //! * [`data`] — dataset plumbing and the synthetic Adult-Income
 //!   generator used in place of the UCI download (offline environment;
 //!   see DESIGN.md §Substitutions).

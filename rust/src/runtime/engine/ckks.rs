@@ -1,0 +1,145 @@
+//! [`CkksBackend`] — the homomorphic execution backend.
+//!
+//! Ports the CKKS interpreter that used to live as
+//! `HrfServer::run_schedule`: registers hold [`Ciphertext`]s, model
+//! operands resolve through the server's encoded-plaintext cache
+//! (`HrfServer::encode_operand`), and the evaluator's monotone
+//! counters back the engine's per-segment accounting, so the measured
+//! [`LayerCounts`](crate::hrf::server::LayerCounts) still equal the
+//! dry-run prediction op for op.
+
+use super::core::ScheduleBackend;
+use crate::ckks::evaluator::{Evaluator, OpCounts};
+use crate::ckks::keys::{GaloisKeys, RelinKey};
+use crate::ckks::rns::RnsPoly;
+use crate::ckks::{Ciphertext, Encoder};
+use crate::hrf::schedule::PlainOperand;
+use crate::hrf::server::HrfServer;
+
+/// Homomorphic backend: one evaluation session's worth of borrowed
+/// state. Key material (`rlk`, `gk`) belongs to the client session;
+/// the server contributes the packed model and its plaintext cache.
+pub struct CkksBackend<'a> {
+    server: &'a HrfServer,
+    ev: &'a mut Evaluator,
+    enc: &'a Encoder,
+    inputs: &'a [Ciphertext],
+    rlk: &'a RelinKey,
+    gk: &'a GaloisKeys,
+}
+
+impl<'a> CkksBackend<'a> {
+    pub fn new(
+        server: &'a HrfServer,
+        ev: &'a mut Evaluator,
+        enc: &'a Encoder,
+        inputs: &'a [Ciphertext],
+        rlk: &'a RelinKey,
+        gk: &'a GaloisKeys,
+    ) -> Self {
+        CkksBackend {
+            server,
+            ev,
+            enc,
+            inputs,
+            rlk,
+            gk,
+        }
+    }
+}
+
+impl ScheduleBackend for CkksBackend<'_> {
+    type Value = Ciphertext;
+    type Hoisted = Vec<RnsPoly>;
+    /// A CKKS score never leaves the ciphertext: `read_score` hands
+    /// back the (shared) register clone; callers on the hot path move
+    /// registers out of the engine's file instead.
+    type Score = Ciphertext;
+
+    fn load_input(&mut self, input: usize) -> Ciphertext {
+        self.inputs[input].clone()
+    }
+
+    fn rotate(&mut self, src: &Ciphertext, step: usize) -> Ciphertext {
+        self.ev.rotate(src, step, self.gk)
+    }
+
+    fn hoist(&mut self, src: &Ciphertext) -> Vec<RnsPoly> {
+        self.ev.hoist(src)
+    }
+
+    fn rotate_hoisted(
+        &mut self,
+        src: &Ciphertext,
+        hoisted: &Vec<RnsPoly>,
+        step: usize,
+    ) -> Ciphertext {
+        self.ev.rotate_hoisted(src, hoisted, step, self.gk)
+    }
+
+    fn add_assign(&mut self, dst: &mut Ciphertext, src: &mut Ciphertext) {
+        // Same-schedule-point scales differ by < 1e-9 relative; adopt
+        // the accumulator's (the legacy accumulator discipline).
+        src.scale = dst.scale;
+        self.ev.add_inplace(dst, src);
+    }
+
+    fn sub_plain(&mut self, reg: &mut Ciphertext, operand: PlainOperand) {
+        let pt = self
+            .server
+            .encode_operand(&self.ev.ctx, self.enc, operand, reg.level, reg.scale);
+        self.ev.sub_plain_inplace(reg, &pt);
+    }
+
+    fn add_plain(&mut self, reg: &mut Ciphertext, operand: PlainOperand) {
+        let pt = self
+            .server
+            .encode_operand(&self.ev.ctx, self.enc, operand, reg.level, reg.scale);
+        self.ev.add_plain_inplace(reg, &pt);
+    }
+
+    fn mul_plain_cached(&mut self, src: &Ciphertext, operand: PlainOperand) -> Ciphertext {
+        let delta = self.ev.ctx.params.scale;
+        let pt = self
+            .server
+            .encode_operand(&self.ev.ctx, self.enc, operand, src.level, delta);
+        self.ev.mul_plain(src, &pt)
+    }
+
+    fn mul_plain_rescale(&mut self, src: &Ciphertext, operand: PlainOperand) -> Ciphertext {
+        let delta = self.ev.ctx.params.scale;
+        let pt = self
+            .server
+            .encode_operand(&self.ev.ctx, self.enc, operand, src.level, delta);
+        self.ev.mul_plain_rescale(src, &pt)
+    }
+
+    fn add_const(&mut self, reg: &mut Ciphertext, value: f64) {
+        let pt = self
+            .enc
+            .encode_constant(&self.ev.ctx, value, reg.level, reg.scale);
+        self.ev.add_plain_inplace(reg, &pt);
+    }
+
+    fn rescale(&mut self, reg: &mut Ciphertext) {
+        self.ev.rescale(reg);
+    }
+
+    fn poly_activation(&mut self, src: &Ciphertext) -> Ciphertext {
+        self.ev
+            .eval_poly_power_basis(self.enc, src, &self.server.model.act_coeffs, self.rlk)
+    }
+
+    fn rotate_sum_grouped(&mut self, src: &Ciphertext, span: usize) -> Ciphertext {
+        self.ev.rotate_sum(src, span, self.gk)
+    }
+
+    // The slot stays an address — decryption happens client-side.
+    fn read_score(&mut self, value: &Ciphertext, _slot: usize) -> Ciphertext {
+        value.clone()
+    }
+
+    fn op_counts(&self) -> OpCounts {
+        self.ev.counts
+    }
+}

@@ -1,0 +1,213 @@
+//! The [`ScheduleBackend`] trait and the generic [`Engine`]
+//! interpreter — the single point where
+//! [`ScheduleOp`](crate::hrf::schedule::ScheduleOp) variants are
+//! dispatched for execution.
+
+use crate::ckks::evaluator::OpCounts;
+use crate::hrf::schedule::{HrfSchedule, PlainOperand, Reg, ScheduleOp};
+use crate::hrf::server::LayerCounts;
+use std::collections::HashMap;
+
+/// An execution backend for compiled HRF schedules.
+///
+/// Implementors provide the semantics of each schedule primitive over
+/// their own register [`Value`](ScheduleBackend::Value) type; the
+/// generic [`Engine`] provides everything else (register file, hoist
+/// table, segment accounting, output addressing). A new execution
+/// target — a GPU kernel emitter, a PJRT/XLA lowering, a cost model —
+/// is one impl of this trait, not a new interpreter.
+///
+/// Model operands arrive as symbolic [`PlainOperand`]s; each backend
+/// resolves them against its own parameter representation (encoded
+/// plaintexts for CKKS, f32 slot vectors for the slot model, nothing
+/// for the dry run).
+pub trait ScheduleBackend {
+    /// Contents of one virtual register (one ciphertext / slot vector).
+    type Value;
+    /// Precomputed key-switch state produced by [`hoist`](Self::hoist)
+    /// and consumed by [`rotate_hoisted`](Self::rotate_hoisted).
+    type Hoisted;
+    /// What [`read_score`](Self::read_score) yields for one
+    /// (class, sample) output.
+    type Score;
+
+    /// `r[dst] := inputs[input]`.
+    fn load_input(&mut self, input: usize) -> Self::Value;
+    /// `rot(src, step)` — plain key-switch rotation (cyclic left shift
+    /// of the slot vector).
+    fn rotate(&mut self, src: &Self::Value, step: usize) -> Self::Value;
+    /// Precompute `src`'s key-switch decomposition for subsequent
+    /// [`rotate_hoisted`](Self::rotate_hoisted) calls on the same
+    /// register.
+    fn hoist(&mut self, src: &Self::Value) -> Self::Hoisted;
+    /// `rot(src, step)` using `src`'s hoisted decomposition.
+    fn rotate_hoisted(
+        &mut self,
+        src: &Self::Value,
+        hoisted: &Self::Hoisted,
+        step: usize,
+    ) -> Self::Value;
+    /// `dst += src` (ct+ct; `src` may adopt `dst`'s scale — the
+    /// accumulator discipline — which is why it is `&mut`).
+    fn add_assign(&mut self, dst: &mut Self::Value, src: &mut Self::Value);
+    /// `reg -= operand` (operand resolved at `reg`'s level & scale).
+    fn sub_plain(&mut self, reg: &mut Self::Value, operand: PlainOperand);
+    /// `reg += operand` (operand resolved at `reg`'s level & scale).
+    fn add_plain(&mut self, reg: &mut Self::Value, operand: PlainOperand);
+    /// `src ⊙ operand` (operand resolved at scale Δ through the
+    /// backend's operand cache).
+    fn mul_plain_cached(&mut self, src: &Self::Value, operand: PlainOperand) -> Self::Value;
+    /// Fused `rescale(src ⊙ operand)` — the execution target of the
+    /// `FuseMulRescale` pass. The default is the unfused pair, so a
+    /// backend only overrides this when it has (or wants to account
+    /// for) a genuinely fused kernel.
+    fn mul_plain_rescale(&mut self, src: &Self::Value, operand: PlainOperand) -> Self::Value {
+        let mut v = self.mul_plain_cached(src, operand);
+        self.rescale(&mut v);
+        v
+    }
+    /// `reg += value` (constant resolved at `reg`'s level & scale).
+    fn add_const(&mut self, reg: &mut Self::Value, value: f64);
+    /// Rescale `reg` by the top chain prime (no-op outside CKKS).
+    fn rescale(&mut self, reg: &mut Self::Value);
+    /// `P(src)` — the model's activation polynomial.
+    fn poly_activation(&mut self, src: &Self::Value) -> Self::Value;
+    /// Group-local rotate-and-sum over `span` (`log₂ span` steps; slot
+    /// `g·span` of the result holds group `g`'s total).
+    fn rotate_sum_grouped(&mut self, src: &Self::Value, span: usize) -> Self::Value;
+    /// Read the score a [`ScoreRef`](crate::hrf::schedule::ScoreRef)
+    /// addresses out of its register.
+    fn read_score(&mut self, value: &Self::Value, slot: usize) -> Self::Score;
+
+    /// Monotone op-counter snapshot. The engine diffs this at segment
+    /// boundaries to build per-layer [`LayerCounts`]; backends that do
+    /// not meter ops keep the default (all-zero ⇒ zero `LayerCounts`).
+    fn op_counts(&self) -> OpCounts {
+        OpCounts::default()
+    }
+}
+
+/// Result of one [`Engine::run`]: the final register file plus the
+/// per-segment op counts measured through the backend's
+/// [`op_counts`](ScheduleBackend::op_counts) snapshots.
+pub struct EngineRun<B: ScheduleBackend> {
+    /// Final register file; callers move the registers named by
+    /// `HrfSchedule::outputs` out (no output value is deep-cloned).
+    pub regs: Vec<Option<B::Value>>,
+    /// Op counts bucketed by pipeline segment.
+    pub counts: LayerCounts,
+}
+
+/// Disjoint mutable access to two registers of the engine's file.
+fn two_regs<T>(regs: &mut [Option<T>], a: usize, b: usize) -> (&mut T, &mut T) {
+    assert_ne!(a, b, "aliasing register pair");
+    if a < b {
+        let (lo, hi) = regs.split_at_mut(b);
+        (lo[a].as_mut().expect("reg a"), hi[0].as_mut().expect("reg b"))
+    } else {
+        let (lo, hi) = regs.split_at_mut(a);
+        (hi[0].as_mut().expect("reg a"), lo[b].as_mut().expect("reg b"))
+    }
+}
+
+/// The generic schedule interpreter.
+pub struct Engine;
+
+impl Engine {
+    /// Replay `sched` against `backend`. This match is the **only**
+    /// execution dispatch over [`ScheduleOp`] in the codebase: CKKS,
+    /// f32 slots and the dry-run counter all funnel through it, so an
+    /// op added here (and to the backends' primitive set) exists
+    /// everywhere at once.
+    pub fn run<B: ScheduleBackend>(sched: &HrfSchedule, backend: &mut B) -> EngineRun<B> {
+        let mut regs: Vec<Option<B::Value>> = (0..sched.n_regs).map(|_| None).collect();
+        let mut hoists: HashMap<Reg, B::Hoisted> = HashMap::new();
+        let mut counts = LayerCounts::default();
+        let mut cur_seg = None;
+        let mut snap = backend.op_counts();
+
+        for (seg, op) in &sched.ops {
+            if cur_seg != Some(*seg) {
+                if let Some(s) = cur_seg {
+                    *counts.bucket_mut(s) += backend.op_counts().diff(&snap);
+                }
+                snap = backend.op_counts();
+                cur_seg = Some(*seg);
+            }
+            match *op {
+                ScheduleOp::LoadInput { dst, input } => {
+                    regs[dst] = Some(backend.load_input(input));
+                }
+                ScheduleOp::Rotate { dst, src, step } => {
+                    let r = backend.rotate(regs[src].as_ref().expect("reg"), step);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::Hoist { src } => {
+                    let h = backend.hoist(regs[src].as_ref().expect("reg"));
+                    hoists.insert(src, h);
+                }
+                ScheduleOp::RotateHoisted { dst, src, step }
+                | ScheduleOp::ExtractScore {
+                    dst,
+                    src,
+                    slot: step,
+                } => {
+                    let h = hoists.get(&src).expect("hoisted register");
+                    let r = backend.rotate_hoisted(regs[src].as_ref().expect("reg"), h, step);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::AddAssign { dst, src } => {
+                    let (d, s) = two_regs(&mut regs, dst, src);
+                    backend.add_assign(d, s);
+                }
+                ScheduleOp::SubPlain { reg, operand } => {
+                    backend.sub_plain(regs[reg].as_mut().expect("reg"), operand);
+                }
+                ScheduleOp::AddPlain { reg, operand } => {
+                    backend.add_plain(regs[reg].as_mut().expect("reg"), operand);
+                }
+                ScheduleOp::MulPlainCached { dst, src, operand } => {
+                    let r = backend.mul_plain_cached(regs[src].as_ref().expect("reg"), operand);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::MulPlainRescale { dst, src, operand } => {
+                    let r = backend.mul_plain_rescale(regs[src].as_ref().expect("reg"), operand);
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::AddConst { reg, value } => {
+                    backend.add_const(regs[reg].as_mut().expect("reg"), value);
+                }
+                ScheduleOp::Rescale { reg } => {
+                    backend.rescale(regs[reg].as_mut().expect("reg"));
+                }
+                ScheduleOp::PolyActivation { dst, src } => {
+                    let r = backend.poly_activation(regs[src].as_ref().expect("reg"));
+                    regs[dst] = Some(r);
+                }
+                ScheduleOp::RotateSumGrouped { dst, src, span } => {
+                    let r = backend.rotate_sum_grouped(regs[src].as_ref().expect("reg"), span);
+                    regs[dst] = Some(r);
+                }
+            }
+        }
+        if let Some(s) = cur_seg {
+            *counts.bucket_mut(s) += backend.op_counts().diff(&snap);
+        }
+        EngineRun { regs, counts }
+    }
+
+    /// Read every schedule output through the backend's
+    /// [`read_score`](ScheduleBackend::read_score), one entry per
+    /// `HrfSchedule::outputs` element (class-major).
+    pub fn read_outputs<B: ScheduleBackend>(
+        sched: &HrfSchedule,
+        run: &EngineRun<B>,
+        backend: &mut B,
+    ) -> Vec<B::Score> {
+        sched
+            .outputs
+            .iter()
+            .map(|o| backend.read_score(run.regs[o.reg].as_ref().expect("output register"), o.slot))
+            .collect()
+    }
+}

@@ -1,0 +1,116 @@
+//! [`CountingBackend`] — the dry-run backend.
+//!
+//! Registers are unit values; every primitive just books the op counts
+//! its CKKS counterpart would meter (and records rotation steps), so
+//! one [`Engine::run`](super::Engine::run) over this backend yields
+//! the schedule's predicted [`OpCounts`] per segment **and** its
+//! Galois-step requirements without touching a ciphertext.
+//! `HrfSchedule::predicted_counts` / `rotation_steps` — hence the
+//! Table-1 predictions and `HrfServer::eval_key_requirements` — are
+//! thin wrappers over it.
+
+use super::core::ScheduleBackend;
+use crate::ckks::evaluator::OpCounts;
+use crate::hrf::schedule::PlainOperand;
+use std::collections::BTreeSet;
+
+/// Dry-run op counter. `act_counts` is the precomputed cost of one
+/// activation-polynomial evaluation (`HrfSchedule::act_counts`, a
+/// mirror of the power-basis evaluator's counters).
+pub struct CountingBackend {
+    act_counts: OpCounts,
+    counts: OpCounts,
+    steps: BTreeSet<usize>,
+}
+
+impl CountingBackend {
+    pub fn new(act_counts: OpCounts) -> Self {
+        CountingBackend {
+            act_counts,
+            counts: OpCounts::default(),
+            steps: BTreeSet::new(),
+        }
+    }
+
+    /// Every rotation step the replayed schedule performed — the
+    /// session's Galois keys must cover exactly this set.
+    pub fn into_rotation_steps(self) -> BTreeSet<usize> {
+        self.steps
+    }
+
+    fn book_rotation(&mut self, step: usize) {
+        // Step-0 rotations are identity clones in the evaluator and
+        // are neither counted nor keyed there; mirror that.
+        if step != 0 {
+            self.counts.rotate += 1;
+            self.steps.insert(step);
+        }
+    }
+}
+
+impl ScheduleBackend for CountingBackend {
+    type Value = ();
+    type Hoisted = ();
+    type Score = ();
+
+    fn load_input(&mut self, _input: usize) {}
+
+    fn rotate(&mut self, _src: &(), step: usize) {
+        self.book_rotation(step);
+    }
+
+    fn hoist(&mut self, _src: &()) {}
+
+    fn rotate_hoisted(&mut self, _src: &(), _hoisted: &(), step: usize) {
+        self.book_rotation(step);
+    }
+
+    fn add_assign(&mut self, _dst: &mut (), _src: &mut ()) {
+        self.counts.add += 1;
+    }
+
+    fn sub_plain(&mut self, _reg: &mut (), _operand: PlainOperand) {
+        self.counts.add_plain += 1;
+    }
+
+    fn add_plain(&mut self, _reg: &mut (), _operand: PlainOperand) {
+        self.counts.add_plain += 1;
+    }
+
+    fn mul_plain_cached(&mut self, _src: &(), _operand: PlainOperand) {
+        self.counts.mul_plain += 1;
+    }
+
+    fn mul_plain_rescale(&mut self, _src: &(), _operand: PlainOperand) {
+        // One fused kernel invocation (mirrors
+        // `Evaluator::mul_plain_rescale`'s accounting).
+        self.counts.fused_mul_rescale += 1;
+    }
+
+    fn add_const(&mut self, _reg: &mut (), _value: f64) {
+        self.counts.add_plain += 1;
+    }
+
+    fn rescale(&mut self, _reg: &mut ()) {
+        self.counts.rescale += 1;
+    }
+
+    fn poly_activation(&mut self, _src: &()) {
+        self.counts += self.act_counts;
+    }
+
+    fn rotate_sum_grouped(&mut self, _src: &(), span: usize) {
+        let mut step = 1usize;
+        while step < span {
+            self.book_rotation(step);
+            self.counts.add += 1;
+            step <<= 1;
+        }
+    }
+
+    fn read_score(&mut self, _value: &(), _slot: usize) {}
+
+    fn op_counts(&self) -> OpCounts {
+        self.counts
+    }
+}

@@ -1,0 +1,63 @@
+//! The schedule execution engine: **one program, many backends**.
+//!
+//! A compiled [`HrfSchedule`](crate::hrf::HrfSchedule) is the repo's
+//! portable artifact of the paper's Algorithms 1–3. Before this
+//! subsystem existed it was interpreted three separate times — CKKS in
+//! `hrf::server`, f32 slots in `runtime::slot_model`, and a dry-run
+//! counter in `hrf::schedule` — so every new op or fusion had to be
+//! implemented thrice. Now there is exactly **one** interpreter:
+//!
+//! * [`ScheduleBackend`] (in [`core`]) — the execution-engine API: an
+//!   associated register [`Value`](ScheduleBackend::Value) type plus
+//!   one method per schedule primitive (`load_input`, `rotate`,
+//!   `hoist`/`rotate_hoisted`, `add_assign`, `sub_plain`, `add_plain`,
+//!   `mul_plain_cached`, `mul_plain_rescale`, `add_const`, `rescale`,
+//!   `poly_activation`, `rotate_sum_grouped`, `read_score`).
+//! * [`Engine::run`] — the single generic interpreter; the **only**
+//!   place in the codebase that dispatches on
+//!   [`ScheduleOp`](crate::hrf::schedule::ScheduleOp) variants for
+//!   execution. It owns the register file, the hoisted-digit table and
+//!   the per-[`Segment`](crate::hrf::schedule::Segment) op accounting;
+//!   backends own nothing but their primitive semantics.
+//!
+//! Three backends ship today:
+//!
+//! * [`CkksBackend`] ([`ckks`]) — the homomorphic executor: wraps the
+//!   CKKS [`Evaluator`](crate::ckks::evaluator::Evaluator), the
+//!   server's encoded-plaintext cache and the session's evaluation
+//!   keys. `HrfServer::execute` runs on it.
+//! * [`SlotBackend`] ([`slots`]) — plaintext f32 slot vectors:
+//!   rotations are cyclic shifts, rescales are no-ops. The slot-model
+//!   fast path and the HE↔plaintext oracle run on it.
+//! * [`CountingBackend`] ([`counting`]) — a dry run over unit values:
+//!   accumulates predicted [`OpCounts`](crate::ckks::evaluator::OpCounts)
+//!   and the set of rotation steps. `HrfSchedule::predicted_counts`
+//!   and `rotation_steps` (hence Galois-key requirements and the
+//!   Table-1 predictions) are thin wrappers over it.
+//!
+//! A fourth backend is one trait impl away: the ROADMAP's PJRT/XLA
+//! executor now means "implement [`ScheduleBackend`] by lowering each
+//! primitive to an HLO op", not "write another interpreter".
+//!
+//! # Passes
+//!
+//! [`pass`] adds the optimization layer: a [`SchedulePass`] rewrites a
+//! schedule in place and a [`PassPipeline`] sequences passes
+//! (`HrfSchedule::optimize`). Because every backend executes the same
+//! op list, a peephole transform is written once and holds on all of
+//! them — verified by the cross-backend parity tests in
+//! `tests/engine_parity.rs`. The first pass, [`FuseMulRescale`], fuses
+//! adjacent `MulPlainCached` + `Rescale` pairs into the fused
+//! `MulPlainRescale` op (the ROADMAP's schedule-level fusion item).
+
+pub mod ckks;
+pub mod core;
+pub mod counting;
+pub mod pass;
+pub mod slots;
+
+pub use self::core::{Engine, EngineRun, ScheduleBackend};
+pub use ckks::CkksBackend;
+pub use counting::CountingBackend;
+pub use pass::{FuseMulRescale, PassPipeline, SchedulePass};
+pub use slots::SlotBackend;

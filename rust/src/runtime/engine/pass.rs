@@ -1,0 +1,116 @@
+//! Schedule optimization passes.
+//!
+//! A [`SchedulePass`] is a peephole transform over a compiled
+//! [`HrfSchedule`]'s op list; a [`PassPipeline`] sequences passes and
+//! is applied through [`HrfSchedule::optimize`]. Because execution is
+//! centralized in the generic [`Engine`](super::Engine), a pass is
+//! written **once** and holds on every backend — the cross-backend
+//! parity tests (`tests/engine_parity.rs`) pin CKKS bit-identity and
+//! f32 equality for transformed schedules.
+//!
+//! Passes must preserve (a) the register dataflow — same values in the
+//! output registers — and (b) the slot addressing of
+//! `HrfSchedule::outputs`. They may change op counts; the dry-run
+//! predictions stay truthful automatically because they are derived
+//! from the transformed op list.
+
+use crate::hrf::schedule::{HrfSchedule, ScheduleOp};
+
+/// One in-place schedule rewrite. `Send + Sync` because pipelines live
+/// inside the `Arc`-shared `HrfServer`.
+pub trait SchedulePass: Send + Sync {
+    /// Stable name for logs and dumps.
+    fn name(&self) -> &'static str;
+    /// Transform `sched` in place; returns whether anything changed.
+    fn run(&self, sched: &mut HrfSchedule) -> bool;
+}
+
+/// An ordered sequence of passes.
+pub struct PassPipeline {
+    passes: Vec<Box<dyn SchedulePass>>,
+}
+
+impl PassPipeline {
+    /// No passes: schedules execute exactly as compiled.
+    pub fn empty() -> Self {
+        PassPipeline { passes: Vec::new() }
+    }
+
+    /// The default production pipeline (currently [`FuseMulRescale`]).
+    pub fn standard() -> Self {
+        PassPipeline::empty().with(FuseMulRescale)
+    }
+
+    /// Append a pass.
+    pub fn with(mut self, pass: impl SchedulePass + 'static) -> Self {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    /// The passes, in application order (the slice form
+    /// [`HrfSchedule::optimize`] consumes).
+    pub fn passes(&self) -> &[Box<dyn SchedulePass>] {
+        &self.passes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Pass names in application order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+}
+
+impl Default for PassPipeline {
+    /// [`PassPipeline::standard`] — what `HrfServer::new` installs.
+    fn default() -> Self {
+        PassPipeline::standard()
+    }
+}
+
+/// Fuse adjacent `MulPlainCached` + `Rescale` pairs (same register,
+/// same segment) into the fused [`ScheduleOp::MulPlainRescale`] op —
+/// the ROADMAP's first schedule-level fusion. In the HRF pipeline this
+/// catches the per-class layer-3 mask multiplies (C pairs per
+/// schedule; the layer-2 diagonal products already share one lazy
+/// rescale and are untouched). Execution is bit-identical by
+/// construction — the CKKS fused kernel performs exactly the unfused
+/// limb math — while the schedule shrinks by one op per pair and the
+/// pair is metered as a single fused invocation.
+pub struct FuseMulRescale;
+
+impl SchedulePass for FuseMulRescale {
+    fn name(&self) -> &'static str {
+        "fuse-mul-rescale"
+    }
+
+    fn run(&self, sched: &mut HrfSchedule) -> bool {
+        let mut out = Vec::with_capacity(sched.ops.len());
+        let mut changed = false;
+        let mut i = 0;
+        while i < sched.ops.len() {
+            if i + 1 < sched.ops.len() {
+                let (seg_a, op_a) = sched.ops[i];
+                let (seg_b, op_b) = sched.ops[i + 1];
+                if let (
+                    ScheduleOp::MulPlainCached { dst, src, operand },
+                    ScheduleOp::Rescale { reg },
+                ) = (op_a, op_b)
+                {
+                    if seg_a == seg_b && reg == dst {
+                        out.push((seg_a, ScheduleOp::MulPlainRescale { dst, src, operand }));
+                        changed = true;
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+            out.push(sched.ops[i]);
+            i += 1;
+        }
+        sched.ops = out;
+        changed
+    }
+}

@@ -1,0 +1,125 @@
+//! [`SlotBackend`] — the plaintext f32 execution backend.
+//!
+//! Registers are f32 slot vectors: rotations become exact cyclic
+//! shifts, plaintext muls become element-wise products, rescales are
+//! no-ops and the activation is evaluated by Horner. This replaces the
+//! bespoke schedule walker that used to live in
+//! [`slot_model`](crate::runtime::slot_model) — the slot model now
+//! runs the very same [`Engine`](super::Engine) the CKKS executor
+//! runs, so HE↔plaintext parity holds by construction *including* for
+//! pass-transformed schedules.
+
+use super::core::ScheduleBackend;
+use crate::hrf::schedule::PlainOperand;
+use crate::runtime::slot_model::SlotModelParams;
+
+/// f32 slot backend borrowing the converted model parameters and the
+/// input slot vectors. Inputs beyond `inputs.len()` read as all-zero
+/// vectors, so a pre-packed slot vector can be fed as input 0 to a
+/// multi-input schedule: the `Pack` segment's placement rotations then
+/// shift zeros and add nothing, leaving the packed input intact.
+pub struct SlotBackend<'a> {
+    params: &'a SlotModelParams,
+    inputs: &'a [Vec<f32>],
+    slots: usize,
+}
+
+impl<'a> SlotBackend<'a> {
+    pub fn new(params: &'a SlotModelParams, inputs: &'a [Vec<f32>]) -> Self {
+        let slots = params.shape.s;
+        SlotBackend {
+            params,
+            inputs,
+            slots,
+        }
+    }
+
+    fn rotl(&self, v: &[f32], r: usize) -> Vec<f32> {
+        let s = self.slots;
+        (0..s).map(|i| v[(i + r) % s]).collect()
+    }
+}
+
+impl ScheduleBackend for SlotBackend<'_> {
+    type Value = Vec<f32>;
+    type Hoisted = ();
+    type Score = f32;
+
+    fn load_input(&mut self, input: usize) -> Vec<f32> {
+        self.inputs
+            .get(input)
+            .cloned()
+            .unwrap_or_else(|| vec![0.0; self.slots])
+    }
+
+    fn rotate(&mut self, src: &Vec<f32>, step: usize) -> Vec<f32> {
+        self.rotl(src, step)
+    }
+
+    fn hoist(&mut self, _src: &Vec<f32>) {}
+
+    fn rotate_hoisted(&mut self, src: &Vec<f32>, _hoisted: &(), step: usize) -> Vec<f32> {
+        self.rotl(src, step)
+    }
+
+    fn add_assign(&mut self, dst: &mut Vec<f32>, src: &mut Vec<f32>) {
+        for (a, b) in dst.iter_mut().zip(src.iter()) {
+            *a += b;
+        }
+    }
+
+    fn sub_plain(&mut self, reg: &mut Vec<f32>, operand: PlainOperand) {
+        for (a, b) in reg.iter_mut().zip(self.params.operand(operand)) {
+            *a -= b;
+        }
+    }
+
+    fn add_plain(&mut self, reg: &mut Vec<f32>, operand: PlainOperand) {
+        for (a, b) in reg.iter_mut().zip(self.params.operand(operand)) {
+            *a += b;
+        }
+    }
+
+    fn mul_plain_cached(&mut self, src: &Vec<f32>, operand: PlainOperand) -> Vec<f32> {
+        src.iter()
+            .zip(self.params.operand(operand))
+            .map(|(a, b)| a * b)
+            .collect()
+    }
+
+    // `mul_plain_rescale` keeps the trait default (multiply, then the
+    // no-op rescale), so fused and unfused schedules are bit-identical
+    // here too.
+
+    fn add_const(&mut self, reg: &mut Vec<f32>, value: f64) {
+        let v = value as f32;
+        for a in reg.iter_mut() {
+            *a += v;
+        }
+    }
+
+    fn rescale(&mut self, _reg: &mut Vec<f32>) {}
+
+    fn poly_activation(&mut self, src: &Vec<f32>) -> Vec<f32> {
+        src.iter().map(|&x| self.params.activation(x)).collect()
+    }
+
+    fn rotate_sum_grouped(&mut self, src: &Vec<f32>, span: usize) -> Vec<f32> {
+        // Same step order as the HE evaluator's rotate-and-sum, so the
+        // f32 accumulation order matches across backends.
+        let mut acc = src.clone();
+        let mut step = 1usize;
+        while step < span {
+            let rot = self.rotl(&acc, step);
+            for (a, b) in acc.iter_mut().zip(&rot) {
+                *a += b;
+            }
+            step <<= 1;
+        }
+        acc
+    }
+
+    fn read_score(&mut self, value: &Vec<f32>, slot: usize) -> f32 {
+        value[slot]
+    }
+}

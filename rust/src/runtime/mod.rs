@@ -1,12 +1,34 @@
-//! Runtime for the AOT slot model compiled from `python/compile`.
+//! Execution runtime: the schedule engine and the AOT slot model.
 //!
-//! The Rust coordinator uses this for (a) the plaintext fast path
-//! (clients who opt out of encryption get the same slot-level model,
-//! batched) and (b) an independently-derived numerical cross-check of
-//! the homomorphic evaluator. `aot.py`'s `manifest.txt` is the loader
-//! contract; execution currently runs on a pure-Rust f32 backend (the
-//! PJRT/XLA executor is unavailable offline — see `slot_model.rs`).
+//! Since the engine refactor this module is organized around **one
+//! schedule, many backends**:
+//!
+//! * [`engine`] — the execution-engine API. A compiled
+//!   [`HrfSchedule`](crate::hrf::HrfSchedule) is replayed by the
+//!   single generic [`Engine`](engine::Engine) against any
+//!   [`ScheduleBackend`](engine::ScheduleBackend): CKKS ciphertexts
+//!   ([`CkksBackend`](engine::CkksBackend), driven by
+//!   `HrfServer::execute`), plaintext f32 slots
+//!   ([`SlotBackend`](engine::SlotBackend)), or a dry-run op counter
+//!   ([`CountingBackend`](engine::CountingBackend), behind the Table-1
+//!   predictions and Galois-key derivation). Schedule-level
+//!   optimizations are [`SchedulePass`](engine::SchedulePass)es,
+//!   written once and valid on every backend.
+//! * [`slot_model`] — loader/executor for the AOT slot model compiled
+//!   from `python/compile`. The Rust coordinator uses it for (a) the
+//!   plaintext fast path (clients who opt out of encryption get the
+//!   same slot-level model, batched) and (b) an independently-derived
+//!   numerical cross-check of the homomorphic evaluator. `aot.py`'s
+//!   `manifest.txt` is the loader contract; execution runs through the
+//!   engine's f32 backend (the PJRT/XLA executor is unavailable
+//!   offline — restoring it now means implementing `ScheduleBackend`,
+//!   not writing a fourth interpreter).
 
+pub mod engine;
 pub mod slot_model;
 
+pub use engine::{
+    CkksBackend, CountingBackend, Engine, EngineRun, FuseMulRescale, PassPipeline, ScheduleBackend,
+    SchedulePass, SlotBackend,
+};
 pub use slot_model::{SlotModel, SlotModelParams, SlotShape};

@@ -6,16 +6,20 @@
 //!
 //! Offline note: the PJRT/XLA executor (the `xla` crate) is not
 //! available in this environment, so the compiled HLO files are treated
-//! as opaque artifacts and the computation itself runs as a pure-Rust
-//! f32 **walk of the compiled HE schedule**
-//! ([`HrfSchedule`](crate::hrf::HrfSchedule)): the same op list the
-//! CKKS executor replays is interpreted over plaintext slot vectors
-//! (rotations become cyclic shifts, plaintext muls become element-wise
-//! products, rescales are no-ops). Since both sides run literally one
-//! program, the python↔rust golden parity and the HE↔plaintext oracle
-//! agreement hold by construction. The manifest stays the loader
-//! contract, so swapping the execution backend back to PJRT is a local
-//! change to this file.
+//! as opaque artifacts and the computation itself runs through the
+//! generic schedule [`Engine`](crate::runtime::engine::Engine) on the
+//! f32 [`SlotBackend`](crate::runtime::engine::SlotBackend): the very
+//! interpreter the CKKS executor uses replays the same compiled
+//! [`HrfSchedule`](crate::hrf::HrfSchedule) over plaintext slot
+//! vectors (rotations become cyclic shifts, plaintext muls become
+//! element-wise products, rescales are no-ops). Since every backend
+//! runs literally one program through one interpreter, the
+//! python↔rust golden parity and the HE↔plaintext oracle agreement
+//! hold by construction — including for pass-optimized schedules. The
+//! manifest stays the loader contract, and restoring a PJRT execution
+//! path now means implementing
+//! [`ScheduleBackend`](crate::runtime::engine::ScheduleBackend), not
+//! writing another interpreter.
 //!
 //! Batching comes in two flavors, mirroring the HE side:
 //!
@@ -25,8 +29,9 @@
 //!   carrying `plan.groups` observations at `group_span` strides, the
 //!   plaintext oracle of the batched homomorphic evaluation.
 
-use crate::hrf::schedule::{PlainOperand, ScheduleOp, Segment};
+use crate::hrf::schedule::PlainOperand;
 use crate::hrf::{HrfModel, HrfSchedule};
+use crate::runtime::engine::{Engine, PassPipeline, SlotBackend};
 use std::path::Path;
 
 /// Static shape configuration of the compiled model.
@@ -47,9 +52,10 @@ pub struct SlotModelParams {
     b: Vec<f32>,
     w: Vec<Vec<f32>>,
     coeffs: Vec<f32>,
-    /// Compiled full-capacity folded schedule (B = groups): the
-    /// plaintext executor interprets its Layer/Act segments and reads
-    /// scores straight from the slot-addressed outputs.
+    /// Compiled full-capacity folded schedule (B = groups), optimized
+    /// by the standard pass pipeline like the server's: the engine
+    /// replays it on the f32 backend and reads scores straight from
+    /// the slot-addressed outputs.
     schedule: HrfSchedule,
     /// Number of sample groups per slot vector.
     groups: usize,
@@ -90,13 +96,17 @@ impl SlotModelParams {
             b: f32v(&model.b_slots),
             w: model.w_slots.iter().map(|w| f32v(w)).collect(),
             coeffs,
-            schedule: HrfSchedule::compile(model, p.groups, true),
+            schedule: HrfSchedule::compile(model, p.groups, true)
+                .optimize(PassPipeline::standard().passes())
+                .assume_prepacked(),
             groups: p.groups,
             shape,
         })
     }
 
-    fn activation(&self, x: f32) -> f32 {
+    /// Horner evaluation of the padded activation coefficients — the
+    /// f32 backend's `poly_activation` primitive.
+    pub(crate) fn activation(&self, x: f32) -> f32 {
         let mut acc = 0.0f32;
         for &c in self.coeffs.iter().rev() {
             acc = acc * x + c;
@@ -104,7 +114,9 @@ impl SlotModelParams {
         acc
     }
 
-    fn operand(&self, op: PlainOperand) -> &[f32] {
+    /// Resolve a schedule operand to its f32 slot vector — the f32
+    /// backend's operand store (mirror of `HrfModel::operand_slots`).
+    pub(crate) fn operand(&self, op: PlainOperand) -> &[f32] {
         match op {
             PlainOperand::Thresholds => &self.t,
             PlainOperand::Biases => &self.b,
@@ -113,110 +125,45 @@ impl SlotModelParams {
         }
     }
 
-    /// The full slot dataflow as a plaintext walk of the compiled
-    /// schedule: Layer/Act segments are interpreted over f32 vectors
-    /// (`Pack` is skipped — the input arrives pre-packed — and folded
-    /// schedules have no `Extract` segment); scores are read from the
-    /// schedule's slot-addressed outputs. Returns `groups × C` scores.
-    fn forward_groups(&self, x_slots: &[f32]) -> Vec<Vec<f32>> {
-        let s = self.shape.s;
-        let rotl = |v: &[f32], r: usize| -> Vec<f32> {
-            (0..s).map(|i| v[(i + r) % s]).collect()
-        };
-        let mut regs: Vec<Option<Vec<f32>>> = vec![None; self.schedule.n_regs];
-        // The input arrives pre-packed, so the whole Pack segment
-        // collapses to loading it into the schedule's input register.
-        let r_in = self
-            .schedule
-            .ops
-            .iter()
-            .find_map(|(_, op)| match op {
-                ScheduleOp::LoadInput { dst, input: 0 } => Some(*dst),
-                _ => None,
-            })
-            .expect("schedule loads input 0");
-        regs[r_in] = Some(x_slots.to_vec());
-        for (seg, op) in &self.schedule.ops {
-            if matches!(seg, Segment::Pack | Segment::Extract) {
-                continue;
-            }
-            match *op {
-                ScheduleOp::LoadInput { .. } | ScheduleOp::Hoist { .. } => {}
-                ScheduleOp::Rotate { dst, src, step }
-                | ScheduleOp::RotateHoisted { dst, src, step }
-                | ScheduleOp::ExtractScore {
-                    dst,
-                    src,
-                    slot: step,
-                } => {
-                    regs[dst] = Some(rotl(regs[src].as_ref().expect("reg"), step));
-                }
-                ScheduleOp::AddAssign { dst, src } => {
-                    let sv = regs[src].clone().expect("reg");
-                    let d = regs[dst].as_mut().expect("reg");
-                    for (a, b) in d.iter_mut().zip(&sv) {
-                        *a += b;
-                    }
-                }
-                ScheduleOp::SubPlain { reg, operand } => {
-                    let o = self.operand(operand);
-                    let r = regs[reg].as_mut().expect("reg");
-                    for (a, b) in r.iter_mut().zip(o) {
-                        *a -= b;
-                    }
-                }
-                ScheduleOp::AddPlain { reg, operand } => {
-                    let o = self.operand(operand);
-                    let r = regs[reg].as_mut().expect("reg");
-                    for (a, b) in r.iter_mut().zip(o) {
-                        *a += b;
-                    }
-                }
-                ScheduleOp::MulPlainCached { dst, src, operand } => {
-                    let prod: Vec<f32> = regs[src]
-                        .as_ref()
-                        .expect("reg")
-                        .iter()
-                        .zip(self.operand(operand))
-                        .map(|(a, b)| a * b)
-                        .collect();
-                    regs[dst] = Some(prod);
-                }
-                ScheduleOp::AddConst { reg, value } => {
-                    let v = value as f32;
-                    for a in regs[reg].as_mut().expect("reg").iter_mut() {
-                        *a += v;
-                    }
-                }
-                ScheduleOp::Rescale { .. } => {}
-                ScheduleOp::PolyActivation { dst, src } => {
-                    let out: Vec<f32> = regs[src]
-                        .as_ref()
-                        .expect("reg")
-                        .iter()
-                        .map(|&x| self.activation(x))
-                        .collect();
-                    regs[dst] = Some(out);
-                }
-                ScheduleOp::RotateSumGrouped { dst, src, span } => {
-                    let mut acc = regs[src].as_ref().expect("reg").clone();
-                    let mut step = 1usize;
-                    while step < span {
-                        let rot = rotl(&acc, step);
-                        for (a, b) in acc.iter_mut().zip(&rot) {
-                            *a += b;
-                        }
-                        step <<= 1;
-                    }
-                    regs[dst] = Some(acc);
-                }
-            }
-        }
-        let mut rows = vec![vec![0.0f32; self.shape.c]; self.groups];
-        for o in &self.schedule.outputs {
-            rows[o.sample][o.class] = regs[o.reg].as_ref().expect("output reg")[o.slot];
+    /// Run an arbitrary compiled schedule over per-sample f32 inputs
+    /// through the generic engine, returning `sched.b × C` score rows
+    /// (sample-major). `inputs[g]` is sample `g`'s slot vector; the
+    /// schedule's `Pack` segment assembles them.
+    pub fn run_schedule(&self, sched: &HrfSchedule, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert!(
+            inputs.len() >= sched.b,
+            "schedule packs {} inputs, got {} (use run_schedule_prepacked for one packed vector)",
+            sched.b,
+            inputs.len()
+        );
+        self.run_inputs(sched, inputs)
+    }
+
+    /// Run a schedule whose whole batch arrives as **one pre-packed**
+    /// slot vector: any placement ops the schedule still carries read
+    /// the missing inputs as zeros and change nothing (the cached
+    /// full-capacity schedule is `assume_prepacked`-stripped of them
+    /// entirely).
+    pub fn run_schedule_prepacked(&self, sched: &HrfSchedule, packed: &[f32]) -> Vec<Vec<f32>> {
+        let inputs = vec![packed.to_vec()];
+        self.run_inputs(sched, &inputs)
+    }
+
+    fn run_inputs(&self, sched: &HrfSchedule, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut backend = SlotBackend::new(self, inputs);
+        let run = Engine::run(sched, &mut backend);
+        let scores = Engine::read_outputs(sched, &run, &mut backend);
+        let mut rows = vec![vec![0.0f32; self.shape.c]; sched.b];
+        for (o, s) in sched.outputs.iter().zip(scores) {
+            rows[o.sample][o.class] = s;
         }
         rows
+    }
+
+    /// The full slot dataflow of the cached full-capacity schedule on
+    /// one pre-packed slot vector. Returns `groups × C` scores.
+    fn forward_groups(&self, x_slots: &[f32]) -> Vec<Vec<f32>> {
+        self.run_schedule_prepacked(&self.schedule, x_slots)
     }
 }
 
@@ -421,6 +368,51 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pass_optimized_schedule_is_exact_on_slot_backend() {
+        // The fusion pass must be a no-op numerically on the f32
+        // backend (rescale is a no-op there), and feeding B separate
+        // single-sample vectors through the schedule's own Pack
+        // segment must equal the pre-packed fast path bit for bit.
+        let (ds, hm) = hrf(2048);
+        let shape = SlotShape {
+            s: 2048,
+            k: hm.plan.k,
+            c: hm.plan.c,
+            m: 5,
+            b: 8,
+        };
+        let params = SlotModelParams::from_hrf(&hm, shape).unwrap();
+        let n = hm.plan.groups.min(3);
+        assert!(n >= 2);
+        let xs: Vec<Vec<f64>> = ds.x.iter().take(n).cloned().collect();
+        let singles: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| {
+                reshuffle_and_pack(&hm, x)
+                    .iter()
+                    .map(|&v| v as f32)
+                    .collect()
+            })
+            .collect();
+        let raw = HrfSchedule::compile(&hm, n, true);
+        let fused = raw
+            .clone()
+            .optimize(crate::runtime::engine::PassPipeline::standard().passes());
+        assert!(fused.ops.len() < raw.ops.len(), "pass must fuse");
+        let a = params.run_schedule(&raw, &singles);
+        let b = params.run_schedule(&fused, &singles);
+        assert_eq!(a, b, "fusion changed f32 results");
+        // Pack-segment path == pre-packed fast path.
+        let packed: Vec<f32> = reshuffle_and_pack_group(&hm, &xs)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let sm = SlotModel { shape };
+        let rows = sm.infer_packed(&packed, n, &params).unwrap();
+        assert_eq!(&a[..], &rows[..n], "Pack segment deviates from pre-packed input");
     }
 
     #[test]

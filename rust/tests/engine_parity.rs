@@ -1,0 +1,260 @@
+//! Cross-backend parity for the schedule engine (ISSUE 4):
+//!
+//! One compiled [`HrfSchedule`] executed through the generic engine
+//! must mean the same thing on every backend, with and without the
+//! fusion pass, for B ∈ {1, 2, max}:
+//!
+//! * **CkksBackend** (via `HrfServer::execute`) — decrypted scores
+//!   match the plaintext oracle; pass-optimized execution is
+//!   **bit-identical** to both the unoptimized execution and the
+//!   retained hand-written `eval_reference` path.
+//! * **SlotBackend** — f32 scores from the same schedules (raw and
+//!   fused) are bit-identical to each other and agree with the
+//!   decrypted CKKS scores and the f64 slot oracle.
+//! * **CountingBackend** — dry-run predictions equal the CKKS
+//!   backend's measured counters op for op, including the fused
+//!   `mul_plain_rescale` accounting.
+
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::hrf::client::{reshuffle_and_pack, HrfClient};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
+use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
+use cryptotree::rng::Xoshiro256pp;
+use cryptotree::runtime::{PassPipeline, SlotModelParams, SlotShape};
+use std::sync::Arc;
+
+fn synth_forest(k: usize, l: usize, c: usize, d: usize, rng: &mut Xoshiro256pp) -> NeuralForest {
+    let trees = (0..l)
+        .map(|_| NeuralTree {
+            tau: (0..k - 1).map(|_| rng.next_index(d)).collect(),
+            t: (0..k - 1).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            v: (0..k)
+                .map(|_| (0..k - 1).map(|_| rng.uniform(-0.25, 0.25)).collect())
+                .collect(),
+            b: (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            w: (0..c)
+                .map(|_| (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect())
+                .collect(),
+            beta: (0..c).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+            real_leaves: k,
+            n_classes: c,
+        })
+        .collect();
+    NeuralForest {
+        trees,
+        alphas: (0..l).map(|_| rng.uniform(0.1, 1.0)).collect(),
+        k,
+        n_classes: c,
+        activation: Activation::Poly {
+            coeffs: vec![0.0, 1.0], // identity: fits the depth-4 ring
+        },
+    }
+}
+
+fn ct_bits_equal(a: &Ciphertext, b: &Ciphertext) -> bool {
+    a.level == b.level
+        && a.scale.to_bits() == b.scale.to_bits()
+        && a.c0.limbs == b.c0.limbs
+        && a.c1.limbs == b.c1.limbs
+}
+
+#[test]
+fn cross_backend_parity_with_and_without_fusion() {
+    let mut rng = Xoshiro256pp::new(9001);
+    let d = 8;
+    let nf = synth_forest(4, 4, 2, d, &mut rng);
+    let params = Arc::new(CkksParams::build("engine-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+
+    let mut kg = KeyGenerator::new(&ctx, 9002);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(8.min(plan.groups)));
+    let mut client = HrfClient::new(Encryptor::new(pk, 9003), Decryptor::new(kg.secret_key()));
+
+    // Two servers over the same model: standard pipeline vs no passes.
+    let server_fused = HrfServer::new(hm.clone());
+    let server_raw = HrfServer::with_passes(hm.clone(), PassPipeline::empty());
+
+    // f32 slot-model parameters for the SlotBackend runs.
+    let shape = SlotShape {
+        s: plan.slots,
+        k: plan.k,
+        c: plan.c,
+        m: hm.act_coeffs.len(),
+        b: 8,
+    };
+    let slot_params = SlotModelParams::from_hrf(&hm, shape).unwrap();
+
+    let b_max = plan.groups.min(5);
+    for b in [1usize, 2, b_max] {
+        let xs: Vec<Vec<f64>> = (0..b)
+            .map(|_| (0..d).map(|_| rng.uniform(0.0, 1.0)).collect())
+            .collect();
+        let cts: Vec<Ciphertext> = xs
+            .iter()
+            .map(|x| client.encrypt_input(&ctx, &enc, &server_raw.model, x))
+            .collect();
+
+        // --- CKKS: fused vs raw vs hand-written reference ----------
+        let mut ev_f = Evaluator::new(ctx.clone());
+        let ex_f = server_fused.execute(&mut ev_f, &enc, &EncRequest::group(&cts), &rlk, &gk);
+        let counts_f = ex_f.counts;
+        let outs_f = ex_f.into_class_scores();
+
+        let mut ev_r = Evaluator::new(ctx.clone());
+        let ex_r = server_raw.execute(&mut ev_r, &enc, &EncRequest::group(&cts), &rlk, &gk);
+        let counts_r = ex_r.counts;
+        let outs_r = ex_r.into_class_scores();
+
+        let mut ev_ref = Evaluator::new(ctx.clone());
+        let packed = if b == 1 {
+            cts[0].clone()
+        } else {
+            server_raw.pack_group(&mut ev_ref, &cts, &gk)
+        };
+        let (reference, _) = server_raw.eval_reference(&mut ev_ref, &enc, &packed, &rlk, &gk);
+
+        assert_eq!(outs_f.len(), plan.c);
+        for ((f, r), refr) in outs_f.iter().zip(&outs_r).zip(&reference) {
+            assert!(ct_bits_equal(f, r), "B={b}: fusion changed ciphertext bits");
+            assert!(
+                ct_bits_equal(f, refr),
+                "B={b}: engine deviates from hand-written reference bits"
+            );
+        }
+
+        // --- Counting backend vs measured CKKS counters ------------
+        assert_eq!(counts_f, server_fused.predicted_counts(b, true), "B={b} fused");
+        assert_eq!(counts_r, server_raw.predicted_counts(b, true), "B={b} raw");
+        let tf = counts_f.total();
+        let tr = counts_r.total();
+        assert_eq!(tf.fused_mul_rescale, plan.c as u64, "B={b}: C fused pairs");
+        assert_eq!(tr.fused_mul_rescale, 0, "B={b}: raw server must not fuse");
+        assert_eq!(tr.mul_plain - tf.mul_plain, plan.c as u64);
+        assert_eq!(tr.rescale - tf.rescale, plan.c as u64);
+        assert_eq!(tf.multiplications(), tr.multiplications());
+        assert_eq!(tf.rescales(), tr.rescales());
+        assert_eq!(tf.rotate, tr.rotate, "B={b}: fusion must not touch rotations");
+
+        // --- SlotBackend: raw vs fused schedules, vs CKKS, vs oracle -
+        let singles: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| {
+                reshuffle_and_pack(&server_raw.model, x)
+                    .iter()
+                    .map(|&v| v as f32)
+                    .collect()
+            })
+            .collect();
+        let rows_raw = slot_params.run_schedule(&server_raw.schedule(b, true), &singles);
+        let rows_fused = slot_params.run_schedule(&server_fused.schedule(b, true), &singles);
+        assert_eq!(rows_raw, rows_fused, "B={b}: fusion changed f32 results");
+
+        for (g, x) in xs.iter().enumerate() {
+            let (he_scores, _) =
+                client.decrypt_scores_at(&ctx, &enc, &outs_f, plan.score_slot(g));
+            let oracle = server_raw
+                .model
+                .forward_slots_plain(&reshuffle_and_pack(&server_raw.model, x));
+            for ((he, f32s), oc) in he_scores.iter().zip(&rows_raw[g]).zip(&oracle) {
+                assert!(
+                    (he - oc).abs() < 5e-3,
+                    "B={b} sample {g}: CKKS {he} vs oracle {oc}"
+                );
+                assert!(
+                    (*f32s as f64 - oc).abs() < 1e-3,
+                    "B={b} sample {g}: slot backend {f32s} vs oracle {oc}"
+                );
+                assert!(
+                    (he - *f32s as f64).abs() < 5e-3,
+                    "B={b} sample {g}: CKKS {he} vs slot backend {f32s}"
+                );
+            }
+        }
+    }
+}
+
+/// The deprecated wrapper trio must stay exact shims over `execute`.
+#[test]
+#[allow(deprecated)]
+fn deprecated_wrappers_match_execute() {
+    let mut rng = Xoshiro256pp::new(9101);
+    let d = 8;
+    let nf = synth_forest(4, 3, 2, d, &mut rng);
+    let params = Arc::new(CkksParams::build("wrap-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let mut kg = KeyGenerator::new(&ctx, 9102);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(3.min(plan.groups)));
+    let mut client = HrfClient::new(Encryptor::new(pk, 9103), Decryptor::new(kg.secret_key()));
+    let server = HrfServer::new(hm);
+
+    let b = plan.groups.min(3);
+    let xs: Vec<Vec<f64>> = (0..b)
+        .map(|_| (0..d).map(|_| rng.uniform(0.0, 1.0)).collect())
+        .collect();
+    let cts: Vec<Ciphertext> = xs
+        .iter()
+        .map(|x| client.encrypt_input(&ctx, &enc, &server.model, x))
+        .collect();
+
+    let mut ev_a = Evaluator::new(ctx.clone());
+    let (w_single, _) = server.eval(&mut ev_a, &enc, &cts[0], &rlk, &gk);
+    let mut ev_b = Evaluator::new(ctx.clone());
+    let e_single = server
+        .execute(&mut ev_b, &enc, &EncRequest::single(&cts[0]), &rlk, &gk)
+        .into_class_scores();
+    for (w, e) in w_single.iter().zip(&e_single) {
+        assert!(ct_bits_equal(w, e), "eval wrapper deviates from execute");
+    }
+
+    let mut ev_c = Evaluator::new(ctx.clone());
+    let (w_folded, _) = server.eval_batch_folded(&mut ev_c, &enc, &cts, &rlk, &gk);
+    let mut ev_d = Evaluator::new(ctx.clone());
+    let e_folded = server
+        .execute(&mut ev_d, &enc, &EncRequest::group(&cts), &rlk, &gk)
+        .into_class_scores();
+    for (w, e) in w_folded.iter().zip(&e_folded) {
+        assert!(
+            ct_bits_equal(w, e),
+            "eval_batch_folded wrapper deviates from execute"
+        );
+    }
+
+    // EncExecution's per-sample accessors agree with the batch shape
+    // and clone the shared folded group bit-for-bit.
+    let mut ev_g = Evaluator::new(ctx.clone());
+    let ex = server.execute(&mut ev_g, &enc, &EncRequest::group(&cts), &rlk, &gk);
+    assert_eq!(ex.n_samples(), b);
+    for g in 0..b {
+        assert_eq!(ex.slot(g), plan.score_slot(g));
+        let r = ex.response(g);
+        assert_eq!(r.slot, plan.score_slot(g));
+        for (a, e) in r.scores.iter().zip(&e_folded) {
+            assert!(ct_bits_equal(a, e), "response({g}) deviates from class scores");
+        }
+    }
+
+    let mut ev_e = Evaluator::new(ctx.clone());
+    let (w_batch, _) = server.eval_batch(&mut ev_e, &enc, &cts, &rlk, &gk);
+    let mut ev_f = Evaluator::new(ctx.clone());
+    let e_batch = server
+        .execute(&mut ev_f, &enc, &EncRequest::group_slot0(&cts), &rlk, &gk)
+        .into_per_sample();
+    assert_eq!(w_batch.len(), e_batch.len());
+    for (ws, es) in w_batch.iter().zip(&e_batch) {
+        for (w, e) in ws.iter().zip(es) {
+            assert!(ct_bits_equal(w, e), "eval_batch wrapper deviates from execute");
+        }
+    }
+}

@@ -25,7 +25,7 @@ use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, KeyGenerator};
 use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
 use cryptotree::hrf::client::{reshuffle_and_pack, reshuffle_and_pack_group, HrfClient};
-use cryptotree::hrf::{HrfModel, HrfPlan, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfPlan, HrfServer};
 use cryptotree::nrf::activation::chebyshev_fit_tanh;
 use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
 use cryptotree::rng::Xoshiro256pp;
@@ -198,7 +198,9 @@ fn batched_he_eval_matches_plain_per_sample() {
 
     let xs: Vec<Vec<f64>> = (0..b).map(|_| rand_x(d, &mut rng)).collect();
     let ct = client.encrypt_batch(&ctx, &enc, &server.model, &xs);
-    let (outs, _) = server.eval(&mut ev, &enc, &ct, &rlk, &gk);
+    let outs = server
+        .execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
+        .into_class_scores();
     let results = client.decrypt_scores_batch(&ctx, &enc, &server.model, &outs, b);
     assert_eq!(results.len(), b);
     for (g, ((scores, _), x)) in results.iter().zip(&xs).enumerate() {
@@ -244,7 +246,9 @@ fn server_side_pack_group_matches_individual_evals() {
         .iter()
         .map(|x| client.encrypt_input(&ctx, &enc, &server.model, x))
         .collect();
-    let (per_sample, _) = server.eval_batch(&mut ev, &enc, &cts, &rlk, &gk);
+    let per_sample = server
+        .execute(&mut ev, &enc, &EncRequest::group_slot0(&cts), &rlk, &gk)
+        .into_per_sample();
     assert_eq!(per_sample.len(), b);
     for (g, (outs, x)) in per_sample.iter().zip(&xs).enumerate() {
         let (scores, _) = client.decrypt_scores(&ctx, &enc, outs);

@@ -22,7 +22,7 @@ use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
 use cryptotree::hrf::client::{reshuffle_and_pack, HrfClient};
 use cryptotree::hrf::schedule::poly_op_counts;
-use cryptotree::hrf::{HrfModel, HrfServer};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
 use cryptotree::nrf::activation::chebyshev_fit_tanh;
 use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
 use cryptotree::rng::Xoshiro256pp;
@@ -122,9 +122,11 @@ fn compiled_schedule_bit_identical_to_reference() {
             .map(|x| w.client.encrypt_input(&w.ctx, &w.enc, &w.server.model, x))
             .collect();
         let mut ev = Evaluator::new(w.ctx.clone());
-        let (folded, counts) =
-            w.server
-                .eval_batch_folded(&mut ev, &w.enc, &cts, &w.rlk, &w.gk);
+        let ex = w
+            .server
+            .execute(&mut ev, &w.enc, &EncRequest::group(&cts), &w.rlk, &w.gk);
+        let counts = ex.counts;
+        let folded = ex.into_class_scores();
         // Reference: hand-written pack + eval (no extraction).
         let mut ev_ref = Evaluator::new(w.ctx.clone());
         let packed = if b == 1 {
@@ -204,7 +206,9 @@ fn schedule_derived_key_requirements_suffice() {
         .iter()
         .map(|x| client.encrypt_input(&ctx, &enc, &server.model, x))
         .collect();
-    let (outs, _) = server.eval_batch_folded(&mut ev, &enc, &cts, &rlk, &gk);
+    let outs = server
+        .execute(&mut ev, &enc, &EncRequest::group(&cts), &rlk, &gk)
+        .into_class_scores();
     for (g, x) in xs.iter().enumerate() {
         let (scores, _) = client.decrypt_scores_at(&ctx, &enc, &outs, plan.score_slot(g));
         let expect = server
@@ -242,7 +246,7 @@ fn folded_schedule_saves_c_times_b_minus_1_rotations() {
         let mut ev_folded = Evaluator::new(w.ctx.clone());
         let _ = w
             .server
-            .eval_batch_folded(&mut ev_folded, &w.enc, &cts, &w.rlk, &w.gk);
+            .execute(&mut ev_folded, &w.enc, &EncRequest::group(&cts), &w.rlk, &w.gk);
         let folded_rot = ev_folded.counts.rotate;
 
         let saving = (plan.c * (b - 1)) as u64;
@@ -258,7 +262,7 @@ fn folded_schedule_saves_c_times_b_minus_1_rotations() {
         let mut ev_unfolded = Evaluator::new(w.ctx.clone());
         let _ = w
             .server
-            .eval_batch(&mut ev_unfolded, &w.enc, &cts, &w.rlk, &w.gk);
+            .execute(&mut ev_unfolded, &w.enc, &EncRequest::group_slot0(&cts), &w.rlk, &w.gk);
         assert_eq!(ev_unfolded.counts.rotate, legacy_rot, "B={b}: unfolded count");
 
         // Dry-run predictions agree with both measurements.
@@ -277,8 +281,10 @@ fn folded_schedule_saves_c_times_b_minus_1_rotations() {
 
 /// The unfolded schedule preserves the slot-0 per-sample contract
 /// (its hoisted extraction is numerically equivalent to the legacy
-/// plain rotations).
+/// plain rotations). Exercised through the deprecated `eval_batch`
+/// wrapper on purpose — the wrapper contract is pinned here.
 #[test]
+#[allow(deprecated)]
 fn unfolded_schedule_keeps_slot0_contract() {
     let mut rng = Xoshiro256pp::new(7006);
     let mut w = world(7300);
