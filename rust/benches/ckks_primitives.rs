@@ -1,8 +1,13 @@
 //! E6 — CKKS primitive microbenchmarks (the §Perf working set):
 //! NTT, encode/decode, encrypt/decrypt, add, ct×pt, ct×ct (+relin),
-//! rescale, rotation, and the two polynomial-evaluation strategies.
+//! rescale, rotation, and the two polynomial-evaluation strategies,
+//! plus a limb-parallel worker sweep over the key-switch-heavy ops.
+//!
+//! Emits `BENCH_ckks_primitives.json` — (op, ns/op, threads, params)
+//! records — so the perf trajectory is tracked across PRs (see
+//! ROADMAP.md §Benchmarking).
 
-use cryptotree::bench_harness::{bench, print_table};
+use cryptotree::bench_harness::{bench, print_table, write_json, BenchRecord, Timing};
 use cryptotree::ckks::evaluator::Evaluator;
 use cryptotree::ckks::ntt::NttTable;
 use cryptotree::ckks::rns::CkksContext;
@@ -23,46 +28,84 @@ fn main() {
     let mut rng = Xoshiro256pp::new(73);
     let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
 
-    let mut rows = Vec::new();
+    let mut rows: Vec<Timing> = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let push = |rows: &mut Vec<Timing>, records: &mut Vec<BenchRecord>, t: Timing, w: usize| {
+        records.push(BenchRecord::from_timing(&t, w, params.name));
+        rows.push(t);
+    };
 
     // Raw NTT on one limb.
     let table = NttTable::new(ctx.q(0), ctx.n());
     let mut poly: Vec<u64> = (0..ctx.n()).map(|_| rng.next_below(ctx.q(0))).collect();
-    rows.push(bench(&format!("ntt forward (N={})", ctx.n()), 3, 20, || {
+    let t = bench(&format!("ntt forward (N={})", ctx.n()), 3, 20, || {
         table.forward(&mut poly);
-    }));
-    rows.push(bench("ntt inverse", 3, 20, || table.inverse(&mut poly)));
+    });
+    push(&mut rows, &mut records, t, 1);
+    let t = bench("ntt inverse", 3, 20, || table.inverse(&mut poly));
+    push(&mut rows, &mut records, t, 1);
 
-    rows.push(bench("encode (full slots)", 2, 10, || {
+    let t = bench("encode (full slots)", 2, 10, || {
         enc.encode(&ctx, &z, params.max_level(), params.scale)
-    }));
+    });
+    push(&mut rows, &mut records, t, 1);
     let pt = enc.encode(&ctx, &z, params.max_level(), params.scale);
-    rows.push(bench("decode", 2, 10, || enc.decode(&ctx, &pt)));
-    rows.push(bench("encrypt", 2, 10, || encryptor.encrypt(&ctx, &pt)));
+    let t = bench("decode", 2, 10, || enc.decode(&ctx, &pt));
+    push(&mut rows, &mut records, t, 1);
+    let t = bench("encrypt", 2, 10, || encryptor.encrypt(&ctx, &pt));
+    push(&mut rows, &mut records, t, 1);
     let ct = encryptor.encrypt(&ctx, &pt);
-    rows.push(bench("decrypt+decode", 2, 10, || {
+    let t = bench("decrypt+decode", 2, 10, || {
         decryptor.decrypt_slots(&ctx, &enc, &ct)
-    }));
-    rows.push(bench("add (ct+ct)", 3, 20, || ev.add(&ct, &ct)));
-    rows.push(bench("mul_plain (ct*pt)", 3, 20, || ev.mul_plain(&ct, &pt)));
-    rows.push(bench("mul+relin (ct*ct)", 1, 8, || ev.mul(&ct, &ct, &rlk)));
-    rows.push(bench("square+relin", 1, 8, || ev.square(&ct, &rlk)));
-    rows.push(bench("rotate(1)", 1, 8, || ev.rotate(&ct, 1, &gk)));
-    rows.push(bench("rescale", 2, 10, || {
-        let mut c = ct.clone();
-        ev.rescale(&mut c);
-        c
-    }));
+    });
+    push(&mut rows, &mut records, t, 1);
+    let t = bench("add (ct+ct)", 3, 20, || ev.add(&ct, &ct));
+    push(&mut rows, &mut records, t, 1);
+    let t = bench("mul_plain (ct*pt)", 3, 20, || ev.mul_plain(&ct, &pt));
+    push(&mut rows, &mut records, t, 1);
+
+    // The key-switch-heavy ops and the Barrett/Shoup kernels, swept
+    // over the limb-parallel worker count (1 = serial baseline; the
+    // ≥2× single-thread targets in ISSUE 5 read the w=1 rows).
+    for &w in &[1usize, 2, 4] {
+        ctx.set_workers(w);
+        let t = bench(&format!("mul+relin (ct*ct) [w={w}]"), 1, 8, || {
+            ev.mul(&ct, &ct, &rlk)
+        });
+        push(&mut rows, &mut records, t, w);
+        let t = bench(&format!("square+relin [w={w}]"), 1, 8, || {
+            ev.square(&ct, &rlk)
+        });
+        push(&mut rows, &mut records, t, w);
+        let t = bench(&format!("rotate(1) [w={w}]"), 1, 8, || ev.rotate(&ct, 1, &gk));
+        push(&mut rows, &mut records, t, w);
+        let digits = ev.hoist(&ct);
+        let t = bench(&format!("rotate_hoisted(1) [w={w}]"), 1, 8, || {
+            ev.rotate_hoisted(&ct, &digits, 1, &gk)
+        });
+        push(&mut rows, &mut records, t, w);
+        let t = bench(&format!("rescale [w={w}]"), 2, 10, || {
+            let mut c = ct.clone();
+            ev.rescale(&mut c);
+            c
+        });
+        push(&mut rows, &mut records, t, w);
+    }
+    ctx.set_workers(1);
+
     let coeffs = cryptotree::nrf::activation::chebyshev_fit_tanh(3.0, 4);
-    rows.push(bench("poly deg4 (horner)", 1, 4, || {
+    let t = bench("poly deg4 (horner)", 1, 4, || {
         ev.eval_poly_horner(&enc, &ct, &coeffs, &rlk)
-    }));
-    rows.push(bench("poly deg4 (power basis)", 1, 4, || {
+    });
+    push(&mut rows, &mut records, t, 1);
+    let t = bench("poly deg4 (power basis)", 1, 4, || {
         ev.eval_poly_power_basis(&enc, &ct, &coeffs, &rlk)
-    }));
+    });
+    push(&mut rows, &mut records, t, 1);
 
     print_table(
         &format!("CKKS primitives — {} (depth {})", params.name, params.depth()),
         &rows,
     );
+    write_json("BENCH_ckks_primitives.json", &records).expect("write bench json");
 }

@@ -11,7 +11,7 @@
 //! batching, by contrast, amortizes a *single* evaluation across B
 //! samples, so it pays even on one core.
 
-use cryptotree::bench_harness::{bench, print_metric_table};
+use cryptotree::bench_harness::{bench, print_metric_table, write_json, BenchRecord};
 use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, KeyGenerator};
 use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
@@ -65,6 +65,9 @@ fn main() {
     let mut client = HrfClient::new(Encryptor::new(pk, 44), Decryptor::new(kg.secret_key()));
 
     // ---- SIMD batching: samples/sec for B in {1, max} --------------
+    // Records land in BENCH_server_throughput.json (ROADMAP
+    // §Benchmarking) so the serving-path trajectory is tracked per PR.
+    let mut records: Vec<BenchRecord> = Vec::new();
     let mut rows = Vec::new();
     for b in [1usize, b_max] {
         let xs: Vec<Vec<f64>> = (0..b).map(|i| ds.x[i].clone()).collect();
@@ -73,6 +76,7 @@ fn main() {
         let t = bench(&format!("hrf eval B={b}"), 1, 3, || {
             server.execute(&mut ev, &enc, &EncRequest::single(&ct), &rlk, &gk)
         });
+        records.push(BenchRecord::from_timing(&t, ctx.workers(), params.name));
         rows.push(vec![
             format!("{b}"),
             format!("{:?}", t.median),
@@ -155,6 +159,14 @@ fn main() {
         }
         let elapsed = t0.elapsed();
         let snap = coord.metrics.snapshot();
+        // `threads` is the limb-parallel count (1 here); the
+        // coordinator's request-level worker count lives in the op name.
+        records.push(BenchRecord::from_ns(
+            &format!("enc request (coordinator, workers={workers})"),
+            elapsed.as_secs_f64() * 1e9 / n_req as f64,
+            ctx.workers(),
+            params.name,
+        ));
         rows.push(vec![
             workers.to_string(),
             format!("{:.3}", n_req as f64 / elapsed.as_secs_f64()),
@@ -240,4 +252,6 @@ fn main() {
     println!("\nBurst rows show the depth-scaled target filling groups; paced rows show");
     println!("the idle grace trading fill for latency. Pick enc_batch for the SLO, let");
     println!("the adaptive target harvest batching whenever load actually builds.");
+
+    write_json("BENCH_server_throughput.json", &records).expect("write bench json");
 }

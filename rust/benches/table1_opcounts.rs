@@ -247,8 +247,8 @@ fn main() {
     for (a, b) in outs_a.iter().zip(&outs_b) {
         assert_eq!(a.level, b.level);
         assert_eq!(a.scale.to_bits(), b.scale.to_bits());
-        assert_eq!(a.c0.limbs, b.c0.limbs, "fusion changed c0 bits");
-        assert_eq!(a.c1.limbs, b.c1.limbs, "fusion changed c1 bits");
+        assert_eq!(a.c0.data(), b.c0.data(), "fusion changed c0 bits");
+        assert_eq!(a.c1.data(), b.c1.data(), "fusion changed c1 bits");
     }
     assert_eq!(
         ev_a.counts.fused_mul_rescale,

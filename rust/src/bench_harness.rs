@@ -1,8 +1,9 @@
 //! Minimal benchmarking harness (criterion is unavailable offline).
 //!
-//! Provides warmup + repeated timing with median / p95 statistics and
-//! aligned table printing, used by every `harness = false` bench binary
-//! under `rust/benches/`.
+//! Provides warmup + repeated timing with median / p95 statistics,
+//! aligned table printing, and a machine-readable JSON writer
+//! ([`write_json`], see ROADMAP.md §Benchmarking) used by every
+//! `harness = false` bench binary under `rust/benches/`.
 
 use std::time::{Duration, Instant};
 
@@ -53,6 +54,82 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f:
 pub fn black_box<T>(x: T) -> T {
     // std::hint::black_box is stable since 1.66.
     std::hint::black_box(x)
+}
+
+/// One machine-readable benchmark data point: operation name, median
+/// nanoseconds per op, the limb-parallel thread count it ran with and
+/// the parameter-set label. Serialized by [`write_json`] so the perf
+/// trajectory is comparable across PRs.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub op: String,
+    pub ns_per_op: f64,
+    pub threads: usize,
+    pub params: String,
+}
+
+impl BenchRecord {
+    /// Record a [`Timing`]'s median as ns/op.
+    pub fn from_timing(t: &Timing, threads: usize, params: &str) -> Self {
+        BenchRecord {
+            op: t.name.clone(),
+            ns_per_op: t.median.as_secs_f64() * 1e9,
+            threads,
+            params: params.to_string(),
+        }
+    }
+
+    /// Record a raw ns/op figure (for throughput-style benches that
+    /// measure outside the `bench` helper).
+    pub fn from_ns(op: &str, ns_per_op: f64, threads: usize, params: &str) -> Self {
+        BenchRecord {
+            op: op.to_string(),
+            ns_per_op,
+            threads,
+            params: params.to_string(),
+        }
+    }
+}
+
+/// Minimal JSON string escaping (the crate is dependency-free).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize records as a JSON array (stable field order).
+pub fn to_json(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"op\": \"{}\", \"ns_per_op\": {:.1}, \"threads\": {}, \"params\": \"{}\"}}{}\n",
+            json_escape(&r.op),
+            r.ns_per_op,
+            r.threads,
+            json_escape(&r.params),
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Write records to `path` as JSON (see ROADMAP.md §Benchmarking for
+/// the `BENCH_*.json` convention).
+pub fn write_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(records))?;
+    println!("wrote {} records to {path}", records.len());
+    Ok(())
 }
 
 /// Pretty-print a vector of timings as an aligned table.
@@ -136,5 +213,37 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
         assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(5)).ends_with("s"));
+    }
+
+    #[test]
+    fn json_records_render_and_escape() {
+        let recs = vec![
+            BenchRecord::from_ns("rotate(1)", 1234.56, 4, "fast-n8192-d8"),
+            BenchRecord::from_ns("weird \"op\"\\", 1.0, 1, "toy"),
+        ];
+        let j = to_json(&recs);
+        assert!(j.starts_with('[') && j.ends_with(']'));
+        assert!(j.contains("\"op\": \"rotate(1)\""));
+        assert!(j.contains("\"ns_per_op\": 1234.6"));
+        assert!(j.contains("\"threads\": 4"));
+        assert!(j.contains("\"params\": \"fast-n8192-d8\""));
+        assert!(j.contains("weird \\\"op\\\"\\\\"));
+        // exactly one comma separator for two records
+        assert_eq!(j.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn from_timing_uses_median() {
+        let t = Timing {
+            name: "x".into(),
+            iters: 3,
+            mean: Duration::from_micros(9),
+            median: Duration::from_micros(10),
+            p95: Duration::from_micros(11),
+            min: Duration::from_micros(8),
+        };
+        let r = BenchRecord::from_timing(&t, 2, "p");
+        assert!((r.ns_per_op - 10_000.0).abs() < 1e-6);
+        assert_eq!(r.threads, 2);
     }
 }

@@ -31,7 +31,7 @@ impl Ciphertext {
     /// Serialized size in bytes (2 polys × limbs × N × 8B) — used by
     /// the coordinator for transport accounting.
     pub fn size_bytes(&self) -> usize {
-        2 * self.c0.limbs.len() * self.c0.limbs[0].len() * 8
+        2 * self.c0.data().len() * 8
     }
 }
 
@@ -103,9 +103,7 @@ impl Decryptor {
     /// Decrypt: m = c0 + c1·s.
     pub fn decrypt(&self, ctx: &CkksContext, ct: &Ciphertext) -> Plaintext {
         let mut s = self.sk.s.clone();
-        s.special = false;
-        s.limbs.truncate(ct.level + 1);
-        s.level = ct.level;
+        s.restrict(ct.level);
         let mut m = ct.c1.clone();
         m.mul_assign(ctx, &s);
         m.add_assign(ctx, &ct.c0);
@@ -137,9 +135,7 @@ impl RnsPoly {
     /// coefficient and NTT form.
     pub fn drop_to_level_ntt(&mut self, _ctx: &CkksContext, level: usize) {
         debug_assert!(!self.special);
-        debug_assert!(level <= self.level);
-        self.limbs.truncate(level + 1);
-        self.level = level;
+        self.drop_to_level(level);
     }
 }
 

@@ -11,6 +11,7 @@ use super::encoder::Encoder;
 use super::encrypt::{Ciphertext, Plaintext};
 use super::keys::{apply_ksw, apply_ksw_decomposed, decompose, GaloisKeys, RelinKey};
 use super::rns::{ContextRef, RnsPoly};
+use super::scratch::Scratch;
 
 /// Homomorphic operation counters (Table 1 of the paper).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -85,12 +86,20 @@ impl std::ops::Add for OpCounts {
     }
 }
 
-/// The server-side evaluator. Owns the context reference and counters;
-/// key material is passed per call (it belongs to the client session —
-/// see `coordinator::session`).
+/// The server-side evaluator. Owns the context reference, counters and
+/// a private limb-buffer pool ([`Scratch`]) that recycles every
+/// temporary the hot ops make (tensor products, key-switch digits,
+/// hoisted rotations, retired activation powers); key material is
+/// passed per call (it belongs to the client session — see
+/// `coordinator::session`).
 pub struct Evaluator {
     pub ctx: ContextRef,
     pub counts: OpCounts,
+    /// Recycled limb buffers for the hot paths (never shared; one pool
+    /// per evaluator, i.e. per worker thread). Crate-private so the
+    /// pool's zeroing/recycling invariants stay behind the evaluator's
+    /// entry points.
+    pub(crate) scratch: Scratch,
 }
 
 impl Evaluator {
@@ -98,6 +107,23 @@ impl Evaluator {
         Evaluator {
             ctx,
             counts: OpCounts::default(),
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// Recycle a ciphertext's limb buffers into the pool.
+    fn recycle_ct(&mut self, ct: Ciphertext) {
+        self.scratch.put(ct.c0.into_data());
+        self.scratch.put(ct.c1.into_data());
+    }
+
+    /// Clone a ciphertext with pool-backed limb buffers.
+    fn clone_ct_in(&mut self, ct: &Ciphertext) -> Ciphertext {
+        Ciphertext {
+            c0: ct.c0.clone_in(&mut self.scratch),
+            c1: ct.c1.clone_in(&mut self.scratch),
+            level: ct.level,
+            scale: ct.scale,
         }
     }
 
@@ -141,6 +167,7 @@ impl Evaluator {
             Self::scales_match(a.scale, b2.scale);
             a.c0.add_assign(&self.ctx, &b2.c0);
             a.c1.add_assign(&self.ctx, &b2.c1);
+            self.recycle_ct(b2);
         } else {
             Self::scales_match(a.scale, b.scale);
             a.c0.add_assign(&self.ctx, &b.c0);
@@ -150,20 +177,39 @@ impl Evaluator {
     }
 
     pub fn sub(&mut self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
-        let (mut a, mut b) = (a.clone(), b.clone());
-        self.align(&mut a, &mut b);
-        Self::scales_match(a.scale, b.scale);
-        a.c0.sub_assign(&self.ctx, &b.c0);
-        a.c1.sub_assign(&self.ctx, &b.c1);
-        self.counts.add += 1;
+        let mut a = a.clone();
+        self.sub_inplace(&mut a, b);
         a
+    }
+
+    /// In-place `a -= b` (same level alignment rules as
+    /// [`Evaluator::add_inplace`]).
+    pub fn sub_inplace(&mut self, a: &mut Ciphertext, b: &Ciphertext) {
+        if a.level != b.level {
+            let mut b2 = b.clone();
+            self.align(a, &mut b2);
+            Self::scales_match(a.scale, b2.scale);
+            a.c0.sub_assign(&self.ctx, &b2.c0);
+            a.c1.sub_assign(&self.ctx, &b2.c1);
+            self.recycle_ct(b2);
+        } else {
+            Self::scales_match(a.scale, b.scale);
+            a.c0.sub_assign(&self.ctx, &b.c0);
+            a.c1.sub_assign(&self.ctx, &b.c1);
+        }
+        self.counts.add += 1;
     }
 
     pub fn negate(&mut self, a: &Ciphertext) -> Ciphertext {
         let mut a = a.clone();
+        self.negate_inplace(&mut a);
+        a
+    }
+
+    /// In-place negation.
+    pub fn negate_inplace(&mut self, a: &mut Ciphertext) {
         a.c0.neg_assign(&self.ctx);
         a.c1.neg_assign(&self.ctx);
-        a
     }
 
     /// ct + pt. The plaintext must be encoded at the ciphertext's level
@@ -205,46 +251,56 @@ impl Evaluator {
     }
 
     /// ct · ct with relinearization. Result scale = s_a · s_b.
+    /// Temporaries come from and return to the evaluator's scratch
+    /// pool — one multiplication allocates nothing at steady state.
     pub fn mul(&mut self, a: &Ciphertext, b: &Ciphertext, rlk: &RelinKey) -> Ciphertext {
-        let (mut a, mut b) = (a.clone(), b.clone());
+        let (mut a, mut b) = (self.clone_ct_in(a), self.clone_ct_in(b));
         self.align(&mut a, &mut b);
+        let (level, scale) = (a.level, a.scale * b.scale);
         // Tensor: d0 = a0 b0, d1 = a0 b1 + a1 b0, d2 = a1 b1.
-        let mut d0 = a.c0.clone();
+        let mut d0 = a.c0.clone_in(&mut self.scratch);
         d0.mul_assign(&self.ctx, &b.c0);
-        let mut d1 = a.c0.clone();
+        let mut d1 = a.c0; // a0 consumed in place
         d1.mul_assign(&self.ctx, &b.c1);
-        let mut t = a.c1.clone();
+        let mut t = a.c1.clone_in(&mut self.scratch);
         t.mul_assign(&self.ctx, &b.c0);
         d1.add_assign(&self.ctx, &t);
-        let mut d2 = a.c1.clone();
+        t.recycle(&mut self.scratch);
+        let mut d2 = a.c1; // a1 consumed in place
         d2.mul_assign(&self.ctx, &b.c1);
         // Relinearize d2: (k0, k1) ≈ d2·s² under s.
-        let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0);
+        let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0, &mut self.scratch);
+        d2.recycle(&mut self.scratch);
+        self.recycle_ct(b);
         d0.add_assign(&self.ctx, &k0);
         d1.add_assign(&self.ctx, &k1);
+        k0.recycle(&mut self.scratch);
+        k1.recycle(&mut self.scratch);
         self.counts.mul += 1;
         self.counts.relin += 1;
         Ciphertext {
             c0: d0,
             c1: d1,
-            level: a.level,
-            scale: a.scale * b.scale,
+            level,
+            scale,
         }
     }
 
     /// Square (saves one ring multiplication vs `mul(a, a)`).
     pub fn square(&mut self, a: &Ciphertext, rlk: &RelinKey) -> Ciphertext {
-        let mut d0 = a.c0.clone();
+        let mut d0 = a.c0.clone_in(&mut self.scratch);
         d0.mul_assign(&self.ctx, &a.c0);
-        let mut d1 = a.c0.clone();
+        let mut d1 = a.c0.clone_in(&mut self.scratch);
         d1.mul_assign(&self.ctx, &a.c1);
-        let d1_copy = d1.clone();
-        d1.add_assign(&self.ctx, &d1_copy); // 2·a0·a1
-        let mut d2 = a.c1.clone();
+        d1.double_assign(&self.ctx); // 2·a0·a1
+        let mut d2 = a.c1.clone_in(&mut self.scratch);
         d2.mul_assign(&self.ctx, &a.c1);
-        let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0);
+        let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0, &mut self.scratch);
+        d2.recycle(&mut self.scratch);
         d0.add_assign(&self.ctx, &k0);
         d1.add_assign(&self.ctx, &k1);
+        k0.recycle(&mut self.scratch);
+        k1.recycle(&mut self.scratch);
         self.counts.mul += 1;
         self.counts.relin += 1;
         Ciphertext {
@@ -290,12 +346,14 @@ impl Evaluator {
             .get(&r)
             .unwrap_or_else(|| panic!("no galois key for rotation {r}"));
         let ksw = &gk.keys[&r];
-        let mut c0 = a.c0.clone();
-        let mut c1 = a.c1.clone();
+        let mut c0 = a.c0.clone_in(&mut self.scratch);
+        let mut c1 = a.c1.clone_in(&mut self.scratch);
         c0.automorphism(&self.ctx, g);
         c1.automorphism(&self.ctx, g);
-        let (k0, k1) = apply_ksw(&self.ctx, &c1, ksw);
+        let (k0, k1) = apply_ksw(&self.ctx, &c1, ksw, &mut self.scratch);
+        c1.recycle(&mut self.scratch);
         c0.add_assign(&self.ctx, &k0);
+        k0.recycle(&mut self.scratch);
         self.counts.rotate += 1;
         Ciphertext {
             c0,
@@ -310,10 +368,12 @@ impl Evaluator {
     /// step 3): the expensive iNTT + per-digit NTTs happen once and
     /// every subsequent [`Evaluator::rotate_hoisted`] is a slot
     /// permutation + multiply-accumulate.
-    pub fn hoist(&self, a: &Ciphertext) -> Vec<RnsPoly> {
-        let mut c1 = a.c1.clone();
+    pub fn hoist(&mut self, a: &Ciphertext) -> Vec<RnsPoly> {
+        let mut c1 = a.c1.clone_in(&mut self.scratch);
         c1.from_ntt(&self.ctx);
-        decompose(&self.ctx, &c1)
+        let digits = decompose(&self.ctx, &c1, &mut self.scratch);
+        c1.recycle(&mut self.scratch);
+        digits
     }
 
     /// Rotate using a hoisted decomposition (must come from
@@ -338,16 +398,16 @@ impl Evaluator {
         // lift), so permute each digit in the NTT domain and MAC.
         let rotated: Vec<RnsPoly> = digits
             .iter()
-            .map(|d| {
-                let mut d = d.clone();
-                d.automorphism_ntt(&perm);
-                d
-            })
+            .map(|d| RnsPoly::automorphism_ntt_from(d, &self.ctx, &perm, &mut self.scratch))
             .collect();
-        let (mut k0, k1) = apply_ksw_decomposed(&self.ctx, &rotated, &gk.keys[&r]);
-        let mut c0 = a.c0.clone();
-        c0.automorphism_ntt(&perm);
+        let (mut k0, k1) =
+            apply_ksw_decomposed(&self.ctx, &rotated, &gk.keys[&r], &mut self.scratch);
+        for d in rotated {
+            d.recycle(&mut self.scratch);
+        }
+        let c0 = RnsPoly::automorphism_ntt_from(&a.c0, &self.ctx, &perm, &mut self.scratch);
         k0.add_assign(&self.ctx, &c0);
+        c0.recycle(&mut self.scratch);
         self.counts.rotate += 1;
         Ciphertext {
             c0: k0,
@@ -475,7 +535,7 @@ impl Evaluator {
         let mut p = 2usize;
         while p <= deg {
             if needed[p] {
-                let half = &powers[p / 2].clone().unwrap();
+                let half = powers[p / 2].as_ref().expect("half power computed");
                 let mut sq = self.square(half, rlk);
                 self.rescale(&mut sq);
                 powers[p] = Some(sq);
@@ -488,9 +548,9 @@ impl Evaluator {
                 continue;
             }
             let hi = 1usize << (usize::BITS - 1 - i.leading_zeros());
-            let a = powers[hi].clone().unwrap();
-            let b = powers[i - hi].clone().unwrap();
-            let mut prod = self.mul(&a, &b, rlk);
+            let a = powers[hi].as_ref().expect("power-of-two intermediate");
+            let b = powers[i - hi].as_ref().expect("low-part intermediate");
+            let mut prod = self.mul(a, b, rlk);
             self.rescale(&mut prod);
             powers[i] = Some(prod);
         }
@@ -501,20 +561,22 @@ impl Evaluator {
             .map(|c| c.level)
             .min()
             .unwrap();
-        // Accumulate Σ c_i·x^i at min_level with matched scales.
+        // Accumulate Σ c_i·x^i at min_level with matched scales. Each
+        // power is consumed (moved out) at its single use; retired
+        // intermediates are recycled into the scratch pool below.
         let mut acc: Option<Ciphertext> = None;
         for i in 1..=deg {
             if coeffs[i].abs() <= EPS {
                 continue;
             }
-            let mut term = powers[i].clone().unwrap();
+            let mut term = powers[i].take().expect("needed power computed");
             if term.level > min_level {
                 term.c0.drop_to_level_ntt(&self.ctx, min_level);
                 term.c1.drop_to_level_ntt(&self.ctx, min_level);
                 term.level = min_level;
             }
             let cpt = enc.encode_constant(&self.ctx, coeffs[i], term.level, delta);
-            let mut term = self.mul_plain(&term, &cpt);
+            self.mul_plain_inplace(&mut term, &cpt);
             self.rescale(&mut term);
             match &mut acc {
                 None => acc = Some(term),
@@ -523,8 +585,13 @@ impl Evaluator {
                     // <1e-9 relative (same prime chain); adopt a's.
                     term.scale = a.scale;
                     self.add_inplace(a, &term);
+                    self.recycle_ct(term);
                 }
             }
+        }
+        // Intermediates that only fed the binary decompositions.
+        for leftover in powers.into_iter().flatten() {
+            self.recycle_ct(leftover);
         }
         let mut acc = acc.expect("non-trivial polynomial");
         let c0pt = enc.encode_constant(&self.ctx, coeffs[0], acc.level, acc.scale);

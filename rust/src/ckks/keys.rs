@@ -18,8 +18,10 @@
 //! added is ≈ `(ℓ+1)·N·q_max·σ / P` — about 2^-6 for default
 //! parameters, i.e. far below the encoding scale.
 
-use super::modops::{mul_mod, pow_mod};
+use super::modops::{add_mod, barrett_reduce_64, galois_element, mul_mod, mul_mod_barrett};
+use super::parallel;
 use super::rns::{CkksContext, RnsPoly};
+use super::scratch::Scratch;
 use crate::rng::Xoshiro256pp;
 use std::collections::HashMap;
 
@@ -92,10 +94,7 @@ pub fn canonical_rotations(rotations: &[usize]) -> Vec<usize> {
 /// Heap bytes of one RNS polynomial's residue limbs — the payload that
 /// dominates key memory (per-key metadata is a few machine words).
 fn poly_bytes(p: &RnsPoly) -> usize {
-    p.limbs
-        .iter()
-        .map(|l| l.len() * std::mem::size_of::<u64>())
-        .sum()
+    p.data().len() * std::mem::size_of::<u64>()
 }
 
 impl KswKey {
@@ -141,8 +140,7 @@ impl KeyGenerator {
         e.to_ntt(ctx);
         // b = -a*s + e
         let mut s = self.sk.s.clone();
-        s.special = false;
-        s.limbs.truncate(max + 1);
+        s.restrict(max);
         let mut b = a.clone();
         b.mul_assign(ctx, &s);
         b.neg_assign(ctx);
@@ -177,24 +175,17 @@ impl KeyGenerator {
             let mut pt_s = s_src.clone();
             // multiply limb-wise by the scalar (P*T_j mod modulus of limb)
             {
-                let n_limbs = pt_s.limbs.len();
+                let n_limbs = pt_s.active_limbs();
                 for li in 0..n_limbs {
                     let is_special = li == n_limbs - 1;
-                    let modulus = if is_special { p_special } else { ctx.q(li) };
-                    let scalar = if is_special {
-                        0u64
-                    } else if li == j {
-                        p_special % modulus
+                    // P*T_j mod q_i = (P mod q_i)·δ_ij ; P*T_j mod P = 0,
+                    // so the special limb and all limbs i≠j become zero.
+                    if is_special || li != j {
+                        pt_s.limb_mut(li).fill(0);
                     } else {
-                        0u64
-                    };
-                    // The special limb and all limbs i≠j become zero.
-                    if scalar == 0 {
-                        for x in pt_s.limbs[li].iter_mut() {
-                            *x = 0;
-                        }
-                    } else {
-                        for x in pt_s.limbs[li].iter_mut() {
+                        let modulus = ctx.q(li);
+                        let scalar = p_special % modulus;
+                        for x in pt_s.limb_mut(li).iter_mut() {
                             *x = mul_mod(*x, scalar, modulus);
                         }
                     }
@@ -224,7 +215,7 @@ impl KeyGenerator {
         let mut keys = HashMap::new();
         let mut elements = HashMap::new();
         for r in canonical_rotations(rotations) {
-            let g = pow_mod(5, r as u64, two_n as u64) as usize;
+            let g = galois_element(r, two_n);
             // source secret: s(X^g)
             let mut s_rot = self.sk.s.clone();
             s_rot.automorphism(ctx, g);
@@ -244,90 +235,122 @@ impl KeyGenerator {
 /// against the stored key limbs (no key clones — §Perf step 1), and
 /// mod-down stays in the NTT domain except for the special limb
 /// (§Perf step 2).
-pub fn apply_ksw(ctx: &CkksContext, d: &RnsPoly, ksw: &KswKey) -> (RnsPoly, RnsPoly) {
+pub fn apply_ksw(
+    ctx: &CkksContext,
+    d: &RnsPoly,
+    ksw: &KswKey,
+    scratch: &mut Scratch,
+) -> (RnsPoly, RnsPoly) {
     debug_assert!(d.is_ntt);
     debug_assert!(!d.special);
-    let mut d_coeff = d.clone();
+    let mut d_coeff = d.clone_in(scratch);
     d_coeff.from_ntt(ctx);
-    apply_ksw_decomposed(ctx, &decompose(ctx, &d_coeff), ksw)
+    let digits = decompose(ctx, &d_coeff, scratch);
+    d_coeff.recycle(scratch);
+    let out = apply_ksw_decomposed(ctx, &digits, ksw, scratch);
+    for digit in digits {
+        digit.recycle(scratch);
+    }
+    out
 }
 
 /// Decompose a coefficient-form poly into its NTT'd RNS digits, each
 /// lifted to the full working basis Q_ℓ ∪ {P}. Shared by plain
 /// key-switching and hoisted rotations (which reuse one decomposition
-/// across many rotations).
-pub fn decompose(ctx: &CkksContext, d_coeff: &RnsPoly) -> Vec<RnsPoly> {
+/// across many rotations). Digits fan across the context's workers
+/// (each digit is independent); the serial path draws its buffers from
+/// `scratch`.
+pub fn decompose(ctx: &CkksContext, d_coeff: &RnsPoly, scratch: &mut Scratch) -> Vec<RnsPoly> {
     debug_assert!(!d_coeff.is_ntt);
     let level = d_coeff.level;
-    (0..=level)
-        .map(|j| {
-            let src = &d_coeff.limbs[j];
-            let mut lifted = RnsPoly::zero(ctx, level, true, false);
-            let n_limbs = lifted.limbs.len();
-            for li in 0..n_limbs {
-                let modulus = if li == n_limbs - 1 {
-                    ctx.params.special
-                } else {
-                    ctx.q(li)
-                };
-                let dst = &mut lifted.limbs[li];
-                for (x, &v) in dst.iter_mut().zip(src.iter()) {
-                    *x = v % modulus;
-                }
-            }
-            lifted.to_ntt(ctx);
-            lifted
-        })
-        .collect()
+    let workers = ctx.workers();
+    if workers <= 1 {
+        (0..=level)
+            .map(|j| lift_digit(ctx, d_coeff, j, Some(&mut *scratch)))
+            .collect()
+    } else {
+        parallel::par_map(workers, level + 1, |j| lift_digit(ctx, d_coeff, j, None))
+    }
+}
+
+/// Lift chain limb `j` of `d_coeff` to the full working basis and NTT
+/// it — one key-switch digit. Per-coefficient reductions use the
+/// Barrett single-word kernel (the digit values are already < q_j).
+fn lift_digit(
+    ctx: &CkksContext,
+    d_coeff: &RnsPoly,
+    j: usize,
+    scratch: Option<&mut Scratch>,
+) -> RnsPoly {
+    let level = d_coeff.level;
+    let src = d_coeff.limb(j);
+    let mut lifted = match scratch {
+        Some(s) => RnsPoly::zero_in(ctx, level, true, false, s),
+        None => RnsPoly::zero(ctx, level, true, false),
+    };
+    let n_limbs = lifted.active_limbs();
+    for li in 0..n_limbs {
+        let (modulus, r_hi) = if li == n_limbs - 1 {
+            (ctx.params.special, ctx.barrett_ratio_special().1)
+        } else {
+            (ctx.q(li), ctx.barrett_ratio(li).1)
+        };
+        let dst = lifted.limb_mut(li);
+        for (x, &v) in dst.iter_mut().zip(src.iter()) {
+            *x = barrett_reduce_64(v, modulus, r_hi);
+        }
+    }
+    // Serial NTT: when digits fan out in parallel, each digit owns one
+    // thread already — nesting limb fan-out would oversubscribe.
+    lifted.to_ntt_serial(ctx);
+    lifted
 }
 
 /// Inner product of NTT'd digits with a switching key, followed by
-/// mod-down: the core of every key-switch.
+/// mod-down: the core of every key-switch. The multiply-accumulate
+/// runs limb-parallel straight against the stored key limbs (no key
+/// clones — §Perf step 1) and mod-down stays in the NTT domain except
+/// for the special limb (§Perf step 2).
 pub fn apply_ksw_decomposed(
     ctx: &CkksContext,
     digits: &[RnsPoly],
     ksw: &KswKey,
+    scratch: &mut Scratch,
 ) -> (RnsPoly, RnsPoly) {
     let level = digits[0].level;
     let max = ctx.params.max_level();
-    let mut acc0 = RnsPoly::zero(ctx, level, true, true);
-    let mut acc1 = RnsPoly::zero(ctx, level, true, true);
-    for (j, lifted) in digits.iter().enumerate() {
-        mac_key(ctx, &mut acc0, lifted, &ksw.b[j], level, max);
-        mac_key(ctx, &mut acc1, lifted, &ksw.a[j], level, max);
-    }
+    let mut acc0 = RnsPoly::zero_in(ctx, level, true, true, scratch);
+    let mut acc1 = RnsPoly::zero_in(ctx, level, true, true, scratch);
+    mac_all(ctx, &mut acc0, digits, &ksw.b, max);
+    mac_all(ctx, &mut acc1, digits, &ksw.a, max);
     acc0.mod_down_special_ntt(ctx);
     acc1.mod_down_special_ntt(ctx);
     (acc0, acc1)
 }
 
-/// acc += lifted ⊙ key, mapping the working basis (chain 0..=level +
-/// special) onto the key's full basis (chain 0..=max + special) —
-/// no intermediate allocations.
-#[inline]
-fn mac_key(
-    ctx: &CkksContext,
-    acc: &mut RnsPoly,
-    lifted: &RnsPoly,
-    key: &RnsPoly,
-    level: usize,
-    max: usize,
-) {
-    use super::modops::{add_mod, mul_mod};
-    let n_limbs = level + 2;
-    for li in 0..n_limbs {
-        let (q, key_li) = if li == n_limbs - 1 {
-            (ctx.params.special, max + 1)
+/// acc += Σ_j digits[j] ⊙ keys[j], mapping the working basis (chain
+/// 0..=level + special) onto the key's full basis (chain 0..=max +
+/// special). Limb-outer so the limbs fan across workers; within one
+/// limb the digits accumulate in index order, so the result is
+/// identical for every worker count.
+fn mac_all(ctx: &CkksContext, acc: &mut RnsPoly, digits: &[RnsPoly], keys: &[RnsPoly], max: usize) {
+    let n_limbs = acc.active_limbs();
+    let n = ctx.n();
+    debug_assert!(acc.special && n_limbs == acc.level + 2);
+    parallel::for_each_limb(ctx.workers(), n, acc.data_mut(), |li, a| {
+        let (q, ratio, key_li) = if li == n_limbs - 1 {
+            (ctx.params.special, ctx.barrett_ratio_special(), max + 1)
         } else {
-            (ctx.q(li), li)
+            (ctx.q(li), ctx.barrett_ratio(li), li)
         };
-        let a = &mut acc.limbs[li];
-        let x = &lifted.limbs[li];
-        let k = &key.limbs[key_li];
-        for i in 0..a.len() {
-            a[i] = add_mod(a[i], mul_mod(x[i], k[i], q), q);
+        for (digit, key) in digits.iter().zip(keys.iter()) {
+            let x = digit.limb(li);
+            let k = key.limb(key_li);
+            for i in 0..a.len() {
+                a[i] = add_mod(a[i], mul_mod_barrett(x[i], k[i], q, ratio), q);
+            }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -346,8 +369,7 @@ mod tests {
         let mut kg = KeyGenerator::new(&ctx, 5);
         let pk = kg.gen_public_key(&ctx);
         let mut s = kg.secret_key().s;
-        s.special = false;
-        s.limbs.truncate(ctx.params.max_level() + 1);
+        s.restrict(ctx.params.max_level());
         let mut t = pk.a.clone();
         t.mul_assign(&ctx, &s);
         t.add_assign(&ctx, &pk.b);
@@ -369,11 +391,11 @@ mod tests {
         let mut rng = Xoshiro256pp::new(60);
         let level = ctx.params.max_level();
         let d = RnsPoly::sample_uniform(&ctx, &mut rng, level, false, true);
-        let (c0, c1) = apply_ksw(&ctx, &d, &ksw);
+        let mut scratch = Scratch::new();
+        let (c0, c1) = apply_ksw(&ctx, &d, &ksw, &mut scratch);
 
         let mut s = s_full.clone();
-        s.special = false;
-        s.limbs.truncate(level + 1);
+        s.restrict(level);
 
         // expected = d*s ; got = c0 + c1*s ; difference must be small.
         let mut expected = d.clone();
@@ -411,8 +433,8 @@ mod tests {
         assert_eq!(gk_messy.key_bytes(), gk_clean.key_bytes());
         for r in [1usize, 3] {
             assert_eq!(
-                gk_messy.keys[&r].b[0].limbs[0],
-                gk_clean.keys[&r].b[0].limbs[0],
+                gk_messy.keys[&r].b[0].limb(0),
+                gk_clean.keys[&r].b[0].limb(0),
                 "rotation {r}: key material differs"
             );
         }
@@ -453,6 +475,7 @@ mod tests {
         let z: Vec<f64> = (0..n).map(|i| ((i * 13) % 101) as f64 / 101.0).collect();
         let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
 
+        let mut scratch = Scratch::new();
         for &r in &[1usize, 3] {
             let g = gk.elements[&r];
             let ksw = &gk.keys[&r];
@@ -461,7 +484,7 @@ mod tests {
             let mut c1 = ct.c1.clone();
             c0.automorphism(&ctx, g);
             c1.automorphism(&ctx, g);
-            let (k0, k1) = apply_ksw(&ctx, &c1, ksw);
+            let (k0, k1) = apply_ksw(&ctx, &c1, ksw, &mut scratch);
             let mut r0 = c0;
             r0.add_assign(&ctx, &k0);
             let out = crate::ckks::encrypt::Ciphertext {

@@ -4,10 +4,16 @@
 //! is built from scratch so the whole HRF stack is auditable and
 //! dependency-free:
 //!
-//! * [`modops`] — 64-bit modular arithmetic primitives (Barrett/Shoup).
-//! * [`params`] — parameter sets + NTT-friendly prime generation.
+//! * [`modops`] — 64-bit modular arithmetic primitives (Barrett/Shoup
+//!   kernels; `mul_mod` is the division-based test oracle).
+//! * [`params`] — parameter sets + NTT-friendly prime generation
+//!   (every prime < 2^62, the Barrett kernel domain).
 //! * [`ntt`] — negacyclic number-theoretic transform per RNS prime.
-//! * [`rns`] — RNS ("double-CRT") polynomials and base conversions.
+//! * [`rns`] — RNS ("double-CRT") polynomials with flat contiguous
+//!   limb storage, per-prime Barrett/Shoup tables and base conversions.
+//! * [`scratch`] — reusable limb-buffer pool for evaluator temporaries.
+//! * [`parallel`] — dependency-free limb-parallel executor
+//!   (`std::thread::scope`; worker count on `CkksContext`, default 1).
 //! * [`encoder`] — canonical-embedding encoder: `C^{N/2}` slots ↔ `R_Q`.
 //! * [`keys`] — secret/public/relinearization/Galois keys; hybrid
 //!   key-switching with one special prime.
@@ -34,11 +40,14 @@ pub mod evaluator;
 pub mod keys;
 pub mod modops;
 pub mod ntt;
+pub mod parallel;
 pub mod params;
 pub mod rns;
+pub mod scratch;
 
 pub use encoder::Encoder;
 pub use encrypt::{Ciphertext, Decryptor, Encryptor, Plaintext};
 pub use evaluator::{Evaluator, OpCounts};
 pub use keys::{GaloisKeys, KeyGenerator, PublicKey, RelinKey, SecretKey};
 pub use params::CkksParams;
+pub use scratch::Scratch;

@@ -36,10 +36,80 @@ pub fn neg_mod(x: u64, m: u64) -> u64 {
     }
 }
 
-/// x * y mod m via u128.
+/// x * y mod m via u128 division.
+///
+/// This is the **test oracle**: the `%` on a 128-bit value lowers to a
+/// libcall (`__umodti3`) and costs an order of magnitude more than the
+/// Barrett/Shoup kernels below, so no per-coefficient hot loop may use
+/// it. `tests/modops_kernels.rs` pins every fast kernel against this
+/// function across all parameter-set primes.
 #[inline(always)]
 pub fn mul_mod(x: u64, y: u64, m: u64) -> u64 {
     ((x as u128 * y as u128) % m as u128) as u64
+}
+
+/// Barrett constant for modulus `m`: `floor(2^128 / m)` as (lo, hi)
+/// words. Requires `m` odd (all CKKS primes), so the `-1` in the
+/// numerator never changes the quotient.
+#[inline]
+pub fn barrett_precompute(m: u64) -> (u64, u64) {
+    debug_assert!(m > 1 && m % 2 == 1);
+    let r = u128::MAX / m as u128; // == floor(2^128 / m) for odd m
+    (r as u64, (r >> 64) as u64)
+}
+
+/// Reduce a full 128-bit value `hi·2^64 + lo` mod `m` without any
+/// division (SEAL-style base-2^64 Barrett). Exact for every 128-bit
+/// input provided `m < 2^62` — which [`crate::ckks::params`] enforces
+/// for every chain and special prime.
+#[inline(always)]
+pub fn barrett_reduce_128(lo: u64, hi: u64, m: u64, ratio: (u64, u64)) -> u64 {
+    let (r0, r1) = ratio;
+    // q̂ = floor((hi·2^64 + lo) · ratio / 2^128), computed in 64-bit
+    // words; the true quotient exceeds q̂ by at most 1, so one
+    // conditional subtraction fully reduces.
+    let carry = ((lo as u128 * r0 as u128) >> 64) as u64;
+    let t = lo as u128 * r1 as u128;
+    let s = (t as u64 as u128) + carry as u128;
+    let tmp1 = s as u64;
+    let tmp3 = ((t >> 64) as u64).wrapping_add((s >> 64) as u64);
+    let t = hi as u128 * r0 as u128;
+    let s = tmp1 as u128 + (t as u64 as u128);
+    let carry2 = ((t >> 64) as u64).wrapping_add((s >> 64) as u64);
+    let q = hi
+        .wrapping_mul(r1)
+        .wrapping_add(tmp3)
+        .wrapping_add(carry2);
+    let res = lo.wrapping_sub(q.wrapping_mul(m));
+    if res >= m {
+        res - m
+    } else {
+        res
+    }
+}
+
+/// x * y mod m via [`barrett_reduce_128`] — the element-wise multiply
+/// kernel for operands that change every iteration (ct⊙ct, ct⊙pt,
+/// key-switch inner products). Inputs need not be reduced.
+#[inline(always)]
+pub fn mul_mod_barrett(x: u64, y: u64, m: u64, ratio: (u64, u64)) -> u64 {
+    let p = x as u128 * y as u128;
+    barrett_reduce_128(p as u64, (p >> 64) as u64, m, ratio)
+}
+
+/// Reduce a single word mod `m` using only the high Barrett word
+/// (`ratio.1` from [`barrett_precompute`]). Exact for any `x < 2^64`
+/// with `m < 2^62` — replaces the `u64 % u64` in limb lifts and
+/// centered-remainder adjustments.
+#[inline(always)]
+pub fn barrett_reduce_64(x: u64, m: u64, ratio_hi: u64) -> u64 {
+    let q = ((x as u128 * ratio_hi as u128) >> 64) as u64;
+    let res = x.wrapping_sub(q.wrapping_mul(m));
+    if res >= m {
+        res - m
+    } else {
+        res
+    }
 }
 
 /// Shoup precomputation for multiplying by a fixed operand `y`:
@@ -121,6 +191,14 @@ pub fn is_prime(n: u64) -> bool {
         return false;
     }
     true
+}
+
+/// Galois element for a left-rotation by `step` slots: `5^step mod 2N`
+/// (the canonical-embedding convention: X→X^5 rotates slots left by
+/// one). Single source of truth shared by key generation and the
+/// permutation-cache prewarm.
+pub fn galois_element(step: usize, two_n: usize) -> usize {
+    pow_mod(5, step as u64, two_n as u64) as usize
 }
 
 /// Find a generator of the 2N-th roots of unity mod prime q

@@ -1,0 +1,183 @@
+//! Dependency-free limb-parallel executor (§Perf step 6).
+//!
+//! Every expensive CKKS loop is embarrassingly parallel across RNS
+//! limbs: forward/inverse NTTs, element-wise ring multiplies, Galois
+//! permutations, key-switch inner products and the rescale/mod-down
+//! adjustments all touch one limb at a time, and with flat limb
+//! storage each limb is one disjoint stride-`N` chunk of a single
+//! `Vec<u64>`. The helpers here fan those chunks across
+//! `std::thread::scope` workers with a static round-robin partition —
+//! no work stealing, no shared mutable state, no dependencies — so the
+//! output is **bit-identical for every worker count by construction**
+//! (pinned by `tests/modops_kernels.rs`).
+//!
+//! Worker count comes from the caller (the context's setting, see
+//! [`crate::ckks::rns::CkksContext::set_workers`]); `workers <= 1`
+//! runs the plain serial loop with zero threading overhead, which is
+//! the default everywhere.
+//!
+//! Threads are scoped — spawned and joined per invocation, ~10–30 µs
+//! per worker. That amortizes over the NTT-dominated ops that dominate
+//! an evaluation (key-switch decomposition, mod-down, rotations) but
+//! can eat the gain on the cheapest element-wise sweeps at small N;
+//! a persistent pool is the natural next step if profiles demand it.
+
+use std::thread;
+
+/// Run `f(limb_index, limb_chunk)` over each stride-`n` chunk of
+/// `data`, fanned across up to `workers` scoped threads.
+pub fn for_each_limb<F>(workers: usize, n: usize, data: &mut [u64], f: F)
+where
+    F: Fn(usize, &mut [u64]) + Sync,
+{
+    for_each_limb_with(workers, n, data, |_buf, li, chunk| f(li, chunk));
+}
+
+/// Like [`for_each_limb`] but hands every worker a private reusable
+/// `Vec<u64>` buffer (for per-limb temporaries such as the mod-down
+/// remainder poly) — one allocation per worker, not per limb.
+pub fn for_each_limb_with<F>(workers: usize, n: usize, data: &mut [u64], f: F)
+where
+    F: Fn(&mut Vec<u64>, usize, &mut [u64]) + Sync,
+{
+    debug_assert!(n > 0 && data.len() % n == 0);
+    let n_limbs = data.len() / n;
+    let workers = workers.clamp(1, n_limbs.max(1));
+    if workers == 1 {
+        let mut buf = Vec::new();
+        for (li, chunk) in data.chunks_mut(n).enumerate() {
+            f(&mut buf, li, chunk);
+        }
+        return;
+    }
+    // Static round-robin partition of the limb chunks.
+    let mut lots: Vec<Vec<(usize, &mut [u64])>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        lots.push(Vec::with_capacity(n_limbs / workers + 1));
+    }
+    for (li, chunk) in data.chunks_mut(n).enumerate() {
+        lots[li % workers].push((li, chunk));
+    }
+    let f = &f;
+    thread::scope(|s| {
+        let mine = lots.remove(0);
+        for lot in lots {
+            s.spawn(move || {
+                let mut buf = Vec::new();
+                for (li, chunk) in lot {
+                    f(&mut buf, li, chunk);
+                }
+            });
+        }
+        // The calling thread works lot 0 instead of idling.
+        let mut buf = Vec::new();
+        for (li, chunk) in mine {
+            f(&mut buf, li, chunk);
+        }
+    });
+}
+
+/// `(0..count).map(f)` fanned across up to `workers` scoped threads;
+/// results are returned in index order regardless of scheduling.
+pub fn par_map<T, F>(workers: usize, count: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, count.max(1));
+    if workers == 1 {
+        return (0..count).map(f).collect();
+    }
+    let f = &f;
+    let mut out: Vec<Option<T>> = (0..count).map(|_| None).collect();
+    thread::scope(|s| {
+        let handles: Vec<_> = (1..workers)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut res = Vec::new();
+                    let mut i = w;
+                    while i < count {
+                        res.push((i, f(i)));
+                        i += workers;
+                    }
+                    res
+                })
+            })
+            .collect();
+        let mut i = 0;
+        while i < count {
+            out[i] = Some(f(i));
+            i += workers;
+        }
+        for h in handles {
+            for (i, v) in h.join().expect("limb worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("index covered")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_each_limb_is_worker_count_invariant() {
+        let n = 64;
+        let limbs = 7;
+        let base: Vec<u64> = (0..(n * limbs) as u64).collect();
+        let run = |workers: usize| {
+            let mut d = base.clone();
+            for_each_limb(workers, n, &mut d, |li, chunk| {
+                for x in chunk.iter_mut() {
+                    *x = x.wrapping_mul(li as u64 + 3).wrapping_add(1);
+                }
+            });
+            d
+        };
+        let serial = run(1);
+        for w in [2usize, 3, 4, 16] {
+            assert_eq!(run(w), serial, "workers={w}");
+        }
+    }
+
+    #[test]
+    fn worker_buffers_are_private() {
+        let n = 8;
+        let mut d = vec![0u64; n * 5];
+        for_each_limb_with(4, n, &mut d, |buf, li, chunk| {
+            // A dirty buffer from another limb would corrupt the sums.
+            buf.clear();
+            buf.resize(n, li as u64);
+            for (x, b) in chunk.iter_mut().zip(buf.iter()) {
+                *x += b;
+            }
+        });
+        for (li, chunk) in d.chunks(n).enumerate() {
+            assert!(chunk.iter().all(|&x| x == li as u64), "limb {li}");
+        }
+    }
+
+    #[test]
+    fn par_map_orders_results() {
+        for w in [1usize, 2, 5] {
+            let got = par_map(w, 23, |i| i * i);
+            let want: Vec<usize> = (0..23).map(|i| i * i).collect();
+            assert_eq!(got, want, "workers={w}");
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let mut empty: Vec<u64> = vec![];
+        for_each_limb(4, 8, &mut empty, |_, _| panic!("no chunks"));
+        assert!(par_map(4, 0, |i| i).is_empty());
+        let mut one = vec![1u64; 4];
+        for_each_limb(8, 4, &mut one, |li, c| {
+            assert_eq!(li, 0);
+            c[0] = 9;
+        });
+        assert_eq!(one[0], 9);
+    }
+}

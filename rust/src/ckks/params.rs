@@ -5,9 +5,12 @@
 //! inside key-switching, and the encoding scale `Δ`.
 //!
 //! Prime selection: every prime must satisfy `q ≡ 1 (mod 2N)` so the
-//! negacyclic NTT exists. Rescaling primes are chosen as close as
-//! possible to `Δ` so the scale stays ≈ `Δ` after each rescale
-//! (drift is tracked exactly; see `Ciphertext::scale`).
+//! negacyclic NTT exists, and `q < 2^62` so the division-free
+//! Barrett/Shoup kernels in [`super::modops`] are exact with a single
+//! conditional subtraction (the data plane relies on this bound).
+//! Rescaling primes are chosen as close as possible to `Δ` so the
+//! scale stays ≈ `Δ` after each rescale (drift is tracked exactly; see
+//! `Ciphertext::scale`).
 
 use super::modops::is_prime;
 use std::sync::Arc;
@@ -123,6 +126,11 @@ impl CkksParams {
         let special = Self::gen_primes(n, q0_bits, 1, &mut taken)[0];
         let mut moduli = q0;
         moduli.extend(qs);
+        // Barrett/Shoup kernel domain (see module docs).
+        assert!(
+            moduli.iter().chain([&special]).all(|&q| q < 1 << 62),
+            "modulus outside the Barrett kernel domain"
+        );
         CkksParams {
             n,
             moduli,
@@ -171,6 +179,7 @@ mod tests {
         for &q in &all {
             assert!(is_prime(q), "{q} not prime");
             assert_eq!(q % two_n, 1, "{q} != 1 mod 2N");
+            assert!(q < 1 << 62, "{q} outside Barrett kernel domain");
         }
         let mut dedup = all.clone();
         dedup.sort_unstable();

@@ -1,19 +1,36 @@
 //! RNS ("double-CRT") polynomials over the CKKS modulus chain.
 //!
-//! A [`RnsPoly`] stores one residue limb per active prime. The active
-//! basis is `q_0..q_level` plus, transiently during key-switching, the
-//! special prime. Polynomials live either in coefficient form or in
-//! NTT (evaluation) form; element-wise ring multiplication requires
-//! NTT form.
+//! A [`RnsPoly`] stores one residue limb per active prime — all limbs
+//! in **one contiguous `Vec<u64>`** with stride `N` (§Perf step 6:
+//! flat limb storage), so cloning a polynomial is one allocation and
+//! every kernel is one cache-friendly sweep. The active basis is
+//! `q_0..q_level` plus, transiently during key-switching, the special
+//! prime. Polynomials live either in coefficient form or in NTT
+//! (evaluation) form; element-wise ring multiplication requires NTT
+//! form.
 //!
 //! The module also owns [`CkksContext`] (parameter set + NTT tables +
-//! rescale precomputations) and the exact CRT → centered big-integer →
-//! f64 reconstruction used on decode ([`BigUintLite`]).
+//! per-prime Barrett constants + Shoup tables for the loop-invariant
+//! rescale/mod-down multipliers + the limb-parallel worker knob) and
+//! the exact CRT → centered big-integer → f64 reconstruction used on
+//! decode ([`BigUintLite`], [`CrtRecon`]).
+//!
+//! No per-coefficient hot loop performs a u128 `%`: element-wise
+//! multiplies use [`mul_mod_barrett`], single-word reductions use
+//! [`barrett_reduce_64`], and loop-invariant multipliers (rescale and
+//! mod-down inverses, scalar broadcasts) use Shoup multiplication.
+//! `modops::mul_mod` survives as the test oracle only.
 
-use super::modops::{add_mod, inv_mod, mul_mod, neg_mod, sub_mod};
+use super::modops::{
+    add_mod, barrett_precompute, barrett_reduce_64, inv_mod, mul_mod, mul_mod_barrett,
+    mul_mod_shoup, neg_mod, shoup_precompute, sub_mod,
+};
 use super::ntt::NttTable;
+use super::parallel;
 use super::params::ParamsRef;
+use super::scratch::Scratch;
 use crate::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Shared immutable context: parameters, NTT tables (one per chain
@@ -26,8 +43,16 @@ pub struct CkksContext {
     pub special_table: NttTable,
     /// inv(q_j) mod q_i for rescale: inv_q_to[j][i] = q_j^{-1} mod q_i (i < j).
     inv_q_to: Vec<Vec<u64>>,
+    /// Shoup companions of `inv_q_to` (loop-invariant rescale multiplier).
+    inv_q_to_shoup: Vec<Vec<u64>>,
     /// inv(special) mod q_i.
     inv_special: Vec<u64>,
+    /// Shoup companions of `inv_special`.
+    inv_special_shoup: Vec<u64>,
+    /// Barrett constant floor(2^128/q_i) per chain prime (lo, hi).
+    barrett: Vec<(u64, u64)>,
+    /// Barrett constant of the special prime.
+    barrett_special: (u64, u64),
     /// ψ-exponent of each NTT output slot: slot i holds c(ψ^{ntt_exp[i]}).
     /// The pattern is determined by the butterfly structure alone, so
     /// one table serves every prime.
@@ -36,16 +61,22 @@ pub struct CkksContext {
     exp_to_slot: Vec<u32>,
     /// Cached NTT-domain Galois permutations, keyed by Galois element.
     galois_perms: std::sync::RwLock<std::collections::HashMap<usize, Arc<Vec<u32>>>>,
+    /// Limb-parallel worker count for the heavy per-limb loops
+    /// (1 = serial; see [`CkksContext::set_workers`]).
+    workers: AtomicUsize,
 }
 
 pub type ContextRef = Arc<CkksContext>;
+
+/// Environment override for the limb-parallel worker count.
+pub const WORKERS_ENV: &str = "CRYPTOTREE_CKKS_WORKERS";
 
 impl CkksContext {
     pub fn new(params: ParamsRef) -> ContextRef {
         let n = params.n;
         let tables: Vec<NttTable> = params.moduli.iter().map(|&q| NttTable::new(q, n)).collect();
         let special_table = NttTable::new(params.special, n);
-        let inv_q_to = params
+        let inv_q_to: Vec<Vec<u64>> = params
             .moduli
             .iter()
             .enumerate()
@@ -56,11 +87,28 @@ impl CkksContext {
                     .collect()
             })
             .collect();
-        let inv_special = params
+        let inv_q_to_shoup: Vec<Vec<u64>> = inv_q_to
+            .iter()
+            .enumerate()
+            .map(|(j, row)| {
+                row.iter()
+                    .zip(&params.moduli[..j])
+                    .map(|(&inv, &qi)| shoup_precompute(inv, qi))
+                    .collect()
+            })
+            .collect();
+        let inv_special: Vec<u64> = params
             .moduli
             .iter()
             .map(|&qi| inv_mod(params.special % qi, qi))
             .collect();
+        let inv_special_shoup = inv_special
+            .iter()
+            .zip(&params.moduli)
+            .map(|(&inv, &qi)| shoup_precompute(inv, qi))
+            .collect();
+        let barrett = params.moduli.iter().map(|&q| barrett_precompute(q)).collect();
+        let barrett_special = barrett_precompute(params.special);
         // Probe the NTT's evaluation order: NTT(X) gives ψ^{e_i} in
         // slot i; match against the power table to recover e_i.
         let (ntt_exp, exp_to_slot) = {
@@ -92,15 +140,25 @@ impl CkksContext {
             }
             (ntt_exp, exp_to_slot)
         };
+        let workers = std::env::var(WORKERS_ENV)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&w| w >= 1)
+            .unwrap_or(1);
         Arc::new(CkksContext {
             params,
             tables,
             special_table,
             inv_q_to,
+            inv_q_to_shoup,
             inv_special,
+            inv_special_shoup,
+            barrett,
+            barrett_special,
             ntt_exp,
             exp_to_slot,
             galois_perms: std::sync::RwLock::new(std::collections::HashMap::new()),
+            workers: AtomicUsize::new(workers),
         })
     }
 
@@ -126,6 +184,26 @@ impl CkksContext {
         perm
     }
 
+    /// Pre-populate the Galois-permutation cache for the given
+    /// **rotation steps** (converted internally to Galois elements
+    /// `5^r mod 2N`), so a serving hot path only ever takes the read
+    /// side of the permutation lock. Idempotent; zero steps are
+    /// ignored.
+    pub fn galois_perm_prewarm(&self, steps: &[usize]) {
+        let two_n = 2 * self.n();
+        for &r in steps {
+            if r == 0 {
+                continue;
+            }
+            let _ = self.galois_perm(super::modops::galois_element(r, two_n));
+        }
+    }
+
+    /// Number of Galois permutations currently cached (test hook).
+    pub fn galois_perms_cached(&self) -> usize {
+        self.galois_perms.read().unwrap().len()
+    }
+
     pub fn n(&self) -> usize {
         self.params.n
     }
@@ -134,9 +212,47 @@ impl CkksContext {
     pub fn q(&self, i: usize) -> u64 {
         self.params.moduli[i]
     }
+
+    /// Limb-parallel worker count used by the heavy per-limb loops.
+    pub fn workers(&self) -> usize {
+        self.workers.load(Ordering::Relaxed)
+    }
+
+    /// Set the limb-parallel worker count (1 = serial, the default;
+    /// initial value may come from the `CRYPTOTREE_CKKS_WORKERS` env
+    /// var). Outputs are bit-identical for every setting — limbs are
+    /// independent — so this is purely a throughput knob.
+    pub fn set_workers(&self, workers: usize) {
+        self.workers.store(workers.max(1), Ordering::Relaxed);
+    }
+
+    /// Barrett constant of chain prime `i`.
+    #[inline]
+    pub(crate) fn barrett_ratio(&self, i: usize) -> (u64, u64) {
+        self.barrett[i]
+    }
+
+    /// Barrett constant of the special prime.
+    #[inline]
+    pub(crate) fn barrett_ratio_special(&self) -> (u64, u64) {
+        self.barrett_special
+    }
+
+    /// (modulus, Barrett constant) of limb `li` in a poly with
+    /// `n_limbs` active limbs, `special` flagging a special last limb.
+    #[inline]
+    fn limb_modulus(&self, li: usize, n_limbs: usize, special: bool) -> (u64, (u64, u64)) {
+        if special && li == n_limbs - 1 {
+            (self.params.special, self.barrett_special)
+        } else {
+            (self.params.moduli[li], self.barrett[li])
+        }
+    }
 }
 
-/// Polynomial in RNS representation.
+/// Polynomial in RNS representation, flat limb storage: limb `i`
+/// occupies `data[i*n .. (i+1)*n]`, chain order, special last when
+/// present.
 #[derive(Clone, Debug)]
 pub struct RnsPoly {
     /// Highest active chain-prime index; active chain limbs = level+1.
@@ -145,8 +261,10 @@ pub struct RnsPoly {
     pub special: bool,
     /// NTT (evaluation) form?
     pub is_ntt: bool,
-    /// Residue limbs, chain order, special last if present.
-    pub limbs: Vec<Vec<u64>>,
+    /// Ring degree (limb stride).
+    pub(crate) n: usize,
+    /// All residue limbs, contiguous.
+    pub(crate) data: Vec<u64>,
 }
 
 impl RnsPoly {
@@ -154,17 +272,97 @@ impl RnsPoly {
         level + 1 + special as usize
     }
 
+    /// Number of limbs currently stored.
+    #[inline]
+    pub fn active_limbs(&self) -> usize {
+        debug_assert!(self.n > 0);
+        self.data.len() / self.n
+    }
+
+    /// The whole flat limb payload (limb `i` at `data[i*n..(i+1)*n]`).
+    /// Two polys with equal flags and equal `data()` are bit-identical.
+    #[inline]
+    pub fn data(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Residue limb `i` (read).
+    #[inline]
+    pub fn limb(&self, i: usize) -> &[u64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Residue limb `i` (write).
+    #[inline]
+    pub fn limb_mut(&mut self, i: usize) -> &mut [u64] {
+        &mut self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// The whole flat limb payload, mutable (crate kernels only).
+    #[inline]
+    pub(crate) fn data_mut(&mut self) -> &mut [u64] {
+        &mut self.data
+    }
+
+    /// Two distinct limbs mutably at once (`i < j`).
+    #[inline]
+    pub fn limbs_pair_mut(&mut self, i: usize, j: usize) -> (&mut [u64], &mut [u64]) {
+        debug_assert!(i < j);
+        let n = self.n;
+        let (head, tail) = self.data.split_at_mut(j * n);
+        (&mut head[i * n..(i + 1) * n], &mut tail[..n])
+    }
+
+    /// Give the limb buffer back to a scratch pool.
+    pub fn recycle(self, scratch: &mut Scratch) {
+        scratch.put(self.data);
+    }
+
+    /// Consume into the raw limb buffer.
+    pub fn into_data(self) -> Vec<u64> {
+        self.data
+    }
+
     pub fn zero(ctx: &CkksContext, level: usize, special: bool, is_ntt: bool) -> Self {
         RnsPoly {
             level,
             special,
             is_ntt,
-            limbs: vec![vec![0u64; ctx.n()]; Self::n_limbs(level, special)],
+            n: ctx.n(),
+            data: vec![0u64; Self::n_limbs(level, special) * ctx.n()],
+        }
+    }
+
+    /// Zero poly whose buffer comes from (and can return to) `scratch`.
+    pub fn zero_in(
+        ctx: &CkksContext,
+        level: usize,
+        special: bool,
+        is_ntt: bool,
+        scratch: &mut Scratch,
+    ) -> Self {
+        RnsPoly {
+            level,
+            special,
+            is_ntt,
+            n: ctx.n(),
+            data: scratch.take(Self::n_limbs(level, special) * ctx.n()),
+        }
+    }
+
+    /// Clone whose buffer comes from `scratch` (single memcpy).
+    pub fn clone_in(&self, scratch: &mut Scratch) -> Self {
+        RnsPoly {
+            level: self.level,
+            special: self.special,
+            is_ntt: self.is_ntt,
+            n: self.n,
+            data: scratch.take_copy(&self.data),
         }
     }
 
     fn modulus_of(&self, ctx: &CkksContext, limb: usize) -> u64 {
-        if self.special && limb == self.limbs.len() - 1 {
+        if self.special && limb == self.active_limbs() - 1 {
             ctx.params.special
         } else {
             ctx.params.moduli[limb]
@@ -174,16 +372,18 @@ impl RnsPoly {
     /// Build from small signed coefficients (keys, errors).
     pub fn from_signed(ctx: &CkksContext, coeffs: &[i64], level: usize, special: bool) -> Self {
         let mut p = Self::zero(ctx, level, special, false);
-        let nl = p.limbs.len();
+        let nl = p.active_limbs();
         for li in 0..nl {
             let q = p.modulus_of(ctx, li);
-            let limb = &mut p.limbs[li];
-            for (i, &c) in coeffs.iter().enumerate() {
-                limb[i] = if c >= 0 {
+            let limb = p.limb_mut(li);
+            for (x, &c) in limb.iter_mut().zip(coeffs.iter()) {
+                *x = if c >= 0 {
                     (c as u64) % q
                 } else {
-                    q - (((-c) as u64) % q)
-                } % q;
+                    // neg_mod keeps c ≡ 0 (mod q) at 0 without the
+                    // former second `% q` pass.
+                    neg_mod(((-c) as u64) % q, q)
+                };
             }
         }
         p
@@ -198,13 +398,12 @@ impl RnsPoly {
         special: bool,
     ) -> Self {
         let mut p = Self::zero(ctx, level, special, false);
-        let nl = p.limbs.len();
+        let nl = p.active_limbs();
         for li in 0..nl {
             let q = p.modulus_of(ctx, li) as i128;
-            let limb = &mut p.limbs[li];
-            for (i, &c) in coeffs.iter().enumerate() {
-                let r = c.rem_euclid(q);
-                limb[i] = r as u64;
+            let limb = p.limb_mut(li);
+            for (x, &c) in limb.iter_mut().zip(coeffs.iter()) {
+                *x = c.rem_euclid(q) as u64;
             }
         }
         p
@@ -220,10 +419,10 @@ impl RnsPoly {
         is_ntt: bool,
     ) -> Self {
         let mut p = Self::zero(ctx, level, special, is_ntt);
-        let nl = p.limbs.len();
+        let nl = p.active_limbs();
         for li in 0..nl {
             let q = p.modulus_of(ctx, li);
-            for x in p.limbs[li].iter_mut() {
+            for x in p.limb_mut(li).iter_mut() {
                 *x = rng.next_below(q);
             }
         }
@@ -253,19 +452,39 @@ impl RnsPoly {
         Self::from_signed(ctx, &coeffs, level, special)
     }
 
-    pub fn to_ntt(&mut self, ctx: &CkksContext) {
-        if self.is_ntt {
-            return;
-        }
-        let n_limbs = self.limbs.len();
-        for li in 0..n_limbs {
-            let table = if self.special && li == n_limbs - 1 {
+    /// NTT/iNTT every limb, fanned over `workers` threads.
+    fn ntt_limbs(&mut self, ctx: &CkksContext, workers: usize, forward: bool) {
+        let nl = self.active_limbs();
+        let special = self.special;
+        parallel::for_each_limb(workers, self.n, &mut self.data, |li, chunk| {
+            let table = if special && li == nl - 1 {
                 &ctx.special_table
             } else {
                 &ctx.tables[li]
             };
-            table.forward(&mut self.limbs[li]);
+            if forward {
+                table.forward(chunk);
+            } else {
+                table.inverse(chunk);
+            }
+        });
+    }
+
+    pub fn to_ntt(&mut self, ctx: &CkksContext) {
+        if self.is_ntt {
+            return;
         }
+        self.ntt_limbs(ctx, ctx.workers(), true);
+        self.is_ntt = true;
+    }
+
+    /// `to_ntt` pinned to the calling thread — used inside already
+    /// limb-parallel sections to avoid nested thread fan-out.
+    pub(crate) fn to_ntt_serial(&mut self, ctx: &CkksContext) {
+        if self.is_ntt {
+            return;
+        }
+        self.ntt_limbs(ctx, 1, true);
         self.is_ntt = true;
     }
 
@@ -273,15 +492,7 @@ impl RnsPoly {
         if !self.is_ntt {
             return;
         }
-        let n_limbs = self.limbs.len();
-        for li in 0..n_limbs {
-            let table = if self.special && li == n_limbs - 1 {
-                &ctx.special_table
-            } else {
-                &ctx.tables[li]
-            };
-            table.inverse(&mut self.limbs[li]);
-        }
+        self.ntt_limbs(ctx, ctx.workers(), false);
         self.is_ntt = false;
     }
 
@@ -293,9 +504,10 @@ impl RnsPoly {
 
     pub fn add_assign(&mut self, ctx: &CkksContext, other: &Self) {
         self.assert_compat(other);
-        for li in 0..self.limbs.len() {
+        for li in 0..self.active_limbs() {
             let q = self.modulus_of(ctx, li);
-            let (a, b) = (&mut self.limbs[li], &other.limbs[li]);
+            let b = other.limb(li);
+            let a = self.limb_mut(li);
             for i in 0..a.len() {
                 a[i] = add_mod(a[i], b[i], q);
             }
@@ -304,9 +516,10 @@ impl RnsPoly {
 
     pub fn sub_assign(&mut self, ctx: &CkksContext, other: &Self) {
         self.assert_compat(other);
-        for li in 0..self.limbs.len() {
+        for li in 0..self.active_limbs() {
             let q = self.modulus_of(ctx, li);
-            let (a, b) = (&mut self.limbs[li], &other.limbs[li]);
+            let b = other.limb(li);
+            let a = self.limb_mut(li);
             for i in 0..a.len() {
                 a[i] = sub_mod(a[i], b[i], q);
             }
@@ -314,34 +527,50 @@ impl RnsPoly {
     }
 
     pub fn neg_assign(&mut self, ctx: &CkksContext) {
-        for li in 0..self.limbs.len() {
+        for li in 0..self.active_limbs() {
             let q = self.modulus_of(ctx, li);
-            for x in self.limbs[li].iter_mut() {
+            for x in self.limb_mut(li).iter_mut() {
                 *x = neg_mod(*x, q);
             }
         }
     }
 
-    /// Element-wise ring multiplication; both operands must be in NTT form.
-    pub fn mul_assign(&mut self, ctx: &CkksContext, other: &Self) {
-        self.assert_compat(other);
-        debug_assert!(self.is_ntt, "ring mul requires NTT form");
-        for li in 0..self.limbs.len() {
+    /// Double in place: `self = 2·self` — the aliasing-safe form of
+    /// `add_assign(self, self)` (bit-identical result).
+    pub fn double_assign(&mut self, ctx: &CkksContext) {
+        for li in 0..self.active_limbs() {
             let q = self.modulus_of(ctx, li);
-            let (a, b) = (&mut self.limbs[li], &other.limbs[li]);
-            for i in 0..a.len() {
-                a[i] = mul_mod(a[i], b[i], q);
+            for x in self.limb_mut(li).iter_mut() {
+                *x = add_mod(*x, *x, q);
             }
         }
     }
 
-    /// Multiply by a scalar integer (same in every limb).
+    /// Element-wise ring multiplication; both operands must be in NTT
+    /// form. Barrett kernel (no u128 `%`), limb-parallel.
+    pub fn mul_assign(&mut self, ctx: &CkksContext, other: &Self) {
+        self.assert_compat(other);
+        debug_assert!(self.is_ntt, "ring mul requires NTT form");
+        let nl = self.active_limbs();
+        let special = self.special;
+        parallel::for_each_limb(ctx.workers(), self.n, &mut self.data, |li, a| {
+            let (q, ratio) = ctx.limb_modulus(li, nl, special);
+            let b = other.limb(li);
+            for i in 0..a.len() {
+                a[i] = mul_mod_barrett(a[i], b[i], q, ratio);
+            }
+        });
+    }
+
+    /// Multiply by a scalar integer (same in every limb). The reduced
+    /// scalar is loop-invariant per limb → Shoup multiplication.
     pub fn mul_scalar_assign(&mut self, ctx: &CkksContext, s: u64) {
-        for li in 0..self.limbs.len() {
+        for li in 0..self.active_limbs() {
             let q = self.modulus_of(ctx, li);
             let sq = s % q;
-            for x in self.limbs[li].iter_mut() {
-                *x = mul_mod(*x, sq, q);
+            let sq_shoup = shoup_precompute(sq, q);
+            for x in self.limb_mut(li).iter_mut() {
+                *x = mul_mod_shoup(*x, sq, sq_shoup, q);
             }
         }
     }
@@ -351,8 +580,17 @@ impl RnsPoly {
     pub fn drop_to_level(&mut self, new_level: usize) {
         debug_assert!(new_level <= self.level);
         debug_assert!(!self.special);
-        self.limbs.truncate(new_level + 1);
+        self.data.truncate((new_level + 1) * self.n);
         self.level = new_level;
+    }
+
+    /// Keep only chain limbs `0..=level`: drops the special limb and
+    /// any upper chain limbs (key material → working basis).
+    pub fn restrict(&mut self, level: usize) {
+        debug_assert!(level <= self.level);
+        self.data.truncate((level + 1) * self.n);
+        self.level = level;
+        self.special = false;
     }
 
     /// Rescale: divide by the top chain prime `q_level` with centered
@@ -364,25 +602,31 @@ impl RnsPoly {
         debug_assert!(self.level >= 1, "cannot rescale at level 0");
         let was_ntt = self.is_ntt;
         self.from_ntt(ctx);
-        let q_last = ctx.q(self.level);
+        let old_level = self.level;
+        let q_last = ctx.q(old_level);
         let half = q_last / 2;
-        let last = self.limbs.pop().unwrap();
-        self.level -= 1;
-        for li in 0..=self.level {
+        let n = self.n;
+        let (head, tail) = self.data.split_at_mut(old_level * n);
+        let last: &[u64] = &tail[..n];
+        let inv_row = &ctx.inv_q_to[old_level];
+        let inv_shoup_row = &ctx.inv_q_to_shoup[old_level];
+        parallel::for_each_limb(ctx.workers(), n, head, |li, limb| {
             let q = ctx.q(li);
-            let inv = ctx.inv_q_to[self.level + 1][li];
-            let limb = &mut self.limbs[li];
-            for i in 0..limb.len() {
+            let (_, r_hi) = ctx.barrett[li];
+            let (inv, inv_sh) = (inv_row[li], inv_shoup_row[li]);
+            for i in 0..n {
                 let r = last[i];
                 // centered remainder: subtract r, or add (q_last - r)
                 let adjusted = if r <= half {
-                    sub_mod(limb[i], r % q, q)
+                    sub_mod(limb[i], barrett_reduce_64(r, q, r_hi), q)
                 } else {
-                    add_mod(limb[i], (q_last - r) % q, q)
+                    add_mod(limb[i], barrett_reduce_64(q_last - r, q, r_hi), q)
                 };
-                limb[i] = mul_mod(adjusted, inv, q);
+                limb[i] = mul_mod_shoup(adjusted, inv, inv_sh, q);
             }
-        }
+        });
+        self.data.truncate(old_level * n);
+        self.level = old_level - 1;
         if was_ntt {
             self.to_ntt(ctx);
         }
@@ -396,22 +640,28 @@ impl RnsPoly {
         self.from_ntt(ctx);
         let p = ctx.params.special;
         let half = p / 2;
-        let last = self.limbs.pop().unwrap();
-        self.special = false;
-        for li in 0..=self.level {
+        let n = self.n;
+        let chain = (self.level + 1) * n;
+        let (head, tail) = self.data.split_at_mut(chain);
+        let last: &[u64] = &tail[..n];
+        let inv_row = &ctx.inv_special;
+        let inv_shoup_row = &ctx.inv_special_shoup;
+        parallel::for_each_limb(ctx.workers(), n, head, |li, limb| {
             let q = ctx.q(li);
-            let inv = ctx.inv_special[li];
-            let limb = &mut self.limbs[li];
-            for i in 0..limb.len() {
+            let (_, r_hi) = ctx.barrett[li];
+            let (inv, inv_sh) = (inv_row[li], inv_shoup_row[li]);
+            for i in 0..n {
                 let r = last[i];
                 let adjusted = if r <= half {
-                    sub_mod(limb[i], r % q, q)
+                    sub_mod(limb[i], barrett_reduce_64(r, q, r_hi), q)
                 } else {
-                    add_mod(limb[i], (p - r) % q, q)
+                    add_mod(limb[i], barrett_reduce_64(p - r, q, r_hi), q)
                 };
-                limb[i] = mul_mod(adjusted, inv, q);
+                limb[i] = mul_mod_shoup(adjusted, inv, inv_sh, q);
             }
-        }
+        });
+        self.data.truncate(chain);
+        self.special = false;
         if was_ntt {
             self.to_ntt(ctx);
         }
@@ -422,58 +672,68 @@ impl RnsPoly {
     /// coefficient space: the centered remainder `r` is NTT'd once per
     /// chain limb instead of converting every limb both ways
     /// (1 + (ℓ+1) NTTs per poly instead of 2(ℓ+2) — §Perf step 2).
+    /// Limb-parallel with one remainder buffer per worker.
     pub fn mod_down_special_ntt(&mut self, ctx: &CkksContext) {
         debug_assert!(self.special);
         debug_assert!(self.is_ntt);
         let p = ctx.params.special;
         let half = p / 2;
-        let mut last = self.limbs.pop().unwrap();
-        self.special = false;
-        ctx.special_table.inverse(&mut last);
-        // Centered remainder as signed integers.
-        let n = last.len();
-        let mut r_mod_q = vec![0u64; n];
-        for li in 0..=self.level {
+        let n = self.n;
+        let chain = (self.level + 1) * n;
+        let (head, tail) = self.data.split_at_mut(chain);
+        let last = &mut tail[..n];
+        ctx.special_table.inverse(last);
+        let last: &[u64] = last;
+        let inv_row = &ctx.inv_special;
+        let inv_shoup_row = &ctx.inv_special_shoup;
+        parallel::for_each_limb_with(ctx.workers(), n, head, |r_mod_q, li, limb| {
             let q = ctx.q(li);
+            let (_, r_hi) = ctx.barrett[li];
+            let (inv, inv_sh) = (inv_row[li], inv_shoup_row[li]);
+            r_mod_q.clear();
+            r_mod_q.resize(n, 0);
             // r centered: r <= p/2 -> subtract r ; r > p/2 -> add p - r
             for i in 0..n {
                 let r = last[i];
                 r_mod_q[i] = if r <= half {
-                    neg_mod(r % q, q) // -r mod q  (will be added)
+                    neg_mod(barrett_reduce_64(r, q, r_hi), q) // -r mod q (added)
                 } else {
-                    (p - r) % q
+                    barrett_reduce_64(p - r, q, r_hi)
                 };
             }
-            ctx.tables[li].forward(&mut r_mod_q);
-            let inv = ctx.inv_special[li];
-            let limb = &mut self.limbs[li];
+            ctx.tables[li].forward(r_mod_q);
             for i in 0..n {
-                limb[i] = mul_mod(add_mod(limb[i], r_mod_q[i], q), inv, q);
+                limb[i] = mul_mod_shoup(add_mod(limb[i], r_mod_q[i], q), inv, inv_sh, q);
             }
-        }
+        });
+        self.data.truncate(chain);
+        self.special = false;
     }
 
     /// Galois automorphism X -> X^g (g odd), coefficient domain
-    /// internally; preserves the caller's NTT-form flag.
+    /// internally; preserves the caller's NTT-form flag. For odd `g`
+    /// the index map is a permutation, so every slot is written
+    /// exactly once from a single reusable source buffer.
     pub fn automorphism(&mut self, ctx: &CkksContext, g: usize) {
         let was_ntt = self.is_ntt;
         self.from_ntt(ctx);
         let n = ctx.n();
         let two_n = 2 * n;
         debug_assert_eq!(g % 2, 1);
-        for li in 0..self.limbs.len() {
+        let nl = self.active_limbs();
+        let mut src = vec![0u64; n];
+        for li in 0..nl {
             let q = self.modulus_of(ctx, li);
-            let src = &self.limbs[li];
-            let mut dst = vec![0u64; n];
-            for i in 0..n {
+            let limb = self.limb_mut(li);
+            src.copy_from_slice(limb);
+            for (i, &v) in src.iter().enumerate() {
                 let j = (i * g) % two_n;
                 if j < n {
-                    dst[j] = src[i];
+                    limb[j] = v;
                 } else {
-                    dst[j - n] = neg_mod(src[i], q);
+                    limb[j - n] = neg_mod(v, q);
                 }
             }
-            self.limbs[li] = dst;
         }
         if was_ntt {
             self.to_ntt(ctx);
@@ -482,32 +742,60 @@ impl RnsPoly {
 
     /// Galois automorphism applied **in the NTT domain**: a pure slot
     /// permutation (evaluation points get permuted, signs absorbed).
-    /// Used by hoisted rotations (§Perf step 3).
-    pub fn automorphism_ntt(&mut self, perm: &[u32]) {
-        debug_assert!(self.is_ntt);
-        for limb in self.limbs.iter_mut() {
-            let src = limb.clone();
-            for (i, x) in limb.iter_mut().enumerate() {
-                *x = src[perm[i] as usize];
+    /// Used by hoisted rotations (§Perf step 3). Permutes out-of-place
+    /// into a scratch buffer (limb-parallel) and recycles the old one.
+    pub fn automorphism_ntt(&mut self, ctx: &CkksContext, perm: &[u32], scratch: &mut Scratch) {
+        let permuted = Self::automorphism_ntt_from(self, ctx, perm, scratch);
+        let old = std::mem::replace(&mut self.data, permuted.data);
+        scratch.put(old);
+    }
+
+    /// Out-of-place NTT-domain automorphism: build the permuted poly
+    /// directly from `src` into a pool buffer — the hoisted-rotation
+    /// hot path uses this to skip the intermediate clone entirely.
+    pub fn automorphism_ntt_from(
+        src: &RnsPoly,
+        ctx: &CkksContext,
+        perm: &[u32],
+        scratch: &mut Scratch,
+    ) -> RnsPoly {
+        debug_assert!(src.is_ntt);
+        let n = src.n;
+        let mut out = scratch.take(src.data.len());
+        parallel::for_each_limb(ctx.workers(), n, &mut out, |li, dst| {
+            let s = &src.data[li * n..(li + 1) * n];
+            for (d, &p) in dst.iter_mut().zip(perm.iter()) {
+                *d = s[p as usize];
             }
+        });
+        RnsPoly {
+            level: src.level,
+            special: src.special,
+            is_ntt: true,
+            n,
+            data: out,
         }
     }
 
     /// Exact centered CRT reconstruction of every coefficient as f64
-    /// (coefficient form required). Used only on decode.
+    /// (coefficient form required). Used only on decode. The
+    /// mixed-radix digit buffer and residue gather buffer are reused
+    /// across all N coefficients.
     pub fn to_centered_f64(&self, ctx: &CkksContext) -> Vec<f64> {
         debug_assert!(!self.is_ntt);
         debug_assert!(!self.special);
         let primes: Vec<u64> = (0..=self.level).map(|i| ctx.q(i)).collect();
         let recon = CrtRecon::new(&primes);
         let n = ctx.n();
+        let k = primes.len();
         let mut out = vec![0.0f64; n];
-        let mut residues = vec![0u64; primes.len()];
-        for i in 0..n {
+        let mut residues = vec![0u64; k];
+        let mut digits = vec![0u64; k];
+        for (i, o) in out.iter_mut().enumerate() {
             for (li, r) in residues.iter_mut().enumerate() {
-                *r = self.limbs[li][i];
+                *r = self.data[li * self.n + i];
             }
-            out[i] = recon.centered_f64(&residues);
+            *o = recon.centered_f64_with(&residues, &mut digits);
         }
         out
     }
@@ -654,11 +942,17 @@ impl BigUintLite {
     }
 }
 
-/// Garner-style CRT reconstruction over a fixed prime basis.
+/// Garner-style CRT reconstruction over a fixed prime basis. All the
+/// O(k²) per-(i,j) radix products are precomputed once in
+/// [`CrtRecon::new`] (with Shoup companions), so reconstructing one
+/// coefficient is k(k−1)/2 Shoup multiplies and no divisions.
 pub struct CrtRecon {
     primes: Vec<u64>,
-    /// inv_prefix[i] = (q_0*...*q_{i-1})^{-1} mod q_i
-    inv_prefix: Vec<u64>,
+    /// inv_prefix[i] = (q_0*...*q_{i-1})^{-1} mod q_i, with Shoup.
+    inv_prefix: Vec<(u64, u64)>,
+    /// radix[i][j] = (q_0*...*q_{j-1}) mod q_i with Shoup, j < i,
+    /// flattened row-major (row i starts at i(i-1)/2).
+    radix: Vec<(u64, u64)>,
     /// q_big = product of all primes; half = floor(q_big/2)
     q_big: BigUintLite,
     half: BigUintLite,
@@ -668,15 +962,19 @@ pub struct CrtRecon {
 
 impl CrtRecon {
     pub fn new(primes: &[u64]) -> Self {
-        let mut inv_prefix = Vec::with_capacity(primes.len());
+        let k = primes.len();
+        let mut inv_prefix = Vec::with_capacity(k);
+        let mut radix = Vec::with_capacity(k * (k.saturating_sub(1)) / 2);
         for (i, &qi) in primes.iter().enumerate() {
             let mut prod = 1u64;
             for &qj in &primes[..i] {
+                radix.push((prod, shoup_precompute(prod, qi)));
                 prod = mul_mod(prod, qj % qi, qi);
             }
-            inv_prefix.push(if i == 0 { 1 } else { inv_mod(prod, qi) });
+            let inv = if i == 0 { 1 } else { inv_mod(prod, qi) };
+            inv_prefix.push((inv, shoup_precompute(inv, qi)));
         }
-        let mut prefix = Vec::with_capacity(primes.len());
+        let mut prefix = Vec::with_capacity(k);
         let mut acc = BigUintLite::from_u64(1);
         for &q in primes {
             prefix.push(acc.clone());
@@ -687,35 +985,48 @@ impl CrtRecon {
         CrtRecon {
             primes: primes.to_vec(),
             inv_prefix,
+            radix,
             q_big,
             half,
             prefix,
         }
     }
 
-    /// Reconstruct x in [0, Q) from residues, return centered value
-    /// (x or x - Q) as f64.
+    /// Reconstruct x in [0, Q) from residues (each reduced mod its
+    /// prime), return centered value (x or x - Q) as f64.
     pub fn centered_f64(&self, residues: &[u64]) -> f64 {
+        let mut digits = vec![0u64; self.primes.len()];
+        self.centered_f64_with(residues, &mut digits)
+    }
+
+    /// [`CrtRecon::centered_f64`] with a caller-provided digit buffer
+    /// (`len == primes.len()`) so bulk decodes allocate nothing per
+    /// coefficient.
+    pub fn centered_f64_with(&self, residues: &[u64], digits: &mut [u64]) -> f64 {
         // Garner: mixed-radix digits a_i with
         //   x = a_0 + a_1 q_0 + a_2 q_0 q_1 + ...
         let k = self.primes.len();
-        let mut digits = vec![0u64; k];
+        debug_assert_eq!(digits.len(), k);
         for i in 0..k {
             let qi = self.primes[i];
+            debug_assert!(residues[i] < qi, "unreduced residue");
             // t = (r_i - (a_0 + a_1 q_0 + ...)) * inv_prefix mod q_i
+            let row = &self.radix[i * (i.saturating_sub(1)) / 2..];
             let mut acc = 0u64;
-            let mut radix = 1u64;
             for j in 0..i {
-                acc = add_mod(acc, mul_mod(digits[j] % qi, radix, qi), qi);
-                radix = mul_mod(radix, self.primes[j] % qi, qi);
+                let (r, r_sh) = row[j];
+                // Shoup multiply is exact for any u64 left operand, so
+                // the digit needs no pre-reduction mod q_i.
+                acc = add_mod(acc, mul_mod_shoup(digits[j], r, r_sh, qi), qi);
             }
-            let t = sub_mod(residues[i] % qi, acc, qi);
-            digits[i] = mul_mod(t, self.inv_prefix[i], qi);
+            let t = sub_mod(residues[i], acc, qi);
+            let (inv, inv_sh) = self.inv_prefix[i];
+            digits[i] = mul_mod_shoup(t, inv, inv_sh, qi);
         }
         // Assemble bigint.
         let mut x = BigUintLite::zero();
         for i in 0..k {
-            x = x.add(&self.prefix[i].mul_u64(digits[i]).add_u64(0));
+            x = x.add(&self.prefix[i].mul_u64(digits[i]));
         }
         // Center.
         if x.cmp_big(&self.half) == std::cmp::Ordering::Greater {
@@ -770,7 +1081,26 @@ mod tests {
         let orig = p.clone();
         p.to_ntt(&c);
         p.from_ntt(&c);
-        assert_eq!(p.limbs, orig.limbs);
+        assert_eq!(p.data(), orig.data());
+    }
+
+    #[test]
+    fn flat_limb_accessors_are_consistent() {
+        let c = ctx();
+        let mut rng = Xoshiro256pp::new(55);
+        let mut p = RnsPoly::sample_uniform(&c, &mut rng, c.params.max_level(), true, false);
+        let nl = p.active_limbs();
+        assert_eq!(nl, RnsPoly::n_limbs(p.level, p.special));
+        assert_eq!(p.data().len(), nl * c.n());
+        for li in 0..nl {
+            let want: Vec<u64> = p.data()[li * c.n()..(li + 1) * c.n()].to_vec();
+            assert_eq!(p.limb(li), &want[..], "limb {li}");
+        }
+        let (a, b) = p.limbs_pair_mut(0, nl - 1);
+        a[0] = 1;
+        b[0] = 2;
+        assert_eq!(p.limb(0)[0], 1);
+        assert_eq!(p.limb(nl - 1)[0], 2);
     }
 
     #[test]
@@ -831,14 +1161,15 @@ mod tests {
         // must equal the coefficient-domain automorphism.
         let c = ctx();
         let mut rng = Xoshiro256pp::new(88);
+        let mut scratch = Scratch::new();
         for g in [5usize, 25, 2 * c.n() - 1, 125] {
             let mut a = RnsPoly::sample_uniform(&c, &mut rng, c.params.max_level(), true, false);
             let mut coeff_path = a.clone();
             coeff_path.automorphism(&c, g);
             coeff_path.to_ntt(&c);
             a.to_ntt(&c);
-            a.automorphism_ntt(&c.galois_perm(g));
-            assert_eq!(a.limbs, coeff_path.limbs, "g={g}");
+            a.automorphism_ntt(&c, &c.galois_perm(g), &mut scratch);
+            assert_eq!(a.data(), coeff_path.data(), "g={g}");
         }
     }
 
@@ -855,7 +1186,34 @@ mod tests {
         assert!(ntt_path.is_ntt);
         ntt_path.from_ntt(&c);
         coeff_path.from_ntt(&c);
-        assert_eq!(ntt_path.limbs, coeff_path.limbs);
+        assert_eq!(ntt_path.data(), coeff_path.data());
+    }
+
+    #[test]
+    fn limb_parallel_ops_are_worker_count_invariant() {
+        // The same op sequence at workers ∈ {1, 3, 4} must produce
+        // bit-identical limbs (limbs are independent by construction).
+        let c = ctx();
+        let mut rng = Xoshiro256pp::new(99);
+        let base = RnsPoly::sample_uniform(&c, &mut rng, c.params.max_level(), true, true);
+        let other = RnsPoly::sample_uniform(&c, &mut rng, c.params.max_level(), true, true);
+        let run = |workers: usize| {
+            c.set_workers(workers);
+            let mut scratch = Scratch::new();
+            let mut p = base.clone();
+            p.mul_assign(&c, &other);
+            p.automorphism_ntt(&c, &c.galois_perm(5), &mut scratch);
+            p.mod_down_special_ntt(&c);
+            p.rescale(&c);
+            p.from_ntt(&c);
+            p
+        };
+        let serial = run(1);
+        for w in [3usize, 4] {
+            let par = run(w);
+            assert_eq!(par.data(), serial.data(), "workers={w}");
+        }
+        c.set_workers(1);
     }
 
     #[test]
@@ -885,7 +1243,47 @@ mod tests {
         b2.to_ntt(&c);
         a2.mul_assign(&c, &b2);
         a2.from_ntt(&c);
-        assert_eq!(a1.limbs, a2.limbs);
+        assert_eq!(a1.data(), a2.data());
+    }
+
+    #[test]
+    fn galois_perm_prewarm_fills_cache() {
+        let c = ctx();
+        assert_eq!(c.galois_perms_cached(), 0);
+        c.galois_perm_prewarm(&[1, 2, 0, 2]);
+        assert_eq!(c.galois_perms_cached(), 2);
+        // Subsequent lookups are read-path hits of the same Arc.
+        let g1 = super::super::modops::galois_element(1, 2 * c.n());
+        let p = c.galois_perm(g1);
+        assert_eq!(c.galois_perms_cached(), 2);
+        assert!(Arc::strong_count(&p) >= 2);
+    }
+
+    #[test]
+    fn crt_recon_scratch_variant_matches_allocating_path() {
+        let c = ctx();
+        let primes: Vec<u64> = (0..=c.params.max_level()).map(|i| c.q(i)).collect();
+        let recon = CrtRecon::new(&primes);
+        let mut rng = Xoshiro256pp::new(123);
+        let mut digits = vec![0u64; primes.len()];
+        for _ in 0..200 {
+            let residues: Vec<u64> = primes.iter().map(|&q| rng.next_below(q)).collect();
+            let a = recon.centered_f64(&residues);
+            let b = recon.centered_f64_with(&residues, &mut digits);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn double_assign_matches_add_self() {
+        let c = ctx();
+        let mut rng = Xoshiro256pp::new(321);
+        let a = RnsPoly::sample_uniform(&c, &mut rng, c.params.max_level(), false, true);
+        let mut doubled = a.clone();
+        doubled.double_assign(&c);
+        let mut summed = a.clone();
+        summed.add_assign(&c, &a);
+        assert_eq!(doubled.data(), summed.data());
     }
 
     #[test]

@@ -1,0 +1,105 @@
+//! Reusable limb-buffer pool (§Perf: scratch reuse).
+//!
+//! With flat limb storage ([`crate::ckks::rns::RnsPoly`]) one
+//! polynomial is exactly one `Vec<u64>`, so a tiny pool of recycled
+//! vectors removes the allocation from every temporary the evaluator
+//! makes: key-switch decompositions, hoisted-rotation digit copies,
+//! NTT-domain automorphism double buffers, tensor-product temporaries
+//! and retired polynomial-activation powers. The pool is owned by
+//! [`crate::ckks::Evaluator`] (one per worker thread) and threaded by
+//! `&mut` through the hot entry points — never shared, never locked.
+//!
+//! Buffers of different lengths coexist: ciphertext levels shrink as a
+//! pipeline rescales, and [`Scratch::take`] resizes whatever buffer it
+//! pops. The pool is capped so a deep one-off expression cannot pin
+//! memory forever.
+
+/// Upper bound on pooled buffers; beyond this, returned buffers are
+/// simply dropped. 64 vastly exceeds the live-temporary high-water
+/// mark of any evaluator op (a key-switch holds `level + 3` polys).
+const MAX_POOLED: usize = 64;
+
+/// A pool of reusable `u64` limb buffers.
+#[derive(Default)]
+pub struct Scratch {
+    bufs: Vec<Vec<u64>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// A buffer of exactly `len` zeroed words (recycled if available).
+    pub fn take(&mut self, len: usize) -> Vec<u64> {
+        match self.bufs.pop() {
+            Some(mut b) => {
+                b.clear();
+                b.resize(len, 0);
+                b
+            }
+            None => vec![0u64; len],
+        }
+    }
+
+    /// A buffer holding a copy of `src` (single memcpy, no zeroing).
+    pub fn take_copy(&mut self, src: &[u64]) -> Vec<u64> {
+        match self.bufs.pop() {
+            Some(mut b) => {
+                b.clear();
+                b.extend_from_slice(src);
+                b
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Return a buffer to the pool (dropped if the pool is full).
+    pub fn put(&mut self, buf: Vec<u64>) {
+        if buf.capacity() > 0 && self.bufs.len() < MAX_POOLED {
+            self.bufs.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled (test/introspection hook).
+    pub fn pooled(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut b = s.take(16);
+        b.iter_mut().for_each(|x| *x = 7);
+        let cap = b.capacity();
+        s.put(b);
+        assert_eq!(s.pooled(), 1);
+        let b2 = s.take(8);
+        assert!(b2.capacity() >= 8 && cap >= b2.capacity());
+        assert!(b2.iter().all(|&x| x == 0), "recycled buffer not zeroed");
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn take_copy_matches_source() {
+        let mut s = Scratch::new();
+        s.put(vec![9u64; 32]);
+        let src: Vec<u64> = (0..10).collect();
+        let b = s.take_copy(&src);
+        assert_eq!(b, src);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut s = Scratch::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            s.put(vec![0u64; 4]);
+        }
+        assert_eq!(s.pooled(), MAX_POOLED);
+    }
+}

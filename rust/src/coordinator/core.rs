@@ -91,6 +91,13 @@ pub struct CoordinatorConfig {
     /// capacity under sustained load; this only trims the latency tax
     /// when traffic pauses. Set `>= batch_delay` to disable.
     pub idle_flush: Duration,
+    /// Limb-parallel worker threads *inside* each HE op
+    /// (`CkksContext::set_workers`): fans per-limb loops (NTTs,
+    /// element-wise kernels, key-switch inner products) across cores
+    /// while `workers` scales across requests. `0` keeps the context's
+    /// current setting (its `CRYPTOTREE_CKKS_WORKERS` env default).
+    /// Outputs are bit-identical for every value.
+    pub ckks_workers: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -103,6 +110,7 @@ impl Default for CoordinatorConfig {
             enc_batch: 1,
             adaptive_enc_batch: true,
             idle_flush: Duration::from_millis(1),
+            ckks_workers: 0,
         }
     }
 }
@@ -217,6 +225,12 @@ impl Coordinator {
         artifacts_dir: Option<PathBuf>,
     ) -> Self {
         assert!(cfg.workers >= 1);
+        if cfg.ckks_workers > 0 {
+            ctx.set_workers(cfg.ckks_workers);
+        }
+        // Pre-warm the Galois-permutation cache from the compiled
+        // schedules so serving never takes the perm lock's write path.
+        server.prewarm(&ctx, server.model.plan.groups);
         // Metrics share the session cache's counters so one snapshot
         // covers queueing AND key residency.
         let metrics = Arc::new(Metrics::with_keycache(sessions.keycache_stats()));

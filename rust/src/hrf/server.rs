@@ -520,6 +520,21 @@ impl HrfServer {
         }
     }
 
+    /// Compile (and pass-optimize) the folded schedules this server
+    /// will serve and pre-warm the context's Galois-permutation cache
+    /// with every rotation step they use, so the serving hot path only
+    /// ever takes the **read** side of the permutation `RwLock`. The
+    /// step set of every batch size `b ≤ max_b` is a subset of the
+    /// `max_b` set (placement steps grow with `b`; reduction steps are
+    /// batch-independent), so one warm-up covers all group sizes.
+    ///
+    /// Called by the coordinator at start-up; harmless to call again.
+    pub fn prewarm(&self, ctx: &CkksContext, max_b: usize) {
+        let max_b = max_b.clamp(1, self.model.plan.groups);
+        let steps: Vec<usize> = self.schedule(max_b, true).rotation_steps().into_iter().collect();
+        ctx.galois_perm_prewarm(&steps);
+    }
+
     /// Rotation steps a session must cover in its registered Galois
     /// keys to use this server with packed groups of up to `b` samples
     /// (`b ≤ 1` is the single-sample set) — what a client should
@@ -730,6 +745,13 @@ mod tests {
             Decryptor::new(kg.secret_key()),
         );
         let server = HrfServer::new(hm);
+        // Pre-warm the Galois-permutation cache from the compiled
+        // schedule: the evaluations below then only read the cache.
+        server.prewarm(&ctx, plan.groups);
+        assert!(
+            ctx.galois_perms_cached() >= server.eval_key_requirements(plan.groups).len(),
+            "prewarm left schedule rotations cold"
+        );
         let mut ev = Evaluator::new(ctx.clone());
 
         for x in ds.x.iter().take(3) {
@@ -769,8 +791,8 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.level, y.level);
             assert_eq!(x.scale.to_bits(), y.scale.to_bits());
-            assert_eq!(x.c0.limbs, y.c0.limbs, "c0 deviates from reference");
-            assert_eq!(x.c1.limbs, y.c1.limbs, "c1 deviates from reference");
+            assert_eq!(x.c0.data(), y.c0.data(), "c0 deviates from reference");
+            assert_eq!(x.c1.data(), y.c1.data(), "c1 deviates from reference");
         }
     }
 

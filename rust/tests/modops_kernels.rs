@@ -1,0 +1,283 @@
+//! Kernel parity for the RNS data plane (ISSUE 5):
+//!
+//! * The division-free Barrett/Shoup kernels must equal the
+//!   `mul_mod` u128-division **oracle** on random and structured
+//!   inputs, across **every** prime (chain + special) of the toy,
+//!   fast and paper (`hrf_default`) parameter sets. CI runs this file
+//!   under `--release` as well — the optimized kernels are the ones
+//!   serving traffic, and debug-mode u128 paths can mask codegen
+//!   regressions.
+//! * Thread-count invariance: the limb-parallel executor must be a
+//!   pure throughput knob — primitive op chains and full
+//!   `HrfServer::execute` runs at worker counts 1 vs 4 produce
+//!   **bit-identical** ciphertexts (`engine_parity`-style assertions).
+
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::modops::{
+    barrett_precompute, barrett_reduce_128, barrett_reduce_64, mul_mod, mul_mod_barrett,
+    mul_mod_shoup, shoup_precompute,
+};
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
+use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
+use cryptotree::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Every prime of every shipped parameter set (chain + special) —
+/// `hrf_default` is the paper configuration.
+fn parameter_set_primes() -> Vec<(&'static str, Vec<u64>)> {
+    [CkksParams::toy(), CkksParams::fast(), CkksParams::hrf_default()]
+        .into_iter()
+        .map(|p| {
+            let mut primes = p.moduli.clone();
+            primes.push(p.special);
+            (p.name, primes)
+        })
+        .collect()
+}
+
+/// Structured edge inputs around multiples of q and the u64 extremes.
+fn edge_inputs(q: u64) -> Vec<u64> {
+    let mut v = vec![0u64, 1, 2, q - 1, q, q + 1, u64::MAX, u64::MAX - 1, 1 << 63];
+    // largest multiple of q that fits in u64, ±1
+    let k = q * (u64::MAX / q);
+    v.push(k);
+    v.push(k - 1);
+    v.push(k + 1);
+    v
+}
+
+#[test]
+fn barrett_mul_matches_oracle_on_all_parameter_set_primes() {
+    let mut rng = Xoshiro256pp::new(500);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            let ratio = barrett_precompute(q);
+            for _ in 0..2_000 {
+                let (x, y) = (rng.next_below(q), rng.next_below(q));
+                assert_eq!(
+                    mul_mod_barrett(x, y, q, ratio),
+                    mul_mod(x, y, q),
+                    "{name} q={q} x={x} y={y}"
+                );
+            }
+            // Unreduced operands (the kernel contract allows any u64).
+            for _ in 0..500 {
+                let (x, y) = (rng.next_u64(), rng.next_u64());
+                assert_eq!(
+                    mul_mod_barrett(x, y, q, ratio),
+                    mul_mod(x, y, q),
+                    "{name} q={q} unreduced x={x} y={y}"
+                );
+            }
+            for &x in &edge_inputs(q) {
+                for &y in &[0u64, 1, q - 1, u64::MAX] {
+                    assert_eq!(mul_mod_barrett(x, y, q, ratio), mul_mod(x, y, q));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn barrett_reduce_64_matches_mod_on_all_parameter_set_primes() {
+    let mut rng = Xoshiro256pp::new(501);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            let (_, r_hi) = barrett_precompute(q);
+            for _ in 0..4_000 {
+                let x = rng.next_u64();
+                assert_eq!(barrett_reduce_64(x, q, r_hi), x % q, "{name} q={q} x={x}");
+            }
+            for &x in &edge_inputs(q) {
+                assert_eq!(barrett_reduce_64(x, q, r_hi), x % q, "{name} q={q} edge {x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn barrett_reduce_128_matches_mod_on_all_parameter_set_primes() {
+    let mut rng = Xoshiro256pp::new(502);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            let ratio = barrett_precompute(q);
+            let oracle =
+                |lo: u64, hi: u64| ((((hi as u128) << 64) | lo as u128) % q as u128) as u64;
+            for _ in 0..2_000 {
+                let (lo, hi) = (rng.next_u64(), rng.next_u64());
+                assert_eq!(
+                    barrett_reduce_128(lo, hi, q, ratio),
+                    oracle(lo, hi),
+                    "{name} q={q} lo={lo} hi={hi}"
+                );
+            }
+            for &(lo, hi) in &[
+                (0u64, 0u64),
+                (q - 1, 0),
+                (u64::MAX, u64::MAX),
+                (0, u64::MAX),
+                (u64::MAX, 0),
+            ] {
+                assert_eq!(barrett_reduce_128(lo, hi, q, ratio), oracle(lo, hi));
+            }
+            // products of near-maximal residues (the dyadic-mul shape)
+            for _ in 0..500 {
+                let (a, b) = (q - 1 - rng.next_below(4), q - 1 - rng.next_below(4));
+                let p = a as u128 * b as u128;
+                assert_eq!(
+                    barrett_reduce_128(p as u64, (p >> 64) as u64, q, ratio),
+                    (p % q as u128) as u64
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shoup_mul_matches_oracle_for_arbitrary_left_operand() {
+    // Shoup multiplication requires only y < q; the left operand may
+    // be any u64 (the lazy NTT and the CRT digit path rely on this).
+    let mut rng = Xoshiro256pp::new(503);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            for _ in 0..2_000 {
+                let y = rng.next_below(q);
+                let ys = shoup_precompute(y, q);
+                let x = rng.next_u64();
+                assert_eq!(
+                    mul_mod_shoup(x, y, ys, q),
+                    mul_mod(x % q, y, q),
+                    "{name} q={q} x={x} y={y}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-count invariance
+// ---------------------------------------------------------------------
+
+fn ct_bits_equal(a: &Ciphertext, b: &Ciphertext) -> bool {
+    a.level == b.level
+        && a.scale.to_bits() == b.scale.to_bits()
+        && a.c0.data() == b.c0.data()
+        && a.c1.data() == b.c1.data()
+}
+
+#[test]
+fn primitive_chain_is_worker_count_invariant() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, 504);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &[1, 2, 4]);
+    let mut encryptor = Encryptor::new(pk, 505);
+    let decryptor = Decryptor::new(kg.secret_key());
+    let mut rng = Xoshiro256pp::new(506);
+    let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+
+    let run = |workers: usize| -> Vec<Ciphertext> {
+        ctx.set_workers(workers);
+        let mut ev = Evaluator::new(ctx.clone());
+        let rot = ev.rotate(&ct, 1, &gk);
+        let digits = ev.hoist(&ct);
+        let hrot = ev.rotate_hoisted(&ct, &digits, 2, &gk);
+        let mut prod = ev.mul(&ct, &rot, &rlk);
+        ev.rescale(&mut prod);
+        let mut sq = ev.square(&ct, &rlk);
+        ev.rescale(&mut sq);
+        let sum = ev.rotate_sum(&sq, 4, &gk);
+        vec![rot, hrot, prod, sq, sum]
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    ctx.set_workers(1);
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert!(ct_bits_equal(a, b), "primitive chain output {i} differs");
+    }
+    // and the results are still correct ciphertexts
+    let d = decryptor.decrypt_slots(&ctx, &enc, &parallel[0]);
+    for i in 0..enc.slots() {
+        assert!((d[i] - z[(i + 1) % enc.slots()]).abs() < 1e-5, "slot {i}");
+    }
+}
+
+fn synth_forest(k: usize, l: usize, c: usize, d: usize, rng: &mut Xoshiro256pp) -> NeuralForest {
+    let trees = (0..l)
+        .map(|_| NeuralTree {
+            tau: (0..k - 1).map(|_| rng.next_index(d)).collect(),
+            t: (0..k - 1).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            v: (0..k)
+                .map(|_| (0..k - 1).map(|_| rng.uniform(-0.25, 0.25)).collect())
+                .collect(),
+            b: (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            w: (0..c)
+                .map(|_| (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect())
+                .collect(),
+            beta: (0..c).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+            real_leaves: k,
+            n_classes: c,
+        })
+        .collect();
+    NeuralForest {
+        trees,
+        alphas: (0..l).map(|_| rng.uniform(0.1, 1.0)).collect(),
+        k,
+        n_classes: c,
+        activation: Activation::Poly {
+            coeffs: vec![0.0, 1.0], // identity: fits the depth-4 ring
+        },
+    }
+}
+
+#[test]
+fn hrf_execute_is_worker_count_invariant() {
+    let mut rng = Xoshiro256pp::new(507);
+    let d = 8;
+    let nf = synth_forest(4, 3, 2, d, &mut rng);
+    let params = Arc::new(CkksParams::build("kern-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let hm = HrfModel::from_neural_forest(&nf, d, params.slots()).unwrap();
+    let plan = hm.plan;
+    let b = plan.groups.min(3);
+
+    let mut kg = KeyGenerator::new(&ctx, 508);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(b));
+    let mut client = HrfClient::new(Encryptor::new(pk, 509), Decryptor::new(kg.secret_key()));
+    let server = HrfServer::new(hm);
+
+    let cts: Vec<Ciphertext> = (0..b)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform(0.0, 1.0)).collect();
+            client.encrypt_input(&ctx, &enc, &server.model, &x)
+        })
+        .collect();
+
+    let run = |workers: usize| {
+        ctx.set_workers(workers);
+        let mut ev = Evaluator::new(ctx.clone());
+        let ex = server.execute(&mut ev, &enc, &EncRequest::group(&cts), &rlk, &gk);
+        (ex.counts, ex.into_class_scores())
+    };
+    let (counts_1, outs_1) = run(1);
+    let (counts_4, outs_4) = run(4);
+    ctx.set_workers(1);
+    assert_eq!(counts_1, counts_4, "op accounting must not depend on workers");
+    assert_eq!(outs_1.len(), plan.c);
+    for (ci, (a, b)) in outs_1.iter().zip(&outs_4).enumerate() {
+        assert!(
+            ct_bits_equal(a, b),
+            "class {ci}: execute at 4 workers deviates from serial bits"
+        );
+    }
+}

@@ -63,8 +63,8 @@ fn rand_x(d: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
 fn ct_bits_equal(a: &Ciphertext, b: &Ciphertext) -> bool {
     a.level == b.level
         && a.scale.to_bits() == b.scale.to_bits()
-        && a.c0.limbs == b.c0.limbs
-        && a.c1.limbs == b.c1.limbs
+        && a.c0.data() == b.c0.data()
+        && a.c1.data() == b.c1.data()
 }
 
 struct World {
