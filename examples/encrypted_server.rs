@@ -147,7 +147,10 @@ fn main() {
             snap.plain_mean, snap.batches_flushed, snap.mean_batch_fill
         );
         match Arc::try_unwrap(coord) {
-            Ok(c) => c.shutdown(),
+            Ok(c) => {
+                let report = c.shutdown();
+                assert!(report.is_clean(), "worker panics: {:?}", report.worker_panics);
+            }
             Err(_) => unreachable!("all clients joined"),
         }
     }

@@ -1,0 +1,412 @@
+//! `cryptotree-loadgen` — multi-process load harness for the serving
+//! tier.
+//!
+//! The parent re-execs itself with a hidden `worker` subcommand so
+//! the load comes from genuinely separate OS processes (separate
+//! allocators, separate sockets — the shape a real client fleet has),
+//! not threads sharing the parent's address space. Each worker opens
+//! `--sessions` sessions sequentially and drives `--requests` scoring
+//! requests per session, printing one `LAT <µs>` line per request;
+//! the parent aggregates exact percentiles from the merged samples
+//! and writes `BENCH_serving_tier.json` via the bench harness.
+//!
+//! ```text
+//! cryptotree-loadgen --spawn-server --processes 2 --sessions 2 \
+//!     --requests 8 --mode enc --params demo
+//! ```
+//!
+//! * `--mode enc` (default): per-session keygen, key registration,
+//!   encrypted submissions through the `KeysEvicted`-recovering
+//!   client — give the spawned server `--key-budget-mb 1` (or point
+//!   at one so configured) and sessions evict each other, exercising
+//!   re-registration over the wire under load.
+//! * `--mode plain`: plaintext fast path — cheap enough for CI smoke.
+//! * `--churn N`: drop and reconnect the TCP connection every N
+//!   requests (session ids survive reconnects by design).
+//! * `--spawn-server`: launch a sibling `cryptotree-serve` on an
+//!   ephemeral port, scrape `LISTENING <addr>`, and shut it down
+//!   (checking its exit status) when the run ends.
+//!
+//! Exits non-zero if any worker process fails, any request errors, or
+//! a spawned server reports an unclean shutdown.
+
+use cryptotree::bench_harness::{fmt_dur, write_json, BenchRecord};
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::SubmitError;
+use cryptotree::hrf::client::{reshuffle_and_pack, EvalKeys};
+use cryptotree::net::args::Args;
+use cryptotree::net::client::{NetClient, NetError};
+use cryptotree::net::workload::{self, WorkloadSpec};
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Busy retries per request before counting it as failed.
+const MAX_BUSY_RETRIES: u32 = 1000;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) == Some("worker") {
+        worker_main(&argv[1..]);
+    } else {
+        parent_main(&argv);
+    }
+}
+
+// ------------------------------------------------------------- worker
+
+fn worker_main(rest: &[String]) {
+    let args = Args::parse(rest);
+    let spec = WorkloadSpec::from_args(&args);
+    let addr = args.get_str("addr", "127.0.0.1:7814");
+    let proc_id = args.get("proc", 0u64);
+    let sessions = args.get("sessions", 1usize);
+    let requests = args.get("requests", 4usize);
+    let mode = args.get_str("mode", "enc");
+    let churn = args.get("churn", 0usize);
+
+    let wl = workload::build(&spec);
+    let enc = Encoder::new(&wl.ctx);
+    let (mut ok, mut err, mut recovered) = (0u64, 0u64, 0u64);
+
+    for m in 0..sessions {
+        let connect = || match NetClient::connect(&addr, wl.ctx.clone()) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("worker {proc_id}: connect {addr} failed: {e}");
+                std::process::exit(3);
+            }
+        };
+        let mut client = connect();
+        let seed = spec.seed + 1000 * proc_id + 7 * m as u64;
+
+        if mode == "plain" {
+            for r in 0..requests {
+                let row = (proc_id as usize * 31 + m * 17 + r) % wl.data.x.len();
+                let x = wl.data.x[row].clone();
+                let t0 = Instant::now();
+                match client.submit_plain(x) {
+                    Ok(_scores) => {
+                        ok += 1;
+                        println!("LAT {}", t0.elapsed().as_micros());
+                    }
+                    Err(e) => {
+                        err += 1;
+                        eprintln!("worker {proc_id}: plain submit failed: {e}");
+                    }
+                }
+                if churn > 0 && (r + 1) % churn == 0 && r + 1 < requests {
+                    client = connect();
+                }
+            }
+            continue;
+        }
+
+        // Encrypted mode: the session's keys cover exactly the
+        // rotation steps the server advertises for its batch target.
+        let info = match client.model_info() {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("worker {proc_id}: model_info failed: {e}");
+                std::process::exit(3);
+            }
+        };
+        assert_eq!(
+            info.params_name,
+            wl.params.name,
+            "server params mismatch: pass the same --params to serve and loadgen"
+        );
+        let rotations: Vec<usize> = info.rotations.iter().map(|&r| r as usize).collect();
+        let mut kg = KeyGenerator::new(&wl.ctx, seed + 100);
+        let pk = kg.gen_public_key(&wl.ctx);
+        let keys = EvalKeys {
+            relin: kg.gen_relin_key(&wl.ctx),
+            galois: kg.gen_galois_keys(&wl.ctx, &rotations),
+        };
+        let mut encryptor = Encryptor::new(pk, seed + 200);
+        let sid = match client.register_keys(&keys) {
+            Ok(id) => id,
+            Err(e) => {
+                eprintln!("worker {proc_id}: register failed: {e}");
+                std::process::exit(3);
+            }
+        };
+
+        for r in 0..requests {
+            let row = (proc_id as usize * 31 + m * 17 + r) % wl.data.x.len();
+            let slots = reshuffle_and_pack(&wl.server.model, &wl.data.x[row]);
+            let ct = encryptor.encrypt_slots(&wl.ctx, &enc, &slots);
+            let mut busy = 0u32;
+            loop {
+                let t0 = Instant::now();
+                match client.submit_encrypted_recovering(sid, &ct, &keys) {
+                    Ok((_scores, rec)) => {
+                        ok += 1;
+                        recovered += rec as u64;
+                        println!("LAT {}", t0.elapsed().as_micros());
+                        break;
+                    }
+                    Err(NetError::Submit(SubmitError::Busy)) if busy < MAX_BUSY_RETRIES => {
+                        busy += 1;
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(e) => {
+                        err += 1;
+                        eprintln!("worker {proc_id}: submit failed: {e}");
+                        break;
+                    }
+                }
+            }
+            if churn > 0 && (r + 1) % churn == 0 && r + 1 < requests {
+                client = connect();
+            }
+        }
+    }
+
+    println!("SUMMARY ok={ok} err={err} recovered={recovered}");
+    if err > 0 {
+        std::process::exit(4);
+    }
+}
+
+// ------------------------------------------------------------- parent
+
+/// Per-worker results streamed back over stdout.
+#[derive(Default)]
+struct WorkerStats {
+    lat_us: Vec<u64>,
+    ok: u64,
+    err: u64,
+    recovered: u64,
+}
+
+fn parent_main(argv: &[String]) {
+    let args = Args::parse(argv);
+    let spec = WorkloadSpec::from_args(&args);
+    let processes = args.get("processes", 2usize);
+    let sessions = args.get("sessions", 2usize);
+    let requests = args.get("requests", 8usize);
+    let mode = args.get_str("mode", "enc");
+    let churn = args.get("churn", 0usize);
+    let json_path = args.get_str("json", "BENCH_serving_tier.json");
+    let exe = std::env::current_exe().expect("current_exe");
+
+    let mut server_child: Option<Child> = None;
+    let mut addr = args.get_str("addr", "127.0.0.1:7814");
+    if args.has("spawn-server") {
+        let serve_exe = exe
+            .parent()
+            .expect("binary dir")
+            .join(format!("cryptotree-serve{}", std::env::consts::EXE_SUFFIX));
+        let mut cmd = Command::new(serve_exe);
+        cmd.args(["--addr", "127.0.0.1:0"]);
+        for flag in [
+            "params",
+            "trees",
+            "depth",
+            "rows",
+            "seed",
+            "workers",
+            "enc-batch",
+            "queue",
+            "key-budget-mb",
+            "key-shards",
+            "max-conns",
+        ] {
+            if args.has(flag) {
+                cmd.args([format!("--{flag}"), args.get_str(flag, "")]);
+            }
+        }
+        cmd.stdout(Stdio::piped()).stderr(Stdio::inherit());
+        let mut child = cmd.spawn().expect("spawn cryptotree-serve");
+        let stdout = child.stdout.take().expect("server stdout");
+        let mut lines = BufReader::new(stdout).lines();
+        addr = loop {
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(a) = line.strip_prefix("LISTENING ") {
+                        break a.to_string();
+                    }
+                    println!("[serve] {line}");
+                }
+                _ => {
+                    let _ = child.kill();
+                    panic!("server exited before LISTENING line");
+                }
+            }
+        };
+        // Keep draining so the server never blocks on a full pipe.
+        std::thread::spawn(move || {
+            for line in lines.map_while(Result::ok) {
+                println!("[serve] {line}");
+            }
+        });
+        server_child = Some(child);
+        eprintln!("spawned server on {addr}");
+    }
+
+    eprintln!(
+        "driving {processes} process(es) × {sessions} session(s) × {requests} request(s), \
+         mode={mode}, against {addr}"
+    );
+    let t0 = Instant::now();
+    let mut readers = Vec::new();
+    let mut children = Vec::new();
+    for p in 0..processes {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker").args([
+            "--addr",
+            &addr,
+            "--proc",
+            &p.to_string(),
+            "--sessions",
+            &sessions.to_string(),
+            "--requests",
+            &requests.to_string(),
+            "--mode",
+            &mode,
+            "--churn",
+            &churn.to_string(),
+        ]);
+        for flag in ["params", "trees", "depth", "rows", "seed"] {
+            if args.has(flag) {
+                cmd.args([format!("--{flag}"), args.get_str(flag, "")]);
+            }
+        }
+        cmd.stdout(Stdio::piped()).stderr(Stdio::inherit());
+        let mut child = cmd.spawn().expect("spawn worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        readers.push(std::thread::spawn(move || collect_worker(stdout)));
+        children.push(child);
+    }
+
+    let mut stats = WorkerStats::default();
+    for r in readers {
+        let s = r.join().expect("reader thread");
+        stats.lat_us.extend(s.lat_us);
+        stats.ok += s.ok;
+        stats.err += s.err;
+        stats.recovered += s.recovered;
+    }
+    let mut workers_failed = false;
+    for mut c in children {
+        let status = c.wait().expect("wait worker");
+        if !status.success() {
+            workers_failed = true;
+            eprintln!("worker exited with {status}");
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    report(&spec, &mode, processes, &json_path, &stats, elapsed);
+
+    // Shut the server down over the wire; a spawned one must also
+    // exit cleanly (it exits non-zero on any worker panic).
+    let mut server_failed = false;
+    if server_child.is_some() || args.has("shutdown-server") {
+        let ctx = CkksContext::new(workload::params_by_name(&spec.params));
+        match NetClient::connect(&addr, ctx) {
+            Ok(mut c) => {
+                if let Err(e) = c.shutdown_server() {
+                    eprintln!("shutdown request failed: {e}");
+                    server_failed = true;
+                }
+            }
+            Err(e) => {
+                eprintln!("shutdown connect failed: {e}");
+                server_failed = true;
+            }
+        }
+    }
+    if let Some(mut child) = server_child {
+        let status = child.wait().expect("wait server");
+        if !status.success() {
+            eprintln!("server exited with {status}");
+            server_failed = true;
+        }
+    }
+
+    if workers_failed || server_failed || stats.err > 0 {
+        std::process::exit(1);
+    }
+}
+
+fn collect_worker(stdout: std::process::ChildStdout) -> WorkerStats {
+    let mut s = WorkerStats::default();
+    for line in BufReader::new(stdout).lines().map_while(Result::ok) {
+        if let Some(us) = line.strip_prefix("LAT ") {
+            if let Ok(v) = us.trim().parse::<u64>() {
+                s.lat_us.push(v);
+            }
+        } else if let Some(rest) = line.strip_prefix("SUMMARY ") {
+            for part in rest.split_whitespace() {
+                if let Some((k, v)) = part.split_once('=') {
+                    let v: u64 = v.parse().unwrap_or(0);
+                    match k {
+                        "ok" => s.ok = v,
+                        "err" => s.err = v,
+                        "recovered" => s.recovered = v,
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+    s
+}
+
+fn report(
+    spec: &WorkloadSpec,
+    mode: &str,
+    processes: usize,
+    json_path: &str,
+    stats: &WorkerStats,
+    elapsed: Duration,
+) {
+    let mut lats = stats.lat_us.clone();
+    lats.sort_unstable();
+    if lats.is_empty() {
+        eprintln!("no latency samples collected");
+        return;
+    }
+    // Exact percentiles from the full sorted sample set.
+    let pct = |q: f64| lats[(((lats.len() as f64) * q) as usize).min(lats.len() - 1)];
+    let (p50, p95, p99) = (pct(0.50), pct(0.95), pct(0.99));
+    let mean = lats.iter().sum::<u64>() as f64 / lats.len() as f64;
+    let rps = stats.ok as f64 / elapsed.as_secs_f64();
+
+    let dur = |us: u64| fmt_dur(Duration::from_micros(us));
+    println!(
+        "{} ok, {} err, {} eviction recoveries in {}",
+        stats.ok,
+        stats.err,
+        stats.recovered,
+        fmt_dur(elapsed)
+    );
+    println!(
+        "latency p50 {} p95 {} p99 {} mean {} | throughput {rps:.2} req/s",
+        dur(p50),
+        dur(p95),
+        dur(p99),
+        dur(mean as u64)
+    );
+
+    let label = &spec.params;
+    let rec = |op: &str, us: f64| BenchRecord::from_ns(op, us * 1e3, processes, label);
+    let records = vec![
+        rec(&format!("serving/{mode}/latency_p50"), p50 as f64),
+        rec(&format!("serving/{mode}/latency_p95"), p95 as f64),
+        rec(&format!("serving/{mode}/latency_p99"), p99 as f64),
+        rec(&format!("serving/{mode}/latency_mean"), mean),
+        // Inverse throughput in the same ns/op unit as every other
+        // bench record (wall-clock across all processes per request).
+        rec(
+            &format!("serving/{mode}/wall_per_req"),
+            elapsed.as_micros() as f64 / stats.ok.max(1) as f64,
+        ),
+    ];
+    if let Err(e) = write_json(json_path, &records) {
+        eprintln!("writing {json_path} failed: {e}");
+    }
+}

@@ -1,0 +1,135 @@
+//! `cryptotree-serve` — the networked HRF serving tier.
+//!
+//! Builds the deterministic demo workload (same flags as
+//! `cryptotree-loadgen`, so clients encrypt against an identical
+//! model), starts the coordinator, and serves the wire protocol until
+//! a client sends `Shutdown`.
+//!
+//! ```text
+//! cryptotree-serve --addr 127.0.0.1:0 --params demo --workers 2
+//! ```
+//!
+//! Prints `LISTENING <addr>` once the socket is bound (machine-
+//! parsable: the load generator's `--spawn-server` mode reads it to
+//! discover the ephemeral port). Exits non-zero if any worker — HE or
+//! network — panicked during the run, so harnesses cannot mistake a
+//! crashed-but-restarted worker pool for a clean run.
+//!
+//! Flags beyond the shared workload set:
+//!
+//! * `--addr` (default `127.0.0.1:7814`), `--max-conns`,
+//!   `--max-frame-mb` — acceptor knobs.
+//! * `--workers`, `--enc-batch`, `--queue` — coordinator knobs.
+//! * `--key-budget-mb` — evaluation-key cache budget; `0` (default)
+//!   disables eviction, small values exercise the
+//!   `KeysEvicted`/re-register protocol under load.
+
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
+use cryptotree::keycache::KeyCacheConfig;
+use cryptotree::net::args::Args;
+use cryptotree::net::server::{NetServer, NetServerConfig};
+use cryptotree::net::workload::{self, WorkloadSpec};
+use std::io::Write;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let spec = WorkloadSpec::from_args(&args);
+
+    let workers = args.get("workers", 2usize);
+    let enc_batch = args.get("enc-batch", 2usize);
+    let queue = args.get("queue", 64usize);
+    let key_budget_mb = args.get("key-budget-mb", 0u64);
+    let max_conns = args.get("max-conns", 64usize);
+    let max_frame_mb = args.get("max-frame-mb", 256usize);
+
+    eprintln!(
+        "building workload: params={} trees={} depth={} rows={} seed={}",
+        spec.params, spec.trees, spec.depth, spec.rows, spec.seed
+    );
+    let wl = workload::build(&spec);
+    eprintln!(
+        "model: {} features, {} classes, {} sample groups/ct ({})",
+        wl.server.model.plan.d,
+        wl.server.model.plan.c,
+        wl.server.model.plan.groups,
+        wl.params.name
+    );
+
+    let sessions = if key_budget_mb == 0 {
+        Arc::new(SessionManager::new())
+    } else {
+        Arc::new(SessionManager::with_config(KeyCacheConfig {
+            num_shards: args.get("key-shards", 4usize),
+            budget_bytes: key_budget_mb * 1024 * 1024,
+        }))
+    };
+
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers,
+            queue_capacity: queue,
+            enc_batch,
+            ..Default::default()
+        },
+        wl.ctx.clone(),
+        wl.server.clone(),
+        sessions,
+        None,
+    );
+
+    let net = NetServer::start(
+        NetServerConfig {
+            addr: args.get_str("addr", "127.0.0.1:7814"),
+            max_connections: max_conns,
+            max_frame: max_frame_mb * 1024 * 1024,
+            ..Default::default()
+        },
+        wl.ctx.clone(),
+        wl.server.clone(),
+        coord,
+        enc_batch,
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("bind failed: {e}");
+        std::process::exit(2);
+    });
+
+    // Machine-parsable: loadgen --spawn-server scrapes this line for
+    // the resolved (possibly ephemeral) port.
+    println!("LISTENING {}", net.local_addr());
+    std::io::stdout().flush().ok();
+
+    let metrics = net.metrics();
+    let report = net.run_until_shutdown();
+
+    let s = metrics.snapshot();
+    println!(
+        "served: {} encrypted ({} batches, mean fill {:.2}), {} plain",
+        s.encrypted_completed, s.enc_batches_flushed, s.mean_enc_batch_fill, s.plain_completed
+    );
+    println!(
+        "latency: enc mean {:?} p95 {:?}; plain mean {:?} p95 {:?}",
+        s.encrypted_mean, s.encrypted_p95, s.plain_mean, s.plain_p95
+    );
+    println!(
+        "network: {} accepted, {} refused overload; rejected: {} busy, {} no-session, {} evicted",
+        s.net_connections_accepted,
+        s.net_rejected_overload,
+        s.rejected_backpressure,
+        s.rejected_no_session,
+        s.rejected_keys_evicted
+    );
+    println!(
+        "keycache: {} hits, {} misses, {} evictions, {} resident bytes",
+        s.keycache_hits, s.keycache_misses, s.keycache_evictions, s.keycache_resident_bytes
+    );
+
+    if !report.is_clean() {
+        for (name, msg) in &report.worker_panics {
+            eprintln!("worker `{name}` panicked: {msg}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -41,7 +41,7 @@ pub struct PublicKey {
 }
 
 /// One key-switching key: per chain limb `j`, a pair over basis Q·P.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct KswKey {
     /// b_j components (NTT, special limb last).
     pub b: Vec<RnsPoly>,
@@ -50,11 +50,11 @@ pub struct KswKey {
 }
 
 /// Relinearization key: switch `s²` → `s`.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct RelinKey(pub KswKey);
 
 /// Galois keys: rotation step → switching key for `s(X^{5^r})` → `s`.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct GaloisKeys {
     pub keys: HashMap<usize, KswKey>,
     /// Galois element per rotation step (5^r mod 2N).

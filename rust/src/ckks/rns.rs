@@ -29,6 +29,7 @@ use super::ntt::NttTable;
 use super::parallel;
 use super::params::ParamsRef;
 use super::scratch::Scratch;
+use crate::lockutil::{read_unpoisoned, write_unpoisoned};
 use crate::rng::Xoshiro256pp;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -165,7 +166,7 @@ impl CkksContext {
     /// NTT-domain permutation for the Galois automorphism X→X^g:
     /// `out[i] = in[perm[i]]` applied per limb (cached per g).
     pub fn galois_perm(&self, g: usize) -> Arc<Vec<u32>> {
-        if let Some(p) = self.galois_perms.read().unwrap().get(&g) {
+        if let Some(p) = read_unpoisoned(&self.galois_perms).get(&g) {
             return p.clone();
         }
         let two_n = 2 * self.n();
@@ -180,7 +181,7 @@ impl CkksContext {
             })
             .collect();
         let perm = Arc::new(perm);
-        self.galois_perms.write().unwrap().insert(g, perm.clone());
+        write_unpoisoned(&self.galois_perms).insert(g, perm.clone());
         perm
     }
 
@@ -201,7 +202,7 @@ impl CkksContext {
 
     /// Number of Galois permutations currently cached (test hook).
     pub fn galois_perms_cached(&self) -> usize {
-        self.galois_perms.read().unwrap().len()
+        read_unpoisoned(&self.galois_perms).len()
     }
 
     pub fn n(&self) -> usize {
@@ -270,6 +271,42 @@ pub struct RnsPoly {
 impl RnsPoly {
     pub fn n_limbs(level: usize, special: bool) -> usize {
         level + 1 + special as usize
+    }
+
+    /// Reassemble a polynomial from its serialized parts — the wire
+    /// codec's ([`crate::net`]) deserialization entry point. `data` is
+    /// the flat limb payload in [`RnsPoly::data`] order.
+    ///
+    /// # Panics
+    ///
+    /// If `level` exceeds the context's modulus chain or `data` is not
+    /// exactly `n_limbs(level, special) * ctx.n()` residues. Residue
+    /// *range* validation (each value < its limb modulus) is the
+    /// caller's job — the net codec checks every residue against the
+    /// context before calling.
+    pub fn from_raw_parts(
+        ctx: &CkksContext,
+        level: usize,
+        special: bool,
+        is_ntt: bool,
+        data: Vec<u64>,
+    ) -> Self {
+        assert!(
+            level < ctx.params.moduli.len(),
+            "level exceeds the modulus chain"
+        );
+        assert_eq!(
+            data.len(),
+            Self::n_limbs(level, special) * ctx.n(),
+            "flat limb payload length mismatch"
+        );
+        RnsPoly {
+            level,
+            special,
+            is_ntt,
+            n: ctx.n(),
+            data,
+        }
     }
 
     /// Number of limbs currently stored.

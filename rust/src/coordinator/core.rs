@@ -53,6 +53,7 @@ use crate::ckks::{Ciphertext, Encoder, Evaluator};
 use crate::hrf::client::reshuffle_and_pack;
 use crate::hrf::{EncRequest, EncScores, HrfServer};
 use crate::keycache::CacheState;
+use crate::lockutil::lock_unpoisoned;
 use crate::runtime::{SlotModel, SlotModelParams};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -156,7 +157,12 @@ impl std::error::Error for SubmitError {}
 /// group score slot. Packed-group submissions
 /// ([`Coordinator::submit_encrypted_packed`]) return slot 0 and are
 /// unpacked with `HrfClient::decrypt_scores_batch` on `.scores`.
-pub type EncResponse = Result<EncScores, String>;
+///
+/// Errors are typed: work admitted past the submission gate can still
+/// fail mid-flight with [`SubmitError::KeysEvicted`] (key cache
+/// evicted the session between admission and evaluation — re-register
+/// and resubmit) or [`SubmitError::NoSession`] (session removed).
+pub type EncResponse = Result<EncScores, SubmitError>;
 /// Plaintext-path response: per-class scores.
 pub type PlainResponse = Result<Vec<f64>, String>;
 
@@ -198,6 +204,37 @@ enum WorkerJob {
         enqueued: Instant,
         resp: SyncSender<EncResponse>,
     },
+}
+
+/// Outcome of [`Coordinator::shutdown`]: which serving threads (if
+/// any) terminated by panic rather than by draining cleanly. A
+/// serving binary should treat a non-clean report as a failed stop
+/// and exit non-zero — the panics were already logged to stderr as
+/// they were collected.
+#[derive(Debug, Default)]
+pub struct ShutdownReport {
+    /// `(thread name, panic message)` for every thread that panicked.
+    pub worker_panics: Vec<(String, String)>,
+}
+
+impl ShutdownReport {
+    /// True when every thread exited without panicking.
+    pub fn is_clean(&self) -> bool {
+        self.worker_panics.is_empty()
+    }
+}
+
+/// Render a captured panic payload (`JoinHandle::join`'s `Err`) as a
+/// message. Panics raised via `panic!("...")` carry `&str` or
+/// `String`; anything else gets a placeholder.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Handle to a running coordinator.
@@ -298,17 +335,14 @@ impl Coordinator {
                                                 slot: 0,
                                             })
                                         }
-                                        None => Err(format!(
-                                            "session {session_id}: keys evicted or session closed mid-flight; re-register and resubmit"
-                                        )),
+                                        None => {
+                                            Err(mid_flight_error(&sessions, session_id))
+                                        }
                                     };
                                     metrics
                                         .encrypted_completed
                                         .fetch_add(n_samples as u64, Ordering::Relaxed);
-                                    metrics
-                                        .encrypted_latency
-                                        .lock()
-                                        .unwrap()
+                                    lock_unpoisoned(&metrics.encrypted_latency)
                                         .record(enqueued.elapsed());
                                     let _ = resp.send(result);
                                 }
@@ -592,7 +626,7 @@ impl Coordinator {
                                 .fetch_add(n as u64, Ordering::Relaxed);
                             for ((_, enq, resp), s) in held.drain(..).zip(scores) {
                                 metrics.plain_completed.fetch_add(1, Ordering::Relaxed);
-                                metrics.plain_latency.lock().unwrap().record(enq.elapsed());
+                                lock_unpoisoned(&metrics.plain_latency).record(enq.elapsed());
                                 let _ = resp.send(Ok(s));
                             }
                             n
@@ -791,8 +825,13 @@ impl Coordinator {
         }
     }
 
-    /// Drain and stop all threads.
-    pub fn shutdown(mut self) {
+    /// Drain and stop all threads, reporting any that died by panic.
+    ///
+    /// A panicking worker no longer disappears silently: its payload
+    /// is captured from `join`, logged to stderr, and surfaced in the
+    /// returned [`ShutdownReport`] so a serving binary can exit
+    /// non-zero instead of reporting a clean stop.
+    pub fn shutdown(mut self) -> ShutdownReport {
         self.shutdown.store(true, Ordering::Relaxed);
         // Dropping the ingress sender unblocks the router, which drops
         // enc-batcher/batcher senders in turn.
@@ -800,9 +839,16 @@ impl Coordinator {
             let (tx, _rx) = sync_channel(1);
             tx
         }));
+        let mut report = ShutdownReport::default();
         for t in self.threads.drain(..) {
-            let _ = t.join();
+            let name = t.thread().name().unwrap_or("<unnamed>").to_string();
+            if let Err(payload) = t.join() {
+                let msg = panic_message(payload.as_ref());
+                eprintln!("[coordinator] thread `{name}` panicked: {msg}");
+                report.worker_panics.push((name, msg));
+            }
         }
+        report
     }
 }
 
@@ -832,21 +878,46 @@ fn run_group(
     session_id: u64,
     items: Vec<EncItem>,
 ) {
+    run_group_with(
+        server, sessions, metrics, ev, enc, session_id, items, &mut |_| {},
+    );
+}
+
+/// Classify a mid-flight session miss: the key cache distinguishes
+/// *evicted* (recoverable — re-register the same id) from *unknown*
+/// (session removed). A race where the keys came back between the
+/// fetch and this probe still reports `KeysEvicted`, whose recovery
+/// (resubmit) is exactly right.
+fn mid_flight_error(sessions: &SessionManager, session_id: u64) -> SubmitError {
+    match sessions.peek(session_id) {
+        CacheState::Unknown => SubmitError::NoSession,
+        CacheState::Evicted | CacheState::Resident(_) => SubmitError::KeysEvicted,
+    }
+}
+
+/// [`run_group`] with a test seam: `after_chunk(i)` runs after chunk
+/// (or per-request evaluation) `i` completes, letting tests mutate
+/// key-cache state between chunks deterministically.
+pub(crate) fn run_group_with(
+    server: &HrfServer,
+    sessions: &SessionManager,
+    metrics: &Metrics,
+    ev: &mut Evaluator,
+    enc: &Encoder,
+    session_id: u64,
+    items: Vec<EncItem>,
+    after_chunk: &mut dyn FnMut(usize),
+) {
     // Untracked fetch: the submission gate already counted this
     // request's cache hit.
     let sess = match sessions.get_untracked(session_id) {
         Some(s) => s,
         None => {
+            let err = mid_flight_error(sessions, session_id);
             for (_, enqueued, resp) in items {
                 metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
-                metrics
-                    .encrypted_latency
-                    .lock()
-                    .unwrap()
-                    .record(enqueued.elapsed());
-                let _ = resp.send(Err(format!(
-                    "session {session_id}: keys evicted or session closed mid-flight; re-register and resubmit"
-                )));
+                lock_unpoisoned(&metrics.encrypted_latency).record(enqueued.elapsed());
+                let _ = resp.send(Err(err));
             }
             return;
         }
@@ -854,14 +925,23 @@ fn run_group(
     let complete = |metrics: &Metrics,
                     enqueued: Instant,
                     resp: SyncSender<EncResponse>,
-                    result: EncScores| {
+                    result: EncResponse| {
         metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .encrypted_latency
-            .lock()
-            .unwrap()
-            .record(enqueued.elapsed());
-        let _ = resp.send(Ok(result));
+        lock_unpoisoned(&metrics.encrypted_latency).record(enqueued.elapsed());
+        let _ = resp.send(result);
+    };
+    // Re-probe key residency before evaluating a chunk past the first.
+    // The group can span many chunks (the adaptive target can exceed
+    // the key coverage a client generated for), and the cache may
+    // evict this session between chunks; the *remaining* requests then
+    // fail individually with a typed, recoverable error instead of the
+    // whole group being abandoned.
+    let still_resident = |failed: &mut Option<SubmitError>| {
+        if failed.is_none() {
+            if let CacheState::Evicted | CacheState::Unknown = sessions.peek(session_id) {
+                *failed = Some(mid_flight_error(sessions, session_id));
+            }
+        }
     };
     let uniform = items.windows(2).all(|w| {
         w[0].0.level == w[1].0.level && (w[0].0.scale - w[1].0.scale).abs() < 1e-6
@@ -877,6 +957,7 @@ fn run_group(
             }
         }
     }
+    let mut failed: Option<SubmitError> = None;
     if max_b > 1 {
         // Move the ciphertexts out (no deep clones on the hot path);
         // only the (enqueue time, reply sender) metadata is needed
@@ -885,7 +966,18 @@ fn run_group(
             .into_iter()
             .map(|(ct, enqueued, resp)| (*ct, (enqueued, resp)))
             .unzip();
-        for (chunk_cts, chunk_meta) in cts.chunks(max_b).zip(meta.chunks(max_b)) {
+        for (i, (chunk_cts, chunk_meta)) in
+            cts.chunks(max_b).zip(meta.chunks(max_b)).enumerate()
+        {
+            if i > 0 {
+                still_resident(&mut failed);
+            }
+            if let Some(err) = failed {
+                for (enqueued, resp) in chunk_meta.iter().cloned() {
+                    complete(metrics, enqueued, resp, Err(err));
+                }
+                continue;
+            }
             // One engine execution per chunk (a 1-chunk normalizes to
             // the single-sample folded schedule); each caller's
             // response carries the shared per-class ciphertexts plus
@@ -894,17 +986,153 @@ fn run_group(
                 .execute(ev, enc, &EncRequest::group(chunk_cts), &sess.relin, &sess.galois)
                 .into_responses();
             for ((enqueued, resp), r) in chunk_meta.iter().cloned().zip(responses) {
-                complete(metrics, enqueued, resp, r);
+                complete(metrics, enqueued, resp, Ok(r));
             }
+            after_chunk(i);
         }
     } else {
-        for (ct, enqueued, resp) in items {
+        for (i, (ct, enqueued, resp)) in items.into_iter().enumerate() {
+            if i > 0 {
+                still_resident(&mut failed);
+            }
+            if let Some(err) = failed {
+                complete(metrics, enqueued, resp, Err(err));
+                continue;
+            }
             let r = server
                 .execute(ev, enc, &EncRequest::single(&ct), &sess.relin, &sess.galois)
                 .into_responses()
                 .pop()
                 .expect("single-sample execution yields one response");
-            complete(metrics, enqueued, resp, r);
+            complete(metrics, enqueued, resp, Ok(r));
+            after_chunk(i);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::rns::CkksContext;
+    use crate::ckks::{CkksParams, Encryptor, KeyGenerator};
+    use crate::data::adult;
+    use crate::forest::tree::TreeConfig;
+    use crate::forest::{RandomForest, RandomForestConfig};
+    use crate::hrf::HrfModel;
+    use crate::keycache::KeyCacheConfig;
+    use crate::nrf::activation::Activation;
+    use crate::nrf::NeuralForest;
+
+    /// Regression: a key-cache eviction between the chunks of one
+    /// flushed group must fail the *remaining* requests with the
+    /// typed, recoverable `KeysEvicted` — not abandon the group, and
+    /// not serve chunks past the eviction.
+    #[test]
+    fn mid_chunk_eviction_fails_remaining_requests_typed() {
+        // Cheap ring (N=4096, depth 4) + identity activation: the
+        // chunking protocol is under test, not the numerics.
+        let params = Arc::new(CkksParams::build(
+            "evict-midchunk-n4096-d4",
+            4096,
+            60,
+            40,
+            4,
+            3.2,
+        ));
+        let ctx = CkksContext::new(params.clone());
+        let enc = Encoder::new(&ctx);
+        let ds = adult::generate(200, 615);
+        let rf = RandomForest::fit(
+            &ds,
+            &RandomForestConfig {
+                n_trees: 4,
+                tree: TreeConfig {
+                    max_depth: 2,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            616,
+        );
+        let nf = NeuralForest::from_forest(
+            &rf,
+            Activation::Poly {
+                coeffs: vec![0.0, 1.0],
+            },
+        );
+        let model = HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+        let server = HrfServer::new(model);
+
+        let mut kg = KeyGenerator::new(&ctx, 617);
+        let pk = kg.gen_public_key(&ctx);
+        let rlk = kg.gen_relin_key(&ctx);
+        // Keys covering exactly 2-sample chunks: the 4-item group
+        // below is then served as two chunks of two.
+        let gk = kg.gen_galois_keys(&ctx, &server.eval_key_requirements(2));
+        assert!(server.can_batch(&gk, 2));
+        assert!(
+            !server.can_batch(&gk, 4) && !server.can_batch(&gk, 3),
+            "test premise: b=2 keys must not cover larger chunks \
+             (placement steps grow with b)"
+        );
+        let mut encryptor = Encryptor::new(pk, 618);
+
+        // Budget fits one session (plus slack), not two — the second
+        // registration inside the seam callback evicts the first.
+        let session_bytes = (rlk.key_bytes() + gk.key_bytes()) as u64;
+        let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+            num_shards: 1,
+            budget_bytes: session_bytes * 3 / 2,
+        }));
+        let sid = sessions.register(rlk.clone(), gk.clone());
+
+        let metrics = Metrics::default();
+        let mut ev = Evaluator::new(ctx.clone());
+        let mut items: Vec<EncItem> = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let slots = reshuffle_and_pack(&server.model, &ds.x[i]);
+            let ct = encryptor.encrypt_slots(&ctx, &enc, &slots);
+            let (tx, rx) = sync_channel(1);
+            items.push((Box::new(ct), Instant::now(), tx));
+            rxs.push(rx);
+        }
+
+        let sessions_cb = sessions.clone();
+        let mut evicted_after = Vec::new();
+        run_group_with(
+            &server,
+            &sessions,
+            &metrics,
+            &mut ev,
+            &enc,
+            sid,
+            items,
+            &mut |chunk| {
+                if chunk == 0 {
+                    sessions_cb.register(rlk.clone(), gk.clone());
+                    assert!(
+                        matches!(sessions_cb.peek(sid), CacheState::Evicted),
+                        "budget pressure must evict the serving session"
+                    );
+                    evicted_after.push(chunk);
+                }
+            },
+        );
+        assert_eq!(evicted_after, vec![0], "seam must fire after chunk 0 only");
+
+        // Chunk 0 (requests 0, 1) was served before the eviction …
+        for rx in &rxs[..2] {
+            let resp = rx.try_recv().expect("chunk-0 response missing");
+            assert!(resp.is_ok(), "pre-eviction request failed: {resp:?}");
+        }
+        // … and chunk 1 (requests 2, 3) fails per-request with the
+        // typed, recoverable error.
+        for rx in &rxs[2..] {
+            let resp = rx.try_recv().expect("chunk-1 response missing");
+            assert_eq!(resp.err(), Some(SubmitError::KeysEvicted));
+        }
+        // Every request completed (metrics see all four).
+        assert_eq!(metrics.encrypted_completed.load(Ordering::Relaxed), 4);
     }
 }

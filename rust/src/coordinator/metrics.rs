@@ -4,6 +4,7 @@
 //! histogram per request class; cheap enough for the request path.
 
 use crate::keycache::KeyCacheStats;
+use crate::lockutil::lock_unpoisoned;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -84,6 +85,13 @@ pub struct Metrics {
     /// enc-batcher — the queue-depth signal the adaptive batching
     /// target scales with (batch harder under load).
     pub enc_queue_depth: AtomicU64,
+    /// TCP connections accepted by the serving tier (`crate::net`).
+    pub net_connections_accepted: AtomicU64,
+    /// Serving-tier connections currently open (gauge).
+    pub net_connections_open: AtomicU64,
+    /// Connections refused at accept because the serving tier's
+    /// connection cap was reached (accept-path backpressure).
+    pub net_rejected_overload: AtomicU64,
     /// Shared with the session key cache: hits / misses / evictions /
     /// resident bytes (see [`crate::keycache`]).
     pub keycache: Arc<KeyCacheStats>,
@@ -125,6 +133,9 @@ pub struct MetricsSnapshot {
     /// Encrypted requests in flight between admission and batcher
     /// pickup at snapshot time.
     pub enc_queue_depth: u64,
+    pub net_connections_accepted: u64,
+    pub net_connections_open: u64,
+    pub net_rejected_overload: u64,
     pub keycache_hits: u64,
     pub keycache_misses: u64,
     pub keycache_evictions: u64,
@@ -137,8 +148,8 @@ pub struct MetricsSnapshot {
 
 impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let enc = self.encrypted_latency.lock().unwrap();
-        let plain = self.plain_latency.lock().unwrap();
+        let enc = lock_unpoisoned(&self.encrypted_latency);
+        let plain = lock_unpoisoned(&self.plain_latency);
         let flushed = self.batches_flushed.load(Ordering::Relaxed);
         let enc_flushed = self.enc_batches_flushed.load(Ordering::Relaxed);
         let mean_batch_fill = if flushed == 0 {
@@ -172,6 +183,9 @@ impl Metrics {
                 self.enc_batch_capacity.load(Ordering::Relaxed),
             ),
             enc_queue_depth: self.enc_queue_depth.load(Ordering::Relaxed),
+            net_connections_accepted: self.net_connections_accepted.load(Ordering::Relaxed),
+            net_connections_open: self.net_connections_open.load(Ordering::Relaxed),
+            net_rejected_overload: self.net_rejected_overload.load(Ordering::Relaxed),
             keycache_hits: kc.hits,
             keycache_misses: kc.misses,
             keycache_evictions: kc.evictions,
@@ -214,14 +228,33 @@ mod tests {
         m.encrypted_completed.fetch_add(3, Ordering::Relaxed);
         m.batches_flushed.fetch_add(2, Ordering::Relaxed);
         m.batch_fill_sum.fetch_add(9, Ordering::Relaxed);
-        m.plain_latency
-            .lock()
-            .unwrap()
-            .record(Duration::from_micros(500));
+        lock_unpoisoned(&m.plain_latency).record(Duration::from_micros(500));
+        m.net_connections_accepted.fetch_add(4, Ordering::Relaxed);
+        m.net_connections_open.fetch_add(2, Ordering::Relaxed);
+        m.net_rejected_overload.fetch_add(1, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.encrypted_completed, 3);
         assert!((s.mean_batch_fill - 4.5).abs() < 1e-12);
         assert!(s.plain_mean > Duration::ZERO);
+        assert_eq!(s.net_connections_accepted, 4);
+        assert_eq!(s.net_connections_open, 2);
+        assert_eq!(s.net_rejected_overload, 1);
+    }
+
+    #[test]
+    fn snapshot_survives_a_poisoned_histogram_lock() {
+        // A panicking worker mid-`record` must not take every future
+        // snapshot (or record) down with it.
+        let m = std::sync::Arc::new(Metrics::default());
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.encrypted_latency.lock().unwrap();
+            panic!("worker died holding the latency lock");
+        })
+        .join();
+        assert!(m.encrypted_latency.is_poisoned());
+        lock_unpoisoned(&m.encrypted_latency).record(Duration::from_micros(100));
+        assert_eq!(m.snapshot().encrypted_completed, 0);
     }
 
     #[test]

@@ -28,6 +28,9 @@ pub mod metrics;
 pub mod session;
 
 pub use crate::keycache::CacheState;
-pub use core::{Coordinator, CoordinatorConfig, EncResponse, PlainResponse, SubmitError};
+pub use core::{
+    panic_message, Coordinator, CoordinatorConfig, EncResponse, PlainResponse, ShutdownReport,
+    SubmitError,
+};
 pub use metrics::MetricsSnapshot;
 pub use session::{Session, SessionManager};

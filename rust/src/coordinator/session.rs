@@ -120,6 +120,14 @@ impl SessionManager {
         self.cache.lookup(id)
     }
 
+    /// [`SessionManager::lookup`] without LRU refresh or hit/miss
+    /// accounting — the coordinator's mid-flight residency probe (and
+    /// a test observation hook): safe to call from workers between
+    /// chunks without perturbing eviction order or the hit rate.
+    pub fn peek(&self, id: u64) -> CacheState<Session> {
+        self.cache.peek(id)
+    }
+
     /// Close a session entirely (id becomes unknown).
     pub fn remove(&self, id: u64) -> bool {
         self.cache.remove(id)

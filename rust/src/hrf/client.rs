@@ -66,7 +66,7 @@ pub fn reshuffle_and_pack_group(model: &HrfModel, xs: &[Vec<f64>]) -> Vec<f64> {
 /// generation ceremony: hand [`HrfClient::eval_keys`] to the serving
 /// layer's `SessionManager::register_keys` / `reregister_keys` — the
 /// client half of the [`keycache`](crate::keycache) protocol.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct EvalKeys {
     pub relin: RelinKey,
     pub galois: GaloisKeys,

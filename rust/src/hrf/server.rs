@@ -62,6 +62,7 @@ use crate::ckks::evaluator::{Evaluator, OpCounts};
 use crate::ckks::keys::{GaloisKeys, RelinKey};
 use crate::ckks::rns::CkksContext;
 use crate::ckks::{Ciphertext, Encoder, Plaintext};
+use crate::lockutil::lock_unpoisoned;
 use crate::runtime::engine::{CkksBackend, Engine, EngineRun, PassPipeline};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -315,11 +316,11 @@ impl HrfServer {
         scale: f64,
     ) -> Plaintext {
         let key = (id, level, scale.to_bits());
-        if let Some(pt) = self.pt_cache.lock().unwrap().get(&key) {
+        if let Some(pt) = lock_unpoisoned(&self.pt_cache).get(&key) {
             return pt.clone();
         }
         let pt = enc.encode(ctx, slots, level, scale);
-        self.pt_cache.lock().unwrap().insert(key, pt.clone());
+        lock_unpoisoned(&self.pt_cache).insert(key, pt.clone());
         pt
     }
 
@@ -351,7 +352,7 @@ impl HrfServer {
     pub fn schedule(&self, b: usize, fold: bool) -> Arc<HrfSchedule> {
         let b = b.clamp(1, self.model.plan.groups);
         let fold = fold || b == 1;
-        let mut cache = self.schedules.lock().unwrap();
+        let mut cache = lock_unpoisoned(&self.schedules);
         cache
             .entry((b, fold))
             .or_insert_with(|| {

@@ -1,7 +1,9 @@
 //! The sharded cache proper: shard routing, the global memory budget,
 //! and the eviction loop.
 //!
-//! Locking discipline: at most one shard lock is ever held at a time.
+//! Locking discipline: at most one shard lock is ever held at a time,
+//! acquired poison-recovering ([`crate::lockutil`]) so a panicking
+//! holder cannot brick the cache for every later request.
 //! The eviction loop scans shards one-by-one for the globally-oldest
 //! entry, releases, then re-locks the chosen shard to evict — a benign
 //! race (the victim may have been touched or removed in between; the
@@ -10,6 +12,7 @@
 use super::shard::Shard;
 use super::stats::KeyCacheStats;
 use super::KeyCacheConfig;
+use crate::lockutil::lock_unpoisoned;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -72,7 +75,7 @@ impl<V> KeyCache<V> {
         // bytes are charged, so the gauge can never be under-charged
         // and `fetch_sub` on eviction can never wrap.
         {
-            let mut sh = self.shard(id).lock().unwrap();
+            let mut sh = lock_unpoisoned(self.shard(id));
             let replaced = sh.insert(id, Arc::new(value), bytes, tick);
             if let Some(old) = replaced {
                 self.stats
@@ -103,14 +106,14 @@ impl<V> KeyCache<V> {
     /// the hit rate stays one count per request.
     pub fn get_untracked(&self, id: u64) -> Option<Arc<V>> {
         let tick = self.tick();
-        self.shard(id).lock().unwrap().get(id, tick)
+        lock_unpoisoned(self.shard(id)).get(id, tick)
     }
 
     /// Full protocol state for `id`. Resident hits refresh LRU and
     /// count as cache hits; known-but-evicted ids count as misses.
     pub fn lookup(&self, id: u64) -> CacheState<V> {
         let tick = self.tick();
-        let mut sh = self.shard(id).lock().unwrap();
+        let mut sh = lock_unpoisoned(self.shard(id));
         if let Some(v) = sh.get(id, tick) {
             drop(sh);
             self.stats.hits.fetch_add(1, Ordering::Relaxed);
@@ -127,7 +130,7 @@ impl<V> KeyCache<V> {
     /// State for `id` without touching LRU order or hit/miss counters
     /// (introspection: tests, metrics probes).
     pub fn peek(&self, id: u64) -> CacheState<V> {
-        let sh = self.shard(id).lock().unwrap();
+        let sh = lock_unpoisoned(self.shard(id));
         if let Some(v) = sh.peek(id) {
             CacheState::Resident(v)
         } else if sh.is_known(id) {
@@ -140,12 +143,12 @@ impl<V> KeyCache<V> {
     /// Whether the id was ever registered and not removed (resident or
     /// evicted) — the re-registration gate.
     pub fn is_known(&self, id: u64) -> bool {
-        self.shard(id).lock().unwrap().is_known(id)
+        lock_unpoisoned(self.shard(id)).is_known(id)
     }
 
     /// Forget `id` entirely; returns whether it was known.
     pub fn remove(&self, id: u64) -> bool {
-        let mut sh = self.shard(id).lock().unwrap();
+        let mut sh = lock_unpoisoned(self.shard(id));
         let (freed, known) = sh.remove(id);
         if let Some(b) = freed {
             self.stats
@@ -159,7 +162,7 @@ impl<V> KeyCache<V> {
     pub fn resident_len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().resident_len())
+            .map(|s| lock_unpoisoned(s).resident_len())
             .sum()
     }
 
@@ -167,7 +170,7 @@ impl<V> KeyCache<V> {
     pub fn known_len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().known_len())
+            .map(|s| lock_unpoisoned(s).known_len())
             .sum()
     }
 
@@ -196,7 +199,7 @@ impl<V> KeyCache<V> {
             // minima compare directly. One lock at a time.
             let mut best: Option<(usize, u64)> = None;
             for (i, m) in self.shards.iter().enumerate() {
-                let oldest = m.lock().unwrap().oldest_tick_excluding(keep);
+                let oldest = lock_unpoisoned(m).oldest_tick_excluding(keep);
                 if let Some(t) = oldest {
                     let better = match best {
                         None => true,
@@ -213,7 +216,7 @@ impl<V> KeyCache<V> {
                 // the documented over-budget exception.
                 None => return,
             };
-            let mut sh = self.shards[i].lock().unwrap();
+            let mut sh = lock_unpoisoned(&self.shards[i]);
             match sh.evict_oldest_excluding(keep) {
                 Some((_, bytes)) => {
                     // Subtract under the shard lock (see `insert`).

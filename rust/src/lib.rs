@@ -24,6 +24,10 @@
 //! * [`coordinator`] — the L3 serving layer: router, dynamic batcher,
 //!   bounded queues with backpressure, per-client key sessions and
 //!   worker pool.
+//! * [`net`] — the networked serving tier on top of the coordinator:
+//!   a length-prefixed, versioned binary wire protocol over TCP,
+//!   the thread-per-connection server behind `cryptotree-serve`, and
+//!   the blocking client used by `cryptotree-loadgen` and tests.
 //! * [`keycache`] — the sharded, memory-budgeted evaluation-key cache
 //!   behind those sessions: exact `key_bytes` accounting, per-shard
 //!   LRU eviction under a global budget, and the eviction-safe
@@ -54,6 +58,8 @@ pub mod data;
 pub mod forest;
 pub mod hrf;
 pub mod keycache;
+pub mod lockutil;
+pub mod net;
 pub mod nrf;
 pub mod rng;
 pub mod runtime;

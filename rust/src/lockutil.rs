@@ -1,0 +1,74 @@
+//! Poison-recovering lock acquisition.
+//!
+//! The serving tier holds long-lived [`std::sync::Mutex`]es (metrics
+//! histograms, key-cache shards, plaintext caches) that are shared
+//! between request handlers and HE worker threads. With the standard
+//! `lock().unwrap()` idiom, a single panicking worker poisons the mutex
+//! and every *subsequent* request on unrelated sessions panics too —
+//! fatal for a long-lived TCP server.
+//!
+//! None of those locks guard multi-step invariants that a mid-update
+//! panic could corrupt in a dangerous way: histograms and LRU maps are
+//! at worst missing one sample or one refresh. Recovering the guard
+//! from [`PoisonError`] is therefore strictly better than propagating
+//! the panic, and the worker panic itself is still surfaced through
+//! `Coordinator::shutdown`'s [`ShutdownReport`].
+//!
+//! [`ShutdownReport`]: crate::coordinator::ShutdownReport
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Acquire a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a read lock, recovering the guard if a writer panicked.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a write lock, recovering the guard if a previous holder
+/// panicked.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_poison() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // `lock().unwrap()` would panic here; the helper recovers.
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_poison() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read_unpoisoned(&l).len(), 3);
+        write_unpoisoned(&l).push(4);
+        assert_eq!(read_unpoisoned(&l).len(), 4);
+    }
+}

@@ -1,0 +1,84 @@
+//! `--flag value` parser shared by `cryptotree-serve` and
+//! `cryptotree-loadgen` (same shape as the main CLI's, plus bare
+//! boolean flags like `--spawn-server`).
+
+use std::collections::HashMap;
+
+/// Parsed command line: `--key value` pairs and bare `--switch`es.
+pub struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse everything after the program name / subcommand. A
+    /// `--key` followed by a non-flag token takes it as its value;
+    /// a `--key` followed by another flag (or nothing) is a boolean
+    /// switch.
+    pub fn parse(rest: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                let has_value = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
+                if has_value {
+                    flags.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    /// Typed flag with a default (unparsable values fall back too).
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// String flag with a default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Was the switch present at all?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn pairs_switches_and_defaults() {
+        let a = Args::parse(&argv(&[
+            "--processes",
+            "4",
+            "--spawn-server",
+            "--addr",
+            "127.0.0.1:7001",
+        ]));
+        assert_eq!(a.get("processes", 1usize), 4);
+        assert!(a.has("spawn-server"));
+        assert!(!a.has("shutdown-server"));
+        assert_eq!(a.get_str("addr", "x"), "127.0.0.1:7001");
+        assert_eq!(a.get("missing", 7u32), 7);
+        // A switch parsed as a typed flag falls back to the default.
+        assert_eq!(a.get("spawn-server", 3usize), 3);
+    }
+}

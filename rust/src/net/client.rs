@@ -1,0 +1,216 @@
+//! Blocking wire client for the serving tier.
+//!
+//! One request/response pair at a time over a single connection —
+//! exactly what the load-generator worker and the wire tests need.
+//! The interesting bit is [`NetClient::submit_encrypted_recovering`]:
+//! the client-side half of the eviction-recovery protocol, looping
+//! `KeysEvicted` → `Reregister` → resubmit just like the in-process
+//! callers do.
+
+use super::codec::{
+    decode_response, encode_request, CodecError, ModelInfo, Request, Response, WireError,
+};
+use super::frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
+use crate::ckks::rns::ContextRef;
+use crate::ckks::Ciphertext;
+use crate::coordinator::SubmitError;
+use crate::hrf::client::EvalKeys;
+use crate::hrf::EncScores;
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport-level failure (I/O, framing, protocol version).
+    Frame(FrameError),
+    /// The response payload did not decode.
+    Codec(CodecError),
+    /// The server refused the submission (typed; `KeysEvicted` is
+    /// recoverable via [`NetClient::reregister`]).
+    Submit(SubmitError),
+    /// Server-side failure outside the submit protocol.
+    Server(String),
+    /// The server could not parse our request.
+    Protocol(String),
+    /// The server answered with a different variant than the request
+    /// calls for (names the expected one).
+    UnexpectedResponse(&'static str),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Frame(e) => write!(f, "{e}"),
+            NetError::Codec(e) => write!(f, "response decode failed: {e}"),
+            NetError::Submit(e) => write!(f, "submit refused: {e}"),
+            NetError::Server(s) => write!(f, "server error: {s}"),
+            NetError::Protocol(s) => write!(f, "protocol error: {s}"),
+            NetError::UnexpectedResponse(want) => {
+                write!(f, "unexpected response variant (expected {want})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<FrameError> for NetError {
+    fn from(e: FrameError) -> Self {
+        NetError::Frame(e)
+    }
+}
+
+impl From<CodecError> for NetError {
+    fn from(e: CodecError) -> Self {
+        NetError::Codec(e)
+    }
+}
+
+/// Max `KeysEvicted` → re-register → resubmit attempts before giving
+/// up (a tiny cache can evict the keys again between the re-register
+/// and the worker picking the request up).
+const MAX_RECOVERIES: u32 = 8;
+
+/// Blocking client: one in-flight request per connection.
+pub struct NetClient {
+    stream: TcpStream,
+    ctx: ContextRef,
+    max_frame: usize,
+}
+
+impl NetClient {
+    /// Connect with the default response-frame cap.
+    pub fn connect<A: ToSocketAddrs>(addr: A, ctx: ContextRef) -> std::io::Result<NetClient> {
+        Self::connect_with(addr, ctx, DEFAULT_MAX_FRAME)
+    }
+
+    /// Connect with an explicit response-frame cap (bytes).
+    pub fn connect_with<A: ToSocketAddrs>(
+        addr: A,
+        ctx: ContextRef,
+        max_frame: usize,
+    ) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient {
+            stream,
+            ctx,
+            max_frame,
+        })
+    }
+
+    /// Send one request and decode the server's reply, mapping wire
+    /// errors to [`NetError`].
+    pub fn call(&mut self, req: &Request) -> Result<Response, NetError> {
+        write_frame(&mut self.stream, &encode_request(req)).map_err(FrameError::Io)?;
+        let payload = read_frame(&mut self.stream, self.max_frame)?;
+        match decode_response(&payload, &self.ctx)? {
+            Response::Error(WireError::Submit(e)) => Err(NetError::Submit(e)),
+            Response::Error(WireError::Server(s)) => Err(NetError::Server(s)),
+            Response::Error(WireError::Protocol(s)) => Err(NetError::Protocol(s)),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Fetch model facts (parameter preset, feature count, required
+    /// rotation steps).
+    pub fn model_info(&mut self) -> Result<ModelInfo, NetError> {
+        match self.call(&Request::ModelInfo)? {
+            Response::ModelInfo(info) => Ok(info),
+            _ => Err(NetError::UnexpectedResponse("ModelInfo")),
+        }
+    }
+
+    /// Upload evaluation keys; returns the new session id.
+    pub fn register_keys(&mut self, keys: &EvalKeys) -> Result<u64, NetError> {
+        match self.call(&Request::RegisterKeys { keys: keys.clone() })? {
+            Response::Registered { session_id } => Ok(session_id),
+            _ => Err(NetError::UnexpectedResponse("Registered")),
+        }
+    }
+
+    /// Re-upload keys for an evicted session id; `Ok(false)` means
+    /// the id is unknown (register afresh instead).
+    pub fn reregister(&mut self, session_id: u64, keys: &EvalKeys) -> Result<bool, NetError> {
+        match self.call(&Request::Reregister {
+            session_id,
+            keys: keys.clone(),
+        })? {
+            Response::Reregistered { ok } => Ok(ok),
+            _ => Err(NetError::UnexpectedResponse("Reregistered")),
+        }
+    }
+
+    /// Score one encrypted observation.
+    pub fn submit_encrypted(
+        &mut self,
+        session_id: u64,
+        ct: &Ciphertext,
+    ) -> Result<EncScores, NetError> {
+        match self.call(&Request::SubmitEncrypted {
+            session_id,
+            ct: ct.clone(),
+        })? {
+            Response::EncScores(s) => Ok(s),
+            _ => Err(NetError::UnexpectedResponse("EncScores")),
+        }
+    }
+
+    /// Score a client-packed group of `n_samples` observations.
+    pub fn submit_encrypted_packed(
+        &mut self,
+        session_id: u64,
+        ct: &Ciphertext,
+        n_samples: usize,
+    ) -> Result<EncScores, NetError> {
+        match self.call(&Request::SubmitEncryptedPacked {
+            session_id,
+            ct: ct.clone(),
+            n_samples: n_samples as u32,
+        })? {
+            Response::EncScores(s) => Ok(s),
+            _ => Err(NetError::UnexpectedResponse("EncScores")),
+        }
+    }
+
+    /// Score one encrypted observation, transparently recovering from
+    /// key eviction: on `KeysEvicted`, re-register `keys` under the
+    /// same session id and resubmit. Returns the scores and how many
+    /// recoveries were needed (0 on the happy path).
+    pub fn submit_encrypted_recovering(
+        &mut self,
+        session_id: u64,
+        ct: &Ciphertext,
+        keys: &EvalKeys,
+    ) -> Result<(EncScores, u32), NetError> {
+        let mut recoveries = 0;
+        loop {
+            match self.submit_encrypted(session_id, ct) {
+                Ok(scores) => return Ok((scores, recoveries)),
+                Err(NetError::Submit(SubmitError::KeysEvicted)) if recoveries < MAX_RECOVERIES => {
+                    if !self.reregister(session_id, keys)? {
+                        return Err(NetError::Submit(SubmitError::NoSession));
+                    }
+                    recoveries += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Plaintext fast path (`x` must have the model's feature count).
+    pub fn submit_plain(&mut self, x: Vec<f64>) -> Result<Vec<f64>, NetError> {
+        match self.call(&Request::SubmitPlain { x })? {
+            Response::PlainScores(s) => Ok(s),
+            _ => Err(NetError::UnexpectedResponse("PlainScores")),
+        }
+    }
+
+    /// Ask the server process to shut down cleanly.
+    pub fn shutdown_server(&mut self) -> Result<(), NetError> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            _ => Err(NetError::UnexpectedResponse("ShuttingDown")),
+        }
+    }
+}

@@ -1,0 +1,648 @@
+//! Binary codec for the wire protocol's request/response enums.
+//!
+//! Hand-rolled little-endian encoding (the crate is dependency-free;
+//! no serde). Decoding is *defensive*: every length is bounds-checked
+//! before allocation, every tag must be known, and — crucially for an
+//! HE server — every polynomial residue is validated against the
+//! server's own modulus chain, so a malicious client cannot inject
+//! out-of-range limbs into the NTT kernels. Galois *elements* are
+//! never trusted from the wire: they are recomputed from the rotation
+//! steps (`5^r mod 2N`) on decode.
+//!
+//! Layout conventions: integers little-endian; `f64` as `to_bits`
+//! LE; `Vec`/`String` as a `u32` count followed by the elements;
+//! enums as a `u8` tag followed by the variant fields.
+
+use crate::ckks::keys::{GaloisKeys, KswKey, RelinKey};
+use crate::ckks::modops::galois_element;
+use crate::ckks::rns::{CkksContext, RnsPoly};
+use crate::ckks::Ciphertext;
+use crate::coordinator::SubmitError;
+use crate::hrf::client::EvalKeys;
+use crate::hrf::EncScores;
+use std::collections::HashMap;
+
+/// Why a payload failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// Payload ended before a field's bytes (`need` more than `have`).
+    Truncated { need: usize, have: usize },
+    /// Unknown enum tag.
+    BadTag { context: &'static str, tag: u8 },
+    /// A field failed validation (range, count cap, modulus check…).
+    BadValue(&'static str),
+    /// Bytes left over after the message was fully decoded.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have } => {
+                write!(f, "payload truncated: need {need} bytes, have {have}")
+            }
+            CodecError::BadTag { context, tag } => write!(f, "unknown {context} tag {tag}"),
+            CodecError::BadValue(what) => write!(f, "invalid field: {what}"),
+            CodecError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------- caps
+
+/// Cap on decoded string bytes (error messages, parameter names).
+const MAX_STR: usize = 4096;
+/// Cap on plaintext feature vectors.
+const MAX_PLAIN_FEATURES: usize = 65_536;
+/// Cap on Galois key entries per session.
+const MAX_GALOIS_KEYS: usize = 4096;
+/// Cap on key-switching decomposition pairs (≥ modulus chain length).
+const MAX_KSW_PAIRS: usize = 64;
+/// Cap on per-class score ciphertexts in one response.
+const MAX_SCORES: usize = 256;
+/// Cap on advertised rotation steps.
+const MAX_ROTATIONS: usize = 4096;
+
+// ------------------------------------------------------------- writing
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+// ------------------------------------------------------------- reading
+
+/// Bounds-checked little-endian cursor over a decoded payload.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let have = self.buf.len() - self.pos;
+        if n > have {
+            return Err(CodecError::Truncated { need: n, have });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn get_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn get_u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn get_f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    fn get_bool(&mut self, what: &'static str) -> Result<bool, CodecError> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CodecError::BadValue(what)),
+        }
+    }
+
+    fn get_str(&mut self) -> Result<String, CodecError> {
+        let len = self.get_u32()? as usize;
+        if len > MAX_STR {
+            return Err(CodecError::BadValue("string too long"));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::BadValue("non-UTF-8 string"))
+    }
+
+    /// Error if any bytes remain (messages must consume their payload
+    /// exactly — trailing garbage suggests a codec mismatch).
+    fn finish(&self) -> Result<(), CodecError> {
+        let rest = self.buf.len() - self.pos;
+        if rest == 0 {
+            Ok(())
+        } else {
+            Err(CodecError::TrailingBytes(rest))
+        }
+    }
+}
+
+// ----------------------------------------------------- crypto payloads
+
+fn put_poly(buf: &mut Vec<u8>, p: &RnsPoly) {
+    put_u8(buf, p.level as u8);
+    put_u8(buf, p.special as u8);
+    put_u8(buf, p.is_ntt as u8);
+    for &x in p.data() {
+        put_u64(buf, x);
+    }
+}
+
+/// Decode one polynomial, validating shape *and* every residue
+/// against the context's modulus chain (special prime for the last
+/// limb when flagged).
+fn get_poly(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<RnsPoly, CodecError> {
+    let level = r.get_u8()? as usize;
+    if level >= ctx.params.moduli.len() {
+        return Err(CodecError::BadValue("poly level exceeds modulus chain"));
+    }
+    let special = r.get_bool("poly special flag")?;
+    let is_ntt = r.get_bool("poly ntt flag")?;
+    let n = ctx.n();
+    let n_limbs = RnsPoly::n_limbs(level, special);
+    let mut data = vec![0u64; n_limbs * n];
+    for li in 0..n_limbs {
+        let q = if special && li == n_limbs - 1 {
+            ctx.params.special
+        } else {
+            ctx.params.moduli[li]
+        };
+        for slot in data[li * n..(li + 1) * n].iter_mut() {
+            let v = r.get_u64()?;
+            if v >= q {
+                return Err(CodecError::BadValue("poly residue out of modulus range"));
+            }
+            *slot = v;
+        }
+    }
+    Ok(RnsPoly::from_raw_parts(ctx, level, special, is_ntt, data))
+}
+
+fn put_ciphertext(buf: &mut Vec<u8>, ct: &Ciphertext) {
+    put_u8(buf, ct.level as u8);
+    put_f64(buf, ct.scale);
+    put_poly(buf, &ct.c0);
+    put_poly(buf, &ct.c1);
+}
+
+fn get_ciphertext(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<Ciphertext, CodecError> {
+    let level = r.get_u8()? as usize;
+    if level >= ctx.params.moduli.len() {
+        return Err(CodecError::BadValue("ciphertext level exceeds modulus chain"));
+    }
+    let scale = r.get_f64()?;
+    if !scale.is_finite() || scale <= 0.0 {
+        return Err(CodecError::BadValue("ciphertext scale not finite positive"));
+    }
+    let c0 = get_poly(r, ctx)?;
+    let c1 = get_poly(r, ctx)?;
+    for p in [&c0, &c1] {
+        if p.level != level || p.special || !p.is_ntt {
+            return Err(CodecError::BadValue(
+                "ciphertext polys must be NTT, no special limb, at the ciphertext level",
+            ));
+        }
+    }
+    Ok(Ciphertext {
+        c0,
+        c1,
+        level,
+        scale,
+    })
+}
+
+fn put_ksw(buf: &mut Vec<u8>, k: &KswKey) {
+    put_u32(buf, k.b.len() as u32);
+    for p in &k.b {
+        put_poly(buf, p);
+    }
+    for p in &k.a {
+        put_poly(buf, p);
+    }
+}
+
+fn get_ksw(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<KswKey, CodecError> {
+    let pairs = r.get_u32()? as usize;
+    if pairs == 0 || pairs > MAX_KSW_PAIRS {
+        return Err(CodecError::BadValue("key-switch pair count out of range"));
+    }
+    let max_level = ctx.params.max_level();
+    let mut read_side = |r: &mut ByteReader<'_>| -> Result<Vec<RnsPoly>, CodecError> {
+        (0..pairs)
+            .map(|_| {
+                let p = get_poly(r, ctx)?;
+                // Key polys live in the full basis: max level, special
+                // limb appended, NTT form.
+                if p.level != max_level || !p.special || !p.is_ntt {
+                    return Err(CodecError::BadValue(
+                        "key poly must be NTT at max level with special limb",
+                    ));
+                }
+                Ok(p)
+            })
+            .collect()
+    };
+    let b = read_side(r)?;
+    let a = read_side(r)?;
+    Ok(KswKey { b, a })
+}
+
+fn put_galois(buf: &mut Vec<u8>, gk: &GaloisKeys) {
+    // Deterministic order (sorted steps) so equal key sets encode
+    // byte-identically.
+    let mut steps: Vec<usize> = gk.keys.keys().copied().collect();
+    steps.sort_unstable();
+    put_u32(buf, steps.len() as u32);
+    for step in steps {
+        put_u32(buf, step as u32);
+        put_ksw(buf, &gk.keys[&step]);
+    }
+}
+
+fn get_galois(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<GaloisKeys, CodecError> {
+    let count = r.get_u32()? as usize;
+    if count > MAX_GALOIS_KEYS {
+        return Err(CodecError::BadValue("too many Galois keys"));
+    }
+    let slots = ctx.n() / 2;
+    let two_n = 2 * ctx.n();
+    let mut keys = HashMap::with_capacity(count);
+    let mut elements = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let step = r.get_u32()? as usize;
+        if step == 0 || step >= slots {
+            return Err(CodecError::BadValue("rotation step out of range"));
+        }
+        let ksw = get_ksw(r, ctx)?;
+        if keys.insert(step, ksw).is_some() {
+            return Err(CodecError::BadValue("duplicate rotation step"));
+        }
+        // Never trust wire elements: recompute 5^step mod 2N.
+        elements.insert(step, galois_element(step, two_n));
+    }
+    Ok(GaloisKeys { keys, elements })
+}
+
+fn put_eval_keys(buf: &mut Vec<u8>, keys: &EvalKeys) {
+    put_ksw(buf, &keys.relin.0);
+    put_galois(buf, &keys.galois);
+}
+
+fn get_eval_keys(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<EvalKeys, CodecError> {
+    let relin = RelinKey(get_ksw(r, ctx)?);
+    let galois = get_galois(r, ctx)?;
+    Ok(EvalKeys { relin, galois })
+}
+
+fn put_enc_scores(buf: &mut Vec<u8>, s: &EncScores) {
+    put_u32(buf, s.scores.len() as u32);
+    for ct in &s.scores {
+        put_ciphertext(buf, ct);
+    }
+    put_u32(buf, s.slot as u32);
+}
+
+fn get_enc_scores(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<EncScores, CodecError> {
+    let count = r.get_u32()? as usize;
+    if count == 0 || count > MAX_SCORES {
+        return Err(CodecError::BadValue("score ciphertext count out of range"));
+    }
+    let scores = (0..count)
+        .map(|_| get_ciphertext(r, ctx))
+        .collect::<Result<Vec<_>, _>>()?;
+    let slot = r.get_u32()? as usize;
+    if slot >= ctx.n() / 2 {
+        return Err(CodecError::BadValue("score slot out of range"));
+    }
+    Ok(EncScores { scores, slot })
+}
+
+// ------------------------------------------------------------ messages
+
+/// Model facts a client needs before it can build requests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfo {
+    /// CKKS parameter preset name (client must use matching params).
+    pub params_name: String,
+    /// Ring degree N.
+    pub n: u32,
+    /// Input features the model expects (`plan.d`).
+    pub features: u32,
+    /// Sample groups per ciphertext (max packed batch).
+    pub groups: u32,
+    /// Output classes.
+    pub classes: u32,
+    /// Rotation steps a session's Galois keys must cover for the
+    /// server's configured batching target
+    /// (`HrfServer::eval_key_requirements`).
+    pub rotations: Vec<u32>,
+}
+
+/// Client → server messages.
+#[derive(Debug)]
+pub enum Request {
+    /// Describe the served model (no session needed).
+    ModelInfo,
+    /// Upload evaluation keys; the response carries the session id.
+    RegisterKeys { keys: EvalKeys },
+    /// Re-upload keys for an existing id after `KeysEvicted`.
+    Reregister { session_id: u64, keys: EvalKeys },
+    /// One encrypted observation (`HrfClient::encrypt_input` layout).
+    SubmitEncrypted { session_id: u64, ct: Ciphertext },
+    /// Client-side packed group (`HrfClient::encrypt_batch` layout).
+    SubmitEncryptedPacked {
+        session_id: u64,
+        ct: Ciphertext,
+        n_samples: u32,
+    },
+    /// Plaintext fast path (features, not slots).
+    SubmitPlain { x: Vec<f64> },
+    /// Ask the server to stop accepting and shut down cleanly.
+    Shutdown,
+}
+
+/// Errors a server reports over the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Typed coordinator refusal (`Busy`, `KeysEvicted`, …) — the
+    /// recovery protocol is the same as in-process.
+    Submit(SubmitError),
+    /// Server-side failure outside the submit protocol.
+    Server(String),
+    /// The server could not decode the request.
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Submit(e) => write!(f, "submit refused: {e}"),
+            WireError::Server(s) => write!(f, "server error: {s}"),
+            WireError::Protocol(s) => write!(f, "protocol error: {s}"),
+        }
+    }
+}
+
+/// Server → client messages.
+#[derive(Debug)]
+pub enum Response {
+    ModelInfo(ModelInfo),
+    Registered { session_id: u64 },
+    /// `ok = false`: the id was never registered (or was removed).
+    Reregistered { ok: bool },
+    /// Encrypted scores (`EncScores`: per-class ciphertexts + slot).
+    EncScores(EncScores),
+    /// Plaintext-path scores.
+    PlainScores(Vec<f64>),
+    Error(WireError),
+    /// Acknowledges a `Shutdown` request; the server stops accepting.
+    ShuttingDown,
+}
+
+fn put_submit_error(buf: &mut Vec<u8>, e: SubmitError) {
+    let tag = match e {
+        SubmitError::Busy => 0u8,
+        SubmitError::Closed => 1,
+        SubmitError::NoSession => 2,
+        SubmitError::KeysEvicted => 3,
+        SubmitError::BatchTooLarge => 4,
+    };
+    put_u8(buf, tag);
+}
+
+fn get_submit_error(r: &mut ByteReader<'_>) -> Result<SubmitError, CodecError> {
+    match r.get_u8()? {
+        0 => Ok(SubmitError::Busy),
+        1 => Ok(SubmitError::Closed),
+        2 => Ok(SubmitError::NoSession),
+        3 => Ok(SubmitError::KeysEvicted),
+        4 => Ok(SubmitError::BatchTooLarge),
+        tag => Err(CodecError::BadTag {
+            context: "submit error",
+            tag,
+        }),
+    }
+}
+
+/// Encode a request into a frame payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match req {
+        Request::ModelInfo => put_u8(&mut buf, 1),
+        Request::RegisterKeys { keys } => {
+            put_u8(&mut buf, 2);
+            put_eval_keys(&mut buf, keys);
+        }
+        Request::Reregister { session_id, keys } => {
+            put_u8(&mut buf, 3);
+            put_u64(&mut buf, *session_id);
+            put_eval_keys(&mut buf, keys);
+        }
+        Request::SubmitEncrypted { session_id, ct } => {
+            put_u8(&mut buf, 4);
+            put_u64(&mut buf, *session_id);
+            put_ciphertext(&mut buf, ct);
+        }
+        Request::SubmitEncryptedPacked {
+            session_id,
+            ct,
+            n_samples,
+        } => {
+            put_u8(&mut buf, 5);
+            put_u64(&mut buf, *session_id);
+            put_u32(&mut buf, *n_samples);
+            put_ciphertext(&mut buf, ct);
+        }
+        Request::SubmitPlain { x } => {
+            put_u8(&mut buf, 6);
+            put_u32(&mut buf, x.len() as u32);
+            for &v in x {
+                put_f64(&mut buf, v);
+            }
+        }
+        Request::Shutdown => put_u8(&mut buf, 7),
+    }
+    buf
+}
+
+/// Decode a request frame payload against the server's context.
+pub fn decode_request(payload: &[u8], ctx: &CkksContext) -> Result<Request, CodecError> {
+    let mut r = ByteReader::new(payload);
+    let req = match r.get_u8()? {
+        1 => Request::ModelInfo,
+        2 => Request::RegisterKeys {
+            keys: get_eval_keys(&mut r, ctx)?,
+        },
+        3 => Request::Reregister {
+            session_id: r.get_u64()?,
+            keys: get_eval_keys(&mut r, ctx)?,
+        },
+        4 => Request::SubmitEncrypted {
+            session_id: r.get_u64()?,
+            ct: get_ciphertext(&mut r, ctx)?,
+        },
+        5 => {
+            let session_id = r.get_u64()?;
+            let n_samples = r.get_u32()?;
+            let ct = get_ciphertext(&mut r, ctx)?;
+            Request::SubmitEncryptedPacked {
+                session_id,
+                ct,
+                n_samples,
+            }
+        }
+        6 => {
+            let len = r.get_u32()? as usize;
+            if len > MAX_PLAIN_FEATURES {
+                return Err(CodecError::BadValue("feature vector too long"));
+            }
+            let x = (0..len)
+                .map(|_| r.get_f64())
+                .collect::<Result<Vec<_>, _>>()?;
+            Request::SubmitPlain { x }
+        }
+        7 => Request::Shutdown,
+        tag => return Err(CodecError::BadTag { context: "request", tag }),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+/// Encode a response into a frame payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match resp {
+        Response::ModelInfo(info) => {
+            put_u8(&mut buf, 1);
+            put_str(&mut buf, &info.params_name);
+            put_u32(&mut buf, info.n);
+            put_u32(&mut buf, info.features);
+            put_u32(&mut buf, info.groups);
+            put_u32(&mut buf, info.classes);
+            put_u32(&mut buf, info.rotations.len() as u32);
+            for &rot in &info.rotations {
+                put_u32(&mut buf, rot);
+            }
+        }
+        Response::Registered { session_id } => {
+            put_u8(&mut buf, 2);
+            put_u64(&mut buf, *session_id);
+        }
+        Response::Reregistered { ok } => {
+            put_u8(&mut buf, 3);
+            put_u8(&mut buf, *ok as u8);
+        }
+        Response::EncScores(s) => {
+            put_u8(&mut buf, 4);
+            put_enc_scores(&mut buf, s);
+        }
+        Response::PlainScores(scores) => {
+            put_u8(&mut buf, 5);
+            put_u32(&mut buf, scores.len() as u32);
+            for &v in scores {
+                put_f64(&mut buf, v);
+            }
+        }
+        Response::Error(e) => {
+            put_u8(&mut buf, 6);
+            match e {
+                WireError::Submit(se) => {
+                    put_u8(&mut buf, 0);
+                    put_submit_error(&mut buf, *se);
+                }
+                WireError::Server(s) => {
+                    put_u8(&mut buf, 1);
+                    put_str(&mut buf, s);
+                }
+                WireError::Protocol(s) => {
+                    put_u8(&mut buf, 2);
+                    put_str(&mut buf, s);
+                }
+            }
+        }
+        Response::ShuttingDown => put_u8(&mut buf, 7),
+    }
+    buf
+}
+
+/// Decode a response frame payload against the client's context.
+pub fn decode_response(payload: &[u8], ctx: &CkksContext) -> Result<Response, CodecError> {
+    let mut r = ByteReader::new(payload);
+    let resp = match r.get_u8()? {
+        1 => {
+            let params_name = r.get_str()?;
+            let n = r.get_u32()?;
+            let features = r.get_u32()?;
+            let groups = r.get_u32()?;
+            let classes = r.get_u32()?;
+            let count = r.get_u32()? as usize;
+            if count > MAX_ROTATIONS {
+                return Err(CodecError::BadValue("too many advertised rotations"));
+            }
+            let rotations = (0..count)
+                .map(|_| r.get_u32())
+                .collect::<Result<Vec<_>, _>>()?;
+            Response::ModelInfo(ModelInfo {
+                params_name,
+                n,
+                features,
+                groups,
+                classes,
+                rotations,
+            })
+        }
+        2 => Response::Registered {
+            session_id: r.get_u64()?,
+        },
+        3 => Response::Reregistered {
+            ok: r.get_bool("reregistered flag")?,
+        },
+        4 => Response::EncScores(get_enc_scores(&mut r, ctx)?),
+        5 => {
+            let len = r.get_u32()? as usize;
+            if len > MAX_SCORES {
+                return Err(CodecError::BadValue("score vector too long"));
+            }
+            let scores = (0..len)
+                .map(|_| r.get_f64())
+                .collect::<Result<Vec<_>, _>>()?;
+            Response::PlainScores(scores)
+        }
+        6 => {
+            let e = match r.get_u8()? {
+                0 => WireError::Submit(get_submit_error(&mut r)?),
+                1 => WireError::Server(r.get_str()?),
+                2 => WireError::Protocol(r.get_str()?),
+                tag => return Err(CodecError::BadTag { context: "wire error", tag }),
+            };
+            Response::Error(e)
+        }
+        7 => Response::ShuttingDown,
+        tag => return Err(CodecError::BadTag { context: "response", tag }),
+    };
+    r.finish()?;
+    Ok(resp)
+}

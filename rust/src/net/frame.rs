@@ -1,0 +1,225 @@
+//! Length-prefixed, versioned framing over a byte stream.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"HRFW"
+//! 4       1     protocol version (= PROTOCOL_VERSION)
+//! 5       4     payload length, u32 little-endian
+//! 9       len   payload (codec-encoded Request / Response)
+//! ```
+//!
+//! The reader enforces an explicit payload-size cap *before*
+//! allocating — a lying length prefix cannot make the server allocate
+//! unbounded memory — and distinguishes a clean peer close (EOF at a
+//! frame boundary) from a truncated frame (EOF inside one).
+
+use std::io::{self, ErrorKind, Read, Write};
+
+/// Frame magic: identifies the HRF wire protocol.
+pub const MAGIC: [u8; 4] = *b"HRFW";
+
+/// Wire protocol version; bumped on any incompatible codec change.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Header bytes preceding every payload (magic + version + length).
+pub const HEADER_LEN: usize = 9;
+
+/// Default payload cap (bytes). Generous because evaluation-key
+/// uploads dominate: one key-switching key is
+/// `(max_level+1) · 2 · (max_level+2) · N · 8` bytes (~2 MiB at
+/// N=4096 / depth 4) and a Galois set holds one per rotation step.
+/// Configurable per endpoint for bigger rings.
+pub const DEFAULT_MAX_FRAME: usize = 256 * 1024 * 1024;
+
+/// Why a frame could not be read (or written).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying I/O failure (including timeouts).
+    Io(io::Error),
+    /// Clean EOF at a frame boundary: the peer closed the connection.
+    Closed,
+    /// EOF in the middle of a frame (header or payload cut short).
+    Truncated,
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version byte differs from [`PROTOCOL_VERSION`].
+    BadVersion(u8),
+    /// Declared payload length exceeds the configured cap.
+    TooLarge { len: usize, max: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+            FrameError::Closed => f.write_str("peer closed the connection"),
+            FrameError::Truncated => f.write_str("connection closed mid-frame"),
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "protocol version {v} (expected {PROTOCOL_VERSION})")
+            }
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds cap {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// `read_exact` that reports a mid-frame EOF as [`FrameError::Truncated`].
+fn read_exact_frame<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), FrameError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    })
+}
+
+/// Write one frame (header + payload). The payload must fit a u32
+/// length prefix; the *reader's* cap is the operative protocol limit.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > u32::MAX as usize {
+        return Err(io::Error::new(
+            ErrorKind::InvalidInput,
+            "frame payload exceeds u32 length prefix",
+        ));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = PROTOCOL_VERSION;
+    header[5..9].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload, enforcing `max_len` before allocating.
+///
+/// A zero-byte read at the very start maps to [`FrameError::Closed`];
+/// any later EOF is [`FrameError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R, max_len: usize) -> Result<Vec<u8>, FrameError> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(FrameError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    read_frame_resume(r, first[0], max_len)
+}
+
+/// Finish reading a frame whose first header byte was already
+/// consumed — the server's poll loop reads one byte with a timeout
+/// (to notice shutdown), then switches the stream to blocking and
+/// hands the byte here, so a slow client can never desynchronize the
+/// stream by timing out mid-frame.
+pub fn read_frame_resume<R: Read>(
+    r: &mut R,
+    first: u8,
+    max_len: usize,
+) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = first;
+    read_exact_frame(r, &mut header[1..])?;
+    if header[..4] != MAGIC {
+        return Err(FrameError::BadMagic([
+            header[0], header[1], header[2], header[3],
+        ]));
+    }
+    if header[4] != PROTOCOL_VERSION {
+        return Err(FrameError::BadVersion(header[4]));
+    }
+    let len = u32::from_le_bytes([header[5], header[6], header[7], header[8]]) as usize;
+    if len > max_len {
+        return Err(FrameError::TooLarge { len, max: max_len });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_frame(r, &mut payload)?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        assert_eq!(buf.len(), HEADER_LEN + 5);
+        let got = read_frame(&mut Cursor::new(&buf), 64).unwrap();
+        assert_eq!(got, b"hello");
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"").unwrap();
+        let got = read_frame(&mut Cursor::new(&buf), 0).unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn eof_at_boundary_is_closed_and_mid_frame_is_truncated() {
+        let empty: &[u8] = &[];
+        assert!(matches!(
+            read_frame(&mut Cursor::new(empty), 64),
+            Err(FrameError::Closed)
+        ));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        for cut in 1..buf.len() {
+            let r = read_frame(&mut Cursor::new(&buf[..cut]), 64);
+            assert!(
+                matches!(r, Err(FrameError::Truncated)),
+                "cut at {cut}: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hey").unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bad), 64),
+            Err(FrameError::BadMagic(_))
+        ));
+        let mut bad = buf.clone();
+        bad[4] = PROTOCOL_VERSION + 1;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bad), 64),
+            Err(FrameError::BadVersion(_))
+        ));
+        // A lying length prefix is rejected before any allocation.
+        let mut bad = buf;
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bad), 64),
+            Err(FrameError::TooLarge { .. })
+        ));
+    }
+}

@@ -1,0 +1,49 @@
+//! Networked serving tier: the HRF coordinator behind a TCP socket.
+//!
+//! The in-process [`crate::coordinator::Coordinator`] already
+//! implements batching, sessions and backpressure; this module puts a
+//! wire on it so separate *processes* (and machines) can register
+//! evaluation keys and submit encrypted observations:
+//!
+//! * [`frame`] — length-prefixed, versioned framing (`b"HRFW"` magic,
+//!   `u32` payload length, explicit size cap enforced before any
+//!   allocation).
+//! * [`codec`] — hand-rolled little-endian encoding of the
+//!   [`codec::Request`]/[`codec::Response`] enums, validating every
+//!   polynomial residue against the server's modulus chain on decode.
+//! * [`server`] — thread-per-connection [`server::NetServer`] behind
+//!   the `cryptotree-serve` binary: non-blocking acceptor with a
+//!   connection cap (overload is *refused* with
+//!   [`crate::coordinator::SubmitError::Busy`], not queued), clean
+//!   shutdown that joins every handler and surfaces worker panics.
+//! * [`client`] — blocking [`client::NetClient`] used by the
+//!   `cryptotree-loadgen` harness and the wire tests, including the
+//!   `KeysEvicted` → re-register → resubmit recovery loop.
+//! * [`workload`] — the deterministic demo model both binaries build
+//!   from the same flags, so client-side encryption matches the
+//!   served model without shipping model files around.
+//! * [`args`] — the tiny `--flag value` parser shared by the two
+//!   binaries.
+//!
+//! One request/response pair per frame; a connection carries any
+//! number of frames sequentially. Sessions are identified by the id
+//! the server returns at key registration, not by the connection —
+//! reconnecting (or a different process) can keep using a session id,
+//! which is exactly what the eviction-recovery protocol needs.
+
+pub mod args;
+pub mod client;
+pub mod codec;
+pub mod frame;
+pub mod server;
+pub mod workload;
+
+pub use client::{NetClient, NetError};
+pub use codec::{
+    decode_request, decode_response, encode_request, encode_response, CodecError, ModelInfo,
+    Request, Response, WireError,
+};
+pub use frame::{
+    read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME, HEADER_LEN, MAGIC, PROTOCOL_VERSION,
+};
+pub use server::{NetServer, NetServerConfig};

@@ -1,0 +1,391 @@
+//! Thread-per-connection TCP front-end for the coordinator.
+//!
+//! The acceptor runs non-blocking so it can poll the stop flag;
+//! handler threads poll the stream's *first* byte with a short read
+//! timeout (to notice shutdown between frames) and then read the rest
+//! of the frame blocking, so a slow sender can never desynchronize a
+//! connection by timing out mid-frame.
+//!
+//! Backpressure happens at two layers: the coordinator's bounded
+//! ingress queue refuses with [`SubmitError::Busy`] (forwarded over
+//! the wire), and the acceptor itself enforces a connection cap —
+//! above it, a new connection gets a single `Busy` error frame and is
+//! closed, counted in `net_rejected_overload`.
+
+use super::codec::{decode_request, encode_response, ModelInfo, Request, Response, WireError};
+use super::frame::{read_frame_resume, write_frame, FrameError, DEFAULT_MAX_FRAME};
+use crate::ckks::rns::ContextRef;
+use crate::coordinator::{panic_message, Coordinator, ShutdownReport, SubmitError};
+use crate::hrf::HrfServer;
+use crate::lockutil::lock_unpoisoned;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Acceptor and connection-handling knobs.
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Listen address, e.g. `127.0.0.1:0` for an ephemeral port.
+    pub addr: String,
+    /// Connections above this are refused with a `Busy` error frame.
+    pub max_connections: usize,
+    /// Per-frame payload cap (bytes) for incoming requests.
+    pub max_frame: usize,
+    /// Between-frame poll timeout: how quickly an idle connection
+    /// notices server shutdown.
+    pub read_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 64,
+            max_frame: DEFAULT_MAX_FRAME,
+            read_timeout: Duration::from_millis(200),
+        }
+    }
+}
+
+/// State shared by the acceptor and every connection handler.
+struct Shared {
+    coord: Arc<Coordinator>,
+    server: Arc<HrfServer>,
+    ctx: ContextRef,
+    /// Set by [`NetServer::shutdown`] (and `Drop`): stop accepting,
+    /// drain handlers.
+    stop: AtomicBool,
+    /// Set when a client sends [`Request::Shutdown`]; observed by
+    /// [`NetServer::run_until_shutdown`].
+    shutdown_requested: AtomicBool,
+    /// Live connection handlers; the acceptor reaps finished ones.
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    /// Monotonic id for handler thread names.
+    next_conn: AtomicU64,
+    max_frame: usize,
+    read_timeout: Duration,
+    /// Batching target the served rotation-step advertisement
+    /// (`ModelInfo::rotations`) must cover.
+    enc_batch: usize,
+}
+
+/// A running TCP serving tier. Dropping it without calling
+/// [`NetServer::shutdown`] stops the acceptor but does not join
+/// handlers or shut the coordinator down cleanly.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind, spawn the acceptor, and start serving `coord`.
+    ///
+    /// `enc_batch` should match the coordinator's configured
+    /// encrypted batch target: it determines which rotation steps
+    /// `ModelInfo` tells clients to generate Galois keys for.
+    pub fn start(
+        cfg: NetServerConfig,
+        ctx: ContextRef,
+        server: Arc<HrfServer>,
+        coord: Coordinator,
+        enc_batch: usize,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            coord: Arc::new(coord),
+            server,
+            ctx,
+            stop: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            handlers: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+            max_frame: cfg.max_frame,
+            read_timeout: cfg.read_timeout,
+            enc_batch,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let max_connections = cfg.max_connections;
+        let accept = thread::Builder::new()
+            .name("net-accept".to_string())
+            .spawn(move || accept_loop(accept_shared, listener, max_connections))
+            .expect("spawn acceptor");
+        Ok(NetServer {
+            shared,
+            accept: Some(accept),
+            addr,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Has a client requested shutdown via [`Request::Shutdown`]?
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown_requested.load(Ordering::Relaxed)
+    }
+
+    /// The coordinator's metrics registry — usable after shutdown
+    /// consumes the server (grab a clone first).
+    pub fn metrics(&self) -> Arc<crate::coordinator::metrics::Metrics> {
+        Arc::clone(&self.shared.coord.metrics)
+    }
+
+    /// Serve until a client sends [`Request::Shutdown`], then shut
+    /// down cleanly and return the merged report.
+    pub fn run_until_shutdown(self) -> ShutdownReport {
+        while !self.shutdown_requested() {
+            thread::sleep(Duration::from_millis(50));
+        }
+        self.shutdown()
+    }
+
+    /// Stop accepting, join every connection handler, then shut the
+    /// coordinator down. Network-handler panics are merged into the
+    /// coordinator's [`ShutdownReport`] so the serving binary can
+    /// exit non-zero on *any* worker panic, HE or network.
+    pub fn shutdown(mut self) -> ShutdownReport {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        let mut report = ShutdownReport::default();
+        if let Some(t) = self.accept.take() {
+            if let Err(payload) = t.join() {
+                report
+                    .worker_panics
+                    .push(("net-accept".to_string(), panic_message(payload.as_ref())));
+            }
+        }
+        let handlers = std::mem::take(&mut *lock_unpoisoned(&self.shared.handlers));
+        for t in handlers {
+            let name = t.thread().name().unwrap_or("<unnamed>").to_string();
+            if let Err(payload) = t.join() {
+                let msg = panic_message(payload.as_ref());
+                eprintln!("[net] connection handler `{name}` panicked: {msg}");
+                report.worker_panics.push((name, msg));
+            }
+        }
+        // All threads holding `shared` have been joined, so both
+        // unwraps succeed and we get the coordinator back by value
+        // for its consuming shutdown.
+        match Arc::try_unwrap(self.shared) {
+            Ok(shared) => match Arc::try_unwrap(shared.coord) {
+                Ok(coord) => {
+                    let coord_report = coord.shutdown();
+                    report.worker_panics.extend(coord_report.worker_panics);
+                }
+                Err(_) => eprintln!("[net] coordinator still referenced; skipping its shutdown"),
+            },
+            Err(shared) => {
+                shared.stop.store(true, Ordering::Relaxed);
+                eprintln!("[net] shared state still referenced; skipping coordinator shutdown");
+            }
+        }
+        report
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener, max_connections: usize) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let metrics = &shared.coord.metrics;
+                metrics.net_connections_accepted.fetch_add(1, Ordering::Relaxed);
+                let open = {
+                    let mut handlers = lock_unpoisoned(&shared.handlers);
+                    handlers.retain(|t| !t.is_finished());
+                    handlers.len()
+                };
+                if open >= max_connections {
+                    metrics.net_rejected_overload.fetch_add(1, Ordering::Relaxed);
+                    refuse_overload(stream);
+                    continue;
+                }
+                let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                let conn_shared = Arc::clone(&shared);
+                let handle = thread::Builder::new()
+                    .name(format!("net-conn-{id}"))
+                    .spawn(move || handle_connection(conn_shared, stream))
+                    .expect("spawn connection handler");
+                lock_unpoisoned(&shared.handlers).push(handle);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("[net] accept error: {e}");
+                thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Tell an over-cap connection it is refused, then close it. Mirrors
+/// the coordinator's queue-full behaviour: shed load explicitly
+/// rather than queue unboundedly.
+fn refuse_overload(mut stream: TcpStream) {
+    let resp = Response::Error(WireError::Submit(SubmitError::Busy));
+    let _ = write_frame(&mut stream, &encode_response(&resp));
+}
+
+fn handle_connection(shared: Arc<Shared>, mut stream: TcpStream) {
+    let metrics = Arc::clone(&shared.coord.metrics);
+    metrics.net_connections_open.fetch_add(1, Ordering::Relaxed);
+    serve_connection(&shared, &mut stream);
+    metrics.net_connections_open.fetch_sub(1, Ordering::Relaxed);
+}
+
+fn serve_connection(shared: &Shared, stream: &mut TcpStream) {
+    if stream.set_read_timeout(Some(shared.read_timeout)).is_err() {
+        return;
+    }
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        // Poll the first header byte with the short timeout so an
+        // idle connection notices `stop` promptly...
+        let mut first = [0u8; 1];
+        let n = match std::io::Read::read(stream, &mut first) {
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        };
+        if n == 0 {
+            return; // clean close between frames
+        }
+        // ...then read the remainder blocking: a frame in flight is
+        // never cut by the poll timeout.
+        if stream.set_read_timeout(None).is_err() {
+            return;
+        }
+        let payload = match read_frame_resume(stream, first[0], shared.max_frame) {
+            Ok(p) => p,
+            Err(err) => {
+                // The stream is no longer at a frame boundary (or the
+                // peer is speaking another protocol): report and drop
+                // the connection.
+                let resp = Response::Error(WireError::Protocol(err.to_string()));
+                let _ = write_frame(stream, &encode_response(&resp));
+                if !matches!(err, FrameError::Closed) {
+                    eprintln!("[net] dropping connection: {err}");
+                }
+                return;
+            }
+        };
+        let resp = match decode_request(&payload, &shared.ctx) {
+            // Frame boundary is intact after a codec error, so the
+            // connection survives a malformed request.
+            Err(err) => Response::Error(WireError::Protocol(err.to_string())),
+            Ok(req) => serve_request(shared, req),
+        };
+        if write_frame(stream, &encode_response(&resp)).is_err() {
+            return;
+        }
+        if stream.set_read_timeout(Some(shared.read_timeout)).is_err() {
+            return;
+        }
+    }
+}
+
+fn serve_request(shared: &Shared, req: Request) -> Response {
+    let coord = &shared.coord;
+    match req {
+        Request::ModelInfo => Response::ModelInfo(model_info(shared)),
+        Request::RegisterKeys { keys } => Response::Registered {
+            session_id: coord.sessions.register_keys(&keys),
+        },
+        Request::Reregister { session_id, keys } => Response::Reregistered {
+            ok: coord.sessions.reregister_keys(session_id, &keys),
+        },
+        Request::SubmitEncrypted { session_id, ct } => {
+            match coord.submit_encrypted(session_id, ct) {
+                Err(e) => Response::Error(WireError::Submit(e)),
+                Ok(rx) => match rx.recv() {
+                    Ok(Ok(scores)) => Response::EncScores(scores),
+                    Ok(Err(e)) => Response::Error(WireError::Submit(e)),
+                    Err(_) => Response::Error(WireError::Server(
+                        "response channel dropped".to_string(),
+                    )),
+                },
+            }
+        }
+        Request::SubmitEncryptedPacked {
+            session_id,
+            ct,
+            n_samples,
+        } => match coord.submit_encrypted_packed(session_id, ct, n_samples as usize) {
+            Err(e) => Response::Error(WireError::Submit(e)),
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(scores)) => Response::EncScores(scores),
+                Ok(Err(e)) => Response::Error(WireError::Submit(e)),
+                Err(_) => {
+                    Response::Error(WireError::Server("response channel dropped".to_string()))
+                }
+            },
+        },
+        Request::SubmitPlain { x } => {
+            // Validate the feature count *here*: the batcher's
+            // reshuffle would otherwise panic on a short vector, and
+            // a remote client must not be able to panic a worker.
+            let d = shared.server.model.plan.d;
+            if x.len() != d {
+                return Response::Error(WireError::Protocol(format!(
+                    "expected {d} features, got {}",
+                    x.len()
+                )));
+            }
+            match coord.submit_plain(x) {
+                Err(e) => Response::Error(WireError::Submit(e)),
+                Ok(rx) => match rx.recv() {
+                    Ok(Ok(scores)) => Response::PlainScores(scores),
+                    Ok(Err(msg)) => Response::Error(WireError::Server(msg)),
+                    Err(_) => Response::Error(WireError::Server(
+                        "response channel dropped".to_string(),
+                    )),
+                },
+            }
+        }
+        Request::Shutdown => {
+            shared.shutdown_requested.store(true, Ordering::Relaxed);
+            Response::ShuttingDown
+        }
+    }
+}
+
+fn model_info(shared: &Shared) -> ModelInfo {
+    let plan = &shared.server.model.plan;
+    let mut rotations: Vec<u32> = shared
+        .server
+        .eval_key_requirements(shared.enc_batch)
+        .into_iter()
+        .map(|s| s as u32)
+        .collect();
+    rotations.sort_unstable();
+    ModelInfo {
+        params_name: shared.ctx.params.name.to_string(),
+        n: shared.ctx.n() as u32,
+        features: plan.d as u32,
+        groups: plan.groups as u32,
+        classes: plan.c as u32,
+        rotations,
+    }
+}

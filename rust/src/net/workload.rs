@@ -1,0 +1,140 @@
+//! Deterministic demo model shared by `cryptotree-serve` and
+//! `cryptotree-loadgen`.
+//!
+//! The wire protocol ships ciphertexts and keys, not models — the
+//! client must encrypt against the *same* packing plan the server
+//! evaluates. Both binaries therefore rebuild the model from the same
+//! flags (`--params/--trees/--depth/--rows/--seed`): every stage is
+//! seeded, so equal flags give bit-identical models in different
+//! processes. (A client can sanity-check the match via
+//! [`crate::net::codec::ModelInfo`]: parameter preset name, ring
+//! degree, feature count.)
+
+use crate::ckks::params::ParamsRef;
+use crate::ckks::rns::{CkksContext, ContextRef};
+use crate::ckks::CkksParams;
+use crate::data::{adult, Dataset};
+use crate::forest::tree::TreeConfig;
+use crate::forest::{RandomForest, RandomForestConfig};
+use crate::hrf::{HrfModel, HrfServer};
+use crate::net::args::Args;
+use crate::nrf::activation::Activation;
+use crate::nrf::NeuralForest;
+use std::sync::Arc;
+
+/// Everything the flags determine, parsed once.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    /// Parameter preset: `demo` (default, depth-4 N=4096), `toy`,
+    /// `fast`, `secure`, or anything else for the paper's default.
+    pub params: String,
+    /// Forest size.
+    pub trees: usize,
+    /// Tree depth cap.
+    pub depth: usize,
+    /// Synthetic Adult-Income rows to generate.
+    pub rows: usize,
+    /// Master seed (data, forest fit, keygen offsets derive from it).
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Read the shared model flags (both binaries accept the same
+    /// set, so a serve line can be turned into a loadgen line by
+    /// swapping the binary name).
+    pub fn from_args(args: &Args) -> Self {
+        WorkloadSpec {
+            params: args.get_str("params", "demo"),
+            trees: args.get("trees", 4usize),
+            depth: args.get("depth", 2usize),
+            rows: args.get("rows", 200usize),
+            seed: args.get("seed", 615u64),
+        }
+    }
+}
+
+/// A built serving workload: CKKS context, HRF server, and the
+/// dataset the load generator draws observations from.
+pub struct Workload {
+    pub params: ParamsRef,
+    pub ctx: ContextRef,
+    pub server: Arc<HrfServer>,
+    pub data: Dataset,
+}
+
+/// Resolve a `--params` flag value to a parameter preset.
+pub fn params_by_name(name: &str) -> ParamsRef {
+    match name {
+        // Serving demo: shallow chain keeps keygen and per-request
+        // HE work small enough for CI smoke runs.
+        "demo" => Arc::new(CkksParams::build("serve-n4096-d4", 4096, 60, 40, 4, 3.2)),
+        "toy" => CkksParams::toy(),
+        "fast" => CkksParams::fast(),
+        "secure" => CkksParams::secure128(),
+        _ => CkksParams::hrf_default(),
+    }
+}
+
+/// Build the workload for a spec. Deterministic: same spec → same
+/// model, in any process.
+pub fn build(spec: &WorkloadSpec) -> Workload {
+    let params = params_by_name(&spec.params);
+    let ctx = CkksContext::new(params.clone());
+    let data = adult::generate(spec.rows, spec.seed);
+    let rf = RandomForest::fit(
+        &data,
+        &RandomForestConfig {
+            n_trees: spec.trees,
+            tree: TreeConfig {
+                max_depth: spec.depth,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        spec.seed + 1,
+    );
+    // Identity activation: serving-tier work is dominated by the wire
+    // and the HE linear algebra; a deeper activation only raises the
+    // level budget without exercising more of the protocol.
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: vec![0.0, 1.0],
+        },
+    );
+    let model = HrfModel::from_neural_forest(&nf, data.n_features(), params.slots())
+        .expect("workload model must fit the slot budget");
+    Workload {
+        params,
+        ctx,
+        server: Arc::new(HrfServer::new(model)),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_spec_same_model() {
+        let spec = WorkloadSpec {
+            params: "demo".to_string(),
+            trees: 2,
+            depth: 2,
+            rows: 64,
+            seed: 7,
+        };
+        let a = build(&spec);
+        let b = build(&spec);
+        assert_eq!(a.params.name, b.params.name);
+        assert_eq!(a.server.model.plan, b.server.model.plan);
+        assert_eq!(a.data.x, b.data.x);
+        // The packed operands themselves must agree, not just shapes:
+        // clients encrypt against their local copy of the plan.
+        assert_eq!(
+            a.server.eval_key_requirements(2),
+            b.server.eval_key_requirements(2)
+        );
+    }
+}

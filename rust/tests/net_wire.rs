@@ -1,0 +1,450 @@
+//! End-to-end tests for the networked serving tier: codec
+//! round-trips, defensive decoding, and real-socket sessions
+//! including the eviction → re-register recovery protocol over the
+//! wire.
+
+use cryptotree::ckks::{Ciphertext, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
+use cryptotree::hrf::client::{reshuffle_and_pack, EvalKeys, HrfClient};
+use cryptotree::hrf::EncScores;
+use cryptotree::keycache::KeyCacheConfig;
+use cryptotree::net::client::{NetClient, NetError};
+use cryptotree::net::codec::{
+    decode_request, decode_response, encode_request, encode_response, CodecError, ModelInfo,
+    Request, Response, WireError,
+};
+use cryptotree::net::server::{NetServer, NetServerConfig};
+use cryptotree::net::workload::{self, WorkloadSpec};
+use std::sync::Arc;
+
+fn small_spec() -> WorkloadSpec {
+    WorkloadSpec {
+        params: "demo".to_string(),
+        trees: 2,
+        depth: 2,
+        rows: 64,
+        seed: 7,
+    }
+}
+
+fn assert_polys_eq(a: &Ciphertext, b: &Ciphertext) {
+    assert_eq!(a.level, b.level);
+    assert_eq!(a.scale.to_bits(), b.scale.to_bits());
+    assert_eq!(a.c0.data(), b.c0.data());
+    assert_eq!(a.c1.data(), b.c1.data());
+}
+
+/// Every request and response variant survives encode → decode with
+/// bit-identical crypto payloads.
+#[test]
+fn codec_roundtrips_every_variant() {
+    let wl = workload::build(&small_spec());
+    let ctx = &wl.ctx;
+    let enc = Encoder::new(ctx);
+    let mut kg = KeyGenerator::new(ctx, 11);
+    let pk = kg.gen_public_key(ctx);
+    let keys = EvalKeys {
+        relin: kg.gen_relin_key(ctx),
+        galois: kg.gen_galois_keys(ctx, &wl.server.eval_key_requirements(2)),
+    };
+    let mut encryptor = Encryptor::new(pk, 12);
+    let slots = reshuffle_and_pack(&wl.server.model, &wl.data.x[0]);
+    let ct = encryptor.encrypt_slots(ctx, &enc, &slots);
+
+    // RegisterKeys: relin + every Galois key round-trips, and the
+    // decoder recomputes (not trusts) the Galois elements.
+    let req = decode_request(
+        &encode_request(&Request::RegisterKeys { keys: keys.clone() }),
+        ctx,
+    )
+    .unwrap();
+    match req {
+        Request::RegisterKeys { keys: got } => {
+            assert_eq!(got.relin.0.b.len(), keys.relin.0.b.len());
+            assert_eq!(got.galois.keys.len(), keys.galois.keys.len());
+            assert_eq!(got.galois.elements, keys.galois.elements);
+            for (step, k) in &keys.galois.keys {
+                let g = &got.galois.keys[step];
+                for (x, y) in k.b.iter().zip(&g.b) {
+                    assert_eq!(x.data(), y.data());
+                }
+            }
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+
+    let req = decode_request(
+        &encode_request(&Request::SubmitEncrypted {
+            session_id: 42,
+            ct: ct.clone(),
+        }),
+        ctx,
+    )
+    .unwrap();
+    match req {
+        Request::SubmitEncrypted { session_id, ct: got } => {
+            assert_eq!(session_id, 42);
+            assert_polys_eq(&got, &ct);
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+
+    let req = decode_request(
+        &encode_request(&Request::SubmitEncryptedPacked {
+            session_id: 7,
+            ct: ct.clone(),
+            n_samples: 3,
+        }),
+        ctx,
+    )
+    .unwrap();
+    assert!(matches!(
+        req,
+        Request::SubmitEncryptedPacked {
+            session_id: 7,
+            n_samples: 3,
+            ..
+        }
+    ));
+
+    let x = vec![0.25, -1.5, 3.0];
+    match decode_request(&encode_request(&Request::SubmitPlain { x: x.clone() }), ctx).unwrap() {
+        Request::SubmitPlain { x: got } => assert_eq!(got, x),
+        other => panic!("wrong variant: {other:?}"),
+    }
+    assert!(matches!(
+        decode_request(&encode_request(&Request::ModelInfo), ctx).unwrap(),
+        Request::ModelInfo
+    ));
+    assert!(matches!(
+        decode_request(
+            &encode_request(&Request::Reregister {
+                session_id: 9,
+                keys: keys.clone()
+            }),
+            ctx
+        )
+        .unwrap(),
+        Request::Reregister { session_id: 9, .. }
+    ));
+    assert!(matches!(
+        decode_request(&encode_request(&Request::Shutdown), ctx).unwrap(),
+        Request::Shutdown
+    ));
+
+    // Responses.
+    let info = ModelInfo {
+        params_name: "serve-n4096-d4".to_string(),
+        n: 4096,
+        features: 14,
+        groups: 8,
+        classes: 2,
+        rotations: vec![1, 2, 64],
+    };
+    match decode_response(&encode_response(&Response::ModelInfo(info.clone())), ctx).unwrap() {
+        Response::ModelInfo(got) => assert_eq!(got, info),
+        other => panic!("wrong variant: {other:?}"),
+    }
+    let scores = EncScores {
+        scores: vec![ct.clone(), ct.clone()],
+        slot: 5,
+    };
+    match decode_response(&encode_response(&Response::EncScores(scores)), ctx).unwrap() {
+        Response::EncScores(got) => {
+            assert_eq!(got.slot, 5);
+            assert_eq!(got.scores.len(), 2);
+            assert_polys_eq(&got.scores[0], &ct);
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+    assert!(matches!(
+        decode_response(
+            &encode_response(&Response::Registered { session_id: 3 }),
+            ctx
+        )
+        .unwrap(),
+        Response::Registered { session_id: 3 }
+    ));
+    assert!(matches!(
+        decode_response(&encode_response(&Response::Reregistered { ok: true }), ctx).unwrap(),
+        Response::Reregistered { ok: true }
+    ));
+    match decode_response(
+        &encode_response(&Response::PlainScores(vec![0.5, -0.25])),
+        ctx,
+    )
+    .unwrap()
+    {
+        Response::PlainScores(got) => assert_eq!(got, vec![0.5, -0.25]),
+        other => panic!("wrong variant: {other:?}"),
+    }
+    for submit in [
+        SubmitError::Busy,
+        SubmitError::Closed,
+        SubmitError::NoSession,
+        SubmitError::KeysEvicted,
+        SubmitError::BatchTooLarge,
+    ] {
+        match decode_response(
+            &encode_response(&Response::Error(WireError::Submit(submit))),
+            ctx,
+        )
+        .unwrap()
+        {
+            Response::Error(WireError::Submit(got)) => assert_eq!(got, submit),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+    for e in [
+        WireError::Server("boom".to_string()),
+        WireError::Protocol("bad".to_string()),
+    ] {
+        match decode_response(&encode_response(&Response::Error(e.clone())), ctx).unwrap() {
+            Response::Error(got) => assert_eq!(got, e),
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+    assert!(matches!(
+        decode_response(&encode_response(&Response::ShuttingDown), ctx).unwrap(),
+        Response::ShuttingDown
+    ));
+}
+
+/// Defensive decoding: truncation, trailing bytes, unknown tags, and
+/// out-of-range polynomial residues are all rejected — a malicious
+/// client cannot feed invalid limbs into the NTT kernels.
+#[test]
+fn codec_rejects_malformed_payloads() {
+    let wl = workload::build(&small_spec());
+    let ctx = &wl.ctx;
+    let enc = Encoder::new(ctx);
+    let mut kg = KeyGenerator::new(ctx, 21);
+    let pk = kg.gen_public_key(ctx);
+    let mut encryptor = Encryptor::new(pk, 22);
+    let slots = reshuffle_and_pack(&wl.server.model, &wl.data.x[1]);
+    let ct = encryptor.encrypt_slots(ctx, &enc, &slots);
+    let good = encode_request(&Request::SubmitEncrypted { session_id: 1, ct });
+
+    // Unknown request tag.
+    assert!(matches!(
+        decode_request(&[99u8], ctx),
+        Err(CodecError::BadTag {
+            context: "request",
+            tag: 99
+        })
+    ));
+    // Truncation at every prefix of the header region fails loudly.
+    for cut in [1usize, 5, 12, 20, good.len() - 1] {
+        assert!(
+            decode_request(&good[..cut], ctx).is_err(),
+            "cut at {cut} must not decode"
+        );
+    }
+    // Trailing garbage after a complete message.
+    let mut long = good.clone();
+    long.push(0);
+    assert!(matches!(
+        decode_request(&long, ctx),
+        Err(CodecError::TrailingBytes(1))
+    ));
+    // An out-of-range residue (~2^64 >= every modulus): the first c0
+    // limb word lives after tag(1) + session(8) + level(1) + scale(8)
+    // + poly header(3).
+    let mut bad = good.clone();
+    for b in bad.iter_mut().skip(21).take(8) {
+        *b = 0xFF;
+    }
+    assert!(matches!(
+        decode_request(&bad, ctx),
+        Err(CodecError::BadValue("poly residue out of modulus range"))
+    ));
+    // A lying ciphertext level fails the chain check.
+    let mut bad = good;
+    bad[9] = 200;
+    assert!(decode_request(&bad, ctx).is_err());
+}
+
+fn start_net_server(
+    wl: &workload::Workload,
+    sessions: Arc<SessionManager>,
+    enc_batch: usize,
+) -> NetServer {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            enc_batch,
+            ..Default::default()
+        },
+        wl.ctx.clone(),
+        wl.server.clone(),
+        sessions,
+        None,
+    );
+    NetServer::start(
+        NetServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            ..Default::default()
+        },
+        wl.ctx.clone(),
+        wl.server.clone(),
+        coord,
+        enc_batch,
+    )
+    .expect("bind ephemeral port")
+}
+
+/// Full session over a real socket: model info → key registration →
+/// encrypted submission → decrypted scores agreeing with the
+/// plaintext slot model, plus the plaintext wire path.
+#[test]
+fn wire_session_register_submit_score() {
+    let wl = workload::build(&small_spec());
+    let net = start_net_server(&wl, Arc::new(SessionManager::new()), 1);
+    let enc = Encoder::new(&wl.ctx);
+
+    let mut client = NetClient::connect(net.local_addr(), wl.ctx.clone()).expect("connect");
+    let info = client.model_info().expect("model info");
+    assert_eq!(info.params_name, wl.params.name);
+    assert_eq!(info.n as usize, wl.ctx.n());
+    assert_eq!(info.features as usize, wl.server.model.plan.d);
+    assert!(!info.rotations.is_empty());
+
+    let rotations: Vec<usize> = info.rotations.iter().map(|&r| r as usize).collect();
+    let mut kg = KeyGenerator::new(&wl.ctx, 31);
+    let pk = kg.gen_public_key(&wl.ctx);
+    let mut hrf_client = HrfClient::with_eval_keys(
+        Encryptor::new(pk, 32),
+        Decryptor::new(kg.secret_key()),
+        kg.gen_relin_key(&wl.ctx),
+        kg.gen_galois_keys(&wl.ctx, &rotations),
+    );
+    let keys = hrf_client.eval_keys().unwrap().clone();
+    let sid = client.register_keys(&keys).expect("register");
+
+    let x = &wl.data.x[3];
+    let ct = hrf_client.encrypt_input(&wl.ctx, &enc, &wl.server.model, x);
+    let outs = client.submit_encrypted(sid, &ct).expect("submit");
+    let (scores, _) = hrf_client.decrypt_response(&wl.ctx, &enc, &outs);
+    let expect = wl
+        .server
+        .model
+        .forward_slots_plain(&reshuffle_and_pack(&wl.server.model, x));
+    assert_eq!(scores.len(), expect.len());
+    for (s, e) in scores.iter().zip(&expect) {
+        assert!((s - e).abs() < 5e-3, "HE-over-wire vs plain: {scores:?} vs {expect:?}");
+    }
+
+    // Plaintext wire path agrees with the same slot model.
+    let plain = client.submit_plain(x.clone()).expect("plain submit");
+    for (s, e) in plain.iter().zip(&expect) {
+        assert!((s - e).abs() < 5e-3, "plain-over-wire diverged: {plain:?} vs {expect:?}");
+    }
+    // A wrong-length vector is refused at the protocol layer — it
+    // must not panic a worker.
+    match client.submit_plain(vec![1.0, 2.0]) {
+        Err(NetError::Protocol(_)) => {}
+        other => panic!("expected protocol error, got {other:?}"),
+    }
+
+    drop(client);
+    let report = net.shutdown();
+    assert!(report.is_clean(), "unclean shutdown: {report:?}");
+}
+
+/// The eviction-recovery protocol over the wire: a budgeted key cache
+/// evicts session A under pressure from B; A's next submit fails with
+/// `KeysEvicted` (typed, over TCP), A re-registers under the same id,
+/// and recovered scores are bit-identical. The recovering client
+/// helper then handles a second eviction transparently.
+#[test]
+fn wire_eviction_reregister_recovers_identical_scores() {
+    let wl = workload::build(&small_spec());
+    let enc = Encoder::new(&wl.ctx);
+
+    let mut kg_a = KeyGenerator::new(&wl.ctx, 41);
+    let pk_a = kg_a.gen_public_key(&wl.ctx);
+    let steps = wl.server.eval_key_requirements(1);
+    let mut hrf_client = HrfClient::with_eval_keys(
+        Encryptor::new(pk_a, 42),
+        Decryptor::new(kg_a.secret_key()),
+        kg_a.gen_relin_key(&wl.ctx),
+        kg_a.gen_galois_keys(&wl.ctx, &steps),
+    );
+    let keys_a = hrf_client.eval_keys().unwrap().clone();
+    let session_bytes = (keys_a.relin.key_bytes() + keys_a.galois.key_bytes()) as u64;
+    let mut kg_b = KeyGenerator::new(&wl.ctx, 43);
+    let _pk_b = kg_b.gen_public_key(&wl.ctx);
+    let keys_b = EvalKeys {
+        relin: kg_b.gen_relin_key(&wl.ctx),
+        galois: kg_b.gen_galois_keys(&wl.ctx, &steps),
+    };
+
+    // Budget fits one session (plus slack), not two.
+    let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+        num_shards: 1,
+        budget_bytes: session_bytes * 3 / 2,
+    }));
+    let net = start_net_server(&wl, sessions, 1);
+    let metrics = net.metrics();
+
+    let mut client = NetClient::connect(net.local_addr(), wl.ctx.clone()).expect("connect");
+    let sid_a = client.register_keys(&keys_a).expect("register A");
+    let x = &wl.data.x[5];
+    let ct = hrf_client.encrypt_input(&wl.ctx, &enc, &wl.server.model, x);
+
+    // Baseline before any eviction.
+    let outs = client.submit_encrypted(sid_a, &ct).expect("baseline submit");
+    let (scores_before, _) = hrf_client.decrypt_response(&wl.ctx, &enc, &outs);
+
+    // Pressure: B's registration evicts A (global budget, over the
+    // wire like everything else).
+    let _sid_b = client.register_keys(&keys_b).expect("register B");
+    match client.submit_encrypted(sid_a, &ct) {
+        Err(NetError::Submit(SubmitError::KeysEvicted)) => {}
+        other => panic!("expected KeysEvicted over the wire, got {other:?}"),
+    }
+
+    // Recover: same session id, same keys, bit-identical scores.
+    assert!(client.reregister(sid_a, &keys_a).expect("reregister"));
+    let outs = client.submit_encrypted(sid_a, &ct).expect("recovered submit");
+    let (scores_after, _) = hrf_client.decrypt_response(&wl.ctx, &enc, &outs);
+    assert_eq!(scores_before.len(), scores_after.len());
+    for (b, a) in scores_before.iter().zip(&scores_after) {
+        assert!(
+            (b - a).abs() < 1e-9,
+            "recovered session diverged: {scores_before:?} vs {scores_after:?}"
+        );
+    }
+
+    // Evict A again; the recovering helper hides the round-trip.
+    assert!(client.reregister(_sid_b, &keys_b).expect("reregister B"));
+    let (outs, recoveries) = client
+        .submit_encrypted_recovering(sid_a, &ct, &keys_a)
+        .expect("recovering submit");
+    assert!(recoveries >= 1, "helper should have re-registered at least once");
+    let (scores_rec, _) = hrf_client.decrypt_response(&wl.ctx, &enc, &outs);
+    for (b, a) in scores_before.iter().zip(&scores_rec) {
+        assert!((b - a).abs() < 1e-9);
+    }
+
+    // Reconnecting does not lose the session: ids outlive connections.
+    drop(client);
+    let mut client = NetClient::connect(net.local_addr(), wl.ctx.clone()).expect("reconnect");
+    let (outs, _) = client
+        .submit_encrypted_recovering(sid_a, &ct, &keys_a)
+        .expect("submit after reconnect");
+    let (scores_reconn, _) = hrf_client.decrypt_response(&wl.ctx, &enc, &outs);
+    for (b, a) in scores_before.iter().zip(&scores_reconn) {
+        assert!((b - a).abs() < 1e-9);
+    }
+
+    let snap = metrics.snapshot();
+    assert!(snap.rejected_keys_evicted >= 1);
+    assert!(snap.keycache_evictions >= 2);
+    assert!(snap.net_connections_accepted >= 2);
+
+    drop(client);
+    let report = net.shutdown();
+    assert!(report.is_clean(), "unclean shutdown: {report:?}");
+}

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Check every Rust target file is registered in Cargo.toml.
+
+The crate keeps its sources under ``rust/`` (not Cargo's default
+layout), so test/bench/bin auto-discovery is off and every target
+needs an explicit ``[[test]]``/``[[bench]]``/``[[bin]]`` entry. A file
+dropped into ``rust/tests/`` without one silently never runs in CI —
+this script turns that into a hard failure.
+
+Stdlib-only (no toml module on older runners): the parser only needs
+to find ``path = "..."`` entries inside target sections.
+
+Usage: python3 tools/check_targets.py  (from the repo root; exits 1
+listing unregistered files, or files registered but missing on disk).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CARGO = ROOT / "Cargo.toml"
+
+# Directory globbed on disk -> Cargo section that must register it.
+CHECKS = [
+    ("rust/tests", "test"),
+    ("rust/benches", "bench"),
+    ("rust/src/bin", "bin"),
+]
+
+
+def registered_paths(cargo_text: str, section: str) -> set:
+    """All `path = "..."` values under [[section]] tables."""
+    paths = set()
+    current = None
+    for line in cargo_text.splitlines():
+        stripped = line.strip()
+        header = re.fullmatch(r"\[\[(\w+)\]\]", stripped)
+        if header:
+            current = header.group(1)
+            continue
+        if stripped.startswith("["):  # any other table ends the target
+            current = None
+            continue
+        m = re.fullmatch(r'path\s*=\s*"([^"]+)"', stripped)
+        if m and current == section:
+            paths.add(m.group(1))
+    return paths
+
+
+def main() -> int:
+    cargo_text = CARGO.read_text()
+    failures = []
+    for directory, section in CHECKS:
+        on_disk = {
+            str(p.relative_to(ROOT))
+            for p in (ROOT / directory).glob("*.rs")
+        }
+        registered = registered_paths(cargo_text, section)
+        for missing in sorted(on_disk - registered):
+            failures.append(
+                f"{missing}: not registered as a [[{section}]] target in Cargo.toml"
+            )
+        for stale in sorted(registered - on_disk):
+            # Only flag entries that point into the checked directory;
+            # e.g. [[bin]] main.rs lives outside rust/src/bin.
+            if stale.startswith(directory + "/"):
+                failures.append(
+                    f"{stale}: registered as [[{section}]] but missing on disk"
+                )
+    if failures:
+        print("Cargo target registration check FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("all rust/tests, rust/benches and rust/src/bin targets registered")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
