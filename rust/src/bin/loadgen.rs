@@ -33,7 +33,7 @@
 use cryptotree::bench_harness::{fmt_dur, write_json, BenchRecord};
 use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{Encoder, Encryptor, KeyGenerator};
-use cryptotree::coordinator::SubmitError;
+use cryptotree::coordinator::{MetricsSnapshot, SubmitError};
 use cryptotree::hrf::client::{reshuffle_and_pack, EvalKeys};
 use cryptotree::net::args::Args;
 use cryptotree::net::client::{NetClient, NetError};
@@ -213,6 +213,8 @@ fn parent_main(argv: &[String]) {
             "key-budget-mb",
             "key-shards",
             "max-conns",
+            "trace",
+            "stats-interval",
         ] {
             if args.has(flag) {
                 cmd.args([format!("--{flag}"), args.get_str(flag, "")]);
@@ -299,7 +301,36 @@ fn parent_main(argv: &[String]) {
     }
     let elapsed = t0.elapsed();
 
-    report(&spec, &mode, processes, &json_path, &stats, elapsed);
+    // End-of-run server-side view: scrape the metrics snapshot over
+    // the wire so the bench JSON pairs the server's queue/service
+    // split with the client-observed latencies. Best-effort — a
+    // scrape failure degrades the report, never the run.
+    let server_snap: Option<MetricsSnapshot> = {
+        let ctx = CkksContext::new(workload::params_by_name(&spec.params));
+        match NetClient::connect(&addr, ctx) {
+            Ok(mut c) => match c.metrics_snapshot() {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("server metrics scrape failed: {e}");
+                    None
+                }
+            },
+            Err(e) => {
+                eprintln!("server metrics scrape connect failed: {e}");
+                None
+            }
+        }
+    };
+
+    report(
+        &spec,
+        &mode,
+        processes,
+        &json_path,
+        &stats,
+        elapsed,
+        server_snap.as_ref(),
+    );
 
     // Shut the server down over the wire; a spawned one must also
     // exit cleanly (it exits non-zero on any worker panic).
@@ -363,6 +394,7 @@ fn report(
     json_path: &str,
     stats: &WorkerStats,
     elapsed: Duration,
+    server: Option<&MetricsSnapshot>,
 ) {
     let mut lats = stats.lat_us.clone();
     lats.sort_unstable();
@@ -394,7 +426,7 @@ fn report(
 
     let label = &spec.params;
     let rec = |op: &str, us: f64| BenchRecord::from_ns(op, us * 1e3, processes, label);
-    let records = vec![
+    let mut records = vec![
         rec(&format!("serving/{mode}/latency_p50"), p50 as f64),
         rec(&format!("serving/{mode}/latency_p95"), p95 as f64),
         rec(&format!("serving/{mode}/latency_p99"), p99 as f64),
@@ -406,6 +438,46 @@ fn report(
             elapsed.as_micros() as f64 / stats.ok.max(1) as f64,
         ),
     ];
+    // Server-side records: scraped over the wire, same ns/op unit.
+    // Client latency includes the network and the serialized
+    // connection; the server split explains where the time went
+    // (admission queueing vs HE/slot evaluation).
+    if let Some(s) = server {
+        println!(
+            "server: {} enc / {} plain completed; enc queue mean {:?} service mean {:?}; \
+             traces {} recorded, {} dropped",
+            s.encrypted_completed,
+            s.plain_completed,
+            s.encrypted_queue_mean,
+            s.encrypted_service_mean,
+            s.traces_recorded,
+            s.traces_dropped
+        );
+        let srec = |op: &str, d: Duration| {
+            BenchRecord::from_ns(op, d.as_nanos() as f64, processes, label)
+        };
+        records.extend([
+            srec(&format!("serving/{mode}/server/enc_p50"), s.encrypted_p50),
+            srec(&format!("serving/{mode}/server/enc_p99"), s.encrypted_p99),
+            srec(
+                &format!("serving/{mode}/server/enc_queue_mean"),
+                s.encrypted_queue_mean,
+            ),
+            srec(
+                &format!("serving/{mode}/server/enc_service_mean"),
+                s.encrypted_service_mean,
+            ),
+            srec(&format!("serving/{mode}/server/plain_p50"), s.plain_p50),
+            srec(
+                &format!("serving/{mode}/server/plain_queue_mean"),
+                s.plain_queue_mean,
+            ),
+            srec(
+                &format!("serving/{mode}/server/plain_service_mean"),
+                s.plain_service_mean,
+            ),
+        ]);
+    }
     if let Err(e) = write_json(json_path, &records) {
         eprintln!("writing {json_path} failed: {e}");
     }

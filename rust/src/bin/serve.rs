@@ -23,6 +23,10 @@
 //! * `--key-budget-mb` — evaluation-key cache budget; `0` (default)
 //!   disables eviction, small values exercise the
 //!   `KeysEvicted`/re-register protocol under load.
+//! * `--trace` — span-trace ring capacity (default 256; `0` disables
+//!   tracing); dump over the wire with `Request::TraceDump`.
+//! * `--stats-interval` — seconds between `STATS {...}` one-line JSON
+//!   metrics snapshots on stdout (`0`, the default, disables them).
 
 use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
 use cryptotree::keycache::KeyCacheConfig;
@@ -31,6 +35,7 @@ use cryptotree::net::server::{NetServer, NetServerConfig};
 use cryptotree::net::workload::{self, WorkloadSpec};
 use std::io::Write;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +48,8 @@ fn main() {
     let key_budget_mb = args.get("key-budget-mb", 0u64);
     let max_conns = args.get("max-conns", 64usize);
     let max_frame_mb = args.get("max-frame-mb", 256usize);
+    let trace_capacity = args.get("trace", 256usize);
+    let stats_interval = args.get("stats-interval", 0u64);
 
     eprintln!(
         "building workload: params={} trees={} depth={} rows={} seed={}",
@@ -71,6 +78,7 @@ fn main() {
             workers,
             queue_capacity: queue,
             enc_batch,
+            trace_capacity,
             ..Default::default()
         },
         wl.ctx.clone(),
@@ -102,7 +110,22 @@ fn main() {
     std::io::stdout().flush().ok();
 
     let metrics = net.metrics();
-    let report = net.run_until_shutdown();
+    // Serve until a client requests shutdown, emitting periodic
+    // one-line JSON snapshots when --stats-interval is set (each line
+    // is independently parsable: `STATS {<MetricsSnapshot>}`).
+    let stats_every = (stats_interval > 0).then(|| Duration::from_secs(stats_interval));
+    let mut next_stats = stats_every.map(|d| Instant::now() + d);
+    while !net.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+        if let (Some(every), Some(due)) = (stats_every, next_stats) {
+            if Instant::now() >= due {
+                println!("STATS {}", metrics.snapshot().to_json_line());
+                std::io::stdout().flush().ok();
+                next_stats = Some(Instant::now() + every);
+            }
+        }
+    }
+    let report = net.shutdown();
 
     let s = metrics.snapshot();
     println!(

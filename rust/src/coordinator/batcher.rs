@@ -5,7 +5,10 @@
 //! request has waited `max_delay` — the classic latency/throughput
 //! dial. The policy logic is a pure state machine ([`BatchPolicy`])
 //! so it can be property-tested without threads; the coordinator
-//! drives it from the batcher thread.
+//! drives it from the batcher thread. Each flush the policy triggers
+//! is visible in the observability plane: the batcher stamps every
+//! flushed request's span trace (`crate::obs`) with a shared flush id
+//! and the group size.
 
 use std::time::{Duration, Instant};
 

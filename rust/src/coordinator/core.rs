@@ -54,6 +54,7 @@ use crate::hrf::client::reshuffle_and_pack;
 use crate::hrf::{EncRequest, EncScores, HrfServer};
 use crate::keycache::CacheState;
 use crate::lockutil::lock_unpoisoned;
+use crate::obs::trace::{RequestTrace, TraceKind, TracePhase, TraceSink};
 use crate::runtime::{SlotModel, SlotModelParams};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -99,6 +100,11 @@ pub struct CoordinatorConfig {
     /// current setting (its `CRYPTOTREE_CKKS_WORKERS` env default).
     /// Outputs are bit-identical for every value.
     pub ckks_workers: usize,
+    /// Span-timeline trace ring capacity (`crate::obs`): how many
+    /// completed request traces `Metrics::trace` retains. `0` disables
+    /// tracing entirely — requests carry inert traces and no per-
+    /// request allocation or ring push happens.
+    pub trace_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -112,6 +118,7 @@ impl Default for CoordinatorConfig {
             adaptive_enc_batch: true,
             idle_flush: Duration::from_millis(1),
             ckks_workers: 0,
+            trace_capacity: 256,
         }
     }
 }
@@ -166,14 +173,21 @@ pub type EncResponse = Result<EncScores, SubmitError>;
 /// Plaintext-path response: per-class scores.
 pub type PlainResponse = Result<Vec<f64>, String>;
 
-/// One held encrypted request: ciphertext, enqueue time, reply sender.
-type EncItem = (Box<Ciphertext>, Instant, SyncSender<EncResponse>);
+/// One held encrypted request: ciphertext, enqueue time, span trace,
+/// reply sender.
+pub(crate) struct EncItem {
+    pub(crate) ct: Box<Ciphertext>,
+    pub(crate) enqueued: Instant,
+    pub(crate) trace: RequestTrace,
+    pub(crate) resp: SyncSender<EncResponse>,
+}
 
 enum Request {
     Encrypted {
         session_id: u64,
         ct: Box<Ciphertext>,
         enqueued: Instant,
+        trace: RequestTrace,
         resp: SyncSender<EncResponse>,
     },
     /// Client-side packed group: evaluated as-is; scores stay at the
@@ -183,11 +197,13 @@ enum Request {
         ct: Box<Ciphertext>,
         n_samples: usize,
         enqueued: Instant,
+        trace: RequestTrace,
         resp: SyncSender<EncResponse>,
     },
     Plain {
         x: Vec<f64>,
         enqueued: Instant,
+        trace: RequestTrace,
         resp: SyncSender<PlainResponse>,
     },
 }
@@ -202,6 +218,7 @@ enum WorkerJob {
         ct: Box<Ciphertext>,
         n_samples: usize,
         enqueued: Instant,
+        trace: RequestTrace,
         resp: SyncSender<EncResponse>,
     },
 }
@@ -269,8 +286,12 @@ impl Coordinator {
         // schedules so serving never takes the perm lock's write path.
         server.prewarm(&ctx, server.model.plan.groups);
         // Metrics share the session cache's counters so one snapshot
-        // covers queueing AND key residency.
-        let metrics = Arc::new(Metrics::with_keycache(sessions.keycache_stats()));
+        // covers queueing AND key residency; the span-trace ring is
+        // sized here (capacity 0 ⇒ tracing off, inert traces).
+        let metrics = Arc::new(Metrics {
+            trace: Arc::new(TraceSink::with_capacity(cfg.trace_capacity)),
+            ..Metrics::with_keycache(sessions.keycache_stats())
+        });
         let shutdown = Arc::new(AtomicBool::new(false));
         let (ingress_tx, ingress_rx) = sync_channel::<Request>(cfg.queue_capacity);
         let mut threads = Vec::new();
@@ -314,8 +335,11 @@ impl Coordinator {
                                     ct,
                                     n_samples,
                                     enqueued,
+                                    mut trace,
                                     resp,
                                 } => {
+                                    let exec_start = Instant::now();
+                                    trace.stamp(TracePhase::Executing);
                                     let result = match sessions.get_untracked(session_id) {
                                         Some(sess) => {
                                             let ex = server.execute(
@@ -344,6 +368,12 @@ impl Coordinator {
                                         .fetch_add(n_samples as u64, Ordering::Relaxed);
                                     lock_unpoisoned(&metrics.encrypted_latency)
                                         .record(enqueued.elapsed());
+                                    lock_unpoisoned(&metrics.encrypted_queue)
+                                        .record(exec_start.duration_since(enqueued));
+                                    lock_unpoisoned(&metrics.encrypted_service)
+                                        .record(exec_start.elapsed());
+                                    trace.stamp(TracePhase::Responded);
+                                    metrics.trace.record(trace);
                                     let _ = resp.send(result);
                                 }
                             }
@@ -404,6 +434,14 @@ impl Coordinator {
                                     .enc_batch_fill_sum
                                     .fetch_add(n as u64, Ordering::Relaxed);
                             }
+                            // One flush id per dispatched group: every
+                            // trace flushed together shares it, so a
+                            // timeline dump shows exactly which requests
+                            // rode the same packed evaluation.
+                            let fid = metrics.trace.next_flush_id();
+                            for it in f.items.iter_mut() {
+                                it.trace.stamp_batched(fid, n as u32);
+                            }
                             dispatch(WorkerJob::Group {
                                 session_id: sid,
                                 items: std::mem::take(&mut f.items),
@@ -433,15 +471,27 @@ impl Coordinator {
                                     session_id,
                                     ct,
                                     enqueued,
+                                    mut trace,
                                     resp,
                                 }) => {
                                     metrics
                                         .enc_queue_depth
                                         .fetch_sub(1, Ordering::Relaxed);
                                     if enc_batch <= 1 {
+                                        // Unbatched: still a flush of one,
+                                        // so timelines stay comparable.
+                                        trace.stamp_batched(
+                                            metrics.trace.next_flush_id(),
+                                            1,
+                                        );
                                         dispatch(WorkerJob::Group {
                                             session_id,
-                                            items: vec![(ct, enqueued, resp)],
+                                            items: vec![EncItem {
+                                                ct,
+                                                enqueued,
+                                                trace,
+                                                resp,
+                                            }],
                                         });
                                     } else {
                                         let f = forming.entry(session_id).or_insert_with(
@@ -468,7 +518,12 @@ impl Coordinator {
                                                 (enc_batch + depth).min(group_cap),
                                             );
                                         }
-                                        f.items.push((ct, enqueued, resp));
+                                        f.items.push(EncItem {
+                                            ct,
+                                            enqueued,
+                                            trace,
+                                            resp,
+                                        });
                                         if f.policy.on_arrival(Instant::now())
                                             == BatchAction::Flush
                                         {
@@ -481,16 +536,21 @@ impl Coordinator {
                                     ct,
                                     n_samples,
                                     enqueued,
+                                    trace,
                                     resp,
                                 }) => {
                                     metrics
                                         .enc_queue_depth
                                         .fetch_sub(1, Ordering::Relaxed);
+                                    // Packed groups bypass server-side
+                                    // forming, so their timelines skip
+                                    // the `Batched` phase by design.
                                     dispatch(WorkerJob::Packed {
                                         session_id,
                                         ct,
                                         n_samples,
                                         enqueued,
+                                        trace,
                                         resp,
                                     });
                                 }
@@ -578,17 +638,27 @@ impl Coordinator {
                                     }
                                 }
                             });
+                        type PlainHeld =
+                            (Vec<f64>, Instant, RequestTrace, SyncSender<PlainResponse>);
                         let mut policy = BatchPolicy::new(cfg_b.max_batch, cfg_b.batch_delay);
-                        let mut held: Vec<(Vec<f64>, Instant, SyncSender<PlainResponse>)> =
-                            Vec::new();
-                        let flush = |held: &mut Vec<(Vec<f64>, Instant, SyncSender<PlainResponse>)>| {
+                        let mut held: Vec<PlainHeld> = Vec::new();
+                        let flush = |held: &mut Vec<PlainHeld>| {
                             if held.is_empty() {
                                 return 0usize;
                             }
                             let n = held.len();
+                            // The whole batch shares one flush id and one
+                            // execution start; slot-model inference is a
+                            // single call over all n inputs.
+                            let fid = metrics.trace.next_flush_id();
+                            let exec_start = Instant::now();
+                            for (_, _, trace, _) in held.iter_mut() {
+                                trace.stamp_batched(fid, n as u32);
+                                trace.stamp(TracePhase::Executing);
+                            }
                             let slot_inputs: Vec<Vec<f32>> = held
                                 .iter()
-                                .map(|(x, _, _)| {
+                                .map(|(x, _, _, _)| {
                                     reshuffle_and_pack(&server.model, x)
                                         .iter()
                                         .map(|&v| v as f32)
@@ -603,7 +673,9 @@ impl Coordinator {
                                         .map(|r| r.iter().map(|&v| v as f64).collect())
                                         .collect(),
                                     Err(e) => {
-                                        for (_, _, resp) in held.drain(..) {
+                                        for (_, _, mut trace, resp) in held.drain(..) {
+                                            trace.stamp(TracePhase::Responded);
+                                            metrics.trace.record(trace);
                                             let _ = resp.send(Err(format!("slot model: {e}")));
                                         }
                                         return n;
@@ -611,7 +683,7 @@ impl Coordinator {
                                 },
                                 None => held
                                     .iter()
-                                    .map(|(x, _, _)| {
+                                    .map(|(x, _, _, _)| {
                                         let slots = reshuffle_and_pack(&server.model, x);
                                         server.model.forward_slots_plain(&slots)
                                     })
@@ -624,9 +696,15 @@ impl Coordinator {
                             metrics
                                 .batch_fill_sum
                                 .fetch_add(n as u64, Ordering::Relaxed);
-                            for ((_, enq, resp), s) in held.drain(..).zip(scores) {
+                            for ((_, enq, mut trace, resp), s) in held.drain(..).zip(scores) {
                                 metrics.plain_completed.fetch_add(1, Ordering::Relaxed);
                                 lock_unpoisoned(&metrics.plain_latency).record(enq.elapsed());
+                                lock_unpoisoned(&metrics.plain_queue)
+                                    .record(exec_start.duration_since(enq));
+                                lock_unpoisoned(&metrics.plain_service)
+                                    .record(exec_start.elapsed());
+                                trace.stamp(TracePhase::Responded);
+                                metrics.trace.record(trace);
                                 let _ = resp.send(Ok(s));
                             }
                             n
@@ -643,8 +721,13 @@ impl Coordinator {
                                 timeout = timeout.min(cfg_b.idle_flush);
                             }
                             match batch_rx.recv_timeout(timeout) {
-                                Ok(Request::Plain { x, enqueued, resp }) => {
-                                    held.push((x, enqueued, resp));
+                                Ok(Request::Plain {
+                                    x,
+                                    enqueued,
+                                    trace,
+                                    resp,
+                                }) => {
+                                    held.push((x, enqueued, trace, resp));
                                     if policy.on_arrival(Instant::now()) == BatchAction::Flush {
                                         let n = flush(&mut held);
                                         policy.on_flush(n);
@@ -713,15 +796,31 @@ impl Coordinator {
         session_id: u64,
         ct: Ciphertext,
     ) -> Result<Receiver<EncResponse>, SubmitError> {
+        let trace = self.metrics.trace.begin(TraceKind::Encrypted);
+        self.submit_encrypted_traced(session_id, ct, trace)
+    }
+
+    /// [`submit_encrypted`](Self::submit_encrypted) carrying a span
+    /// trace started upstream (the net server begins it at socket
+    /// accept so the timeline covers decode time too). The trace is
+    /// dropped — never recorded — when the submission is rejected.
+    pub fn submit_encrypted_traced(
+        &self,
+        session_id: u64,
+        ct: Ciphertext,
+        mut trace: RequestTrace,
+    ) -> Result<Receiver<EncResponse>, SubmitError> {
         if self.shutdown.load(Ordering::Relaxed) {
             return Err(SubmitError::Closed);
         }
         self.check_session(session_id)?;
+        trace.stamp(TracePhase::Admitted);
         let (resp_tx, resp_rx) = sync_channel(1);
         let req = Request::Encrypted {
             session_id,
             ct: Box::new(ct),
             enqueued: Instant::now(),
+            trace,
             resp: resp_tx,
         };
         // Gauge up BEFORE the request becomes visible to the batcher
@@ -747,6 +846,20 @@ impl Coordinator {
         ct: Ciphertext,
         n_samples: usize,
     ) -> Result<Receiver<EncResponse>, SubmitError> {
+        let trace = self.metrics.trace.begin(TraceKind::Packed);
+        self.submit_encrypted_packed_traced(session_id, ct, n_samples, trace)
+    }
+
+    /// [`submit_encrypted_packed`](Self::submit_encrypted_packed) with
+    /// an upstream-started span trace (see
+    /// [`submit_encrypted_traced`](Self::submit_encrypted_traced)).
+    pub fn submit_encrypted_packed_traced(
+        &self,
+        session_id: u64,
+        ct: Ciphertext,
+        n_samples: usize,
+        mut trace: RequestTrace,
+    ) -> Result<Receiver<EncResponse>, SubmitError> {
         if self.shutdown.load(Ordering::Relaxed) {
             return Err(SubmitError::Closed);
         }
@@ -754,12 +867,14 @@ impl Coordinator {
             return Err(SubmitError::BatchTooLarge);
         }
         self.check_session(session_id)?;
+        trace.stamp(TracePhase::Admitted);
         let (resp_tx, resp_rx) = sync_channel(1);
         let req = Request::EncryptedPacked {
             session_id,
             ct: Box::new(ct),
             n_samples,
             enqueued: Instant::now(),
+            trace,
             resp: resp_tx,
         };
         // See submit_encrypted: gauge up before enqueue, roll back on
@@ -776,13 +891,27 @@ impl Coordinator {
 
     /// Submit a plaintext inference (features, not slots).
     pub fn submit_plain(&self, x: Vec<f64>) -> Result<Receiver<PlainResponse>, SubmitError> {
+        let trace = self.metrics.trace.begin(TraceKind::Plain);
+        self.submit_plain_traced(x, trace)
+    }
+
+    /// [`submit_plain`](Self::submit_plain) with an upstream-started
+    /// span trace (see
+    /// [`submit_encrypted_traced`](Self::submit_encrypted_traced)).
+    pub fn submit_plain_traced(
+        &self,
+        x: Vec<f64>,
+        mut trace: RequestTrace,
+    ) -> Result<Receiver<PlainResponse>, SubmitError> {
         if self.shutdown.load(Ordering::Relaxed) {
             return Err(SubmitError::Closed);
         }
+        trace.stamp(TracePhase::Admitted);
         let (resp_tx, resp_rx) = sync_channel(1);
         let req = Request::Plain {
             x,
             enqueued: Instant::now(),
+            trace,
             resp: resp_tx,
         };
         self.try_enqueue(req, resp_rx)
@@ -910,25 +1039,34 @@ pub(crate) fn run_group_with(
 ) {
     // Untracked fetch: the submission gate already counted this
     // request's cache hit.
-    let sess = match sessions.get_untracked(session_id) {
-        Some(s) => s,
-        None => {
-            let err = mid_flight_error(sessions, session_id);
-            for (_, enqueued, resp) in items {
-                metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
-                lock_unpoisoned(&metrics.encrypted_latency).record(enqueued.elapsed());
-                let _ = resp.send(Err(err));
-            }
-            return;
-        }
-    };
+    // Completion bookkeeping shared by every exit path: counters,
+    // end-to-end latency, the queue/service split (when the request
+    // reached an execution start) and the span-trace record.
     let complete = |metrics: &Metrics,
                     enqueued: Instant,
+                    exec_start: Option<Instant>,
+                    mut trace: RequestTrace,
                     resp: SyncSender<EncResponse>,
                     result: EncResponse| {
         metrics.encrypted_completed.fetch_add(1, Ordering::Relaxed);
         lock_unpoisoned(&metrics.encrypted_latency).record(enqueued.elapsed());
+        if let Some(t0) = exec_start {
+            lock_unpoisoned(&metrics.encrypted_queue).record(t0.duration_since(enqueued));
+            lock_unpoisoned(&metrics.encrypted_service).record(t0.elapsed());
+        }
+        trace.stamp(TracePhase::Responded);
+        metrics.trace.record(trace);
         let _ = resp.send(result);
+    };
+    let sess = match sessions.get_untracked(session_id) {
+        Some(s) => s,
+        None => {
+            let err = mid_flight_error(sessions, session_id);
+            for it in items {
+                complete(metrics, it.enqueued, None, it.trace, it.resp, Err(err));
+            }
+            return;
+        }
     };
     // Re-probe key residency before evaluating a chunk past the first.
     // The group can span many chunks (the adaptive target can exceed
@@ -944,7 +1082,7 @@ pub(crate) fn run_group_with(
         }
     };
     let uniform = items.windows(2).all(|w| {
-        w[0].0.level == w[1].0.level && (w[0].0.scale - w[1].0.scale).abs() < 1e-6
+        w[0].ct.level == w[1].ct.level && (w[0].ct.scale - w[1].ct.scale).abs() < 1e-6
     });
     // Largest batch size the session's Galois keys cover (can_batch is
     // monotone: the step set only grows with b).
@@ -960,11 +1098,12 @@ pub(crate) fn run_group_with(
     let mut failed: Option<SubmitError> = None;
     if max_b > 1 {
         // Move the ciphertexts out (no deep clones on the hot path);
-        // only the (enqueue time, reply sender) metadata is needed
-        // after the evaluation.
-        let (cts, meta): (Vec<Ciphertext>, Vec<(Instant, SyncSender<EncResponse>)>) = items
+        // only the (enqueue time, trace, reply sender) metadata is
+        // needed after the evaluation.
+        type Meta = (Instant, RequestTrace, SyncSender<EncResponse>);
+        let (cts, meta): (Vec<Ciphertext>, Vec<Meta>) = items
             .into_iter()
-            .map(|(ct, enqueued, resp)| (*ct, (enqueued, resp)))
+            .map(|it| (*it.ct, (it.enqueued, it.trace, it.resp)))
             .unzip();
         for (i, (chunk_cts, chunk_meta)) in
             cts.chunks(max_b).zip(meta.chunks(max_b)).enumerate()
@@ -972,11 +1111,16 @@ pub(crate) fn run_group_with(
             if i > 0 {
                 still_resident(&mut failed);
             }
+            let mut metas: Vec<Meta> = chunk_meta.to_vec();
             if let Some(err) = failed {
-                for (enqueued, resp) in chunk_meta.iter().cloned() {
-                    complete(metrics, enqueued, resp, Err(err));
+                for (enqueued, trace, resp) in metas {
+                    complete(metrics, enqueued, None, trace, resp, Err(err));
                 }
                 continue;
+            }
+            let exec_start = Instant::now();
+            for (_, trace, _) in metas.iter_mut() {
+                trace.stamp(TracePhase::Executing);
             }
             // One engine execution per chunk (a 1-chunk normalizes to
             // the single-sample folded schedule); each caller's
@@ -985,26 +1129,34 @@ pub(crate) fn run_group_with(
             let responses = server
                 .execute(ev, enc, &EncRequest::group(chunk_cts), &sess.relin, &sess.galois)
                 .into_responses();
-            for ((enqueued, resp), r) in chunk_meta.iter().cloned().zip(responses) {
-                complete(metrics, enqueued, resp, Ok(r));
+            for ((enqueued, trace, resp), r) in metas.into_iter().zip(responses) {
+                complete(metrics, enqueued, Some(exec_start), trace, resp, Ok(r));
             }
             after_chunk(i);
         }
     } else {
-        for (i, (ct, enqueued, resp)) in items.into_iter().enumerate() {
+        for (i, item) in items.into_iter().enumerate() {
+            let EncItem {
+                ct,
+                enqueued,
+                mut trace,
+                resp,
+            } = item;
             if i > 0 {
                 still_resident(&mut failed);
             }
             if let Some(err) = failed {
-                complete(metrics, enqueued, resp, Err(err));
+                complete(metrics, enqueued, None, trace, resp, Err(err));
                 continue;
             }
+            let exec_start = Instant::now();
+            trace.stamp(TracePhase::Executing);
             let r = server
                 .execute(ev, enc, &EncRequest::single(&ct), &sess.relin, &sess.galois)
                 .into_responses()
                 .pop()
                 .expect("single-sample execution yields one response");
-            complete(metrics, enqueued, resp, Ok(r));
+            complete(metrics, enqueued, Some(exec_start), trace, resp, Ok(r));
             after_chunk(i);
         }
     }
@@ -1094,7 +1246,12 @@ mod tests {
             let slots = reshuffle_and_pack(&server.model, &ds.x[i]);
             let ct = encryptor.encrypt_slots(&ctx, &enc, &slots);
             let (tx, rx) = sync_channel(1);
-            items.push((Box::new(ct), Instant::now(), tx));
+            items.push(EncItem {
+                ct: Box::new(ct),
+                enqueued: Instant::now(),
+                trace: RequestTrace::inert(),
+                resp: tx,
+            });
             rxs.push(rx);
         }
 

@@ -2,61 +2,119 @@
 //!
 //! Lock-free counters (atomics) with a small mutex-guarded log-scale
 //! histogram per request class; cheap enough for the request path.
+//! The companion span-timeline machinery lives in [`crate::obs`]; the
+//! coordinator's [`TraceSink`] hangs off [`Metrics::trace`] so one
+//! handle scrapes both planes.
 
 use crate::keycache::KeyCacheStats;
 use crate::lockutil::lock_unpoisoned;
+use crate::obs::trace::TraceSink;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Log₂-bucketed latency histogram (µs buckets from 1µs to ~17min).
+/// Log₂-bucketed histogram over positive integer values.
+///
+/// The buckets are unit-agnostic (bucket *i* covers `[2^i, 2^(i+1))`,
+/// 30 buckets); the [`Duration`]-typed wrappers ([`record`],
+/// [`mean`], [`max`], [`quantile`]) interpret values as **µs** — the
+/// serving-latency convention — while the `_value` methods expose the
+/// raw scale (the op-profile plane records **ns** through them).
+///
+/// [`record`]: Histogram::record
+/// [`mean`]: Histogram::mean
+/// [`max`]: Histogram::max
+/// [`quantile`]: Histogram::quantile
 #[derive(Debug, Default)]
 pub struct Histogram {
     buckets: [u64; 30],
-    sum_us: u128,
+    sum: u128,
     count: u64,
-    max_us: u64,
+    peak: u64,
 }
 
 impl Histogram {
+    /// Record a latency in µs.
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let idx = (63 - us.leading_zeros() as usize).min(29);
+        self.record_value(d.as_micros() as u64);
+    }
+
+    /// Record a raw value (clamped up to 1 so log₂ is defined).
+    pub fn record_value(&mut self, v: u64) {
+        let v = v.max(1);
+        let idx = (63 - v.leading_zeros() as usize).min(29);
         self.buckets[idx] += 1;
-        self.sum_us += us as u128;
+        self.sum += v as u128;
         self.count += 1;
-        self.max_us = self.max_us.max(us);
+        self.peak = self.peak.max(v);
     }
 
     pub fn count(&self) -> u64 {
         self.count
     }
 
-    pub fn mean(&self) -> Duration {
+    /// Exact sum of every recorded value.
+    pub fn sum_value(&self) -> u128 {
+        self.sum
+    }
+
+    /// Exact mean of the recorded values (0 when empty).
+    pub fn mean_value(&self) -> u64 {
         if self.count == 0 {
-            return Duration::ZERO;
+            return 0;
         }
-        Duration::from_micros((self.sum_us / self.count as u128) as u64)
+        (self.sum / self.count as u128) as u64
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max_value(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_micros(self.mean_value())
     }
 
     pub fn max(&self) -> Duration {
-        Duration::from_micros(self.max_us)
+        Duration::from_micros(self.max_value())
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
-    pub fn quantile(&self, q: f64) -> Duration {
+    /// Approximate quantile, interpolated within the target bucket.
+    ///
+    /// The rank-`q` sample lands in some bucket `[2^i, 2^(i+1))`; its
+    /// value is estimated at the rank's proportional position across
+    /// that bucket (the k-th of c bucket occupants sits at
+    /// `(k − ½)/c` of the span), clamped to the observed maximum.
+    /// This removes the old upper-edge bias where the p50 of a single
+    /// 1ms sample reported ~2ms. `q ≥ 1` returns the exact maximum.
+    pub fn quantile_value(&self, q: f64) -> u64 {
         if self.count == 0 {
-            return Duration::ZERO;
+            return 0;
         }
-        let target = (self.count as f64 * q).ceil() as u64;
+        if q >= 1.0 {
+            return self.peak;
+        }
+        let target = ((self.count as f64) * q.max(0.0)).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lo = 1u64 << i;
+                let hi = 1u64 << (i + 1);
+                let frac = ((target - seen) as f64 - 0.5) / c as f64;
+                let v = lo as f64 + frac * (hi - lo) as f64;
+                return (v.round() as u64).clamp(lo, self.peak.max(lo));
+            }
+            seen += c;
         }
-        self.max()
+        self.peak
+    }
+
+    /// [`quantile_value`](Histogram::quantile_value) in µs.
+    pub fn quantile(&self, q: f64) -> Duration {
+        Duration::from_micros(self.quantile_value(q))
     }
 }
 
@@ -87,7 +145,9 @@ pub struct Metrics {
     pub enc_queue_depth: AtomicU64,
     /// TCP connections accepted by the serving tier (`crate::net`).
     pub net_connections_accepted: AtomicU64,
-    /// Serving-tier connections currently open (gauge).
+    /// Serving-tier connections currently open (gauge; paired
+    /// increment/decrement via [`Metrics::open_connection`] so an
+    /// unwinding connection thread cannot leak it).
     pub net_connections_open: AtomicU64,
     /// Connections refused at accept because the serving tier's
     /// connection cap was reached (accept-path backpressure).
@@ -95,8 +155,21 @@ pub struct Metrics {
     /// Shared with the session key cache: hits / misses / evictions /
     /// resident bytes (see [`crate::keycache`]).
     pub keycache: Arc<KeyCacheStats>,
+    /// End-to-end latency (admission → response).
     pub encrypted_latency: Mutex<Histogram>,
     pub plain_latency: Mutex<Histogram>,
+    /// Queue-time split: admission → worker pickup (encrypted path).
+    pub encrypted_queue: Mutex<Histogram>,
+    /// Service-time split: worker pickup → response (encrypted path).
+    pub encrypted_service: Mutex<Histogram>,
+    /// Queue-time split for the plaintext path.
+    pub plain_queue: Mutex<Histogram>,
+    /// Service-time split for the plaintext path.
+    pub plain_service: Mutex<Histogram>,
+    /// Completed-request span timelines (see [`crate::obs::trace`]).
+    /// Disabled (capacity 0) by default; the coordinator installs a
+    /// sized sink per `CoordinatorConfig::trace_capacity`.
+    pub trace: Arc<TraceSink>,
 }
 
 impl Metrics {
@@ -111,10 +184,34 @@ impl Metrics {
             ..Default::default()
         }
     }
+
+    /// Book one serving-tier connection open and return the guard
+    /// that closes it. The decrement runs in `Drop`, so an early
+    /// error return — or a panic unwinding mid-request — cannot leak
+    /// the `net_connections_open` gauge upward.
+    pub fn open_connection(&self) -> GaugeGuard<'_> {
+        self.net_connections_open.fetch_add(1, Ordering::Relaxed);
+        GaugeGuard {
+            gauge: &self.net_connections_open,
+        }
+    }
+}
+
+/// Decrement-on-drop half of a gauge increment
+/// (see [`Metrics::open_connection`]).
+#[derive(Debug)]
+pub struct GaugeGuard<'a> {
+    gauge: &'a AtomicU64,
+}
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time copy for reporting.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     pub encrypted_completed: u64,
     pub plain_completed: u64,
@@ -141,15 +238,36 @@ pub struct MetricsSnapshot {
     pub keycache_evictions: u64,
     pub keycache_resident_bytes: u64,
     pub encrypted_mean: Duration,
+    pub encrypted_p50: Duration,
     pub encrypted_p95: Duration,
+    pub encrypted_p99: Duration,
     pub plain_mean: Duration,
+    pub plain_p50: Duration,
     pub plain_p95: Duration,
+    pub plain_p99: Duration,
+    /// Queue-time vs service-time split (see the histogram fields on
+    /// [`Metrics`]): queue = admission → worker pickup, service =
+    /// worker pickup → response; queue + service ≈ end-to-end.
+    pub encrypted_queue_mean: Duration,
+    pub encrypted_queue_p95: Duration,
+    pub encrypted_service_mean: Duration,
+    pub encrypted_service_p95: Duration,
+    pub plain_queue_mean: Duration,
+    pub plain_service_mean: Duration,
+    /// Completed traces pushed into the trace ring since start.
+    pub traces_recorded: u64,
+    /// Traces lost to ring wrap-around.
+    pub traces_dropped: u64,
 }
 
 impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let enc = lock_unpoisoned(&self.encrypted_latency);
         let plain = lock_unpoisoned(&self.plain_latency);
+        let enc_queue = lock_unpoisoned(&self.encrypted_queue);
+        let enc_service = lock_unpoisoned(&self.encrypted_service);
+        let plain_queue = lock_unpoisoned(&self.plain_queue);
+        let plain_service = lock_unpoisoned(&self.plain_service);
         let flushed = self.batches_flushed.load(Ordering::Relaxed);
         let enc_flushed = self.enc_batches_flushed.load(Ordering::Relaxed);
         let mean_batch_fill = if flushed == 0 {
@@ -191,10 +309,78 @@ impl Metrics {
             keycache_evictions: kc.evictions,
             keycache_resident_bytes: kc.resident_bytes,
             encrypted_mean: enc.mean(),
+            encrypted_p50: enc.quantile(0.5),
             encrypted_p95: enc.quantile(0.95),
+            encrypted_p99: enc.quantile(0.99),
             plain_mean: plain.mean(),
+            plain_p50: plain.quantile(0.5),
             plain_p95: plain.quantile(0.95),
+            plain_p99: plain.quantile(0.99),
+            encrypted_queue_mean: enc_queue.mean(),
+            encrypted_queue_p95: enc_queue.quantile(0.95),
+            encrypted_service_mean: enc_service.mean(),
+            encrypted_service_p95: enc_service.quantile(0.95),
+            plain_queue_mean: plain_queue.mean(),
+            plain_service_mean: plain_service.mean(),
+            traces_recorded: self.trace.recorded(),
+            traces_dropped: self.trace.dropped(),
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line JSON rendering (stable field order, no dependencies) —
+    /// what `cryptotree-serve --stats-interval N` prints.
+    pub fn to_json_line(&self) -> String {
+        let us = |d: Duration| d.as_micros() as u64;
+        let mut out = String::with_capacity(1024);
+        out.push('{');
+        let mut put = |out: &mut String, key: &str, val: String| {
+            if out.len() > 1 {
+                out.push(',');
+            }
+            out.push('"');
+            out.push_str(key);
+            out.push_str("\":");
+            out.push_str(&val);
+        };
+        put(&mut out, "encrypted_completed", self.encrypted_completed.to_string());
+        put(&mut out, "plain_completed", self.plain_completed.to_string());
+        put(&mut out, "rejected_backpressure", self.rejected_backpressure.to_string());
+        put(&mut out, "rejected_no_session", self.rejected_no_session.to_string());
+        put(&mut out, "rejected_keys_evicted", self.rejected_keys_evicted.to_string());
+        put(&mut out, "batches_flushed", self.batches_flushed.to_string());
+        put(&mut out, "mean_batch_fill", format!("{:.3}", self.mean_batch_fill));
+        put(&mut out, "batch_fill_ratio", format!("{:.3}", self.batch_fill_ratio));
+        put(&mut out, "enc_batches_flushed", self.enc_batches_flushed.to_string());
+        put(&mut out, "mean_enc_batch_fill", format!("{:.3}", self.mean_enc_batch_fill));
+        put(&mut out, "enc_batch_fill_ratio", format!("{:.3}", self.enc_batch_fill_ratio));
+        put(&mut out, "enc_queue_depth", self.enc_queue_depth.to_string());
+        put(&mut out, "net_connections_accepted", self.net_connections_accepted.to_string());
+        put(&mut out, "net_connections_open", self.net_connections_open.to_string());
+        put(&mut out, "net_rejected_overload", self.net_rejected_overload.to_string());
+        put(&mut out, "keycache_hits", self.keycache_hits.to_string());
+        put(&mut out, "keycache_misses", self.keycache_misses.to_string());
+        put(&mut out, "keycache_evictions", self.keycache_evictions.to_string());
+        put(&mut out, "keycache_resident_bytes", self.keycache_resident_bytes.to_string());
+        put(&mut out, "encrypted_mean_us", us(self.encrypted_mean).to_string());
+        put(&mut out, "encrypted_p50_us", us(self.encrypted_p50).to_string());
+        put(&mut out, "encrypted_p95_us", us(self.encrypted_p95).to_string());
+        put(&mut out, "encrypted_p99_us", us(self.encrypted_p99).to_string());
+        put(&mut out, "plain_mean_us", us(self.plain_mean).to_string());
+        put(&mut out, "plain_p50_us", us(self.plain_p50).to_string());
+        put(&mut out, "plain_p95_us", us(self.plain_p95).to_string());
+        put(&mut out, "plain_p99_us", us(self.plain_p99).to_string());
+        put(&mut out, "encrypted_queue_mean_us", us(self.encrypted_queue_mean).to_string());
+        put(&mut out, "encrypted_queue_p95_us", us(self.encrypted_queue_p95).to_string());
+        put(&mut out, "encrypted_service_mean_us", us(self.encrypted_service_mean).to_string());
+        put(&mut out, "encrypted_service_p95_us", us(self.encrypted_service_p95).to_string());
+        put(&mut out, "plain_queue_mean_us", us(self.plain_queue_mean).to_string());
+        put(&mut out, "plain_service_mean_us", us(self.plain_service_mean).to_string());
+        put(&mut out, "traces_recorded", self.traces_recorded.to_string());
+        put(&mut out, "traces_dropped", self.traces_dropped.to_string());
+        out.push('}');
+        out
     }
 }
 
@@ -211,8 +397,42 @@ mod tests {
         assert_eq!(h.count(), 5);
         assert!(h.mean() >= Duration::from_millis(20));
         assert!(h.max() >= Duration::from_millis(100));
+        // Interpolated p50: rank 3 of {1,2,4,8,100}ms sits in the
+        // [2048,4096)µs bucket → ~3ms, not the old 4ms upper edge.
         assert!(h.quantile(0.5) >= Duration::from_millis(2));
-        assert!(h.quantile(1.0) >= Duration::from_millis(100));
+        assert!(h.quantile(0.5) < Duration::from_millis(4));
+        // q = 1 is the exact maximum, not a bucket edge.
+        assert_eq!(h.quantile(1.0), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // The satellite case: one 1ms sample. Bucket [1024, 2048)µs;
+        // the upper-edge-biased quantile reported 2048µs. The
+        // midpoint estimate stays strictly inside the bucket and is
+        // clamped to the observed max.
+        let mut h = Histogram::default();
+        h.record(Duration::from_millis(1));
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= Duration::from_micros(1000), "p50 = {p50:?}");
+        assert!(p50 < Duration::from_millis(2), "p50 = {p50:?}");
+
+        // Many equal samples: every quantile clamps to the exact value.
+        let mut h = Histogram::default();
+        for _ in 0..100 {
+            h.record_value(3000);
+        }
+        assert!(h.quantile_value(0.01) >= 2048);
+        assert!(h.quantile_value(0.99) <= 3000);
+        assert_eq!(h.quantile_value(1.0), 3000);
+
+        // Raw-unit API used by the op-profile plane (ns).
+        let mut h = Histogram::default();
+        h.record_value(0); // clamps to 1
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max_value(), 1);
+        assert_eq!(h.quantile_value(0.5), 1);
+        assert_eq!(h.sum_value(), 1);
     }
 
     #[test]
@@ -236,9 +456,27 @@ mod tests {
         assert_eq!(s.encrypted_completed, 3);
         assert!((s.mean_batch_fill - 4.5).abs() < 1e-12);
         assert!(s.plain_mean > Duration::ZERO);
+        assert!(s.plain_p50 > Duration::ZERO);
+        assert!(s.plain_p99 >= s.plain_p50);
         assert_eq!(s.net_connections_accepted, 4);
         assert_eq!(s.net_connections_open, 2);
         assert_eq!(s.net_rejected_overload, 1);
+        let json = s.to_json_line();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"encrypted_completed\":3"));
+        assert!(json.contains("\"plain_p50_us\":"));
+        assert!(json.contains("\"traces_recorded\":0"));
+    }
+
+    #[test]
+    fn queue_service_split_is_snapshotted() {
+        let m = Metrics::default();
+        lock_unpoisoned(&m.encrypted_queue).record(Duration::from_micros(300));
+        lock_unpoisoned(&m.encrypted_service).record(Duration::from_micros(700));
+        let s = m.snapshot();
+        assert!(s.encrypted_queue_mean > Duration::ZERO);
+        assert!(s.encrypted_service_mean > s.encrypted_queue_mean);
+        assert_eq!(s.plain_queue_mean, Duration::ZERO);
     }
 
     #[test]
@@ -255,6 +493,24 @@ mod tests {
         assert!(m.encrypted_latency.is_poisoned());
         lock_unpoisoned(&m.encrypted_latency).record(Duration::from_micros(100));
         assert_eq!(m.snapshot().encrypted_completed, 0);
+    }
+
+    #[test]
+    fn connection_gauge_cannot_leak_on_panic() {
+        let m = std::sync::Arc::new(Metrics::default());
+        {
+            let _g = m.open_connection();
+            assert_eq!(m.net_connections_open.load(Ordering::Relaxed), 1);
+        }
+        assert_eq!(m.net_connections_open.load(Ordering::Relaxed), 0);
+        // A handler thread that panics mid-request still decrements.
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.open_connection();
+            panic!("handler died mid-request");
+        })
+        .join();
+        assert_eq!(m.net_connections_open.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //!   flush on size `B` (the AOT artifact's batch) or on timeout,
 //!   executed through the PJRT slot model when available, Rust slot
 //!   math otherwise.
-//! * [`metrics`] — latency histograms / throughput counters.
+//! * [`metrics`] — latency histograms / throughput counters, the
+//!   queue-time vs service-time split, and the span-trace ring
+//!   ([`crate::obs::trace::TraceSink`]) every admitted request's
+//!   timeline is recorded into.
 
 pub mod batcher;
 pub mod core;

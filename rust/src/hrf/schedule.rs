@@ -111,7 +111,9 @@ pub enum PlainOperand {
 }
 
 /// Pipeline stage an op belongs to — drives per-layer op accounting.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Ordered and hashable so observability tables (`crate::obs`) can
+/// key on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Segment {
     /// Server-side placement of B fresh single-sample ciphertexts.
     Pack,

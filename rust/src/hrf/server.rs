@@ -63,6 +63,7 @@ use crate::ckks::keys::{GaloisKeys, RelinKey};
 use crate::ckks::rns::CkksContext;
 use crate::ckks::{Ciphertext, Encoder, Plaintext};
 use crate::lockutil::lock_unpoisoned;
+use crate::obs::{OpProfile, TimingBackend};
 use crate::runtime::engine::{CkksBackend, Engine, EngineRun, PassPipeline};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -108,6 +109,20 @@ impl LayerCounts {
             Segment::Layer2 => &mut self.layer2,
             Segment::Layer3 => &mut self.layer3,
             Segment::Extract => &mut self.extract,
+        }
+    }
+
+    /// Read-only view of [`bucket_mut`](LayerCounts::bucket_mut)'s
+    /// mapping (per-segment comparisons in tests and the op-profile
+    /// plane).
+    pub fn bucket(&self, seg: Segment) -> &OpCounts {
+        match seg {
+            Segment::Pack => &self.pack,
+            Segment::Layer1 => &self.layer1,
+            Segment::Act1 | Segment::Act2 => &self.activations,
+            Segment::Layer2 => &self.layer2,
+            Segment::Layer3 => &self.layer3,
+            Segment::Extract => &self.extract,
         }
     }
 }
@@ -385,8 +400,53 @@ impl HrfServer {
         );
         let sched = self.schedule(req.cts.len(), req.fold);
         let mut backend = CkksBackend::new(self, ev, enc, req.cts, rlk, gk);
-        let EngineRun { mut regs, counts } = Engine::run(&sched, &mut backend);
+        let EngineRun { regs, counts } = Engine::run(&sched, &mut backend);
+        self.collect_outputs(&sched, regs, counts)
+    }
 
+    /// [`HrfServer::execute`] with the CKKS backend wrapped in the
+    /// op-profile [`TimingBackend`]: every schedule primitive's wall
+    /// time lands in `profile`, keyed by (segment, op kind), with op
+    /// multiplicities diffed from the evaluator's own counters — so
+    /// `profile.layer_counts()` equals the returned
+    /// `EncExecution::counts` and the `CountingBackend` prediction.
+    /// Profiles accumulate: pass the same `profile` across requests to
+    /// tighten the timing histograms.
+    ///
+    /// Strictly opt-in and off the hot path — [`HrfServer::execute`]
+    /// never constructs the decorator, so disabling profiling costs
+    /// nothing there.
+    pub fn execute_profiled(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        req: &EncRequest<'_>,
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+        profile: &mut OpProfile,
+    ) -> EncExecution {
+        assert!(
+            !req.cts.is_empty() && req.cts.len() <= self.model.plan.groups,
+            "batch of {} outside 1..={}",
+            req.cts.len(),
+            self.model.plan.groups
+        );
+        let sched = self.schedule(req.cts.len(), req.fold);
+        let inner = CkksBackend::new(self, ev, enc, req.cts, rlk, gk);
+        let mut backend = TimingBackend::new(inner, profile);
+        let EngineRun { regs, counts } = Engine::run(&sched, &mut backend);
+        self.collect_outputs(&sched, regs, counts)
+    }
+
+    /// Move the schedule's output registers into an [`EncExecution`] —
+    /// the marshalling tail shared by [`execute`](HrfServer::execute)
+    /// and [`execute_profiled`](HrfServer::execute_profiled).
+    fn collect_outputs(
+        &self,
+        sched: &HrfSchedule,
+        mut regs: Vec<Option<Ciphertext>>,
+        counts: LayerCounts,
+    ) -> EncExecution {
         let mut groups: Vec<Vec<Ciphertext>> = Vec::new();
         let mut samples: Vec<(usize, usize)> = Vec::new();
         if sched.folded {

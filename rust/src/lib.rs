@@ -32,6 +32,10 @@
 //!   behind those sessions: exact `key_bytes` accounting, per-shard
 //!   LRU eviction under a global budget, and the eviction-safe
 //!   re-registration protocol (`SubmitError::KeysEvicted`).
+//! * [`obs`] — the observability plane: request-scoped span timelines
+//!   through the serving tier (trace ring + wire dump) and a timing
+//!   engine backend that profiles HE op wall-time per schedule
+//!   segment, both zero-cost when disabled.
 //! * [`runtime`] — the schedule execution engine (one generic
 //!   interpreter over pluggable `ScheduleBackend`s: CKKS, f32 slots,
 //!   dry-run counting; plus the `SchedulePass` optimization pipeline)
@@ -61,5 +65,6 @@ pub mod keycache;
 pub mod lockutil;
 pub mod net;
 pub mod nrf;
+pub mod obs;
 pub mod rng;
 pub mod runtime;

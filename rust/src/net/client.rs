@@ -13,9 +13,10 @@ use super::codec::{
 use super::frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
 use crate::ckks::rns::ContextRef;
 use crate::ckks::Ciphertext;
-use crate::coordinator::SubmitError;
+use crate::coordinator::{MetricsSnapshot, SubmitError};
 use crate::hrf::client::EvalKeys;
 use crate::hrf::EncScores;
+use crate::obs::trace::TraceRecord;
 use std::net::{TcpStream, ToSocketAddrs};
 
 /// Why a client call failed.
@@ -203,6 +204,24 @@ impl NetClient {
         match self.call(&Request::SubmitPlain { x })? {
             Response::PlainScores(s) => Ok(s),
             _ => Err(NetError::UnexpectedResponse("PlainScores")),
+        }
+    }
+
+    /// Scrape the server's metrics snapshot (counters, latency
+    /// quantiles, queue/service split, trace-ring totals).
+    pub fn metrics_snapshot(&mut self) -> Result<MetricsSnapshot, NetError> {
+        match self.call(&Request::MetricsSnapshot)? {
+            Response::Metrics(s) => Ok(s),
+            _ => Err(NetError::UnexpectedResponse("Metrics")),
+        }
+    }
+
+    /// Dump the server's span-trace ring (oldest → newest). Empty
+    /// when the server runs with `trace_capacity = 0`.
+    pub fn trace_dump(&mut self) -> Result<Vec<TraceRecord>, NetError> {
+        match self.call(&Request::TraceDump)? {
+            Response::Traces(t) => Ok(t),
+            _ => Err(NetError::UnexpectedResponse("Traces")),
         }
     }
 

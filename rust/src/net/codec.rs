@@ -17,10 +17,12 @@ use crate::ckks::keys::{GaloisKeys, KswKey, RelinKey};
 use crate::ckks::modops::galois_element;
 use crate::ckks::rns::{CkksContext, RnsPoly};
 use crate::ckks::Ciphertext;
-use crate::coordinator::SubmitError;
+use crate::coordinator::{MetricsSnapshot, SubmitError};
 use crate::hrf::client::EvalKeys;
 use crate::hrf::EncScores;
+use crate::obs::trace::{TraceKind, TraceRecord, N_PHASES};
 use std::collections::HashMap;
+use std::time::Duration;
 
 /// Why a payload failed to decode.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -64,6 +66,9 @@ const MAX_KSW_PAIRS: usize = 64;
 const MAX_SCORES: usize = 256;
 /// Cap on advertised rotation steps.
 const MAX_ROTATIONS: usize = 4096;
+/// Cap on trace records in one `Traces` response (well above any
+/// sane `trace_capacity`).
+const MAX_TRACES: usize = 16_384;
 
 // ------------------------------------------------------------- writing
 
@@ -340,6 +345,157 @@ fn get_enc_scores(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<EncScores
     Ok(EncScores { scores, slot })
 }
 
+// ------------------------------------------- observability payloads
+
+fn put_duration_us(buf: &mut Vec<u8>, d: Duration) {
+    put_u64(buf, d.as_micros() as u64);
+}
+
+fn get_duration_us(r: &mut ByteReader<'_>) -> Result<Duration, CodecError> {
+    Ok(Duration::from_micros(r.get_u64()?))
+}
+
+/// Encode a [`MetricsSnapshot`] in struct declaration order: `u64`
+/// counters verbatim, `f64` as bits, `Duration`s as whole µs.
+fn put_metrics_snapshot(buf: &mut Vec<u8>, s: &MetricsSnapshot) {
+    put_u64(buf, s.encrypted_completed);
+    put_u64(buf, s.plain_completed);
+    put_u64(buf, s.rejected_backpressure);
+    put_u64(buf, s.rejected_no_session);
+    put_u64(buf, s.rejected_keys_evicted);
+    put_u64(buf, s.batches_flushed);
+    put_f64(buf, s.mean_batch_fill);
+    put_f64(buf, s.batch_fill_ratio);
+    put_u64(buf, s.enc_batches_flushed);
+    put_f64(buf, s.mean_enc_batch_fill);
+    put_f64(buf, s.enc_batch_fill_ratio);
+    put_u64(buf, s.enc_queue_depth);
+    put_u64(buf, s.net_connections_accepted);
+    put_u64(buf, s.net_connections_open);
+    put_u64(buf, s.net_rejected_overload);
+    put_u64(buf, s.keycache_hits);
+    put_u64(buf, s.keycache_misses);
+    put_u64(buf, s.keycache_evictions);
+    put_u64(buf, s.keycache_resident_bytes);
+    put_duration_us(buf, s.encrypted_mean);
+    put_duration_us(buf, s.encrypted_p50);
+    put_duration_us(buf, s.encrypted_p95);
+    put_duration_us(buf, s.encrypted_p99);
+    put_duration_us(buf, s.plain_mean);
+    put_duration_us(buf, s.plain_p50);
+    put_duration_us(buf, s.plain_p95);
+    put_duration_us(buf, s.plain_p99);
+    put_duration_us(buf, s.encrypted_queue_mean);
+    put_duration_us(buf, s.encrypted_queue_p95);
+    put_duration_us(buf, s.encrypted_service_mean);
+    put_duration_us(buf, s.encrypted_service_p95);
+    put_duration_us(buf, s.plain_queue_mean);
+    put_duration_us(buf, s.plain_service_mean);
+    put_u64(buf, s.traces_recorded);
+    put_u64(buf, s.traces_dropped);
+}
+
+fn get_metrics_snapshot(r: &mut ByteReader<'_>) -> Result<MetricsSnapshot, CodecError> {
+    Ok(MetricsSnapshot {
+        encrypted_completed: r.get_u64()?,
+        plain_completed: r.get_u64()?,
+        rejected_backpressure: r.get_u64()?,
+        rejected_no_session: r.get_u64()?,
+        rejected_keys_evicted: r.get_u64()?,
+        batches_flushed: r.get_u64()?,
+        mean_batch_fill: r.get_f64()?,
+        batch_fill_ratio: r.get_f64()?,
+        enc_batches_flushed: r.get_u64()?,
+        mean_enc_batch_fill: r.get_f64()?,
+        enc_batch_fill_ratio: r.get_f64()?,
+        enc_queue_depth: r.get_u64()?,
+        net_connections_accepted: r.get_u64()?,
+        net_connections_open: r.get_u64()?,
+        net_rejected_overload: r.get_u64()?,
+        keycache_hits: r.get_u64()?,
+        keycache_misses: r.get_u64()?,
+        keycache_evictions: r.get_u64()?,
+        keycache_resident_bytes: r.get_u64()?,
+        encrypted_mean: get_duration_us(r)?,
+        encrypted_p50: get_duration_us(r)?,
+        encrypted_p95: get_duration_us(r)?,
+        encrypted_p99: get_duration_us(r)?,
+        plain_mean: get_duration_us(r)?,
+        plain_p50: get_duration_us(r)?,
+        plain_p95: get_duration_us(r)?,
+        plain_p99: get_duration_us(r)?,
+        encrypted_queue_mean: get_duration_us(r)?,
+        encrypted_queue_p95: get_duration_us(r)?,
+        encrypted_service_mean: get_duration_us(r)?,
+        encrypted_service_p95: get_duration_us(r)?,
+        plain_queue_mean: get_duration_us(r)?,
+        plain_service_mean: get_duration_us(r)?,
+        traces_recorded: r.get_u64()?,
+        traces_dropped: r.get_u64()?,
+    })
+}
+
+fn put_trace_record(buf: &mut Vec<u8>, t: &TraceRecord) {
+    put_u64(buf, t.id);
+    put_u8(
+        buf,
+        match t.kind {
+            TraceKind::Encrypted => 0,
+            TraceKind::Packed => 1,
+            TraceKind::Plain => 2,
+        },
+    );
+    match t.flush {
+        Some((fid, group)) => {
+            put_u8(buf, 1);
+            put_u64(buf, fid);
+            put_u32(buf, group);
+        }
+        None => put_u8(buf, 0),
+    }
+    for p in &t.phases {
+        match p {
+            Some(us) => {
+                put_u8(buf, 1);
+                put_u64(buf, *us);
+            }
+            None => put_u8(buf, 0),
+        }
+    }
+}
+
+fn get_trace_record(r: &mut ByteReader<'_>) -> Result<TraceRecord, CodecError> {
+    let id = r.get_u64()?;
+    let kind = match r.get_u8()? {
+        0 => TraceKind::Encrypted,
+        1 => TraceKind::Packed,
+        2 => TraceKind::Plain,
+        tag => {
+            return Err(CodecError::BadTag {
+                context: "trace kind",
+                tag,
+            })
+        }
+    };
+    let flush = if r.get_bool("trace flush flag")? {
+        Some((r.get_u64()?, r.get_u32()?))
+    } else {
+        None
+    };
+    let mut phases = [None; N_PHASES];
+    for p in phases.iter_mut() {
+        if r.get_bool("trace phase flag")? {
+            *p = Some(r.get_u64()?);
+        }
+    }
+    Ok(TraceRecord {
+        id,
+        kind,
+        flush,
+        phases,
+    })
+}
+
 // ------------------------------------------------------------ messages
 
 /// Model facts a client needs before it can build requests.
@@ -382,6 +538,12 @@ pub enum Request {
     SubmitPlain { x: Vec<f64> },
     /// Ask the server to stop accepting and shut down cleanly.
     Shutdown,
+    /// Scrape the coordinator's [`MetricsSnapshot`] (no session
+    /// needed; counters, latency quantiles, queue/service split).
+    MetricsSnapshot,
+    /// Drain a copy of the span-trace ring (oldest → newest); empty
+    /// when the server runs with tracing disabled.
+    TraceDump,
 }
 
 /// Errors a server reports over the wire.
@@ -420,6 +582,10 @@ pub enum Response {
     Error(WireError),
     /// Acknowledges a `Shutdown` request; the server stops accepting.
     ShuttingDown,
+    /// Reply to `Request::MetricsSnapshot`.
+    Metrics(MetricsSnapshot),
+    /// Reply to `Request::TraceDump`.
+    Traces(Vec<TraceRecord>),
 }
 
 fn put_submit_error(buf: &mut Vec<u8>, e: SubmitError) {
@@ -484,6 +650,8 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             }
         }
         Request::Shutdown => put_u8(&mut buf, 7),
+        Request::MetricsSnapshot => put_u8(&mut buf, 8),
+        Request::TraceDump => put_u8(&mut buf, 9),
     }
     buf
 }
@@ -525,6 +693,8 @@ pub fn decode_request(payload: &[u8], ctx: &CkksContext) -> Result<Request, Code
             Request::SubmitPlain { x }
         }
         7 => Request::Shutdown,
+        8 => Request::MetricsSnapshot,
+        9 => Request::TraceDump,
         tag => return Err(CodecError::BadTag { context: "request", tag }),
     };
     r.finish()?;
@@ -584,6 +754,17 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             }
         }
         Response::ShuttingDown => put_u8(&mut buf, 7),
+        Response::Metrics(s) => {
+            put_u8(&mut buf, 8);
+            put_metrics_snapshot(&mut buf, s);
+        }
+        Response::Traces(traces) => {
+            put_u8(&mut buf, 9);
+            put_u32(&mut buf, traces.len() as u32);
+            for t in traces {
+                put_trace_record(&mut buf, t);
+            }
+        }
     }
     buf
 }
@@ -641,6 +822,17 @@ pub fn decode_response(payload: &[u8], ctx: &CkksContext) -> Result<Response, Co
             Response::Error(e)
         }
         7 => Response::ShuttingDown,
+        8 => Response::Metrics(get_metrics_snapshot(&mut r)?),
+        9 => {
+            let count = r.get_u32()? as usize;
+            if count > MAX_TRACES {
+                return Err(CodecError::BadValue("too many trace records"));
+            }
+            let traces = (0..count)
+                .map(|_| get_trace_record(&mut r))
+                .collect::<Result<Vec<_>, _>>()?;
+            Response::Traces(traces)
+        }
         tag => return Err(CodecError::BadTag { context: "response", tag }),
     };
     r.finish()?;

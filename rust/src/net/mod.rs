@@ -30,6 +30,12 @@
 //! the server returns at key registration, not by the connection —
 //! reconnecting (or a different process) can keep using a session id,
 //! which is exactly what the eviction-recovery protocol needs.
+//!
+//! Observability rides the same wire: [`codec::Request::MetricsSnapshot`]
+//! scrapes the coordinator's counters/quantiles and
+//! [`codec::Request::TraceDump`] drains a copy of the span-trace ring
+//! (see [`crate::obs`]), so a remote harness can explain a request's
+//! latency without attaching to the server process.
 
 pub mod args;
 pub mod client;

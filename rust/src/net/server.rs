@@ -18,12 +18,13 @@ use crate::ckks::rns::ContextRef;
 use crate::coordinator::{panic_message, Coordinator, ShutdownReport, SubmitError};
 use crate::hrf::HrfServer;
 use crate::lockutil::lock_unpoisoned;
+use crate::obs::trace::{TraceKind, TracePhase};
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Acceptor and connection-handling knobs.
 #[derive(Clone, Debug)]
@@ -241,10 +242,10 @@ fn refuse_overload(mut stream: TcpStream) {
 }
 
 fn handle_connection(shared: Arc<Shared>, mut stream: TcpStream) {
-    let metrics = Arc::clone(&shared.coord.metrics);
-    metrics.net_connections_open.fetch_add(1, Ordering::Relaxed);
+    // RAII guard: the open-connections gauge comes back down even if
+    // the handler panics mid-request.
+    let _open = shared.coord.metrics.open_connection();
     serve_connection(&shared, &mut stream);
-    metrics.net_connections_open.fetch_sub(1, Ordering::Relaxed);
 }
 
 fn serve_connection(shared: &Shared, stream: &mut TcpStream) {
@@ -272,6 +273,10 @@ fn serve_connection(shared: &Shared, stream: &mut TcpStream) {
         if n == 0 {
             return; // clean close between frames
         }
+        // The request's first byte is on the wire: this is where its
+        // span timeline starts (`Accepted`), so decode time is visible
+        // as the Accepted → Decoded gap.
+        let accepted = Instant::now();
         // ...then read the remainder blocking: a frame in flight is
         // never cut by the poll timeout.
         if stream.set_read_timeout(None).is_err() {
@@ -295,7 +300,7 @@ fn serve_connection(shared: &Shared, stream: &mut TcpStream) {
             // Frame boundary is intact after a codec error, so the
             // connection survives a malformed request.
             Err(err) => Response::Error(WireError::Protocol(err.to_string())),
-            Ok(req) => serve_request(shared, req),
+            Ok(req) => serve_request(shared, req, accepted),
         };
         if write_frame(stream, &encode_response(&resp)).is_err() {
             return;
@@ -306,8 +311,16 @@ fn serve_connection(shared: &Shared, stream: &mut TcpStream) {
     }
 }
 
-fn serve_request(shared: &Shared, req: Request) -> Response {
+fn serve_request(shared: &Shared, req: Request, accepted: Instant) -> Response {
     let coord = &shared.coord;
+    // Submit* requests get a span trace anchored at the first wire
+    // byte; stamping `Decoded` here (request already decoded) makes
+    // frame read + codec time visible in the timeline.
+    let begin = |kind: TraceKind| {
+        let mut trace = coord.metrics.trace.begin_from(kind, accepted);
+        trace.stamp(TracePhase::Decoded);
+        trace
+    };
     match req {
         Request::ModelInfo => Response::ModelInfo(model_info(shared)),
         Request::RegisterKeys { keys } => Response::Registered {
@@ -317,7 +330,8 @@ fn serve_request(shared: &Shared, req: Request) -> Response {
             ok: coord.sessions.reregister_keys(session_id, &keys),
         },
         Request::SubmitEncrypted { session_id, ct } => {
-            match coord.submit_encrypted(session_id, ct) {
+            let trace = begin(TraceKind::Encrypted);
+            match coord.submit_encrypted_traced(session_id, ct, trace) {
                 Err(e) => Response::Error(WireError::Submit(e)),
                 Ok(rx) => match rx.recv() {
                     Ok(Ok(scores)) => Response::EncScores(scores),
@@ -332,16 +346,20 @@ fn serve_request(shared: &Shared, req: Request) -> Response {
             session_id,
             ct,
             n_samples,
-        } => match coord.submit_encrypted_packed(session_id, ct, n_samples as usize) {
-            Err(e) => Response::Error(WireError::Submit(e)),
-            Ok(rx) => match rx.recv() {
-                Ok(Ok(scores)) => Response::EncScores(scores),
-                Ok(Err(e)) => Response::Error(WireError::Submit(e)),
-                Err(_) => {
-                    Response::Error(WireError::Server("response channel dropped".to_string()))
-                }
-            },
-        },
+        } => {
+            let trace = begin(TraceKind::Packed);
+            match coord.submit_encrypted_packed_traced(session_id, ct, n_samples as usize, trace)
+            {
+                Err(e) => Response::Error(WireError::Submit(e)),
+                Ok(rx) => match rx.recv() {
+                    Ok(Ok(scores)) => Response::EncScores(scores),
+                    Ok(Err(e)) => Response::Error(WireError::Submit(e)),
+                    Err(_) => Response::Error(WireError::Server(
+                        "response channel dropped".to_string(),
+                    )),
+                },
+            }
+        }
         Request::SubmitPlain { x } => {
             // Validate the feature count *here*: the batcher's
             // reshuffle would otherwise panic on a short vector, and
@@ -353,7 +371,8 @@ fn serve_request(shared: &Shared, req: Request) -> Response {
                     x.len()
                 )));
             }
-            match coord.submit_plain(x) {
+            let trace = begin(TraceKind::Plain);
+            match coord.submit_plain_traced(x, trace) {
                 Err(e) => Response::Error(WireError::Submit(e)),
                 Ok(rx) => match rx.recv() {
                     Ok(Ok(scores)) => Response::PlainScores(scores),
@@ -368,6 +387,8 @@ fn serve_request(shared: &Shared, req: Request) -> Response {
             shared.shutdown_requested.store(true, Ordering::Relaxed);
             Response::ShuttingDown
         }
+        Request::MetricsSnapshot => Response::Metrics(coord.metrics.snapshot()),
+        Request::TraceDump => Response::Traces(coord.metrics.trace.snapshot()),
     }
 }
 

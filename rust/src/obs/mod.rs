@@ -1,0 +1,31 @@
+//! Observability plane: request-scoped tracing and measured HE op
+//! profiles.
+//!
+//! Two independent instruments, both strictly opt-in and zero-cost
+//! when off:
+//!
+//! - **Span timelines** ([`trace`]): every serving-tier request
+//!   carries a [`RequestTrace`] stamping µs offsets for the phases
+//!   accepted → decoded → admitted → batched → executing → responded;
+//!   completed traces land in the coordinator's [`TraceSink`] ring
+//!   buffer (sized by `CoordinatorConfig::trace_capacity`, 0 = off)
+//!   and are scrapeable in-process (`Metrics::trace`) or over the
+//!   wire (`Request::TraceDump`). Flush ids tie together the requests
+//!   that shared one batch flush.
+//! - **Op profiles** ([`profile`]): [`TimingBackend`] decorates any
+//!   `ScheduleBackend` and records wall time per schedule-op kind per
+//!   pipeline segment into an [`OpProfile`] — the measured counterpart
+//!   of the dry-run `CountingBackend`'s Table-1 predictions, with
+//!   matching op multiplicities by construction. Entry point:
+//!   `HrfServer::execute_profiled`.
+//!
+//! The wire-scrapable metrics themselves (counters, latency
+//! histograms, `Request::MetricsSnapshot`) live in
+//! `coordinator::metrics`; this module provides the trace and profile
+//! machinery they surface.
+
+pub mod profile;
+pub mod trace;
+
+pub use profile::{OpKind, OpProfile, ProfileCell, ProfileRow, TimingBackend};
+pub use trace::{RequestTrace, TraceKind, TracePhase, TraceRecord, TraceSink, N_PHASES};

@@ -1,0 +1,498 @@
+//! Request-scoped span timelines.
+//!
+//! A [`RequestTrace`] rides along with one serving-tier request and
+//! collects phase timestamps (µs offsets from the trace's start) as
+//! the request moves accepted → decoded → admitted → batched →
+//! executing → responded. Completed traces land in a [`TraceSink`] —
+//! a fixed-capacity ring buffer behind one short mutex push per
+//! request — and can be drained as [`TraceRecord`] snapshots (in
+//! process via `Metrics::trace`, over the wire via the
+//! `Request::TraceDump` frame).
+//!
+//! Cost model: a sink built with capacity 0 is *disabled* and hands
+//! out inert traces — no allocation, every stamp is a `None` branch.
+//! An enabled sink allocates one small heap box per request and takes
+//! the ring lock exactly once, at completion; phase stamps themselves
+//! touch only the request-owned box and never synchronize.
+
+use crate::lockutil::lock_unpoisoned;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Number of [`TracePhase`] variants (length of the stamp array).
+pub const N_PHASES: usize = 6;
+
+/// One point in a request's lifecycle. Offsets are stamped in the
+/// order listed; a phase a request never reaches stays `None`.
+///
+/// Who stamps what: the net server stamps `Accepted` (first byte of
+/// the frame on the socket) and `Decoded`; the coordinator stamps
+/// `Admitted` (passed the session/backpressure gate), `Batched` (the
+/// batcher flushed the group it joined) and `Executing`; the worker
+/// stamps `Responded` when the response is handed back. Requests
+/// submitted in-process (no wire) start at `Admitted`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePhase {
+    /// First byte of the request frame arrived on the socket.
+    Accepted,
+    /// Frame decoded into a typed `Request`.
+    Decoded,
+    /// Passed the session + backpressure gate into the ingress queue.
+    Admitted,
+    /// The batcher flushed the group this request joined.
+    Batched,
+    /// A worker began evaluating the request's chunk.
+    Executing,
+    /// The response was handed back toward the client.
+    Responded,
+}
+
+impl TracePhase {
+    /// All phases, in lifecycle order.
+    pub const ALL: [TracePhase; N_PHASES] = [
+        TracePhase::Accepted,
+        TracePhase::Decoded,
+        TracePhase::Admitted,
+        TracePhase::Batched,
+        TracePhase::Executing,
+        TracePhase::Responded,
+    ];
+
+    /// Index into a [`TraceRecord`]'s stamp array.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lower-case name (wire docs, JSON, tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            TracePhase::Accepted => "accepted",
+            TracePhase::Decoded => "decoded",
+            TracePhase::Admitted => "admitted",
+            TracePhase::Batched => "batched",
+            TracePhase::Executing => "executing",
+            TracePhase::Responded => "responded",
+        }
+    }
+}
+
+/// Which serving path a trace belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// One encrypted sample (`submit_encrypted`).
+    Encrypted,
+    /// A client-packed multi-sample ciphertext
+    /// (`submit_encrypted_packed`); skips the `Batched` phase — it
+    /// arrives pre-batched and goes straight to a worker.
+    Packed,
+    /// A plaintext-feature request (`submit_plain`).
+    Plain,
+}
+
+impl TraceKind {
+    /// Stable lower-case name (JSON, tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Encrypted => "encrypted",
+            TraceKind::Packed => "packed",
+            TraceKind::Plain => "plain",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct TraceData {
+    id: u64,
+    kind: TraceKind,
+    start: Instant,
+    phases: [Option<u64>; N_PHASES],
+    flush: Option<(u64, u32)>,
+}
+
+/// A live trace carried by one in-flight request.
+///
+/// The default value is *inert*: stamps are no-ops and
+/// [`TraceSink::record`] discards it. Inert traces are what a
+/// disabled sink hands out, so tracing costs nothing when off.
+#[derive(Clone, Debug, Default)]
+pub struct RequestTrace(Option<Box<TraceData>>);
+
+impl RequestTrace {
+    /// A trace that records nothing (what a disabled sink hands out).
+    pub fn inert() -> Self {
+        RequestTrace(None)
+    }
+
+    /// `false` for inert traces.
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The trace id, if active.
+    pub fn id(&self) -> Option<u64> {
+        self.0.as_ref().map(|d| d.id)
+    }
+
+    /// Stamp `phase` at now − start. First stamp wins: re-stamping a
+    /// phase (e.g. `Executing` for each chunk of a split group) keeps
+    /// the earliest timestamp.
+    pub fn stamp(&mut self, phase: TracePhase) {
+        if let Some(d) = &mut self.0 {
+            let slot = &mut d.phases[phase.index()];
+            if slot.is_none() {
+                *slot = Some(d.start.elapsed().as_micros() as u64);
+            }
+        }
+    }
+
+    /// Stamp [`TracePhase::Batched`] and record which flush group this
+    /// request shared (`flush_id` is sink-unique; `group` is how many
+    /// requests the flush carried).
+    pub fn stamp_batched(&mut self, flush_id: u64, group: u32) {
+        self.stamp(TracePhase::Batched);
+        if let Some(d) = &mut self.0 {
+            if d.flush.is_none() {
+                d.flush = Some((flush_id, group));
+            }
+        }
+    }
+}
+
+/// A completed, immutable trace as drained from the sink.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Sink-unique, monotonically increasing id.
+    pub id: u64,
+    /// Which serving path the request took.
+    pub kind: TraceKind,
+    /// `(flush_id, group_size)` of the batch flush this request rode,
+    /// if it went through a batcher. Records sharing a `flush_id`
+    /// shared one flush.
+    pub flush: Option<(u64, u32)>,
+    /// Phase offsets in µs from trace start, indexed by
+    /// [`TracePhase::index`].
+    pub phases: [Option<u64>; N_PHASES],
+}
+
+impl TraceRecord {
+    /// Offset of `phase` from trace start, if stamped.
+    pub fn phase(&self, phase: TracePhase) -> Option<Duration> {
+        self.phases[phase.index()].map(Duration::from_micros)
+    }
+
+    /// Time spent queued: admitted → executing.
+    pub fn queue_time(&self) -> Option<Duration> {
+        self.span(TracePhase::Admitted, TracePhase::Executing)
+    }
+
+    /// Time spent evaluating: executing → responded.
+    pub fn service_time(&self) -> Option<Duration> {
+        self.span(TracePhase::Executing, TracePhase::Responded)
+    }
+
+    fn span(&self, from: TracePhase, to: TracePhase) -> Option<Duration> {
+        let a = self.phases[from.index()]?;
+        let b = self.phases[to.index()]?;
+        Some(Duration::from_micros(b.saturating_sub(a)))
+    }
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<Option<TraceRecord>>,
+    /// Total records ever written; `head % capacity` is the next slot.
+    head: u64,
+}
+
+/// Fixed-capacity ring buffer of completed request traces.
+///
+/// Writers ([`record`](TraceSink::record)) take the ring mutex for one
+/// slot write; the write cursor advances under the same lock, so
+/// concurrent completions cannot lose an update (total records written
+/// always equals the cursor). When the ring is full the oldest record
+/// is overwritten and counted in [`dropped`](TraceSink::dropped).
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    capacity: usize,
+    next_id: AtomicU64,
+    next_flush: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl TraceSink {
+    /// A sink retaining the most recent `capacity` traces;
+    /// `capacity == 0` disables tracing entirely (inert traces, no
+    /// allocation per request).
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceSink {
+            capacity,
+            ring: Mutex::new(Ring {
+                buf: (0..capacity).map(|_| None).collect(),
+                head: 0,
+            }),
+            ..TraceSink::default()
+        }
+    }
+
+    /// `false` when built with capacity 0.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Ring capacity (0 ⇒ disabled).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Start a trace whose clock begins now. Nothing is stamped — the
+    /// in-process submit path stamps `Admitted` as its first phase.
+    pub fn begin(&self, kind: TraceKind) -> RequestTrace {
+        self.begin_at(kind, Instant::now(), false)
+    }
+
+    /// Start a trace whose clock begins at `accepted` (the net server
+    /// captures this when the frame's first byte arrives). `Accepted`
+    /// is stamped at offset 0; the caller stamps `Decoded`.
+    pub fn begin_from(&self, kind: TraceKind, accepted: Instant) -> RequestTrace {
+        self.begin_at(kind, accepted, true)
+    }
+
+    fn begin_at(&self, kind: TraceKind, start: Instant, accepted: bool) -> RequestTrace {
+        if !self.enabled() {
+            return RequestTrace::inert();
+        }
+        let mut phases = [None; N_PHASES];
+        if accepted {
+            phases[TracePhase::Accepted.index()] = Some(0);
+        }
+        RequestTrace(Some(Box::new(TraceData {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            kind,
+            start,
+            phases,
+            flush: None,
+        })))
+    }
+
+    /// Next flush-group id, shared by the encrypted and plain batchers
+    /// so every flush in the process is uniquely identified.
+    pub fn next_flush_id(&self) -> u64 {
+        self.next_flush.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Push a completed trace into the ring. Inert traces are
+    /// discarded; nothing further is stamped.
+    pub fn record(&self, trace: RequestTrace) {
+        let Some(d) = trace.0 else { return };
+        let rec = TraceRecord {
+            id: d.id,
+            kind: d.kind,
+            flush: d.flush,
+            phases: d.phases,
+        };
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        let mut ring = lock_unpoisoned(&self.ring);
+        let idx = (ring.head % self.capacity as u64) as usize;
+        if ring.buf[idx].is_some() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.buf[idx] = Some(rec);
+        ring.head += 1;
+    }
+
+    /// Completed traces recorded since start (including overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Traces overwritten by ring wrap-around (lost to capacity).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The retained traces, oldest → newest. At most
+    /// [`capacity`](TraceSink::capacity) records.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        if !self.enabled() {
+            return Vec::new();
+        }
+        let ring = lock_unpoisoned(&self.ring);
+        let cap = self.capacity as u64;
+        let len = ring.head.min(cap);
+        let start = ring.head - len;
+        (0..len)
+            .map(|i| {
+                ring.buf[((start + i) % cap) as usize]
+                    .clone()
+                    .expect("ring slot below head is populated")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+impl TraceSink {
+    /// Poison the ring mutex the way `metrics.rs`'s test does: die on
+    /// a spawned thread while holding it.
+    fn lock_and_panic(&self) {
+        let _g = self.ring.lock().unwrap();
+        panic!("die holding the trace ring lock");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn finished(sink: &TraceSink, kind: TraceKind) -> RequestTrace {
+        let mut t = sink.begin(kind);
+        t.stamp(TracePhase::Admitted);
+        t.stamp(TracePhase::Executing);
+        t.stamp(TracePhase::Responded);
+        t
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = TraceSink::with_capacity(0);
+        assert!(!sink.enabled());
+        let mut t = sink.begin(TraceKind::Encrypted);
+        assert!(!t.is_active());
+        assert_eq!(t.id(), None);
+        t.stamp(TracePhase::Admitted);
+        t.stamp_batched(7, 3);
+        sink.record(t);
+        assert_eq!(sink.recorded(), 0);
+        assert!(sink.snapshot().is_empty());
+    }
+
+    #[test]
+    fn phases_are_stamped_once_and_ordered() {
+        let sink = TraceSink::with_capacity(4);
+        let mut t = sink.begin(TraceKind::Encrypted);
+        t.stamp(TracePhase::Admitted);
+        std::thread::sleep(Duration::from_millis(2));
+        t.stamp_batched(11, 2);
+        t.stamp(TracePhase::Executing);
+        t.stamp(TracePhase::Responded);
+        // Re-stamps keep the first timestamp and the first flush id.
+        t.stamp(TracePhase::Executing);
+        t.stamp_batched(99, 9);
+        sink.record(t);
+
+        let recs = sink.snapshot();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.kind, TraceKind::Encrypted);
+        assert_eq!(r.flush, Some((11, 2)));
+        assert_eq!(r.phase(TracePhase::Accepted), None);
+        let admitted = r.phase(TracePhase::Admitted).expect("admitted");
+        let batched = r.phase(TracePhase::Batched).expect("batched");
+        let executing = r.phase(TracePhase::Executing).expect("executing");
+        let responded = r.phase(TracePhase::Responded).expect("responded");
+        assert!(admitted <= batched && batched <= executing && executing <= responded);
+        assert!(batched >= Duration::from_millis(2));
+        assert_eq!(
+            r.queue_time().unwrap() + r.service_time().unwrap(),
+            responded - admitted
+        );
+    }
+
+    #[test]
+    fn begin_from_stamps_accept_at_zero() {
+        let sink = TraceSink::with_capacity(4);
+        let accepted = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        let mut t = sink.begin_from(TraceKind::Plain, accepted);
+        t.stamp(TracePhase::Decoded);
+        sink.record(t);
+        let r = &sink.snapshot()[0];
+        assert_eq!(r.phase(TracePhase::Accepted), Some(Duration::ZERO));
+        assert!(r.phase(TracePhase::Decoded).unwrap() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let sink = TraceSink::with_capacity(3);
+        for _ in 0..8 {
+            sink.record(finished(&sink, TraceKind::Plain));
+        }
+        assert_eq!(sink.recorded(), 8);
+        assert_eq!(sink.dropped(), 5);
+        let recs = sink.snapshot();
+        let ids: Vec<u64> = recs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![5, 6, 7]);
+    }
+
+    /// The ISSUE's concurrency case: N writer threads record while a
+    /// reader drains snapshots. The write cursor must not lose an
+    /// update (recorded == N·K exactly) and every snapshot must
+    /// respect the capacity bound with strictly increasing ids.
+    #[test]
+    fn concurrent_writers_and_reader_lose_nothing() {
+        const WRITERS: usize = 8;
+        const PER_WRITER: usize = 200;
+        const CAPACITY: usize = 64;
+        let sink = Arc::new(TraceSink::with_capacity(CAPACITY));
+
+        let reader = {
+            let sink = Arc::clone(&sink);
+            std::thread::spawn(move || {
+                let mut seen_max = 0u64;
+                while sink.recorded() < (WRITERS * PER_WRITER) as u64 {
+                    let snap = sink.snapshot();
+                    assert!(snap.len() <= CAPACITY);
+                    for w in snap.windows(2) {
+                        assert!(w[0].id < w[1].id, "snapshot ids out of order");
+                    }
+                    if let Some(last) = snap.last() {
+                        assert!(last.id >= seen_max, "newest id went backwards");
+                        seen_max = last.id;
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|_| {
+                let sink = Arc::clone(&sink);
+                std::thread::spawn(move || {
+                    for _ in 0..PER_WRITER {
+                        sink.record(finished(&sink, TraceKind::Encrypted));
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+
+        assert_eq!(sink.recorded(), (WRITERS * PER_WRITER) as u64);
+        assert_eq!(
+            sink.dropped(),
+            (WRITERS * PER_WRITER - CAPACITY) as u64,
+            "every record beyond capacity overwrote exactly one slot"
+        );
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), CAPACITY);
+    }
+
+    /// Mirrors `metrics.rs`'s poisoned-histogram test: a thread dies
+    /// holding the ring lock; record and snapshot keep working.
+    #[test]
+    fn sink_survives_a_poisoned_ring_lock() {
+        let sink = Arc::new(TraceSink::with_capacity(4));
+        let s2 = Arc::clone(&sink);
+        let _ = std::thread::spawn(move || s2.lock_and_panic()).join();
+        assert!(sink.ring.is_poisoned());
+        sink.record(finished(&sink, TraceKind::Encrypted));
+        assert_eq!(sink.recorded(), 1);
+        assert_eq!(sink.snapshot().len(), 1);
+    }
+}

@@ -4,7 +4,7 @@
 //! dispatched for execution.
 
 use crate::ckks::evaluator::OpCounts;
-use crate::hrf::schedule::{HrfSchedule, PlainOperand, Reg, ScheduleOp};
+use crate::hrf::schedule::{HrfSchedule, PlainOperand, Reg, ScheduleOp, Segment};
 use crate::hrf::server::LayerCounts;
 use std::collections::HashMap;
 
@@ -85,6 +85,14 @@ pub trait ScheduleBackend {
     fn op_counts(&self) -> OpCounts {
         OpCounts::default()
     }
+
+    /// Segment-boundary notification: called by [`Engine::run`] right
+    /// before the first primitive of each [`Segment`] in the op
+    /// stream. The default is a no-op (zero cost for the production
+    /// backends); a metering decorator — e.g. the op-profile
+    /// `TimingBackend` in [`crate::obs`] — overrides it to attribute
+    /// per-primitive timings to pipeline segments.
+    fn on_segment(&mut self, _seg: Segment) {}
 }
 
 /// Result of one [`Engine::run`]: the final register file plus the
@@ -133,6 +141,7 @@ impl Engine {
                 }
                 snap = backend.op_counts();
                 cur_seg = Some(*seg);
+                backend.on_segment(*seg);
             }
             match *op {
                 ScheduleOp::LoadInput { dst, input } => {

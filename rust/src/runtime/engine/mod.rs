@@ -39,6 +39,13 @@
 //! executor now means "implement [`ScheduleBackend`] by lowering each
 //! primitive to an HLO op", not "write another interpreter".
 //!
+//! The trait also composes: the op-profile
+//! [`TimingBackend`](crate::obs::TimingBackend) *decorates* any
+//! backend, timing each primitive and attributing it to the current
+//! segment via the [`ScheduleBackend::on_segment`] hook — which the
+//! engine calls at every segment boundary and the production backends
+//! keep as a free no-op.
+//!
 //! # Passes
 //!
 //! [`pass`] adds the optimization layer: a [`SchedulePass`] rewrites a

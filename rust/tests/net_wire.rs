@@ -4,6 +4,7 @@
 //! wire.
 
 use cryptotree::ckks::{Ciphertext, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::coordinator::metrics::Metrics;
 use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager, SubmitError};
 use cryptotree::hrf::client::{reshuffle_and_pack, EvalKeys, HrfClient};
 use cryptotree::hrf::EncScores;
@@ -15,7 +16,9 @@ use cryptotree::net::codec::{
 };
 use cryptotree::net::server::{NetServer, NetServerConfig};
 use cryptotree::net::workload::{self, WorkloadSpec};
+use cryptotree::obs::{TraceKind, TracePhase, TraceRecord};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn small_spec() -> WorkloadSpec {
     WorkloadSpec {
@@ -207,6 +210,58 @@ fn codec_roundtrips_every_variant() {
     assert!(matches!(
         decode_response(&encode_response(&Response::ShuttingDown), ctx).unwrap(),
         Response::ShuttingDown
+    ));
+
+    // Observability variants.
+    assert!(matches!(
+        decode_request(&encode_request(&Request::MetricsSnapshot), ctx).unwrap(),
+        Request::MetricsSnapshot
+    ));
+    assert!(matches!(
+        decode_request(&encode_request(&Request::TraceDump), ctx).unwrap(),
+        Request::TraceDump
+    ));
+    // A snapshot with non-trivial values in every field class (u64
+    // counter, f64 ratio, µs-precision duration) round-trips exactly.
+    let mut snap = Metrics::default().snapshot();
+    snap.encrypted_completed = 3;
+    snap.mean_batch_fill = 1.5;
+    snap.batch_fill_ratio = 0.75;
+    snap.encrypted_p50 = Duration::from_micros(1234);
+    snap.plain_service_mean = Duration::from_micros(9);
+    snap.traces_recorded = 11;
+    snap.traces_dropped = 7;
+    match decode_response(&encode_response(&Response::Metrics(snap.clone())), ctx).unwrap() {
+        Response::Metrics(got) => assert_eq!(got, snap),
+        other => panic!("wrong variant: {other:?}"),
+    }
+    let traces = vec![
+        TraceRecord {
+            id: 1,
+            kind: TraceKind::Encrypted,
+            flush: Some((4, 2)),
+            phases: [Some(0), Some(10), Some(20), Some(30), Some(40), Some(55)],
+        },
+        TraceRecord {
+            id: 2,
+            kind: TraceKind::Plain,
+            flush: None,
+            phases: [None, Some(1), Some(2), None, Some(3), Some(4)],
+        },
+    ];
+    match decode_response(&encode_response(&Response::Traces(traces.clone())), ctx).unwrap() {
+        Response::Traces(got) => assert_eq!(got, traces),
+        other => panic!("wrong variant: {other:?}"),
+    }
+    // An unknown trace-kind byte is rejected, not misread.
+    let mut bad = encode_response(&Response::Traces(traces));
+    bad[5 + 8] = 9; // tag(1) + count(4) + id(8), then the kind byte
+    assert!(matches!(
+        decode_response(&bad, ctx),
+        Err(CodecError::BadTag {
+            context: "trace kind",
+            tag: 9
+        })
     ));
 }
 
@@ -443,6 +498,96 @@ fn wire_eviction_reregister_recovers_identical_scores() {
     assert!(snap.rejected_keys_evicted >= 1);
     assert!(snap.keycache_evictions >= 2);
     assert!(snap.net_connections_accepted >= 2);
+
+    drop(client);
+    let report = net.shutdown();
+    assert!(report.is_clean(), "unclean shutdown: {report:?}");
+}
+
+/// The wire-scrapable observability plane end-to-end: a client drives
+/// encrypted + plain requests over a real socket, then explains them
+/// from outside the process — `MetricsSnapshot` for counters and the
+/// queue/service split, `TraceDump` for per-request span timelines
+/// whose phases are complete and monotone.
+#[test]
+fn wire_metrics_snapshot_and_trace_dump() {
+    let wl = workload::build(&small_spec());
+    let net = start_net_server(&wl, Arc::new(SessionManager::new()), 1);
+    let enc = Encoder::new(&wl.ctx);
+
+    let mut client = NetClient::connect(net.local_addr(), wl.ctx.clone()).expect("connect");
+    let info = client.model_info().expect("model info");
+    let rotations: Vec<usize> = info.rotations.iter().map(|&r| r as usize).collect();
+    let mut kg = KeyGenerator::new(&wl.ctx, 51);
+    let pk = kg.gen_public_key(&wl.ctx);
+    let mut hrf_client = HrfClient::with_eval_keys(
+        Encryptor::new(pk, 52),
+        Decryptor::new(kg.secret_key()),
+        kg.gen_relin_key(&wl.ctx),
+        kg.gen_galois_keys(&wl.ctx, &rotations),
+    );
+    let keys = hrf_client.eval_keys().unwrap().clone();
+    let sid = client.register_keys(&keys).expect("register");
+
+    let x = &wl.data.x[2];
+    let ct = hrf_client.encrypt_input(&wl.ctx, &enc, &wl.server.model, x);
+    client.submit_encrypted(sid, &ct).expect("encrypted submit");
+    client.submit_plain(x.clone()).expect("plain submit");
+
+    // The snapshot scraped over the wire matches what the requests did.
+    let snap = client.metrics_snapshot().expect("metrics scrape");
+    assert_eq!(snap.encrypted_completed, 1);
+    assert_eq!(snap.plain_completed, 1);
+    assert_eq!(snap.traces_recorded, 2, "both requests must be traced");
+    assert_eq!(snap.traces_dropped, 0);
+    assert!(snap.net_connections_accepted >= 1);
+    assert!(snap.encrypted_mean > Duration::ZERO);
+    assert!(snap.encrypted_p50 <= snap.encrypted_p99);
+    // Queue + service spans the whole worker-side life of the request,
+    // so neither side can exceed the end-to-end mean.
+    assert!(snap.encrypted_queue_mean <= snap.encrypted_mean);
+    assert!(snap.encrypted_service_mean <= snap.encrypted_mean);
+    assert!(snap.encrypted_service_mean > Duration::ZERO);
+
+    // The trace dump explains each request phase by phase.
+    let traces = client.trace_dump().expect("trace dump");
+    assert_eq!(traces.len(), 2);
+    let enc_trace = traces
+        .iter()
+        .find(|t| t.kind == TraceKind::Encrypted)
+        .expect("encrypted trace");
+    let plain_trace = traces
+        .iter()
+        .find(|t| t.kind == TraceKind::Plain)
+        .expect("plain trace");
+    for t in [enc_trace, plain_trace] {
+        // Every phase was stamped (both paths go through a batcher)…
+        let offsets: Vec<u64> = TracePhase::ALL
+            .iter()
+            .map(|&p| {
+                t.phase(p)
+                    .unwrap_or_else(|| panic!("{:?} missing phase {p:?}", t.kind))
+                    .as_micros() as u64
+            })
+            .collect();
+        // …in order: wire accept ≤ decode ≤ admission ≤ flush ≤
+        // execution ≤ response.
+        assert!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "{:?} phases not monotone: {offsets:?}",
+            t.kind
+        );
+        let (_fid, group) = t.flush.expect("flushed request carries a flush id");
+        assert_eq!(group, 1, "single request per flush in this test");
+        // The record's split agrees with the stamped phases.
+        assert!(t.queue_time().is_some());
+        assert!(t.service_time().is_some());
+    }
+    assert_ne!(
+        enc_trace.flush.unwrap().0,
+        plain_trace.flush.unwrap().0,
+        "different flushes must not share a flush id"
+    );
 
     drop(client);
     let report = net.shutdown();

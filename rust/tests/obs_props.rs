@@ -1,0 +1,268 @@
+//! Observability-plane properties.
+//!
+//! 1. The op-profile engine backend is *exact*: an
+//!    `HrfServer::execute_profiled` run attributes every evaluator op
+//!    to a `(segment, op kind)` cell, and the profile's aggregated
+//!    multiplicities equal both the execution's own segment accounting
+//!    and the dry-run `CountingBackend` prediction
+//!    (`HrfServer::predicted_counts`) — the measured Table 1 cannot
+//!    drift from the predicted one.
+//! 2. Span traces through a live coordinator tell a coherent story:
+//!    in-process requests stamp Admitted → Batched → Executing →
+//!    Responded in monotone order, requests flushed together share a
+//!    flush id with the right group size, and the plain path's flush
+//!    is distinct from the encrypted one's.
+
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{CkksParams, Decryptor, Encoder, Encryptor, Evaluator, KeyGenerator};
+use cryptotree::coordinator::{Coordinator, CoordinatorConfig, SessionManager};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::HrfClient;
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer, Segment};
+use cryptotree::nrf::activation::Activation;
+use cryptotree::nrf::NeuralForest;
+use cryptotree::obs::{OpProfile, TraceKind, TracePhase};
+use std::sync::Arc;
+use std::time::Duration;
+
+struct World {
+    ctx: cryptotree::ckks::rns::ContextRef,
+    enc: Encoder,
+    client: HrfClient,
+    server: Arc<HrfServer>,
+    rlk: cryptotree::ckks::RelinKey,
+    gk: cryptotree::ckks::GaloisKeys,
+    ds: cryptotree::data::Dataset,
+}
+
+/// The cheap fixture shared by both tests: tiny ring (N=4096, depth 4,
+/// test-grade security), identity activation — the observability
+/// plumbing is under test, not the numerics. Galois keys cover both
+/// single-sample execution and 2-sample server-side packing so the
+/// coordinator's enc-batcher can serve a flushed pair as one chunk.
+fn world() -> World {
+    let ds = adult::generate(400, 716);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 4,
+            tree: cryptotree::forest::tree::TreeConfig {
+                max_depth: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        717,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: vec![0.0, 1.0],
+        },
+    );
+    let params = Arc::new(CkksParams::build("obs-test-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let model = HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+    let plan = model.plan;
+    let mut kg = KeyGenerator::new(&ctx, 718);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let mut steps = plan.rotations_needed();
+    steps.extend(plan.rotations_needed_batched(2));
+    steps.sort_unstable();
+    steps.dedup();
+    let gk = kg.gen_galois_keys(&ctx, &steps);
+    let client = HrfClient::new(Encryptor::new(pk, 719), Decryptor::new(kg.secret_key()));
+    World {
+        ctx,
+        enc,
+        client,
+        server: Arc::new(HrfServer::new(model)),
+        rlk,
+        gk,
+        ds,
+    }
+}
+
+/// Acceptance property from the ISSUE: op multiplicities recorded by
+/// the profiling backend equal the `CountingBackend` dry-run
+/// prediction, overall and per segment.
+#[test]
+fn profiled_execution_matches_dry_run_prediction() {
+    let mut w = world();
+    let ct = w
+        .client
+        .encrypt_input(&w.ctx, &w.enc, &w.server.model, &w.ds.x[0]);
+    let mut ev = Evaluator::new(w.ctx.clone());
+    let mut profile = OpProfile::default();
+
+    let exec = w.server.execute_profiled(
+        &mut ev,
+        &w.enc,
+        &EncRequest::single(&ct),
+        &w.rlk,
+        &w.gk,
+        &mut profile,
+    );
+
+    // Measured == engine accounting == dry-run prediction.
+    let predicted = w.server.predicted_counts(1, true);
+    assert_eq!(exec.counts, predicted, "execution deviates from dry run");
+    assert_eq!(
+        profile.layer_counts(),
+        exec.counts,
+        "profile multiplicities deviate from the engine's segment accounting"
+    );
+    assert_eq!(profile.op_counts(), predicted.total());
+
+    // Per-segment agreement, bucket by bucket.
+    let measured = profile.layer_counts();
+    for seg in [
+        Segment::Pack,
+        Segment::Layer1,
+        Segment::Act1,
+        Segment::Layer2,
+        Segment::Act2,
+        Segment::Layer3,
+        Segment::Extract,
+    ] {
+        assert_eq!(
+            measured.bucket(seg),
+            predicted.bucket(seg),
+            "segment {seg:?} multiplicities disagree"
+        );
+    }
+
+    // The timing side is sane: real nanoseconds, coherent quantiles.
+    assert!(!profile.is_empty());
+    assert!(profile.total_time() > Duration::ZERO);
+    let rows = profile.rows();
+    assert!(!rows.is_empty());
+    for r in &rows {
+        assert!(r.calls > 0);
+        assert!(r.p50 <= r.p99, "row {:?}/{:?} p50 > p99", r.segment, r.kind);
+        assert!(r.total >= r.mean);
+    }
+    assert!(profile.table().contains("segment"));
+
+    // Profiles accumulate: a second identical run doubles the counts.
+    let _ = w.server.execute_profiled(
+        &mut ev,
+        &w.enc,
+        &EncRequest::single(&ct),
+        &w.rlk,
+        &w.gk,
+        &mut profile,
+    );
+    let mut twice = predicted.total();
+    twice += predicted.total();
+    assert_eq!(profile.op_counts(), twice, "profile must accumulate across runs");
+}
+
+/// End-to-end trace semantics through a live coordinator: two
+/// encrypted requests batched together share one flush id (group 2),
+/// the plain request rides its own flush, and every completed trace
+/// stamps the in-process phases in monotone order.
+#[test]
+fn coordinator_traces_share_flush_ids_and_stay_monotone() {
+    let mut w = world();
+    let sessions = Arc::new(SessionManager::new());
+    let sid = sessions.register(w.rlk.clone(), w.gk.clone());
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            enc_batch: 2,
+            adaptive_enc_batch: false,
+            // Plain path flushes on arrival (the lone plain request
+            // below must not wait out `batch_delay`).
+            max_batch: 1,
+            // Generous flush window, idle-flush disabled: the pair
+            // submitted back-to-back below must land in ONE flush.
+            batch_delay: Duration::from_secs(2),
+            idle_flush: Duration::from_secs(5),
+            trace_capacity: 64,
+            ..Default::default()
+        },
+        w.ctx.clone(),
+        w.server.clone(),
+        sessions,
+        None,
+    );
+    assert!(coord.metrics.trace.enabled());
+
+    let ct0 = w
+        .client
+        .encrypt_input(&w.ctx, &w.enc, &w.server.model, &w.ds.x[0]);
+    let ct1 = w
+        .client
+        .encrypt_input(&w.ctx, &w.enc, &w.server.model, &w.ds.x[1]);
+    let rx0 = coord.submit_encrypted(sid, ct0).unwrap();
+    let rx1 = coord.submit_encrypted(sid, ct1).unwrap();
+    assert!(rx0.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    assert!(rx1.recv_timeout(Duration::from_secs(120)).unwrap().is_ok());
+    let prx = coord.submit_plain(w.ds.x[2].clone()).unwrap();
+    assert!(prx.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+
+    // Workers record each trace before sending the response, so by now
+    // all three are in the ring.
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.encrypted_completed, 2);
+    assert_eq!(snap.plain_completed, 1);
+    assert_eq!(snap.traces_recorded, 3);
+    assert_eq!(snap.traces_dropped, 0);
+
+    let traces = coord.metrics.trace.snapshot();
+    assert_eq!(traces.len(), 3);
+    for t in &traces {
+        // In-process submissions never touch the wire: no socket-side
+        // phases, and the timeline starts at admission.
+        assert_eq!(t.phase(TracePhase::Accepted), None);
+        assert_eq!(t.phase(TracePhase::Decoded), None);
+        let offsets: Vec<u64> = [
+            TracePhase::Admitted,
+            TracePhase::Batched,
+            TracePhase::Executing,
+            TracePhase::Responded,
+        ]
+        .iter()
+        .map(|&p| {
+            t.phase(p)
+                .unwrap_or_else(|| panic!("{:?} missing phase {p:?}", t.kind))
+                .as_micros() as u64
+        })
+        .collect();
+        assert!(
+            offsets.windows(2).all(|p| p[0] <= p[1]),
+            "{:?} phases not monotone: {offsets:?}",
+            t.kind
+        );
+        assert!(t.queue_time().is_some() && t.service_time().is_some());
+    }
+    // Ring order is completion order; ids are sink-unique and increase.
+    assert!(traces.windows(2).all(|p| p[0].id < p[1].id));
+
+    let enc_traces: Vec<_> = traces
+        .iter()
+        .filter(|t| t.kind == TraceKind::Encrypted)
+        .collect();
+    let plain_traces: Vec<_> = traces
+        .iter()
+        .filter(|t| t.kind == TraceKind::Plain)
+        .collect();
+    assert_eq!((enc_traces.len(), plain_traces.len()), (2, 1));
+
+    // The batched pair shares one flush of group 2 …
+    let (fid_a, group_a) = enc_traces[0].flush.expect("batched request has a flush id");
+    let (fid_b, group_b) = enc_traces[1].flush.expect("batched request has a flush id");
+    assert_eq!(fid_a, fid_b, "requests flushed together must share a flush id");
+    assert_eq!((group_a, group_b), (2, 2));
+    // … and the plain request rides a different flush of its own.
+    let (plain_fid, plain_group) = plain_traces[0].flush.expect("plain flush id");
+    assert_ne!(plain_fid, fid_a, "distinct flushes must not share an id");
+    assert_eq!(plain_group, 1);
+
+    coord.shutdown();
+}
