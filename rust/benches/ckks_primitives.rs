@@ -79,6 +79,8 @@ fn main() {
         push(&mut rows, &mut records, t, w);
         let t = bench(&format!("rotate(1) [w={w}]"), 1, 8, || ev.rotate(&ct, 1, &gk));
         push(&mut rows, &mut records, t, w);
+        let t = bench(&format!("hoist [w={w}]"), 1, 8, || ev.hoist(&ct));
+        push(&mut rows, &mut records, t, w);
         let digits = ev.hoist(&ct);
         let t = bench(&format!("rotate_hoisted(1) [w={w}]"), 1, 8, || {
             ev.rotate_hoisted(&ct, &digits, 1, &gk)

@@ -111,6 +111,46 @@ impl Evaluator {
         }
     }
 
+    /// An evaluator seeded with an existing (possibly warm) scratch
+    /// pool — the per-worker construction path of the op-parallel DAG
+    /// driver, where each worker owns its own pool for the lifetime of
+    /// one request.
+    pub fn with_scratch(ctx: ContextRef, scratch: Scratch) -> Self {
+        Evaluator {
+            ctx,
+            counts: OpCounts::default(),
+            scratch,
+        }
+    }
+
+    /// Split a worker evaluator off this one: same context, zeroed
+    /// counters, and — crucially — *this* evaluator's scratch pool
+    /// moved into the worker (so warm buffers keep flowing through a
+    /// borrowed-`&mut Evaluator` API boundary). Pair with [`merge`]
+    /// (`Evaluator::merge`) to fold counters and scratch back.
+    pub fn split_off(&mut self) -> Evaluator {
+        Evaluator {
+            ctx: self.ctx.clone(),
+            counts: OpCounts::default(),
+            scratch: std::mem::take(&mut self.scratch),
+        }
+    }
+
+    /// Fold a worker evaluator (from [`split_off`](Evaluator::split_off)
+    /// or [`with_scratch`](Evaluator::with_scratch)) back in: counters
+    /// accumulate, warm buffers are absorbed.
+    pub fn merge(&mut self, worker: Evaluator) {
+        self.counts += worker.counts;
+        self.scratch.absorb(worker.scratch);
+    }
+
+    /// Consume the evaluator, yielding its scratch pool (so a
+    /// [`ScratchPool`](crate::ckks::ScratchPool) can reclaim the warm
+    /// buffers of a retiring DAG worker).
+    pub fn into_scratch(self) -> Scratch {
+        self.scratch
+    }
+
     /// Recycle a ciphertext's limb buffers into the pool.
     fn recycle_ct(&mut self, ct: Ciphertext) {
         self.scratch.put(ct.c0.into_data());

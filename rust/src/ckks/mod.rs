@@ -50,4 +50,4 @@ pub use encrypt::{Ciphertext, Decryptor, Encryptor, Plaintext};
 pub use evaluator::{Evaluator, OpCounts};
 pub use keys::{GaloisKeys, KeyGenerator, PublicKey, RelinKey, SecretKey};
 pub use params::CkksParams;
-pub use scratch::Scratch;
+pub use scratch::{Scratch, ScratchPool};

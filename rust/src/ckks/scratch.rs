@@ -65,6 +65,71 @@ impl Scratch {
     pub fn pooled(&self) -> usize {
         self.bufs.len()
     }
+
+    /// Drain another pool's buffers into this one (bounded by
+    /// `MAX_POOLED`; excess buffers are dropped). Used when a worker
+    /// evaluator retires and its warm buffers flow back to the shared
+    /// [`ScratchPool`].
+    pub fn absorb(&mut self, mut other: Scratch) {
+        while let Some(b) = other.bufs.pop() {
+            if self.bufs.len() >= MAX_POOLED {
+                break;
+            }
+            self.put(b);
+        }
+    }
+}
+
+/// A small shared pool of [`Scratch`] instances for op-parallel
+/// execution: each DAG worker checks one out for the lifetime of a
+/// request and restores it afterwards, so warm limb buffers survive
+/// across requests without any per-op locking (the lock is touched
+/// twice per worker per request, never on the op hot path).
+///
+/// Bounded: at most [`ScratchPool::MAX_IDLE`] idle pools are retained;
+/// checkout beyond the retained set simply creates a fresh empty
+/// `Scratch` (allocation then happens lazily on first use).
+pub struct ScratchPool {
+    idle: std::sync::Mutex<Vec<Scratch>>,
+}
+
+impl ScratchPool {
+    /// Upper bound on idle retained `Scratch` pools. Sized for the
+    /// realistic op-worker × coordinator-worker product; beyond it,
+    /// restored pools are dropped.
+    pub const MAX_IDLE: usize = 32;
+
+    pub fn new() -> Self {
+        ScratchPool {
+            idle: std::sync::Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Check out a scratch pool (warm if one is idle, fresh otherwise).
+    pub fn checkout(&self) -> Scratch {
+        crate::lockutil::lock_unpoisoned(&self.idle)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return a scratch pool after use (dropped if at capacity).
+    pub fn restore(&self, scratch: Scratch) {
+        let mut idle = crate::lockutil::lock_unpoisoned(&self.idle);
+        if idle.len() < Self::MAX_IDLE {
+            idle.push(scratch);
+        }
+    }
+
+    /// Number of idle pools currently retained (test hook).
+    pub fn idle(&self) -> usize {
+        crate::lockutil::lock_unpoisoned(&self.idle).len()
+    }
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        ScratchPool::new()
+    }
 }
 
 #[cfg(test)]

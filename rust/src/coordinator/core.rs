@@ -100,6 +100,13 @@ pub struct CoordinatorConfig {
     /// current setting (its `CRYPTOTREE_CKKS_WORKERS` env default).
     /// Outputs are bit-identical for every value.
     pub ckks_workers: usize,
+    /// Op-parallel worker threads *per evaluation*
+    /// (`HrfServer::set_op_workers`): runs independent schedule ops
+    /// concurrently through the hazard-DAG driver, composing with
+    /// `ckks_workers` (op-level × limb-level parallelism). `0` keeps
+    /// the server's current setting (its `CRYPTOTREE_OP_WORKERS` env
+    /// default). Outputs are bit-identical for every value.
+    pub op_workers: usize,
     /// Span-timeline trace ring capacity (`crate::obs`): how many
     /// completed request traces `Metrics::trace` retains. `0` disables
     /// tracing entirely — requests carry inert traces and no per-
@@ -118,6 +125,7 @@ impl Default for CoordinatorConfig {
             adaptive_enc_batch: true,
             idle_flush: Duration::from_millis(1),
             ckks_workers: 0,
+            op_workers: 0,
             trace_capacity: 256,
         }
     }
@@ -282,6 +290,9 @@ impl Coordinator {
         if cfg.ckks_workers > 0 {
             ctx.set_workers(cfg.ckks_workers);
         }
+        if cfg.op_workers > 0 {
+            server.set_op_workers(cfg.op_workers);
+        }
         // Pre-warm the Galois-permutation cache from the compiled
         // schedules so serving never takes the perm lock's write path.
         server.prewarm(&ctx, server.model.plan.groups);
@@ -342,6 +353,7 @@ impl Coordinator {
                                     trace.stamp(TracePhase::Executing);
                                     let result = match sessions.get_untracked(session_id) {
                                         Some(sess) => {
+                                            stamp_dag_gauges(&server, &metrics, 1);
                                             let ex = server.execute(
                                                 &mut ev,
                                                 &enc,
@@ -1024,6 +1036,19 @@ fn mid_flight_error(sessions: &SessionManager, session_id: u64) -> SubmitError {
     }
 }
 
+/// Stamp the schedule-DAG shape gauges (`Metrics::dag_ops` /
+/// `dag_waves` / `dag_width`) for the evaluation about to run. No-op
+/// when the server executes ops serially, so the gauges stay 0 and the
+/// DAG cache is never touched unless op-parallelism is on.
+pub(crate) fn stamp_dag_gauges(server: &HrfServer, metrics: &Metrics, b: usize) {
+    if server.op_workers() > 1 {
+        let stats = server.dag_stats(b, true);
+        metrics.dag_ops.store(stats.ops as u64, Ordering::Relaxed);
+        metrics.dag_waves.store(stats.waves as u64, Ordering::Relaxed);
+        metrics.dag_width.store(stats.width as u64, Ordering::Relaxed);
+    }
+}
+
 /// [`run_group`] with a test seam: `after_chunk(i)` runs after chunk
 /// (or per-request evaluation) `i` completes, letting tests mutate
 /// key-cache state between chunks deterministically.
@@ -1126,6 +1151,7 @@ pub(crate) fn run_group_with(
             // the single-sample folded schedule); each caller's
             // response carries the shared per-class ciphertexts plus
             // its own score slot.
+            stamp_dag_gauges(server, metrics, chunk_cts.len());
             let responses = server
                 .execute(ev, enc, &EncRequest::group(chunk_cts), &sess.relin, &sess.galois)
                 .into_responses();
@@ -1151,6 +1177,7 @@ pub(crate) fn run_group_with(
             }
             let exec_start = Instant::now();
             trace.stamp(TracePhase::Executing);
+            stamp_dag_gauges(server, metrics, 1);
             let r = server
                 .execute(ev, enc, &EncRequest::single(&ct), &sess.relin, &sess.galois)
                 .into_responses()

@@ -170,6 +170,15 @@ pub struct Metrics {
     /// Disabled (capacity 0) by default; the coordinator installs a
     /// sized sink per `CoordinatorConfig::trace_capacity`.
     pub trace: Arc<TraceSink>,
+    /// Op count of the schedule DAG most recently dispatched through
+    /// the op-parallel executor (gauge; 0 until a DAG evaluation runs).
+    pub dag_ops: AtomicU64,
+    /// Wave (topological-level) count of that DAG — the executor's
+    /// critical-path length in ops.
+    pub dag_waves: AtomicU64,
+    /// Widest wave of that DAG — the max op-parallelism the schedule
+    /// exposes (more `op_workers` than this cannot help).
+    pub dag_width: AtomicU64,
 }
 
 impl Metrics {
@@ -258,6 +267,11 @@ pub struct MetricsSnapshot {
     pub traces_recorded: u64,
     /// Traces lost to ring wrap-around.
     pub traces_dropped: u64,
+    /// Schedule-DAG shape of the most recent op-parallel evaluation
+    /// (ops / waves / widest wave; all 0 until one runs).
+    pub dag_ops: u64,
+    pub dag_waves: u64,
+    pub dag_width: u64,
 }
 
 impl Metrics {
@@ -324,6 +338,9 @@ impl Metrics {
             plain_service_mean: plain_service.mean(),
             traces_recorded: self.trace.recorded(),
             traces_dropped: self.trace.dropped(),
+            dag_ops: self.dag_ops.load(Ordering::Relaxed),
+            dag_waves: self.dag_waves.load(Ordering::Relaxed),
+            dag_width: self.dag_width.load(Ordering::Relaxed),
         }
     }
 }
@@ -379,6 +396,9 @@ impl MetricsSnapshot {
         put(&mut out, "plain_service_mean_us", us(self.plain_service_mean).to_string());
         put(&mut out, "traces_recorded", self.traces_recorded.to_string());
         put(&mut out, "traces_dropped", self.traces_dropped.to_string());
+        put(&mut out, "dag_ops", self.dag_ops.to_string());
+        put(&mut out, "dag_waves", self.dag_waves.to_string());
+        put(&mut out, "dag_width", self.dag_width.to_string());
         out.push('}');
         out
     }

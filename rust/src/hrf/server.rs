@@ -61,11 +61,15 @@ use super::schedule::{HrfSchedule, PlainOperand, Segment};
 use crate::ckks::evaluator::{Evaluator, OpCounts};
 use crate::ckks::keys::{GaloisKeys, RelinKey};
 use crate::ckks::rns::CkksContext;
-use crate::ckks::{Ciphertext, Encoder, Plaintext};
+use crate::ckks::{Ciphertext, Encoder, Plaintext, ScratchPool};
 use crate::lockutil::lock_unpoisoned;
 use crate::obs::{OpProfile, TimingBackend};
-use crate::runtime::engine::{CkksBackend, Engine, EngineRun, PassPipeline};
+use crate::runtime::engine::dag::{op_workers_from_env, DagStats};
+use crate::runtime::engine::{
+    CkksBackend, CostModel, Engine, EngineRun, PassPipeline, ScheduleDag,
+};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Table-1 measurement: op counts per HRF **linear** layer (the paper's
@@ -124,6 +128,20 @@ impl LayerCounts {
             Segment::Layer3 => &self.layer3,
             Segment::Extract => &self.extract,
         }
+    }
+}
+
+impl std::ops::AddAssign for LayerCounts {
+    /// Bucket-wise accumulation — how the op-parallel driver merges
+    /// each worker's locally-metered segment counts into one
+    /// [`LayerCounts`] equal to the serial measurement.
+    fn add_assign(&mut self, o: LayerCounts) {
+        self.layer1 += o.layer1;
+        self.layer2 += o.layer2;
+        self.layer3 += o.layer3;
+        self.activations += o.activations;
+        self.pack += o.pack;
+        self.extract += o.extract;
     }
 }
 
@@ -281,8 +299,22 @@ pub struct HrfServer {
     /// schedule analogue of `pt_cache`. Cached schedules are already
     /// pass-optimized.
     schedules: Mutex<HashMap<(usize, bool), Arc<HrfSchedule>>>,
+    /// Hazard-DAG cache, same key as `schedules` (a DAG is derived
+    /// from the cached pass-optimized schedule on first parallel use).
+    dags: Mutex<HashMap<(usize, bool), Arc<ScheduleDag>>>,
     /// Optimization passes applied to every compiled schedule.
     passes: PassPipeline,
+    /// Op-parallel worker count for [`HrfServer::execute`] (`1` =
+    /// serial engine). Seeded from `CRYPTOTREE_OP_WORKERS`; overridden
+    /// by `CoordinatorConfig::op_workers`.
+    op_workers: AtomicUsize,
+    /// Ready-queue cost weights for the DAG driver. Starts at the
+    /// static table; every [`HrfServer::execute_profiled`] re-seeds it
+    /// from the measured `OpProfile` (the profile-feedback loop).
+    cost_model: Mutex<CostModel>,
+    /// Shared checkout pool of per-worker `Scratch` buffer pools, so
+    /// DAG workers keep warm limb buffers across requests.
+    scratch_pool: ScratchPool,
 }
 
 /// Cache operand ids.
@@ -315,8 +347,23 @@ impl HrfServer {
             model,
             pt_cache: Mutex::new(HashMap::new()),
             schedules: Mutex::new(HashMap::new()),
+            dags: Mutex::new(HashMap::new()),
             passes,
+            op_workers: AtomicUsize::new(op_workers_from_env()),
+            cost_model: Mutex::new(CostModel::static_default()),
+            scratch_pool: ScratchPool::new(),
         }
+    }
+
+    /// Set the op-parallel worker count (`1` = serial engine; clamped
+    /// to ≥ 1). Outputs are bit-identical at every setting.
+    pub fn set_op_workers(&self, workers: usize) {
+        self.op_workers.store(workers.max(1), Ordering::Relaxed);
+    }
+
+    /// Current op-parallel worker count.
+    pub fn op_workers(&self) -> usize {
+        self.op_workers.load(Ordering::Relaxed)
     }
 
     /// Encode-with-cache. `scale` is quantized to bits for the key
@@ -376,10 +423,41 @@ impl HrfServer {
             .clone()
     }
 
+    /// The hazard dependency DAG of [`schedule(b, fold)`]
+    /// (`HrfServer::schedule`), built on first use and cached under the
+    /// same normalized key.
+    pub fn dag(&self, b: usize, fold: bool) -> Arc<ScheduleDag> {
+        let b = b.clamp(1, self.model.plan.groups);
+        let fold = fold || b == 1;
+        if let Some(d) = lock_unpoisoned(&self.dags).get(&(b, fold)) {
+            return d.clone();
+        }
+        // Build outside the dags lock: schedule() takes its own lock
+        // and DAG construction is the slow part.
+        let dag = Arc::new(ScheduleDag::build(&self.schedule(b, fold)));
+        lock_unpoisoned(&self.dags)
+            .entry((b, fold))
+            .or_insert(dag)
+            .clone()
+    }
+
+    /// DAG shape (ops / waves / width) for a batch size — what the
+    /// coordinator stamps into its metrics gauges.
+    pub fn dag_stats(&self, b: usize, fold: bool) -> DagStats {
+        self.dag(b, fold).stats()
+    }
+
     /// Execute an encrypted request through the schedule engine: look
     /// up (or compile + optimize) the schedule matching the request's
     /// batch size and contract, then replay it on a [`CkksBackend`]
     /// bound to this server, the evaluator and the session keys.
+    ///
+    /// With [`op_workers`](HrfServer::op_workers) `> 1` the replay
+    /// goes through the op-parallel DAG driver
+    /// ([`Engine::run_parallel`]) instead of the serial loop — the
+    /// outputs (and the measured counts) are bit-identical either way,
+    /// at any `op_workers × ckks_workers` combination; a worker panic
+    /// is re-raised here exactly as the serial path would raise it.
     ///
     /// This is the single encrypted entry point; the legacy
     /// `eval` / `eval_batch` / `eval_batch_folded` names are thin
@@ -398,10 +476,55 @@ impl HrfServer {
             req.cts.len(),
             self.model.plan.groups
         );
+        let workers = self.op_workers();
+        if workers > 1 {
+            return self.execute_parallel(ev, enc, req, rlk, gk, workers);
+        }
         let sched = self.schedule(req.cts.len(), req.fold);
-        let mut backend = CkksBackend::new(self, ev, enc, req.cts, rlk, gk);
+        let mut backend = CkksBackend::new(self, ev.split_off(), enc, req.cts, rlk, gk);
         let EngineRun { regs, counts } = Engine::run(&sched, &mut backend);
+        ev.merge(backend.into_evaluator());
         self.collect_outputs(&sched, regs, counts)
+    }
+
+    /// The op-parallel execution path: replay the schedule's hazard
+    /// DAG across `workers` threads, each owning a [`CkksBackend`]
+    /// with its own evaluator and a `Scratch` pool checked out of the
+    /// server's [`ScratchPool`]. Worker op counters merge back into
+    /// `ev` (its monotone totals advance exactly as the serial path's
+    /// would) and warm scratch buffers return to the pool.
+    fn execute_parallel(
+        &self,
+        ev: &mut Evaluator,
+        enc: &Encoder,
+        req: &EncRequest<'_>,
+        rlk: &RelinKey,
+        gk: &GaloisKeys,
+        workers: usize,
+    ) -> EncExecution {
+        let sched = self.schedule(req.cts.len(), req.fold);
+        let dag = self.dag(req.cts.len(), req.fold);
+        let cost = lock_unpoisoned(&self.cost_model).clone();
+        let ctx = ev.ctx.clone();
+        let run = Engine::run_parallel(&sched, &dag, &cost, workers, |_w| {
+            let wev = Evaluator::with_scratch(ctx.clone(), self.scratch_pool.checkout());
+            CkksBackend::new(self, wev, enc, req.cts, rlk, gk)
+        });
+        match run {
+            Ok((EngineRun { regs, counts }, backends)) => {
+                for backend in backends {
+                    let wev = backend.into_evaluator();
+                    ev.counts += wev.counts;
+                    self.scratch_pool.restore(wev.into_scratch());
+                }
+                self.collect_outputs(&sched, regs, counts)
+            }
+            // Parity with the serial engine's failure mode: a panic
+            // inside an op propagates to the caller (the coordinator's
+            // worker supervision catches it). The typed error surface
+            // is `Engine::run_parallel` for callers that want it.
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// [`HrfServer::execute`] with the CKKS backend wrapped in the
@@ -432,9 +555,13 @@ impl HrfServer {
             self.model.plan.groups
         );
         let sched = self.schedule(req.cts.len(), req.fold);
-        let inner = CkksBackend::new(self, ev, enc, req.cts, rlk, gk);
+        let inner = CkksBackend::new(self, ev.split_off(), enc, req.cts, rlk, gk);
         let mut backend = TimingBackend::new(inner, profile);
         let EngineRun { regs, counts } = Engine::run(&sched, &mut backend);
+        ev.merge(backend.into_inner().into_evaluator());
+        // Feed the measured per-kind means back into the DAG driver's
+        // ready-queue priorities (the ROADMAP's profile-feedback loop).
+        *lock_unpoisoned(&self.cost_model) = CostModel::from_profile(profile);
         self.collect_outputs(&sched, regs, counts)
     }
 

@@ -393,6 +393,9 @@ fn put_metrics_snapshot(buf: &mut Vec<u8>, s: &MetricsSnapshot) {
     put_duration_us(buf, s.plain_service_mean);
     put_u64(buf, s.traces_recorded);
     put_u64(buf, s.traces_dropped);
+    put_u64(buf, s.dag_ops);
+    put_u64(buf, s.dag_waves);
+    put_u64(buf, s.dag_width);
 }
 
 fn get_metrics_snapshot(r: &mut ByteReader<'_>) -> Result<MetricsSnapshot, CodecError> {
@@ -432,6 +435,9 @@ fn get_metrics_snapshot(r: &mut ByteReader<'_>) -> Result<MetricsSnapshot, Codec
         plain_service_mean: get_duration_us(r)?,
         traces_recorded: r.get_u64()?,
         traces_dropped: r.get_u64()?,
+        dag_ops: r.get_u64()?,
+        dag_waves: r.get_u64()?,
+        dag_width: r.get_u64()?,
     })
 }
 

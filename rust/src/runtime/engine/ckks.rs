@@ -16,12 +16,14 @@ use crate::ckks::{Ciphertext, Encoder};
 use crate::hrf::schedule::PlainOperand;
 use crate::hrf::server::HrfServer;
 
-/// Homomorphic backend: one evaluation session's worth of borrowed
-/// state. Key material (`rlk`, `gk`) belongs to the client session;
-/// the server contributes the packed model and its plaintext cache.
+/// Homomorphic backend: one evaluation session's worth of state. The
+/// backend **owns** its [`Evaluator`] (counters + scratch pool) so a
+/// DAG worker is a self-contained `Send` unit; key material (`rlk`,
+/// `gk`) belongs to the client session and the server contributes the
+/// packed model and its plaintext cache by shared reference.
 pub struct CkksBackend<'a> {
     server: &'a HrfServer,
-    ev: &'a mut Evaluator,
+    ev: Evaluator,
     enc: &'a Encoder,
     inputs: &'a [Ciphertext],
     rlk: &'a RelinKey,
@@ -31,7 +33,7 @@ pub struct CkksBackend<'a> {
 impl<'a> CkksBackend<'a> {
     pub fn new(
         server: &'a HrfServer,
-        ev: &'a mut Evaluator,
+        ev: Evaluator,
         enc: &'a Encoder,
         inputs: &'a [Ciphertext],
         rlk: &'a RelinKey,
@@ -45,6 +47,12 @@ impl<'a> CkksBackend<'a> {
             rlk,
             gk,
         }
+    }
+
+    /// Retire the backend, handing back the evaluator (accumulated
+    /// counters + warm scratch) to be merged into the caller's.
+    pub fn into_evaluator(self) -> Evaluator {
+        self.ev
     }
 }
 

@@ -1,0 +1,803 @@
+//! Schedule-DAG parallel execution: lift the linear register IR into
+//! an explicit dependency DAG and run independent HE ops concurrently.
+//!
+//! The compiled [`HrfSchedule`] is a straight-line register program;
+//! [`Engine::run`] replays it op-by-op on one thread, so the per-class
+//! layer-3 chains (mask → rescale → grouped reduce → bias, fully
+//! independent across classes) serialize while the limb-parallel
+//! kernels (`CRYPTOTREE_CKKS_WORKERS`) idle between ops. This module
+//! adds the second parallelism axis:
+//!
+//! * [`ScheduleDag::build`] derives the def/use graph from
+//!   [`ScheduleOp`] register operands. Locations are registers *and*
+//!   per-register hoist slots (a `Hoist` writes the hoist slot,
+//!   `RotateHoisted`/`ExtractScore` read it), and edges are exactly
+//!   the RAW/WAR/WAW hazards — no segment barriers. `RotateSumGrouped`
+//!   fan-in and the `AddAssign` accumulation chains are already
+//!   serialized by their register hazards (every `AddAssign` is a
+//!   read-modify-write of **both** operands — the CKKS backend adopts
+//!   the accumulator's scale into `src`), which is what makes the
+//!   parallel replay *bit-identical* to the serial one: every op sees
+//!   precisely the operand values program order would hand it, and the
+//!   f64 accumulation order never changes.
+//! * [`Engine::run_parallel`] is a work-stealing-free dependency-
+//!   counting driver: a scoped pool of `op_workers` threads pops ready
+//!   ops off a shared priority queue, executes them against a
+//!   per-location `RwLock` register file, and decrements successor
+//!   in-degrees. Each worker owns its own backend (its own
+//!   `Evaluator` + `Scratch` pool for CKKS), so the op hot path takes
+//!   no lock a hazard edge hasn't already made uncontended.
+//! * [`CostModel`] supplies the ready-queue priority: longest
+//!   critical-path-to-exit first, with per-op costs seeded either from
+//!   static weights or from a measured [`OpProfile`] (the PR-7
+//!   `TimingBackend` table) — the ROADMAP's profile-feedback loop.
+//!
+//! A panicking worker is surfaced as a typed
+//! [`DagExecError::WorkerPanic`] — never a hang: the panic is caught,
+//! every worker is woken, and the driver returns the error.
+
+use super::core::{Engine, EngineRun, ScheduleBackend};
+use crate::hrf::schedule::{HrfSchedule, ScheduleOp, Segment};
+use crate::hrf::server::LayerCounts;
+use crate::lockutil::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
+use crate::obs::{OpKind, OpProfile};
+use std::collections::{BTreeMap, BinaryHeap};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, RwLock};
+
+/// Environment variable selecting the op-parallel worker count
+/// (`1` = serial). Read once per `HrfServer`; see also
+/// `CoordinatorConfig::op_workers`.
+pub const OP_WORKERS_ENV: &str = "CRYPTOTREE_OP_WORKERS";
+
+/// The `CRYPTOTREE_OP_WORKERS` setting (defaults to 1 = serial;
+/// clamped to ≥ 1).
+pub fn op_workers_from_env() -> usize {
+    std::env::var(OP_WORKERS_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Which locations one [`ScheduleOp`] reads and writes. Locations are
+/// `reg` (register file) and `n_regs + reg` (the register's hoist
+/// slot); an in-place update lists its register under `writes` only —
+/// the WAW edge to the previous writer carries the read dependency.
+struct OpAccess {
+    /// Locations read without modification.
+    reads: Vec<usize>,
+    /// Locations written (pure defs *and* read-modify-writes).
+    writes: Vec<usize>,
+}
+
+/// Classify `op`'s register/hoist-slot accesses.
+///
+/// `AddAssign` writes **both** operands: the CKKS backend mutates
+/// `src` too (scale adoption), so treating `src` as a pure read would
+/// let a concurrent reader observe the mutation. Everything in-place
+/// (`SubPlain`, `AddPlain`, `AddConst`, `Rescale`) is a write of its
+/// register.
+fn op_access(op: &ScheduleOp, n_regs: usize) -> OpAccess {
+    let hoist = |r: usize| n_regs + r;
+    match *op {
+        ScheduleOp::LoadInput { dst, .. } => OpAccess {
+            reads: vec![],
+            writes: vec![dst],
+        },
+        ScheduleOp::Rotate { dst, src, .. }
+        | ScheduleOp::MulPlainCached { dst, src, .. }
+        | ScheduleOp::MulPlainRescale { dst, src, .. }
+        | ScheduleOp::PolyActivation { dst, src }
+        | ScheduleOp::RotateSumGrouped { dst, src, .. } => OpAccess {
+            reads: vec![src],
+            writes: vec![dst],
+        },
+        ScheduleOp::Hoist { src } => OpAccess {
+            reads: vec![src],
+            writes: vec![hoist(src)],
+        },
+        ScheduleOp::RotateHoisted { dst, src, .. } | ScheduleOp::ExtractScore { dst, src, .. } => {
+            OpAccess {
+                reads: vec![src, hoist(src)],
+                writes: vec![dst],
+            }
+        }
+        ScheduleOp::AddAssign { dst, src } => OpAccess {
+            reads: vec![],
+            writes: vec![dst, src],
+        },
+        ScheduleOp::SubPlain { reg, .. }
+        | ScheduleOp::AddPlain { reg, .. }
+        | ScheduleOp::AddConst { reg, .. }
+        | ScheduleOp::Rescale { reg } => OpAccess {
+            reads: vec![],
+            writes: vec![reg],
+        },
+    }
+}
+
+/// The [`ScheduleBackend`] method an op dispatches to — the key the
+/// [`CostModel`] (and the `TimingBackend` profile it is seeded from)
+/// uses. `ExtractScore` executes as a hoisted rotation.
+pub fn op_kind(op: &ScheduleOp) -> OpKind {
+    match op {
+        ScheduleOp::LoadInput { .. } => OpKind::LoadInput,
+        ScheduleOp::Rotate { .. } => OpKind::Rotate,
+        ScheduleOp::Hoist { .. } => OpKind::Hoist,
+        ScheduleOp::RotateHoisted { .. } | ScheduleOp::ExtractScore { .. } => OpKind::RotateHoisted,
+        ScheduleOp::AddAssign { .. } => OpKind::AddAssign,
+        ScheduleOp::SubPlain { .. } => OpKind::SubPlain,
+        ScheduleOp::AddPlain { .. } => OpKind::AddPlain,
+        ScheduleOp::MulPlainCached { .. } => OpKind::MulPlainCached,
+        ScheduleOp::MulPlainRescale { .. } => OpKind::MulPlainRescale,
+        ScheduleOp::AddConst { .. } => OpKind::AddConst,
+        ScheduleOp::Rescale { .. } => OpKind::Rescale,
+        ScheduleOp::PolyActivation { .. } => OpKind::PolyActivation,
+        ScheduleOp::RotateSumGrouped { .. } => OpKind::RotateSumGrouped,
+    }
+}
+
+/// Shape summary of one schedule's DAG (stamped into coordinator
+/// metrics and printed by benches).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DagStats {
+    /// Total ops (DAG nodes).
+    pub ops: usize,
+    /// Critical-path length in waves (serial schedule ⇒ `ops`).
+    pub waves: usize,
+    /// Widest wave — the op-parallelism the schedule actually exposes.
+    pub width: usize,
+}
+
+/// The dependency DAG of one compiled schedule: hazard edges over
+/// registers and hoist slots. Node `i` is `sched.ops[i]`; every edge
+/// points forward in program order, so program order is a topological
+/// order and the wave levels come out of one forward pass.
+pub struct ScheduleDag {
+    /// Hazard predecessors per op (deduplicated, ascending).
+    pub preds: Vec<Vec<usize>>,
+    /// Hazard successors per op (ascending).
+    pub succs: Vec<Vec<usize>>,
+    /// Dataflow depth: `wave[i] = 1 + max(wave[preds])`, roots at 0.
+    pub wave: Vec<usize>,
+    /// Number of waves (critical-path length).
+    pub waves: usize,
+    /// Maximum ops in any one wave.
+    pub width: usize,
+}
+
+impl ScheduleDag {
+    /// Build the hazard DAG for `sched`.
+    pub fn build(sched: &HrfSchedule) -> Self {
+        let n = sched.ops.len();
+        let n_loc = 2 * sched.n_regs;
+        let mut last_writer: Vec<Option<usize>> = vec![None; n_loc];
+        let mut readers: Vec<Vec<usize>> = vec![Vec::new(); n_loc];
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+
+        for (i, (_, op)) in sched.ops.iter().enumerate() {
+            let acc = op_access(op, sched.n_regs);
+            let mut p: Vec<usize> = Vec::new();
+            // RAW: reads depend on the location's last writer.
+            for &loc in &acc.reads {
+                if let Some(w) = last_writer[loc] {
+                    p.push(w);
+                }
+                readers[loc].push(i);
+            }
+            // WAW from the last writer (for an in-place op this *is*
+            // the read dependency) and WAR from every standing reader.
+            for &loc in &acc.writes {
+                if let Some(w) = last_writer[loc] {
+                    p.push(w);
+                }
+                for &r in &readers[loc] {
+                    if r != i {
+                        p.push(r);
+                    }
+                }
+                last_writer[loc] = Some(i);
+                readers[loc].clear();
+            }
+            p.sort_unstable();
+            p.dedup();
+            for &w in &p {
+                debug_assert!(w < i, "hazard edge must point forward");
+                succs[w].push(i);
+            }
+            preds[i] = p;
+        }
+
+        let mut wave = vec![0usize; n];
+        for i in 0..n {
+            wave[i] = preds[i].iter().map(|&p| wave[p] + 1).max().unwrap_or(0);
+        }
+        let waves = wave.iter().map(|&w| w + 1).max().unwrap_or(0);
+        let mut per_wave = vec![0usize; waves];
+        for &w in &wave {
+            per_wave[w] += 1;
+        }
+        let width = per_wave.iter().copied().max().unwrap_or(0);
+
+        ScheduleDag {
+            preds,
+            succs,
+            wave,
+            waves,
+            width,
+        }
+    }
+
+    pub fn stats(&self) -> DagStats {
+        DagStats {
+            ops: self.preds.len(),
+            waves: self.waves,
+            width: self.width,
+        }
+    }
+
+    /// Total hazard edges.
+    pub fn edges(&self) -> usize {
+        self.preds.iter().map(Vec::len).sum()
+    }
+
+    /// Structural well-formedness: every edge forward (⇒ acyclic),
+    /// `preds`/`succs` mutually consistent, every node wave-labelled
+    /// consistently with its predecessors (⇒ every op is scheduled in
+    /// some wave and reachable from the root set).
+    pub fn validate(&self, sched: &HrfSchedule) -> Result<(), String> {
+        let n = self.preds.len();
+        if n != sched.ops.len() {
+            return Err(format!("{} nodes for {} ops", n, sched.ops.len()));
+        }
+        for (i, ps) in self.preds.iter().enumerate() {
+            for &p in ps {
+                if p >= i {
+                    return Err(format!("edge {p} -> {i} not forward"));
+                }
+                if !self.succs[p].contains(&i) {
+                    return Err(format!("succs[{p}] missing {i}"));
+                }
+                if self.wave[i] <= self.wave[p] {
+                    return Err(format!(
+                        "wave[{i}]={} not after wave[{p}]={}",
+                        self.wave[i], self.wave[p]
+                    ));
+                }
+            }
+            if ps.is_empty() && self.wave[i] != 0 {
+                return Err(format!("root {i} at wave {}", self.wave[i]));
+            }
+        }
+        for (i, ss) in self.succs.iter().enumerate() {
+            for &s in ss {
+                if !self.preds[s].contains(&i) {
+                    return Err(format!("preds[{s}] missing {i}"));
+                }
+            }
+        }
+        if self.wave.iter().any(|&w| w >= self.waves) {
+            return Err("wave label beyond wave count".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-[`OpKind`] cost weights driving the ready-queue priority
+/// (longest critical path to exit first).
+///
+/// [`CostModel::static_default`] carries hand-seeded relative weights
+/// (nanosecond-shaped, from the PR-7 profile tables on the demo
+/// parameter sets); [`CostModel::from_profile`] replaces them with
+/// *measured* per-kind means from an [`OpProfile`], closing the
+/// profile-feedback loop: a profiled run re-seeds the priorities every
+/// later parallel run uses.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    cost: BTreeMap<OpKind, u64>,
+}
+
+impl CostModel {
+    /// Hand-seeded relative weights. Magnitudes only need to rank:
+    /// activation ≫ key-switch chains ≫ hoisted rotate ≫ plain mul ≫
+    /// rescale ≫ additive ops.
+    pub fn static_default() -> Self {
+        let mut cost = BTreeMap::new();
+        cost.insert(OpKind::PolyActivation, 4000);
+        cost.insert(OpKind::RotateSumGrouped, 2500);
+        cost.insert(OpKind::Rotate, 1000);
+        cost.insert(OpKind::Hoist, 900);
+        cost.insert(OpKind::RotateHoisted, 400);
+        cost.insert(OpKind::MulPlainRescale, 250);
+        cost.insert(OpKind::MulPlainCached, 150);
+        cost.insert(OpKind::Rescale, 120);
+        cost.insert(OpKind::SubPlain, 30);
+        cost.insert(OpKind::AddPlain, 30);
+        cost.insert(OpKind::AddConst, 30);
+        cost.insert(OpKind::AddAssign, 20);
+        cost.insert(OpKind::LoadInput, 10);
+        cost.insert(OpKind::ReadScore, 1);
+        CostModel { cost }
+    }
+
+    /// Seed from a measured profile: per-kind mean nanoseconds,
+    /// aggregated across segments weighted by call count. Kinds the
+    /// profile never saw keep the static weight.
+    pub fn from_profile(profile: &OpProfile) -> Self {
+        let mut calls: BTreeMap<OpKind, u64> = BTreeMap::new();
+        let mut nanos: BTreeMap<OpKind, u64> = BTreeMap::new();
+        for (&(_, kind), cell) in profile.cells() {
+            *calls.entry(kind).or_default() += cell.calls;
+            *nanos.entry(kind).or_default() +=
+                cell.nanos.mean_value().saturating_mul(cell.calls);
+        }
+        let mut model = CostModel::static_default();
+        for (kind, c) in calls {
+            if c > 0 {
+                model.cost.insert(kind, (nanos[&kind] / c).max(1));
+            }
+        }
+        model
+    }
+
+    /// Cost weight for one op kind (0 if unknown — only possible for a
+    /// hand-built model).
+    pub fn cost(&self, kind: OpKind) -> u64 {
+        self.cost.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// Critical-path-to-exit priority per op: `prio[i] = cost(i) +
+    /// max(prio[succs])`. Popping the largest first keeps the longest
+    /// dependent chain moving while shorter side-chains fill the
+    /// remaining workers.
+    pub fn priorities(&self, sched: &HrfSchedule, dag: &ScheduleDag) -> Vec<u64> {
+        let n = sched.ops.len();
+        let mut prio = vec![0u64; n];
+        for i in (0..n).rev() {
+            let tail = dag.succs[i].iter().map(|&s| prio[s]).max().unwrap_or(0);
+            prio[i] = self.cost(op_kind(&sched.ops[i].1)) + tail;
+        }
+        prio
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::static_default()
+    }
+}
+
+/// Typed failure of a parallel run. The driver guarantees an `Err` is
+/// returned (all workers joined) rather than a hang or an abort.
+#[derive(Debug)]
+pub enum DagExecError {
+    /// A worker panicked executing op `op`; `message` carries the
+    /// panic payload when it was a string.
+    WorkerPanic { op: usize, message: String },
+}
+
+impl fmt::Display for DagExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DagExecError::WorkerPanic { op, message } => {
+                write!(f, "DAG worker panicked at op {op}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DagExecError {}
+
+/// Ready-queue entry: max-heap on priority, ties to the lowest op
+/// index (program order).
+#[derive(PartialEq, Eq)]
+struct ReadyOp {
+    prio: u64,
+    idx: usize,
+}
+
+impl Ord for ReadyOp {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.prio
+            .cmp(&other.prio)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for ReadyOp {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Shared driver state: the ready heap behind one mutex+condvar, the
+/// per-op in-degree counters, and the first-failure slot.
+struct DriverState {
+    ready: Mutex<BinaryHeap<ReadyOp>>,
+    cv: Condvar,
+    indegree: Vec<AtomicU32>,
+    remaining: AtomicUsize,
+    aborted: AtomicBool,
+    failure: Mutex<Option<DagExecError>>,
+}
+
+impl DriverState {
+    /// Pop the next ready op, blocking until one exists, the run
+    /// drains, or a failure aborts it. `None` = stop.
+    fn next_op(&self) -> Option<usize> {
+        let mut q = lock_unpoisoned(&self.ready);
+        loop {
+            let done = self.remaining.load(Ordering::Acquire) == 0;
+            if done || self.aborted.load(Ordering::Acquire) {
+                return None;
+            }
+            if let Some(op) = q.pop() {
+                return Some(op.idx);
+            }
+            q = self
+                .cv
+                .wait(q)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Record completion of `idx`: release successors whose in-degree
+    /// drains, then wake waiters.
+    fn complete(&self, idx: usize, dag: &ScheduleDag, prio: &[u64]) {
+        let mut released: Vec<ReadyOp> = Vec::new();
+        for &s in &dag.succs[idx] {
+            if self.indegree[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                released.push(ReadyOp {
+                    prio: prio[s],
+                    idx: s,
+                });
+            }
+        }
+        let drained = self.remaining.fetch_sub(1, Ordering::AcqRel) == 1;
+        if !released.is_empty() {
+            let mut q = lock_unpoisoned(&self.ready);
+            for r in released {
+                q.push(r);
+            }
+            drop(q);
+            self.cv.notify_all();
+        } else if drained {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Record a worker panic and abort the run.
+    fn fail(&self, idx: usize, payload: Box<dyn std::any::Any + Send>) {
+        let message = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".into());
+        let mut slot = lock_unpoisoned(&self.failure);
+        if slot.is_none() {
+            *slot = Some(DagExecError::WorkerPanic { op: idx, message });
+        }
+        drop(slot);
+        self.aborted.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Execute one op against the shared lock-per-location register file.
+/// Hazard edges guarantee every lock here is uncontended against
+/// writers (concurrent *readers* of one register are fine and do
+/// share read locks).
+fn exec_op<B: ScheduleBackend>(
+    backend: &mut B,
+    op: &ScheduleOp,
+    regs: &[RwLock<Option<B::Value>>],
+    hoists: &[RwLock<Option<B::Hoisted>>],
+) {
+    // One-register transforms share the dst==src handling: an in-place
+    // rewrite takes a single write lock; the two-register form computes
+    // under a read lock and stores under the write lock.
+    macro_rules! unary {
+        ($dst:expr, $src:expr, $f:expr) => {{
+            let (dst, src) = ($dst, $src);
+            if dst == src {
+                let mut g = write_unpoisoned(&regs[dst]);
+                let r = $f(&mut *backend, g.as_ref().expect("reg"));
+                *g = Some(r);
+            } else {
+                let r = {
+                    let g = read_unpoisoned(&regs[src]);
+                    $f(&mut *backend, g.as_ref().expect("reg"))
+                };
+                *write_unpoisoned(&regs[dst]) = Some(r);
+            }
+        }};
+    }
+    match *op {
+        ScheduleOp::LoadInput { dst, input } => {
+            let v = backend.load_input(input);
+            *write_unpoisoned(&regs[dst]) = Some(v);
+        }
+        ScheduleOp::Rotate { dst, src, step } => {
+            unary!(dst, src, |b: &mut B, v: &B::Value| b.rotate(v, step))
+        }
+        ScheduleOp::Hoist { src } => {
+            let h = {
+                let g = read_unpoisoned(&regs[src]);
+                backend.hoist(g.as_ref().expect("reg"))
+            };
+            *write_unpoisoned(&hoists[src]) = Some(h);
+        }
+        ScheduleOp::RotateHoisted { dst, src, step }
+        | ScheduleOp::ExtractScore {
+            dst,
+            src,
+            slot: step,
+        } => {
+            let hg = read_unpoisoned(&hoists[src]);
+            let h = hg.as_ref().expect("hoisted register");
+            unary!(dst, src, |b: &mut B, v: &B::Value| b
+                .rotate_hoisted(v, h, step))
+        }
+        ScheduleOp::AddAssign { dst, src } => {
+            assert_ne!(dst, src, "aliasing register pair");
+            // Lock in index order; both locks are uncontended (hazard
+            // edges order every other toucher of either register).
+            let (mut a, mut b) = if dst < src {
+                let a = write_unpoisoned(&regs[dst]);
+                let b = write_unpoisoned(&regs[src]);
+                (a, b)
+            } else {
+                let b = write_unpoisoned(&regs[src]);
+                let a = write_unpoisoned(&regs[dst]);
+                (a, b)
+            };
+            backend.add_assign(a.as_mut().expect("reg"), b.as_mut().expect("reg"));
+        }
+        ScheduleOp::SubPlain { reg, operand } => {
+            let mut g = write_unpoisoned(&regs[reg]);
+            backend.sub_plain(g.as_mut().expect("reg"), operand);
+        }
+        ScheduleOp::AddPlain { reg, operand } => {
+            let mut g = write_unpoisoned(&regs[reg]);
+            backend.add_plain(g.as_mut().expect("reg"), operand);
+        }
+        ScheduleOp::MulPlainCached { dst, src, operand } => {
+            unary!(dst, src, |b: &mut B, v: &B::Value| b
+                .mul_plain_cached(v, operand))
+        }
+        ScheduleOp::MulPlainRescale { dst, src, operand } => {
+            unary!(dst, src, |b: &mut B, v: &B::Value| b
+                .mul_plain_rescale(v, operand))
+        }
+        ScheduleOp::AddConst { reg, value } => {
+            let mut g = write_unpoisoned(&regs[reg]);
+            backend.add_const(g.as_mut().expect("reg"), value);
+        }
+        ScheduleOp::Rescale { reg } => {
+            let mut g = write_unpoisoned(&regs[reg]);
+            backend.rescale(g.as_mut().expect("reg"));
+        }
+        ScheduleOp::PolyActivation { dst, src } => {
+            unary!(dst, src, |b: &mut B, v: &B::Value| b.poly_activation(v))
+        }
+        ScheduleOp::RotateSumGrouped { dst, src, span } => {
+            unary!(dst, src, |b: &mut B, v: &B::Value| b
+                .rotate_sum_grouped(v, span))
+        }
+    }
+}
+
+impl Engine {
+    /// Replay `sched` with `workers` op-parallel threads, each driving
+    /// its own backend from `factory` (called once per worker with the
+    /// worker index). Returns the final register file + per-segment
+    /// counts (exactly as [`Engine::run`] would) plus the retired
+    /// worker backends so callers can reclaim their state (evaluator
+    /// counters, scratch pools).
+    ///
+    /// Semantics are identical to the serial interpreter — hazard
+    /// edges reproduce program-order operand visibility op for op, so
+    /// for deterministic backends the outputs are **bit-identical** at
+    /// any worker count. Panics inside ops are caught and surfaced as
+    /// [`DagExecError::WorkerPanic`].
+    pub fn run_parallel<B, F>(
+        sched: &HrfSchedule,
+        dag: &ScheduleDag,
+        cost: &CostModel,
+        workers: usize,
+        factory: F,
+    ) -> Result<(EngineRun<B>, Vec<B>), DagExecError>
+    where
+        B: ScheduleBackend + Send,
+        B::Value: Send + Sync,
+        B::Hoisted: Send + Sync,
+        F: Fn(usize) -> B + Sync,
+    {
+        let n = sched.ops.len();
+        debug_assert_eq!(dag.preds.len(), n, "DAG built for a different schedule");
+        let workers = workers.clamp(1, n.max(1));
+        let prio = cost.priorities(sched, dag);
+
+        let regs: Vec<RwLock<Option<B::Value>>> =
+            (0..sched.n_regs).map(|_| RwLock::new(None)).collect();
+        let hoists: Vec<RwLock<Option<B::Hoisted>>> =
+            (0..sched.n_regs).map(|_| RwLock::new(None)).collect();
+
+        let mut heap = BinaryHeap::new();
+        for (i, ps) in dag.preds.iter().enumerate() {
+            if ps.is_empty() {
+                heap.push(ReadyOp {
+                    prio: prio[i],
+                    idx: i,
+                });
+            }
+        }
+        let state = DriverState {
+            ready: Mutex::new(heap),
+            cv: Condvar::new(),
+            indegree: dag
+                .preds
+                .iter()
+                .map(|p| AtomicU32::new(p.len() as u32))
+                .collect(),
+            remaining: AtomicUsize::new(n),
+            aborted: AtomicBool::new(false),
+            failure: Mutex::new(None),
+        };
+
+        let mut counts = LayerCounts::default();
+        let mut backends: Vec<B> = Vec::with_capacity(workers);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let state = &state;
+                let regs = &regs;
+                let hoists = &hoists;
+                let prio = &prio;
+                let factory = &factory;
+                handles.push(scope.spawn(move || {
+                    let mut backend = factory(w);
+                    let mut local = LayerCounts::default();
+                    while let Some(idx) = state.next_op() {
+                        let (seg, op) = &sched.ops[idx];
+                        backend.on_segment(*seg);
+                        let before = backend.op_counts();
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            exec_op(&mut backend, op, regs, hoists)
+                        }));
+                        match r {
+                            Ok(()) => {
+                                *local.bucket_mut(*seg) += backend.op_counts().diff(&before);
+                                state.complete(idx, dag, prio);
+                            }
+                            Err(payload) => {
+                                state.fail(idx, payload);
+                                break;
+                            }
+                        }
+                    }
+                    (backend, local)
+                }));
+            }
+            for h in handles {
+                // A worker's closure only exits through the loop above,
+                // so join can only fail if thread spawning itself
+                // failed mid-panic — propagate in that case.
+                let (backend, local) = h.join().expect("DAG worker thread");
+                counts += local;
+                backends.push(backend);
+            }
+        });
+
+        if let Some(err) = lock_unpoisoned(&state.failure).take() {
+            return Err(err);
+        }
+        let regs: Vec<Option<B::Value>> = regs
+            .into_iter()
+            .map(|l| l.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner))
+            .collect();
+        Ok((EngineRun { regs, counts }, backends))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrf::schedule::{PlainOperand, ScheduleOp};
+
+    fn toy_sched(ops: Vec<(Segment, ScheduleOp)>, n_regs: usize) -> HrfSchedule {
+        HrfSchedule {
+            b: 1,
+            folded: true,
+            span: 1,
+            n_regs,
+            ops,
+            outputs: vec![],
+            act_counts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn hazards_capture_raw_war_waw() {
+        use Segment::Layer2 as S;
+        // 0: load r0        1: load r1
+        // 2: r2 = rot r0    3: r0 += r1   (WAR on r0 vs op 2's read)
+        // 4: r2 = mul r0    (WAW on r2 vs 2, RAW on r0 vs 3)
+        let sched = toy_sched(
+            vec![
+                (S, ScheduleOp::LoadInput { dst: 0, input: 0 }),
+                (S, ScheduleOp::LoadInput { dst: 1, input: 1 }),
+                (S, ScheduleOp::Rotate { dst: 2, src: 0, step: 1 }),
+                (S, ScheduleOp::AddAssign { dst: 0, src: 1 }),
+                (
+                    S,
+                    ScheduleOp::MulPlainCached {
+                        dst: 2,
+                        src: 0,
+                        operand: PlainOperand::Thresholds,
+                    },
+                ),
+            ],
+            3,
+        );
+        let dag = ScheduleDag::build(&sched);
+        dag.validate(&sched).unwrap();
+        assert_eq!(dag.preds[2], vec![0]);
+        assert_eq!(dag.preds[3], vec![0, 1, 2]); // WAW r0, WAW r1, WAR vs reader 2
+        assert_eq!(dag.preds[4], vec![2, 3]); // WAW r2, RAW r0
+        assert_eq!(dag.wave, vec![0, 0, 1, 2, 3]);
+        assert_eq!(dag.width, 2);
+    }
+
+    #[test]
+    fn hoist_slots_are_separate_locations() {
+        use Segment::Layer2 as S;
+        // Hoisting r0 must not serialize against an independent def of
+        // r1, but a rotate_hoisted on r0 needs both the hoist and r0.
+        let sched = toy_sched(
+            vec![
+                (S, ScheduleOp::LoadInput { dst: 0, input: 0 }),
+                (S, ScheduleOp::Hoist { src: 0 }),
+                (S, ScheduleOp::LoadInput { dst: 1, input: 1 }),
+                (S, ScheduleOp::RotateHoisted { dst: 1, src: 0, step: 2 }),
+            ],
+            2,
+        );
+        let dag = ScheduleDag::build(&sched);
+        dag.validate(&sched).unwrap();
+        assert_eq!(dag.preds[1], vec![0]);
+        assert!(dag.preds[2].is_empty(), "independent def must be a root");
+        // RAW r0, RAW hoist(r0), WAW r1.
+        assert_eq!(dag.preds[3], vec![0, 1, 2]);
+        assert!(dag.wave[3] > dag.wave[1]);
+    }
+
+    #[test]
+    fn priorities_prefer_long_chains() {
+        use Segment::Act1 as S;
+        // Two roots: op 0 feeds a long activation chain, op 1 is a leaf.
+        let sched = toy_sched(
+            vec![
+                (S, ScheduleOp::LoadInput { dst: 0, input: 0 }),
+                (S, ScheduleOp::LoadInput { dst: 1, input: 1 }),
+                (S, ScheduleOp::PolyActivation { dst: 0, src: 0 }),
+            ],
+            2,
+        );
+        let dag = ScheduleDag::build(&sched);
+        let prio = CostModel::static_default().priorities(&sched, &dag);
+        assert!(prio[0] > prio[1], "chain head must outrank leaf");
+        assert!(prio[0] > prio[2]);
+    }
+
+    #[test]
+    fn env_parse_defaults_to_serial() {
+        // Not set in the test environment unless CI exports it.
+        let w = op_workers_from_env();
+        assert!(w >= 1);
+    }
+}

@@ -55,16 +55,31 @@
 //! them — verified by the cross-backend parity tests in
 //! `tests/engine_parity.rs`. The first pass, [`FuseMulRescale`], fuses
 //! adjacent `MulPlainCached` + `Rescale` pairs into the fused
-//! `MulPlainRescale` op (the ROADMAP's schedule-level fusion item).
+//! `MulPlainRescale` op (the ROADMAP's schedule-level fusion item);
+//! [`ReuseRegisters`] (in [`PassPipeline::aggressive`]) recycles dead
+//! register slots down to the schedule's true live peak.
+//!
+//! # Op-parallel execution
+//!
+//! [`dag`] lifts the linear op list into its hazard dependency DAG
+//! ([`ScheduleDag`]) and adds [`Engine::run_parallel`]: a
+//! dependency-counting scoped-thread driver executing independent ops
+//! concurrently (priority = critical path under a [`CostModel`],
+//! seedable from measured `OpProfile`s), bit-identical to
+//! [`Engine::run`] at any worker count and composing with the
+//! limb-parallel CKKS kernels. See the module docs for the hazard and
+//! determinism argument.
 
 pub mod ckks;
 pub mod core;
 pub mod counting;
+pub mod dag;
 pub mod pass;
 pub mod slots;
 
 pub use self::core::{Engine, EngineRun, ScheduleBackend};
 pub use ckks::CkksBackend;
 pub use counting::CountingBackend;
-pub use pass::{FuseMulRescale, PassPipeline, SchedulePass};
+pub use dag::{CostModel, DagExecError, DagStats, ScheduleDag, OP_WORKERS_ENV};
+pub use pass::{FuseMulRescale, PassPipeline, ReuseRegisters, SchedulePass};
 pub use slots::SlotBackend;

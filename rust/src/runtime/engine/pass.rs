@@ -14,7 +14,7 @@
 //! predictions stay truthful automatically because they are derived
 //! from the transformed op list.
 
-use crate::hrf::schedule::{HrfSchedule, ScheduleOp};
+use crate::hrf::schedule::{HrfSchedule, Reg, ScheduleOp};
 
 /// One in-place schedule rewrite. `Send + Sync` because pipelines live
 /// inside the `Arc`-shared `HrfServer`.
@@ -39,6 +39,15 @@ impl PassPipeline {
     /// The default production pipeline (currently [`FuseMulRescale`]).
     pub fn standard() -> Self {
         PassPipeline::empty().with(FuseMulRescale)
+    }
+
+    /// [`standard`](PassPipeline::standard) plus [`ReuseRegisters`]:
+    /// the footprint-minimizing pipeline for op-parallel execution,
+    /// where concurrent waves hold several live ciphertexts at once
+    /// and every recycled register slot is one fewer resident
+    /// ciphertext per in-flight request.
+    pub fn aggressive() -> Self {
+        PassPipeline::standard().with(ReuseRegisters)
     }
 
     /// Append a pass.
@@ -81,6 +90,176 @@ impl Default for PassPipeline {
 /// pair is metered as a single fused invocation.
 pub struct FuseMulRescale;
 
+/// Liveness-driven register recycling: rename registers so a slot
+/// freed by a value's last use is reused by later defs, shrinking
+/// `HrfSchedule::n_regs` from "one slot per pipeline role" to the
+/// actual peak number of simultaneously-live ciphertexts.
+///
+/// A linear scan over the straight-line program: each *pure* def
+/// (an op that overwrites its `dst` without needing `dst`'s old
+/// value) allocates from a LIFO free list; a value dies — and its
+/// slot is freed — at its last use before the next redefinition (or
+/// at the op that overwrites it unread). In-place ops (`Rescale`,
+/// `AddPlain`, `AddAssign` — which mutates *both* operands) keep
+/// their slot. Hoisted key-switch state is keyed by register index,
+/// and a register's hoist entries are only ever read while the
+/// register itself is live, so renaming keys them consistently.
+///
+/// Dataflow is preserved exactly (same values flow through renamed
+/// slots; a def may land in the slot its own source just vacated,
+/// which every backend executes compute-then-store), so outputs stay
+/// bit-identical — pinned against the serial engine in
+/// `tests/dag_exec_props.rs`. Not part of the standard pipeline: the
+/// role-per-slot layout is load-bearing for schedule-dump readability
+/// and the register-count invariants of existing tests; install via
+/// [`PassPipeline::aggressive`].
+pub struct ReuseRegisters;
+
+/// Per-register liveness events of the original program, positions
+/// ascending. `uses` are reads *and* in-place updates (plus a
+/// virtual use at `ops.len()` for every schedule output); `defs` are
+/// pure defs only.
+struct Liveness {
+    uses: Vec<Vec<usize>>,
+    defs: Vec<Vec<usize>>,
+}
+
+impl Liveness {
+    fn scan(sched: &HrfSchedule) -> Self {
+        let n = sched.ops.len();
+        let mut uses: Vec<Vec<usize>> = vec![Vec::new(); sched.n_regs];
+        let mut defs: Vec<Vec<usize>> = vec![Vec::new(); sched.n_regs];
+        for (i, (_, op)) in sched.ops.iter().enumerate() {
+            match *op {
+                ScheduleOp::LoadInput { dst, .. } => defs[dst].push(i),
+                ScheduleOp::Rotate { dst, src, .. }
+                | ScheduleOp::RotateHoisted { dst, src, .. }
+                | ScheduleOp::ExtractScore { dst, src, .. }
+                | ScheduleOp::MulPlainCached { dst, src, .. }
+                | ScheduleOp::MulPlainRescale { dst, src, .. }
+                | ScheduleOp::PolyActivation { dst, src }
+                | ScheduleOp::RotateSumGrouped { dst, src, .. } => {
+                    uses[src].push(i);
+                    defs[dst].push(i);
+                }
+                ScheduleOp::Hoist { src } => uses[src].push(i),
+                ScheduleOp::AddAssign { dst, src } => {
+                    uses[dst].push(i);
+                    uses[src].push(i);
+                }
+                ScheduleOp::SubPlain { reg, .. }
+                | ScheduleOp::AddPlain { reg, .. }
+                | ScheduleOp::AddConst { reg, .. }
+                | ScheduleOp::Rescale { reg } => uses[reg].push(i),
+            }
+        }
+        for o in &sched.outputs {
+            uses[o.reg].push(n);
+        }
+        Liveness { uses, defs }
+    }
+
+    /// Is the value in `reg` dead right after position `i` — no use
+    /// strictly after `i` before the next pure redefinition?
+    fn dead_after(&self, reg: Reg, i: usize) -> bool {
+        let next = |v: &[usize]| v.iter().copied().find(|&p| p > i);
+        match (next(&self.uses[reg]), next(&self.defs[reg])) {
+            (None, _) => true,
+            (Some(u), Some(d)) => d < u,
+            (Some(_), None) => false,
+        }
+    }
+}
+
+/// Renaming state of the linear scan.
+struct Renamer {
+    live: Liveness,
+    /// old register → currently assigned slot.
+    map: Vec<Option<Reg>>,
+    /// LIFO free slots (LIFO keeps hot ciphertext buffers hot).
+    free: Vec<Reg>,
+    n_new: usize,
+    changed: bool,
+}
+
+impl Renamer {
+    /// Rewrite a read (or in-place) operand and free its slot if this
+    /// was the value's last use.
+    fn use_(&mut self, r: &mut Reg, i: usize) {
+        let old = *r;
+        let slot = self.map[old].expect("read of undefined register");
+        self.changed |= slot != old;
+        *r = slot;
+        if self.live.dead_after(old, i) {
+            self.free.push(self.map[old].take().expect("live slot"));
+        }
+    }
+
+    /// Rewrite a pure def: the incoming value (if any) dies here and
+    /// its slot is immediately reusable — including by this def.
+    fn def(&mut self, r: &mut Reg) {
+        let old = *r;
+        if let Some(slot) = self.map[old].take() {
+            self.free.push(slot);
+        }
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let s = self.n_new;
+            self.n_new += 1;
+            s
+        });
+        self.changed |= slot != old;
+        self.map[old] = Some(slot);
+        *r = slot;
+    }
+}
+
+impl SchedulePass for ReuseRegisters {
+    fn name(&self) -> &'static str {
+        "reuse-registers"
+    }
+
+    fn run(&self, sched: &mut HrfSchedule) -> bool {
+        let mut ren = Renamer {
+            live: Liveness::scan(sched),
+            map: vec![None; sched.n_regs],
+            free: Vec::new(),
+            n_new: 0,
+            changed: false,
+        };
+        for i in 0..sched.ops.len() {
+            let (_, op) = &mut sched.ops[i];
+            match op {
+                ScheduleOp::LoadInput { dst, .. } => ren.def(dst),
+                ScheduleOp::Rotate { dst, src, .. }
+                | ScheduleOp::RotateHoisted { dst, src, .. }
+                | ScheduleOp::ExtractScore { dst, src, .. }
+                | ScheduleOp::MulPlainCached { dst, src, .. }
+                | ScheduleOp::MulPlainRescale { dst, src, .. }
+                | ScheduleOp::PolyActivation { dst, src }
+                | ScheduleOp::RotateSumGrouped { dst, src, .. } => {
+                    ren.use_(src, i);
+                    ren.def(dst);
+                }
+                ScheduleOp::Hoist { src } => ren.use_(src, i),
+                ScheduleOp::AddAssign { dst, src } => {
+                    ren.use_(dst, i);
+                    ren.use_(src, i);
+                }
+                ScheduleOp::SubPlain { reg, .. }
+                | ScheduleOp::AddPlain { reg, .. }
+                | ScheduleOp::AddConst { reg, .. }
+                | ScheduleOp::Rescale { reg } => ren.use_(reg, i),
+            }
+        }
+        for o in &mut sched.outputs {
+            o.reg = ren.map[o.reg].expect("schedule output register live at end");
+        }
+        let changed = ren.changed || ren.n_new != sched.n_regs;
+        sched.n_regs = ren.n_new;
+        changed
+    }
+}
+
 impl SchedulePass for FuseMulRescale {
     fn name(&self) -> &'static str {
         "fuse-mul-rescale"
@@ -112,5 +291,98 @@ impl SchedulePass for FuseMulRescale {
         }
         sched.ops = out;
         changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hrf::schedule::{PlainOperand, ScoreRef, Segment};
+
+    /// A chain with serial-role registers: r0 → r1 → r2, each value
+    /// dead as soon as the next is produced, output in r2.
+    fn chain_sched() -> HrfSchedule {
+        use Segment::Layer2 as S;
+        HrfSchedule {
+            b: 1,
+            folded: true,
+            span: 1,
+            n_regs: 3,
+            ops: vec![
+                (S, ScheduleOp::LoadInput { dst: 0, input: 0 }),
+                (S, ScheduleOp::PolyActivation { dst: 1, src: 0 }),
+                (
+                    S,
+                    ScheduleOp::MulPlainCached {
+                        dst: 2,
+                        src: 1,
+                        operand: PlainOperand::Thresholds,
+                    },
+                ),
+                (S, ScheduleOp::Rescale { reg: 2 }),
+            ],
+            outputs: vec![ScoreRef {
+                class: 0,
+                sample: 0,
+                reg: 2,
+                slot: 0,
+            }],
+            act_counts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn reuse_registers_collapses_dead_chain() {
+        let mut sched = chain_sched();
+        assert!(ReuseRegisters.run(&mut sched));
+        // Every def can recycle its dying source: one slot suffices.
+        assert_eq!(sched.n_regs, 1);
+        assert_eq!(sched.outputs[0].reg, 0);
+        for (_, op) in &sched.ops {
+            match *op {
+                ScheduleOp::LoadInput { dst, .. } => assert_eq!(dst, 0),
+                ScheduleOp::PolyActivation { dst, src } => {
+                    assert_eq!((dst, src), (0, 0));
+                }
+                ScheduleOp::MulPlainCached { dst, src, .. } => {
+                    assert_eq!((dst, src), (0, 0));
+                }
+                ScheduleOp::Rescale { reg } => assert_eq!(reg, 0),
+                ref other => panic!("unexpected op {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_registers_keeps_concurrent_values_apart() {
+        use Segment::Layer2 as S;
+        // r0 stays live across the def of r1 (AddAssign reads both),
+        // so they must keep distinct slots.
+        let mut sched = HrfSchedule {
+            b: 1,
+            folded: true,
+            span: 1,
+            n_regs: 4,
+            ops: vec![
+                (S, ScheduleOp::LoadInput { dst: 0, input: 0 }),
+                (S, ScheduleOp::LoadInput { dst: 1, input: 1 }),
+                (S, ScheduleOp::AddAssign { dst: 0, src: 1 }),
+                (S, ScheduleOp::PolyActivation { dst: 3, src: 0 }),
+            ],
+            outputs: vec![ScoreRef {
+                class: 0,
+                sample: 0,
+                reg: 3,
+                slot: 0,
+            }],
+            act_counts: Default::default(),
+        };
+        assert!(ReuseRegisters.run(&mut sched));
+        assert_eq!(sched.n_regs, 2);
+        let (dst, src) = match sched.ops[2].1 {
+            ScheduleOp::AddAssign { dst, src } => (dst, src),
+            ref other => panic!("unexpected op {other:?}"),
+        };
+        assert_ne!(dst, src, "live operands must stay in distinct slots");
     }
 }

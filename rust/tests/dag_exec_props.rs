@@ -1,0 +1,390 @@
+//! Properties of the schedule-DAG parallel executor (PR 8):
+//!
+//! * **Well-formedness** — on real compiled schedules (every batch
+//!   size, folded and unfolded, every pass pipeline) the hazard DAG is
+//!   acyclic with mutually-consistent edge lists, and an independent
+//!   brute-force hazard oracle confirms every conflicting op pair is
+//!   ordered by a DAG path (register last-use/WAR edges included).
+//! * **Determinism** — `Engine::run_parallel` is *exactly* the serial
+//!   interpreter: bit-identical f32 slot outputs at any worker count,
+//!   and bit-identical ciphertexts from `HrfServer::execute` over the
+//!   full `B × op_workers × ckks_workers × passes` grid.
+//! * **Failure** — a panicking worker surfaces as a typed
+//!   [`DagExecError::WorkerPanic`], never a hang.
+//! * **ReuseRegisters** — the liveness pass shrinks the folded batch
+//!   schedule's register file to its live peak without changing
+//!   results.
+
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
+use cryptotree::hrf::client::{reshuffle_and_pack, HrfClient};
+use cryptotree::hrf::schedule::{HrfSchedule, ScheduleOp};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
+use cryptotree::nrf::{Activation, NeuralForest, NeuralTree};
+use cryptotree::rng::Xoshiro256pp;
+use cryptotree::runtime::engine::{
+    CostModel, DagExecError, Engine, PassPipeline, ReuseRegisters, ScheduleBackend, ScheduleDag,
+    SchedulePass, SlotBackend,
+};
+use cryptotree::runtime::{SlotModelParams, SlotShape};
+use std::sync::Arc;
+
+fn synth_forest(k: usize, l: usize, c: usize, d: usize, rng: &mut Xoshiro256pp) -> NeuralForest {
+    let trees = (0..l)
+        .map(|_| NeuralTree {
+            tau: (0..k - 1).map(|_| rng.next_index(d)).collect(),
+            t: (0..k - 1).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            v: (0..k)
+                .map(|_| (0..k - 1).map(|_| rng.uniform(-0.25, 0.25)).collect())
+                .collect(),
+            b: (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            w: (0..c)
+                .map(|_| (0..k).map(|_| rng.uniform(-0.5, 0.5)).collect())
+                .collect(),
+            beta: (0..c).map(|_| rng.uniform(-0.2, 0.2)).collect(),
+            real_leaves: k,
+            n_classes: c,
+        })
+        .collect();
+    NeuralForest {
+        trees,
+        alphas: (0..l).map(|_| rng.uniform(0.1, 1.0)).collect(),
+        k,
+        n_classes: c,
+        activation: Activation::Poly {
+            coeffs: vec![0.0, 1.0], // identity: fits the depth-4 ring
+        },
+    }
+}
+
+fn ct_bits_equal(a: &Ciphertext, b: &Ciphertext) -> bool {
+    a.level == b.level
+        && a.scale.to_bits() == b.scale.to_bits()
+        && a.c0.data() == b.c0.data()
+        && a.c1.data() == b.c1.data()
+}
+
+fn test_model(seed: u64, l: usize) -> (HrfModel, Arc<CkksParams>) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let nf = synth_forest(4, l, 2, 8, &mut rng);
+    let params = Arc::new(CkksParams::build("dag-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let hm = HrfModel::from_neural_forest(&nf, 8, params.slots()).unwrap();
+    (hm, params)
+}
+
+fn slot_params(hm: &HrfModel) -> SlotModelParams {
+    let plan = hm.plan;
+    SlotModelParams::from_hrf(
+        hm,
+        SlotShape {
+            s: plan.slots,
+            k: plan.k,
+            c: plan.c,
+            m: hm.act_coeffs.len(),
+            b: 8,
+        },
+    )
+    .unwrap()
+}
+
+fn slot_inputs(hm: &HrfModel, b: usize, rng: &mut Xoshiro256pp) -> Vec<Vec<f32>> {
+    (0..b)
+        .map(|_| {
+            let x: Vec<f64> = (0..8).map(|_| rng.uniform(0.0, 1.0)).collect();
+            reshuffle_and_pack(hm, &x).iter().map(|&v| v as f32).collect()
+        })
+        .collect()
+}
+
+/// Independent oracle for one op's (reads, writes) over the DAG's
+/// location space: registers `0..n_regs`, hoist slots `n_regs..`.
+/// Mirrors the executor's semantics — `AddAssign` mutates **both**
+/// operands (CKKS scale adoption), in-place ops write their register.
+fn oracle_access(op: &ScheduleOp, n_regs: usize) -> (Vec<usize>, Vec<usize>) {
+    use ScheduleOp::*;
+    let h = |r: usize| n_regs + r;
+    match *op {
+        LoadInput { dst, .. } => (vec![], vec![dst]),
+        Rotate { dst, src, .. }
+        | MulPlainCached { dst, src, .. }
+        | MulPlainRescale { dst, src, .. }
+        | PolyActivation { dst, src }
+        | RotateSumGrouped { dst, src, .. } => (vec![src], vec![dst]),
+        Hoist { src } => (vec![src], vec![h(src)]),
+        RotateHoisted { dst, src, .. } | ExtractScore { dst, src, .. } => {
+            (vec![src, h(src)], vec![dst])
+        }
+        AddAssign { dst, src } => (vec![], vec![dst, src]),
+        SubPlain { reg, .. } | AddPlain { reg, .. } | AddConst { reg, .. } | Rescale { reg } => {
+            (vec![], vec![reg])
+        }
+    }
+}
+
+/// Brute-force hazard check: every conflicting op pair (shared
+/// location, at least one side writing) must be ordered by a DAG path.
+fn assert_conflicts_ordered(sched: &HrfSchedule, dag: &ScheduleDag, what: &str) {
+    let n = sched.ops.len();
+    let access: Vec<(Vec<usize>, Vec<usize>)> = sched
+        .ops
+        .iter()
+        .map(|(_, op)| oracle_access(op, sched.n_regs))
+        .collect();
+    // Transitive closure as bitsets, filled back-to-front (every edge
+    // points forward, so reach[s] is final when node i unions it in).
+    let words = n.div_ceil(64);
+    let mut reach = vec![vec![0u64; words]; n];
+    for i in (0..n).rev() {
+        let (head, tail) = reach.split_at_mut(i + 1);
+        let ri = &mut head[i];
+        for &s in &dag.succs[i] {
+            ri[s / 64] |= 1 << (s % 64);
+            for (w, &v) in ri.iter_mut().zip(&tail[s - i - 1]) {
+                *w |= v;
+            }
+        }
+    }
+    let overlaps = |a: &[usize], b: &[usize]| a.iter().any(|x| b.contains(x));
+    for i in 0..n {
+        let (ri, wi) = &access[i];
+        for j in i + 1..n {
+            let (rj, wj) = &access[j];
+            let conflict =
+                overlaps(wi, rj) || overlaps(wi, wj) || overlaps(ri, wj);
+            if conflict {
+                assert!(
+                    (reach[i][j / 64] >> (j % 64)) & 1 == 1,
+                    "{what}: conflicting ops {i} and {j} unordered in DAG"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dag_well_formed_on_compiled_schedules() {
+    let (hm, _) = test_model(7001, 3);
+    let b_max = hm.plan.groups.min(4);
+    for (pname, pipeline) in [
+        ("empty", PassPipeline::empty as fn() -> PassPipeline),
+        ("standard", PassPipeline::standard),
+        ("aggressive", PassPipeline::aggressive),
+    ] {
+        let server = HrfServer::with_passes(hm.clone(), pipeline());
+        for b in [1usize, 2, b_max] {
+            for fold in [true, false] {
+                let sched = server.schedule(b, fold);
+                let dag = server.dag(b, fold);
+                let what = format!("{pname} b={b} fold={fold}");
+                dag.validate(&sched).unwrap_or_else(|e| panic!("{what}: {e}"));
+                assert_conflicts_ordered(&sched, &dag, &what);
+                let stats = server.dag_stats(b, fold);
+                assert_eq!(stats.ops, sched.ops.len(), "{what}");
+                assert!(stats.waves >= 1 && stats.waves <= stats.ops, "{what}");
+                assert!(stats.width >= 1 && stats.width <= stats.ops, "{what}");
+                assert!(
+                    stats.waves < stats.ops,
+                    "{what}: a compiled schedule must expose some op-parallelism"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn slot_backend_parallel_matches_serial_exactly() {
+    let (hm, _) = test_model(7101, 3);
+    let params = slot_params(&hm);
+    let mut rng = Xoshiro256pp::new(7102);
+    let b_max = hm.plan.groups.min(4);
+    let server = HrfServer::new(hm.clone());
+    let cost = CostModel::static_default();
+    for b in [1usize, 2, b_max] {
+        let singles = slot_inputs(&hm, b, &mut rng);
+        let sched = server.schedule(b, true);
+        let dag = ScheduleDag::build(&sched);
+        let mut be = SlotBackend::new(&params, &singles);
+        let serial = Engine::run(&sched, &mut be);
+        let want: Vec<u32> = Engine::read_outputs(&sched, &serial, &mut be)
+            .iter()
+            .map(|f| f.to_bits())
+            .collect();
+        for workers in [1usize, 2, 4] {
+            let (run, mut backends) =
+                Engine::run_parallel(&sched, &dag, &cost, workers, |_| {
+                    SlotBackend::new(&params, &singles)
+                })
+                .unwrap();
+            assert_eq!(run.counts, serial.counts, "b={b} w={workers}");
+            let got: Vec<u32> = Engine::read_outputs(&sched, &run, &mut backends[0])
+                .iter()
+                .map(|f| f.to_bits())
+                .collect();
+            assert_eq!(got, want, "b={b} w={workers}: f32 outputs must be bit-identical");
+        }
+    }
+}
+
+/// Slot backend that fails on the first activation — injected fault
+/// for the driver's panic path.
+struct FaultyBackend<'a>(SlotBackend<'a>);
+
+impl ScheduleBackend for FaultyBackend<'_> {
+    type Value = Vec<f32>;
+    type Hoisted = ();
+    type Score = f32;
+
+    fn load_input(&mut self, input: usize) -> Vec<f32> {
+        self.0.load_input(input)
+    }
+    fn rotate(&mut self, src: &Vec<f32>, step: usize) -> Vec<f32> {
+        self.0.rotate(src, step)
+    }
+    fn hoist(&mut self, src: &Vec<f32>) {
+        self.0.hoist(src)
+    }
+    fn rotate_hoisted(&mut self, src: &Vec<f32>, hoisted: &(), step: usize) -> Vec<f32> {
+        self.0.rotate_hoisted(src, hoisted, step)
+    }
+    fn add_assign(&mut self, dst: &mut Vec<f32>, src: &mut Vec<f32>) {
+        self.0.add_assign(dst, src)
+    }
+    fn sub_plain(&mut self, reg: &mut Vec<f32>, operand: cryptotree::hrf::PlainOperand) {
+        self.0.sub_plain(reg, operand)
+    }
+    fn add_plain(&mut self, reg: &mut Vec<f32>, operand: cryptotree::hrf::PlainOperand) {
+        self.0.add_plain(reg, operand)
+    }
+    fn mul_plain_cached(
+        &mut self,
+        src: &Vec<f32>,
+        operand: cryptotree::hrf::PlainOperand,
+    ) -> Vec<f32> {
+        self.0.mul_plain_cached(src, operand)
+    }
+    fn add_const(&mut self, reg: &mut Vec<f32>, value: f64) {
+        self.0.add_const(reg, value)
+    }
+    fn rescale(&mut self, reg: &mut Vec<f32>) {
+        self.0.rescale(reg)
+    }
+    fn poly_activation(&mut self, _src: &Vec<f32>) -> Vec<f32> {
+        panic!("injected activation fault")
+    }
+    fn rotate_sum_grouped(&mut self, src: &Vec<f32>, span: usize) -> Vec<f32> {
+        self.0.rotate_sum_grouped(src, span)
+    }
+    fn read_score(&mut self, value: &Vec<f32>, slot: usize) -> f32 {
+        self.0.read_score(value, slot)
+    }
+}
+
+#[test]
+fn worker_panic_surfaces_as_typed_error() {
+    let (hm, _) = test_model(7201, 3);
+    let params = slot_params(&hm);
+    let mut rng = Xoshiro256pp::new(7202);
+    let singles = slot_inputs(&hm, 2, &mut rng);
+    let server = HrfServer::new(hm.clone());
+    let sched = server.schedule(2, true);
+    let dag = ScheduleDag::build(&sched);
+    // Every HRF schedule activates, so the fault always fires; the
+    // driver must join all workers and return the typed error — this
+    // test completing at all is the no-hang claim.
+    let res = Engine::run_parallel(&sched, &dag, &CostModel::static_default(), 4, |_| {
+        FaultyBackend(SlotBackend::new(&params, &singles))
+    });
+    match res {
+        Err(DagExecError::WorkerPanic { message, .. }) => {
+            assert!(message.contains("injected activation fault"), "got: {message}")
+        }
+        Ok(_) => panic!("faulty backend must not complete"),
+    }
+}
+
+#[test]
+fn reuse_registers_shrinks_live_peak() {
+    let (hm, _) = test_model(7301, 3);
+    let params = slot_params(&hm);
+    let mut rng = Xoshiro256pp::new(7302);
+    let server_raw = HrfServer::with_passes(hm.clone(), PassPipeline::empty());
+    let b = hm.plan.groups.min(4);
+    let raw = server_raw.schedule(b, true);
+    let mut reused = (*raw).clone();
+    assert!(ReuseRegisters.run(&mut reused), "pass must rewrite the batch schedule");
+    assert!(
+        reused.n_regs < raw.n_regs,
+        "live peak {} must drop below {}",
+        reused.n_regs,
+        raw.n_regs
+    );
+    let singles = slot_inputs(&hm, b, &mut rng);
+    let before = params.run_schedule(&raw, &singles);
+    let after = params.run_schedule(&reused, &singles);
+    assert_eq!(before, after, "register reuse changed results");
+    // And the renamed schedule still parallelizes correctly.
+    let dag = ScheduleDag::build(&reused);
+    dag.validate(&reused).unwrap();
+    assert_conflicts_ordered(&reused, &dag, "reused");
+}
+
+#[test]
+fn ckks_dag_grid_bit_identical_to_serial() {
+    let (hm, params) = test_model(7401, 3);
+    let ctx = CkksContext::new(params);
+    let enc = Encoder::new(&ctx);
+    let plan = hm.plan;
+    let mut kg = KeyGenerator::new(&ctx, 7402);
+    let pk = kg.gen_public_key(&ctx);
+    let rlk = kg.gen_relin_key(&ctx);
+    let b_max = plan.groups.min(3);
+    let gk = kg.gen_galois_keys(&ctx, &plan.rotations_needed_batched(b_max));
+    let mut client = HrfClient::new(Encryptor::new(pk, 7403), Decryptor::new(kg.secret_key()));
+    let mut rng = Xoshiro256pp::new(7404);
+
+    let server_raw = HrfServer::with_passes(hm.clone(), PassPipeline::empty());
+    let server_agg = HrfServer::with_passes(hm.clone(), PassPipeline::aggressive());
+
+    for b in [1usize, 2, b_max] {
+        let xs: Vec<Vec<f64>> = (0..b)
+            .map(|_| (0..8).map(|_| rng.uniform(0.0, 1.0)).collect())
+            .collect();
+        let cts: Vec<Ciphertext> = xs
+            .iter()
+            .map(|x| client.encrypt_input(&ctx, &enc, &hm, x))
+            .collect();
+        for (pname, server) in [("raw", &server_raw), ("aggressive", &server_agg)] {
+            server.set_op_workers(1);
+            ctx.set_workers(1);
+            let mut ev = Evaluator::new(ctx.clone());
+            let ex = server.execute(&mut ev, &enc, &EncRequest::group(&cts), &rlk, &gk);
+            let base_counts = ex.counts;
+            let base = ex.into_class_scores();
+            for ow in [1usize, 2, 4] {
+                for cw in [1usize, 4] {
+                    if ow == 1 && cw == 1 {
+                        continue; // the baseline itself
+                    }
+                    server.set_op_workers(ow);
+                    ctx.set_workers(cw);
+                    let mut ev = Evaluator::new(ctx.clone());
+                    let ex =
+                        server.execute(&mut ev, &enc, &EncRequest::group(&cts), &rlk, &gk);
+                    assert_eq!(
+                        ex.counts, base_counts,
+                        "{pname} B={b} ow={ow} cw={cw}: op accounting drifted"
+                    );
+                    for (got, want) in ex.into_class_scores().iter().zip(&base) {
+                        assert!(
+                            ct_bits_equal(got, want),
+                            "{pname} B={b} ow={ow} cw={cw}: ciphertext bits deviate from serial"
+                        );
+                    }
+                }
+            }
+            server.set_op_workers(1);
+        }
+        ctx.set_workers(1);
+    }
+}

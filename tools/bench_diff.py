@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json files produced by the bench harness.
+
+Records are matched on the (``op``, ``threads``) pair and compared on
+``ns_per_op``; the report prints the percentage delta per pair
+(negative = the new file is faster), plus pairs present on only one
+side. Use it to eyeball a PR's perf movement:
+
+    python3 tools/bench_diff.py OLD.json NEW.json
+    python3 tools/bench_diff.py --threshold 5 OLD.json NEW.json
+
+``--threshold PCT`` exits 1 when any matched pair regressed by more
+than PCT percent (for CI gating once baselines are checked in).
+
+Stdlib-only, like every tool in this repo.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path: str) -> dict:
+    """Map (op, threads) -> ns_per_op. Duplicate keys keep the last
+    record, matching how a reader scanning the file would resolve it."""
+    records = json.loads(Path(path).read_text())
+    out = {}
+    for r in records:
+        out[(r["op"], r["threads"])] = float(r["ns_per_op"])
+    return out
+
+
+def fmt_ns(ns: float) -> str:
+    if ns < 1e3:
+        return f"{ns:.0f}ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.1f}µs"
+    if ns < 1e9:
+        return f"{ns / 1e6:.2f}ms"
+    return f"{ns / 1e9:.3f}s"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=None,
+        metavar="PCT",
+        help="exit 1 if any matched pair regresses by more than PCT%%",
+    )
+    args = ap.parse_args()
+
+    old, new = load(args.old), load(args.new)
+    matched = sorted(set(old) & set(new))
+    only_old = sorted(set(old) - set(new))
+    only_new = sorted(set(new) - set(old))
+
+    width = max((len(op) for op, _ in matched), default=2) + 2
+    print(f"{'op':<{width}} {'thr':>3} {'old':>10} {'new':>10} {'delta':>8}")
+    worst = 0.0
+    for op, threads in matched:
+        a, b = old[(op, threads)], new[(op, threads)]
+        delta = (b - a) / a * 100.0 if a else float("inf")
+        worst = max(worst, delta)
+        print(
+            f"{op:<{width}} {threads:>3} {fmt_ns(a):>10} {fmt_ns(b):>10} "
+            f"{delta:>+7.1f}%"
+        )
+    for op, threads in only_old:
+        print(f"{op:<{width}} {threads:>3} {fmt_ns(old[(op, threads)]):>10} "
+              f"{'-':>10} {'gone':>8}")
+    for op, threads in only_new:
+        print(f"{op:<{width}} {threads:>3} {'-':>10} "
+              f"{fmt_ns(new[(op, threads)]):>10} {'new':>8}")
+
+    print(
+        f"\n{len(matched)} matched, {len(only_old)} removed, "
+        f"{len(only_new)} added"
+    )
+    if args.threshold is not None and worst > args.threshold:
+        print(f"FAIL: worst regression {worst:+.1f}% exceeds "
+              f"{args.threshold:.1f}%", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
