@@ -21,7 +21,11 @@ use std::io::{self, ErrorKind, Read, Write};
 pub const MAGIC: [u8; 4] = *b"HRFW";
 
 /// Wire protocol version; bumped on any incompatible codec change.
-pub const PROTOCOL_VERSION: u8 = 1;
+///
+/// v2: `MetricsSnapshot` gained trailing DAG-executor fields
+/// (`dag_ops`/`dag_waves`/`dag_width`). Mixed-version peers fail
+/// cleanly at the framing layer instead of misdecoding metrics.
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Header bytes preceding every payload (magic + version + length).
 pub const HEADER_LEN: usize = 9;

@@ -447,6 +447,15 @@ impl DriverState {
 
     /// Record completion of `idx`: release successors whose in-degree
     /// drains, then wake waiters.
+    ///
+    /// Every wake path here passes through the `ready` mutex before
+    /// `notify_all`: a worker in [`DriverState::next_op`] holds that
+    /// mutex from its drain/abort check until `cv.wait` parks it, so
+    /// taking the lock (even briefly) guarantees the worker is either
+    /// before its check — and will observe the new `remaining` /
+    /// queue state — or already waiting and will receive the notify.
+    /// Notifying without the lock can fire in that window and the
+    /// wakeup is lost; no later notify comes and the run hangs.
     fn complete(&self, idx: usize, dag: &ScheduleDag, prio: &[u64]) {
         let mut released: Vec<ReadyOp> = Vec::new();
         for &s in &dag.succs[idx] {
@@ -466,6 +475,7 @@ impl DriverState {
             drop(q);
             self.cv.notify_all();
         } else if drained {
+            drop(lock_unpoisoned(&self.ready));
             self.cv.notify_all();
         }
     }
@@ -483,6 +493,10 @@ impl DriverState {
         }
         drop(slot);
         self.aborted.store(true, Ordering::Release);
+        // Same lost-wakeup discipline as `complete`: pass through the
+        // ready mutex so a worker between its abort check and
+        // `cv.wait` cannot miss this notification.
+        drop(lock_unpoisoned(&self.ready));
         self.cv.notify_all();
     }
 }
