@@ -25,7 +25,10 @@
 //!   requests (session ids survive reconnects by design).
 //! * `--spawn-server`: launch a sibling `cryptotree-serve` on an
 //!   ephemeral port, scrape `LISTENING <addr>`, and shut it down
-//!   (checking its exit status) when the run ends.
+//!   (checking its exit status) when the run ends. Server-side knobs
+//!   (`--key-budget-mb`, `--spill-dir`, `--spill-budget-mb`,
+//!   `--slab-budget-mb`, …) are forwarded — pair a tiny key budget
+//!   with `--spill-dir` to drive the disk spill tier under load.
 //!
 //! Exits non-zero if any worker process fails, any request errors, or
 //! a spawned server reports an unclean shutdown.
@@ -212,6 +215,9 @@ fn parent_main(argv: &[String]) {
             "queue",
             "key-budget-mb",
             "key-shards",
+            "spill-dir",
+            "spill-budget-mb",
+            "slab-budget-mb",
             "max-conns",
             "trace",
             "stats-interval",

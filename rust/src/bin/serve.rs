@@ -23,6 +23,14 @@
 //! * `--key-budget-mb` — evaluation-key cache budget; `0` (default)
 //!   disables eviction, small values exercise the
 //!   `KeysEvicted`/re-register protocol under load.
+//! * `--spill-dir` / `--spill-budget-mb` — keycache disk spill tier:
+//!   budget-evicted session keys demote to files under the directory
+//!   (wiped at startup) and reload transparently on the next lookup;
+//!   the budget (default 1024 MiB) caps the directory size. Unset
+//!   `--spill-dir` keeps eviction in-memory-only.
+//! * `--slab-budget-mb` — resident-byte budget for the shared CKKS
+//!   scratch slab pool (`0`, the default, keeps the
+//!   `CRYPTOTREE_SLAB_BUDGET` / built-in default).
 //! * `--trace` — span-trace ring capacity (default 256; `0` disables
 //!   tracing); dump over the wire with `Request::TraceDump`.
 //! * `--stats-interval` — seconds between `STATS {...}` one-line JSON
@@ -50,6 +58,9 @@ fn main() {
     let max_frame_mb = args.get("max-frame-mb", 256usize);
     let trace_capacity = args.get("trace", 256usize);
     let stats_interval = args.get("stats-interval", 0u64);
+    let spill_dir = args.get_opt_str("spill-dir").map(std::path::PathBuf::from);
+    let spill_budget_mb = args.get("spill-budget-mb", 1024u64);
+    let slab_budget_mb = args.get("slab-budget-mb", 0u64);
 
     eprintln!(
         "building workload: params={} trees={} depth={} rows={} seed={}",
@@ -79,6 +90,11 @@ fn main() {
             queue_capacity: queue,
             enc_batch,
             trace_capacity,
+            slab_budget_bytes: slab_budget_mb * 1024 * 1024,
+            spill_budget_bytes: spill_budget_mb * 1024 * 1024,
+            // A flag beats the env default; absent flag keeps it
+            // (CoordinatorConfig::default reads CRYPTOTREE_SPILL_DIR).
+            spill_dir: spill_dir.or_else(|| CoordinatorConfig::default().spill_dir),
             ..Default::default()
         },
         wl.ctx.clone(),
@@ -147,6 +163,15 @@ fn main() {
     println!(
         "keycache: {} hits, {} misses, {} evictions, {} resident bytes",
         s.keycache_hits, s.keycache_misses, s.keycache_evictions, s.keycache_resident_bytes
+    );
+    println!(
+        "memory plane: slab {} resident bytes ({} hits, {} misses); spill {} bytes, {} reloads, {} corrupt",
+        s.slab_resident_bytes,
+        s.slab_hits,
+        s.slab_misses,
+        s.keycache_spilled_bytes,
+        s.keycache_spill_hits,
+        s.keycache_spill_corrupt
     );
 
     if !report.is_clean() {

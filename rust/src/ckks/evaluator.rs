@@ -87,7 +87,7 @@ impl std::ops::Add for OpCounts {
 }
 
 /// The server-side evaluator. Owns the context reference, counters and
-/// a private limb-buffer pool ([`Scratch`]) that recycles every
+/// a [`Scratch`] handle into the shared slab pool that recycles every
 /// temporary the hot ops make (tensor products, key-switch digits,
 /// hoisted rotations, retired activation powers); key material is
 /// passed per call (it belongs to the client session — see
@@ -95,10 +95,11 @@ impl std::ops::Add for OpCounts {
 pub struct Evaluator {
     pub ctx: ContextRef,
     pub counts: OpCounts,
-    /// Recycled limb buffers for the hot paths (never shared; one pool
-    /// per evaluator, i.e. per worker thread). Crate-private so the
-    /// pool's zeroing/recycling invariants stay behind the evaluator's
-    /// entry points.
+    /// Handle into the shared slab pool ([`crate::mem`]) for the hot
+    /// paths. The handle is owned per evaluator (per worker thread) —
+    /// the backing free lists are shared and byte-budgeted.
+    /// Crate-private so the zeroing/recycling invariants stay behind
+    /// the evaluator's entry points.
     pub(crate) scratch: Scratch,
 }
 
@@ -111,10 +112,12 @@ impl Evaluator {
         }
     }
 
-    /// An evaluator seeded with an existing (possibly warm) scratch
-    /// pool — the per-worker construction path of the op-parallel DAG
-    /// driver, where each worker owns its own pool for the lifetime of
-    /// one request.
+    /// An evaluator seeded with an existing scratch handle — the
+    /// per-worker construction path of the op-parallel DAG driver.
+    /// Since [`Scratch`] became a façade over the shared slab pool
+    /// the handle carries no buffers of its own, but the seam is kept
+    /// so callers can pin workers to a specific pool (tests use
+    /// `Scratch::in_pool` with a private one).
     pub fn with_scratch(ctx: ContextRef, scratch: Scratch) -> Self {
         Evaluator {
             ctx,
@@ -124,29 +127,32 @@ impl Evaluator {
     }
 
     /// Split a worker evaluator off this one: same context, zeroed
-    /// counters, and — crucially — *this* evaluator's scratch pool
-    /// moved into the worker (so warm buffers keep flowing through a
-    /// borrowed-`&mut Evaluator` API boundary). Pair with [`merge`]
-    /// (`Evaluator::merge`) to fold counters and scratch back.
+    /// counters, and a clone of *this* evaluator's scratch handle
+    /// (same backing pool and home shard — warm buffers keep flowing
+    /// through a borrowed-`&mut Evaluator` API boundary because the
+    /// pool itself is shared). Pair with [`merge`](Evaluator::merge)
+    /// to fold counters back.
     pub fn split_off(&mut self) -> Evaluator {
         Evaluator {
             ctx: self.ctx.clone(),
             counts: OpCounts::default(),
-            scratch: std::mem::take(&mut self.scratch),
+            scratch: self.scratch.clone(),
         }
     }
 
     /// Fold a worker evaluator (from [`split_off`](Evaluator::split_off)
     /// or [`with_scratch`](Evaluator::with_scratch)) back in: counters
-    /// accumulate, warm buffers are absorbed.
+    /// accumulate. The worker's recycled buffers already live in the
+    /// shared slab pool, so there is nothing else to reclaim.
     pub fn merge(&mut self, worker: Evaluator) {
         self.counts += worker.counts;
         self.scratch.absorb(worker.scratch);
     }
 
-    /// Consume the evaluator, yielding its scratch pool (so a
-    /// [`ScratchPool`](crate::ckks::ScratchPool) can reclaim the warm
-    /// buffers of a retiring DAG worker).
+    /// Consume the evaluator, yielding its scratch handle (the
+    /// [`ScratchPool`](crate::ckks::ScratchPool) façade retires it; the
+    /// warm buffers of a retiring DAG worker are already resident in
+    /// the shared slab pool).
     pub fn into_scratch(self) -> Scratch {
         self.scratch
     }

@@ -11,7 +11,8 @@
 //! * [`ntt`] — negacyclic number-theoretic transform per RNS prime.
 //! * [`rns`] — RNS ("double-CRT") polynomials with flat contiguous
 //!   limb storage, per-prime Barrett/Shoup tables and base conversions.
-//! * [`scratch`] — reusable limb-buffer pool for evaluator temporaries.
+//! * [`scratch`] — checkout façade over the shared slab pool
+//!   ([`crate::mem`]) for evaluator temporaries.
 //! * [`parallel`] — dependency-free limb-parallel executor
 //!   (`std::thread::scope`; worker count on `CkksContext`, default 1).
 //! * [`encoder`] — canonical-embedding encoder: `C^{N/2}` slots ↔ `R_Q`.

@@ -1,144 +1,130 @@
-//! Reusable limb-buffer pool (§Perf: scratch reuse).
+//! Checkout façade over the shared slab pool (§Memory plane).
 //!
 //! With flat limb storage ([`crate::ckks::rns::RnsPoly`]) one
-//! polynomial is exactly one `Vec<u64>`, so a tiny pool of recycled
-//! vectors removes the allocation from every temporary the evaluator
-//! makes: key-switch decompositions, hoisted-rotation digit copies,
+//! polynomial is exactly one `Vec<u64>`, so recycling vectors removes
+//! the allocation from every temporary the evaluator makes:
+//! key-switch decompositions, hoisted-rotation digit copies,
 //! NTT-domain automorphism double buffers, tensor-product temporaries
-//! and retired polynomial-activation powers. The pool is owned by
-//! [`crate::ckks::Evaluator`] (one per worker thread) and threaded by
-//! `&mut` through the hot entry points — never shared, never locked.
+//! and retired polynomial-activation powers.
 //!
-//! Buffers of different lengths coexist: ciphertext levels shrink as a
-//! pipeline rescales, and [`Scratch::take`] resizes whatever buffer it
-//! pops. The pool is capped so a deep one-off expression cannot pin
-//! memory forever.
+//! [`Scratch`] used to *own* those recycled vectors (one private warm
+//! list per [`crate::ckks::Evaluator`]), which multiplied peak idle
+//! memory by `op_workers × ckks_workers`. It is now a thin handle into
+//! the process-wide [`crate::mem::SlabPool`]: `take`/`put` delegate to
+//! the pool's sharded, size-classed free lists under one global byte
+//! budget. Each handle is pinned to a *home* shard (round-robin at
+//! construction) so concurrent workers land on different locks; the
+//! hot path touches exactly one uncontended mutex per checkout.
+//!
+//! The `&mut self` signatures are kept even though the handle itself
+//! is stateless — they document the single-owner discipline of the
+//! evaluator hot paths and keep every call site unchanged.
 
-/// Upper bound on pooled buffers; beyond this, returned buffers are
-/// simply dropped. 64 vastly exceeds the live-temporary high-water
-/// mark of any evaluator op (a key-switch holds `level + 3` polys).
-const MAX_POOLED: usize = 64;
+use crate::mem::SlabPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-/// A pool of reusable `u64` limb buffers.
-#[derive(Default)]
+/// A handle into the shared slab pool, pinned to one home shard.
+///
+/// Cloning yields a handle to the *same* pool and home shard (used by
+/// [`crate::ckks::Evaluator::split_off`] so worker evaluators inherit
+/// the parent's pool). `Scratch::default()`/[`Scratch::new`] attach to
+/// the global pool; tests use [`Scratch::in_pool`] with a private one.
+#[derive(Clone)]
 pub struct Scratch {
-    bufs: Vec<Vec<u64>>,
+    pool: Arc<SlabPool>,
+    home: usize,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
 }
 
 impl Scratch {
+    /// A handle into the process-wide pool ([`crate::mem::global_pool`]).
     pub fn new() -> Self {
-        Scratch::default()
+        Scratch::in_pool(crate::mem::global_pool().clone())
+    }
+
+    /// A handle into a specific pool (tests / isolated workloads).
+    pub fn in_pool(pool: Arc<SlabPool>) -> Self {
+        // Round-robin home-shard assignment across all handles in the
+        // process: concurrent workers (who each construct their own
+        // handle) land on distinct shards.
+        static NEXT_HOME: AtomicUsize = AtomicUsize::new(0);
+        let home = NEXT_HOME.fetch_add(1, Ordering::Relaxed) % pool.num_shards();
+        Scratch { pool, home }
     }
 
     /// A buffer of exactly `len` zeroed words (recycled if available).
     pub fn take(&mut self, len: usize) -> Vec<u64> {
-        match self.bufs.pop() {
-            Some(mut b) => {
-                b.clear();
-                b.resize(len, 0);
-                b
-            }
-            None => vec![0u64; len],
-        }
+        self.pool.take(self.home, len)
     }
 
     /// A buffer holding a copy of `src` (single memcpy, no zeroing).
     pub fn take_copy(&mut self, src: &[u64]) -> Vec<u64> {
-        match self.bufs.pop() {
-            Some(mut b) => {
-                b.clear();
-                b.extend_from_slice(src);
-                b
-            }
-            None => src.to_vec(),
-        }
+        self.pool.take_copy(self.home, src)
     }
 
-    /// Return a buffer to the pool (dropped if the pool is full).
+    /// Return a buffer to the pool (trimmed/dropped past the budget).
     pub fn put(&mut self, buf: Vec<u64>) {
-        if buf.capacity() > 0 && self.bufs.len() < MAX_POOLED {
-            self.bufs.push(buf);
-        }
+        self.pool.put(self.home, buf);
     }
 
-    /// Number of buffers currently pooled (test/introspection hook).
+    /// Idle buffers in this handle's home shard (test hook).
     pub fn pooled(&self) -> usize {
-        self.bufs.len()
+        self.pool.idle_buffers_in(self.home)
     }
 
-    /// Drain another pool's buffers into this one (bounded by
-    /// `MAX_POOLED`; excess buffers are dropped). Used when a worker
-    /// evaluator retires and its warm buffers flow back to the shared
-    /// [`ScratchPool`].
-    pub fn absorb(&mut self, mut other: Scratch) {
-        while let Some(b) = other.bufs.pop() {
-            if self.bufs.len() >= MAX_POOLED {
-                break;
-            }
-            self.put(b);
-        }
+    /// The backing pool (test/introspection hook).
+    pub fn pool(&self) -> &Arc<SlabPool> {
+        &self.pool
     }
+
+    /// Historical API from the evaluator-owned pool era, kept so
+    /// `Evaluator::merge` still compiles against older callers: with a
+    /// shared backing pool a retiring worker's buffers are *already*
+    /// in the arena, so there is nothing to drain.
+    pub fn absorb(&mut self, _other: Scratch) {}
 }
 
-/// A small shared pool of [`Scratch`] instances for op-parallel
-/// execution: each DAG worker checks one out for the lifetime of a
-/// request and restores it afterwards, so warm limb buffers survive
-/// across requests without any per-op locking (the lock is touched
-/// twice per worker per request, never on the op hot path).
-///
-/// Bounded: at most [`ScratchPool::MAX_IDLE`] idle pools are retained;
-/// checkout beyond the retained set simply creates a fresh empty
-/// `Scratch` (allocation then happens lazily on first use).
-pub struct ScratchPool {
-    idle: std::sync::Mutex<Vec<Scratch>>,
-}
+/// Shared checkout point for op-parallel execution, kept as a façade:
+/// DAG workers still call `checkout`/`restore` around a request, but
+/// both now just mint/drop [`Scratch`] handles — the warm buffers
+/// themselves live in the global [`crate::mem::SlabPool`] and survive
+/// across requests (and across *servers*) under one byte budget.
+#[derive(Default)]
+pub struct ScratchPool;
 
 impl ScratchPool {
-    /// Upper bound on idle retained `Scratch` pools. Sized for the
-    /// realistic op-worker × coordinator-worker product; beyond it,
-    /// restored pools are dropped.
-    pub const MAX_IDLE: usize = 32;
-
     pub fn new() -> Self {
-        ScratchPool {
-            idle: std::sync::Mutex::new(Vec::new()),
-        }
+        ScratchPool
     }
 
-    /// Check out a scratch pool (warm if one is idle, fresh otherwise).
+    /// A fresh handle into the global pool (its own home shard).
     pub fn checkout(&self) -> Scratch {
-        crate::lockutil::lock_unpoisoned(&self.idle)
-            .pop()
-            .unwrap_or_default()
+        Scratch::new()
     }
 
-    /// Return a scratch pool after use (dropped if at capacity).
-    pub fn restore(&self, scratch: Scratch) {
-        let mut idle = crate::lockutil::lock_unpoisoned(&self.idle);
-        if idle.len() < Self::MAX_IDLE {
-            idle.push(scratch);
-        }
-    }
-
-    /// Number of idle pools currently retained (test hook).
-    pub fn idle(&self) -> usize {
-        crate::lockutil::lock_unpoisoned(&self.idle).len()
-    }
-}
-
-impl Default for ScratchPool {
-    fn default() -> Self {
-        ScratchPool::new()
-    }
+    /// Retire a handle. The buffers it returned via `put` are already
+    /// resident in the shared pool; dropping the handle is enough.
+    pub fn restore(&self, _scratch: Scratch) {}
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn private_pool() -> Arc<SlabPool> {
+        Arc::new(SlabPool::new(2, 1 << 20))
+    }
+
     #[test]
     fn take_is_zeroed_and_reuses_capacity() {
-        let mut s = Scratch::new();
+        let pool = private_pool();
+        let mut s = Scratch::in_pool(pool.clone());
         let mut b = s.take(16);
         b.iter_mut().for_each(|x| *x = 7);
         let cap = b.capacity();
@@ -152,7 +138,7 @@ mod tests {
 
     #[test]
     fn take_copy_matches_source() {
-        let mut s = Scratch::new();
+        let mut s = Scratch::in_pool(private_pool());
         s.put(vec![9u64; 32]);
         let src: Vec<u64> = (0..10).collect();
         let b = s.take_copy(&src);
@@ -160,11 +146,42 @@ mod tests {
     }
 
     #[test]
-    fn pool_is_bounded() {
-        let mut s = Scratch::new();
-        for _ in 0..(MAX_POOLED + 10) {
-            s.put(vec![0u64; 4]);
+    fn clones_share_the_backing_pool() {
+        let mut s = Scratch::in_pool(private_pool());
+        let mut w = s.clone();
+        s.put(vec![0u64; 64]);
+        let b = w.take(64); // same pool + home shard: hit, not alloc
+        assert_eq!(b.len(), 64);
+        assert_eq!(s.pool().stats().snapshot().hits, 1);
+    }
+
+    #[test]
+    fn handles_in_same_pool_share_buffers_across_shards() {
+        let pool = private_pool();
+        let mut a = Scratch::in_pool(pool.clone());
+        let mut b = Scratch::in_pool(pool.clone());
+        a.put(vec![1u64; 128]);
+        let got = b.take(128); // steal-scan finds a's buffer
+        assert!(got.iter().all(|&x| x == 0));
+        assert_eq!(pool.idle_buffers(), 0);
+    }
+
+    #[test]
+    fn pool_budget_bounds_resident_bytes() {
+        let pool = Arc::new(SlabPool::new(1, 1024));
+        let mut s = Scratch::in_pool(pool.clone());
+        for _ in 0..10 {
+            s.put(vec![0u64; 64]); // 512 B each; budget fits two
         }
-        assert_eq!(s.pooled(), MAX_POOLED);
+        assert!(pool.resident_bytes() <= 1024);
+        assert_eq!(pool.audit_resident_bytes(), pool.resident_bytes());
+    }
+
+    #[test]
+    fn scratch_pool_facade_mints_global_handles() {
+        let sp = ScratchPool::new();
+        let s = sp.checkout();
+        assert!(Arc::ptr_eq(s.pool(), crate::mem::global_pool()));
+        sp.restore(s);
     }
 }

@@ -65,7 +65,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Coordinator tuning knobs.
-#[derive(Clone, Copy, Debug)]
+///
+/// Not `Copy`: `spill_dir` owns a path. Clone where a second copy is
+/// needed.
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// HE worker threads.
     pub workers: usize,
@@ -112,6 +115,32 @@ pub struct CoordinatorConfig {
     /// tracing entirely — requests carry inert traces and no per-
     /// request allocation or ring push happens.
     pub trace_capacity: usize,
+    /// Retarget the process-wide CKKS slab pool
+    /// ([`crate::mem::global_pool`]) to this many resident bytes at
+    /// startup. `0` (the default) keeps the pool's current budget
+    /// (its `CRYPTOTREE_SLAB_BUDGET` env default).
+    pub slab_budget_bytes: u64,
+    /// Enable the key-cache disk spill tier rooted at this directory
+    /// ([`SessionManager::enable_spill`]): budget-evicted session keys
+    /// are demoted to disk and reloaded transparently on the next
+    /// lookup. `None` (the default unless `CRYPTOTREE_SPILL_DIR` is
+    /// set) keeps eviction in-memory-only. The directory is wiped at
+    /// startup — spilled keys never outlive the process.
+    pub spill_dir: Option<PathBuf>,
+    /// Byte cap for the spill directory; oldest spill files are
+    /// deleted (truly evicted) once exceeded. Ignored when
+    /// `spill_dir` is `None`. Defaults to `CRYPTOTREE_SPILL_BUDGET`
+    /// or 1 GiB.
+    pub spill_budget_bytes: u64,
+}
+
+/// Read a `u64` env knob; unset/unparsable/zero falls back.
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
 }
 
 impl Default for CoordinatorConfig {
@@ -127,6 +156,11 @@ impl Default for CoordinatorConfig {
             ckks_workers: 0,
             op_workers: 0,
             trace_capacity: 256,
+            slab_budget_bytes: 0,
+            spill_dir: std::env::var_os("CRYPTOTREE_SPILL_DIR")
+                .filter(|v| !v.is_empty())
+                .map(PathBuf::from),
+            spill_budget_bytes: env_u64("CRYPTOTREE_SPILL_BUDGET", 1024 * 1024 * 1024),
         }
     }
 }
@@ -287,6 +321,22 @@ impl Coordinator {
         artifacts_dir: Option<PathBuf>,
     ) -> Self {
         assert!(cfg.workers >= 1);
+        if cfg.slab_budget_bytes > 0 {
+            crate::mem::global_pool().set_budget_bytes(cfg.slab_budget_bytes);
+        }
+        if let Some(dir) = &cfg.spill_dir {
+            // `Ok(false)` (already enabled — e.g. a restarted
+            // coordinator over a shared SessionManager) is fine; only
+            // an I/O failure degrades to in-memory-only eviction.
+            if let Err(e) =
+                sessions.enable_spill(dir.clone(), cfg.spill_budget_bytes, ctx.clone())
+            {
+                eprintln!(
+                    "[coordinator] keycache spill tier disabled ({}): {e}",
+                    dir.display()
+                );
+            }
+        }
         if cfg.ckks_workers > 0 {
             ctx.set_workers(cfg.ckks_workers);
         }
@@ -930,10 +980,16 @@ impl Coordinator {
     }
 
     /// Gate a submission on the session's key-cache state (the
-    /// eviction-safe protocol's server half).
+    /// eviction-safe protocol's server half). `lookup` already
+    /// promotes spilled keys back to residency, so `Evicted` here
+    /// means the spill tier (if any) could not help either.
     fn check_session(&self, session_id: u64) -> Result<(), SubmitError> {
         match self.sessions.lookup(session_id) {
             CacheState::Resident(_) => Ok(()),
+            // `lookup` never returns `Spilled` (it reloads instead),
+            // but admit defensively if that ever changes: the worker
+            // will promote on its own lookup.
+            CacheState::Spilled => Ok(()),
             CacheState::Evicted => {
                 self.metrics
                     .rejected_keys_evicted
@@ -1032,7 +1088,11 @@ fn run_group(
 fn mid_flight_error(sessions: &SessionManager, session_id: u64) -> SubmitError {
     match sessions.peek(session_id) {
         CacheState::Unknown => SubmitError::NoSession,
-        CacheState::Evicted | CacheState::Resident(_) => SubmitError::KeysEvicted,
+        // `Spilled` mid-flight still means the worker's own lookup
+        // failed to promote in time — surface as the retryable error.
+        CacheState::Evicted | CacheState::Spilled | CacheState::Resident(_) => {
+            SubmitError::KeysEvicted
+        }
     }
 }
 
@@ -1101,6 +1161,9 @@ pub(crate) fn run_group_with(
     // whole group being abandoned.
     let still_resident = |failed: &mut Option<SubmitError>| {
         if failed.is_none() {
+            // `Spilled` keeps serving: this evaluation already holds
+            // the session `Arc`, and the next lookup promotes the
+            // keys back from disk.
             if let CacheState::Evicted | CacheState::Unknown = sessions.peek(session_id) {
                 *failed = Some(mid_flight_error(sessions, session_id));
             }

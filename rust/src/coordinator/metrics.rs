@@ -153,8 +153,14 @@ pub struct Metrics {
     /// connection cap was reached (accept-path backpressure).
     pub net_rejected_overload: AtomicU64,
     /// Shared with the session key cache: hits / misses / evictions /
-    /// resident bytes (see [`crate::keycache`]).
+    /// resident bytes, plus the disk spill tier's counters (see
+    /// [`crate::keycache`]).
     pub keycache: Arc<KeyCacheStats>,
+    /// Shared with the slab pool backing every `Scratch` handle
+    /// (see [`crate::mem`]); `Metrics::default()` wires in a detached
+    /// all-zero instance, [`Metrics::with_keycache`] the global
+    /// pool's.
+    pub slab: Arc<crate::mem::SlabStats>,
     /// End-to-end latency (admission → response).
     pub encrypted_latency: Mutex<Histogram>,
     pub plain_latency: Mutex<Histogram>,
@@ -190,6 +196,10 @@ impl Metrics {
     pub fn with_keycache(keycache: Arc<KeyCacheStats>) -> Self {
         Metrics {
             keycache,
+            // The serving path's scratch handles all draw from the
+            // global slab pool, so its counters are the ones a
+            // coordinator snapshot should report.
+            slab: crate::mem::global_pool().stats(),
             ..Default::default()
         }
     }
@@ -272,6 +282,17 @@ pub struct MetricsSnapshot {
     pub dag_ops: u64,
     pub dag_waves: u64,
     pub dag_width: u64,
+    /// Memory plane — slab pool: bytes parked in free lists (gauge,
+    /// never exceeds the slab budget) and checkout hit/miss counts.
+    pub slab_resident_bytes: u64,
+    pub slab_hits: u64,
+    pub slab_misses: u64,
+    /// Memory plane — keycache spill tier: bytes on disk (gauge),
+    /// reloads that saved a client re-upload, and corrupt spill files
+    /// detected (each deleted, degrading to the re-register protocol).
+    pub keycache_spilled_bytes: u64,
+    pub keycache_spill_hits: u64,
+    pub keycache_spill_corrupt: u64,
 }
 
 impl Metrics {
@@ -296,6 +317,7 @@ impl Metrics {
         };
         let fill_ratio = |fill: f64, cap: u64| if cap == 0 { 0.0 } else { fill / cap as f64 };
         let kc = self.keycache.snapshot();
+        let sl = self.slab.snapshot();
         MetricsSnapshot {
             encrypted_completed: self.encrypted_completed.load(Ordering::Relaxed),
             plain_completed: self.plain_completed.load(Ordering::Relaxed),
@@ -341,6 +363,12 @@ impl Metrics {
             dag_ops: self.dag_ops.load(Ordering::Relaxed),
             dag_waves: self.dag_waves.load(Ordering::Relaxed),
             dag_width: self.dag_width.load(Ordering::Relaxed),
+            slab_resident_bytes: sl.resident_bytes,
+            slab_hits: sl.hits,
+            slab_misses: sl.misses,
+            keycache_spilled_bytes: kc.spilled_bytes,
+            keycache_spill_hits: kc.spill_hits,
+            keycache_spill_corrupt: kc.spill_corrupt,
         }
     }
 }
@@ -399,6 +427,12 @@ impl MetricsSnapshot {
         put(&mut out, "dag_ops", self.dag_ops.to_string());
         put(&mut out, "dag_waves", self.dag_waves.to_string());
         put(&mut out, "dag_width", self.dag_width.to_string());
+        put(&mut out, "slab_resident_bytes", self.slab_resident_bytes.to_string());
+        put(&mut out, "slab_hits", self.slab_hits.to_string());
+        put(&mut out, "slab_misses", self.slab_misses.to_string());
+        put(&mut out, "keycache_spilled_bytes", self.keycache_spilled_bytes.to_string());
+        put(&mut out, "keycache_spill_hits", self.keycache_spill_hits.to_string());
+        put(&mut out, "keycache_spill_corrupt", self.keycache_spill_corrupt.to_string());
         out.push('}');
         out
     }
@@ -558,5 +592,33 @@ mod tests {
         let m2 = Metrics::with_keycache(stats.clone());
         stats.misses.fetch_add(7, Ordering::Relaxed);
         assert_eq!(m2.snapshot().keycache_misses, 7);
+    }
+
+    #[test]
+    fn memory_plane_fields_flow_into_snapshot_and_json() {
+        let m = Metrics::default();
+        m.slab.hits.fetch_add(9, Ordering::Relaxed);
+        m.slab.resident_bytes.fetch_add(4096, Ordering::Relaxed);
+        m.keycache.spilled_bytes.fetch_add(777, Ordering::Relaxed);
+        m.keycache.spill_hits.fetch_add(2, Ordering::Relaxed);
+        m.keycache.spill_corrupt.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.slab_hits, 9);
+        assert_eq!(s.slab_resident_bytes, 4096);
+        assert_eq!(s.keycache_spilled_bytes, 777);
+        assert_eq!(s.keycache_spill_hits, 2);
+        assert_eq!(s.keycache_spill_corrupt, 1);
+        let json = s.to_json_line();
+        assert!(json.contains("\"slab_resident_bytes\":4096"));
+        assert!(json.contains("\"keycache_spilled_bytes\":777"));
+        assert!(json.contains("\"keycache_spill_corrupt\":1"));
+        // `with_keycache` wires the *global* pool's counters.
+        let m2 = Metrics::with_keycache(std::sync::Arc::new(
+            crate::keycache::KeyCacheStats::default(),
+        ));
+        assert!(std::sync::Arc::ptr_eq(
+            &m2.slab,
+            &crate::mem::global_pool().stats()
+        ));
     }
 }

@@ -15,8 +15,11 @@
 //! retained keys back under the same id ([`SessionManager::reregister`]).
 
 use crate::ckks::keys::{GaloisKeys, RelinKey};
+use crate::ckks::rns::ContextRef;
 use crate::hrf::client::EvalKeys;
-use crate::keycache::{CacheState, KeyCache, KeyCacheConfig, KeyCacheStats};
+use crate::keycache::{CacheState, KeyCache, KeyCacheConfig, KeyCacheStats, SpillCodec, SpillConfig};
+use crate::net::codec;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -156,6 +159,69 @@ impl SessionManager {
     pub fn keycache_stats(&self) -> Arc<KeyCacheStats> {
         self.cache.stats()
     }
+
+    /// Attach the disk spill tier: evicted sessions serialize their
+    /// evaluation keys (wire codec encoding, fully re-validated on
+    /// reload) into `dir`, capped at `budget_bytes`, and reload
+    /// transparently on the next lookup — `KeysEvicted` then means
+    /// the spill tier is full too. `ctx` is needed to re-validate key
+    /// polys against the server's modulus chain on reload. Returns
+    /// `Ok(false)` if a tier was already enabled (no-op).
+    pub fn enable_spill(
+        &self,
+        dir: PathBuf,
+        budget_bytes: u64,
+        ctx: ContextRef,
+    ) -> std::io::Result<bool> {
+        self.cache.enable_spill(
+            SpillConfig { dir, budget_bytes },
+            Box::new(SessionSpillCodec { ctx }),
+        )
+    }
+
+    /// Whether the spill tier is attached.
+    pub fn spill_enabled(&self) -> bool {
+        self.cache.spill_enabled()
+    }
+
+    /// Bytes currently parked in the spill tier (0 when disabled).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.cache.spilled_bytes()
+    }
+
+    /// Sessions currently in the spill tier (0 when disabled).
+    pub fn spilled_len(&self) -> usize {
+        self.cache.spilled_len()
+    }
+}
+
+/// [`SpillCodec`] for [`Session`]s: the wire codec's evaluation-key
+/// encoding prefixed with the session id. Decoding runs the same
+/// defensive validation as a network key upload (residues checked
+/// against the modulus chain, Galois elements recomputed, trailing
+/// bytes rejected), so a torn or tampered spill file can never put
+/// malformed limbs in front of the NTT kernels — it just reads as
+/// corrupt and the session degrades to the re-register protocol.
+struct SessionSpillCodec {
+    ctx: ContextRef,
+}
+
+impl SpillCodec<Session> for SessionSpillCodec {
+    fn encode(&self, s: &Session) -> Vec<u8> {
+        codec::encode_session_keys(s.id, &s.relin, &s.galois)
+    }
+
+    fn decode(&self, id: u64, bytes: &[u8]) -> Option<Session> {
+        let (sid, relin, galois) = codec::decode_session_keys(bytes, &self.ctx).ok()?;
+        if sid != id {
+            return None; // file does not belong to this session
+        }
+        Some(Session { id, relin, galois })
+    }
+
+    fn size_bytes(&self, s: &Session) -> usize {
+        s.key_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +311,48 @@ mod tests {
         assert!(mgr.reregister_keys(id, &bundle));
         assert_eq!(mgr.len(), 1);
         assert!(!mgr.reregister_keys(id + 100, &bundle));
+    }
+
+    #[test]
+    fn spill_tier_reloads_evicted_session_keys_bit_identically() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut kg = KeyGenerator::new(&ctx, 7);
+        let r = kg.gen_relin_key(&ctx);
+        let g = kg.gen_galois_keys(&ctx, &[1]);
+        let session_bytes = (r.key_bytes() + g.key_bytes()) as u64;
+        let mgr = SessionManager::with_config(KeyCacheConfig {
+            num_shards: 2,
+            budget_bytes: session_bytes * 3 / 2, // one session + slack
+        });
+        let dir = std::env::temp_dir().join(format!(
+            "cryptotree-session-spill-test-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(mgr.enable_spill(dir.clone(), 1 << 30, ctx.clone()).unwrap());
+        assert!(mgr.spill_enabled());
+        // Enabling twice is a no-op, not an error.
+        assert!(!mgr.enable_spill(dir.clone(), 1 << 30, ctx.clone()).unwrap());
+
+        let id0 = mgr.register(r.clone(), g.clone());
+        let golden = codec::encode_session_keys(id0, &r, &g);
+        let _id1 = mgr.register(r.clone(), g.clone()); // evicts id0 → spills
+        assert!(matches!(mgr.peek(id0), CacheState::Spilled));
+        assert_eq!(mgr.spilled_len(), 1);
+        assert!(mgr.spilled_bytes() > 0);
+
+        // Lookup reloads from disk instead of reporting Evicted…
+        let reloaded = match mgr.lookup(id0) {
+            CacheState::Resident(s) => s,
+            _ => panic!("expected transparent spill reload"),
+        };
+        // …and the keys are bit-identical to what was registered.
+        let bytes = codec::encode_session_keys(id0, &reloaded.relin, &reloaded.galois);
+        assert_eq!(bytes, golden, "reloaded keys must be bit-identical");
+        let stats = mgr.keycache_stats().snapshot();
+        assert_eq!(stats.spill_hits, 1);
+        assert_eq!(stats.spill_corrupt, 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

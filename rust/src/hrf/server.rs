@@ -312,8 +312,10 @@ pub struct HrfServer {
     /// static table; every [`HrfServer::execute_profiled`] re-seeds it
     /// from the measured `OpProfile` (the profile-feedback loop).
     cost_model: Mutex<CostModel>,
-    /// Shared checkout pool of per-worker `Scratch` buffer pools, so
-    /// DAG workers keep warm limb buffers across requests.
+    /// Checkout façade for per-worker `Scratch` handles. The warm
+    /// limb buffers live in the global slab pool (`crate::mem`), so
+    /// DAG workers share one byte-budgeted arena across requests and
+    /// across servers instead of pinning private warm sets.
     scratch_pool: ScratchPool,
 }
 
@@ -489,10 +491,12 @@ impl HrfServer {
 
     /// The op-parallel execution path: replay the schedule's hazard
     /// DAG across `workers` threads, each owning a [`CkksBackend`]
-    /// with its own evaluator and a `Scratch` pool checked out of the
-    /// server's [`ScratchPool`]. Worker op counters merge back into
-    /// `ev` (its monotone totals advance exactly as the serial path's
-    /// would) and warm scratch buffers return to the pool.
+    /// with its own evaluator and a `Scratch` handle checked out of
+    /// the server's [`ScratchPool`] façade — all handles draw from
+    /// the one byte-budgeted slab arena (`crate::mem`). Worker op
+    /// counters merge back into `ev` (its monotone totals advance
+    /// exactly as the serial path's would); recycled limb buffers are
+    /// already resident in the shared pool when a worker retires.
     fn execute_parallel(
         &self,
         ev: &mut Evaluator,

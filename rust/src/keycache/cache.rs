@@ -8,21 +8,34 @@
 //! entry, releases, then re-locks the chosen shard to evict — a benign
 //! race (the victim may have been touched or removed in between; the
 //! loop just re-checks the gauge and rescans).
+//!
+//! With a spill tier enabled ([`KeyCache::enable_spill`]) eviction
+//! additionally serializes the victim to disk *after* releasing its
+//! shard lock, and a lookup that finds a known-but-evicted id first
+//! tries to reload from disk before reporting [`CacheState::Evicted`]
+//! — see [`super::spill`] for the tier itself.
 
 use super::shard::Shard;
+use super::spill::{SpillCodec, SpillConfig, SpillTier};
 use super::stats::KeyCacheStats;
 use super::KeyCacheConfig;
 use crate::lockutil::lock_unpoisoned;
+use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// What a lookup found — the three states of the eviction-safe
-/// protocol.
+/// What a lookup found — the states of the eviction-safe protocol.
 #[derive(Debug)]
 pub enum CacheState<V> {
     /// Keys are resident; the lookup refreshed their LRU stamp.
     Resident(Arc<V>),
-    /// The id is known but its keys were evicted: the owner must
+    /// The id is known, not resident, but its keys sit in the disk
+    /// spill tier. Only [`KeyCache::peek`] reports this state —
+    /// [`KeyCache::lookup`] promotes spilled keys back to
+    /// `Resident` transparently.
+    Spilled,
+    /// The id is known but its keys were evicted (and, if a spill
+    /// tier exists, are not reloadable from it): the owner must
     /// re-register (same id, fresh key upload).
     Evicted,
     /// Never registered, or explicitly removed.
@@ -43,6 +56,16 @@ pub struct KeyCache<V> {
     /// Global LRU clock: every insert/touch draws a unique tick.
     clock: AtomicU64,
     stats: Arc<KeyCacheStats>,
+    /// The optional disk tier, set at most once (after construction,
+    /// so `KeyCacheConfig` stays `Copy` and existing callers are
+    /// untouched).
+    spill: OnceLock<SpillState<V>>,
+}
+
+/// Tier + serialization seam, bundled so they enable atomically.
+struct SpillState<V> {
+    tier: SpillTier,
+    codec: Box<dyn SpillCodec<V>>,
 }
 
 impl<V> KeyCache<V> {
@@ -53,7 +76,33 @@ impl<V> KeyCache<V> {
             budget_bytes: cfg.budget_bytes,
             clock: AtomicU64::new(0),
             stats: Arc::new(KeyCacheStats::default()),
+            spill: OnceLock::new(),
         }
+    }
+
+    /// Attach the disk spill tier: budget evictions serialize through
+    /// `codec` into `cfg.dir` (created, and wiped of stale spill
+    /// files) and reload transparently on the next lookup. Idempotent
+    /// in effect: returns `Ok(false)` and changes nothing if a tier
+    /// was already enabled.
+    pub fn enable_spill(&self, cfg: SpillConfig, codec: Box<dyn SpillCodec<V>>) -> io::Result<bool> {
+        let tier = SpillTier::new(cfg, self.stats.clone())?;
+        Ok(self.spill.set(SpillState { tier, codec }).is_ok())
+    }
+
+    /// Whether a spill tier is attached.
+    pub fn spill_enabled(&self) -> bool {
+        self.spill.get().is_some()
+    }
+
+    /// Bytes currently parked in the spill tier (0 when disabled).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.stats.spilled_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently in the spill tier (0 when disabled).
+    pub fn spilled_len(&self) -> usize {
+        self.spill.get().map_or(0, |s| s.tier.spilled_len())
     }
 
     fn shard(&self, id: u64) -> &Mutex<Shard<V>> {
@@ -87,6 +136,12 @@ impl<V> KeyCache<V> {
                 .fetch_add(bytes as u64, Ordering::Relaxed);
         }
         self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+        // A fresh registration supersedes any older spilled copy of
+        // this id — drop it so a later reload can't resurrect stale
+        // keys.
+        if let Some(sp) = self.spill.get() {
+            sp.tier.discard(id);
+        }
         self.enforce_budget(Some(id));
     }
 
@@ -106,11 +161,26 @@ impl<V> KeyCache<V> {
     /// the hit rate stays one count per request.
     pub fn get_untracked(&self, id: u64) -> Option<Arc<V>> {
         let tick = self.tick();
-        lock_unpoisoned(self.shard(id)).get(id, tick)
+        let known = {
+            let mut sh = lock_unpoisoned(self.shard(id));
+            if let Some(v) = sh.get(id, tick) {
+                return Some(v);
+            }
+            sh.is_known(id)
+        };
+        if known {
+            self.reload_from_spill(id)
+        } else {
+            None
+        }
     }
 
     /// Full protocol state for `id`. Resident hits refresh LRU and
-    /// count as cache hits; known-but-evicted ids count as misses.
+    /// count as cache hits; known-but-not-resident ids count as RAM
+    /// misses, then — with a spill tier enabled — try a transparent
+    /// disk reload before reporting [`CacheState::Evicted`]. A
+    /// successful reload promotes the keys back to resident (counted
+    /// in `spill_hits`, not as a second cache hit).
     pub fn lookup(&self, id: u64) -> CacheState<V> {
         let tick = self.tick();
         let mut sh = lock_unpoisoned(self.shard(id));
@@ -121,22 +191,31 @@ impl<V> KeyCache<V> {
         } else if sh.is_known(id) {
             drop(sh);
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
-            CacheState::Evicted
+            match self.reload_from_spill(id) {
+                Some(v) => CacheState::Resident(v),
+                None => CacheState::Evicted,
+            }
         } else {
             CacheState::Unknown
         }
     }
 
-    /// State for `id` without touching LRU order or hit/miss counters
-    /// (introspection: tests, metrics probes).
+    /// State for `id` without touching LRU order, hit/miss counters or
+    /// the spill tier's files (introspection: tests, metrics probes).
     pub fn peek(&self, id: u64) -> CacheState<V> {
-        let sh = lock_unpoisoned(self.shard(id));
-        if let Some(v) = sh.peek(id) {
-            CacheState::Resident(v)
-        } else if sh.is_known(id) {
-            CacheState::Evicted
-        } else {
+        let known = {
+            let sh = lock_unpoisoned(self.shard(id));
+            if let Some(v) = sh.peek(id) {
+                return CacheState::Resident(v);
+            }
+            sh.is_known(id)
+        };
+        if !known {
             CacheState::Unknown
+        } else if self.spill.get().is_some_and(|sp| sp.tier.contains(id)) {
+            CacheState::Spilled
+        } else {
+            CacheState::Evicted
         }
     }
 
@@ -146,14 +225,21 @@ impl<V> KeyCache<V> {
         lock_unpoisoned(self.shard(id)).is_known(id)
     }
 
-    /// Forget `id` entirely; returns whether it was known.
+    /// Forget `id` entirely (RAM and spill tier); returns whether it
+    /// was known.
     pub fn remove(&self, id: u64) -> bool {
-        let mut sh = lock_unpoisoned(self.shard(id));
-        let (freed, known) = sh.remove(id);
-        if let Some(b) = freed {
-            self.stats
-                .resident_bytes
-                .fetch_sub(b as u64, Ordering::Relaxed);
+        let known = {
+            let mut sh = lock_unpoisoned(self.shard(id));
+            let (freed, known) = sh.remove(id);
+            if let Some(b) = freed {
+                self.stats
+                    .resident_bytes
+                    .fetch_sub(b as u64, Ordering::Relaxed);
+            }
+            known
+        };
+        if let Some(sp) = self.spill.get() {
+            sp.tier.discard(id);
         }
         known
     }
@@ -218,18 +304,70 @@ impl<V> KeyCache<V> {
             };
             let mut sh = lock_unpoisoned(&self.shards[i]);
             match sh.evict_oldest_excluding(keep) {
-                Some((_, bytes)) => {
+                Some((vid, bytes, value)) => {
                     // Subtract under the shard lock (see `insert`).
                     self.stats
                         .resident_bytes
                         .fetch_sub(bytes as u64, Ordering::Relaxed);
                     self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    // Demote to disk *after* releasing the shard lock:
+                    // serializing multi-MiB keys must not stall every
+                    // other request routed to this shard.
+                    drop(sh);
+                    if let Some(sp) = self.spill.get() {
+                        let payload = sp.codec.encode(&value);
+                        sp.tier.store(vid, &payload);
+                    }
                 }
                 // Raced away (touched/removed between scan and lock):
                 // re-check the gauge and rescan.
                 None => continue,
             }
         }
+    }
+
+    /// Try to promote `id`'s keys from the spill tier back to
+    /// resident. On success the spill file is consumed (a later
+    /// eviction re-spills fresh bytes) and the value re-enters the
+    /// LRU as most-recent; the resident budget is re-enforced around
+    /// it. Any unusable file (unreadable or undecodable) is deleted so
+    /// the id degrades cleanly to `Evicted`.
+    fn reload_from_spill(&self, id: u64) -> Option<Arc<V>> {
+        let sp = self.spill.get()?;
+        let value = match sp.tier.load(id).and_then(|bytes| {
+            let v = sp.codec.decode(id, &bytes);
+            if v.is_none() {
+                // Readable but not decodable for this id: corrupt.
+                sp.tier.discard(id);
+                self.stats.spill_corrupt.fetch_add(1, Ordering::Relaxed);
+            }
+            v
+        }) {
+            Some(v) => v,
+            None => {
+                self.stats.spill_misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        sp.tier.discard(id);
+        let bytes = sp.codec.size_bytes(&value);
+        let tick = self.tick();
+        let value = Arc::new(value);
+        {
+            let mut sh = lock_unpoisoned(self.shard(id));
+            let replaced = sh.insert(id, value.clone(), bytes, tick);
+            if let Some(old) = replaced {
+                self.stats
+                    .resident_bytes
+                    .fetch_sub(old as u64, Ordering::Relaxed);
+            }
+            self.stats
+                .resident_bytes
+                .fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+        self.stats.spill_hits.fetch_add(1, Ordering::Relaxed);
+        self.enforce_budget(Some(id));
+        Some(value)
     }
 }
 
@@ -349,5 +487,132 @@ mod tests {
             CacheState::Resident(v) => assert_eq!(*v, 7),
             other => panic!("expected resident, got {other:?}"),
         }
+    }
+
+    // ---- spill tier integration ----
+
+    struct U64Codec;
+
+    impl SpillCodec<u64> for U64Codec {
+        fn encode(&self, v: &u64) -> Vec<u8> {
+            v.to_le_bytes().to_vec()
+        }
+        fn decode(&self, _id: u64, b: &[u8]) -> Option<u64> {
+            Some(u64::from_le_bytes(b.try_into().ok()?))
+        }
+        fn size_bytes(&self, _v: &u64) -> usize {
+            10 // matches the synthetic sizes the tests insert with
+        }
+    }
+
+    fn spilling_cache(tag: &str, budget: u64, spill_budget: u64) -> (KeyCache<u64>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "cryptotree-cache-spill-test-{}-{tag}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let c = cache(1, budget);
+        let enabled = c
+            .enable_spill(
+                SpillConfig {
+                    dir: dir.clone(),
+                    budget_bytes: spill_budget,
+                },
+                Box::new(U64Codec),
+            )
+            .expect("spill dir");
+        assert!(enabled && c.spill_enabled());
+        (c, dir)
+    }
+
+    #[test]
+    fn evicted_value_spills_and_lookup_reloads_it() {
+        let (c, dir) = spilling_cache("reload", 20, 1 << 20);
+        c.insert(0, 40, 10);
+        c.insert(1, 41, 10);
+        c.insert(2, 42, 10); // evicts 0 → spilled
+        assert!(matches!(c.peek(0), CacheState::Spilled));
+        assert_eq!(c.spilled_len(), 1);
+        match c.lookup(0) {
+            CacheState::Resident(v) => assert_eq!(*v, 40),
+            other => panic!("expected reload, got {other:?}"),
+        }
+        let s = c.stats().snapshot();
+        assert_eq!(s.spill_hits, 1);
+        assert_eq!(s.spill_corrupt, 0);
+        // The reload promoted 0 and re-enforced the budget: someone
+        // else (the then-LRU, id 1) went to disk in its place.
+        assert!(c.peek(0).is_resident());
+        assert!(matches!(c.peek(1), CacheState::Spilled));
+        assert!(c.resident_bytes() <= 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_spill_file_degrades_to_evicted() {
+        let (c, dir) = spilling_cache("corrupt", 10, 1 << 20);
+        c.insert(0, 40, 10);
+        c.insert(1, 41, 10); // evicts 0 → spilled
+        std::fs::write(dir.join("0.spill"), b"xyz").unwrap(); // truncated garbage
+        assert!(matches!(c.lookup(0), CacheState::Evicted));
+        let s = c.stats().snapshot();
+        assert_eq!(s.spill_corrupt, 1);
+        assert_eq!(s.spill_hits, 0);
+        // Re-registration (the plain protocol) still recovers.
+        c.insert(0, 40, 10);
+        assert!(c.peek(0).is_resident());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn full_spill_tier_falls_back_to_plain_eviction() {
+        let (c, dir) = spilling_cache("full", 10, 0); // spill tier can hold nothing
+        c.insert(0, 40, 10);
+        c.insert(1, 41, 10); // evicts 0; spill refuses the payload
+        assert_eq!(c.spilled_len(), 0);
+        assert!(matches!(c.peek(0), CacheState::Evicted));
+        assert!(matches!(c.lookup(0), CacheState::Evicted));
+        assert_eq!(c.stats().snapshot().spill_misses, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reinsert_supersedes_spilled_copy() {
+        let (c, dir) = spilling_cache("supersede", 20, 1 << 20);
+        c.insert(0, 40, 10);
+        c.insert(1, 41, 10);
+        c.insert(2, 42, 10); // evicts 0 → spilled
+        assert!(matches!(c.peek(0), CacheState::Spilled));
+        c.insert(0, 77, 10); // fresh keys for 0; stale spill dropped
+        assert!(!dir.join("0.spill").exists());
+        match c.lookup(0) {
+            CacheState::Resident(v) => assert_eq!(*v, 77),
+            other => panic!("expected fresh keys, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn remove_clears_spilled_copy_too() {
+        let (c, dir) = spilling_cache("remove", 10, 1 << 20);
+        c.insert(0, 40, 10);
+        c.insert(1, 41, 10); // evicts 0 → spilled
+        assert!(matches!(c.peek(0), CacheState::Spilled));
+        assert!(c.remove(0));
+        assert!(matches!(c.peek(0), CacheState::Unknown));
+        assert_eq!(c.spilled_len(), 0);
+        assert!(!dir.join("0.spill").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn get_untracked_also_reloads_from_spill() {
+        let (c, dir) = spilling_cache("untracked", 10, 1 << 20);
+        c.insert(0, 40, 10);
+        c.insert(1, 41, 10); // evicts 0 → spilled
+        let v = c.get_untracked(0).expect("reload via get_untracked");
+        assert_eq!(*v, 40);
+        assert_eq!(c.stats().snapshot().spill_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

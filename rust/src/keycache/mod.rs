@@ -32,6 +32,11 @@
 //!   the same id ([`SessionManager::reregister`]
 //!   (crate::coordinator::session::SessionManager::reregister)) rather
 //!   than re-enrolling.
+//! * **Disk spill tier** (opt-in, [`KeyCache::enable_spill`]) — budget
+//!   eviction demotes keys to a size-capped local directory instead of
+//!   discarding them, and the next lookup reloads them transparently;
+//!   `KeysEvicted` then means "the spill tier is full too". See
+//!   [`spill`] for the layout and crash-safety story.
 //!
 //! The cache is generic over the stored value so the serving layer can
 //! cache [`Session`](crate::coordinator::session::Session)s while the
@@ -45,9 +50,11 @@
 
 pub mod cache;
 pub mod shard;
+pub mod spill;
 pub mod stats;
 
 pub use cache::{CacheState, KeyCache};
+pub use spill::{SpillCodec, SpillConfig};
 pub use stats::{KeyCacheStats, KeyCacheStatsSnapshot};
 
 /// Tuning for one [`KeyCache`].

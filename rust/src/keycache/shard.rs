@@ -84,8 +84,10 @@ impl<V> Shard<V> {
     }
 
     /// Evict the least-recently-used entry other than `keep`. The id
-    /// stays known (evicted ≠ removed). Returns `(id, bytes)` freed.
-    pub fn evict_oldest_excluding(&mut self, keep: Option<u64>) -> Option<(u64, usize)> {
+    /// stays known (evicted ≠ removed). Returns `(id, bytes, value)` —
+    /// the value is handed back (not dropped) so the cache can demote
+    /// it to the spill tier after releasing this shard's lock.
+    pub fn evict_oldest_excluding(&mut self, keep: Option<u64>) -> Option<(u64, usize, Arc<V>)> {
         let (tick, id) = {
             let (&t, &i) = self.lru.iter().find(|&(_, &id)| Some(id) != keep)?;
             (t, i)
@@ -95,7 +97,7 @@ impl<V> Shard<V> {
             .entries
             .remove(&id)
             .expect("lru index entry must be resident");
-        Some((id, e.bytes))
+        Some((id, e.bytes, e.value))
     }
 
     /// Forget the id entirely. Returns (resident bytes freed, whether
@@ -136,9 +138,9 @@ mod tests {
     fn lru_order_is_insert_order_until_touched() {
         let mut s = shard_with(&[7, 8, 9]);
         assert_eq!(s.oldest_tick_excluding(None), Some(0));
-        assert_eq!(s.evict_oldest_excluding(None), Some((7, 10)));
-        assert_eq!(s.evict_oldest_excluding(None), Some((8, 10)));
-        assert_eq!(s.evict_oldest_excluding(None), Some((9, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((7, 10, Arc::new(7))));
+        assert_eq!(s.evict_oldest_excluding(None), Some((8, 10, Arc::new(8))));
+        assert_eq!(s.evict_oldest_excluding(None), Some((9, 10, Arc::new(9))));
         assert_eq!(s.evict_oldest_excluding(None), None);
     }
 
@@ -146,9 +148,9 @@ mod tests {
     fn touch_moves_entry_to_back() {
         let mut s = shard_with(&[1, 2, 3]);
         assert!(s.get(1, 100).is_some()); // 1 becomes most-recent
-        assert_eq!(s.evict_oldest_excluding(None), Some((2, 10)));
-        assert_eq!(s.evict_oldest_excluding(None), Some((3, 10)));
-        assert_eq!(s.evict_oldest_excluding(None), Some((1, 10)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((2, 10, Arc::new(2))));
+        assert_eq!(s.evict_oldest_excluding(None), Some((3, 10, Arc::new(3))));
+        assert_eq!(s.evict_oldest_excluding(None), Some((1, 10, Arc::new(1))));
     }
 
     #[test]
@@ -171,7 +173,7 @@ mod tests {
     fn keep_excludes_entry_from_eviction() {
         let mut s = shard_with(&[1, 2]);
         assert_eq!(s.oldest_tick_excluding(Some(1)), Some(1));
-        assert_eq!(s.evict_oldest_excluding(Some(1)), Some((2, 10)));
+        assert_eq!(s.evict_oldest_excluding(Some(1)), Some((2, 10, Arc::new(2))));
         // Only the kept entry remains: nothing evictable.
         assert_eq!(s.evict_oldest_excluding(Some(1)), None);
         assert_eq!(s.oldest_tick_excluding(Some(1)), None);
@@ -184,7 +186,7 @@ mod tests {
         assert_eq!(old, Some(10));
         assert_eq!(s.resident_len(), 2);
         // 1 was refreshed by the replace; 2 is now oldest.
-        assert_eq!(s.evict_oldest_excluding(None), Some((2, 10)));
-        assert_eq!(s.evict_oldest_excluding(None), Some((1, 25)));
+        assert_eq!(s.evict_oldest_excluding(None), Some((2, 10, Arc::new(2))));
+        assert_eq!(s.evict_oldest_excluding(None), Some((1, 25, Arc::new(1))));
     }
 }

@@ -1,0 +1,347 @@
+//! Disk spill tier under the cache: RAM → disk → `KeysEvicted`.
+//!
+//! Without a spill tier the keycache's only pressure valve is a hard
+//! [`CacheState::Evicted`](super::CacheState) — a full client
+//! re-upload of multi-MiB evaluation keys over the wire. With one,
+//! budget eviction *demotes* keys instead of discarding them: the
+//! evicted value is serialized (via a caller-supplied [`SpillCodec`],
+//! in practice the `net/codec.rs` key encoding) into a size-capped
+//! local directory, and the next lookup reloads it transparently.
+//! `KeysEvicted` is reserved for "the spill tier is full too" (or was
+//! never enabled).
+//!
+//! # Directory layout
+//!
+//! One file per spilled session: `<session_id>.spill`, containing the
+//! codec's byte encoding of the value. Writes go through
+//! `<session_id>.tmp` + atomic rename, so a crash mid-write can never
+//! leave a half-written `.spill` file *with the final name*.
+//!
+//! # Crash-safety
+//!
+//! The tier is a cache of client-owned, re-uploadable material, so it
+//! is deliberately *not* durable: no fsync, and the directory is wiped
+//! on construction (session ids restart at 0 per process, so stale
+//! files from a previous run must never alias fresh ids). The failure
+//! model is: any unreadable or undecodable spill file is deleted and
+//! counted in `spill_corrupt`, and the lookup degrades to the plain
+//! `Evicted` → re-register protocol. A torn write surviving a rename
+//! (crash between rename and data reaching disk) is caught the same
+//! way, because the codec validates every residue on decode.
+//!
+//! # Concurrency
+//!
+//! One mutex guards the index *and* the file I/O. Spill traffic is the
+//! slow path by construction (it only runs on budget eviction and on
+//! reload-after-eviction), and serializing it keeps the
+//! `spilled_bytes` gauge exact and the store/evict/load interleavings
+//! trivially race-free. No shard lock is ever held while the spill
+//! lock is taken (the cache encodes values *after* releasing the
+//! shard lock).
+
+use super::stats::KeyCacheStats;
+use crate::lockutil::lock_unpoisoned;
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::io;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Serialization seam between the generic cache and the value type.
+/// The coordinator implements this for `Session` on top of the wire
+/// codec's key encoding (`net::codec::encode_session_keys`).
+///
+/// `decode` returns `None` for any byte string that does not decode to
+/// a valid value **for this id** — the spill tier treats that as a
+/// corrupt file, deletes it, and degrades to `Evicted`.
+pub trait SpillCodec<V>: Send + Sync {
+    fn encode(&self, value: &V) -> Vec<u8>;
+    fn decode(&self, id: u64, bytes: &[u8]) -> Option<V>;
+    /// In-RAM byte accounting for a reloaded value (what the cache
+    /// charges against its resident budget on promotion).
+    fn size_bytes(&self, value: &V) -> usize;
+}
+
+/// Where and how much to spill.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Directory for `<id>.spill` files. Created (and wiped of stale
+    /// spill files) on [`KeyCache::enable_spill`](super::KeyCache::enable_spill).
+    pub dir: PathBuf,
+    /// Byte cap on the sum of spill file sizes. Evicting past it
+    /// deletes the oldest spilled entries — those sessions fall back
+    /// to the `KeysEvicted` → re-register protocol.
+    pub budget_bytes: u64,
+}
+
+struct SpillEntry {
+    bytes: u64,
+    /// LRU stamp; also this entry's key in `lru`.
+    tick: u64,
+}
+
+#[derive(Default)]
+struct SpillIndex {
+    entries: HashMap<u64, SpillEntry>,
+    /// tick → id, oldest first. Ticks are unique (one global counter).
+    lru: BTreeMap<u64, u64>,
+}
+
+impl SpillIndex {
+    /// Track `id` at `bytes`/`tick`, returning the bytes of a replaced
+    /// entry (same id spilled again) so the caller can fix the gauge.
+    fn upsert(&mut self, id: u64, bytes: u64, tick: u64) -> Option<u64> {
+        let old = self.entries.insert(id, SpillEntry { bytes, tick });
+        if let Some(ref e) = old {
+            self.lru.remove(&e.tick);
+        }
+        self.lru.insert(tick, id);
+        old.map(|e| e.bytes)
+    }
+
+    fn remove(&mut self, id: u64) -> Option<u64> {
+        let e = self.entries.remove(&id)?;
+        self.lru.remove(&e.tick);
+        Some(e.bytes)
+    }
+
+    fn oldest(&self) -> Option<u64> {
+        self.lru.values().next().copied()
+    }
+}
+
+/// The on-disk tier: a size-capped, LRU-evicting directory of
+/// serialized values. Owned by [`KeyCache`](super::KeyCache) once
+/// spill is enabled; all counters land in the cache's shared
+/// [`KeyCacheStats`].
+pub(crate) struct SpillTier {
+    dir: PathBuf,
+    budget_bytes: u64,
+    clock: AtomicU64,
+    index: Mutex<SpillIndex>,
+    stats: Arc<KeyCacheStats>,
+}
+
+impl SpillTier {
+    /// Create the directory if needed and wipe stale `*.spill`/`*.tmp`
+    /// files from a previous process (ids restart at 0 per process).
+    pub(crate) fn new(cfg: SpillConfig, stats: Arc<KeyCacheStats>) -> io::Result<Self> {
+        fs::create_dir_all(&cfg.dir)?;
+        for entry in fs::read_dir(&cfg.dir)? {
+            let path = entry?.path();
+            let stale = matches!(
+                path.extension().and_then(|e| e.to_str()),
+                Some("spill") | Some("tmp")
+            );
+            if stale {
+                fs::remove_file(&path).ok();
+            }
+        }
+        Ok(SpillTier {
+            dir: cfg.dir,
+            budget_bytes: cfg.budget_bytes,
+            clock: AtomicU64::new(0),
+            index: Mutex::new(SpillIndex::default()),
+            stats,
+        })
+    }
+
+    fn file(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("{id}.spill"))
+    }
+
+    fn tmp(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("{id}.tmp"))
+    }
+
+    /// Spill `payload` for `id`. An entry larger than the whole spill
+    /// budget is refused outright (its session degrades to the plain
+    /// re-register protocol); otherwise oldest entries are deleted
+    /// until the payload fits. Write failures (disk full, permissions)
+    /// leave no entry behind — the session just isn't spilled.
+    pub(crate) fn store(&self, id: u64, payload: &[u8]) {
+        let bytes = payload.len() as u64;
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        let mut idx = lock_unpoisoned(&self.index);
+        if bytes > self.budget_bytes {
+            self.remove_locked(&mut idx, id);
+            return;
+        }
+        let tmp = self.tmp(id);
+        let ok = fs::write(&tmp, payload)
+            .and_then(|()| fs::rename(&tmp, self.file(id)))
+            .is_ok();
+        if !ok {
+            fs::remove_file(&tmp).ok();
+            self.remove_locked(&mut idx, id);
+            return;
+        }
+        if let Some(old) = idx.upsert(id, bytes, tick) {
+            self.stats.spilled_bytes.fetch_sub(old, Ordering::Relaxed);
+        }
+        self.stats.spilled_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.spill_writes.fetch_add(1, Ordering::Relaxed);
+        // Size cap: delete oldest spilled entries (never the one just
+        // written — it is the newest tick by construction).
+        while self.stats.spilled_bytes.load(Ordering::Relaxed) > self.budget_bytes {
+            let victim = match idx.oldest() {
+                Some(v) => v,
+                None => break,
+            };
+            self.remove_locked(&mut idx, victim);
+            self.stats.spill_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Read back `id`'s spilled payload. `None` if never spilled,
+    /// already evicted from the tier, or unreadable (the file is then
+    /// deleted and `spill_corrupt` counted — the caller sees the same
+    /// `None` as a plain spill miss).
+    pub(crate) fn load(&self, id: u64) -> Option<Vec<u8>> {
+        let mut idx = lock_unpoisoned(&self.index);
+        idx.entries.get(&id)?;
+        match fs::read(self.file(id)) {
+            Ok(bytes) => Some(bytes),
+            Err(_) => {
+                self.remove_locked(&mut idx, id);
+                self.stats.spill_corrupt.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Drop `id` from the tier (file + index + gauge). Used when the
+    /// value is promoted back to RAM, re-registered fresh, removed, or
+    /// found corrupt.
+    pub(crate) fn discard(&self, id: u64) {
+        let mut idx = lock_unpoisoned(&self.index);
+        self.remove_locked(&mut idx, id);
+    }
+
+    pub(crate) fn contains(&self, id: u64) -> bool {
+        lock_unpoisoned(&self.index).entries.contains_key(&id)
+    }
+
+    pub(crate) fn spilled_len(&self) -> usize {
+        lock_unpoisoned(&self.index).entries.len()
+    }
+
+    fn remove_locked(&self, idx: &mut SpillIndex, id: u64) {
+        if let Some(bytes) = idx.remove(id) {
+            self.stats.spilled_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        }
+        fs::remove_file(self.file(id)).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cryptotree-spill-test-{}-{tag}",
+            std::process::id()
+        ));
+        fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn tier(tag: &str, budget: u64) -> (SpillTier, Arc<KeyCacheStats>, PathBuf) {
+        let dir = tmpdir(tag);
+        let stats = Arc::new(KeyCacheStats::default());
+        let t = SpillTier::new(
+            SpillConfig {
+                dir: dir.clone(),
+                budget_bytes: budget,
+            },
+            stats.clone(),
+        )
+        .expect("spill dir");
+        (t, stats, dir)
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_discard() {
+        let (t, stats, dir) = tier("roundtrip", 1 << 20);
+        t.store(7, b"relin+galois");
+        assert!(t.contains(7));
+        assert_eq!(stats.snapshot().spilled_bytes, 12);
+        assert_eq!(t.load(7).as_deref(), Some(&b"relin+galois"[..]));
+        t.discard(7);
+        assert!(!t.contains(7));
+        assert_eq!(t.load(7), None);
+        assert_eq!(stats.snapshot().spilled_bytes, 0);
+        assert!(!dir.join("7.spill").exists());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_evicts_oldest_spilled_entry() {
+        let (t, stats, dir) = tier("budget", 10);
+        t.store(1, b"aaaa"); // 4 bytes
+        t.store(2, b"bbbb"); // 8 total
+        t.store(3, b"cccc"); // 12 > 10 → evicts id 1
+        assert!(!t.contains(1));
+        assert!(t.contains(2) && t.contains(3));
+        let s = stats.snapshot();
+        assert_eq!(s.spilled_bytes, 8);
+        assert_eq!(s.spill_evictions, 1);
+        assert_eq!(s.spill_writes, 3);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_payload_is_refused() {
+        let (t, stats, dir) = tier("oversize", 4);
+        t.store(1, b"too big for the tier");
+        assert!(!t.contains(1));
+        assert_eq!(stats.snapshot().spilled_bytes, 0);
+        assert!(!dir.join("1.spill").exists());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unreadable_file_counts_corrupt_and_clears_entry() {
+        let (t, stats, dir) = tier("corrupt", 1 << 20);
+        t.store(5, b"payload");
+        fs::remove_file(dir.join("5.spill")).unwrap(); // file vanishes out from under the index
+        assert_eq!(t.load(5), None);
+        assert_eq!(stats.snapshot().spill_corrupt, 1);
+        assert!(!t.contains(5));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn construction_wipes_stale_files() {
+        let dir = tmpdir("wipe");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("99.spill"), b"stale").unwrap();
+        fs::write(dir.join("98.tmp"), b"torn").unwrap();
+        let stats = Arc::new(KeyCacheStats::default());
+        let t = SpillTier::new(
+            SpillConfig {
+                dir: dir.clone(),
+                budget_bytes: 1 << 20,
+            },
+            stats,
+        )
+        .unwrap();
+        assert!(!dir.join("99.spill").exists());
+        assert!(!dir.join("98.tmp").exists());
+        assert_eq!(t.spilled_len(), 0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_same_id_replaces_gauge_not_duplicates() {
+        let (t, stats, dir) = tier("replace", 1 << 20);
+        t.store(4, b"first");
+        t.store(4, b"second-longer");
+        assert_eq!(stats.snapshot().spilled_bytes, 13);
+        assert_eq!(t.spilled_len(), 1);
+        assert_eq!(t.load(4).as_deref(), Some(&b"second-longer"[..]));
+        fs::remove_dir_all(&dir).ok();
+    }
+}

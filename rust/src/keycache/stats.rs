@@ -18,6 +18,23 @@ pub struct KeyCacheStats {
     pub inserts: AtomicU64,
     /// Current resident key bytes across all shards (gauge).
     pub resident_bytes: AtomicU64,
+    /// Current bytes parked in the disk spill tier (gauge; 0 when
+    /// spill is disabled).
+    pub spilled_bytes: AtomicU64,
+    /// Lookups whose keys were reloaded from the spill tier instead of
+    /// forcing a client re-upload.
+    pub spill_hits: AtomicU64,
+    /// Reload attempts that found nothing usable on disk (never
+    /// spilled, evicted from the tier, unreadable, or undecodable).
+    pub spill_misses: AtomicU64,
+    /// Spill files found unreadable or undecodable (each one is
+    /// deleted; a subset of `spill_misses`).
+    pub spill_corrupt: AtomicU64,
+    /// Values serialized to the spill tier on budget eviction.
+    pub spill_writes: AtomicU64,
+    /// Spilled entries deleted because the spill tier itself hit its
+    /// byte cap — those sessions fall back to `KeysEvicted`.
+    pub spill_evictions: AtomicU64,
 }
 
 impl KeyCacheStats {
@@ -28,6 +45,12 @@ impl KeyCacheStats {
             evictions: self.evictions.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
             resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            spilled_bytes: self.spilled_bytes.load(Ordering::Relaxed),
+            spill_hits: self.spill_hits.load(Ordering::Relaxed),
+            spill_misses: self.spill_misses.load(Ordering::Relaxed),
+            spill_corrupt: self.spill_corrupt.load(Ordering::Relaxed),
+            spill_writes: self.spill_writes.load(Ordering::Relaxed),
+            spill_evictions: self.spill_evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -40,6 +63,12 @@ pub struct KeyCacheStatsSnapshot {
     pub evictions: u64,
     pub inserts: u64,
     pub resident_bytes: u64,
+    pub spilled_bytes: u64,
+    pub spill_hits: u64,
+    pub spill_misses: u64,
+    pub spill_corrupt: u64,
+    pub spill_writes: u64,
+    pub spill_evictions: u64,
 }
 
 impl KeyCacheStatsSnapshot {
@@ -50,6 +79,17 @@ impl KeyCacheStatsSnapshot {
             0.0
         } else {
             self.hits as f64 / total as f64
+        }
+    }
+
+    /// spill_hits / (spill_hits + spill_misses); 0 when no reload was
+    /// ever attempted (spill disabled or nothing evicted).
+    pub fn spill_hit_rate(&self) -> f64 {
+        let total = self.spill_hits + self.spill_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.spill_hits as f64 / total as f64
         }
     }
 }

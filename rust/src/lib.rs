@@ -32,6 +32,11 @@
 //!   behind those sessions: exact `key_bytes` accounting, per-shard
 //!   LRU eviction under a global budget, and the eviction-safe
 //!   re-registration protocol (`SubmitError::KeysEvicted`).
+//! * [`mem`] — the memory plane: a sharded, size-classed,
+//!   byte-budgeted slab pool behind every `Scratch` handle (one
+//!   bounded arena for all evaluator temporaries instead of
+//!   per-worker warm lists), paired with the keycache disk spill tier
+//!   in [`keycache`].
 //! * [`obs`] — the observability plane: request-scoped span timelines
 //!   through the serving tier (trace ring + wire dump) and a timing
 //!   engine backend that profiles HE op wall-time per schedule
@@ -63,6 +68,7 @@ pub mod forest;
 pub mod hrf;
 pub mod keycache;
 pub mod lockutil;
+pub mod mem;
 pub mod net;
 pub mod nrf;
 pub mod obs;

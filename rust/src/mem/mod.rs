@@ -1,0 +1,49 @@
+//! The memory plane: one bounded arena for the whole data plane.
+//!
+//! * [`slab`] — the sharded, size-classed, byte-budgeted [`SlabPool`]
+//!   backing every [`crate::ckks::Scratch`] handle. One process-wide
+//!   pool ([`global_pool`]) replaces the per-evaluator warm lists, so
+//!   peak idle limb-buffer memory is capped and observable
+//!   (`slab_resident_bytes` in `MetricsSnapshot`) instead of
+//!   multiplying with `op_workers × ckks_workers`.
+//!
+//! The disk half of the memory plane — the keycache spill tier that
+//! demotes `KeysEvicted` to "spill tier full too" — lives in
+//! [`crate::keycache::spill`] next to the cache it extends.
+//!
+//! Budget knobs: `CoordinatorConfig::slab_budget_bytes` (authoritative
+//! when serving) or the `CRYPTOTREE_SLAB_BUDGET` environment variable
+//! (bytes, read once at first pool touch); default
+//! [`DEFAULT_SLAB_BUDGET_BYTES`].
+
+pub mod slab;
+
+pub use slab::{SlabPool, SlabStats, SlabStatsSnapshot};
+
+use std::sync::{Arc, OnceLock};
+
+/// Default global slab budget: 256 MiB of idle limb buffers. Generous
+/// for the demo parameter sets (one N=4096 depth-4 key-switch
+/// temporary is ~200 KiB) while still bounding a many-worker server.
+pub const DEFAULT_SLAB_BUDGET_BYTES: u64 = 256 * 1024 * 1024;
+
+/// Shard count of the global pool: comfortably above the realistic
+/// `op_workers × ckks_workers` product so home shards rarely collide.
+pub const DEFAULT_SLAB_SHARDS: usize = 16;
+
+static GLOBAL: OnceLock<Arc<SlabPool>> = OnceLock::new();
+
+/// The process-wide slab pool. Initialized on first touch; the budget
+/// comes from `CRYPTOTREE_SLAB_BUDGET` (bytes) when set to a positive
+/// integer, else [`DEFAULT_SLAB_BUDGET_BYTES`]. `Coordinator::start`
+/// re-budgets it from `CoordinatorConfig::slab_budget_bytes`.
+pub fn global_pool() -> &'static Arc<SlabPool> {
+    GLOBAL.get_or_init(|| {
+        let budget = std::env::var("CRYPTOTREE_SLAB_BUDGET")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .filter(|&b| b > 0)
+            .unwrap_or(DEFAULT_SLAB_BUDGET_BYTES);
+        Arc::new(SlabPool::new(DEFAULT_SLAB_SHARDS, budget))
+    })
+}

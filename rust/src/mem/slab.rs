@@ -1,0 +1,421 @@
+//! Sharded, size-classed slab pool for limb buffers.
+//!
+//! Every CKKS temporary in this codebase is a flat `Vec<u64>` of
+//! `limbs × N` words ([`crate::ckks::rns::RnsPoly`]), so the whole
+//! data plane recycles buffers from a small, highly regular set of
+//! sizes. Before this pool existed each [`crate::ckks::Evaluator`]
+//! owned a private warm list, which meant peak resident scratch
+//! multiplied with `op_workers × ckks_workers`: every DAG op worker
+//! and every limb-parallel worker pinned its own copies of the same
+//! size classes. The slab pool replaces all of those with **one
+//! bounded arena**:
+//!
+//! * **Sharded**: `num_shards` independent free lists, each behind its
+//!   own mutex. A [`crate::ckks::Scratch`] handle is pinned to one
+//!   *home* shard (round-robin at construction), so on the hot path a
+//!   checkout touches exactly one uncontended lock. Only when the home
+//!   shard has nothing suitable does it scan the other shards
+//!   (one lock at a time) before falling back to a fresh allocation.
+//! * **Size-classed**: free buffers are keyed by capacity in words
+//!   (`BTreeMap<usize, SizeClass>`); a request pops the smallest class
+//!   that fits (`range(len..)`), so a 6-limb buffer can serve a
+//!   5-limb request after a rescale without reallocating.
+//! * **Byte-budgeted**: a global budget caps the bytes parked in free
+//!   lists. The gauge is maintained with a reserve-then-insert CAS
+//!   loop, so `resident_bytes ≤ budget` holds at **every instant**,
+//!   not just between operations — the concurrency property test in
+//!   `tests/mem_props.rs` samples the gauge continuously. When a
+//!   returned buffer would overflow the budget the pool trims the
+//!   least-recently-touched size class first (LRU at class
+//!   granularity: one tick per class, bumped on insert), and drops the
+//!   incoming buffer only if trimming frees nothing.
+//!
+//! The pool holds only *idle* buffers. Checked-out buffers are plain
+//! owned `Vec<u64>`s — the type every caller already used — so no hot
+//! kernel changed signature, and a buffer that is never returned is
+//! simply freed by its owner as before.
+
+use crate::lockutil::lock_unpoisoned;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared counters for one [`SlabPool`] (lock-free; cloned into
+/// `coordinator::Metrics` so snapshots never touch the shard locks).
+#[derive(Default)]
+pub struct SlabStats {
+    /// Checkouts served from a free list (home shard or steal scan).
+    pub hits: AtomicU64,
+    /// Checkouts that fell back to a fresh allocation.
+    pub misses: AtomicU64,
+    /// Bytes currently parked in free lists. Never exceeds the budget.
+    pub resident_bytes: AtomicU64,
+    /// Buffers freed by the LRU trimmer to make room under the budget.
+    pub trims: AtomicU64,
+    /// Returned buffers dropped because trimming could not make room.
+    pub dropped: AtomicU64,
+}
+
+impl SlabStats {
+    pub fn snapshot(&self) -> SlabStatsSnapshot {
+        SlabStatsSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            trims: self.trims.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`SlabStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlabStatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub resident_bytes: u64,
+    pub trims: u64,
+    pub dropped: u64,
+}
+
+impl SlabStatsSnapshot {
+    /// Fraction of checkouts served from a free list.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One free list of identically-sized buffers.
+struct SizeClass {
+    bufs: Vec<Vec<u64>>,
+    /// Logical timestamp of the last insert into this class; the
+    /// trimmer evicts from the class with the smallest tick.
+    tick: u64,
+}
+
+/// One shard: size classes keyed by buffer capacity in words.
+#[derive(Default)]
+struct SlabShard {
+    classes: BTreeMap<usize, SizeClass>,
+}
+
+impl SlabShard {
+    /// Pop a buffer from the smallest class with capacity ≥ `len`.
+    fn pop_fit(&mut self, len: usize) -> Option<Vec<u64>> {
+        let cap = *self.classes.range(len..).next()?.0;
+        let class = self.classes.get_mut(&cap)?;
+        let buf = class.bufs.pop();
+        if class.bufs.is_empty() {
+            self.classes.remove(&cap);
+        }
+        buf
+    }
+
+    fn idle_buffers(&self) -> usize {
+        self.classes.values().map(|c| c.bufs.len()).sum()
+    }
+
+    fn idle_bytes(&self) -> u64 {
+        self.classes
+            .values()
+            .flat_map(|c| c.bufs.iter())
+            .map(|b| b.capacity() as u64 * 8)
+            .sum()
+    }
+}
+
+/// The sharded, byte-budgeted slab pool. See the module docs.
+pub struct SlabPool {
+    shards: Vec<Mutex<SlabShard>>,
+    budget_bytes: AtomicU64,
+    clock: AtomicU64,
+    stats: Arc<SlabStats>,
+}
+
+impl SlabPool {
+    pub fn new(num_shards: usize, budget_bytes: u64) -> Self {
+        let num_shards = num_shards.max(1);
+        SlabPool {
+            shards: (0..num_shards).map(|_| Mutex::new(SlabShard::default())).collect(),
+            budget_bytes: AtomicU64::new(budget_bytes),
+            clock: AtomicU64::new(0),
+            stats: Arc::new(SlabStats::default()),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes.load(Ordering::Acquire)
+    }
+
+    /// Shared counters (cheap handle; no locks on snapshot).
+    pub fn stats(&self) -> Arc<SlabStats> {
+        self.stats.clone()
+    }
+
+    /// Bytes currently parked in free lists.
+    pub fn resident_bytes(&self) -> u64 {
+        self.stats.resident_bytes.load(Ordering::Acquire)
+    }
+
+    /// Re-budget the pool, trimming down immediately if shrinking.
+    /// (Lowering the budget while other threads are returning buffers
+    /// can transiently leave the gauge above the *new* budget for the
+    /// duration of one in-flight `put`; it converges as soon as the
+    /// trim loop below wins.)
+    pub fn set_budget_bytes(&self, budget_bytes: u64) {
+        self.budget_bytes.store(budget_bytes, Ordering::Release);
+        while self.resident_bytes() > budget_bytes {
+            if !self.trim_one() {
+                break;
+            }
+        }
+    }
+
+    /// Checkout: a buffer of exactly `len` zeroed words.
+    pub fn take(&self, home: usize, len: usize) -> Vec<u64> {
+        match self.pop_recycled(home, len) {
+            Some(mut b) => {
+                b.clear();
+                b.resize(len, 0);
+                b
+            }
+            None => vec![0u64; len],
+        }
+    }
+
+    /// Checkout: a buffer holding a copy of `src` (single memcpy, no
+    /// zeroing).
+    pub fn take_copy(&self, home: usize, src: &[u64]) -> Vec<u64> {
+        match self.pop_recycled(home, src.len()) {
+            Some(mut b) => {
+                b.clear();
+                b.extend_from_slice(src);
+                b
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    fn pop_recycled(&self, home: usize, len: usize) -> Option<Vec<u64>> {
+        let n = self.shards.len();
+        let home = home % n;
+        // Home shard first (the hot path: one uncontended lock), then
+        // steal-scan the rest one lock at a time.
+        for i in 0..n {
+            let shard = &self.shards[(home + i) % n];
+            let popped = lock_unpoisoned(shard).pop_fit(len);
+            if let Some(b) = popped {
+                self.stats
+                    .resident_bytes
+                    .fetch_sub(b.capacity() as u64 * 8, Ordering::AcqRel);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(b);
+            }
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Return a buffer to `home`'s free lists. The budget is enforced
+    /// *before* the bytes become resident: a CAS reserves room, the
+    /// trimmer evicts cold classes to make it, and the buffer is
+    /// dropped outright only when the pool cannot be trimmed below
+    /// `budget - capacity` (e.g. the buffer alone exceeds the budget).
+    pub fn put(&self, home: usize, buf: Vec<u64>) {
+        let bytes = buf.capacity() as u64 * 8;
+        if bytes == 0 {
+            return;
+        }
+        loop {
+            let cur = self.stats.resident_bytes.load(Ordering::Acquire);
+            let budget = self.budget_bytes.load(Ordering::Acquire);
+            if cur + bytes > budget {
+                if self.trim_one() {
+                    continue;
+                }
+                self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                return; // drops `buf`
+            }
+            if self
+                .stats
+                .resident_bytes
+                .compare_exchange(cur, cur + bytes, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed);
+        let cap = buf.capacity();
+        let mut shard = lock_unpoisoned(&self.shards[home % self.shards.len()]);
+        let class = shard.classes.entry(cap).or_insert_with(|| SizeClass {
+            bufs: Vec::new(),
+            tick,
+        });
+        class.bufs.push(buf);
+        class.tick = tick;
+    }
+
+    /// Free one buffer from the globally least-recently-touched size
+    /// class. Returns `false` when every shard is empty. Scans with
+    /// one lock held at a time and re-checks under the lock before
+    /// popping, retrying if a concurrent checkout emptied the winner.
+    fn trim_one(&self) -> bool {
+        loop {
+            let mut best: Option<(usize, usize, u64)> = None; // (shard, cap, tick)
+            for (i, m) in self.shards.iter().enumerate() {
+                let shard = lock_unpoisoned(m);
+                for (&cap, class) in shard.classes.iter() {
+                    if best.map_or(true, |(_, _, t)| class.tick < t) {
+                        best = Some((i, cap, class.tick));
+                    }
+                }
+            }
+            let (i, cap, _) = match best {
+                Some(b) => b,
+                None => return false,
+            };
+            let mut shard = lock_unpoisoned(&self.shards[i]);
+            if let Some(class) = shard.classes.get_mut(&cap) {
+                if let Some(b) = class.bufs.pop() {
+                    if class.bufs.is_empty() {
+                        shard.classes.remove(&cap);
+                    }
+                    drop(shard);
+                    self.stats
+                        .resident_bytes
+                        .fetch_sub(b.capacity() as u64 * 8, Ordering::AcqRel);
+                    self.stats.trims.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                shard.classes.remove(&cap); // defensively clear an empty class
+            }
+            // The chosen class raced away between scan and re-lock;
+            // rescan for a new victim.
+        }
+    }
+
+    /// Idle buffers parked in one shard (test/introspection hook).
+    pub fn idle_buffers_in(&self, shard: usize) -> usize {
+        lock_unpoisoned(&self.shards[shard % self.shards.len()]).idle_buffers()
+    }
+
+    /// Idle buffers across all shards (test/introspection hook).
+    pub fn idle_buffers(&self) -> usize {
+        self.shards.iter().map(|m| lock_unpoisoned(m).idle_buffers()).sum()
+    }
+
+    /// Recount resident bytes by walking every free list. Equals
+    /// [`SlabPool::resident_bytes`] whenever the pool is quiescent
+    /// (no `put` mid-flight between its CAS reservation and the shard
+    /// insert); the accounting property test asserts exactly that
+    /// after joining all workers.
+    pub fn audit_resident_bytes(&self) -> u64 {
+        self.shards.iter().map(|m| lock_unpoisoned(m).idle_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(shards: usize, budget: u64) -> SlabPool {
+        SlabPool::new(shards, budget)
+    }
+
+    #[test]
+    fn take_miss_then_hit_reuses_capacity() {
+        let p = pool(2, 1 << 20);
+        let mut b = p.take(0, 16);
+        assert!(b.iter().all(|&x| x == 0));
+        b.iter_mut().for_each(|x| *x = 7);
+        let cap = b.capacity();
+        p.put(0, b);
+        assert_eq!(p.idle_buffers_in(0), 1);
+        let b2 = p.take(0, 8);
+        assert!(b2.capacity() >= 8 && cap >= b2.capacity());
+        assert!(b2.iter().all(|&x| x == 0), "recycled buffer not zeroed");
+        assert_eq!(p.idle_buffers_in(0), 0);
+        let s = p.stats().snapshot();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn first_fit_picks_smallest_sufficient_class() {
+        let p = pool(1, 1 << 20);
+        p.put(0, Vec::with_capacity(8));
+        p.put(0, Vec::with_capacity(32));
+        p.put(0, Vec::with_capacity(64));
+        let b = p.take(0, 16);
+        assert_eq!(b.capacity(), 32, "expected the 32-word class, not 64");
+        assert_eq!(p.idle_buffers(), 2);
+    }
+
+    #[test]
+    fn steal_scan_crosses_shards() {
+        let p = pool(4, 1 << 20);
+        p.put(3, vec![1u64; 16]);
+        let b = p.take(0, 16); // home shard 0 is empty; steals from 3
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&x| x == 0));
+        assert_eq!(p.stats().snapshot().hits, 1);
+        assert_eq!(p.idle_buffers(), 0);
+    }
+
+    #[test]
+    fn budget_never_exceeded_and_lru_class_trimmed_first() {
+        // Budget fits exactly two 64-word buffers (64 * 8 = 512 B).
+        let p = pool(1, 1024);
+        let mk = || vec![0u64; 64];
+        p.put(0, mk()); // class 64, tick 0
+        let b = p.take(0, 32); // leaves the class empty
+        p.put(0, b); // class 64 again, fresh tick
+        p.put(0, vec![0u64; 48]); // class 48: 384 + 512 = 896 B ≤ 1024, fits
+        assert!(p.resident_bytes() <= 1024);
+        // A third large buffer must trim the oldest class to fit.
+        p.put(0, mk());
+        assert!(p.resident_bytes() <= 1024, "budget exceeded: {}", p.resident_bytes());
+        let s = p.stats().snapshot();
+        assert!(s.trims >= 1, "expected at least one LRU trim");
+        assert_eq!(p.audit_resident_bytes(), p.resident_bytes());
+    }
+
+    #[test]
+    fn oversized_buffer_is_dropped_not_pooled() {
+        let p = pool(2, 100); // budget below one 64-word buffer
+        p.put(0, vec![0u64; 64]);
+        assert_eq!(p.resident_bytes(), 0);
+        assert_eq!(p.idle_buffers(), 0);
+        assert_eq!(p.stats().snapshot().dropped, 1);
+    }
+
+    #[test]
+    fn shrinking_budget_trims_down() {
+        let p = pool(2, 1 << 20);
+        for i in 0..8 {
+            p.put(i % 2, vec![0u64; 128]);
+        }
+        let before = p.resident_bytes();
+        assert_eq!(before, 8 * 128 * 8);
+        p.set_budget_bytes(2 * 128 * 8);
+        assert!(p.resident_bytes() <= 2 * 128 * 8);
+        assert_eq!(p.audit_resident_bytes(), p.resident_bytes());
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_ignored() {
+        let p = pool(1, 1024);
+        p.put(0, Vec::new());
+        assert_eq!(p.idle_buffers(), 0);
+        assert_eq!(p.resident_bytes(), 0);
+    }
+}

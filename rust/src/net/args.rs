@@ -50,6 +50,16 @@ impl Args {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string flag: `None` when absent. A bare `--key` (no
+    /// value — parsed as the switch marker) also counts as absent,
+    /// since a marker is never a usable path or address.
+    pub fn get_opt_str(&self, key: &str) -> Option<String> {
+        self.flags
+            .get(key)
+            .filter(|v| !v.is_empty() && v.as_str() != "true")
+            .cloned()
+    }
+
     /// Was the switch present at all?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
@@ -80,5 +90,13 @@ mod tests {
         assert_eq!(a.get("missing", 7u32), 7);
         // A switch parsed as a typed flag falls back to the default.
         assert_eq!(a.get("spawn-server", 3usize), 3);
+    }
+
+    #[test]
+    fn opt_str_distinguishes_value_switch_and_absent() {
+        let a = Args::parse(&argv(&["--spill-dir", "/tmp/x", "--verbose"]));
+        assert_eq!(a.get_opt_str("spill-dir").as_deref(), Some("/tmp/x"));
+        assert_eq!(a.get_opt_str("verbose"), None); // bare switch
+        assert_eq!(a.get_opt_str("missing"), None);
     }
 }

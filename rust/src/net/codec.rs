@@ -322,6 +322,37 @@ fn get_eval_keys(r: &mut ByteReader<'_>, ctx: &CkksContext) -> Result<EvalKeys, 
     Ok(EvalKeys { relin, galois })
 }
 
+/// Byte encoding of one session's evaluation keys — the keycache
+/// spill tier's on-disk format ([`crate::keycache::spill`]). Same
+/// layout as the wire's key upload, prefixed with the session id so a
+/// reload can verify a file belongs to the session it was looked up
+/// for (defense against renamed/aliased spill files).
+pub fn encode_session_keys(id: u64, relin: &RelinKey, galois: &GaloisKeys) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, id);
+    put_ksw(&mut buf, &relin.0);
+    put_galois(&mut buf, galois);
+    buf
+}
+
+/// Decode [`encode_session_keys`] bytes with full wire-grade
+/// validation: every residue checked against the modulus chain, key
+/// polys required to be full-basis NTT with the special limb, Galois
+/// elements recomputed from the steps, and no trailing bytes. Returns
+/// the embedded session id alongside the keys; the caller must check
+/// it matches the id it asked for.
+pub fn decode_session_keys(
+    payload: &[u8],
+    ctx: &CkksContext,
+) -> Result<(u64, RelinKey, GaloisKeys), CodecError> {
+    let mut r = ByteReader::new(payload);
+    let id = r.get_u64()?;
+    let relin = RelinKey(get_ksw(&mut r, ctx)?);
+    let galois = get_galois(&mut r, ctx)?;
+    r.finish()?;
+    Ok((id, relin, galois))
+}
+
 fn put_enc_scores(buf: &mut Vec<u8>, s: &EncScores) {
     put_u32(buf, s.scores.len() as u32);
     for ct in &s.scores {
@@ -396,6 +427,12 @@ fn put_metrics_snapshot(buf: &mut Vec<u8>, s: &MetricsSnapshot) {
     put_u64(buf, s.dag_ops);
     put_u64(buf, s.dag_waves);
     put_u64(buf, s.dag_width);
+    put_u64(buf, s.slab_resident_bytes);
+    put_u64(buf, s.slab_hits);
+    put_u64(buf, s.slab_misses);
+    put_u64(buf, s.keycache_spilled_bytes);
+    put_u64(buf, s.keycache_spill_hits);
+    put_u64(buf, s.keycache_spill_corrupt);
 }
 
 fn get_metrics_snapshot(r: &mut ByteReader<'_>) -> Result<MetricsSnapshot, CodecError> {
@@ -438,6 +475,12 @@ fn get_metrics_snapshot(r: &mut ByteReader<'_>) -> Result<MetricsSnapshot, Codec
         dag_ops: r.get_u64()?,
         dag_waves: r.get_u64()?,
         dag_width: r.get_u64()?,
+        slab_resident_bytes: r.get_u64()?,
+        slab_hits: r.get_u64()?,
+        slab_misses: r.get_u64()?,
+        keycache_spilled_bytes: r.get_u64()?,
+        keycache_spill_hits: r.get_u64()?,
+        keycache_spill_corrupt: r.get_u64()?,
     })
 }
 

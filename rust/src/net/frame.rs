@@ -25,7 +25,12 @@ pub const MAGIC: [u8; 4] = *b"HRFW";
 /// v2: `MetricsSnapshot` gained trailing DAG-executor fields
 /// (`dag_ops`/`dag_waves`/`dag_width`). Mixed-version peers fail
 /// cleanly at the framing layer instead of misdecoding metrics.
-pub const PROTOCOL_VERSION: u8 = 2;
+///
+/// v3: `MetricsSnapshot` gained trailing memory-plane fields
+/// (`slab_resident_bytes`/`slab_hits`/`slab_misses`/
+/// `keycache_spilled_bytes`/`keycache_spill_hits`/
+/// `keycache_spill_corrupt`).
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Header bytes preceding every payload (magic + version + length).
 pub const HEADER_LEN: usize = 9;

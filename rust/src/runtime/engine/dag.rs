@@ -25,8 +25,9 @@
 //!   ops off a shared priority queue, executes them against a
 //!   per-location `RwLock` register file, and decrements successor
 //!   in-degrees. Each worker owns its own backend (its own
-//!   `Evaluator` + `Scratch` pool for CKKS), so the op hot path takes
-//!   no lock a hazard edge hasn't already made uncontended.
+//!   `Evaluator` + `Scratch` handle into the shared slab pool for
+//!   CKKS), so the op hot path takes no lock a hazard edge hasn't
+//!   already made uncontended.
 //! * [`CostModel`] supplies the ready-queue priority: longest
 //!   critical-path-to-exit first, with per-op costs seeded either from
 //!   static weights or from a measured [`OpProfile`] (the PR-7

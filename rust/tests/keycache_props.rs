@@ -114,6 +114,9 @@ fn state_of(c: &KeyCache<u64>, id: u64) -> &'static str {
     match c.peek(id) {
         CacheState::Resident(_) => "resident",
         CacheState::Evicted => "evicted",
+        // No spill tier is enabled in these tests, so this state is
+        // unreachable here (spill semantics live in mem_props.rs).
+        CacheState::Spilled => "spilled",
         CacheState::Unknown => "unknown",
     }
 }
@@ -147,6 +150,7 @@ fn property_cache_matches_lru_model_and_budget() {
                 let got = match cache.lookup(id) {
                     CacheState::Resident(_) => "resident",
                     CacheState::Evicted => "evicted",
+                    CacheState::Spilled => "spilled", // unreachable: no spill tier
                     CacheState::Unknown => "unknown",
                 };
                 let want = model.get(id);

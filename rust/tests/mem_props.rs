@@ -1,0 +1,531 @@
+//! Properties of the memory plane (PR 9): the sharded slab pool
+//! behind every `Scratch` handle, and the keycache disk-spill tier.
+//!
+//! * **Budget** — `resident_bytes <= budget` holds at every instant,
+//!   including under concurrent checkout/return from many threads (a
+//!   sampler thread watches the gauge while workers hammer the pool),
+//!   and the gauge agrees exactly with a walk of the free lists once
+//!   the pool is quiescent.
+//! * **Reuse** — returning a buffer and re-requesting the same (or a
+//!   smaller) size is a pool hit; capacity is recycled, not
+//!   reallocated.
+//! * **Spill round trip** — with the spill tier enabled, a
+//!   budget-evicted session's keys reload transparently from disk:
+//!   the full coordinator path serves the evicted session with ZERO
+//!   `KeysEvicted` rejections and bit-identical scores.
+//! * **Spill failure** — a corrupt spill file degrades to the plain
+//!   `KeysEvicted`/re-register protocol (no panic, counted as
+//!   corrupt); a zero-byte spill budget behaves exactly like the
+//!   pre-spill cache.
+//! * **Determinism** — `HrfServer::execute` stays bit-identical to
+//!   serial across the `op_workers × ckks_workers` grid when every
+//!   evaluator draws from one deliberately tiny shared slab pool.
+
+use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::rns::CkksContext;
+use cryptotree::ckks::{
+    Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator, Scratch,
+};
+use cryptotree::coordinator::{
+    CacheState, Coordinator, CoordinatorConfig, SessionManager, SubmitError,
+};
+use cryptotree::data::adult;
+use cryptotree::forest::{RandomForest, RandomForestConfig};
+use cryptotree::hrf::client::{reshuffle_and_pack, HrfClient};
+use cryptotree::hrf::{EncRequest, HrfModel, HrfServer};
+use cryptotree::keycache::KeyCacheConfig;
+use cryptotree::mem::SlabPool;
+use cryptotree::nrf::activation::Activation;
+use cryptotree::nrf::NeuralForest;
+use cryptotree::rng::Xoshiro256pp;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ------------------------------------------------------------- slab
+
+/// Sequential model check: random checkout/return traffic against a
+/// small budget. After every single operation the gauge respects the
+/// budget, and whenever all outstanding buffers are returned the
+/// gauge equals an exact walk of the free lists.
+#[test]
+fn slab_budget_and_gauge_agree_under_random_traffic() {
+    let mut rng = Xoshiro256pp::new(901);
+    for case in 0..20 {
+        let shards = 1 + rng.next_index(4);
+        let budget = 8 * 64 * (1 + rng.next_below(64)); // multiples of one u64 row
+        let pool = SlabPool::new(shards, budget);
+        let mut held: Vec<(usize, Vec<u64>)> = Vec::new();
+        for step in 0..400 {
+            let home = rng.next_index(shards);
+            if rng.next_f64() < 0.5 || held.is_empty() {
+                let len = 1 + rng.next_index(96);
+                let b = pool.take(home, len);
+                assert_eq!(b.len(), len);
+                assert!(b.iter().all(|&w| w == 0), "checkout must be zeroed");
+                held.push((home, b));
+            } else {
+                let (home, b) = held.swap_remove(rng.next_index(held.len()));
+                pool.put(home, b);
+            }
+            assert!(
+                pool.resident_bytes() <= budget,
+                "case {case} step {step}: resident {} > budget {budget}",
+                pool.resident_bytes()
+            );
+        }
+        for (home, b) in held.drain(..) {
+            pool.put(home, b);
+        }
+        // Quiescent: the lock-free gauge and the exact walk agree.
+        assert_eq!(pool.resident_bytes(), pool.audit_resident_bytes(), "case {case}");
+        assert!(pool.resident_bytes() <= budget, "case {case}");
+    }
+}
+
+/// Concurrency property: worker threads hammer one small pool through
+/// `Scratch` handles while a sampler thread continuously asserts the
+/// budget invariant. The CAS reserve in `put` means the gauge can
+/// never overshoot even transiently.
+#[test]
+fn slab_budget_holds_at_every_instant_under_contention() {
+    let budget = 64 * 1024u64;
+    let pool = Arc::new(SlabPool::new(4, budget));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let sampler = {
+        let pool = pool.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut peak = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let r = pool.resident_bytes();
+                peak = peak.max(r);
+                assert!(r <= budget, "sampler saw resident {r} > budget {budget}");
+            }
+            peak
+        })
+    };
+
+    let workers: Vec<_> = (0..4)
+        .map(|t| {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256pp::new(9100 + t);
+                let mut scratch = Scratch::in_pool(pool);
+                let mut held: Vec<Vec<u64>> = Vec::new();
+                for _ in 0..2000 {
+                    if rng.next_f64() < 0.55 || held.is_empty() {
+                        // Up to 2 KiB each: 4 threads × a few live
+                        // buffers comfortably exceeds the budget, so
+                        // trims and drops actually fire.
+                        held.push(scratch.take(1 + rng.next_index(256)));
+                    } else {
+                        let b = held.swap_remove(rng.next_index(held.len()));
+                        scratch.put(b);
+                    }
+                }
+                for b in held.drain(..) {
+                    scratch.put(b);
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let peak = sampler.join().expect("sampler must not have paniced");
+
+    // Quiescent audit: no bytes were lost or double-counted by the
+    // concurrent take/put/trim interleavings.
+    assert_eq!(pool.resident_bytes(), pool.audit_resident_bytes());
+    assert!(pool.resident_bytes() <= budget);
+    assert!(peak <= budget);
+    let s = pool.stats().snapshot();
+    // The workload oversubscribes the budget, so the pool must have
+    // actually exercised its pressure paths.
+    assert!(s.hits + s.misses > 0);
+    assert!(
+        s.trims + s.dropped > 0,
+        "budget pressure never fired: {s:?}"
+    );
+}
+
+/// Size-class reuse: a returned buffer satisfies the next request of
+/// the same length (exact class) and of a smaller length (first fit
+/// picks the smallest sufficient class) without allocating.
+#[test]
+fn slab_recycles_capacity_across_requests() {
+    let pool = SlabPool::new(1, 1 << 20);
+    let b = pool.take(0, 512);
+    let cap = b.capacity();
+    pool.put(0, b);
+    let hits_before = pool.stats().snapshot().hits;
+
+    let b2 = pool.take(0, 512); // exact class
+    assert_eq!(b2.capacity(), cap, "same-size request must reuse the slab");
+    pool.put(0, b2);
+    let b3 = pool.take(0, 100); // smaller request, first-fit
+    assert_eq!(b3.capacity(), cap, "smaller request must reuse the slab");
+    assert_eq!(b3.len(), 100);
+    assert_eq!(pool.stats().snapshot().hits, hits_before + 2);
+    pool.put(0, b3);
+}
+
+// ------------------------------------------------------ spill e2e
+
+struct Workload {
+    ctx: cryptotree::ckks::rns::ContextRef,
+    enc: Encoder,
+    server: Arc<HrfServer>,
+}
+
+/// Cheap ring (N=4096, depth 4) + tiny forest: the memory-plane
+/// protocol is under test, not the numerics. Same shape as the
+/// keycache property tests.
+fn spill_workload(seed: u64) -> Workload {
+    let params = Arc::new(CkksParams::build("mem-e2e-n4096-d4", 4096, 60, 40, 4, 3.2));
+    let ctx = CkksContext::new(params.clone());
+    let enc = Encoder::new(&ctx);
+    let ds = adult::generate(400, seed);
+    let rf = RandomForest::fit(
+        &ds,
+        &RandomForestConfig {
+            n_trees: 4,
+            tree: cryptotree::forest::tree::TreeConfig {
+                max_depth: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        seed + 1,
+    );
+    let nf = NeuralForest::from_forest(
+        &rf,
+        Activation::Poly {
+            coeffs: vec![0.0, 1.0],
+        },
+    );
+    let model = HrfModel::from_neural_forest(&nf, ds.n_features(), params.slots()).unwrap();
+    let server = Arc::new(HrfServer::new(model));
+    Workload { ctx, enc, server }
+}
+
+fn make_client(w: &Workload, seed: u64) -> HrfClient {
+    let mut kg = KeyGenerator::new(&w.ctx, seed);
+    let pk = kg.gen_public_key(&w.ctx);
+    let rlk = kg.gen_relin_key(&w.ctx);
+    let gk = kg.gen_galois_keys(&w.ctx, &w.server.eval_key_requirements(1));
+    HrfClient::with_eval_keys(
+        Encryptor::new(pk, seed + 1),
+        Decryptor::new(kg.secret_key()),
+        rlk,
+        gk,
+    )
+}
+
+fn temp_spill_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cryptotree-mem-props-{}-{tag}", std::process::id()))
+}
+
+/// Tentpole acceptance: with the spill tier enabled through the
+/// coordinator config, cache pressure demotes session A's keys to
+/// disk and the next submission reloads them transparently —
+/// bit-identical scores, zero `KeysEvicted` rejections end to end.
+#[test]
+fn spilled_session_serves_transparently_with_zero_evicted_errors() {
+    let w = spill_workload(9200);
+    let mut client_a = make_client(&w, 9301);
+    let keys_a = client_a.eval_keys().expect("retained keys").clone();
+    let session_bytes = (keys_a.relin.key_bytes() + keys_a.galois.key_bytes()) as u64;
+    let mut client_b = make_client(&w, 9401);
+    let keys_b = client_b.eval_keys().expect("retained keys").clone();
+
+    // RAM budget fits one session; the spill tier takes the overflow.
+    let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+        num_shards: 4,
+        budget_bytes: session_bytes * 3 / 2,
+    }));
+    let dir = temp_spill_dir("transparent");
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            spill_dir: Some(dir.clone()),
+            spill_budget_bytes: 64 * 1024 * 1024,
+            ..Default::default()
+        },
+        w.ctx.clone(),
+        w.server.clone(),
+        sessions.clone(),
+        None,
+    );
+    assert!(sessions.spill_enabled());
+
+    let sid_a = sessions.register_keys(&keys_a);
+    let mut rng = Xoshiro256pp::new(9501);
+    let x: Vec<f64> = (0..w.server.model.plan.d)
+        .map(|_| rng.next_f64() * 2.0 - 1.0)
+        .collect();
+    let ct = client_a.encrypt_input(&w.ctx, &w.enc, &w.server.model, &x);
+
+    // Baseline before any eviction.
+    let rx = coord.submit_encrypted(sid_a, ct.clone()).expect("submit");
+    let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let (scores_before, _) = client_a.decrypt_response(&w.ctx, &w.enc, &outs);
+
+    // Pressure: registering B evicts A — but A's keys spill to disk
+    // instead of vanishing.
+    let _sid_b = sessions.register_keys(&keys_b);
+    assert!(sessions.resident_bytes() <= session_bytes * 3 / 2);
+    assert!(
+        matches!(sessions.peek(sid_a), CacheState::Spilled),
+        "A's keys should be on disk, not gone"
+    );
+    assert!(sessions.spilled_len() >= 1);
+    assert!(sessions.spilled_bytes() > 0);
+
+    // The same submission that returns KeysEvicted without the spill
+    // tier now succeeds: lookup promotes A back from disk.
+    let rx = coord
+        .submit_encrypted(sid_a, ct.clone())
+        .expect("spilled session must submit without re-registration");
+    let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let (scores_after, _) = client_a.decrypt_response(&w.ctx, &w.enc, &outs);
+
+    assert_eq!(scores_before.len(), scores_after.len());
+    for (b, a) in scores_before.iter().zip(&scores_after) {
+        assert!(
+            (b - a).abs() < 1e-9,
+            "reloaded keys diverged: {scores_before:?} vs {scores_after:?}"
+        );
+    }
+    // And both agree with the plaintext slot model.
+    let expect = w
+        .server
+        .model
+        .forward_slots_plain(&reshuffle_and_pack(&w.server.model, &x));
+    for (s, e) in scores_after.iter().zip(&expect) {
+        assert!((s - e).abs() < 5e-3, "HE vs plain: {scores_after:?} vs {expect:?}");
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(
+        snap.rejected_keys_evicted, 0,
+        "spill tier must absorb the eviction"
+    );
+    assert!(snap.keycache_spill_hits >= 1, "reload must be counted");
+    assert_eq!(snap.keycache_spill_corrupt, 0);
+    assert!(snap.keycache_evictions >= 1, "RAM eviction still happened");
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A corrupt spill file is a miss, not a panic: the session degrades
+/// to the plain `KeysEvicted` → re-register protocol and the file is
+/// quarantined (deleted + counted).
+#[test]
+fn corrupt_spill_file_degrades_to_reregister_protocol() {
+    let w = spill_workload(9600);
+    let mut client_a = make_client(&w, 9701);
+    let keys_a = client_a.eval_keys().expect("retained keys").clone();
+    let session_bytes = (keys_a.relin.key_bytes() + keys_a.galois.key_bytes()) as u64;
+    let mut client_b = make_client(&w, 9801);
+    let keys_b = client_b.eval_keys().expect("retained keys").clone();
+
+    let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+        num_shards: 4,
+        budget_bytes: session_bytes * 3 / 2,
+    }));
+    let dir = temp_spill_dir("corrupt");
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            spill_dir: Some(dir.clone()),
+            spill_budget_bytes: 64 * 1024 * 1024,
+            ..Default::default()
+        },
+        w.ctx.clone(),
+        w.server.clone(),
+        sessions.clone(),
+        None,
+    );
+
+    let sid_a = sessions.register_keys(&keys_a);
+    let _sid_b = sessions.register_keys(&keys_b); // evicts + spills A
+    assert!(matches!(sessions.peek(sid_a), CacheState::Spilled));
+
+    // Sabotage the spill file (truncation / bit rot / partial disk).
+    let spill_file = dir.join(format!("{sid_a}.spill"));
+    assert!(spill_file.exists(), "expected {} on disk", spill_file.display());
+    std::fs::write(&spill_file, b"not a key-switching key").unwrap();
+
+    let mut rng = Xoshiro256pp::new(9901);
+    let x: Vec<f64> = (0..w.server.model.plan.d)
+        .map(|_| rng.next_f64() * 2.0 - 1.0)
+        .collect();
+    let ct = client_a.encrypt_input(&w.ctx, &w.enc, &w.server.model, &x);
+
+    // The reload fails cleanly: typed error, not a panic, and the
+    // poisoned file is removed so it cannot fail again.
+    match coord.submit_encrypted(sid_a, ct.clone()) {
+        Err(SubmitError::KeysEvicted) => {}
+        Ok(_) => panic!("corrupt spill file must not serve"),
+        Err(other) => panic!("expected KeysEvicted, got {other:?}"),
+    }
+    assert!(!spill_file.exists(), "corrupt file must be quarantined");
+
+    // Standard recovery still works.
+    assert!(sessions.reregister_keys(sid_a, &keys_a));
+    let rx = coord
+        .submit_encrypted(sid_a, ct)
+        .expect("submit after re-registration");
+    let outs = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let (scores, _) = client_a.decrypt_response(&w.ctx, &w.enc, &outs);
+    let expect = w
+        .server
+        .model
+        .forward_slots_plain(&reshuffle_and_pack(&w.server.model, &x));
+    for (s, e) in scores.iter().zip(&expect) {
+        assert!((s - e).abs() < 5e-3, "HE vs plain: {scores:?} vs {expect:?}");
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.keycache_spill_corrupt, 1);
+    assert!(snap.rejected_keys_evicted >= 1);
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// With a zero-byte spill budget every spill write is refused, so the
+/// cache behaves exactly like the pre-spill build: `Evicted`, typed
+/// rejection, recovery via re-registration.
+#[test]
+fn zero_spill_budget_behaves_like_plain_eviction() {
+    let w = spill_workload(10_000);
+    let mut client_a = make_client(&w, 10_101);
+    let keys_a = client_a.eval_keys().expect("retained keys").clone();
+    let session_bytes = (keys_a.relin.key_bytes() + keys_a.galois.key_bytes()) as u64;
+    let mut client_b = make_client(&w, 10_201);
+    let keys_b = client_b.eval_keys().expect("retained keys").clone();
+
+    let sessions = Arc::new(SessionManager::with_config(KeyCacheConfig {
+        num_shards: 4,
+        budget_bytes: session_bytes * 3 / 2,
+    }));
+    let dir = temp_spill_dir("budget0");
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            queue_capacity: 16,
+            spill_dir: Some(dir.clone()),
+            spill_budget_bytes: 0, // tier present but can hold nothing
+            ..Default::default()
+        },
+        w.ctx.clone(),
+        w.server.clone(),
+        sessions.clone(),
+        None,
+    );
+
+    let sid_a = sessions.register_keys(&keys_a);
+    let _sid_b = sessions.register_keys(&keys_b);
+    // Too big for the (empty) spill budget: truly evicted.
+    assert!(matches!(sessions.peek(sid_a), CacheState::Evicted));
+    assert_eq!(sessions.spilled_len(), 0);
+
+    let mut rng = Xoshiro256pp::new(10_301);
+    let x: Vec<f64> = (0..w.server.model.plan.d)
+        .map(|_| rng.next_f64() * 2.0 - 1.0)
+        .collect();
+    let ct = client_a.encrypt_input(&w.ctx, &w.enc, &w.server.model, &x);
+    match coord.submit_encrypted(sid_a, ct.clone()) {
+        Err(SubmitError::KeysEvicted) => {}
+        other => panic!("expected KeysEvicted, got {:?}", other.map(|_| ())),
+    }
+    assert!(sessions.reregister_keys(sid_a, &keys_a));
+    let rx = coord.submit_encrypted(sid_a, ct).expect("submit after re-registration");
+    rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.keycache_spill_hits, 0);
+    assert!(snap.rejected_keys_evicted >= 1);
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------- shared-pool determinism
+
+fn ct_bits_equal(a: &Ciphertext, b: &Ciphertext) -> bool {
+    a.level == b.level
+        && a.scale.to_bits() == b.scale.to_bits()
+        && a.c0.data() == b.c0.data()
+        && a.c1.data() == b.c1.data()
+}
+
+/// `HrfServer::execute` over the `op_workers × ckks_workers` grid with
+/// every evaluator drawing from ONE deliberately tiny shared slab
+/// pool: recycling, stealing, trimming and dropping under pressure
+/// must never change a single ciphertext bit vs the serial baseline.
+#[test]
+fn dag_grid_bit_identical_with_shared_tiny_pool() {
+    let w = spill_workload(10_400);
+    let plan = w.server.model.plan;
+    let mut kg = KeyGenerator::new(&w.ctx, 10_501);
+    let pk = kg.gen_public_key(&w.ctx);
+    let rlk = kg.gen_relin_key(&w.ctx);
+    let b = plan.groups.min(2);
+    let gk = kg.gen_galois_keys(&w.ctx, &plan.rotations_needed_batched(b));
+    let mut client = HrfClient::new(Encryptor::new(pk, 10_502), Decryptor::new(kg.secret_key()));
+    let mut rng = Xoshiro256pp::new(10_503);
+
+    let xs: Vec<Vec<f64>> = (0..b)
+        .map(|_| (0..plan.d).map(|_| rng.next_f64()).collect())
+        .collect();
+    let cts: Vec<Ciphertext> = xs
+        .iter()
+        .map(|x| client.encrypt_input(&w.ctx, &w.enc, &w.server.model, x))
+        .collect();
+
+    // ~1 MiB: far below one limb-buffer working set at N=4096, so the
+    // pool trims and drops constantly while the grid runs.
+    let pool = Arc::new(SlabPool::new(4, 1 << 20));
+
+    w.server.set_op_workers(1);
+    w.ctx.set_workers(1);
+    let mut ev = Evaluator::with_scratch(w.ctx.clone(), Scratch::in_pool(pool.clone()));
+    let base = w
+        .server
+        .execute(&mut ev, &w.enc, &EncRequest::group(&cts), &rlk, &gk)
+        .into_class_scores();
+
+    for ow in [1usize, 2, 4] {
+        for cw in [1usize, 2] {
+            if ow == 1 && cw == 1 {
+                continue; // the baseline itself
+            }
+            w.server.set_op_workers(ow);
+            w.ctx.set_workers(cw);
+            let mut ev = Evaluator::with_scratch(w.ctx.clone(), Scratch::in_pool(pool.clone()));
+            let ex = w
+                .server
+                .execute(&mut ev, &w.enc, &EncRequest::group(&cts), &rlk, &gk);
+            for (got, want) in ex.into_class_scores().iter().zip(&base) {
+                assert!(
+                    ct_bits_equal(got, want),
+                    "ow={ow} cw={cw}: shared-pool run deviates from serial"
+                );
+            }
+            assert!(
+                pool.resident_bytes() <= pool.budget_bytes(),
+                "ow={ow} cw={cw}: pool over budget"
+            );
+        }
+    }
+    w.server.set_op_workers(1);
+    w.ctx.set_workers(1);
+    let s = pool.stats().snapshot();
+    assert!(s.hits > 0, "the grid must actually recycle buffers: {s:?}");
+}
