@@ -92,6 +92,10 @@ fn main() {
             c
         });
         push(&mut rows, &mut records, t, w);
+        let t = bench(&format!("mul_plain_rescale (fused) [w={w}]"), 2, 10, || {
+            ev.mul_plain_rescale(&ct, &pt)
+        });
+        push(&mut rows, &mut records, t, w);
     }
     ctx.set_workers(1);
 

@@ -303,21 +303,18 @@ impl Evaluator {
         let (mut a, mut b) = (self.clone_ct_in(a), self.clone_ct_in(b));
         self.align(&mut a, &mut b);
         let (level, scale) = (a.level, a.scale * b.scale);
-        // Tensor: d0 = a0 b0, d1 = a0 b1 + a1 b0, d2 = a1 b1.
-        let mut d0 = a.c0.clone_in(&mut self.scratch);
-        d0.mul_assign(&self.ctx, &b.c0);
-        let mut d1 = a.c0; // a0 consumed in place
-        d1.mul_assign(&self.ctx, &b.c1);
-        let mut t = a.c1.clone_in(&mut self.scratch);
-        t.mul_assign(&self.ctx, &b.c0);
-        d1.add_assign(&self.ctx, &t);
-        t.recycle(&mut self.scratch);
-        let mut d2 = a.c1; // a1 consumed in place
-        d2.mul_assign(&self.ctx, &b.c1);
+        // Fused tensor kernel: d0 = a0 b0, d1 = a0 b1 + a1 b0,
+        // d2 = a1 b1 in one limb-parallel pass that reads each operand
+        // limb exactly once (the cross term reduces once from its
+        // 128-bit sum — bit-identical to mul + add_assign, which is
+        // also fully reduced).
+        let (mut d0, mut d1, d2) =
+            RnsPoly::tensor(&self.ctx, &a.c0, &a.c1, &b.c0, &b.c1, &mut self.scratch);
+        self.recycle_ct(a);
+        self.recycle_ct(b);
         // Relinearize d2: (k0, k1) ≈ d2·s² under s.
         let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0, &mut self.scratch);
         d2.recycle(&mut self.scratch);
-        self.recycle_ct(b);
         d0.add_assign(&self.ctx, &k0);
         d1.add_assign(&self.ctx, &k1);
         k0.recycle(&mut self.scratch);
@@ -334,13 +331,12 @@ impl Evaluator {
 
     /// Square (saves one ring multiplication vs `mul(a, a)`).
     pub fn square(&mut self, a: &Ciphertext, rlk: &RelinKey) -> Ciphertext {
-        let mut d0 = a.c0.clone_in(&mut self.scratch);
-        d0.mul_assign(&self.ctx, &a.c0);
-        let mut d1 = a.c0.clone_in(&mut self.scratch);
-        d1.mul_assign(&self.ctx, &a.c1);
-        d1.double_assign(&self.ctx); // 2·a0·a1
-        let mut d2 = a.c1.clone_in(&mut self.scratch);
-        d2.mul_assign(&self.ctx, &a.c1);
+        // Fused squaring tensor: (a0², 2·a0·a1, a1²) straight off the
+        // operand limbs — no clones, and the doubled cross term reduces
+        // once (bit-identical to mul + double_assign: both are fully
+        // reduced and congruent mod q).
+        let (mut d0, mut d1, d2) =
+            RnsPoly::tensor_square(&self.ctx, &a.c0, &a.c1, &mut self.scratch);
         let (k0, k1) = apply_ksw(&self.ctx, &d2, &rlk.0, &mut self.scratch);
         d2.recycle(&mut self.scratch);
         d0.add_assign(&self.ctx, &k0);
@@ -359,25 +355,34 @@ impl Evaluator {
 
     /// Rescale: divide by the top chain prime, dropping one level.
     pub fn rescale(&mut self, a: &mut Ciphertext) {
+        self.rescale_uncounted(a);
+        self.counts.rescale += 1;
+    }
+
+    fn rescale_uncounted(&mut self, a: &mut Ciphertext) {
         let q_top = self.ctx.q(a.level) as f64;
         a.c0.rescale(&self.ctx);
         a.c1.rescale(&self.ctx);
         a.level -= 1;
         a.scale /= q_top;
-        self.counts.rescale += 1;
     }
 
     /// Fused plaintext-multiply-and-rescale: one invocation covering
     /// both primitives (the execution target of the `FuseMulRescale`
-    /// schedule pass). The limb math is *exactly* `mul_plain` followed
-    /// by `rescale`, so fused and unfused executions are bit-identical;
-    /// only the accounting differs — the pair is re-booked as a single
-    /// `fused_mul_rescale` op instead of `mul_plain` + `rescale`.
+    /// schedule pass). The ring multiplies run **lazily** ([0, 2q)
+    /// residues, one conditional-subtraction sweep per limb skipped)
+    /// and the inverse NTT at the head of the rescale consumes the lazy
+    /// domain and reduces exactly, so fused and unfused executions stay
+    /// bit-identical (pinned in `tests/modops_kernels.rs`); the
+    /// accounting books the pair as a single `fused_mul_rescale` op
+    /// instead of `mul_plain` + `rescale`.
     pub fn mul_plain_rescale(&mut self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
-        let mut r = self.mul_plain(a, pt);
-        self.rescale(&mut r);
-        self.counts.mul_plain -= 1;
-        self.counts.rescale -= 1;
+        debug_assert_eq!(a.level, pt.poly.level, "mul_plain level mismatch");
+        let mut r = self.clone_ct_in(a);
+        r.c0.mul_assign_lazy(&self.ctx, &pt.poly);
+        r.c1.mul_assign_lazy(&self.ctx, &pt.poly);
+        r.scale *= pt.scale;
+        self.rescale_uncounted(&mut r);
         self.counts.fused_mul_rescale += 1;
         r
     }

@@ -1,0 +1,607 @@
+//! Explicitly-chunked, lazy-reduction batch kernels over whole RNS
+//! limbs (§Perf step 7: vectorized modular kernels).
+//!
+//! Every element-wise hot loop in the data plane — ring multiplies,
+//! the key-switch inner product, rescale / mod-down adjustments,
+//! ct×ct tensoring — routes through this module instead of open-coding
+//! per-coefficient arithmetic. Each kernel processes one limb (a
+//! stride-`N` slice) in explicit [`LANES`]-wide unrolled blocks with a
+//! scalar tail, so LLVM sees constant-trip inner loops it can
+//! autovectorize; with the nightly-only `wide` cargo feature the pure
+//! add/sub kernels switch to explicit `std::simd` vectors (bit-identical
+//! outputs either way — modular add/sub is exact arithmetic).
+//!
+//! # Residue domains
+//!
+//! A value belongs to one of three domains, and every kernel boundary
+//! states (and `debug_assert!`s) which it consumes and produces:
+//!
+//! * **reduced** — `[0, q)`. The public `RnsPoly` invariant: every poly
+//!   observable outside an op is fully reduced.
+//! * **lazy** — `[0, 2q)`. One conditional subtraction deferred. Legal
+//!   only *between* fused steps whose consumer tolerates or re-reduces
+//!   it: the inverse NTT accepts lazy inputs (its butterflies hold
+//!   values `< 2q` anyway and its final `inv_n` pass reduces exactly),
+//!   and Shoup multiplication ([`mul_mod_shoup`]) is exact for *any*
+//!   u64 left operand. `q < 2^62` (enforced by `params::build`), so
+//!   lazy values never overflow u64.
+//! * **accumulator** — a per-coefficient `(lo, hi)` u128 split across
+//!   two limb-sized slices. Products accumulate with carry and *no*
+//!   reductions ([`mac_acc_slice`]); a single [`barrett_reduce_128`]
+//!   per coefficient ([`reduce_acc_slice`]) converts back to reduced.
+//!
+//! Chaining rules: reduced ⊂ lazy (a reduced value is valid wherever a
+//! lazy one is); a lazy value must reach a fully-reducing consumer
+//! (inverse NTT, Shoup multiply, [`reduce_acc_slice`]) before the
+//! result becomes externally observable. Kernels never *return* lazy
+//! values except those documented to (the `_lazy` suffix).
+//!
+//! # Digit headroom for the lazy MAC
+//!
+//! The key-switch inner product Σ_j digit_j ⊙ key_j accumulates one
+//! u128 product per digit into the accumulator domain before its
+//! single reduction. Each term is at most `(2q−1)²` (both operands
+//! lazy-domain), so the accumulator is exact as long as the term count
+//! stays within [`mac_headroom`]`(q) = ⌊u128::MAX / (2q−1)²⌋`. For the
+//! ~2^60 anchor/special primes that is ≥ 64 terms; the digit count is
+//! at most `max_level + 1` (+1 for the carried-in accumulator word),
+//! which `params::build` asserts against every prime of every set at
+//! construction and [`mac_acc_slice`] re-checks per call in debug
+//! builds. The payoff: `digits × N × limbs` Barrett reductions become
+//! `N × limbs` — exactly one reduction per (coefficient, limb)
+//! regardless of digit count (pinned by the debug-build reduction
+//! counter in [`counters`]).
+
+use super::modops::{
+    add_mod, barrett_reduce_128, barrett_reduce_64, mul_mod_barrett, mul_mod_barrett_lazy,
+    mul_mod_shoup, sub_mod,
+};
+
+/// Unroll width of every batch kernel: 8 × u64 = one 64-byte cache
+/// line per block, and wide enough for 512-bit vector units.
+pub const LANES: usize = 8;
+
+/// Maximum number of lazy-domain (`[0, 2q)`) products that can be
+/// accumulated into one u128 before [`reduce_acc_slice`] must run:
+/// each term is at most `(2q−1)²`, so `⌊u128::MAX / (2q−1)²⌋` terms
+/// can never overflow the accumulator.
+pub fn mac_headroom(q: u64) -> usize {
+    debug_assert!(q < 1 << 62);
+    let m = (2 * q - 1) as u128;
+    (u128::MAX / (m * m)).min(usize::MAX as u128) as usize
+}
+
+/// Debug-build instrumentation pinning the "one Barrett reduction per
+/// (coefficient, limb)" contract of the lazy MAC: every
+/// [`reduce_acc_slice`] call bumps a thread-local counter by the
+/// number of coefficients it reduced. Compiled out of release builds.
+#[cfg(debug_assertions)]
+pub mod counters {
+    use std::cell::Cell;
+
+    thread_local! {
+        static MAC_REDUCTIONS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    pub(super) fn bump(n: u64) {
+        MAC_REDUCTIONS.with(|c| c.set(c.get() + n));
+    }
+
+    /// Total coefficients reduced by `reduce_acc_slice` on this thread
+    /// so far (meaningful with `ckks_workers == 1`, where all limbs
+    /// run on the calling thread).
+    pub fn mac_reductions() -> u64 {
+        MAC_REDUCTIONS.with(|c| c.get())
+    }
+}
+
+/// Debug-only domain guard: every residue of `s` must be below
+/// `bound`. Free in release builds.
+#[inline]
+fn assert_domain(s: &[u64], bound: u64, what: &str) {
+    debug_assert!(
+        s.iter().all(|&v| v < bound),
+        "kernel domain violation: {what} holds a residue >= {bound}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Element-wise add / sub (reduced -> reduced)
+// ---------------------------------------------------------------------
+
+/// `a[i] = a[i] + b[i] mod q`. Reduced in, reduced out.
+#[cfg(not(feature = "wide"))]
+pub fn add_mod_slice(a: &mut [u64], b: &[u64], q: u64) {
+    debug_assert_eq!(a.len(), b.len());
+    assert_domain(a, q, "add_mod_slice lhs");
+    assert_domain(b, q, "add_mod_slice rhs");
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at(split);
+    for (aw, bw) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            aw[l] = add_mod(aw[l], bw[l], q);
+        }
+    }
+    for (x, &y) in at.iter_mut().zip(bt.iter()) {
+        *x = add_mod(*x, y, q);
+    }
+}
+
+/// `a[i] = a[i] + b[i] mod q` via explicit `std::simd` vectors.
+/// Bit-identical to the unrolled-scalar variant: modular add is exact.
+#[cfg(feature = "wide")]
+pub fn add_mod_slice(a: &mut [u64], b: &[u64], q: u64) {
+    use std::simd::cmp::SimdPartialOrd;
+    use std::simd::u64x8;
+    debug_assert_eq!(a.len(), b.len());
+    assert_domain(a, q, "add_mod_slice lhs");
+    assert_domain(b, q, "add_mod_slice rhs");
+    let qv = u64x8::splat(q);
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at(split);
+    for (aw, bw) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        let s = u64x8::from_slice(aw) + u64x8::from_slice(bw);
+        let r = s.simd_ge(qv).select(s - qv, s);
+        r.copy_to_slice(aw);
+    }
+    for (x, &y) in at.iter_mut().zip(bt.iter()) {
+        *x = add_mod(*x, y, q);
+    }
+}
+
+/// `a[i] = a[i] - b[i] mod q`. Reduced in, reduced out.
+#[cfg(not(feature = "wide"))]
+pub fn sub_mod_slice(a: &mut [u64], b: &[u64], q: u64) {
+    debug_assert_eq!(a.len(), b.len());
+    assert_domain(a, q, "sub_mod_slice lhs");
+    assert_domain(b, q, "sub_mod_slice rhs");
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at(split);
+    for (aw, bw) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            aw[l] = sub_mod(aw[l], bw[l], q);
+        }
+    }
+    for (x, &y) in at.iter_mut().zip(bt.iter()) {
+        *x = sub_mod(*x, y, q);
+    }
+}
+
+/// `a[i] = a[i] - b[i] mod q` via explicit `std::simd` vectors.
+#[cfg(feature = "wide")]
+pub fn sub_mod_slice(a: &mut [u64], b: &[u64], q: u64) {
+    use std::simd::cmp::SimdPartialOrd;
+    use std::simd::u64x8;
+    debug_assert_eq!(a.len(), b.len());
+    assert_domain(a, q, "sub_mod_slice lhs");
+    assert_domain(b, q, "sub_mod_slice rhs");
+    let qv = u64x8::splat(q);
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at(split);
+    for (aw, bw) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        let av = u64x8::from_slice(aw);
+        let bv = u64x8::from_slice(bw);
+        let r = av.simd_ge(bv).select(av - bv, (av + qv) - bv);
+        r.copy_to_slice(aw);
+    }
+    for (x, &y) in at.iter_mut().zip(bt.iter()) {
+        *x = sub_mod(*x, y, q);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Element-wise multiply (Barrett)
+// ---------------------------------------------------------------------
+
+/// `a[i] = a[i] * b[i] mod q` (Barrett). Any u64 in, reduced out.
+pub fn mul_mod_slice(a: &mut [u64], b: &[u64], q: u64, ratio: (u64, u64)) {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at(split);
+    for (aw, bw) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            aw[l] = mul_mod_barrett(aw[l], bw[l], q, ratio);
+        }
+    }
+    for (x, &y) in at.iter_mut().zip(bt.iter()) {
+        *x = mul_mod_barrett(*x, y, q, ratio);
+    }
+    assert_domain(a, q, "mul_mod_slice output");
+}
+
+/// `a[i] = a[i] * b[i] mod q` leaving results in the **lazy** `[0, 2q)`
+/// domain (final conditional subtraction skipped). The caller must feed
+/// the output into a fully-reducing consumer — in practice the inverse
+/// NTT at the head of `rescale` / `mod_down_special`.
+pub fn mul_mod_slice_lazy(a: &mut [u64], b: &[u64], q: u64, ratio: (u64, u64)) {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at(split);
+    for (aw, bw) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            aw[l] = mul_mod_barrett_lazy(aw[l], bw[l], q, ratio);
+        }
+    }
+    for (x, &y) in at.iter_mut().zip(bt.iter()) {
+        *x = mul_mod_barrett_lazy(*x, y, q, ratio);
+    }
+    assert_domain(a, 2 * q, "mul_mod_slice_lazy output");
+}
+
+// ---------------------------------------------------------------------
+// Lazy u128 multiply-accumulate (the key-switch inner product)
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+fn mac_acc_at(lo: &mut [u64], hi: &mut [u64], x: &[u64], k: &[u64], i: usize) {
+    let p = x[i] as u128 * k[i] as u128;
+    let s = lo[i] as u128 + (p as u64) as u128;
+    lo[i] = s as u64;
+    let (h1, o1) = hi[i].overflowing_add((p >> 64) as u64);
+    let (h2, o2) = h1.overflowing_add((s >> 64) as u64);
+    debug_assert!(
+        !(o1 || o2),
+        "lazy MAC accumulator overflow — mac_headroom bound violated"
+    );
+    hi[i] = h2;
+}
+
+/// Accumulate `x[i] * k[i]` into the per-coefficient `(lo, hi)` u128
+/// accumulator pair — **no reductions**. Operands may be lazy-domain
+/// (`< two_q`); the caller is responsible for keeping the total term
+/// count within [`mac_headroom`] (re-checked per element in debug
+/// builds via the carry flags).
+pub fn mac_acc_slice(lo: &mut [u64], hi: &mut [u64], x: &[u64], k: &[u64], two_q: u64) {
+    let n = lo.len();
+    debug_assert!(hi.len() == n && x.len() == n && k.len() == n);
+    assert_domain(x, two_q, "mac_acc_slice digit operand");
+    assert_domain(k, two_q, "mac_acc_slice key operand");
+    let (hi, x, k) = (&mut hi[..n], &x[..n], &k[..n]);
+    let mut i = 0;
+    while i + LANES <= n {
+        for j in i..i + LANES {
+            mac_acc_at(lo, hi, x, k, j);
+        }
+        i += LANES;
+    }
+    for j in i..n {
+        mac_acc_at(lo, hi, x, k, j);
+    }
+}
+
+/// Reduce the `(lo, hi)` u128 accumulator to the reduced domain: one
+/// [`barrett_reduce_128`] per coefficient — the *only* reduction the
+/// whole inner product performs, regardless of how many
+/// [`mac_acc_slice`] calls fed it.
+pub fn reduce_acc_slice(out: &mut [u64], lo: &[u64], hi: &[u64], q: u64, ratio: (u64, u64)) {
+    let n = out.len();
+    debug_assert!(lo.len() == n && hi.len() == n);
+    let (lo, hi) = (&lo[..n], &hi[..n]);
+    let mut i = 0;
+    while i + LANES <= n {
+        for j in i..i + LANES {
+            out[j] = barrett_reduce_128(lo[j], hi[j], q, ratio);
+        }
+        i += LANES;
+    }
+    for j in i..n {
+        out[j] = barrett_reduce_128(lo[j], hi[j], q, ratio);
+    }
+    #[cfg(debug_assertions)]
+    counters::bump(n as u64);
+    assert_domain(out, q, "reduce_acc_slice output");
+}
+
+// ---------------------------------------------------------------------
+// Fused dyadic tensor (ct×ct and square)
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tensor_at(
+    a0: &[u64],
+    a1: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    d0: &mut [u64],
+    d1: &mut [u64],
+    d2: &mut [u64],
+    q: u64,
+    ratio: (u64, u64),
+    i: usize,
+) {
+    let p0 = a0[i] as u128 * b0[i] as u128;
+    d0[i] = barrett_reduce_128(p0 as u64, (p0 >> 64) as u64, q, ratio);
+    // Cross term as one 128-bit sum, reduced once: 2(q−1)² < 2^125 for
+    // q < 2^62, so the sum cannot overflow u128.
+    let cross = a0[i] as u128 * b1[i] as u128 + a1[i] as u128 * b0[i] as u128;
+    d1[i] = barrett_reduce_128(cross as u64, (cross >> 64) as u64, q, ratio);
+    let p2 = a1[i] as u128 * b1[i] as u128;
+    d2[i] = barrett_reduce_128(p2 as u64, (p2 >> 64) as u64, q, ratio);
+}
+
+/// Fused ct×ct dyadic tensor over one limb: writes `d0 = a0·b0`,
+/// `d1 = a0·b1 + a1·b0` (single reduction of the 128-bit sum) and
+/// `d2 = a1·b1` in one pass that reads each operand limb exactly once.
+/// Reduced in, reduced out.
+#[allow(clippy::too_many_arguments)]
+pub fn tensor_limb(
+    a0: &[u64],
+    a1: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    d0: &mut [u64],
+    d1: &mut [u64],
+    d2: &mut [u64],
+    q: u64,
+    ratio: (u64, u64),
+) {
+    let n = d0.len();
+    debug_assert!(
+        a0.len() == n && a1.len() == n && b0.len() == n && b1.len() == n,
+        "tensor operand length mismatch"
+    );
+    debug_assert!(d1.len() == n && d2.len() == n);
+    assert_domain(a0, q, "tensor_limb a0");
+    assert_domain(a1, q, "tensor_limb a1");
+    assert_domain(b0, q, "tensor_limb b0");
+    assert_domain(b1, q, "tensor_limb b1");
+    let (a0, a1, b0, b1) = (&a0[..n], &a1[..n], &b0[..n], &b1[..n]);
+    let (d1, d2) = (&mut d1[..n], &mut d2[..n]);
+    let mut i = 0;
+    while i + LANES <= n {
+        for j in i..i + LANES {
+            tensor_at(a0, a1, b0, b1, d0, d1, d2, q, ratio, j);
+        }
+        i += LANES;
+    }
+    for j in i..n {
+        tensor_at(a0, a1, b0, b1, d0, d1, d2, q, ratio, j);
+    }
+}
+
+#[inline(always)]
+fn square_at(
+    a0: &[u64],
+    a1: &[u64],
+    d0: &mut [u64],
+    d1: &mut [u64],
+    d2: &mut [u64],
+    q: u64,
+    ratio: (u64, u64),
+    i: usize,
+) {
+    let p0 = a0[i] as u128 * a0[i] as u128;
+    d0[i] = barrett_reduce_128(p0 as u64, (p0 >> 64) as u64, q, ratio);
+    // 2·a0·a1 < 2^125 for q < 2^62 — one reduction covers the doubling.
+    let cross = 2 * (a0[i] as u128 * a1[i] as u128);
+    d1[i] = barrett_reduce_128(cross as u64, (cross >> 64) as u64, q, ratio);
+    let p2 = a1[i] as u128 * a1[i] as u128;
+    d2[i] = barrett_reduce_128(p2 as u64, (p2 >> 64) as u64, q, ratio);
+}
+
+/// Fused squaring tensor over one limb: `d0 = a0²`, `d1 = 2·a0·a1`
+/// (single reduction), `d2 = a1²`. Reduced in, reduced out.
+#[allow(clippy::too_many_arguments)]
+pub fn square_limb(
+    a0: &[u64],
+    a1: &[u64],
+    d0: &mut [u64],
+    d1: &mut [u64],
+    d2: &mut [u64],
+    q: u64,
+    ratio: (u64, u64),
+) {
+    let n = d0.len();
+    debug_assert!(a0.len() == n && a1.len() == n && d1.len() == n && d2.len() == n);
+    assert_domain(a0, q, "square_limb a0");
+    assert_domain(a1, q, "square_limb a1");
+    let (a0, a1) = (&a0[..n], &a1[..n]);
+    let (d1, d2) = (&mut d1[..n], &mut d2[..n]);
+    let mut i = 0;
+    while i + LANES <= n {
+        for j in i..i + LANES {
+            square_at(a0, a1, d0, d1, d2, q, ratio, j);
+        }
+        i += LANES;
+    }
+    for j in i..n {
+        square_at(a0, a1, d0, d1, d2, q, ratio, j);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rescale / mod-down adjustment kernels
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn rescale_adjust_one(
+    x: u64,
+    r: u64,
+    q: u64,
+    r_hi: u64,
+    q_last: u64,
+    half: u64,
+    inv: u64,
+    inv_sh: u64,
+) -> u64 {
+    // Centered remainder, kept lazy: `x + q − red(r)` (subtract side)
+    // or `x + red(q_last − r)` (add side) lands in [0, 2q) — the
+    // conditional correction of add_mod/sub_mod is skipped, and the
+    // Shoup multiply (exact for any u64 left operand) fully reduces.
+    let lazy = if r <= half {
+        x + q - barrett_reduce_64(r, q, r_hi)
+    } else {
+        x + barrett_reduce_64(q_last - r, q, r_hi)
+    };
+    mul_mod_shoup(lazy, inv, inv_sh, q)
+}
+
+/// Rescale / mod-down adjustment of one chain limb against the dropped
+/// limb `last` (modulus `q_last`): subtract the centered remainder and
+/// multiply by the precomputed inverse `inv` (Shoup pair). Reduced in,
+/// reduced out; the intermediate stays lazy between the two steps.
+#[allow(clippy::too_many_arguments)]
+pub fn rescale_adjust_slice(
+    limb: &mut [u64],
+    last: &[u64],
+    q: u64,
+    r_hi: u64,
+    q_last: u64,
+    half: u64,
+    inv: u64,
+    inv_sh: u64,
+) {
+    debug_assert_eq!(limb.len(), last.len());
+    assert_domain(limb, q, "rescale_adjust_slice limb");
+    assert_domain(last, q_last, "rescale_adjust_slice dropped limb");
+    let split = limb.len() - limb.len() % LANES;
+    let (lh, lt) = limb.split_at_mut(split);
+    let (rh, rt) = last.split_at(split);
+    for (lw, rw) in lh.chunks_exact_mut(LANES).zip(rh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            lw[l] = rescale_adjust_one(lw[l], rw[l], q, r_hi, q_last, half, inv, inv_sh);
+        }
+    }
+    for (x, &r) in lt.iter_mut().zip(rt.iter()) {
+        *x = rescale_adjust_one(*x, r, q, r_hi, q_last, half, inv, inv_sh);
+    }
+    assert_domain(limb, q, "rescale_adjust_slice output");
+}
+
+#[inline(always)]
+fn centered_neg_one(r: u64, p: u64, half: u64, q: u64, r_hi: u64) -> u64 {
+    // The negated centered remainder of r (mod p), reduced mod q:
+    // r <= p/2 → −r mod q ; r > p/2 → +(p − r) mod q.
+    if r <= half {
+        let red = barrett_reduce_64(r, q, r_hi);
+        if red == 0 {
+            0
+        } else {
+            q - red
+        }
+    } else {
+        barrett_reduce_64(p - r, q, r_hi)
+    }
+}
+
+/// Build the negated centered remainder of the special limb `last`
+/// (modulus `p`) reduced into modulus `q` — the coefficient-domain prep
+/// of the NTT-form mod-down. Reduced out.
+pub fn centered_neg_slice(dst: &mut [u64], last: &[u64], p: u64, half: u64, q: u64, r_hi: u64) {
+    debug_assert_eq!(dst.len(), last.len());
+    assert_domain(last, p, "centered_neg_slice special limb");
+    let split = dst.len() - dst.len() % LANES;
+    let (dh, dt) = dst.split_at_mut(split);
+    let (rh, rt) = last.split_at(split);
+    for (dw, rw) in dh.chunks_exact_mut(LANES).zip(rh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            dw[l] = centered_neg_one(rw[l], p, half, q, r_hi);
+        }
+    }
+    for (x, &r) in dt.iter_mut().zip(rt.iter()) {
+        *x = centered_neg_one(r, p, half, q, r_hi);
+    }
+    assert_domain(dst, q, "centered_neg_slice output");
+}
+
+/// `limb[i] = (limb[i] + r[i]) * inv mod q` with the sum kept lazy
+/// (`< 2q`, no conditional) and the Shoup multiply reducing exactly —
+/// the per-limb finish of the NTT-form mod-down. Reduced in, reduced
+/// out.
+pub fn add_then_mul_shoup_slice(limb: &mut [u64], r: &[u64], q: u64, inv: u64, inv_sh: u64) {
+    debug_assert_eq!(limb.len(), r.len());
+    assert_domain(limb, q, "add_then_mul_shoup_slice limb");
+    assert_domain(r, q, "add_then_mul_shoup_slice addend");
+    let split = limb.len() - limb.len() % LANES;
+    let (lh, lt) = limb.split_at_mut(split);
+    let (rh, rt) = r.split_at(split);
+    for (lw, rw) in lh.chunks_exact_mut(LANES).zip(rh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            lw[l] = mul_mod_shoup(lw[l] + rw[l], inv, inv_sh, q);
+        }
+    }
+    for (x, &y) in lt.iter_mut().zip(rt.iter()) {
+        *x = mul_mod_shoup(*x + y, inv, inv_sh, q);
+    }
+    assert_domain(limb, q, "add_then_mul_shoup_slice output");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::modops::{barrett_precompute, mul_mod};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn headroom_bound_is_tight() {
+        for q in [(1u64 << 60) + 0x4001, (1u64 << 40) + 0x1_0001, (1 << 61) - 1] {
+            let h = mac_headroom(q) as u128;
+            let term = ((2 * q - 1) as u128) * ((2 * q - 1) as u128);
+            // h terms fit exactly; h+1 terms would overflow.
+            assert!(term.checked_mul(h).is_some(), "q={q}");
+            assert!(term.checked_mul(h + 1).is_none(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn mac_accumulate_then_reduce_matches_serial_chain() {
+        let q = (1u64 << 60) + 0x4001u64; // odd, not prime; arithmetic only
+        let ratio = barrett_precompute(q);
+        let mut r = Xoshiro256pp::new(42);
+        let n = 67; // exercises the scalar tail
+        for digits in [1usize, 3, 9] {
+            let xs: Vec<Vec<u64>> = (0..digits)
+                .map(|_| (0..n).map(|_| r.next_below(2 * q)).collect())
+                .collect();
+            let ks: Vec<Vec<u64>> = (0..digits)
+                .map(|_| (0..n).map(|_| r.next_below(2 * q)).collect())
+                .collect();
+            let mut lo = vec![0u64; n];
+            let mut hi = vec![0u64; n];
+            for (x, k) in xs.iter().zip(ks.iter()) {
+                mac_acc_slice(&mut lo, &mut hi, x, k, 2 * q);
+            }
+            let mut out = vec![0u64; n];
+            reduce_acc_slice(&mut out, &lo, &hi, q, ratio);
+            for i in 0..n {
+                let mut want = 0u64;
+                for (x, k) in xs.iter().zip(ks.iter()) {
+                    want = add_mod(want, mul_mod(x[i] % q, k[i] % q, q), q);
+                }
+                assert_eq!(out[i], want, "digits={digits} i={i}");
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn reduction_counter_is_digit_count_independent() {
+        let q = ((1u64 << 59) + 0x9801) | 1;
+        let ratio = barrett_precompute(q);
+        let n = 32;
+        for digits in [1usize, 4, 10] {
+            let before = counters::mac_reductions();
+            let mut lo = vec![0u64; n];
+            let mut hi = vec![0u64; n];
+            let x = vec![q - 1; n];
+            for _ in 0..digits {
+                mac_acc_slice(&mut lo, &mut hi, &x, &x, 2 * q);
+            }
+            let mut out = vec![0u64; n];
+            reduce_acc_slice(&mut out, &lo, &hi, q, ratio);
+            assert_eq!(
+                counters::mac_reductions() - before,
+                n as u64,
+                "digits={digits}"
+            );
+        }
+    }
+}

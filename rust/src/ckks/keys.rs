@@ -18,7 +18,8 @@
 //! added is ≈ `(ℓ+1)·N·q_max·σ / P` — about 2^-6 for default
 //! parameters, i.e. far below the encoding scale.
 
-use super::modops::{add_mod, barrett_reduce_64, galois_element, mul_mod, mul_mod_barrett};
+use super::kernels;
+use super::modops::{barrett_reduce_64, galois_element, mul_mod};
 use super::parallel;
 use super::rns::{CkksContext, RnsPoly};
 use super::scratch::Scratch;
@@ -333,23 +334,41 @@ pub fn apply_ksw_decomposed(
 /// special). Limb-outer so the limbs fan across workers; within one
 /// limb the digits accumulate in index order, so the result is
 /// identical for every worker count.
+///
+/// **Lazy MAC** (§Perf step 7): the per-digit products accumulate into
+/// a per-coefficient `(lo, hi)` u128 pair with *no* per-term
+/// reductions, then reduce **once** with `barrett_reduce_128` — so the
+/// whole inner product performs exactly one Barrett reduction per
+/// (coefficient, limb) regardless of digit count, instead of a
+/// reduction plus `add_mod` for every digit. Safe because the digit
+/// count is bounded by `kernels::mac_headroom(q)` derived from the
+/// actual prime width (`params::build` asserts it for every prime;
+/// re-asserted here per limb). The single-reduction sum is fully
+/// reduced and congruent to the old per-term chain mod q, so the
+/// output is bit-identical.
 fn mac_all(ctx: &CkksContext, acc: &mut RnsPoly, digits: &[RnsPoly], keys: &[RnsPoly], max: usize) {
     let n_limbs = acc.active_limbs();
     let n = ctx.n();
     debug_assert!(acc.special && n_limbs == acc.level + 2);
-    parallel::for_each_limb(ctx.workers(), n, acc.data_mut(), |li, a| {
+    parallel::for_each_limb_with(ctx.workers(), n, acc.data_mut(), |acc128, li, a| {
         let (q, ratio, key_li) = if li == n_limbs - 1 {
             (ctx.params.special, ctx.barrett_ratio_special(), max + 1)
         } else {
             (ctx.q(li), ctx.barrett_ratio(li), li)
         };
+        // +1: the carried-in accumulator word joins the product terms.
+        debug_assert!(
+            digits.len() + 1 <= kernels::mac_headroom(q),
+            "digit count exceeds the lazy-MAC headroom for q={q}"
+        );
+        acc128.clear();
+        acc128.resize(2 * n, 0);
+        let (lo, hi) = acc128.split_at_mut(n);
+        lo.copy_from_slice(a);
         for (digit, key) in digits.iter().zip(keys.iter()) {
-            let x = digit.limb(li);
-            let k = key.limb(key_li);
-            for i in 0..a.len() {
-                a[i] = add_mod(a[i], mul_mod_barrett(x[i], k[i], q, ratio), q);
-            }
+            kernels::mac_acc_slice(lo, hi, digit.limb(li), key.limb(key_li), 2 * q);
         }
+        kernels::reduce_acc_slice(a, lo, hi, q, ratio);
     });
 }
 

@@ -8,7 +8,11 @@
 //!   kernels; `mul_mod` is the division-based test oracle).
 //! * [`params`] — parameter sets + NTT-friendly prime generation
 //!   (every prime < 2^62, the Barrett kernel domain).
-//! * [`ntt`] — negacyclic number-theoretic transform per RNS prime.
+//! * [`kernels`] — explicitly-chunked, lazy-reduction batch kernels
+//!   over whole limbs (the element-wise hot loops; domain conventions
+//!   in the module doc).
+//! * [`ntt`] — negacyclic number-theoretic transform per RNS prime
+//!   (Harvey lazy butterflies, cache-blocked sweeps).
 //! * [`rns`] — RNS ("double-CRT") polynomials with flat contiguous
 //!   limb storage, per-prime Barrett/Shoup tables and base conversions.
 //! * [`scratch`] — checkout façade over the shared slab pool
@@ -38,6 +42,7 @@
 pub mod encoder;
 pub mod encrypt;
 pub mod evaluator;
+pub mod kernels;
 pub mod keys;
 pub mod modops;
 pub mod ntt;

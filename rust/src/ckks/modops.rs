@@ -97,6 +97,38 @@ pub fn mul_mod_barrett(x: u64, y: u64, m: u64, ratio: (u64, u64)) -> u64 {
     barrett_reduce_128(p as u64, (p >> 64) as u64, m, ratio)
 }
 
+/// Lazy variant of [`barrett_reduce_128`]: the final conditional
+/// subtraction is skipped, so the result lands in `[0, 2m)`. The
+/// quotient estimate q̂ undershoots the true quotient by at most 1 for
+/// `m < 2^62`, which is exactly the one conditional this omits.
+#[inline(always)]
+pub fn barrett_reduce_128_lazy(lo: u64, hi: u64, m: u64, ratio: (u64, u64)) -> u64 {
+    let (r0, r1) = ratio;
+    let carry = ((lo as u128 * r0 as u128) >> 64) as u64;
+    let t = lo as u128 * r1 as u128;
+    let s = (t as u64 as u128) + carry as u128;
+    let tmp1 = s as u64;
+    let tmp3 = ((t >> 64) as u64).wrapping_add((s >> 64) as u64);
+    let t = hi as u128 * r0 as u128;
+    let s = tmp1 as u128 + (t as u64 as u128);
+    let carry2 = ((t >> 64) as u64).wrapping_add((s >> 64) as u64);
+    let q = hi
+        .wrapping_mul(r1)
+        .wrapping_add(tmp3)
+        .wrapping_add(carry2);
+    lo.wrapping_sub(q.wrapping_mul(m))
+}
+
+/// x * y mod m in the **lazy** `[0, 2m)` output domain (the
+/// [`barrett_reduce_128_lazy`] form of [`mul_mod_barrett`]). Feed the
+/// result only into consumers that tolerate lazy inputs — see the
+/// domain conventions in [`crate::ckks::kernels`].
+#[inline(always)]
+pub fn mul_mod_barrett_lazy(x: u64, y: u64, m: u64, ratio: (u64, u64)) -> u64 {
+    let p = x as u128 * y as u128;
+    barrett_reduce_128_lazy(p as u64, (p >> 64) as u64, m, ratio)
+}
+
 /// Reduce a single word mod `m` using only the high Barrett word
 /// (`ratio.1` from [`barrett_precompute`]). Exact for any `x < 2^64`
 /// with `m < 2^62` — replaces the `u64 % u64` in limb lifts and

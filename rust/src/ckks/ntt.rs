@@ -7,7 +7,15 @@
 
 #[cfg(test)]
 use super::modops::{add_mod, mul_mod, sub_mod};
-use super::modops::{inv_mod, pow_mod, primitive_2nth_root, shoup_precompute};
+use super::modops::{inv_mod, mul_mod_shoup_lazy, pow_mod, primitive_2nth_root, shoup_precompute};
+
+/// Cache-block length for butterfly sweeps (§Perf step 7): 2048 × u64 =
+/// 16 KiB, half a typical 32 KiB L1D, leaving room for twiddles. For
+/// `n` beyond this, the transforms run the out-of-block stages globally
+/// and then finish each contiguous block depth-first, so every stage of
+/// the tail streams from L1 instead of re-walking the whole poly per
+/// stage. `n <= NTT_BLOCK` degenerates to the monolithic sweep.
+const NTT_BLOCK: usize = 1 << 11;
 
 /// Precomputed NTT tables for one prime modulus.
 #[derive(Clone, Debug)]
@@ -67,78 +75,167 @@ impl NttTable {
     /// values live in [0, 4q) and are only fully reduced in the final
     /// pass, removing two conditional subtractions per butterfly.
     /// Requires q < 2^62 (all parameter sets: q ≤ ~2^60).
+    /// Cache-blocked (§Perf step 7): Cooley–Tukey stages whose
+    /// sub-transforms exceed `NTT_BLOCK` run globally; once the
+    /// sub-transforms fit one block, each contiguous block finishes all
+    /// of its remaining stages depth-first (twiddle index
+    /// `m_local·base + i_local` with `base = n/len + block_index` —
+    /// exactly the global index the monolithic sweep would use), with
+    /// the final 4q→q reduction folded into the per-block pass. Pure
+    /// reordering of independent butterflies → bit-identical output.
     pub fn forward(&self, a: &mut [u64]) {
         debug_assert_eq!(a.len(), self.n);
         let q = self.q;
         let two_q = 2 * q;
         let mut t = self.n;
         let mut m = 1usize;
-        while m < self.n {
+        // Global stages while one sub-transform exceeds a cache block.
+        while m < self.n && t > NTT_BLOCK {
             t >>= 1;
             for i in 0..m {
                 let w = self.psi[m + i];
                 let ws = self.psi_shoup[m + i];
-                let j1 = 2 * i * t;
-                for j in j1..j1 + t {
-                    // invariant: a[*] < 4q
-                    let mut u = a[j];
-                    if u >= two_q {
-                        u -= two_q; // < 2q
-                    }
-                    let v = super::modops::mul_mod_shoup_lazy(a[j + t], w, ws, q); // < 2q
-                    a[j] = u + v; // < 4q
-                    a[j + t] = u + two_q - v; // < 4q
-                }
+                let (lo, hi) = a[2 * i * t..2 * (i + 1) * t].split_at_mut(t);
+                Self::ct_butterflies(lo, hi, w, ws, q, two_q);
             }
             m <<= 1;
         }
-        for x in a.iter_mut() {
-            let mut v = *x;
-            if v >= two_q {
-                v -= two_q;
+        // Remaining sub-transforms are independent contiguous blocks of
+        // length t; finish each depth-first while it stays in L1.
+        let nb = self.n / t;
+        for (bi, block) in a.chunks_mut(t).enumerate() {
+            self.ct_block(block, nb + bi);
+            for x in block.iter_mut() {
+                let mut v = *x;
+                if v >= two_q {
+                    v -= two_q;
+                }
+                if v >= q {
+                    v -= q;
+                }
+                *x = v;
             }
-            if v >= q {
-                v -= q;
+        }
+    }
+
+    /// All Cooley–Tukey stages of one independent sub-transform
+    /// (`base = n/len + block_index` maps local twiddle positions onto
+    /// the global bit-reversed table; `base == 1` is the full array).
+    fn ct_block(&self, a: &mut [u64], base: usize) {
+        let q = self.q;
+        let two_q = 2 * q;
+        let len = a.len();
+        let mut t = len;
+        let mut m = 1usize;
+        while m < len {
+            t >>= 1;
+            for i in 0..m {
+                let idx = m * base + i;
+                let w = self.psi[idx];
+                let ws = self.psi_shoup[idx];
+                let (lo, hi) = a[2 * i * t..2 * (i + 1) * t].split_at_mut(t);
+                Self::ct_butterflies(lo, hi, w, ws, q, two_q);
             }
-            *x = v;
+            m <<= 1;
+        }
+    }
+
+    /// One twiddle group of Harvey lazy CT butterflies over zipped
+    /// lower/upper halves (values < 4q in flight).
+    #[inline(always)]
+    fn ct_butterflies(lo: &mut [u64], hi: &mut [u64], w: u64, ws: u64, q: u64, two_q: u64) {
+        for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+            // invariant: values < 4q
+            let mut u = *x;
+            if u >= two_q {
+                u -= two_q; // < 2q
+            }
+            let v = mul_mod_shoup_lazy(*y, w, ws, q); // < 2q
+            *x = u + v; // < 4q
+            *y = u + two_q - v; // < 4q
         }
     }
 
     /// In-place inverse negacyclic NTT (evaluation -> coefficient),
     /// lazy Gentleman–Sande butterflies (values < 2q in flight).
+    ///
+    /// Accepts inputs in the **lazy** `[0, 2q)` domain (see
+    /// [`crate::ckks::kernels`]) — the butterflies hold values < 2q
+    /// regardless, and the final `inv_n` Shoup pass reduces exactly, so
+    /// lazy and reduced representatives of the same residues produce
+    /// bit-identical output.
+    ///
+    /// Cache-blocked like [`Self::forward`], mirrored: the early
+    /// (small-span) Gentleman–Sande stages run depth-first per
+    /// contiguous block, then the out-of-block merge stages run
+    /// globally.
     pub fn inverse(&self, a: &mut [u64]) {
         debug_assert_eq!(a.len(), self.n);
         let q = self.q;
         let two_q = 2 * q;
-        let mut t = 1usize;
-        let mut m = self.n;
+        let bsize = self.n.min(NTT_BLOCK);
+        let nb = self.n / bsize;
+        for (bi, block) in a.chunks_mut(bsize).enumerate() {
+            self.gs_block(block, nb + bi);
+        }
+        // Global merge stages spanning more than one block.
+        let mut t = bsize;
+        let mut m = nb;
         while m > 1 {
             let h = m >> 1;
-            let mut j1 = 0usize;
             for i in 0..h {
                 let w = self.inv_psi[h + i];
                 let ws = self.inv_psi_shoup[h + i];
-                for j in j1..j1 + t {
-                    // invariant: a[*] < 2q
-                    let u = a[j];
-                    let v = a[j + t];
-                    let mut s = u + v; // < 4q
-                    if s >= two_q {
-                        s -= two_q; // < 2q
-                    }
-                    a[j] = s;
-                    // (u - v + 2q) < 4q; lazy Shoup gives < 2q
-                    a[j + t] =
-                        super::modops::mul_mod_shoup_lazy(u + two_q - v, w, ws, q);
-                }
-                j1 += 2 * t;
+                let (lo, hi) = a[2 * i * t..2 * (i + 1) * t].split_at_mut(t);
+                Self::gs_butterflies(lo, hi, w, ws, q, two_q);
             }
             t <<= 1;
             m = h;
         }
         for x in a.iter_mut() {
-            let v = super::modops::mul_mod_shoup_lazy(*x, self.inv_n, self.inv_n_shoup, q);
+            let v = mul_mod_shoup_lazy(*x, self.inv_n, self.inv_n_shoup, q);
             *x = if v >= q { v - q } else { v };
+        }
+    }
+
+    /// All in-block Gentleman–Sande stages of one contiguous block
+    /// (`base = n/len + block_index`, same twiddle-index algebra as
+    /// [`Self::ct_block`]; `base == 1` is the full array).
+    fn gs_block(&self, a: &mut [u64], base: usize) {
+        let q = self.q;
+        let two_q = 2 * q;
+        let len = a.len();
+        let mut t = 1usize;
+        let mut m = len;
+        while m > 1 {
+            let h = m >> 1;
+            for i in 0..h {
+                let idx = h * base + i;
+                let w = self.inv_psi[idx];
+                let ws = self.inv_psi_shoup[idx];
+                let (lo, hi) = a[2 * i * t..2 * (i + 1) * t].split_at_mut(t);
+                Self::gs_butterflies(lo, hi, w, ws, q, two_q);
+            }
+            t <<= 1;
+            m = h;
+        }
+    }
+
+    /// One twiddle group of lazy GS butterflies over zipped halves
+    /// (values < 2q in flight).
+    #[inline(always)]
+    fn gs_butterflies(lo: &mut [u64], hi: &mut [u64], w: u64, ws: u64, q: u64, two_q: u64) {
+        for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+            // invariant: values < 2q
+            let u = *x;
+            let v = *y;
+            let mut s = u + v; // < 4q
+            if s >= two_q {
+                s -= two_q; // < 2q
+            }
+            *x = s;
+            // (u - v + 2q) < 4q; lazy Shoup gives < 2q
+            *y = mul_mod_shoup_lazy(u + two_q - v, w, ws, q);
         }
     }
 }
@@ -172,6 +269,116 @@ mod tests {
         let mut taken = vec![];
         let q = crate::ckks::params::CkksParams::gen_primes(n, 50, 1, &mut taken)[0];
         NttTable::new(q, n)
+    }
+
+    /// The pre-blocking monolithic sweeps, kept verbatim as the
+    /// reference the cache-blocked transforms must match bit-for-bit.
+    fn monolithic_forward(t: &NttTable, a: &mut [u64]) {
+        let q = t.q;
+        let two_q = 2 * q;
+        let mut tt = t.n;
+        let mut m = 1usize;
+        while m < t.n {
+            tt >>= 1;
+            for i in 0..m {
+                let w = t.psi[m + i];
+                let ws = t.psi_shoup[m + i];
+                let j1 = 2 * i * tt;
+                for j in j1..j1 + tt {
+                    let mut u = a[j];
+                    if u >= two_q {
+                        u -= two_q;
+                    }
+                    let v = mul_mod_shoup_lazy(a[j + tt], w, ws, q);
+                    a[j] = u + v;
+                    a[j + tt] = u + two_q - v;
+                }
+            }
+            m <<= 1;
+        }
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+    }
+
+    fn monolithic_inverse(t: &NttTable, a: &mut [u64]) {
+        let q = t.q;
+        let two_q = 2 * q;
+        let mut tt = 1usize;
+        let mut m = t.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let w = t.inv_psi[h + i];
+                let ws = t.inv_psi_shoup[h + i];
+                for j in j1..j1 + tt {
+                    let u = a[j];
+                    let v = a[j + tt];
+                    let mut s = u + v;
+                    if s >= two_q {
+                        s -= two_q;
+                    }
+                    a[j] = s;
+                    a[j + tt] = mul_mod_shoup_lazy(u + two_q - v, w, ws, q);
+                }
+                j1 += 2 * tt;
+            }
+            tt <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            let v = mul_mod_shoup_lazy(*x, t.inv_n, t.inv_n_shoup, q);
+            *x = if v >= q { v - q } else { v };
+        }
+    }
+
+    #[test]
+    fn blocked_matches_monolithic_beyond_block_size() {
+        // 8192 > NTT_BLOCK = 2048: the blocked code path (global stages
+        // + per-block depth-first finish) must be bit-identical to the
+        // monolithic sweep on both directions. 2048 pins the
+        // degenerate single-block path against the same reference.
+        for n in [NTT_BLOCK, 4 * NTT_BLOCK] {
+            let t = table(n);
+            let mut r = Xoshiro256pp::new(0xB10C + n as u64);
+            let orig: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+            let mut blocked = orig.clone();
+            let mut mono = orig.clone();
+            t.forward(&mut blocked);
+            monolithic_forward(&t, &mut mono);
+            assert_eq!(blocked, mono, "forward n={n}");
+            t.inverse(&mut blocked);
+            monolithic_inverse(&t, &mut mono);
+            assert_eq!(blocked, mono, "inverse n={n}");
+            assert_eq!(blocked, orig, "roundtrip n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_accepts_lazy_domain_inputs() {
+        // Lazy [0, 2q) representatives of the same residues must give
+        // bit-identical coefficients (the contract mul_assign_lazy +
+        // rescale relies on).
+        let n = 256;
+        let t = table(n);
+        let mut r = Xoshiro256pp::new(77);
+        let reduced: Vec<u64> = (0..n).map(|_| r.next_below(t.q)).collect();
+        let mut lazy: Vec<u64> = reduced
+            .iter()
+            .map(|&x| if r.next_below(2) == 1 { x + t.q } else { x })
+            .collect();
+        let mut base = reduced.clone();
+        t.inverse(&mut base);
+        t.inverse(&mut lazy);
+        assert_eq!(lazy, base);
     }
 
     #[test]

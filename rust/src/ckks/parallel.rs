@@ -77,6 +77,66 @@ where
     });
 }
 
+/// Run `f(limb_index, chunk0, chunk1, chunk2)` over the stride-`n`
+/// chunks of three equal-length buffers in lockstep, fanned across up
+/// to `workers` scoped threads — the driver for kernels with multiple
+/// limb outputs (the fused ct×ct tensor writes d0/d1/d2 in one pass).
+/// Same static round-robin partition as [`for_each_limb`], so the
+/// output is bit-identical at every worker count.
+pub fn for_each_limb3<F>(
+    workers: usize,
+    n: usize,
+    d0: &mut [u64],
+    d1: &mut [u64],
+    d2: &mut [u64],
+    f: F,
+) where
+    F: Fn(usize, &mut [u64], &mut [u64], &mut [u64]) + Sync,
+{
+    debug_assert!(n > 0 && d0.len() % n == 0);
+    debug_assert!(d0.len() == d1.len() && d0.len() == d2.len());
+    let n_limbs = d0.len() / n;
+    let workers = workers.clamp(1, n_limbs.max(1));
+    if workers == 1 {
+        for (li, ((c0, c1), c2)) in d0
+            .chunks_mut(n)
+            .zip(d1.chunks_mut(n))
+            .zip(d2.chunks_mut(n))
+            .enumerate()
+        {
+            f(li, c0, c1, c2);
+        }
+        return;
+    }
+    type Lot<'a> = Vec<(usize, &'a mut [u64], &'a mut [u64], &'a mut [u64])>;
+    let mut lots: Vec<Lot<'_>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        lots.push(Vec::with_capacity(n_limbs / workers + 1));
+    }
+    for (li, ((c0, c1), c2)) in d0
+        .chunks_mut(n)
+        .zip(d1.chunks_mut(n))
+        .zip(d2.chunks_mut(n))
+        .enumerate()
+    {
+        lots[li % workers].push((li, c0, c1, c2));
+    }
+    let f = &f;
+    thread::scope(|s| {
+        let mine = lots.remove(0);
+        for lot in lots {
+            s.spawn(move || {
+                for (li, c0, c1, c2) in lot {
+                    f(li, c0, c1, c2);
+                }
+            });
+        }
+        for (li, c0, c1, c2) in mine {
+            f(li, c0, c1, c2);
+        }
+    });
+}
+
 /// `(0..count).map(f)` fanned across up to `workers` scoped threads;
 /// results are returned in index order regardless of scheduling.
 pub fn par_map<T, F>(workers: usize, count: usize, f: F) -> Vec<T>
@@ -156,6 +216,31 @@ mod tests {
         });
         for (li, chunk) in d.chunks(n).enumerate() {
             assert!(chunk.iter().all(|&x| x == li as u64), "limb {li}");
+        }
+    }
+
+    #[test]
+    fn for_each_limb3_is_worker_count_invariant() {
+        let n = 32;
+        let limbs = 5;
+        let base: Vec<u64> = (0..(n * limbs) as u64).collect();
+        let run = |workers: usize| {
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let mut c = base.clone();
+            for_each_limb3(workers, n, &mut a, &mut b, &mut c, |li, c0, c1, c2| {
+                for i in 0..n {
+                    let s = c0[i].wrapping_add(li as u64);
+                    c0[i] = s;
+                    c1[i] = s.wrapping_mul(3);
+                    c2[i] = s ^ c1[i];
+                }
+            });
+            (a, b, c)
+        };
+        let serial = run(1);
+        for w in [2usize, 3, 8] {
+            assert_eq!(run(w), serial, "workers={w}");
         }
     }
 

@@ -131,6 +131,19 @@ impl CkksParams {
             moduli.iter().chain([&special]).all(|&q| q < 1 << 62),
             "modulus outside the Barrett kernel domain"
         );
+        // Lazy-MAC headroom (see `kernels` module docs): the key-switch
+        // inner product accumulates up to depth+1 digit products plus
+        // the carried-in accumulator word into one u128 per coefficient
+        // before its single reduction, so every prime's width must
+        // leave room for that many (2q−1)² terms.
+        let needed = depth + 2;
+        for &q in moduli.iter().chain([&special]) {
+            assert!(
+                super::kernels::mac_headroom(q) >= needed,
+                "prime {q} too wide for the lazy key-switch MAC \
+                 ({needed} accumulator terms needed)"
+            );
+        }
         CkksParams {
             n,
             moduli,

@@ -15,15 +15,19 @@
 //! the exact CRT → centered big-integer → f64 reconstruction used on
 //! decode ([`BigUintLite`], [`CrtRecon`]).
 //!
-//! No per-coefficient hot loop performs a u128 `%`: element-wise
-//! multiplies use [`mul_mod_barrett`], single-word reductions use
-//! [`barrett_reduce_64`], and loop-invariant multipliers (rescale and
-//! mod-down inverses, scalar broadcasts) use Shoup multiplication.
-//! `modops::mul_mod` survives as the test oracle only.
+//! No per-coefficient hot loop performs a u128 `%`: every element-wise
+//! sweep routes through the batch kernels in [`super::kernels`]
+//! (Barrett multiplies, the lazy `[0, 2q)` fused chains, rescale /
+//! mod-down adjustments), single-word reductions use
+//! [`super::modops::barrett_reduce_64`], and loop-invariant
+//! multipliers (rescale and mod-down inverses, scalar broadcasts) use
+//! Shoup multiplication. `modops::mul_mod` survives as the test
+//! oracle only.
 
+use super::kernels;
 use super::modops::{
-    add_mod, barrett_precompute, barrett_reduce_64, inv_mod, mul_mod, mul_mod_barrett,
-    mul_mod_shoup, neg_mod, shoup_precompute, sub_mod,
+    add_mod, barrett_precompute, inv_mod, mul_mod, mul_mod_shoup, neg_mod, shoup_precompute,
+    sub_mod,
 };
 use super::ntt::NttTable;
 use super::parallel;
@@ -545,9 +549,7 @@ impl RnsPoly {
             let q = self.modulus_of(ctx, li);
             let b = other.limb(li);
             let a = self.limb_mut(li);
-            for i in 0..a.len() {
-                a[i] = add_mod(a[i], b[i], q);
-            }
+            kernels::add_mod_slice(a, b, q);
         }
     }
 
@@ -557,9 +559,7 @@ impl RnsPoly {
             let q = self.modulus_of(ctx, li);
             let b = other.limb(li);
             let a = self.limb_mut(li);
-            for i in 0..a.len() {
-                a[i] = sub_mod(a[i], b[i], q);
-            }
+            kernels::sub_mod_slice(a, b, q);
         }
     }
 
@@ -592,11 +592,107 @@ impl RnsPoly {
         let special = self.special;
         parallel::for_each_limb(ctx.workers(), self.n, &mut self.data, |li, a| {
             let (q, ratio) = ctx.limb_modulus(li, nl, special);
-            let b = other.limb(li);
-            for i in 0..a.len() {
-                a[i] = mul_mod_barrett(a[i], b[i], q, ratio);
-            }
+            kernels::mul_mod_slice(a, other.limb(li), q, ratio);
         });
+    }
+
+    /// Element-wise ring multiplication leaving residues in the **lazy**
+    /// `[0, 2q)` domain (one conditional subtraction per coefficient
+    /// skipped — see the domain rules in [`super::kernels`]). The
+    /// caller must immediately feed `self` into a fully-reducing
+    /// consumer; in practice that is [`Self::rescale`], whose inverse
+    /// NTT accepts lazy inputs and whose output is exactly reduced, so
+    /// the fused mul-plain → rescale chain stays bit-identical to the
+    /// unfused path.
+    pub(crate) fn mul_assign_lazy(&mut self, ctx: &CkksContext, other: &Self) {
+        self.assert_compat(other);
+        debug_assert!(self.is_ntt, "ring mul requires NTT form");
+        debug_assert!(!self.special, "lazy mul is a ciphertext-path kernel");
+        let nl = self.active_limbs();
+        let special = self.special;
+        parallel::for_each_limb(ctx.workers(), self.n, &mut self.data, |li, a| {
+            let (q, ratio) = ctx.limb_modulus(li, nl, special);
+            kernels::mul_mod_slice_lazy(a, other.limb(li), q, ratio);
+        });
+    }
+
+    /// Fused ct×ct dyadic tensor: returns
+    /// `(a0·b0, a0·b1 + a1·b0, a1·b1)` computed in one limb-parallel
+    /// pass that reads each operand limb exactly once
+    /// ([`kernels::tensor_limb`]; the cross term reduces once from its
+    /// 128-bit sum). All operands must be NTT-form ciphertext polys
+    /// (no special limb) at the same level.
+    pub(crate) fn tensor(
+        ctx: &CkksContext,
+        a0: &Self,
+        a1: &Self,
+        b0: &Self,
+        b1: &Self,
+        scratch: &mut Scratch,
+    ) -> (Self, Self, Self) {
+        a0.assert_compat(a1);
+        a0.assert_compat(b0);
+        a0.assert_compat(b1);
+        debug_assert!(a0.is_ntt && !a0.special, "tensor needs NTT ct polys");
+        let level = a0.level;
+        let n = a0.n;
+        let mut d0 = Self::zero_in(ctx, level, false, true, scratch);
+        let mut d1 = Self::zero_in(ctx, level, false, true, scratch);
+        let mut d2 = Self::zero_in(ctx, level, false, true, scratch);
+        parallel::for_each_limb3(
+            ctx.workers(),
+            n,
+            &mut d0.data,
+            &mut d1.data,
+            &mut d2.data,
+            |li, o0, o1, o2| {
+                let q = ctx.q(li);
+                let ratio = ctx.barrett_ratio(li);
+                kernels::tensor_limb(
+                    a0.limb(li),
+                    a1.limb(li),
+                    b0.limb(li),
+                    b1.limb(li),
+                    o0,
+                    o1,
+                    o2,
+                    q,
+                    ratio,
+                );
+            },
+        );
+        (d0, d1, d2)
+    }
+
+    /// Fused squaring tensor: `(a0², 2·a0·a1, a1²)` in one
+    /// limb-parallel pass ([`kernels::square_limb`]) — no operand
+    /// clones, and the doubled cross term reduces once.
+    pub(crate) fn tensor_square(
+        ctx: &CkksContext,
+        a0: &Self,
+        a1: &Self,
+        scratch: &mut Scratch,
+    ) -> (Self, Self, Self) {
+        a0.assert_compat(a1);
+        debug_assert!(a0.is_ntt && !a0.special, "tensor needs NTT ct polys");
+        let level = a0.level;
+        let n = a0.n;
+        let mut d0 = Self::zero_in(ctx, level, false, true, scratch);
+        let mut d1 = Self::zero_in(ctx, level, false, true, scratch);
+        let mut d2 = Self::zero_in(ctx, level, false, true, scratch);
+        parallel::for_each_limb3(
+            ctx.workers(),
+            n,
+            &mut d0.data,
+            &mut d1.data,
+            &mut d2.data,
+            |li, o0, o1, o2| {
+                let q = ctx.q(li);
+                let ratio = ctx.barrett_ratio(li);
+                kernels::square_limb(a0.limb(li), a1.limb(li), o0, o1, o2, q, ratio);
+            },
+        );
+        (d0, d1, d2)
     }
 
     /// Multiply by a scalar integer (same in every limb). The reduced
@@ -651,16 +747,7 @@ impl RnsPoly {
             let q = ctx.q(li);
             let (_, r_hi) = ctx.barrett[li];
             let (inv, inv_sh) = (inv_row[li], inv_shoup_row[li]);
-            for i in 0..n {
-                let r = last[i];
-                // centered remainder: subtract r, or add (q_last - r)
-                let adjusted = if r <= half {
-                    sub_mod(limb[i], barrett_reduce_64(r, q, r_hi), q)
-                } else {
-                    add_mod(limb[i], barrett_reduce_64(q_last - r, q, r_hi), q)
-                };
-                limb[i] = mul_mod_shoup(adjusted, inv, inv_sh, q);
-            }
+            kernels::rescale_adjust_slice(limb, last, q, r_hi, q_last, half, inv, inv_sh);
         });
         self.data.truncate(old_level * n);
         self.level = old_level - 1;
@@ -687,15 +774,7 @@ impl RnsPoly {
             let q = ctx.q(li);
             let (_, r_hi) = ctx.barrett[li];
             let (inv, inv_sh) = (inv_row[li], inv_shoup_row[li]);
-            for i in 0..n {
-                let r = last[i];
-                let adjusted = if r <= half {
-                    sub_mod(limb[i], barrett_reduce_64(r, q, r_hi), q)
-                } else {
-                    add_mod(limb[i], barrett_reduce_64(p - r, q, r_hi), q)
-                };
-                limb[i] = mul_mod_shoup(adjusted, inv, inv_sh, q);
-            }
+            kernels::rescale_adjust_slice(limb, last, q, r_hi, p, half, inv, inv_sh);
         });
         self.data.truncate(chain);
         self.special = false;
@@ -730,18 +809,9 @@ impl RnsPoly {
             r_mod_q.clear();
             r_mod_q.resize(n, 0);
             // r centered: r <= p/2 -> subtract r ; r > p/2 -> add p - r
-            for i in 0..n {
-                let r = last[i];
-                r_mod_q[i] = if r <= half {
-                    neg_mod(barrett_reduce_64(r, q, r_hi), q) // -r mod q (added)
-                } else {
-                    barrett_reduce_64(p - r, q, r_hi)
-                };
-            }
+            kernels::centered_neg_slice(r_mod_q, last, p, half, q, r_hi);
             ctx.tables[li].forward(r_mod_q);
-            for i in 0..n {
-                limb[i] = mul_mod_shoup(add_mod(limb[i], r_mod_q[i], q), inv, inv_sh, q);
-            }
+            kernels::add_then_mul_shoup_slice(limb, r_mod_q, q, inv, inv_sh);
         });
         self.data.truncate(chain);
         self.special = false;

@@ -59,6 +59,9 @@
 // the serving internals thread many handles by design.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
+// `std::simd` explicit-vector variants of the add/sub kernels (see
+// `ckks::kernels`); nightly-only, so the default build never sees it.
+#![cfg_attr(feature = "wide", feature(portable_simd))]
 
 pub mod bench_harness;
 pub mod ckks;

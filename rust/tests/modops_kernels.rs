@@ -13,9 +13,10 @@
 //!   **bit-identical** ciphertexts (`engine_parity`-style assertions).
 
 use cryptotree::ckks::evaluator::Evaluator;
+use cryptotree::ckks::kernels;
 use cryptotree::ckks::modops::{
-    barrett_precompute, barrett_reduce_128, barrett_reduce_64, mul_mod, mul_mod_barrett,
-    mul_mod_shoup, shoup_precompute,
+    add_mod, barrett_precompute, barrett_reduce_128, barrett_reduce_64, mul_mod, mul_mod_barrett,
+    mul_mod_barrett_lazy, mul_mod_shoup, shoup_precompute, sub_mod,
 };
 use cryptotree::ckks::rns::CkksContext;
 use cryptotree::ckks::{Ciphertext, CkksParams, Decryptor, Encoder, Encryptor, KeyGenerator};
@@ -158,6 +159,208 @@ fn shoup_mul_matches_oracle_for_arbitrary_left_operand() {
 }
 
 // ---------------------------------------------------------------------
+// Lazy-reduction batch kernels (ISSUE 10) vs the oracle
+// ---------------------------------------------------------------------
+
+/// Slice length that exercises both the 8-wide blocks and the scalar
+/// tail of every batch kernel.
+const KLEN: usize = 4 * kernels::LANES + 3;
+
+fn rand_slice(rng: &mut Xoshiro256pp, bound: u64, len: usize) -> Vec<u64> {
+    (0..len).map(|_| rng.next_below(bound)).collect()
+}
+
+#[test]
+fn lazy_barrett_mul_is_congruent_and_in_domain() {
+    let mut rng = Xoshiro256pp::new(510);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            let ratio = barrett_precompute(q);
+            for _ in 0..2_000 {
+                let (x, y) = (rng.next_below(q), rng.next_below(q));
+                let lazy = mul_mod_barrett_lazy(x, y, q, ratio);
+                assert!(lazy < 2 * q, "{name} q={q}: lazy result out of [0,2q)");
+                let reduced = if lazy >= q { lazy - q } else { lazy };
+                assert_eq!(reduced, mul_mod(x, y, q), "{name} q={q} x={x} y={y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_kernels_match_scalar_oracle_on_all_parameter_set_primes() {
+    let mut rng = Xoshiro256pp::new(511);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            let ratio = barrett_precompute(q);
+            let a0 = rand_slice(&mut rng, q, KLEN);
+            let b0 = rand_slice(&mut rng, q, KLEN);
+
+            let mut add = a0.clone();
+            kernels::add_mod_slice(&mut add, &b0, q);
+            let mut sub = a0.clone();
+            kernels::sub_mod_slice(&mut sub, &b0, q);
+            let mut mul = a0.clone();
+            kernels::mul_mod_slice(&mut mul, &b0, q, ratio);
+            let mut mul_lazy = a0.clone();
+            kernels::mul_mod_slice_lazy(&mut mul_lazy, &b0, q, ratio);
+            for i in 0..KLEN {
+                assert_eq!(add[i], add_mod(a0[i], b0[i], q), "{name} q={q} add i={i}");
+                assert_eq!(sub[i], sub_mod(a0[i], b0[i], q), "{name} q={q} sub i={i}");
+                assert_eq!(mul[i], mul_mod(a0[i], b0[i], q), "{name} q={q} mul i={i}");
+                assert!(mul_lazy[i] < 2 * q, "{name} q={q} lazy domain i={i}");
+                let red = if mul_lazy[i] >= q {
+                    mul_lazy[i] - q
+                } else {
+                    mul_lazy[i]
+                };
+                assert_eq!(red, mul[i], "{name} q={q} lazy congruence i={i}");
+            }
+
+            // Fused tensor + square kernels.
+            let a1 = rand_slice(&mut rng, q, KLEN);
+            let b1 = rand_slice(&mut rng, q, KLEN);
+            let (mut d0, mut d1, mut d2) = (vec![0; KLEN], vec![0; KLEN], vec![0; KLEN]);
+            kernels::tensor_limb(&a0, &a1, &b0, &b1, &mut d0, &mut d1, &mut d2, q, ratio);
+            for i in 0..KLEN {
+                assert_eq!(d0[i], mul_mod(a0[i], b0[i], q), "{name} tensor d0 i={i}");
+                let cross = add_mod(mul_mod(a0[i], b1[i], q), mul_mod(a1[i], b0[i], q), q);
+                assert_eq!(d1[i], cross, "{name} tensor d1 i={i}");
+                assert_eq!(d2[i], mul_mod(a1[i], b1[i], q), "{name} tensor d2 i={i}");
+            }
+            kernels::square_limb(&a0, &a1, &mut d0, &mut d1, &mut d2, q, ratio);
+            for i in 0..KLEN {
+                assert_eq!(d0[i], mul_mod(a0[i], a0[i], q), "{name} square d0 i={i}");
+                let c = mul_mod(a0[i], a1[i], q);
+                assert_eq!(d1[i], add_mod(c, c, q), "{name} square d1 i={i}");
+                assert_eq!(d2[i], mul_mod(a1[i], a1[i], q), "{name} square d2 i={i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rescale_adjust_kernels_match_scalar_path() {
+    let mut rng = Xoshiro256pp::new(512);
+    for (name, primes) in parameter_set_primes() {
+        // Last prime plays the dropped modulus against every other.
+        let q_last = *primes.last().unwrap();
+        let half = q_last / 2;
+        for &q in primes.iter().filter(|&&p| p != q_last) {
+            let (_, r_hi) = barrett_precompute(q);
+            let inv = 1 + rng.next_below(q - 1);
+            let inv_sh = shoup_precompute(inv, q);
+            let limb0 = rand_slice(&mut rng, q, KLEN);
+            let last = rand_slice(&mut rng, q_last, KLEN);
+
+            let mut limb = limb0.clone();
+            kernels::rescale_adjust_slice(&mut limb, &last, q, r_hi, q_last, half, inv, inv_sh);
+            for i in 0..KLEN {
+                let r = last[i];
+                let adjusted = if r <= half {
+                    sub_mod(limb0[i], r % q, q)
+                } else {
+                    add_mod(limb0[i], (q_last - r) % q, q)
+                };
+                assert_eq!(
+                    limb[i],
+                    mul_mod(adjusted, inv, q),
+                    "{name} q={q} rescale i={i}"
+                );
+            }
+
+            let mut dst = vec![0u64; KLEN];
+            kernels::centered_neg_slice(&mut dst, &last, q_last, half, q, r_hi);
+            for i in 0..KLEN {
+                let r = last[i];
+                let want = if r <= half {
+                    let red = r % q;
+                    if red == 0 {
+                        0
+                    } else {
+                        q - red
+                    }
+                } else {
+                    (q_last - r) % q
+                };
+                assert_eq!(dst[i], want, "{name} q={q} centered_neg i={i}");
+            }
+
+            let mut acc = limb0.clone();
+            let addend = rand_slice(&mut rng, q, KLEN);
+            kernels::add_then_mul_shoup_slice(&mut acc, &addend, q, inv, inv_sh);
+            for i in 0..KLEN {
+                let want = mul_mod(add_mod(limb0[i], addend[i], q), inv, q);
+                assert_eq!(acc[i], want, "{name} q={q} add_then_mul i={i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn mac_accumulator_survives_full_headroom_with_lazy_inputs() {
+    // Adversarial near-overflow: the largest prime of every parameter
+    // set, the maximum admissible digit count D = mac_headroom(q), and
+    // every operand at the lazy-domain maximum 2q−1. D·(2q−1)² is the
+    // largest sum the accumulator contract admits; one more term would
+    // overflow u128 (pinned in the kernels unit tests).
+    for (name, primes) in parameter_set_primes() {
+        let q = *primes.iter().max().unwrap();
+        let ratio = barrett_precompute(q);
+        let d_max = kernels::mac_headroom(q);
+        assert!(d_max >= 10, "{name}: headroom too small for the chain");
+        let n = 2 * kernels::LANES + 1;
+        let x = vec![2 * q - 1; n];
+        let mut lo = vec![0u64; n];
+        let mut hi = vec![0u64; n];
+        for _ in 0..d_max {
+            kernels::mac_acc_slice(&mut lo, &mut hi, &x, &x, 2 * q);
+        }
+        let mut out = vec![0u64; n];
+        kernels::reduce_acc_slice(&mut out, &lo, &hi, q, ratio);
+        // Oracle: D·(2q−1)² mod q, one fully-reduced term at a time.
+        let term = mul_mod((2 * q - 1) % q, (2 * q - 1) % q, q);
+        let mut want = 0u64;
+        for _ in 0..d_max {
+            want = add_mod(want, term, q);
+        }
+        assert!(out.iter().all(|&v| v == want), "{name} q={q}");
+    }
+}
+
+#[test]
+fn mac_kernels_match_oracle_with_random_lazy_inputs() {
+    let mut rng = Xoshiro256pp::new(513);
+    for (name, primes) in parameter_set_primes() {
+        for q in primes {
+            let ratio = barrett_precompute(q);
+            let digits = 10usize.min(kernels::mac_headroom(q).saturating_sub(1));
+            let xs: Vec<Vec<u64>> = (0..digits)
+                .map(|_| rand_slice(&mut rng, 2 * q, KLEN))
+                .collect();
+            let ks: Vec<Vec<u64>> = (0..digits)
+                .map(|_| rand_slice(&mut rng, 2 * q, KLEN))
+                .collect();
+            let init = rand_slice(&mut rng, q, KLEN);
+            let mut lo = init.clone();
+            let mut hi = vec![0u64; KLEN];
+            for (x, k) in xs.iter().zip(ks.iter()) {
+                kernels::mac_acc_slice(&mut lo, &mut hi, x, k, 2 * q);
+            }
+            let mut out = vec![0u64; KLEN];
+            kernels::reduce_acc_slice(&mut out, &lo, &hi, q, ratio);
+            for i in 0..KLEN {
+                let mut want = init[i];
+                for (x, k) in xs.iter().zip(ks.iter()) {
+                    want = add_mod(want, mul_mod(x[i] % q, k[i] % q, q), q);
+                }
+                assert_eq!(out[i], want, "{name} q={q} i={i}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Thread-count invariance
 // ---------------------------------------------------------------------
 
@@ -182,6 +385,7 @@ fn primitive_chain_is_worker_count_invariant() {
     let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
     let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
 
+    let pt = enc.encode(&ctx, &z, ct.level, ctx.params.scale);
     let run = |workers: usize| -> Vec<Ciphertext> {
         ctx.set_workers(workers);
         let mut ev = Evaluator::new(ctx.clone());
@@ -193,7 +397,9 @@ fn primitive_chain_is_worker_count_invariant() {
         let mut sq = ev.square(&ct, &rlk);
         ev.rescale(&mut sq);
         let sum = ev.rotate_sum(&sq, 4, &gk);
-        vec![rot, hrot, prod, sq, sum]
+        // the lazy-fused kernel path (mul_assign_lazy + rescale)
+        let fused = ev.mul_plain_rescale(&ct, &pt);
+        vec![rot, hrot, prod, sq, sum, fused]
     };
     let serial = run(1);
     let parallel = run(4);
@@ -206,6 +412,79 @@ fn primitive_chain_is_worker_count_invariant() {
     let d = decryptor.decrypt_slots(&ctx, &enc, &parallel[0]);
     for i in 0..enc.slots() {
         assert!((d[i] - z[(i + 1) % enc.slots()]).abs() < 1e-5, "slot {i}");
+    }
+}
+
+#[test]
+fn fused_mul_plain_rescale_is_bit_identical_to_unfused() {
+    // The FuseMulRescale execution target now runs the ring multiplies
+    // lazily ([0, 2q)) into the rescale's inverse NTT; the separate
+    // mul_plain + rescale path reduces fully at each step. Outputs must
+    // be bit-identical at 1 and 4 workers.
+    let ctx = CkksContext::new(CkksParams::toy());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, 514);
+    let pk = kg.gen_public_key(&ctx);
+    let mut encryptor = Encryptor::new(pk, 515);
+    let mut rng = Xoshiro256pp::new(516);
+    let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let w: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+    let pt = enc.encode(&ctx, &w, ct.level, ctx.params.scale);
+    for workers in [1usize, 4] {
+        ctx.set_workers(workers);
+        let mut ev = Evaluator::new(ctx.clone());
+        let mut unfused = ev.mul_plain(&ct, &pt);
+        ev.rescale(&mut unfused);
+        let fused = ev.mul_plain_rescale(&ct, &pt);
+        assert!(
+            ct_bits_equal(&unfused, &fused),
+            "fused path deviates at workers={workers}"
+        );
+    }
+    ctx.set_workers(1);
+}
+
+/// Acceptance pin for the lazy MAC: the key-switch inner product
+/// performs exactly **one** Barrett reduction per (coefficient, limb),
+/// independent of the digit count. Debug builds count reductions in a
+/// thread-local; with `ckks_workers = 1` every limb runs on this
+/// thread, so the delta per rotation must be exactly
+/// `2 polys × n × (level + 2) limbs` — a formula with no digit factor,
+/// even though the digit count changes with the level.
+#[cfg(debug_assertions)]
+#[test]
+fn keyswitch_performs_one_reduction_per_coefficient_limb() {
+    use cryptotree::ckks::kernels::counters;
+    let ctx = CkksContext::new(CkksParams::toy());
+    let enc = Encoder::new(&ctx);
+    let mut kg = KeyGenerator::new(&ctx, 517);
+    let pk = kg.gen_public_key(&ctx);
+    let gk = kg.gen_galois_keys(&ctx, &[1]);
+    let mut encryptor = Encryptor::new(pk, 518);
+    let mut rng = Xoshiro256pp::new(519);
+    let z: Vec<f64> = (0..enc.slots()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let mut ct = encryptor.encrypt_slots(&ctx, &enc, &z);
+    ctx.set_workers(1);
+    let mut ev = Evaluator::new(ctx.clone());
+    let n = ctx.n() as u64;
+    loop {
+        let digits = ct.level + 1; // decompose emits level+1 digits
+        let before = counters::mac_reductions();
+        let _ = ev.rotate(&ct, 1, &gk);
+        let delta = counters::mac_reductions() - before;
+        assert_eq!(
+            delta,
+            2 * n * (ct.level as u64 + 2),
+            "level={} digits={digits}: reductions must not scale with digits",
+            ct.level
+        );
+        if ct.level == 0 {
+            break;
+        }
+        ct.c0.drop_to_level(ct.level - 1);
+        ct.c1.drop_to_level(ct.level - 1);
+        ct.level -= 1;
     }
 }
 
